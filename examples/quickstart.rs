@@ -1,0 +1,60 @@
+//! Quickstart: train a pendulum swing-up policy with 4 parallel samplers
+//! in under a minute, then evaluate it deterministically.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the native backend so it works before `make artifacts`; pass
+//! `--backend xla` (after building artifacts) to run the AOT/PJRT path —
+//! the learning curves are statistically identical (see
+//! rust/tests/runtime_roundtrip.rs for the numeric parity proof).
+
+use walle::config::{Backend, TrainConfig};
+use walle::coordinator::metrics::MetricsLog;
+use walle::coordinator::{eval, orchestrator};
+use walle::env::registry::make_env;
+use walle::runtime::make_factory;
+use walle::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+
+    let mut cfg = TrainConfig::preset("pendulum");
+    cfg.backend = Backend::parse(&args.str_or("backend", "native"))
+        .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
+    cfg.samplers = args.usize_or("samplers", 4)?;
+    cfg.iterations = args.usize_or("iterations", 40)?;
+    cfg.seed = args.u64_or("seed", 0)?;
+
+    println!(
+        "WALL-E quickstart: PPO on pendulum, N={} samplers, {} backend",
+        cfg.samplers,
+        cfg.backend.name()
+    );
+
+    let factory = make_factory(&cfg)?;
+    let mut log = MetricsLog::new();
+    let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+
+    // Evaluate the trained policy with the mean action (no noise).
+    let mut env = make_env("pendulum").unwrap();
+    let mut actor = factory.make_actor()?;
+    let norm = walle::algo::normalizer::NormSnapshot::identity(3);
+    let eval_result = eval::evaluate(
+        env.as_mut(),
+        actor.as_mut(),
+        &result.final_params,
+        &norm,
+        10,
+        123,
+    )?;
+
+    let first = result.metrics.first().map(|m| m.mean_return).unwrap_or(0.0);
+    let last = result.metrics.last().map(|m| m.mean_return).unwrap_or(0.0);
+    println!("\ntraining return: {first:.0} -> {last:.0}");
+    println!(
+        "deterministic eval: {:.0} ± {:.0} over 10 episodes",
+        eval_result.mean_return, eval_result.std_return
+    );
+    println!("(pendulum is 'solved' around -200; random policy scores ≈ -1300)");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""WALL-E build-time compile path (L2 JAX model + L1 Pallas kernels).
+
+This package runs ONLY at ``make artifacts``: it lowers the model entry
+points to HLO text that the Rust coordinator loads via PJRT. It is never
+imported at request time.
+"""

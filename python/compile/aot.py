@@ -1,0 +1,274 @@
+"""AOT lowering: JAX/Pallas model entry points -> HLO *text* artifacts.
+
+Run once by ``make artifacts`` (never at request time):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+For every env preset this emits shape-specialized HLO text files plus a
+``meta.json`` describing the flat-parameter layout, batch shapes and baked
+hyper-parameters — everything the Rust runtime needs to initialize
+parameters and validate calls without parsing HLO.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gae as gae_kernel
+
+
+# ---------------------------------------------------------------------------
+# env presets (shape-specialized artifacts per environment)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    """Static shapes + baked hyper-parameters for one environment."""
+
+    name: str
+    obs_dim: int
+    act_dim: int
+    hidden: Tuple[int, ...] = (64, 64)
+    act_batch: int = 1  # sampler inference batch (1 env per sampler, paper §3)
+    eval_batch: int = 32  # batched inference artifact for eval / benches
+    minibatch: int = 512  # PPO minibatch rows (padded + masked by rust)
+    horizon: int = 1024  # GAE artifact T (rust pads shorter trajectories)
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip: float = 0.2
+    ent_coef: float = 0.0
+    vf_coef: float = 0.5
+    lr: float = 3e-4  # default; runtime input anneals it
+    ddpg: bool = False
+    ddpg_batch: int = 256
+    ddpg_gamma: float = 0.99
+    ddpg_tau: float = 0.005
+    parallel_learn: bool = False  # emit ppo_grad/apply_grads (§6.2 ablation)
+
+
+PRESETS: Dict[str, Preset] = {
+    p.name: p
+    for p in [
+        Preset("pendulum", obs_dim=3, act_dim=1, minibatch=256, horizon=256,
+               ddpg=True),
+        Preset("cartpole", obs_dim=4, act_dim=1, minibatch=256, horizon=512),
+        Preset("reacher", obs_dim=10, act_dim=2, minibatch=256, horizon=128),
+        Preset("halfcheetah", obs_dim=17, act_dim=6, minibatch=512,
+               horizon=1024, ddpg=True, parallel_learn=True),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_entry(fn: Callable, example_args: Sequence) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+# ---------------------------------------------------------------------------
+# per-preset entry points
+# ---------------------------------------------------------------------------
+
+
+def build_entries(p: Preset) -> Dict[str, Tuple[Callable, List]]:
+    """Map artifact name -> (jax function, example args) for one preset."""
+    spec = model.param_spec(p.obs_dim, p.act_dim, p.hidden)
+    P = model.flat_size(spec)
+    nh = len(p.hidden)
+    O, A, M, T = p.obs_dim, p.act_dim, p.minibatch, p.horizon
+    cfg = model.PpoConfig(clip=p.clip, ent_coef=p.ent_coef, vf_coef=p.vf_coef)
+
+    def act(flat, obs, noise):
+        return model.act_fn(flat, obs, noise, spec, nh)
+
+    def train_ppo(flat, m, v, t, lr, obs, a, old_logp, adv, ret, mask):
+        return model.train_ppo_step(
+            flat, m, v, t, lr, obs, a, old_logp, adv, ret, mask, spec, nh, cfg
+        )
+
+    def gae(rew, val, cont):
+        return gae_kernel.gae_scan(rew, val, cont, p.gamma, p.lam)
+
+    entries: Dict[str, Tuple[Callable, List]] = {
+        "act": (act, [_f32(P), _f32(p.act_batch, O), _f32(p.act_batch, A)]),
+        "act_eval": (act, [_f32(P), _f32(p.eval_batch, O), _f32(p.eval_batch, A)]),
+        "train_ppo": (
+            train_ppo,
+            [_f32(P), _f32(P), _f32(P), _f32(), _f32(),
+             _f32(M, O), _f32(M, A), _f32(M), _f32(M), _f32(M), _f32(M)],
+        ),
+        "gae": (gae, [_f32(T), _f32(T + 1), _f32(T)]),
+    }
+
+    if p.parallel_learn:
+        def grad_ppo(flat, obs, a, old_logp, adv, ret, mask):
+            return model.ppo_grad(
+                flat, obs, a, old_logp, adv, ret, mask, spec, nh, cfg
+            )
+
+        def apply_grads(flat, m, v, g, t, lr):
+            return model.apply_grads(flat, m, v, g, t, lr, cfg)
+
+        entries["grad_ppo"] = (
+            grad_ppo,
+            [_f32(P), _f32(M, O), _f32(M, A), _f32(M), _f32(M), _f32(M), _f32(M)],
+        )
+        entries["apply_grads"] = (
+            apply_grads,
+            [_f32(P), _f32(P), _f32(P), _f32(P), _f32(), _f32()],
+        )
+
+    if p.ddpg:
+        aspec = model.actor_spec(O, A, p.hidden)
+        cspec = model.critic_spec(O, A, p.hidden)
+        Pa, Pc = model.flat_size(aspec), model.flat_size(cspec)
+        B = p.ddpg_batch
+        dcfg = model.DdpgConfig(gamma=p.ddpg_gamma, tau=p.ddpg_tau)
+
+        def act_ddpg(actor, obs):
+            return (model.ddpg_actor_forward(actor, obs, aspec, nh),)
+
+        def train_ddpg(actor, critic, ta, tc, am, av, cm, cv, t, lra, lrc,
+                       obs, a, rew, next_obs, done):
+            return model.train_ddpg_step(
+                actor, critic, ta, tc, am, av, cm, cv, t, lra, lrc,
+                obs, a, rew, next_obs, done, aspec, cspec, nh, dcfg,
+            )
+
+        entries["act_ddpg"] = (act_ddpg, [_f32(Pa), _f32(p.act_batch, O)])
+        entries["train_ddpg"] = (
+            train_ddpg,
+            [_f32(Pa), _f32(Pc), _f32(Pa), _f32(Pc),
+             _f32(Pa), _f32(Pa), _f32(Pc), _f32(Pc),
+             _f32(), _f32(), _f32(),
+             _f32(B, O), _f32(B, A), _f32(B), _f32(B, O), _f32(B)],
+        )
+
+    return entries
+
+
+def preset_meta(p: Preset, artifacts: Dict[str, str]) -> dict:
+    spec = model.param_spec(p.obs_dim, p.act_dim, p.hidden)
+    meta = {
+        "preset": p.name,
+        "obs_dim": p.obs_dim,
+        "act_dim": p.act_dim,
+        "hidden": list(p.hidden),
+        "act_batch": p.act_batch,
+        "eval_batch": p.eval_batch,
+        "minibatch": p.minibatch,
+        "horizon": p.horizon,
+        "gamma": p.gamma,
+        "lam": p.lam,
+        "clip": p.clip,
+        "ent_coef": p.ent_coef,
+        "vf_coef": p.vf_coef,
+        "lr": p.lr,
+        "param_count": model.flat_size(spec),
+        "params": [e.to_json() for e in spec],
+        "artifacts": artifacts,
+    }
+    if p.ddpg:
+        aspec = model.actor_spec(p.obs_dim, p.act_dim, p.hidden)
+        cspec = model.critic_spec(p.obs_dim, p.act_dim, p.hidden)
+        meta["ddpg"] = {
+            "batch": p.ddpg_batch,
+            "gamma": p.ddpg_gamma,
+            "tau": p.ddpg_tau,
+            "actor_count": model.flat_size(aspec),
+            "critic_count": model.flat_size(cspec),
+            "actor_params": [e.to_json() for e in aspec],
+            "critic_params": [e.to_json() for e in cspec],
+        }
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def emit_preset(p: Preset, out_dir: str, only: set | None = None) -> dict:
+    pdir = os.path.join(out_dir, p.name)
+    os.makedirs(pdir, exist_ok=True)
+    artifacts = {}
+    for name, (fn, args) in build_entries(p).items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        text = lower_entry(fn, args)
+        rel = f"{p.name}/{name}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        artifacts[name] = rel
+        print(f"  {rel}: {len(text)} chars ({time.time() - t0:.1f}s)")
+    meta = preset_meta(p, artifacts)
+    with open(os.path.join(pdir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return meta
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets", default=",".join(PRESETS),
+        help="comma-separated preset names",
+    )
+    ap.add_argument("--entries", default="", help="only emit these entries")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.entries.split(",")) if args.entries else None
+    index = {}
+    for name in args.presets.split(","):
+        p = PRESETS[name]
+        print(f"preset {name} (obs={p.obs_dim} act={p.act_dim})")
+        meta = emit_preset(p, args.out_dir, only)
+        index[name] = {
+            "dir": name,
+            "param_count": meta["param_count"],
+            "artifacts": meta["artifacts"],
+        }
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"wrote {args.out_dir}/index.json ({len(index)} presets)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

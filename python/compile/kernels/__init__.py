@@ -1,0 +1,21 @@
+"""L1 Pallas kernels for the WALL-E compute hot path.
+
+``fused_linear`` — tiled matmul + bias + activation with a Pallas backward;
+``gae_scan``     — reverse-time generalized advantage estimation;
+``adam_step``    — fused optimizer update over the flat parameter vector;
+``ref``          — pure-jnp oracles for all of the above.
+"""
+
+from .fused_linear import fused_linear, fused_linear_fwd_impl, matmul
+from .gae import gae_scan
+from .adam import adam_step
+from . import ref
+
+__all__ = [
+    "fused_linear",
+    "fused_linear_fwd_impl",
+    "matmul",
+    "gae_scan",
+    "adam_step",
+    "ref",
+]

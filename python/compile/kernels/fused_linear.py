@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + activation, with custom VJP.
+
+This is the compute hot-spot of the WALL-E policy/value networks: every
+dense layer of the actor, critic and value MLPs (forward *and* backward)
+runs through this kernel, so it dominates both the sampler `act` artifact
+and the learner `train_ppo` artifact.
+
+TPU mapping (see DESIGN.md "Hardware adaptation"):
+  * the grid tiles (M, N, K) into VMEM-resident blocks whose trailing dims
+    are (sublane, lane) = (8, 128) multiples, the MXU-friendly layout;
+  * the K axis is the innermost grid dimension so each (i, j) output block
+    stays resident in VMEM while partial products accumulate into it in
+    f32 (``preferred_element_type``), which is what the MXU natively does;
+  * bias add + activation are fused into the final K step, so the
+    pre-activation never round-trips to HBM.
+
+The kernel is wrapped in ``jax.custom_vjp`` whose backward pass reuses the
+same Pallas matmul for dX = dZ @ W^T and dW = X^T @ dZ — the whole training
+graph therefore lowers to Pallas kernels plus trivial glue.
+
+On this image Pallas must run ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); the BlockSpec structure is still the TPU one.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default block shapes: (8, 128)-aligned, sized for the small policy MLPs
+# (64-wide layers, minibatch <= 2048) so that most layers are single-block
+# in N/K and only the batch axis is gridded.
+DEF_BLOCK_M = 128
+DEF_BLOCK_N = 128
+DEF_BLOCK_K = 128
+
+_INTERPRET = True  # CPU image: Mosaic lowering unavailable. See module doc.
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = size % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(x, pad)
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Grid = (M/bm, N/bn, K/bk); K innermost; o block revisited across K."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...]
+        o_ref[...] = ref.apply_activation(y, activation)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def fused_linear_fwd_impl(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "id",
+    block_m: int = DEF_BLOCK_M,
+    block_n: int = DEF_BLOCK_N,
+    block_k: int = DEF_BLOCK_K,
+) -> jax.Array:
+    """act(x @ w + b) via the Pallas kernel. x:[M,K] w:[K,N] b:[N] -> [M,N]."""
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, (x.shape, w.shape)
+    assert b.shape == (n,), (b.shape, n)
+
+    bm = min(block_m, _ceil_mult(m, 8))
+    bn = min(block_n, _ceil_mult(n, 128))
+    bk = min(block_k, _ceil_mult(kdim, 128))
+
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    bp = _pad_to(b, 0, bn)[None, :]  # [1, Np] so each (i,j) block can slice it
+
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_linear_kernel, nk=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=_INTERPRET,
+    )(xp, wp, bp)
+    return out[:m, :n].astype(x.dtype)
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def matmul(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """Bias-free identity-activation matmul through the same kernel."""
+    b = jnp.zeros((w.shape[1],), jnp.float32)
+    return fused_linear_fwd_impl(x, w, b, activation="id", **kw)
+
+
+# ---------------------------------------------------------------------------
+# custom VJP: backward also runs on the Pallas matmul
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(
+    x: jax.Array, w: jax.Array, b: jax.Array, activation: str = "id"
+) -> jax.Array:
+    """Differentiable fused dense layer: act(x @ w + b).
+
+    Forward and backward both lower to the tiled Pallas matmul kernel.
+    """
+    return fused_linear_fwd_impl(x, w, b, activation=activation)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    y = fused_linear_fwd_impl(x, w, b, activation=activation)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(activation, res, dy):
+    x, w, y = res
+    dz = dy * ref.activation_grad_from_out(y, activation)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

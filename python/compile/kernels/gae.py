@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: generalized advantage estimation (reverse-time scan).
+
+GAE has a strict sequential dependence along time, so there is no grid
+parallelism to exploit: the kernel instead keeps the *entire* trajectory
+(T <= 1024 floats per array, ~16 KiB total) resident in VMEM and runs the
+recurrence with a single ``fori_loop`` — the TPU analogue of the paper's
+single-pass CPU loop, with zero HBM traffic between steps.
+
+    delta_t = r_t + gamma * cont_t * V_{t+1} - V_t          (vectorized)
+    adv_t   = delta_t + gamma * lam * cont_t * adv_{t+1}    (reverse scan)
+    ret_t   = adv_t + V_t                                   (vectorized)
+
+Arrays are carried as [1, T] (lane-major) so the vectorized pre/post steps
+map onto the VPU's (8, 128) registers; the scan reads/writes single lanes.
+
+Correctness oracle: ``ref.gae_ref`` (pure jnp scan), swept by hypothesis in
+``python/tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INTERPRET = True  # CPU image — see fused_linear.py
+
+
+def _gae_kernel(rew_ref, val_ref, cont_ref, adv_ref, ret_ref, *, gamma, lam, t_len):
+    rew = rew_ref[0, :]
+    val_now = val_ref[0, :t_len]
+    val_next = val_ref[0, 1:]
+    cont = cont_ref[0, :]
+
+    # Vectorized TD residuals (VPU).
+    delta = rew + gamma * cont * val_next - val_now
+
+    # Reverse sequential scan (unavoidable dependence).
+    def body(i, carry):
+        t = t_len - 1 - i
+        a = delta[t] + gamma * lam * cont[t] * carry
+        adv_ref[0, t] = a
+        return a
+
+    jax.lax.fori_loop(0, t_len, body, jnp.float32(0.0))
+
+    # Vectorized returns.
+    ret_ref[0, :] = adv_ref[0, :] + val_now
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lam"))
+def gae_scan(
+    rew: jax.Array, val: jax.Array, cont: jax.Array, gamma: float, lam: float
+):
+    """Pallas GAE. rew:[T], val:[T+1], cont:[T] -> (adv[T], ret[T])."""
+    (t_len,) = rew.shape
+    assert val.shape == (t_len + 1,), (val.shape, t_len)
+    assert cont.shape == (t_len,)
+
+    out = pl.pallas_call(
+        functools.partial(_gae_kernel, gamma=gamma, lam=lam, t_len=t_len),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, t_len), jnp.float32),
+            jax.ShapeDtypeStruct((1, t_len), jnp.float32),
+        ),
+        interpret=_INTERPRET,
+    )(rew[None, :], val[None, :], cont[None, :])
+    adv, ret = out
+    return adv[0], ret[0]

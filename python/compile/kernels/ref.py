@@ -1,0 +1,158 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. ``python/tests/test_kernels.py`` sweeps shapes / dtypes
+with hypothesis and asserts ``allclose(kernel, ref)``. The refs are also
+what the Rust ``NativeBackend`` mirrors (see ``rust/src/nn/``), so the three
+implementations (Pallas, jnp, Rust) triangulate each other.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = ("id", "tanh", "relu")
+
+
+def apply_activation(y: jax.Array, activation: str) -> jax.Array:
+    """Apply one of the supported fused activations."""
+    if activation == "id":
+        return y
+    if activation == "tanh":
+        return jnp.tanh(y)
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def activation_grad_from_out(y: jax.Array, activation: str) -> jax.Array:
+    """d(act)/d(pre-activation), expressed in terms of the *output* y.
+
+    This is the form the backward kernel uses so the forward does not have
+    to stash pre-activations: tanh' = 1 - y^2, relu' = 1[y > 0], id' = 1.
+    """
+    if activation == "id":
+        return jnp.ones_like(y)
+    if activation == "tanh":
+        return 1.0 - y * y
+    if activation == "relu":
+        return (y > 0.0).astype(y.dtype)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+# ---------------------------------------------------------------------------
+# fused linear
+# ---------------------------------------------------------------------------
+
+
+def linear_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array | None, activation: str = "id"
+) -> jax.Array:
+    """Reference for kernels.fused_linear: act(x @ w + b).
+
+    x: [M, K], w: [K, N], b: [N] or None -> [M, N].
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b[None, :]
+    return apply_activation(y, activation).astype(x.dtype)
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain matmul reference (the bias-free / identity case)."""
+    return linear_ref(x, w, None, "id")
+
+
+def linear_bwd_ref(
+    x: jax.Array, w: jax.Array, y: jax.Array, dy: jax.Array, activation: str
+):
+    """Reference backward for the fused linear layer.
+
+    Returns (dx, dw, db) given output y and cotangent dy.
+    """
+    dz = dy * activation_grad_from_out(y, activation)
+    dx = jnp.dot(dz, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    dw = jnp.dot(x.T, dz, preferred_element_type=jnp.float32).astype(w.dtype)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+# ---------------------------------------------------------------------------
+# GAE (generalized advantage estimation)
+# ---------------------------------------------------------------------------
+
+
+def gae_ref(
+    rew: jax.Array,
+    val: jax.Array,
+    cont: jax.Array,
+    gamma: float,
+    lam: float,
+):
+    """Reference for kernels.gae_scan.
+
+    rew:  [T]   rewards r_t
+    val:  [T+1] value estimates V(s_0..s_T) (bootstrap value last)
+    cont: [T]   1.0 if the episode continues after step t, else 0.0
+    Returns (adv[T], ret[T]) with
+        delta_t = r_t + gamma * cont_t * V_{t+1} - V_t
+        adv_t   = delta_t + gamma * lam * cont_t * adv_{t+1}
+        ret_t   = adv_t + V_t
+    """
+    T = rew.shape[0]
+    delta = rew + gamma * cont * val[1:] - val[:-1]
+
+    def step(carry, xs):
+        d, c = xs
+        a = d + gamma * lam * c * carry
+        return a, a
+
+    _, adv_rev = jax.lax.scan(
+        step, jnp.zeros((), rew.dtype), (delta[::-1], cont[::-1])
+    )
+    adv = adv_rev[::-1]
+    ret = adv + val[:-1]
+    return adv, ret
+
+
+def gae_ref_py(rew, val, cont, gamma, lam):
+    """Plain-python GAE for testing the jnp ref itself (and the Rust port)."""
+    T = len(rew)
+    adv = [0.0] * T
+    last = 0.0
+    for t in range(T - 1, -1, -1):
+        delta = rew[t] + gamma * cont[t] * val[t + 1] - val[t]
+        last = delta + gamma * lam * cont[t] * last
+        adv[t] = last
+    ret = [a + v for a, v in zip(adv, val[:T])]
+    return adv, ret
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_ref(
+    p: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    g: jax.Array,
+    t: jax.Array,
+    lr: jax.Array,
+    beta1: float,
+    beta2: float,
+    eps: float,
+):
+    """Reference for kernels.adam_step (t is the 1-based step counter)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m_new / (1.0 - beta1**t)
+    vhat = v_new / (1.0 - beta2**t)
+    p_new = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p_new, m_new, v_new

@@ -1,0 +1,440 @@
+"""L2 JAX model: WALL-E policy/value networks, PPO and DDPG update rules.
+
+Everything here is authored against the **flat-parameter ABI** (DESIGN.md
+§2): each network's parameters live in one flat ``f32[P]`` vector that the
+Rust coordinator owns, checkpoints, and ships through the policy queue.
+The layout (name/shape/offset per tensor) is produced by
+:func:`param_spec` and exported to ``meta.json`` by ``aot.py`` so both
+sides agree byte-for-byte.
+
+All dense compute goes through the L1 Pallas ``fused_linear`` kernel
+(forward *and* backward via its custom VJP); the optimizer is the L1
+``adam_step`` kernel; GAE is the L1 ``gae_scan`` kernel. This module is
+therefore thin glue: distributions, losses, and parameter bookkeeping.
+
+Networks (paper-era PPO defaults):
+  * policy  pi : obs -> tanh MLP (64, 64) -> mean[A]; state-independent
+    ``log_std[A]`` as a free parameter; diagonal Gaussian.
+  * value   vf : obs -> tanh MLP (64, 64) -> V(s).
+  * DDPG actor : obs -> relu MLP -> tanh -> action in [-1, 1]^A.
+  * DDPG critic: concat(obs, act) -> relu MLP -> Q(s, a).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_step, fused_linear
+
+LOG_2PI = math.log(2.0 * math.pi)
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter ABI
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamEntry:
+    """One tensor inside a flat parameter vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    init: str  # "glorot" | "zeros" | "const:<v>"
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "offset": self.offset,
+            "size": self.size,
+            "init": self.init,
+        }
+
+
+def _mlp_entries(
+    prefix: str,
+    in_dim: int,
+    hidden: Sequence[int],
+    out_dim: int,
+    offset: int,
+) -> Tuple[List[ParamEntry], int]:
+    entries: List[ParamEntry] = []
+    dims = [in_dim, *hidden, out_dim]
+    for i, (fi, fo) in enumerate(zip(dims[:-1], dims[1:])):
+        name = f"{prefix}/l{i}" if i < len(hidden) else f"{prefix}/out"
+        entries.append(ParamEntry(f"{name}/w", (fi, fo), offset, "glorot"))
+        offset += fi * fo
+        entries.append(ParamEntry(f"{name}/b", (fo,), offset, "zeros"))
+        offset += fo
+    return entries, offset
+
+
+def param_spec(
+    obs_dim: int, act_dim: int, hidden: Sequence[int] = (64, 64)
+) -> List[ParamEntry]:
+    """Layout of the PPO flat vector: policy MLP, log_std, value MLP."""
+    entries, off = _mlp_entries("pi", obs_dim, hidden, act_dim, 0)
+    entries.append(ParamEntry("pi/log_std", (act_dim,), off, "const:-0.5"))
+    off += act_dim
+    vf, off = _mlp_entries("vf", obs_dim, hidden, 1, off)
+    return entries + vf
+
+
+def actor_spec(
+    obs_dim: int, act_dim: int, hidden: Sequence[int] = (64, 64)
+) -> List[ParamEntry]:
+    """Layout of the DDPG actor flat vector."""
+    entries, _ = _mlp_entries("actor", obs_dim, hidden, act_dim, 0)
+    return entries
+
+
+def critic_spec(
+    obs_dim: int, act_dim: int, hidden: Sequence[int] = (64, 64)
+) -> List[ParamEntry]:
+    """Layout of the DDPG critic flat vector (input = concat(obs, act))."""
+    entries, _ = _mlp_entries("critic", obs_dim + act_dim, hidden, 1, 0)
+    return entries
+
+
+def flat_size(spec: Sequence[ParamEntry]) -> int:
+    return sum(e.size for e in spec)
+
+
+def unflatten(flat: jax.Array, spec: Sequence[ParamEntry]) -> Dict[str, jax.Array]:
+    """Slice a flat f32[P] vector into named, shaped tensors."""
+    out = {}
+    for e in spec:
+        out[e.name] = jax.lax.dynamic_slice(flat, (e.offset,), (e.size,)).reshape(
+            e.shape
+        )
+    return out
+
+
+def init_flat(spec: Sequence[ParamEntry], key: jax.Array) -> jax.Array:
+    """Glorot-uniform / zeros / const init — mirrors rust runtime::params."""
+    chunks = []
+    for e in spec:
+        key, sub = jax.random.split(key)
+        if e.init == "glorot":
+            fi, fo = e.shape
+            bound = math.sqrt(6.0 / (fi + fo))
+            chunks.append(
+                jax.random.uniform(sub, (e.size,), jnp.float32, -bound, bound)
+            )
+        elif e.init == "zeros":
+            chunks.append(jnp.zeros((e.size,), jnp.float32))
+        elif e.init.startswith("const:"):
+            chunks.append(jnp.full((e.size,), float(e.init[6:]), jnp.float32))
+        else:  # pragma: no cover
+            raise ValueError(e.init)
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# forward passes (all dense math = Pallas fused_linear)
+# ---------------------------------------------------------------------------
+
+
+def _mlp(
+    p: Dict[str, jax.Array],
+    prefix: str,
+    x: jax.Array,
+    n_hidden: int,
+    hidden_act: str,
+    out_act: str = "id",
+) -> jax.Array:
+    for i in range(n_hidden):
+        x = fused_linear(x, p[f"{prefix}/l{i}/w"], p[f"{prefix}/l{i}/b"], hidden_act)
+    return fused_linear(x, p[f"{prefix}/out/w"], p[f"{prefix}/out/b"], out_act)
+
+
+def policy_value(
+    flat: jax.Array,
+    obs: jax.Array,
+    spec: Sequence[ParamEntry],
+    n_hidden: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(mean[B,A], log_std[A], value[B]) for a batch of observations."""
+    p = unflatten(flat, spec)
+    mean = _mlp(p, "pi", obs, n_hidden, "tanh")
+    value = _mlp(p, "vf", obs, n_hidden, "tanh")[:, 0]
+    log_std = p["pi/log_std"]
+    return mean, log_std, value
+
+
+def gaussian_logp(a: jax.Array, mean: jax.Array, log_std: jax.Array) -> jax.Array:
+    """Diagonal-Gaussian log-density, summed over the action axis. -> [B]"""
+    z = (a - mean) * jnp.exp(-log_std)[None, :]
+    return jnp.sum(
+        -0.5 * z * z - log_std[None, :] - 0.5 * LOG_2PI, axis=-1
+    )
+
+
+def gaussian_entropy(log_std: jax.Array) -> jax.Array:
+    """Entropy of the diagonal Gaussian (state-independent std) -> scalar."""
+    return jnp.sum(log_std + 0.5 * (LOG_2PI + 1.0))
+
+
+def act_fn(
+    flat: jax.Array,
+    obs: jax.Array,
+    noise: jax.Array,
+    spec: Sequence[ParamEntry],
+    n_hidden: int,
+):
+    """Sampler entry point. noise ~ N(0,1) is supplied by the Rust RNG so
+    the request path is deterministic given the coordinator's seed.
+
+    Returns (action[B,A], logp[B], value[B], mean[B,A])."""
+    mean, log_std, value = policy_value(flat, obs, spec, n_hidden)
+    std = jnp.exp(log_std)[None, :]
+    action = mean + std * noise
+    logp = gaussian_logp(action, mean, log_std)
+    return action, logp, value, mean
+
+
+# ---------------------------------------------------------------------------
+# PPO
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PpoConfig:
+    clip: float = 0.2
+    ent_coef: float = 0.0
+    vf_coef: float = 0.5
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+def _masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def ppo_loss(
+    flat: jax.Array,
+    obs: jax.Array,
+    act: jax.Array,
+    old_logp: jax.Array,
+    adv: jax.Array,
+    ret: jax.Array,
+    mask: jax.Array,
+    spec: Sequence[ParamEntry],
+    n_hidden: int,
+    cfg: PpoConfig,
+):
+    """Clipped-surrogate PPO loss with exact padding masks.
+
+    Returns (total_loss, aux) with aux = (pi_loss, v_loss, entropy,
+    approx_kl, clip_frac)."""
+    mean, log_std, value = policy_value(flat, obs, spec, n_hidden)
+    logp = gaussian_logp(act, mean, log_std)
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip, 1.0 + cfg.clip)
+    surr = jnp.minimum(ratio * adv, clipped * adv)
+    pi_loss = -_masked_mean(surr, mask)
+    v_loss = 0.5 * _masked_mean((value - ret) ** 2, mask)
+    entropy = gaussian_entropy(log_std)
+    total = pi_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy
+    approx_kl = _masked_mean(old_logp - logp, mask)
+    clip_frac = _masked_mean(
+        (jnp.abs(ratio - 1.0) > cfg.clip).astype(jnp.float32), mask
+    )
+    return total, (pi_loss, v_loss, entropy, approx_kl, clip_frac)
+
+
+def train_ppo_step(
+    flat: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    t: jax.Array,
+    lr: jax.Array,
+    obs: jax.Array,
+    act: jax.Array,
+    old_logp: jax.Array,
+    adv: jax.Array,
+    ret: jax.Array,
+    mask: jax.Array,
+    spec: Sequence[ParamEntry],
+    n_hidden: int,
+    cfg: PpoConfig,
+):
+    """One Adam minibatch step. The learner loops this over minibatches and
+    epochs; ``t`` is the 1-based global Adam step, ``lr`` the (annealable)
+    learning rate.
+
+    Returns (flat', m', v', total, pi_loss, v_loss, entropy, approx_kl,
+    clip_frac)."""
+    (total, aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        flat, obs, act, old_logp, adv, ret, mask, spec, n_hidden, cfg
+    )
+    flat2, m2, v2 = adam_step(
+        flat, m, v, grads, t, lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps
+    )
+    pi_loss, v_loss, entropy, approx_kl, clip_frac = aux
+    return flat2, m2, v2, total, pi_loss, v_loss, entropy, approx_kl, clip_frac
+
+
+# ---------------------------------------------------------------------------
+# PPO gradient-only entry (further-work §6.2: parallel policy learning)
+# ---------------------------------------------------------------------------
+
+
+def ppo_grad(
+    flat: jax.Array,
+    obs: jax.Array,
+    act: jax.Array,
+    old_logp: jax.Array,
+    adv: jax.Array,
+    ret: jax.Array,
+    mask: jax.Array,
+    spec: Sequence[ParamEntry],
+    n_hidden: int,
+    cfg: PpoConfig,
+):
+    """Gradient-only variant: lets the Rust coordinator shard a minibatch
+    across several learner threads and average gradients before one Adam
+    step (data-parallel policy learning — the paper's §6 item 2).
+
+    Returns (grads[P], total, n_valid) where n_valid = sum(mask) so the
+    coordinator can do an exact weighted average of shard gradients."""
+    (total, _aux), grads = jax.value_and_grad(ppo_loss, has_aux=True)(
+        flat, obs, act, old_logp, adv, ret, mask, spec, n_hidden, cfg
+    )
+    return grads, total, jnp.sum(mask)
+
+
+def apply_grads(
+    flat: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    grads: jax.Array,
+    t: jax.Array,
+    lr: jax.Array,
+    cfg: PpoConfig,
+):
+    """Adam application for pre-averaged gradients (pairs with ppo_grad)."""
+    return adam_step(
+        flat, m, v, grads, t, lr, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps
+    )
+
+
+# ---------------------------------------------------------------------------
+# DDPG (further-work §6.1: off-policy + replay, parallel collection)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DdpgConfig:
+    gamma: float = 0.99
+    tau: float = 0.005
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+
+def ddpg_actor_forward(
+    actor_flat: jax.Array,
+    obs: jax.Array,
+    aspec: Sequence[ParamEntry],
+    n_hidden: int,
+) -> jax.Array:
+    """Deterministic actor: tanh-squashed action in [-1, 1]^A."""
+    p = unflatten(actor_flat, aspec)
+    return _mlp(p, "actor", obs, n_hidden, "relu", out_act="tanh")
+
+
+def ddpg_critic_forward(
+    critic_flat: jax.Array,
+    obs: jax.Array,
+    act: jax.Array,
+    cspec: Sequence[ParamEntry],
+    n_hidden: int,
+) -> jax.Array:
+    p = unflatten(critic_flat, cspec)
+    x = jnp.concatenate([obs, act], axis=-1)
+    return _mlp(p, "critic", x, n_hidden, "relu")[:, 0]
+
+
+def train_ddpg_step(
+    actor: jax.Array,
+    critic: jax.Array,
+    targ_actor: jax.Array,
+    targ_critic: jax.Array,
+    am: jax.Array,
+    av: jax.Array,
+    cm: jax.Array,
+    cv: jax.Array,
+    t: jax.Array,
+    lr_a: jax.Array,
+    lr_c: jax.Array,
+    obs: jax.Array,
+    act: jax.Array,
+    rew: jax.Array,
+    next_obs: jax.Array,
+    done: jax.Array,
+    aspec: Sequence[ParamEntry],
+    cspec: Sequence[ParamEntry],
+    n_hidden: int,
+    cfg: DdpgConfig,
+):
+    """One fused DDPG update: critic TD step, actor DPG step, Polyak targets.
+
+    Returns (actor', critic', targ_actor', targ_critic', am', av', cm',
+    cv', q_loss, pi_loss)."""
+    # --- critic: TD(0) target from the *target* networks
+    next_a = ddpg_actor_forward(targ_actor, next_obs, aspec, n_hidden)
+    q_next = ddpg_critic_forward(targ_critic, next_obs, next_a, cspec, n_hidden)
+    target = rew + cfg.gamma * (1.0 - done) * q_next
+    target = jax.lax.stop_gradient(target)
+
+    def critic_loss(cflat):
+        q = ddpg_critic_forward(cflat, obs, act, cspec, n_hidden)
+        return jnp.mean((q - target) ** 2)
+
+    q_loss, cgrads = jax.value_and_grad(critic_loss)(critic)
+    critic2, cm2, cv2 = adam_step(
+        critic, cm, cv, cgrads, t, lr_c, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps
+    )
+
+    # --- actor: deterministic policy gradient through the *updated* critic
+    def actor_loss(aflat):
+        a = ddpg_actor_forward(aflat, obs, aspec, n_hidden)
+        return -jnp.mean(ddpg_critic_forward(critic2, obs, a, cspec, n_hidden))
+
+    pi_loss, agrads = jax.value_and_grad(actor_loss)(actor)
+    actor2, am2, av2 = adam_step(
+        actor, am, av, agrads, t, lr_a, beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps
+    )
+
+    # --- Polyak soft target updates
+    targ_actor2 = (1.0 - cfg.tau) * targ_actor + cfg.tau * actor2
+    targ_critic2 = (1.0 - cfg.tau) * targ_critic + cfg.tau * critic2
+
+    return (
+        actor2,
+        critic2,
+        targ_actor2,
+        targ_critic2,
+        am2,
+        av2,
+        cm2,
+        cv2,
+        q_loss,
+        pi_loss,
+    )

@@ -1,0 +1,210 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, seeds and activations; assert_allclose against
+``compile.kernels.ref``. These are the core correctness signal for the
+compute hot path (DESIGN.md §5).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adam_step,
+    fused_linear,
+    fused_linear_fwd_impl,
+    matmul,
+    ref,
+)
+from compile.kernels.gae import gae_scan
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+
+class TestFusedLinear:
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        act=st.sampled_from(ref.ACTIVATIONS),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, k, n, act, seed):
+        x, w, b = rand(seed, m, k), rand(seed + 1, k, n), rand(seed + 2, n)
+        got = fused_linear(x, w, b, act)
+        want = ref.linear_ref(x, w, b, act)
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(
+        m=st.integers(1, 40),
+        k=st.integers(1, 40),
+        n=st.integers(1, 40),
+        act=st.sampled_from(ref.ACTIVATIONS),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_grads_match_ref(self, m, k, n, act, seed):
+        x, w, b = rand(seed, m, k), rand(seed + 1, k, n), rand(seed + 2, n)
+        if act == "relu":
+            # avoid measure-zero kink disagreements at exactly 0
+            b = b + 0.05
+        got = jax.grad(lambda *a: fused_linear(*a, act).sum(), argnums=(0, 1, 2))(
+            x, w, b
+        )
+        want = jax.grad(
+            lambda *a: ref.linear_ref(*a, act).sum(), argnums=(0, 1, 2)
+        )(x, w, b)
+        for g, r in zip(got, want):
+            np.testing.assert_allclose(np.array(g), np.array(r), atol=2e-4)
+
+    def test_larger_than_one_block(self):
+        # exercise the multi-block grid path (M, K, N all > 128)
+        x, w, b = rand(0, 300, 200, scale=0.1), rand(1, 200, 257, scale=0.1), rand(2, 257)
+        got = fused_linear(x, w, b, "tanh")
+        want = ref.linear_ref(x, w, b, "tanh")
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (16, 128, 256), (128, 256, 128)])
+    def test_block_shape_invariance(self, bm, bn, bk):
+        x, w, b = rand(0, 100, 190, scale=0.3), rand(1, 190, 70, scale=0.3), rand(2, 70)
+        got = fused_linear_fwd_impl(x, w, b, "id", block_m=bm, block_n=bn, block_k=bk)
+        want = ref.linear_ref(x, w, b, "id")
+        np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4)
+
+    def test_matmul_helper(self):
+        x, w = rand(0, 9, 11), rand(1, 11, 5)
+        np.testing.assert_allclose(
+            np.array(matmul(x, w)), np.array(ref.matmul_ref(x, w)), atol=1e-5
+        )
+
+    def test_single_row_and_column(self):
+        x, w, b = rand(0, 1, 3), rand(1, 3, 1), rand(2, 1)
+        got = fused_linear(x, w, b, "tanh")
+        np.testing.assert_allclose(
+            np.array(got), np.array(ref.linear_ref(x, w, b, "tanh")), atol=1e-6
+        )
+
+    def test_bwd_formula_ref_consistent(self):
+        # linear_bwd_ref must agree with autodiff of linear_ref
+        x, w, b = rand(0, 12, 7), rand(1, 7, 9), rand(2, 9)
+        y = ref.linear_ref(x, w, b, "tanh")
+        dy = rand(3, 12, 9)
+        dx, dw, db = ref.linear_bwd_ref(x, w, y, dy, "tanh")
+        f = lambda x, w, b: jnp.sum(ref.linear_ref(x, w, b, "tanh") * dy)
+        gx, gw, gb = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+        np.testing.assert_allclose(np.array(dx), np.array(gx), atol=1e-5)
+        np.testing.assert_allclose(np.array(dw), np.array(gw), atol=1e-5)
+        np.testing.assert_allclose(np.array(db), np.array(gb), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gae_scan
+# ---------------------------------------------------------------------------
+
+
+class TestGae:
+    @settings(**SETTINGS)
+    @given(
+        t=st.integers(1, 300),
+        gamma=st.floats(0.5, 1.0),
+        lam=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+        p_done=st.floats(0.0, 0.5),
+    )
+    def test_matches_ref(self, t, gamma, lam, seed, p_done):
+        k = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        rew = jax.random.normal(k1, (t,), jnp.float32)
+        val = jax.random.normal(k2, (t + 1,), jnp.float32)
+        cont = (jax.random.uniform(k3, (t,)) > p_done).astype(jnp.float32)
+        a1, r1 = gae_scan(rew, val, cont, gamma, lam)
+        a2, r2 = ref.gae_ref(rew, val, cont, gamma, lam)
+        np.testing.assert_allclose(np.array(a1), np.array(a2), atol=1e-4)
+        np.testing.assert_allclose(np.array(r1), np.array(r2), atol=1e-4)
+
+    def test_ref_matches_plain_python(self):
+        t = 17
+        rng = np.random.default_rng(0)
+        rew = rng.normal(size=t).astype(np.float32)
+        val = rng.normal(size=t + 1).astype(np.float32)
+        cont = (rng.random(t) > 0.2).astype(np.float32)
+        a1, r1 = ref.gae_ref(jnp.array(rew), jnp.array(val), jnp.array(cont), 0.99, 0.95)
+        a2, r2 = ref.gae_ref_py(rew.tolist(), val.tolist(), cont.tolist(), 0.99, 0.95)
+        np.testing.assert_allclose(np.array(a1), np.array(a2), atol=1e-4)
+        np.testing.assert_allclose(np.array(r1), np.array(r2), atol=1e-4)
+
+    def test_terminal_resets_bootstrap(self):
+        # a done at step t must cut the credit flow from t+1
+        rew = jnp.array([1.0, 1.0, 1.0], jnp.float32)
+        val = jnp.array([0.0, 0.0, 0.0, 100.0], jnp.float32)
+        cont = jnp.array([1.0, 1.0, 0.0], jnp.float32)  # terminal at last step
+        adv, _ = gae_scan(rew, val, cont, 0.99, 0.95)
+        # bootstrap value 100 must not appear anywhere
+        assert float(jnp.max(jnp.abs(adv))) < 10.0
+
+    def test_lambda_zero_is_td_residual(self):
+        t = 9
+        rew = rand(0, t)
+        val = rand(1, t + 1)
+        cont = jnp.ones((t,), jnp.float32)
+        adv, _ = gae_scan(rew, val, cont, 0.9, 0.0)
+        delta = rew + 0.9 * val[1:] - val[:-1]
+        np.testing.assert_allclose(np.array(adv), np.array(delta), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# adam_step
+# ---------------------------------------------------------------------------
+
+
+class TestAdam:
+    @settings(**SETTINGS)
+    @given(
+        p=st.integers(1, 20000),
+        t=st.integers(1, 1000),
+        seed=st.integers(0, 2**31 - 1),
+        lr=st.floats(1e-5, 1e-2),
+    )
+    def test_matches_ref(self, p, t, seed, lr):
+        par, m, v, g = (rand(seed + i, p) for i in range(4))
+        v = jnp.abs(v)  # second moment must be non-negative
+        tt, lrr = jnp.float32(t), jnp.float32(lr)
+        got = adam_step(par, m, v, g, tt, lrr)
+        want = ref.adam_ref(par, m, v, g, tt, lrr, 0.9, 0.999, 1e-8)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-5)
+
+    def test_zero_grad_keeps_params_nearly_fixed(self):
+        p = rand(0, 100)
+        m = jnp.zeros(100)
+        v = jnp.zeros(100)
+        g = jnp.zeros(100)
+        p2, m2, v2 = adam_step(p, m, v, g, jnp.float32(1.0), jnp.float32(1e-3))
+        np.testing.assert_allclose(np.array(p2), np.array(p), atol=1e-6)
+        assert float(jnp.abs(m2).max()) == 0.0
+        assert float(jnp.abs(v2).max()) == 0.0
+
+    def test_descends_quadratic(self):
+        # 200 adam steps on f(p) = ||p||^2 should shrink the norm a lot
+        p = rand(0, 64)
+        m = jnp.zeros(64)
+        v = jnp.zeros(64)
+        start = float(jnp.linalg.norm(p))
+        for t in range(1, 201):
+            g = 2.0 * p
+            p, m, v = adam_step(p, m, v, g, jnp.float32(t), jnp.float32(0.05))
+        assert float(jnp.linalg.norm(p)) < 0.2 * start

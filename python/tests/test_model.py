@@ -1,0 +1,297 @@
+"""L2 model correctness: distributions, losses, update rules, flat-param ABI."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+def make(obs_dim=3, act_dim=2, hidden=(16, 16), seed=0):
+    spec = model.param_spec(obs_dim, act_dim, hidden)
+    flat = model.init_flat(spec, key(seed))
+    return spec, flat, len(hidden)
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter ABI
+# ---------------------------------------------------------------------------
+
+
+class TestParamSpec:
+    def test_offsets_contiguous(self):
+        spec = model.param_spec(17, 6, (64, 64))
+        off = 0
+        for e in spec:
+            assert e.offset == off
+            off += e.size
+        assert off == model.flat_size(spec)
+
+    def test_expected_layer_names(self):
+        spec = model.param_spec(3, 1, (8, 8))
+        names = [e.name for e in spec]
+        assert names == [
+            "pi/l0/w", "pi/l0/b", "pi/l1/w", "pi/l1/b", "pi/out/w", "pi/out/b",
+            "pi/log_std",
+            "vf/l0/w", "vf/l0/b", "vf/l1/w", "vf/l1/b", "vf/out/w", "vf/out/b",
+        ]
+
+    def test_halfcheetah_param_count(self):
+        # 17 obs, 6 act, 64x64: documented count the Rust side also asserts
+        spec = model.param_spec(17, 6, (64, 64))
+        pi = 17 * 64 + 64 + 64 * 64 + 64 + 64 * 6 + 6 + 6
+        vf = 17 * 64 + 64 + 64 * 64 + 64 + 64 * 1 + 1
+        assert model.flat_size(spec) == pi + vf
+
+    def test_unflatten_round_trip(self):
+        spec, flat, _ = make()
+        p = model.unflatten(flat, spec)
+        rebuilt = jnp.concatenate([p[e.name].reshape(-1) for e in spec])
+        np.testing.assert_array_equal(np.array(rebuilt), np.array(flat))
+
+    def test_init_log_std_constant(self):
+        spec, flat, _ = make()
+        p = model.unflatten(flat, spec)
+        np.testing.assert_allclose(np.array(p["pi/log_std"]), -0.5)
+
+    def test_init_glorot_bounds(self):
+        spec, flat, _ = make(obs_dim=5, act_dim=3, hidden=(32, 32))
+        p = model.unflatten(flat, spec)
+        w = np.array(p["pi/l0/w"])
+        bound = math.sqrt(6.0 / (5 + 32))
+        assert np.all(np.abs(w) <= bound + 1e-6)
+        assert np.std(w) > 0.1 * bound  # actually random, not zeros
+
+    def test_actor_critic_specs(self):
+        aspec = model.actor_spec(17, 6, (64, 64))
+        cspec = model.critic_spec(17, 6, (64, 64))
+        assert model.flat_size(aspec) == 17 * 64 + 64 + 64 * 64 + 64 + 64 * 6 + 6
+        assert model.flat_size(cspec) == 23 * 64 + 64 + 64 * 64 + 64 + 64 + 1
+
+
+# ---------------------------------------------------------------------------
+# Gaussian policy
+# ---------------------------------------------------------------------------
+
+
+class TestGaussian:
+    def test_logp_matches_closed_form(self):
+        mean = jnp.array([[0.5, -1.0]])
+        log_std = jnp.array([0.1, -0.3])
+        a = jnp.array([[0.7, -0.5]])
+        got = float(model.gaussian_logp(a, mean, log_std)[0])
+        want = 0.0
+        for i in range(2):
+            s = math.exp(float(log_std[i]))
+            z = (float(a[0, i]) - float(mean[0, i])) / s
+            want += -0.5 * z * z - float(log_std[i]) - 0.5 * math.log(2 * math.pi)
+        assert abs(got - want) < 1e-5
+
+    def test_entropy_closed_form(self):
+        log_std = jnp.array([0.0, 0.5])
+        got = float(model.gaussian_entropy(log_std))
+        want = sum(ls + 0.5 * (math.log(2 * math.pi) + 1) for ls in [0.0, 0.5])
+        assert abs(got - want) < 1e-5
+
+    def test_act_fn_zero_noise_is_mean(self):
+        spec, flat, nh = make()
+        obs = jax.random.normal(key(1), (4, 3))
+        noise = jnp.zeros((4, 2))
+        action, logp, value, mean = model.act_fn(flat, obs, noise, spec, nh)
+        np.testing.assert_allclose(np.array(action), np.array(mean), atol=1e-6)
+        assert logp.shape == (4,)
+        assert value.shape == (4,)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 1000), batch=st.integers(1, 16))
+    def test_act_fn_logp_consistent(self, seed, batch):
+        spec, flat, nh = make(seed=seed)
+        obs = jax.random.normal(key(seed + 1), (batch, 3))
+        noise = jax.random.normal(key(seed + 2), (batch, 2))
+        action, logp, _, mean = model.act_fn(flat, obs, noise, spec, nh)
+        log_std = model.unflatten(flat, spec)["pi/log_std"]
+        want = model.gaussian_logp(action, mean, log_std)
+        np.testing.assert_allclose(np.array(logp), np.array(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# PPO loss + step
+# ---------------------------------------------------------------------------
+
+
+def ppo_batch(spec, flat, nh, batch=32, seed=0):
+    obs = jax.random.normal(key(seed), (batch, 3))
+    noise = jax.random.normal(key(seed + 1), (batch, 2))
+    action, logp, value, _ = model.act_fn(flat, obs, noise, spec, nh)
+    adv = jax.random.normal(key(seed + 2), (batch,))
+    ret = value + 0.1 * jax.random.normal(key(seed + 3), (batch,))
+    mask = jnp.ones((batch,))
+    return obs, action, logp, adv, ret, mask
+
+
+class TestPpo:
+    def test_zero_update_is_neutral(self):
+        # With old_logp from the same params, ratio == 1: pi_loss == -mean(adv),
+        # kl == 0, clip_frac == 0.
+        spec, flat, nh = make()
+        cfg = model.PpoConfig()
+        obs, act, logp, adv, ret, mask = ppo_batch(spec, flat, nh)
+        total, (pi_loss, v_loss, ent, kl, cf) = model.ppo_loss(
+            flat, obs, act, logp, adv, ret, mask, spec, nh, cfg
+        )
+        assert abs(float(kl)) < 1e-5
+        assert float(cf) == 0.0
+        assert abs(float(pi_loss) + float(jnp.mean(adv))) < 1e-4
+
+    def test_mask_excludes_padding(self):
+        spec, flat, nh = make()
+        cfg = model.PpoConfig()
+        obs, act, logp, adv, ret, mask = ppo_batch(spec, flat, nh, batch=32)
+        # poison the padded half with huge values; masked loss must not move
+        mask = jnp.concatenate([jnp.ones(16), jnp.zeros(16)])
+        adv_poison = adv.at[16:].set(1e6)
+        ret_poison = ret.at[16:].set(-1e6)
+        t1, _ = model.ppo_loss(
+            flat, obs[:16], act[:16], logp[:16], adv[:16], ret[:16],
+            jnp.ones(16), spec, nh, cfg,
+        )
+        t2, _ = model.ppo_loss(
+            flat, obs, act, logp, adv_poison, ret_poison, mask, spec, nh, cfg
+        )
+        assert abs(float(t1) - float(t2)) < 1e-3
+
+    def test_train_step_reduces_value_loss(self):
+        spec, flat, nh = make()
+        cfg = model.PpoConfig()
+        obs, act, logp, adv, ret, mask = ppo_batch(spec, flat, nh, batch=64)
+        ret = ret + 1.0  # force a value error to learn away
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        first_v_loss = None
+        for t in range(1, 31):
+            out = model.train_ppo_step(
+                flat, m, v, jnp.float32(t), jnp.float32(1e-2),
+                obs, act, logp, adv, ret, mask, spec, nh, cfg,
+            )
+            flat, m, v = out[0], out[1], out[2]
+            v_loss = float(out[5])
+            if first_v_loss is None:
+                first_v_loss = v_loss
+        assert v_loss < 0.5 * first_v_loss
+
+    def test_clip_blocks_large_ratio_gain(self):
+        # pi_loss gradient must vanish where ratio is already past the clip
+        spec, flat, nh = make()
+        cfg = model.PpoConfig(clip=0.2, vf_coef=0.0)
+        obs, act, logp, adv, ret, mask = ppo_batch(spec, flat, nh)
+        # fake very small old_logp => ratio >> 1+clip for positive adv
+        total_hi, (pi_hi, *_rest) = model.ppo_loss(
+            flat, obs, act, logp - 5.0, jnp.abs(adv), ret, mask, spec, nh, cfg
+        )
+        # clipped surrogate == (1+clip)*adv, independent of params
+        g = jax.grad(
+            lambda f: model.ppo_loss(
+                f, obs, act, logp - 5.0, jnp.abs(adv), ret, mask, spec, nh, cfg
+            )[0]
+        )(flat)
+        pi_sl = model.param_spec(3, 2, (16, 16))
+        # zero out value-net grads: only policy slice should be ~0 too
+        npg = np.array(g)
+        pi_size = sum(e.size for e in pi_sl if e.name.startswith("pi/"))
+        assert np.abs(npg[:pi_size]).max() < 1e-5
+
+    def test_grad_entry_matches_train_step_direction(self):
+        spec, flat, nh = make()
+        cfg = model.PpoConfig()
+        obs, act, logp, adv, ret, mask = ppo_batch(spec, flat, nh)
+        grads, total, n = model.ppo_grad(
+            flat, obs, act, logp, adv, ret, mask, spec, nh, cfg
+        )
+        assert int(n) == 32
+        direct = jax.grad(
+            lambda f: model.ppo_loss(
+                f, obs, act, logp, adv, ret, mask, spec, nh, cfg
+            )[0]
+        )(flat)
+        np.testing.assert_allclose(np.array(grads), np.array(direct), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# DDPG
+# ---------------------------------------------------------------------------
+
+
+class TestDdpg:
+    def setup_method(self, _):
+        self.O, self.A, self.H = 3, 2, (16, 16)
+        self.aspec = model.actor_spec(self.O, self.A, self.H)
+        self.cspec = model.critic_spec(self.O, self.A, self.H)
+        self.actor = model.init_flat(self.aspec, key(0))
+        self.critic = model.init_flat(self.cspec, key(1))
+        self.nh = 2
+
+    def test_actor_outputs_bounded(self):
+        obs = 10.0 * jax.random.normal(key(2), (16, self.O))
+        a = model.ddpg_actor_forward(self.actor, obs, self.aspec, self.nh)
+        assert float(jnp.abs(a).max()) <= 1.0
+
+    def test_soft_update_moves_targets(self):
+        cfg = model.DdpgConfig(tau=0.5)
+        B = 8
+        obs = jax.random.normal(key(3), (B, self.O))
+        act = jnp.clip(jax.random.normal(key(4), (B, self.A)), -1, 1)
+        rew = jax.random.normal(key(5), (B,))
+        nxt = jax.random.normal(key(6), (B, self.O))
+        done = jnp.zeros((B,))
+        ta = jnp.zeros_like(self.actor)
+        tc = jnp.zeros_like(self.critic)
+        zeros_a = jnp.zeros_like(self.actor)
+        zeros_c = jnp.zeros_like(self.critic)
+        out = model.train_ddpg_step(
+            self.actor, self.critic, ta, tc, zeros_a, zeros_a, zeros_c, zeros_c,
+            jnp.float32(1), jnp.float32(1e-3), jnp.float32(1e-3),
+            obs, act, rew, nxt, done, self.aspec, self.cspec, self.nh, cfg,
+        )
+        actor2, critic2, ta2, tc2 = out[0], out[1], out[2], out[3]
+        np.testing.assert_allclose(
+            np.array(ta2), 0.5 * np.array(actor2), atol=1e-5
+        )
+        np.testing.assert_allclose(
+            np.array(tc2), 0.5 * np.array(critic2), atol=1e-5
+        )
+
+    def test_critic_learns_constant_reward(self):
+        # rew == 1, done == 1 everywhere: Q target is exactly 1.0
+        cfg = model.DdpgConfig()
+        B = 64
+        obs = jax.random.normal(key(3), (B, self.O))
+        act = jnp.clip(jax.random.normal(key(4), (B, self.A)), -1, 1)
+        rew = jnp.ones((B,))
+        done = jnp.ones((B,))
+        actor, critic = self.actor, self.critic
+        ta, tc = actor, critic
+        am = av = jnp.zeros_like(actor)
+        cm = cv = jnp.zeros_like(critic)
+        q_first = None
+        for t in range(1, 61):
+            out = model.train_ddpg_step(
+                actor, critic, ta, tc, am, av, cm, cv,
+                jnp.float32(t), jnp.float32(0.0), jnp.float32(1e-2),
+                obs, act, rew, obs, done, self.aspec, self.cspec, self.nh, cfg,
+            )
+            actor, critic, ta, tc, am, av, cm, cv, q_loss, _ = out
+            if q_first is None:
+                q_first = float(q_loss)
+        assert float(q_loss) < 0.1 * q_first

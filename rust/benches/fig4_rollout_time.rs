@@ -1,0 +1,36 @@
+//! Bench: paper Fig 4 — experience-collection (rollout) time per
+//! iteration vs number of sampler processes N, at a fixed per-iteration
+//! sample budget. Expected shape: monotone decrease, approaching the
+//! learner-bound floor.
+//!
+//!     cargo bench --bench fig4_rollout_time
+//!
+//! Scaled-down workload (benches must terminate quickly); the full-size
+//! run is `examples/scaling_sweep.rs` / `walle figures`.
+
+use walle::bench::figures;
+use walle::config::{Backend, TrainConfig};
+use walle::runtime::make_factory;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::preset("halfcheetah");
+    cfg.backend = Backend::Native;
+    cfg.samples_per_iter = 6_000;
+    cfg.iterations = 4;
+    cfg.ppo.epochs = 4;
+    cfg.async_mode = false; // isolate pure collection time per iteration
+
+    let ns = [1usize, 2, 4, 6, 8, 10];
+    let rows = figures::scaling_sweep(&cfg, &|c| make_factory(c), &ns, 1)?;
+    figures::print_sweep_table(&rows, "Fig 4: rollout time vs N (halfcheetah, 6k samples/iter)");
+
+    let monotone = rows
+        .windows(2)
+        .all(|w| w[1].collect_secs <= w[0].collect_secs * 1.15);
+    println!("\nfig4 shape check (monotone decreasing within 15% noise): {monotone}");
+    assert!(
+        rows.last().unwrap().collect_secs < rows.first().unwrap().collect_secs,
+        "N=10 must collect faster than N=1"
+    );
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Bench: paper Fig 5 — experience-collection speedup vs N.
+//! Expected shape: near-linear ("while not over-linear") scaling with the
+//! variance the paper attributes to asynchrony and queue I/O.
+//!
+//!     cargo bench --bench fig5_speedup
+
+use walle::bench::figures;
+use walle::config::{Backend, TrainConfig};
+use walle::runtime::make_factory;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::preset("halfcheetah");
+    cfg.backend = Backend::Native;
+    cfg.samples_per_iter = 6_000;
+    cfg.iterations = 4;
+    cfg.ppo.epochs = 4;
+    cfg.async_mode = false;
+
+    let ns = [1usize, 2, 4, 6, 8, 10];
+    let rows = figures::scaling_sweep(&cfg, &|c| make_factory(c), &ns, 1)?;
+    let (series, slope, r2) = figures::speedups(&rows);
+
+    println!("\n== Fig 5: collection speedup vs N ==");
+    println!("{:>4} {:>10} {:>8}", "N", "speedup", "ideal");
+    for (n, s) in &series {
+        println!("{n:>4} {s:>9.2}x {n:>7}x");
+    }
+    println!("linear fit: slope {slope:.3}, r² {r2:.3}");
+
+    // the paper's claim: near-linear but NOT over-linear
+    let over_linear = series.iter().any(|&(n, s)| s > n as f64 * 1.15);
+    assert!(!over_linear, "speedup should not be over-linear");
+    let n10 = series.iter().find(|(n, _)| *n == 10).map(|&(_, s)| s).unwrap_or(0.0);
+    println!("fig5 shape check: speedup(10) = {n10:.2}x (near-linear target, not over-linear)");
+    assert!(n10 > 2.0, "parallel sampling shows no meaningful speedup");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Bench: paper Fig 6 — percentage of per-iteration wall-clock spent in
+//! policy learning vs experience collection, as a function of N.
+//! Expected shape: with near-linear collection speedup, the learn-time
+//! *fraction* grows with N until learning becomes the next bottleneck
+//! (the paper's closing observation, motivating its further-work §6.2).
+//!
+//!     cargo bench --bench fig6_time_breakdown
+
+use walle::bench::figures;
+use walle::config::{Backend, TrainConfig};
+use walle::runtime::make_factory;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::preset("halfcheetah");
+    cfg.backend = Backend::Native;
+    cfg.samples_per_iter = 6_000;
+    cfg.iterations = 4;
+    cfg.ppo.epochs = 4;
+    cfg.async_mode = false;
+
+    let ns = [1usize, 2, 4, 6, 8, 10];
+    let rows = figures::scaling_sweep(&cfg, &|c| make_factory(c), &ns, 1)?;
+
+    println!("\n== Fig 6: time breakdown vs N ==");
+    println!("{:>4} {:>10} {:>10}", "N", "%collect", "%learn");
+    for r in &rows {
+        println!(
+            "{:>4} {:>9.1}% {:>9.1}%",
+            r.n,
+            100.0 * r.collect_frac,
+            100.0 * r.learn_frac
+        );
+    }
+
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    println!(
+        "\nfig6 shape check: learn fraction {:.1}% (N=1) -> {:.1}% (N=10)",
+        100.0 * first.learn_frac,
+        100.0 * last.learn_frac
+    );
+    assert!(
+        last.learn_frac > first.learn_frac,
+        "learn fraction must grow as collection parallelizes"
+    );
+    Ok(())
+}

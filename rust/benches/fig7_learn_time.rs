@@ -1,0 +1,42 @@
+//! Bench: paper Fig 7 — policy-learning time per iteration vs N.
+//! Expected shape: roughly constant — the learner does the same number of
+//! minibatch updates regardless of how many samplers feed it ("the overall
+//! policy learning time is almost keeping the same for each iteration").
+//!
+//!     cargo bench --bench fig7_learn_time
+
+use walle::bench::figures;
+use walle::config::{Backend, TrainConfig};
+use walle::runtime::make_factory;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = TrainConfig::preset("halfcheetah");
+    cfg.backend = Backend::Native;
+    cfg.samples_per_iter = 6_000;
+    cfg.iterations = 4;
+    cfg.ppo.epochs = 4;
+    cfg.async_mode = false;
+
+    let ns = [1usize, 2, 4, 6, 8, 10];
+    let rows = figures::scaling_sweep(&cfg, &|c| make_factory(c), &ns, 1)?;
+
+    println!("\n== Fig 7: learn time per iteration vs N ==");
+    println!("{:>4} {:>14}", "N", "learn (s)");
+    for r in &rows {
+        println!("{:>4} {:>14.4}", r.n, r.learn_secs);
+    }
+
+    let times: Vec<f64> = rows.iter().map(|r| r.learn_secs).collect();
+    let mean = walle::util::stats::mean(&times);
+    let max_dev = times
+        .iter()
+        .map(|t| (t - mean).abs() / mean)
+        .fold(0.0f64, f64::max);
+    println!("\nfig7 shape check: learn time {mean:.3}s ± {:.0}% across N", 100.0 * max_dev);
+    assert!(
+        max_dev < 0.5,
+        "learn time should be ~constant in N (max deviation {:.0}%)",
+        100.0 * max_dev
+    );
+    Ok(())
+}

@@ -1,0 +1,209 @@
+//! Micro-benchmarks of WALL-E's hot paths: environment stepping, policy
+//! inference (native + XLA), the experience queue, GAE, and the PPO train
+//! step. These are the §Perf profiling probes (EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench micro
+
+use walle::algo::gae::gae;
+use walle::bench::harness::{fmt_secs, Bench};
+use walle::config::{DdpgCfg, PpoCfg};
+use walle::coordinator::queue::Channel;
+use walle::env::registry::make_env;
+use walle::runtime::native_backend::NativeFactory;
+use walle::runtime::xla_backend::XlaFactory;
+use walle::runtime::{BackendFactory, PpoMinibatch, PpoTrainState};
+use walle::util::rng::Pcg64;
+
+fn bench_env_steps() {
+    for name in ["pendulum", "cartpole", "reacher", "halfcheetah"] {
+        let mut env = make_env(name).unwrap();
+        let mut rng = Pcg64::new(0);
+        let mut obs = vec![0.0f32; env.obs_dim()];
+        let mut act = vec![0.0f32; env.act_dim()];
+        env.reset(&mut rng, &mut obs);
+        let mut steps = 0u64;
+        let r = Bench::new(&format!("env_step/{name}"))
+            .warmup(1)
+            .samples(5)
+            .iters_per_sample(2000)
+            .run(|| {
+                for a in act.iter_mut() {
+                    *a = rng.uniform(-1.0, 1.0);
+                }
+                let s = env.step(&act, &mut obs);
+                steps += 1;
+                if s.done || steps % env.max_episode_steps() as u64 == 0 {
+                    env.reset(&mut rng, &mut obs);
+                }
+            });
+        let rate = 1.0 / r.summary().mean;
+        println!("    -> {rate:.0} steps/s/core");
+    }
+}
+
+fn bench_queue() {
+    let ch: Channel<Vec<f32>> = Channel::new(64);
+    let payload = vec![0.0f32; 200 * 17];
+    Bench::new("queue_push_pop (200x17 chunk)")
+        .warmup(2)
+        .samples(10)
+        .iters_per_sample(5000)
+        .run(|| {
+            ch.push(payload.clone()).unwrap();
+            let _ = ch.pop().unwrap();
+        });
+
+    // contended: 4 producers + 1 consumer
+    let ch = std::sync::Arc::new(Channel::<u64>::new(64));
+    let t0 = std::time::Instant::now();
+    let total = 200_000u64;
+    std::thread::scope(|s| {
+        for p in 0..4 {
+            let ch = ch.clone();
+            s.spawn(move || {
+                for i in 0..total / 4 {
+                    ch.push(p * total + i).unwrap();
+                }
+            });
+        }
+        let ch2 = ch.clone();
+        s.spawn(move || {
+            for _ in 0..total {
+                ch2.pop().unwrap();
+            }
+        });
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "queue contended 4p1c: {:.2}M msgs/s ({} msgs in {})",
+        total as f64 / dt / 1e6,
+        total,
+        fmt_secs(dt)
+    );
+}
+
+fn bench_gae() {
+    let mut rng = Pcg64::new(1);
+    let t = 1000;
+    let rew: Vec<f32> = (0..t).map(|_| rng.normal()).collect();
+    let val: Vec<f32> = (0..=t).map(|_| rng.normal()).collect();
+    let cont = vec![1.0f32; t];
+    Bench::new(&format!("gae_native (T={t})"))
+        .warmup(2)
+        .samples(10)
+        .iters_per_sample(2000)
+        .run(|| {
+            let _ = gae(&rew, &val, &cont, 0.99, 0.95);
+        });
+}
+
+fn bench_native_backend() {
+    let f = NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
+    let flat = f.init_ppo_params(0);
+    let mut actor = f.make_actor().unwrap();
+    let mut rng = Pcg64::new(2);
+    let obs: Vec<f32> = (0..17).map(|_| rng.normal()).collect();
+    let noise = vec![0.0f32; 6];
+    let r = Bench::new("act_native (B=1, 17->64x64->6)")
+        .warmup(5)
+        .samples(10)
+        .iters_per_sample(2000)
+        .run(|| {
+            let _ = actor.act(&flat, &obs, &noise).unwrap();
+        });
+    println!("    -> {:.0} inferences/s/core", 1.0 / r.summary().mean);
+
+    let mut learner = f.make_ppo_learner().unwrap();
+    let mut state = PpoTrainState::new(flat);
+    let m = 512;
+    let obs: Vec<f32> = (0..m * 17).map(|_| rng.normal()).collect();
+    let act: Vec<f32> = (0..m * 6).map(|_| rng.normal()).collect();
+    let old_logp = vec![-8.0f32; m];
+    let adv: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let ret = vec![0.0f32; m];
+    let mask = vec![1.0f32; m];
+    Bench::new("train_step_native (M=512)")
+        .warmup(2)
+        .samples(10)
+        .run(|| {
+            let mb = PpoMinibatch {
+                obs: &obs,
+                act: &act,
+                old_logp: &old_logp,
+                adv: &adv,
+                ret: &ret,
+                mask: &mask,
+            };
+            let _ = learner.train_step(&mut state, 3e-4, &mb).unwrap();
+        });
+}
+
+fn bench_xla_backend() {
+    if !std::path::Path::new("artifacts/index.json").exists() {
+        println!("xla benches skipped: run `make artifacts` first");
+        return;
+    }
+    let f = XlaFactory::new("artifacts", "halfcheetah").unwrap();
+    let flat = f.init_ppo_params(0);
+    let mut actor = f.make_actor().unwrap();
+    let mut rng = Pcg64::new(3);
+    let obs: Vec<f32> = (0..17).map(|_| rng.normal()).collect();
+    let noise = vec![0.0f32; 6];
+    let r = Bench::new("act_xla (B=1, PJRT)")
+        .warmup(10)
+        .samples(10)
+        .iters_per_sample(500)
+        .run(|| {
+            let _ = actor.act(&flat, &obs, &noise).unwrap();
+        });
+    println!("    -> {:.0} inferences/s/core", 1.0 / r.summary().mean);
+
+    let mut learner = f.make_ppo_learner().unwrap();
+    let mut state = PpoTrainState::new(flat);
+    let m = learner.minibatch_size();
+    let obs: Vec<f32> = (0..m * 17).map(|_| rng.normal()).collect();
+    let act: Vec<f32> = (0..m * 6).map(|_| rng.normal()).collect();
+    let old_logp = vec![-8.0f32; m];
+    let adv: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let ret = vec![0.0f32; m];
+    let mask = vec![1.0f32; m];
+    Bench::new(&format!("train_step_xla (M={m}, PJRT)"))
+        .warmup(2)
+        .samples(10)
+        .run(|| {
+            let mb = PpoMinibatch {
+                obs: &obs,
+                act: &act,
+                old_logp: &old_logp,
+                adv: &adv,
+                ret: &ret,
+                mask: &mask,
+            };
+            let _ = learner.train_step(&mut state, 3e-4, &mb).unwrap();
+        });
+
+    let t = 500;
+    let rew: Vec<f32> = (0..t).map(|_| rng.normal()).collect();
+    let val: Vec<f32> = (0..=t).map(|_| rng.normal()).collect();
+    let cont = vec![1.0f32; t];
+    Bench::new("gae_xla (T=500 in 1024 horizon, Pallas scan)")
+        .warmup(2)
+        .samples(10)
+        .iters_per_sample(20)
+        .run(|| {
+            let _ = learner.gae(&rew, &val, &cont).unwrap();
+        });
+}
+
+fn main() {
+    println!("== WALL-E micro-benchmarks ==\n-- environments --");
+    bench_env_steps();
+    println!("-- experience queue --");
+    bench_queue();
+    println!("-- GAE --");
+    bench_gae();
+    println!("-- native backend --");
+    bench_native_backend();
+    println!("-- xla backend --");
+    bench_xla_backend();
+}

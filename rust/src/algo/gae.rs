@@ -1,0 +1,183 @@
+//! Generalized advantage estimation in Rust — the canonical ragged-length
+//! implementation the learner uses (the L1 Pallas `gae_scan` artifact is
+//! shape-specialized to the preset horizon; parity between the two is
+//! checked in `rust/tests/runtime_roundtrip.rs`).
+//!
+//! Semantics (identical to kernels/ref.py):
+//!     delta_t = r_t + gamma * cont_t * V_{t+1} - V_t
+//!     adv_t   = delta_t + gamma * lam * cont_t * adv_{t+1}
+//!     ret_t   = adv_t + V_t
+//! `cont_t = 0` at true terminals (no bootstrap), `1` elsewhere — a
+//! time-limit truncation keeps `cont = 1` and supplies V(s_T) as the
+//! bootstrap value, which is exactly how the sampler labels chunks.
+
+/// Compute GAE into caller-provided buffers.
+/// rew: [T], val: [T+1] (bootstrap last), cont: [T]; adv/ret: [T] out.
+pub fn gae_into(
+    rew: &[f32],
+    val: &[f32],
+    cont: &[f32],
+    gamma: f32,
+    lam: f32,
+    adv: &mut [f32],
+    ret: &mut [f32],
+) {
+    let t_len = rew.len();
+    assert_eq!(val.len(), t_len + 1, "val needs bootstrap entry");
+    assert_eq!(cont.len(), t_len);
+    assert_eq!(adv.len(), t_len);
+    assert_eq!(ret.len(), t_len);
+    let mut last = 0.0f32;
+    for t in (0..t_len).rev() {
+        let delta = rew[t] + gamma * cont[t] * val[t + 1] - val[t];
+        last = delta + gamma * lam * cont[t] * last;
+        adv[t] = last;
+        ret[t] = last + val[t];
+    }
+}
+
+/// Allocating convenience wrapper.
+pub fn gae(rew: &[f32], val: &[f32], cont: &[f32], gamma: f32, lam: f32) -> (Vec<f32>, Vec<f32>) {
+    let mut adv = vec![0.0; rew.len()];
+    let mut ret = vec![0.0; rew.len()];
+    gae_into(rew, val, cont, gamma, lam, &mut adv, &mut ret);
+    (adv, ret)
+}
+
+/// Normalize advantages to zero mean / unit std in place (PPO trick).
+pub fn normalize_advantages(adv: &mut [f32]) {
+    if adv.is_empty() {
+        return;
+    }
+    let n = adv.len() as f32;
+    let mean = adv.iter().sum::<f32>() / n;
+    let var = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-8);
+    for a in adv.iter_mut() {
+        *a = (*a - mean) / std;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn single_step_episode() {
+        // T=1, terminal: adv = r - V0, ret = r
+        let (adv, ret) = gae(&[2.0], &[0.5, 99.0], &[0.0], 0.99, 0.95);
+        assert!((adv[0] - 1.5).abs() < 1e-6);
+        assert!((ret[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bootstrap_used_when_continuing() {
+        // T=1, truncated (cont=1): delta = r + γ V1 - V0
+        let (adv, _) = gae(&[1.0], &[0.0, 10.0], &[1.0], 0.9, 0.95);
+        assert!((adv[0] - (1.0 + 0.9 * 10.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lambda_zero_is_td_residual() {
+        let rew = [1.0, -0.5, 0.25];
+        let val = [0.1, 0.2, 0.3, 0.4];
+        let cont = [1.0, 1.0, 1.0];
+        let (adv, _) = gae(&rew, &val, &cont, 0.9, 0.0);
+        for t in 0..3 {
+            let delta = rew[t] + 0.9 * val[t + 1] - val[t];
+            assert!((adv[t] - delta).abs() < 1e-6, "t={t}");
+        }
+    }
+
+    #[test]
+    fn lambda_one_is_discounted_return_minus_value() {
+        // with λ=1 and cont=1: ret_t = Σ γ^k r_{t+k} + γ^{T-t} V_T
+        let rew = [1.0f32, 2.0, 3.0];
+        let val = [0.0f32, 0.0, 0.0, 4.0];
+        let cont = [1.0f32, 1.0, 1.0];
+        let g = 0.5f32;
+        let (_, ret) = gae(&rew, &val, &cont, g, 1.0);
+        let want0 = 1.0 + g * 2.0 + g * g * 3.0 + g * g * g * 4.0;
+        assert!((ret[0] - want0).abs() < 1e-5, "{} vs {want0}", ret[0]);
+    }
+
+    #[test]
+    fn terminal_cuts_credit_flow() {
+        let rew = [0.0f32, 0.0, 100.0];
+        let val = [0.0f32; 4];
+        let cont = [1.0f32, 0.0, 1.0]; // terminal after step 1
+        let (adv, _) = gae(&rew, &val, &cont, 0.99, 0.95);
+        // step 0 must see nothing of the +100 beyond the terminal
+        assert!(adv[0].abs() < 1e-5, "adv0={}", adv[0]);
+    }
+
+    #[test]
+    fn matches_naive_quadratic_reference() {
+        // O(T^2) direct sum: adv_t = Σ_k (γλ)^k Π_{j<k} cont · δ_{t+k}
+        let mut rng = Pcg64::new(1);
+        let t_len = 57;
+        let rew: Vec<f32> = (0..t_len).map(|_| rng.normal()).collect();
+        let val: Vec<f32> = (0..=t_len).map(|_| rng.normal()).collect();
+        let cont: Vec<f32> = (0..t_len)
+            .map(|_| if rng.next_f32() < 0.1 { 0.0 } else { 1.0 })
+            .collect();
+        let (gamma, lam) = (0.97f32, 0.9f32);
+        let (adv, _) = gae(&rew, &val, &cont, gamma, lam);
+        for t in 0..t_len {
+            let mut want = 0.0f32;
+            let mut w = 1.0f32;
+            for k in t..t_len {
+                let delta = rew[k] + gamma * cont[k] * val[k + 1] - val[k];
+                want += w * delta;
+                w *= gamma * lam * cont[k];
+                if w == 0.0 {
+                    break;
+                }
+            }
+            assert!((adv[t] - want).abs() < 1e-3, "t={t}: {} vs {want}", adv[t]);
+        }
+    }
+
+    #[test]
+    fn normalize_gives_zero_mean_unit_std() {
+        let mut adv: Vec<f32> = (0..100).map(|i| (i as f32) * 0.3 - 7.0).collect();
+        normalize_advantages(&mut adv);
+        let mean: f32 = adv.iter().sum::<f32>() / 100.0;
+        let var: f32 = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / 100.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-4);
+    }
+
+    /// Property: GAE is linear in rewards (for fixed val/cont).
+    #[test]
+    fn property_linear_in_rewards() {
+        struct G;
+        impl Gen for G {
+            type Value = (Vec<f32>, Vec<f32>, u64);
+            fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+                let t = 1 + rng.below(40);
+                let r1: Vec<f32> = (0..t).map(|_| rng.normal()).collect();
+                let r2: Vec<f32> = (0..t).map(|_| rng.normal()).collect();
+                (r1, r2, rng.next_u64())
+            }
+        }
+        check(7, 100, &G, |(r1, r2, seed)| {
+            let t = r1.len();
+            let mut rng = Pcg64::new(*seed);
+            let val: Vec<f32> = (0..=t).map(|_| rng.normal()).collect();
+            let cont: Vec<f32> = (0..t)
+                .map(|_| if rng.next_f32() < 0.2 { 0.0 } else { 1.0 })
+                .collect();
+            let (a1, _) = gae(r1, &val, &cont, 0.99, 0.95);
+            let zero_val = vec![0.0; t + 1];
+            let (a2, _) = gae(r2, &zero_val, &cont, 0.99, 0.95);
+            let sum: Vec<f32> = r1.iter().zip(r2).map(|(a, b)| a + b).collect();
+            let (a12, _) = gae(&sum, &val, &cont, 0.99, 0.95);
+            a12.iter()
+                .zip(a1.iter().zip(&a2))
+                .all(|(s, (x, y))| (s - (x + y)).abs() < 1e-3)
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! RL algorithm cores: GAE, rollout data structures, PPO/DDPG update
+//! logic, and observation normalization. All algorithm math that is not
+//! network compute lives here; the network compute goes through
+//! `runtime::*Backend` (XLA artifacts or the native mirror).
+
+pub mod ddpg;
+pub mod gae;
+pub mod normalizer;
+pub mod ppo;
+pub mod rollout;

@@ -1,0 +1,179 @@
+//! Running observation normalization shared through the policy queue.
+//!
+//! The learner owns a mutable [`RunningNorm`] updated from every chunk it
+//! consumes; each policy publication includes a frozen [`NormSnapshot`]
+//! that samplers apply to raw observations before the policy sees them.
+//! Normalizing on the *sampler* side keeps the policy's input distribution
+//! consistent between acting and learning.
+
+use crate::util::stats::Welford;
+
+/// Per-dimension running mean/std (Welford).
+#[derive(Debug, Clone)]
+pub struct RunningNorm {
+    dims: Vec<Welford>,
+    clip: f32,
+}
+
+impl RunningNorm {
+    pub fn new(dim: usize, clip: f32) -> Self {
+        Self {
+            dims: vec![Welford::default(); dim],
+            clip,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Update from a row-major batch [n * dim].
+    pub fn update(&mut self, batch: &[f32]) {
+        let d = self.dims.len();
+        assert_eq!(batch.len() % d, 0);
+        for row in batch.chunks_exact(d) {
+            for (w, &x) in self.dims.iter_mut().zip(row) {
+                w.push(x as f64);
+            }
+        }
+    }
+
+    /// Merge sampler-side accumulators (parallel Welford).
+    pub fn merge(&mut self, other: &RunningNorm) {
+        assert_eq!(self.dims.len(), other.dims.len());
+        for (a, b) in self.dims.iter_mut().zip(&other.dims) {
+            a.merge(b);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.dims.first().map_or(0, |w| w.n)
+    }
+
+    pub fn snapshot(&self) -> NormSnapshot {
+        NormSnapshot {
+            mean: self.dims.iter().map(|w| w.mean() as f32).collect(),
+            inv_std: self
+                .dims
+                .iter()
+                .map(|w| {
+                    let s = w.std();
+                    if !s.is_finite() || s < 1e-6 {
+                        1.0
+                    } else {
+                        (1.0 / s) as f32
+                    }
+                })
+                .collect(),
+            clip: self.clip,
+            count: self.count(),
+        }
+    }
+}
+
+/// Frozen normalization parameters applied by samplers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormSnapshot {
+    pub mean: Vec<f32>,
+    pub inv_std: Vec<f32>,
+    pub clip: f32,
+    pub count: u64,
+}
+
+impl NormSnapshot {
+    /// Identity transform (used before any data has been seen).
+    pub fn identity(dim: usize) -> Self {
+        Self {
+            mean: vec![0.0; dim],
+            inv_std: vec![1.0; dim],
+            clip: 10.0,
+            count: 0,
+        }
+    }
+
+    /// Normalize one observation in place.
+    pub fn apply(&self, obs: &mut [f32]) {
+        // Until enough data has accumulated, pass through unchanged — a
+        // mean estimated from a handful of samples does more harm than good.
+        if self.count < 64 {
+            return;
+        }
+        for i in 0..obs.len() {
+            let z = (obs[i] - self.mean[i]) * self.inv_std[i];
+            obs[i] = z.clamp(-self.clip, self.clip);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identity_before_warmup() {
+        let norm = RunningNorm::new(2, 5.0);
+        let snap = norm.snapshot();
+        let mut obs = [3.0f32, -4.0];
+        snap.apply(&mut obs);
+        assert_eq!(obs, [3.0, -4.0]);
+    }
+
+    #[test]
+    fn standardizes_after_enough_data() {
+        let mut norm = RunningNorm::new(1, 10.0);
+        let mut rng = Pcg64::new(0);
+        let data: Vec<f32> = (0..10_000).map(|_| 5.0 + 2.0 * rng.normal()).collect();
+        norm.update(&data);
+        let snap = norm.snapshot();
+        // an observation at the mean maps to ~0; one std away maps to ~1
+        let mut at_mean = [5.0f32];
+        snap.apply(&mut at_mean);
+        assert!(at_mean[0].abs() < 0.1, "{}", at_mean[0]);
+        let mut at_std = [7.0f32];
+        snap.apply(&mut at_std);
+        assert!((at_std[0] - 1.0).abs() < 0.1, "{}", at_std[0]);
+    }
+
+    #[test]
+    fn clipping_bounds_output() {
+        let mut norm = RunningNorm::new(1, 3.0);
+        let data: Vec<f32> = (0..1000).map(|i| (i % 10) as f32).collect();
+        norm.update(&data);
+        let mut outlier = [1e6f32];
+        norm.snapshot().apply(&mut outlier);
+        assert!(outlier[0] <= 3.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Pcg64::new(1);
+        let data: Vec<f32> = (0..600).map(|_| rng.normal() * 3.0 + 1.0).collect();
+        let mut all = RunningNorm::new(3, 10.0);
+        all.update(&data);
+        let mut a = RunningNorm::new(3, 10.0);
+        let mut b = RunningNorm::new(3, 10.0);
+        a.update(&data[..300]);
+        b.update(&data[300..]);
+        a.merge(&b);
+        let (sa, sb) = (a.snapshot(), all.snapshot());
+        for i in 0..3 {
+            assert!((sa.mean[i] - sb.mean[i]).abs() < 1e-4);
+            assert!((sa.inv_std[i] - sb.inv_std[i]).abs() < 1e-4);
+        }
+        assert_eq!(a.count(), 200); // 600 values / 3 dims
+    }
+
+    #[test]
+    fn degenerate_dim_keeps_unit_scale() {
+        let mut norm = RunningNorm::new(2, 10.0);
+        // dim 1 constant — std 0 must not produce inf
+        let data: Vec<f32> = (0..200).flat_map(|i| [i as f32, 7.0]).collect();
+        norm.update(&data);
+        let snap = norm.snapshot();
+        assert_eq!(snap.inv_std[1], 1.0);
+        let mut obs = [0.0f32, 7.0];
+        snap.apply(&mut obs);
+        assert!(obs[1].abs() < 1e-5);
+    }
+}

@@ -1,0 +1,297 @@
+//! PPO learner core: dataset → shuffled minibatch epochs → Adam steps,
+//! with optional advantage normalization, LR annealing and data-parallel
+//! gradient sharding (the paper's further-work §6.2).
+
+use crate::algo::gae::normalize_advantages;
+use crate::algo::rollout::PpoDataset;
+use crate::config::PpoCfg;
+use crate::nn::mlp::PpoStats;
+use crate::runtime::{PpoLearnerBackend, PpoMinibatch, PpoTrainState};
+use crate::util::rng::Pcg64;
+
+/// Aggregated statistics for one PPO update (averaged over minibatches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UpdateStats {
+    pub stats: PpoStats,
+    pub minibatches: usize,
+    pub samples: usize,
+    pub lr: f32,
+}
+
+/// One full PPO update over a dataset: `epochs` passes of shuffled
+/// minibatches. The backend dictates the (padded) minibatch row count.
+pub fn ppo_update(
+    backend: &mut dyn PpoLearnerBackend,
+    state: &mut PpoTrainState,
+    dataset: &mut PpoDataset,
+    cfg: &PpoCfg,
+    lr: f32,
+    rng: &mut Pcg64,
+) -> anyhow::Result<UpdateStats> {
+    if cfg.norm_adv {
+        normalize_advantages(&mut dataset.adv);
+    }
+    let rows = match backend.minibatch_size() {
+        0 => cfg.minibatch,
+        m => m,
+    };
+
+    let mut idx: Vec<usize> = (0..dataset.n).collect();
+    let mut agg = PpoStats::default();
+    let mut count = 0usize;
+
+    // reusable minibatch buffers
+    let (mut obs, mut act, mut old_logp, mut adv, mut ret, mut mask) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+
+    for _ in 0..cfg.epochs {
+        rng.shuffle(&mut idx);
+        for mb_idx in idx.chunks(rows) {
+            dataset.gather_padded(
+                mb_idx, rows, &mut obs, &mut act, &mut old_logp, &mut adv, &mut ret, &mut mask,
+            );
+            let mb = PpoMinibatch {
+                obs: &obs,
+                act: &act,
+                old_logp: &old_logp,
+                adv: &adv,
+                ret: &ret,
+                mask: &mask,
+            };
+            let s = backend.train_step(state, lr, &mb)?;
+            agg.total += s.total;
+            agg.pi_loss += s.pi_loss;
+            agg.v_loss += s.v_loss;
+            agg.entropy += s.entropy;
+            agg.approx_kl += s.approx_kl;
+            agg.clip_frac += s.clip_frac;
+            count += 1;
+        }
+    }
+    if count > 0 {
+        let k = count as f32;
+        agg.total /= k;
+        agg.pi_loss /= k;
+        agg.v_loss /= k;
+        agg.entropy /= k;
+        agg.approx_kl /= k;
+        agg.clip_frac /= k;
+    }
+    Ok(UpdateStats {
+        stats: agg,
+        minibatches: count,
+        samples: dataset.n,
+        lr,
+    })
+}
+
+/// Data-parallel variant (§6.2): split each minibatch into `shards`,
+/// compute gradients per shard (sequentially here; the coordinator's
+/// sharded learner runs them on threads), weighted-average, apply once.
+/// Mathematically identical to `ppo_update` when shards = 1.
+pub fn ppo_update_sharded(
+    backends: &mut [Box<dyn PpoLearnerBackend>],
+    state: &mut PpoTrainState,
+    dataset: &mut PpoDataset,
+    cfg: &PpoCfg,
+    lr: f32,
+    rng: &mut Pcg64,
+) -> anyhow::Result<UpdateStats> {
+    assert!(!backends.is_empty());
+    if cfg.norm_adv {
+        normalize_advantages(&mut dataset.adv);
+    }
+    let shard_rows = match backends[0].minibatch_size() {
+        0 => cfg.minibatch / backends.len().max(1),
+        m => m,
+    };
+    let shards = backends.len();
+    let full = shard_rows * shards;
+
+    let mut idx: Vec<usize> = (0..dataset.n).collect();
+    let mut count = 0usize;
+    let mut total = 0.0f32;
+
+    let (mut obs, mut act, mut old_logp, mut adv, mut ret, mut mask) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+
+    for _ in 0..cfg.epochs {
+        rng.shuffle(&mut idx);
+        for mb_idx in idx.chunks(full) {
+            let mut acc: Vec<f32> = vec![0.0; state.flat.len()];
+            let mut weight_sum = 0.0f32;
+            for (s, shard_idx) in mb_idx.chunks(shard_rows.max(1)).enumerate() {
+                if s >= shards || shard_idx.is_empty() {
+                    break;
+                }
+                dataset.gather_padded(
+                    shard_idx, shard_rows, &mut obs, &mut act, &mut old_logp, &mut adv,
+                    &mut ret, &mut mask,
+                );
+                let mb = PpoMinibatch {
+                    obs: &obs,
+                    act: &act,
+                    old_logp: &old_logp,
+                    adv: &adv,
+                    ret: &ret,
+                    mask: &mask,
+                };
+                let (g, loss, n) = backends[s].grad(&state.flat, &mb)?;
+                // masked means are per-shard; weight by valid rows
+                for (a, gi) in acc.iter_mut().zip(&g) {
+                    *a += gi * n;
+                }
+                weight_sum += n;
+                total += loss;
+            }
+            if weight_sum > 0.0 {
+                for a in acc.iter_mut() {
+                    *a /= weight_sum;
+                }
+                backends[0].apply_grads(state, &acc, lr)?;
+                count += 1;
+            }
+        }
+    }
+    Ok(UpdateStats {
+        stats: PpoStats {
+            total: if count > 0 { total / count as f32 } else { 0.0 },
+            ..Default::default()
+        },
+        minibatches: count,
+        samples: dataset.n,
+        lr,
+    })
+}
+
+/// Linearly annealed learning rate: `lr * (1 - iter/total)` when enabled.
+pub fn annealed_lr(cfg: &PpoCfg, iter: usize, total_iters: usize) -> f32 {
+    if cfg.lr_anneal && total_iters > 0 {
+        cfg.lr * (1.0 - iter as f32 / total_iters as f32).max(0.05)
+    } else {
+        cfg.lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::gae::gae;
+    use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
+    use crate::config::{DdpgCfg, PpoCfg};
+    use crate::runtime::native_backend::NativeFactory;
+    use crate::runtime::BackendFactory;
+
+    fn dataset(n: usize, obs_dim: usize, act_dim: usize, seed: u64) -> PpoDataset {
+        let mut rng = Pcg64::new(seed);
+        let chunk = ExperienceChunk {
+            sampler_id: 0,
+            policy_version: 0,
+            obs: (0..n * obs_dim).map(|_| rng.normal()).collect(),
+            act: (0..n * act_dim).map(|_| rng.normal()).collect(),
+            rew: (0..n).map(|_| rng.normal()).collect(),
+            logp: (0..n).map(|_| -1.0 - rng.next_f32()).collect(),
+            value: (0..n).map(|_| rng.normal()).collect(),
+            end: ChunkEnd::Truncated,
+            bootstrap_value: 0.1,
+            episode_returns: vec![],
+            episode_lengths: vec![],
+            obs_stats: None,
+            busy_secs: 0.0,
+        };
+        PpoDataset::assemble(&[chunk], obs_dim, act_dim, |r, v, c| {
+            Ok(gae(r, v, c, 0.99, 0.95))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn update_runs_expected_minibatch_count() {
+        let f = NativeFactory::new(3, 2, &[8, 8], PpoCfg::default(), DdpgCfg::default());
+        let mut backend = f.make_ppo_learner().unwrap();
+        let mut st = PpoTrainState::new(f.init_ppo_params(0));
+        let mut ds = dataset(100, 3, 2, 1);
+        let cfg = PpoCfg {
+            epochs: 3,
+            minibatch: 32,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(2);
+        let stats = ppo_update(backend.as_mut(), &mut st, &mut ds, &cfg, 1e-3, &mut rng).unwrap();
+        // ceil(100/32) = 4 minibatches x 3 epochs
+        assert_eq!(stats.minibatches, 12);
+        assert_eq!(stats.samples, 100);
+        assert_eq!(st.t, 12);
+        assert!(stats.stats.total.is_finite());
+    }
+
+    #[test]
+    fn update_changes_params_and_reduces_kl_reference() {
+        let f = NativeFactory::new(3, 2, &[8, 8], PpoCfg::default(), DdpgCfg::default());
+        let mut backend = f.make_ppo_learner().unwrap();
+        let flat0 = f.init_ppo_params(3);
+        let mut st = PpoTrainState::new(flat0.clone());
+        let mut ds = dataset(200, 3, 2, 4);
+        let cfg = PpoCfg {
+            epochs: 2,
+            minibatch: 64,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(5);
+        ppo_update(backend.as_mut(), &mut st, &mut ds, &cfg, 1e-3, &mut rng).unwrap();
+        assert_ne!(st.flat, flat0);
+    }
+
+    #[test]
+    fn sharded_with_one_shard_matches_unsharded_aside_from_shuffle() {
+        // same rng seed => same shuffle => identical trajectories
+        let f = NativeFactory::new(3, 2, &[8, 8], PpoCfg::default(), DdpgCfg::default());
+        let cfg = PpoCfg {
+            epochs: 1,
+            minibatch: 50,
+            norm_adv: false,
+            ..Default::default()
+        };
+        let flat = f.init_ppo_params(7);
+
+        let mut b1 = f.make_ppo_learner().unwrap();
+        let mut s1 = PpoTrainState::new(flat.clone());
+        let mut d1 = dataset(100, 3, 2, 8);
+        ppo_update(b1.as_mut(), &mut s1, &mut d1, &cfg, 1e-3, &mut Pcg64::new(9)).unwrap();
+
+        let mut backends: Vec<Box<dyn crate::runtime::PpoLearnerBackend>> =
+            vec![f.make_ppo_learner().unwrap()];
+        let mut s2 = PpoTrainState::new(flat);
+        let mut d2 = dataset(100, 3, 2, 8);
+        ppo_update_sharded(&mut backends, &mut s2, &mut d2, &cfg, 1e-3, &mut Pcg64::new(9))
+            .unwrap();
+
+        let max_diff = s1
+            .flat
+            .iter()
+            .zip(&s2.flat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "sharded(1) diverged from unsharded: {max_diff}");
+    }
+
+    #[test]
+    fn annealed_lr_decays_linearly() {
+        let cfg = PpoCfg {
+            lr: 1e-3,
+            lr_anneal: true,
+            ..Default::default()
+        };
+        assert_eq!(annealed_lr(&cfg, 0, 100), 1e-3);
+        let half = annealed_lr(&cfg, 50, 100);
+        assert!((half - 5e-4).abs() < 1e-9);
+        // floor at 5%
+        assert!(annealed_lr(&cfg, 100, 100) >= 0.05 * 1e-3 - 1e-12);
+        let no_anneal = PpoCfg {
+            lr: 1e-3,
+            lr_anneal: false,
+            ..Default::default()
+        };
+        assert_eq!(annealed_lr(&no_anneal, 99, 100), 1e-3);
+    }
+}

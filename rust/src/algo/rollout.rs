@@ -1,0 +1,244 @@
+//! Rollout data structures: experience chunks flowing sampler → learner,
+//! and the flat dataset the PPO learner assembles per iteration.
+//!
+//! A sampler pushes [`ExperienceChunk`]s — contiguous runs of transitions
+//! from ONE environment under ONE policy version. A chunk ends either at
+//! an episode boundary (`terminal`), the episode cap (`truncated`), or the
+//! configured chunk length (neither — continuation; `bootstrap_value`
+//! carries V(s_next) so GAE can bootstrap across the cut).
+
+/// Why a chunk ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkEnd {
+    /// True terminal state (env returned done): no bootstrap.
+    Terminal,
+    /// Episode hit the time-limit cap: bootstrap with V(s_next).
+    Truncated,
+    /// Chunk length reached mid-episode: bootstrap with V(s_next).
+    Continuation,
+}
+
+/// A contiguous run of transitions from one sampler.
+#[derive(Debug, Clone)]
+pub struct ExperienceChunk {
+    pub sampler_id: usize,
+    /// Policy version that generated this chunk (staleness tracking).
+    pub policy_version: u64,
+    /// Row-major [len * obs_dim].
+    pub obs: Vec<f32>,
+    /// Row-major [len * act_dim].
+    pub act: Vec<f32>,
+    pub rew: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub value: Vec<f32>,
+    pub end: ChunkEnd,
+    /// V(s_next) at the cut point (0.0 for Terminal).
+    pub bootstrap_value: f32,
+    /// Episode returns completed inside this chunk (for logging).
+    pub episode_returns: Vec<f32>,
+    /// Episode lengths matching `episode_returns`.
+    pub episode_lengths: Vec<usize>,
+    /// Welford statistics of the *raw* observations in this chunk; the
+    /// learner merges these into the master normalizer so that obs
+    /// normalization improves without shipping raw observations twice.
+    pub obs_stats: Option<crate::algo::normalizer::RunningNorm>,
+    /// CPU *busy* seconds this worker spent producing the chunk (env
+    /// stepping + policy inference, excluding queue blocking and policy
+    /// waits). Feeds the virtual-core timing model (DESIGN.md §3): on an
+    /// N-core testbed the iteration's rollout time is max-over-workers of
+    /// their busy time; measuring busy time directly lets a single-core
+    /// CI box reproduce the paper's multi-core Figs 4-7 faithfully.
+    pub busy_secs: f64,
+}
+
+impl ExperienceChunk {
+    pub fn len(&self) -> usize {
+        self.rew.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rew.is_empty()
+    }
+
+    /// GAE continuation mask: 1 everywhere except a 0 at the last step of
+    /// a Terminal chunk.
+    pub fn cont_mask(&self) -> Vec<f32> {
+        let mut cont = vec![1.0; self.len()];
+        if self.end == ChunkEnd::Terminal {
+            if let Some(last) = cont.last_mut() {
+                *last = 0.0;
+            }
+        }
+        cont
+    }
+
+    /// Value sequence extended with the bootstrap entry (len + 1).
+    pub fn values_with_bootstrap(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.len() + 1);
+        v.extend_from_slice(&self.value);
+        v.push(match self.end {
+            ChunkEnd::Terminal => 0.0,
+            _ => self.bootstrap_value,
+        });
+        v
+    }
+}
+
+/// Flat PPO dataset for one iteration (all chunks concatenated, with
+/// advantages/returns already computed).
+#[derive(Debug, Clone, Default)]
+pub struct PpoDataset {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub old_logp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub ret: Vec<f32>,
+    pub n: usize,
+}
+
+impl PpoDataset {
+    /// Assemble from chunks, computing GAE per chunk via `gae_fn`
+    /// (the backend's GAE — Pallas artifact or native).
+    pub fn assemble(
+        chunks: &[ExperienceChunk],
+        obs_dim: usize,
+        act_dim: usize,
+        mut gae_fn: impl FnMut(&[f32], &[f32], &[f32]) -> anyhow::Result<(Vec<f32>, Vec<f32>)>,
+    ) -> anyhow::Result<PpoDataset> {
+        let total: usize = chunks.iter().map(|c| c.len()).sum();
+        let mut ds = PpoDataset {
+            obs_dim,
+            act_dim,
+            obs: Vec::with_capacity(total * obs_dim),
+            act: Vec::with_capacity(total * act_dim),
+            old_logp: Vec::with_capacity(total),
+            adv: Vec::with_capacity(total),
+            ret: Vec::with_capacity(total),
+            n: total,
+        };
+        for c in chunks {
+            debug_assert_eq!(c.obs.len(), c.len() * obs_dim);
+            debug_assert_eq!(c.act.len(), c.len() * act_dim);
+            let val = c.values_with_bootstrap();
+            let cont = c.cont_mask();
+            let (adv, ret) = gae_fn(&c.rew, &val, &cont)?;
+            ds.obs.extend_from_slice(&c.obs);
+            ds.act.extend_from_slice(&c.act);
+            ds.old_logp.extend_from_slice(&c.logp);
+            ds.adv.extend_from_slice(&adv);
+            ds.ret.extend_from_slice(&ret);
+        }
+        Ok(ds)
+    }
+
+    /// Gather rows by index into padded minibatch buffers; rows past
+    /// `idx.len()` are zero with mask 0.
+    pub fn gather_padded(
+        &self,
+        idx: &[usize],
+        padded_rows: usize,
+        obs: &mut Vec<f32>,
+        act: &mut Vec<f32>,
+        old_logp: &mut Vec<f32>,
+        adv: &mut Vec<f32>,
+        ret: &mut Vec<f32>,
+        mask: &mut Vec<f32>,
+    ) {
+        let (o, a) = (self.obs_dim, self.act_dim);
+        obs.clear();
+        obs.resize(padded_rows * o, 0.0);
+        act.clear();
+        act.resize(padded_rows * a, 0.0);
+        old_logp.clear();
+        old_logp.resize(padded_rows, 0.0);
+        adv.clear();
+        adv.resize(padded_rows, 0.0);
+        ret.clear();
+        ret.resize(padded_rows, 0.0);
+        mask.clear();
+        mask.resize(padded_rows, 0.0);
+        for (row, &i) in idx.iter().enumerate() {
+            obs[row * o..(row + 1) * o].copy_from_slice(&self.obs[i * o..(i + 1) * o]);
+            act[row * a..(row + 1) * a].copy_from_slice(&self.act[i * a..(i + 1) * a]);
+            old_logp[row] = self.old_logp[i];
+            adv[row] = self.adv[i];
+            ret[row] = self.ret[i];
+            mask[row] = 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::gae::gae;
+
+    fn chunk(len: usize, end: ChunkEnd, bootstrap: f32) -> ExperienceChunk {
+        ExperienceChunk {
+            sampler_id: 0,
+            policy_version: 1,
+            obs: (0..len * 2).map(|i| i as f32).collect(),
+            act: (0..len).map(|i| -(i as f32)).collect(),
+            rew: vec![1.0; len],
+            logp: vec![-0.5; len],
+            value: vec![0.2; len],
+            end,
+            bootstrap_value: bootstrap,
+            episode_returns: vec![],
+            episode_lengths: vec![],
+            obs_stats: None,
+            busy_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn cont_mask_zero_only_for_terminal() {
+        let c = chunk(4, ChunkEnd::Terminal, 0.0);
+        assert_eq!(c.cont_mask(), vec![1.0, 1.0, 1.0, 0.0]);
+        let c = chunk(4, ChunkEnd::Truncated, 0.7);
+        assert_eq!(c.cont_mask(), vec![1.0; 4]);
+        let c = chunk(4, ChunkEnd::Continuation, 0.7);
+        assert_eq!(c.cont_mask(), vec![1.0; 4]);
+    }
+
+    #[test]
+    fn bootstrap_value_respected() {
+        let c = chunk(3, ChunkEnd::Truncated, 9.0);
+        assert_eq!(c.values_with_bootstrap(), vec![0.2, 0.2, 0.2, 9.0]);
+        let c = chunk(3, ChunkEnd::Terminal, 9.0);
+        assert_eq!(*c.values_with_bootstrap().last().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn assemble_concatenates_in_order() {
+        let chunks = vec![
+            chunk(3, ChunkEnd::Continuation, 0.5),
+            chunk(2, ChunkEnd::Terminal, 0.0),
+        ];
+        let ds = PpoDataset::assemble(&chunks, 2, 1, |r, v, c| Ok(gae(r, v, c, 0.99, 0.95)))
+            .unwrap();
+        assert_eq!(ds.n, 5);
+        assert_eq!(ds.obs.len(), 10);
+        assert_eq!(ds.old_logp, vec![-0.5; 5]);
+        // GAE of each chunk computed independently
+        let (a0, _) = gae(&[1.0; 3], &[0.2, 0.2, 0.2, 0.5], &[1.0; 3], 0.99, 0.95);
+        assert!((ds.adv[0] - a0[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gather_padded_fills_and_masks() {
+        let chunks = vec![chunk(4, ChunkEnd::Terminal, 0.0)];
+        let ds = PpoDataset::assemble(&chunks, 2, 1, |r, v, c| Ok(gae(r, v, c, 0.99, 0.95)))
+            .unwrap();
+        let (mut o, mut a, mut lp, mut ad, mut rt, mut mk) =
+            (vec![], vec![], vec![], vec![], vec![], vec![]);
+        ds.gather_padded(&[2, 0], 3, &mut o, &mut a, &mut lp, &mut ad, &mut rt, &mut mk);
+        assert_eq!(mk, vec![1.0, 1.0, 0.0]);
+        assert_eq!(&o[0..2], &[4.0, 5.0]); // row 2 of obs
+        assert_eq!(&o[2..4], &[0.0, 1.0]); // row 0
+        assert_eq!(&o[4..6], &[0.0, 0.0]); // padding
+        assert_eq!(a[2], 0.0); // padded action
+    }
+}

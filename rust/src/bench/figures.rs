@@ -1,0 +1,294 @@
+//! Figure-series generators: regenerate every figure in the paper's
+//! evaluation section from live runs of the coordinator.
+//!
+//! | Paper figure | Generator | Series |
+//! |---|---|---|
+//! | Fig 3 | [`fig3_return_curves`] | avg return vs iteration, N=1 vs N=10 |
+//! | Fig 4 | [`scaling_sweep`] | rollout (collect) time vs N |
+//! | Fig 5 | [`scaling_sweep`] + [`speedups`] | collection speedup vs N |
+//! | Fig 6 | [`scaling_sweep`] | % learn vs % collect time vs N |
+//! | Fig 7 | [`scaling_sweep`] | learn time per iteration vs N |
+//!
+//! Absolute numbers differ from the paper (their testbed: Python + MuJoCo
+//! on a big CPU server; ours: Rust + the physics substrate), but the
+//! *shapes* — monotone decrease, near-linear (not over-linear) speedup,
+//! growing learn fraction, flat learn time — are the reproduction targets
+//! recorded in EXPERIMENTS.md.
+
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::{IterationMetrics, MetricsLog};
+use crate::coordinator::orchestrator;
+use crate::runtime::BackendFactory;
+use crate::util::stats::linreg;
+use std::io::Write;
+
+/// One row of the Fig 4–7 sweep.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub n: usize,
+    /// Mean rollout/collection seconds per iteration (steady state),
+    /// virtual-core timing: max-over-workers busy time (== wall time on a
+    /// testbed with >= N cores; see DESIGN.md §3 hardware substitution).
+    pub collect_secs: f64,
+    /// Measured wall-clock collect time on *this* testbed (drain time;
+    /// reported alongside for transparency).
+    pub wall_collect_secs: f64,
+    /// Mean policy-learning seconds per iteration.
+    pub learn_secs: f64,
+    pub collect_frac: f64,
+    pub learn_frac: f64,
+    pub mean_return: f32,
+}
+
+/// Run the N-sweep behind Figs 4–7: same sample budget per iteration,
+/// varying sampler count. `skip` leading iterations are dropped from the
+/// steady-state means (compile + warmup noise).
+pub fn scaling_sweep(
+    base: &TrainConfig,
+    factory_for: &dyn Fn(&TrainConfig) -> anyhow::Result<Box<dyn BackendFactory>>,
+    ns: &[usize],
+    skip: usize,
+) -> anyhow::Result<Vec<SweepRow>> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        let mut cfg = base.clone();
+        cfg.samplers = n;
+        let factory = factory_for(&cfg)?;
+        let mut log = MetricsLog::quiet();
+        let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+        let tail: Vec<&IterationMetrics> = result.metrics.iter().skip(skip).collect();
+        anyhow::ensure!(!tail.is_empty(), "sweep needs iterations > skip");
+        let collect =
+            tail.iter().map(|m| m.virtual_collect_secs).sum::<f64>() / tail.len() as f64;
+        let wall_collect =
+            tail.iter().map(|m| m.collect_secs).sum::<f64>() / tail.len() as f64;
+        let learn = tail.iter().map(|m| m.learn_secs).sum::<f64>() / tail.len() as f64;
+        let mean_return = crate::util::stats::mean_f32(
+            &tail.iter().map(|m| m.mean_return).collect::<Vec<_>>(),
+        );
+        rows.push(SweepRow {
+            n,
+            collect_secs: collect,
+            wall_collect_secs: wall_collect,
+            learn_secs: learn,
+            collect_frac: collect / (collect + learn),
+            learn_frac: learn / (collect + learn),
+            mean_return,
+        });
+        crate::log_info!(
+            "sweep N={n}: collect {collect:.3}s learn {learn:.3}s return {mean_return:.1}"
+        );
+    }
+    Ok(rows)
+}
+
+/// Fig 5 series: speedup(N) = T_collect(1) / T_collect(N), plus the linear
+/// fit slope and R² (the paper's "near-linear, not over-linear" claim).
+pub fn speedups(rows: &[SweepRow]) -> (Vec<(usize, f64)>, f64, f64) {
+    let t1 = rows
+        .iter()
+        .find(|r| r.n == 1)
+        .map(|r| r.collect_secs)
+        .unwrap_or_else(|| rows[0].collect_secs * rows[0].n as f64);
+    let series: Vec<(usize, f64)> = rows
+        .iter()
+        .map(|r| (r.n, t1 / r.collect_secs))
+        .collect();
+    let xs: Vec<f64> = series.iter().map(|&(n, _)| n as f64).collect();
+    let ys: Vec<f64> = series.iter().map(|&(_, s)| s).collect();
+    let (_, slope, r2) = linreg(&xs, &ys);
+    (series, slope, r2)
+}
+
+/// Fig 3: full return-vs-iteration curves for each N.
+pub fn fig3_return_curves(
+    base: &TrainConfig,
+    factory_for: &dyn Fn(&TrainConfig) -> anyhow::Result<Box<dyn BackendFactory>>,
+    ns: &[usize],
+) -> anyhow::Result<Vec<(usize, Vec<IterationMetrics>)>> {
+    let mut out = Vec::new();
+    for &n in ns {
+        let mut cfg = base.clone();
+        cfg.samplers = n;
+        let factory = factory_for(&cfg)?;
+        let mut log = MetricsLog::quiet();
+        let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+        out.push((n, result.metrics));
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------- CSV output
+
+fn create(path: &str) -> anyhow::Result<std::io::BufWriter<std::fs::File>> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    Ok(std::io::BufWriter::new(std::fs::File::create(path)?))
+}
+
+/// Write the sweep as `fig4_rollout_time.csv`, `fig5_speedup.csv`,
+/// `fig6_time_breakdown.csv`, `fig7_learn_time.csv` under `out_dir`.
+pub fn write_sweep_csvs(rows: &[SweepRow], out_dir: &str) -> anyhow::Result<()> {
+    let mut f4 = create(&format!("{out_dir}/fig4_rollout_time.csv"))?;
+    writeln!(f4, "n,collect_secs,wall_collect_secs")?;
+    for r in rows {
+        writeln!(f4, "{},{:.6},{:.6}", r.n, r.collect_secs, r.wall_collect_secs)?;
+    }
+    let (series, slope, r2) = speedups(rows);
+    let mut f5 = create(&format!("{out_dir}/fig5_speedup.csv"))?;
+    writeln!(f5, "n,speedup,ideal")?;
+    for (n, s) in &series {
+        writeln!(f5, "{n},{s:.4},{n}")?;
+    }
+    writeln!(f5, "# linear fit slope={slope:.4} r2={r2:.4}")?;
+    let mut f6 = create(&format!("{out_dir}/fig6_time_breakdown.csv"))?;
+    writeln!(f6, "n,collect_frac,learn_frac")?;
+    for r in rows {
+        writeln!(f6, "{},{:.4},{:.4}", r.n, r.collect_frac, r.learn_frac)?;
+    }
+    let mut f7 = create(&format!("{out_dir}/fig7_learn_time.csv"))?;
+    writeln!(f7, "n,learn_secs")?;
+    for r in rows {
+        writeln!(f7, "{},{:.6}", r.n, r.learn_secs)?;
+    }
+    Ok(())
+}
+
+/// Write Fig 3 curves as `fig3_return.csv` (long format).
+pub fn write_fig3_csv(
+    curves: &[(usize, Vec<IterationMetrics>)],
+    out_dir: &str,
+) -> anyhow::Result<()> {
+    let mut f = create(&format!("{out_dir}/fig3_return.csv"))?;
+    writeln!(f, "n,iter,wall_secs,virtual_wall_secs,total_steps,mean_return")?;
+    for (n, ms) in curves {
+        let mut vwall = 0.0f64;
+        for m in ms {
+            vwall += m.virtual_collect_secs + m.learn_secs;
+            writeln!(
+                f,
+                "{},{},{:.3},{:.3},{},{:.4}",
+                n, m.iter, m.wall_secs, vwall, m.total_steps, m.mean_return
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Pretty-print a sweep table (the bench binaries' stdout report).
+pub fn print_sweep_table(rows: &[SweepRow], title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:>4} {:>14} {:>14} {:>10} {:>10} {:>12}",
+        "N", "collect (s)", "learn (s)", "%collect", "%learn", "return"
+    );
+    for r in rows {
+        println!(
+            "{:>4} {:>14.4} {:>14.4} {:>9.1}% {:>9.1}% {:>12.2}",
+            r.n,
+            r.collect_secs,
+            r.learn_secs,
+            100.0 * r.collect_frac,
+            100.0 * r.learn_frac,
+            r.mean_return
+        );
+    }
+    let (series, slope, r2) = speedups(rows);
+    print!("speedup: ");
+    for (n, s) in &series {
+        print!("N={n}:{s:.2}x ");
+    }
+    println!("(fit slope {slope:.2}, r² {r2:.3})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Backend, TrainConfig};
+    use crate::runtime::native_backend::NativeFactory;
+
+    fn tiny_base() -> TrainConfig {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.backend = Backend::Native;
+        cfg.samples_per_iter = 400;
+        cfg.iterations = 2;
+        cfg.chunk_steps = 100;
+        cfg.hidden = vec![8, 8];
+        cfg.ppo.epochs = 1;
+        cfg.ppo.minibatch = 128;
+        cfg
+    }
+
+    fn factory_for(cfg: &TrainConfig) -> anyhow::Result<Box<dyn BackendFactory>> {
+        Ok(Box::new(NativeFactory::new(
+            3,
+            1,
+            &cfg.hidden,
+            cfg.ppo.clone(),
+            cfg.ddpg.clone(),
+        )))
+    }
+
+    #[test]
+    fn sweep_produces_row_per_n() {
+        let rows = scaling_sweep(&tiny_base(), &factory_for, &[1, 2], 0).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].n, 1);
+        assert!(rows.iter().all(|r| r.collect_secs > 0.0));
+        assert!(rows
+            .iter()
+            .all(|r| (r.collect_frac + r.learn_frac - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn speedups_normalize_to_n1() {
+        let rows = vec![
+            SweepRow {
+                n: 1,
+                collect_secs: 8.0,
+                wall_collect_secs: 8.0,
+                learn_secs: 1.0,
+                collect_frac: 8.0 / 9.0,
+                learn_frac: 1.0 / 9.0,
+                mean_return: 0.0,
+            },
+            SweepRow {
+                n: 4,
+                collect_secs: 2.0,
+                wall_collect_secs: 2.0,
+                learn_secs: 1.0,
+                collect_frac: 2.0 / 3.0,
+                learn_frac: 1.0 / 3.0,
+                mean_return: 0.0,
+            },
+        ];
+        let (series, slope, r2) = speedups(&rows);
+        assert_eq!(series[0], (1, 1.0));
+        assert_eq!(series[1], (4, 4.0));
+        assert!((slope - 1.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_writers_emit_all_figures() {
+        let rows = scaling_sweep(&tiny_base(), &factory_for, &[1, 2], 0).unwrap();
+        let dir = std::env::temp_dir().join("walle_fig_test");
+        let dir_s = dir.to_str().unwrap();
+        write_sweep_csvs(&rows, dir_s).unwrap();
+        for f in [
+            "fig4_rollout_time.csv",
+            "fig5_speedup.csv",
+            "fig6_time_breakdown.csv",
+            "fig7_learn_time.csv",
+        ] {
+            let text = std::fs::read_to_string(dir.join(f)).unwrap();
+            assert!(text.lines().count() >= 3, "{f}:\n{text}");
+        }
+        let curves = fig3_return_curves(&tiny_base(), &factory_for, &[1]).unwrap();
+        write_fig3_csv(&curves, dir_s).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig3_return.csv")).unwrap();
+        assert!(text.starts_with("n,iter"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal benchmarking harness (criterion-style warmup + timed samples)
+//! used by the `[[bench]]` targets (`harness = false`).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark: per-iteration seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    /// criterion-like one-liner: name, mean ± std, min, p50.
+    pub fn report_line(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<40} {:>12} ± {:>10}  (min {:>12}, p50 {:>12}, n={})",
+            self.name,
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+            fmt_secs(s.min),
+            fmt_secs(s.p50),
+            s.n
+        )
+    }
+}
+
+/// Human-friendly seconds formatting (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "n/a".into();
+    }
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Benchmark runner: `warmup` untimed runs then `samples` timed runs of
+/// `f(iters_per_sample)`; reports seconds per single iteration.
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    samples: usize,
+    iters_per_sample: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            warmup: 2,
+            samples: 10,
+            iters_per_sample: 1,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    pub fn iters_per_sample(mut self, n: usize) -> Self {
+        self.iters_per_sample = n.max(1);
+        self
+    }
+
+    /// Run and report to stdout; returns per-iteration timing samples.
+    pub fn run(self, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / self.iters_per_sample as f64);
+        }
+        let result = BenchResult {
+            name: self.name,
+            samples,
+        };
+        println!("{}", result.report_line());
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let r = Bench::new("sleep1ms")
+            .warmup(0)
+            .samples(3)
+            .run(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        let s = r.summary();
+        assert!(s.mean >= 0.001 && s.mean < 0.05, "mean={}", s.mean);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+        assert!(fmt_secs(2.5e-6).ends_with("µs"));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn iters_per_sample_divides() {
+        let r = Bench::new("noop").warmup(0).samples(2).iters_per_sample(100).run(|| {});
+        assert!(r.summary().mean < 1e-3);
+    }
+}

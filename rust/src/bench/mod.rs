@@ -1,0 +1,6 @@
+//! Benchmark substrate: a small timing harness (the offline crate set has
+//! no criterion) and the figure-series generators that regenerate every
+//! figure in the paper's evaluation (Figs 3–7).
+
+pub mod figures;
+pub mod harness;

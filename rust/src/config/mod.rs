@@ -1,0 +1,520 @@
+//! Typed run configuration: defaults per env preset, JSON round-trip, and
+//! validation. The launcher builds a `TrainConfig` from CLI flags and/or a
+//! `--config file.json`, and every component reads from it — one source of
+//! truth per run (the config is also echoed into the metrics CSV header so
+//! runs are self-describing).
+
+use crate::util::json::{Json, JsonError};
+use std::collections::BTreeMap;
+
+/// Which algorithm drives the learner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Ppo,
+    Ddpg,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "ppo" => Some(Algo::Ppo),
+            "ddpg" => Some(Algo::Ddpg),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Ppo => "ppo",
+            Algo::Ddpg => "ddpg",
+        }
+    }
+}
+
+/// Which compute backend executes the policy/learner math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts through PJRT (the production path).
+    Xla,
+    /// Pure-Rust mirror (artifact-free; tests/quickstart).
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "xla" => Some(Backend::Xla),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Xla => "xla",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// PPO hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PpoCfg {
+    pub epochs: usize,
+    pub minibatch: usize,
+    pub lr: f32,
+    pub lr_anneal: bool,
+    pub gamma: f32,
+    pub lam: f32,
+    pub clip: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+    /// Normalize advantages per iteration.
+    pub norm_adv: bool,
+}
+
+impl Default for PpoCfg {
+    fn default() -> Self {
+        Self {
+            epochs: 10,
+            minibatch: 512,
+            lr: 3e-4,
+            lr_anneal: false,
+            gamma: 0.99,
+            lam: 0.95,
+            clip: 0.2,
+            ent_coef: 0.0,
+            vf_coef: 0.5,
+            norm_adv: true,
+        }
+    }
+}
+
+/// DDPG hyper-parameters (further-work §6.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DdpgCfg {
+    pub batch: usize,
+    pub gamma: f32,
+    pub tau: f32,
+    pub lr_actor: f32,
+    pub lr_critic: f32,
+    pub replay_capacity: usize,
+    pub warmup_steps: usize,
+    pub explore_noise: f32,
+    pub updates_per_iter: usize,
+}
+
+impl Default for DdpgCfg {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            gamma: 0.99,
+            tau: 0.005,
+            lr_actor: 1e-3,
+            lr_critic: 1e-3,
+            replay_capacity: 200_000,
+            warmup_steps: 2_000,
+            explore_noise: 0.1,
+            updates_per_iter: 200,
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub env: String,
+    pub algo: Algo,
+    pub backend: Backend,
+    pub seed: u64,
+    /// Number of parallel sampler workers (the paper's N).
+    pub samplers: usize,
+    /// Samples collected per iteration (paper: 20,000).
+    pub samples_per_iter: usize,
+    pub iterations: usize,
+    /// Sampler→learner queue capacity, in chunks (backpressure bound).
+    pub queue_capacity: usize,
+    /// Steps per experience chunk a sampler pushes at once.
+    pub chunk_steps: usize,
+    /// Fully-asynchronous mode: samplers never pause between iterations
+    /// (the paper's architecture); `false` gives a synchronous barrier per
+    /// iteration (ablation baseline).
+    pub async_mode: bool,
+    /// Normalize observations with a running mean/std shared via the
+    /// policy queue.
+    pub norm_obs: bool,
+    /// Reward scale applied to the learning signal (episode returns are
+    /// reported unscaled). Keeps value-loss magnitudes sane for envs with
+    /// large return scales.
+    pub reward_scale: f32,
+    pub artifacts_dir: String,
+    pub hidden: Vec<usize>,
+    pub ppo: PpoCfg,
+    pub ddpg: DdpgCfg,
+    /// Parallel-learning shards (further-work §6.2); 1 = single learner.
+    pub learner_shards: usize,
+    /// Async mode: discard chunks whose policy version lags the current
+    /// one by more than this (0 = keep everything). Bounds the
+    /// off-policy-ness the PPO ratios see.
+    pub max_staleness: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            env: "halfcheetah".into(),
+            algo: Algo::Ppo,
+            backend: Backend::Native,
+            seed: 0,
+            samplers: 10,
+            samples_per_iter: 20_000,
+            iterations: 100,
+            queue_capacity: 16,
+            chunk_steps: 200,
+            async_mode: true,
+            norm_obs: true,
+            reward_scale: 1.0,
+            artifacts_dir: "artifacts".into(),
+            hidden: vec![64, 64],
+            ppo: PpoCfg::default(),
+            ddpg: DdpgCfg::default(),
+            learner_shards: 1,
+            max_staleness: 2,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Per-env preset defaults (matching python/compile/aot.py PRESETS).
+    pub fn preset(env: &str) -> TrainConfig {
+        let mut cfg = TrainConfig {
+            env: env.to_string(),
+            ..Default::default()
+        };
+        match env {
+            "pendulum" => {
+                cfg.samples_per_iter = 4_000;
+                cfg.ppo.minibatch = 256;
+                cfg.samplers = 4;
+                cfg.chunk_steps = 200;
+                cfg.reward_scale = 0.1; // returns ~-1300 raw
+                cfg.ppo.lr = 1e-3;
+            }
+            "cartpole" => {
+                cfg.samples_per_iter = 4_000;
+                cfg.ppo.minibatch = 256;
+                cfg.samplers = 4;
+            }
+            "reacher" => {
+                cfg.samples_per_iter = 4_000;
+                cfg.ppo.minibatch = 256;
+                cfg.samplers = 4;
+                cfg.chunk_steps = 50;
+            }
+            _ => {} // halfcheetah defaults above
+        }
+        cfg
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.samplers == 0 {
+            return Err("samplers must be >= 1".into());
+        }
+        if self.samples_per_iter == 0 {
+            return Err("samples_per_iter must be > 0".into());
+        }
+        if self.chunk_steps == 0 || self.chunk_steps > self.samples_per_iter {
+            return Err(format!(
+                "chunk_steps {} must be in [1, samples_per_iter {}]",
+                self.chunk_steps, self.samples_per_iter
+            ));
+        }
+        if self.queue_capacity == 0 {
+            return Err("queue_capacity must be > 0".into());
+        }
+        if self.ppo.minibatch == 0 {
+            return Err("ppo.minibatch must be > 0".into());
+        }
+        if !(0.0..=1.0).contains(&self.ppo.gamma) || !(0.0..=1.0).contains(&self.ppo.lam) {
+            return Err("gamma/lam must be in [0,1]".into());
+        }
+        if self.learner_shards == 0 {
+            return Err("learner_shards must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("env".into(), Json::Str(self.env.clone()));
+        m.insert("algo".into(), Json::Str(self.algo.name().into()));
+        m.insert("backend".into(), Json::Str(self.backend.name().into()));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        m.insert("samplers".into(), Json::Num(self.samplers as f64));
+        m.insert(
+            "samples_per_iter".into(),
+            Json::Num(self.samples_per_iter as f64),
+        );
+        m.insert("iterations".into(), Json::Num(self.iterations as f64));
+        m.insert(
+            "queue_capacity".into(),
+            Json::Num(self.queue_capacity as f64),
+        );
+        m.insert("chunk_steps".into(), Json::Num(self.chunk_steps as f64));
+        m.insert("async_mode".into(), Json::Bool(self.async_mode));
+        m.insert("norm_obs".into(), Json::Bool(self.norm_obs));
+        m.insert("reward_scale".into(), Json::Num(self.reward_scale as f64));
+        m.insert("artifacts_dir".into(), Json::Str(self.artifacts_dir.clone()));
+        m.insert(
+            "hidden".into(),
+            Json::Arr(self.hidden.iter().map(|&h| Json::Num(h as f64)).collect()),
+        );
+        m.insert(
+            "learner_shards".into(),
+            Json::Num(self.learner_shards as f64),
+        );
+        m.insert("max_staleness".into(), Json::Num(self.max_staleness as f64));
+        m.insert(
+            "ppo".into(),
+            Json::obj(vec![
+                ("epochs", Json::Num(self.ppo.epochs as f64)),
+                ("minibatch", Json::Num(self.ppo.minibatch as f64)),
+                ("lr", Json::Num(self.ppo.lr as f64)),
+                ("lr_anneal", Json::Bool(self.ppo.lr_anneal)),
+                ("gamma", Json::Num(self.ppo.gamma as f64)),
+                ("lam", Json::Num(self.ppo.lam as f64)),
+                ("clip", Json::Num(self.ppo.clip as f64)),
+                ("ent_coef", Json::Num(self.ppo.ent_coef as f64)),
+                ("vf_coef", Json::Num(self.ppo.vf_coef as f64)),
+                ("norm_adv", Json::Bool(self.ppo.norm_adv)),
+            ]),
+        );
+        m.insert(
+            "ddpg".into(),
+            Json::obj(vec![
+                ("batch", Json::Num(self.ddpg.batch as f64)),
+                ("gamma", Json::Num(self.ddpg.gamma as f64)),
+                ("tau", Json::Num(self.ddpg.tau as f64)),
+                ("lr_actor", Json::Num(self.ddpg.lr_actor as f64)),
+                ("lr_critic", Json::Num(self.ddpg.lr_critic as f64)),
+                (
+                    "replay_capacity",
+                    Json::Num(self.ddpg.replay_capacity as f64),
+                ),
+                ("warmup_steps", Json::Num(self.ddpg.warmup_steps as f64)),
+                ("explore_noise", Json::Num(self.ddpg.explore_noise as f64)),
+                (
+                    "updates_per_iter",
+                    Json::Num(self.ddpg.updates_per_iter as f64),
+                ),
+            ]),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig, JsonError> {
+        let mut cfg = TrainConfig::default();
+        if let Some(v) = j.opt("env") {
+            cfg.env = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("algo") {
+            cfg.algo = Algo::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad algo {v:?}")))?;
+        }
+        if let Some(v) = j.opt("backend") {
+            cfg.backend = Backend::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad backend {v:?}")))?;
+        }
+        if let Some(v) = j.opt("seed") {
+            cfg.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("samplers") {
+            cfg.samplers = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("samples_per_iter") {
+            cfg.samples_per_iter = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("iterations") {
+            cfg.iterations = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("queue_capacity") {
+            cfg.queue_capacity = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("chunk_steps") {
+            cfg.chunk_steps = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("async_mode") {
+            cfg.async_mode = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("norm_obs") {
+            cfg.norm_obs = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("reward_scale") {
+            cfg.reward_scale = v.as_f32()?;
+        }
+        if let Some(v) = j.opt("artifacts_dir") {
+            cfg.artifacts_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("hidden") {
+            cfg.hidden = v
+                .as_arr()?
+                .iter()
+                .map(|h| h.as_usize())
+                .collect::<Result<_, _>>()?;
+        }
+        if let Some(v) = j.opt("learner_shards") {
+            cfg.learner_shards = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("max_staleness") {
+            cfg.max_staleness = v.as_f64()? as u64;
+        }
+        if let Some(p) = j.opt("ppo") {
+            if let Some(v) = p.opt("epochs") {
+                cfg.ppo.epochs = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("minibatch") {
+                cfg.ppo.minibatch = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("lr") {
+                cfg.ppo.lr = v.as_f32()?;
+            }
+            if let Some(v) = p.opt("lr_anneal") {
+                cfg.ppo.lr_anneal = v.as_bool()?;
+            }
+            if let Some(v) = p.opt("gamma") {
+                cfg.ppo.gamma = v.as_f32()?;
+            }
+            if let Some(v) = p.opt("lam") {
+                cfg.ppo.lam = v.as_f32()?;
+            }
+            if let Some(v) = p.opt("clip") {
+                cfg.ppo.clip = v.as_f32()?;
+            }
+            if let Some(v) = p.opt("ent_coef") {
+                cfg.ppo.ent_coef = v.as_f32()?;
+            }
+            if let Some(v) = p.opt("vf_coef") {
+                cfg.ppo.vf_coef = v.as_f32()?;
+            }
+            if let Some(v) = p.opt("norm_adv") {
+                cfg.ppo.norm_adv = v.as_bool()?;
+            }
+        }
+        if let Some(d) = j.opt("ddpg") {
+            if let Some(v) = d.opt("batch") {
+                cfg.ddpg.batch = v.as_usize()?;
+            }
+            if let Some(v) = d.opt("gamma") {
+                cfg.ddpg.gamma = v.as_f32()?;
+            }
+            if let Some(v) = d.opt("tau") {
+                cfg.ddpg.tau = v.as_f32()?;
+            }
+            if let Some(v) = d.opt("lr_actor") {
+                cfg.ddpg.lr_actor = v.as_f32()?;
+            }
+            if let Some(v) = d.opt("lr_critic") {
+                cfg.ddpg.lr_critic = v.as_f32()?;
+            }
+            if let Some(v) = d.opt("replay_capacity") {
+                cfg.ddpg.replay_capacity = v.as_usize()?;
+            }
+            if let Some(v) = d.opt("warmup_steps") {
+                cfg.ddpg.warmup_steps = v.as_usize()?;
+            }
+            if let Some(v) = d.opt("explore_noise") {
+                cfg.ddpg.explore_noise = v.as_f32()?;
+            }
+            if let Some(v) = d.opt("updates_per_iter") {
+                cfg.ddpg.updates_per_iter = v.as_usize()?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)?;
+        let cfg = TrainConfig::from_json(&j)?;
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        TrainConfig::default().validate().unwrap();
+        for env in ["pendulum", "cartpole", "reacher", "halfcheetah"] {
+            TrainConfig::preset(env).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.algo = Algo::Ddpg;
+        cfg.backend = Backend::Xla;
+        cfg.seed = 1234;
+        cfg.ppo.lr = 1e-3;
+        cfg.ddpg.tau = 0.01;
+        cfg.learner_shards = 4;
+        let j = cfg.to_json();
+        let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"env": "pendulum", "samplers": 3}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.env, "pendulum");
+        assert_eq!(cfg.samplers, 3);
+        assert_eq!(cfg.ppo.epochs, PpoCfg::default().epochs);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = TrainConfig::default();
+        cfg.samplers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.chunk_steps = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.ppo.gamma = 1.5;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.learner_shards = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn bad_enum_strings_error() {
+        let j = Json::parse(r#"{"algo": "sac"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"backend": "gpu"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let cfg = TrainConfig::preset("reacher");
+        let path = std::env::temp_dir().join("walle_cfg_test.json");
+        let path = path.to_str().unwrap();
+        cfg.save(path).unwrap();
+        let back = TrainConfig::load(path).unwrap();
+        assert_eq!(cfg, back);
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -1,0 +1,331 @@
+//! The agent (learner) process: consumes experience chunks from the
+//! experience queue, updates the policy, and publishes parameters through
+//! the policy store — the center of the paper's Fig 2.
+//!
+//! Each iteration:
+//!   1. **collect** — blockingly drain the queue until the per-iteration
+//!      sample budget (paper: 20,000) is met; merge sampler-side obs
+//!      statistics; track chunk staleness.
+//!   2. **learn** — assemble the PPO dataset (GAE per chunk through the
+//!      backend), run shuffled minibatch epochs, one Adam step each.
+//!   3. **publish** — push the new flat parameters + normalization
+//!      snapshot; async samplers pick them up at their next chunk
+//!      boundary.
+
+use crate::algo::ddpg::ddpg_update;
+use crate::algo::normalizer::RunningNorm;
+use crate::algo::ppo::{annealed_lr, ppo_update, ppo_update_sharded};
+use crate::algo::rollout::{ChunkEnd, ExperienceChunk, PpoDataset};
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::IterationMetrics;
+use crate::coordinator::policy_store::PolicyStore;
+use crate::coordinator::queue::Channel;
+use crate::replay::ReplayBuffer;
+use crate::runtime::{DdpgLearnerBackend, DdpgTrainState, PpoLearnerBackend, PpoTrainState};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Accumulated per-iteration episode statistics.
+#[derive(Debug, Default)]
+struct EpisodeStats {
+    returns: Vec<f32>,
+    lengths: Vec<usize>,
+}
+
+impl EpisodeStats {
+    fn absorb(&mut self, c: &ExperienceChunk) {
+        self.returns.extend_from_slice(&c.episode_returns);
+        self.lengths.extend_from_slice(&c.episode_lengths);
+    }
+
+    fn mean_return(&self) -> f32 {
+        crate::util::stats::mean_f32(&self.returns)
+    }
+
+    fn mean_len(&self) -> f32 {
+        if self.lengths.is_empty() {
+            f32::NAN
+        } else {
+            self.lengths.iter().sum::<usize>() as f32 / self.lengths.len() as f32
+        }
+    }
+}
+
+/// PPO learner driving one training run.
+pub struct PpoLearner {
+    pub state: PpoTrainState,
+    backend: Box<dyn PpoLearnerBackend>,
+    /// Extra backends for sharded learning (§6.2); empty = single learner.
+    shard_backends: Vec<Box<dyn PpoLearnerBackend>>,
+    norm: RunningNorm,
+    rng: Pcg64,
+    total_steps: u64,
+    wall: Stopwatch,
+    /// Carry-over chunks popped beyond the budget (async mode keeps
+    /// producing while we learn).
+    carry: Vec<ExperienceChunk>,
+}
+
+impl PpoLearner {
+    pub fn new(
+        backend: Box<dyn PpoLearnerBackend>,
+        shard_backends: Vec<Box<dyn PpoLearnerBackend>>,
+        init_params: Vec<f32>,
+        obs_dim: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            state: PpoTrainState::new(init_params),
+            backend,
+            shard_backends,
+            norm: RunningNorm::new(obs_dim, 10.0),
+            rng: Pcg64::with_stream(seed, 0xFEED),
+            total_steps: 0,
+            wall: Stopwatch::start(),
+            carry: Vec::new(),
+        }
+    }
+
+    /// Publish the initial policy so samplers can start.
+    pub fn publish_initial(&self, store: &PolicyStore) {
+        store.publish(self.state.flat.clone(), self.norm.snapshot());
+    }
+
+    /// Run one iteration; returns metrics, or Err when the queue closed.
+    pub fn iteration(
+        &mut self,
+        iter: usize,
+        cfg: &TrainConfig,
+        queue: &Channel<ExperienceChunk>,
+        store: &PolicyStore,
+    ) -> anyhow::Result<IterationMetrics> {
+        let iter_sw = Stopwatch::start();
+        let current_version = store.version();
+
+        // ---- 1. collect -------------------------------------------------
+        let collect_sw = Stopwatch::start();
+        let mut chunks = std::mem::take(&mut self.carry);
+        let mut n: usize = chunks.iter().map(|c| c.len()).sum();
+        let mut staleness_sum = 0.0f32;
+        let mut eps = EpisodeStats::default();
+        for c in &chunks {
+            staleness_sum += (current_version.saturating_sub(c.policy_version)) as f32;
+            eps.absorb(c);
+        }
+        let mut dropped = 0usize;
+        let mut busy_per_worker: std::collections::BTreeMap<usize, f64> =
+            std::collections::BTreeMap::new();
+        for c in &chunks {
+            *busy_per_worker.entry(c.sampler_id).or_default() += c.busy_secs;
+        }
+        while n < cfg.samples_per_iter {
+            let c = queue
+                .pop()
+                .map_err(|_| anyhow::anyhow!("experience queue closed"))?;
+            // episode stats and normalizer updates count even for chunks we
+            // drop as too stale — only the *gradient* data must be fresh.
+            eps.absorb(&c);
+            if let Some(stats) = &c.obs_stats {
+                self.norm.merge(stats);
+            }
+            let lag = current_version.saturating_sub(c.policy_version);
+            if cfg.max_staleness > 0 && lag > cfg.max_staleness {
+                dropped += 1;
+                continue;
+            }
+            n += c.len();
+            staleness_sum += lag as f32;
+            *busy_per_worker.entry(c.sampler_id).or_default() += c.busy_secs;
+            chunks.push(c);
+        }
+        if dropped > 0 {
+            crate::log_debug!("iteration {iter}: dropped {dropped} stale chunks");
+        }
+        let collect_secs = collect_sw.elapsed_secs();
+        // virtual-core rollout time: the slowest worker's measured busy time
+        let virtual_collect_secs = busy_per_worker
+            .values()
+            .fold(0.0f64, |a, &b| a.max(b));
+
+        // ---- 2. learn ---------------------------------------------------
+        let learn_sw = Stopwatch::start();
+        let mut dataset = PpoDataset::assemble(
+            &chunks,
+            self.norm.dim(),
+            chunks
+                .first()
+                .map(|c| c.act.len() / c.len().max(1))
+                .unwrap_or(1),
+            |r, v, ct| self.backend.gae(r, v, ct),
+        )?;
+        let lr = annealed_lr(&cfg.ppo, iter, cfg.iterations);
+        let update = if self.shard_backends.is_empty() {
+            ppo_update(
+                self.backend.as_mut(),
+                &mut self.state,
+                &mut dataset,
+                &cfg.ppo,
+                lr,
+                &mut self.rng,
+            )?
+        } else {
+            ppo_update_sharded(
+                &mut self.shard_backends,
+                &mut self.state,
+                &mut dataset,
+                &cfg.ppo,
+                lr,
+                &mut self.rng,
+            )?
+        };
+        let learn_secs = learn_sw.elapsed_secs();
+
+        // ---- 3. publish ---------------------------------------------
+        store.publish(self.state.flat.clone(), self.norm.snapshot());
+
+        self.total_steps += n as u64;
+        Ok(IterationMetrics {
+            iter,
+            samples: n,
+            collect_secs,
+            virtual_collect_secs,
+            learn_secs,
+            total_secs: iter_sw.elapsed_secs(),
+            mean_return: eps.mean_return(),
+            episodes: eps.returns.len(),
+            mean_ep_len: eps.mean_len(),
+            total_steps: self.total_steps,
+            wall_secs: self.wall.elapsed_secs(),
+            pi_loss: update.stats.pi_loss,
+            v_loss: update.stats.v_loss,
+            entropy: update.stats.entropy,
+            approx_kl: update.stats.approx_kl,
+            clip_frac: update.stats.clip_frac,
+            lr,
+            staleness: staleness_sum / chunks.len().max(1) as f32,
+        })
+    }
+}
+
+/// DDPG learner (further-work §6.1): replay buffer + off-policy updates
+/// under the same parallel-collection architecture.
+pub struct DdpgLearner {
+    pub state: DdpgTrainState,
+    backend: Box<dyn DdpgLearnerBackend>,
+    replay: ReplayBuffer,
+    norm: RunningNorm,
+    rng: Pcg64,
+    total_steps: u64,
+    wall: Stopwatch,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl DdpgLearner {
+    pub fn new(
+        backend: Box<dyn DdpgLearnerBackend>,
+        actor: Vec<f32>,
+        critic: Vec<f32>,
+        obs_dim: usize,
+        act_dim: usize,
+        replay_capacity: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            state: DdpgTrainState::new(actor, critic),
+            backend,
+            replay: ReplayBuffer::new(replay_capacity, obs_dim, act_dim),
+            norm: RunningNorm::new(obs_dim, 10.0),
+            rng: Pcg64::with_stream(seed, 0xDDD),
+            total_steps: 0,
+            wall: Stopwatch::start(),
+            obs_dim,
+            act_dim,
+        }
+    }
+
+    pub fn publish_initial(&self, store: &PolicyStore) {
+        store.publish(self.state.actor.clone(), self.norm.snapshot());
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+
+    /// Insert a DDPG chunk's transitions (chunk.obs has len+1 rows; the
+    /// trailing row is s' of the final transition).
+    fn absorb_chunk(&mut self, c: &ExperienceChunk) {
+        let o = self.obs_dim;
+        let a = self.act_dim;
+        let len = c.len();
+        debug_assert_eq!(c.obs.len(), (len + 1) * o, "ddpg chunk missing next-obs row");
+        for i in 0..len {
+            let obs = &c.obs[i * o..(i + 1) * o];
+            let next = &c.obs[(i + 1) * o..(i + 2) * o];
+            let act = &c.act[i * a..(i + 1) * a];
+            let done = c.end == ChunkEnd::Terminal && i == len - 1;
+            self.replay.push(obs, act, c.rew[i], next, done);
+        }
+        if let Some(stats) = &c.obs_stats {
+            self.norm.merge(stats);
+        }
+    }
+
+    pub fn iteration(
+        &mut self,
+        iter: usize,
+        cfg: &TrainConfig,
+        queue: &Channel<ExperienceChunk>,
+        store: &PolicyStore,
+    ) -> anyhow::Result<IterationMetrics> {
+        let iter_sw = Stopwatch::start();
+        let collect_sw = Stopwatch::start();
+        let mut n = 0usize;
+        let mut eps = EpisodeStats::default();
+        let mut busy_per_worker: std::collections::BTreeMap<usize, f64> =
+            std::collections::BTreeMap::new();
+        while n < cfg.samples_per_iter {
+            let c = queue
+                .pop()
+                .map_err(|_| anyhow::anyhow!("experience queue closed"))?;
+            n += c.len();
+            eps.absorb(&c);
+            *busy_per_worker.entry(c.sampler_id).or_default() += c.busy_secs;
+            self.absorb_chunk(&c);
+        }
+        let collect_secs = collect_sw.elapsed_secs();
+        let virtual_collect_secs = busy_per_worker
+            .values()
+            .fold(0.0f64, |a, &b| a.max(b));
+
+        let learn_sw = Stopwatch::start();
+        let stats = ddpg_update(
+            self.backend.as_mut(),
+            &mut self.state,
+            &self.replay,
+            &cfg.ddpg,
+            &mut self.rng,
+        )?;
+        let learn_secs = learn_sw.elapsed_secs();
+
+        store.publish(self.state.actor.clone(), self.norm.snapshot());
+        self.total_steps += n as u64;
+
+        Ok(IterationMetrics {
+            iter,
+            samples: n,
+            collect_secs,
+            virtual_collect_secs,
+            learn_secs,
+            total_secs: iter_sw.elapsed_secs(),
+            mean_return: eps.mean_return(),
+            episodes: eps.returns.len(),
+            mean_ep_len: eps.mean_len(),
+            total_steps: self.total_steps,
+            wall_secs: self.wall.elapsed_secs(),
+            pi_loss: stats.pi_loss,
+            v_loss: stats.q_loss,
+            ..Default::default()
+        })
+    }
+}

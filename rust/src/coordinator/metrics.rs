@@ -1,0 +1,261 @@
+//! Per-iteration metrics: the numbers behind every figure in the paper —
+//! collection (rollout) time, learning time, their fractions (Figs 4, 6,
+//! 7), and average return (Fig 3). Collected by the learner, logged to
+//! stdout, and written as CSV/JSON for the bench harness.
+
+use crate::util::json::Json;
+use std::io::Write;
+
+/// One training iteration's record.
+#[derive(Debug, Clone, Default)]
+pub struct IterationMetrics {
+    pub iter: usize,
+    /// Samples consumed this iteration.
+    pub samples: usize,
+    /// Wall-clock spent gathering the sample budget (rollout time, Fig 4).
+    pub collect_secs: f64,
+    /// Virtual-core rollout time: max over workers of their measured CPU
+    /// busy time this iteration. Equals wall collect time on a testbed
+    /// with >= N cores; on fewer cores it projects the paper's multi-core
+    /// rollout time from real single-core work measurements (DESIGN.md §3).
+    pub virtual_collect_secs: f64,
+    /// Wall-clock spent in the policy update (learn time, Fig 7).
+    pub learn_secs: f64,
+    /// Wall-clock of the whole iteration.
+    pub total_secs: f64,
+    /// Mean return of episodes completed this iteration (Fig 3).
+    pub mean_return: f32,
+    pub episodes: usize,
+    /// Mean episode length.
+    pub mean_ep_len: f32,
+    /// Cumulative environment steps at the end of this iteration.
+    pub total_steps: u64,
+    /// Cumulative wall-clock since training start.
+    pub wall_secs: f64,
+    // learner diagnostics
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub clip_frac: f32,
+    pub lr: f32,
+    /// Mean policy-version staleness of consumed chunks (async lag).
+    pub staleness: f32,
+}
+
+impl IterationMetrics {
+    /// Fraction of the iteration spent collecting (Fig 6 numerator),
+    /// using virtual-core rollout time (== wall collect on >= N cores).
+    pub fn collect_frac(&self) -> f64 {
+        let denom = self.virtual_collect_secs + self.learn_secs;
+        if denom > 0.0 {
+            self.virtual_collect_secs / denom
+        } else {
+            0.0
+        }
+    }
+
+    pub fn learn_frac(&self) -> f64 {
+        let denom = self.virtual_collect_secs + self.learn_secs;
+        if denom > 0.0 {
+            self.learn_secs / denom
+        } else {
+            0.0
+        }
+    }
+
+    pub const CSV_HEADER: &'static str = "iter,samples,collect_secs,virtual_collect_secs,\
+        learn_secs,total_secs,mean_return,episodes,mean_ep_len,total_steps,wall_secs,\
+        pi_loss,v_loss,entropy,approx_kl,clip_frac,lr,staleness";
+
+    pub fn to_csv_row(&self) -> String {
+        format!(
+            "{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{},{:.1},{},{:.3},{:.5},{:.5},{:.4},{:.5},{:.4},{:.6},{:.2}",
+            self.iter,
+            self.samples,
+            self.collect_secs,
+            self.virtual_collect_secs,
+            self.learn_secs,
+            self.total_secs,
+            self.mean_return,
+            self.episodes,
+            self.mean_ep_len,
+            self.total_steps,
+            self.wall_secs,
+            self.pi_loss,
+            self.v_loss,
+            self.entropy,
+            self.approx_kl,
+            self.clip_frac,
+            self.lr,
+            self.staleness,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("iter", Json::Num(self.iter as f64)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("collect_secs", Json::Num(self.collect_secs)),
+            ("learn_secs", Json::Num(self.learn_secs)),
+            ("total_secs", Json::Num(self.total_secs)),
+            ("mean_return", Json::Num(self.mean_return as f64)),
+            ("episodes", Json::Num(self.episodes as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+        ])
+    }
+}
+
+/// Collected metrics for a whole run + optional CSV sink.
+pub struct MetricsLog {
+    pub iterations: Vec<IterationMetrics>,
+    csv: Option<std::io::BufWriter<std::fs::File>>,
+    quiet: bool,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self {
+            iterations: Vec::new(),
+            csv: None,
+            quiet: false,
+        }
+    }
+
+    pub fn quiet() -> Self {
+        Self {
+            iterations: Vec::new(),
+            csv: None,
+            quiet: true,
+        }
+    }
+
+    /// Also mirror rows into a CSV file (header written immediately).
+    pub fn with_csv(mut self, path: &str) -> anyhow::Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "{}", IterationMetrics::CSV_HEADER)?;
+        self.csv = Some(w);
+        Ok(self)
+    }
+
+    pub fn push(&mut self, m: IterationMetrics) {
+        if !self.quiet {
+            crate::log_info!(
+                "iter {:>4} | ret {:>9.2} | eps {:>3} | collect {:>6.2}s | learn {:>6.2}s | kl {:.4}",
+                m.iter,
+                m.mean_return,
+                m.episodes,
+                m.collect_secs,
+                m.learn_secs,
+                m.approx_kl
+            );
+        }
+        if let Some(w) = &mut self.csv {
+            let _ = writeln!(w, "{}", m.to_csv_row());
+            let _ = w.flush();
+        }
+        self.iterations.push(m);
+    }
+
+    /// Mean collection seconds over the last `k` iterations (steady state).
+    pub fn mean_collect_secs(&self, k: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .iterations
+            .iter()
+            .rev()
+            .take(k)
+            .map(|m| m.collect_secs)
+            .collect();
+        crate::util::stats::mean(&tail)
+    }
+
+    pub fn mean_virtual_collect_secs(&self, k: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .iterations
+            .iter()
+            .rev()
+            .take(k)
+            .map(|m| m.virtual_collect_secs)
+            .collect();
+        crate::util::stats::mean(&tail)
+    }
+
+    pub fn mean_learn_secs(&self, k: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .iterations
+            .iter()
+            .rev()
+            .take(k)
+            .map(|m| m.learn_secs)
+            .collect();
+        crate::util::stats::mean(&tail)
+    }
+}
+
+impl Default for MetricsLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(iter: usize, collect: f64, learn: f64) -> IterationMetrics {
+        IterationMetrics {
+            iter,
+            samples: 100,
+            collect_secs: collect,
+            virtual_collect_secs: collect,
+            learn_secs: learn,
+            total_secs: collect + learn,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let x = m(0, 3.0, 1.0);
+        assert!((x.collect_frac() - 0.75).abs() < 1e-12);
+        assert!((x.collect_frac() + x.learn_frac() - 1.0).abs() < 1e-12);
+        let zero = IterationMetrics::default();
+        assert_eq!(zero.collect_frac(), 0.0);
+    }
+
+    #[test]
+    fn csv_row_matches_header_width() {
+        let row = m(3, 1.0, 2.0).to_csv_row();
+        assert_eq!(
+            row.split(',').count(),
+            IterationMetrics::CSV_HEADER.split(',').count()
+        );
+    }
+
+    #[test]
+    fn csv_file_written() {
+        let path = std::env::temp_dir().join("walle_metrics_test.csv");
+        let path_s = path.to_str().unwrap();
+        let mut log = MetricsLog::quiet().with_csv(path_s).unwrap();
+        log.push(m(0, 1.0, 0.5));
+        log.push(m(1, 1.1, 0.4));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("iter,"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tail_means() {
+        let mut log = MetricsLog::quiet();
+        for i in 0..10 {
+            log.push(m(i, i as f64, 2.0 * i as f64));
+        }
+        // last 2: collect 8,9 -> 8.5
+        assert!((log.mean_collect_secs(2) - 8.5).abs() < 1e-12);
+        assert!((log.mean_learn_secs(2) - 17.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,21 @@
+//! The WALL-E coordinator — the paper's system contribution (Fig 2).
+//!
+//! * [`queue`] — bounded MPMC **experience queue** (samplers → learner)
+//!   with backpressure and block-time accounting.
+//! * [`policy_store`] — versioned **policy queue** (learner → samplers):
+//!   single-slot broadcast; samplers always read the freshest parameters.
+//! * [`sampler`] — the N parallel rollout workers.
+//! * [`learner`] — the asynchronous agent process (collect → GAE →
+//!   minibatch epochs → publish), PPO and DDPG variants.
+//! * [`orchestrator`] — spawn/join lifecycle, sync/async modes.
+//! * [`metrics`] — per-iteration collect/learn timing and returns (the
+//!   data behind the paper's Figs 3–7).
+//! * [`eval`] — deterministic policy evaluation.
+
+pub mod eval;
+pub mod learner;
+pub mod metrics;
+pub mod orchestrator;
+pub mod policy_store;
+pub mod queue;
+pub mod sampler;

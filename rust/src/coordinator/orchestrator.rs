@@ -1,0 +1,259 @@
+//! Orchestrator: process topology and lifecycle for one training run —
+//! spawns the N sampler workers and the learner, wires the experience
+//! queue and policy store between them, runs the iteration loop, and
+//! shuts everything down cleanly (the WALL-E launcher in Fig 2).
+
+use crate::algo::rollout::ExperienceChunk;
+use crate::config::{Algo, TrainConfig};
+use crate::coordinator::learner::{DdpgLearner, PpoLearner};
+use crate::coordinator::metrics::{IterationMetrics, MetricsLog};
+use crate::coordinator::policy_store::PolicyStore;
+use crate::coordinator::queue::Channel;
+use crate::coordinator::sampler::{run_ddpg_sampler, run_ppo_sampler, SamplerCfg, SamplerReport};
+use crate::env::registry::make_env;
+use crate::runtime::BackendFactory;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Outcome of one full run.
+pub struct RunResult {
+    pub metrics: Vec<IterationMetrics>,
+    pub sampler_reports: Vec<SamplerReport>,
+    /// Final policy parameters (PPO flat vector or DDPG actor).
+    pub final_params: Vec<f32>,
+    /// (pushed, popped, producer blocked, consumer blocked).
+    pub queue_stats: (u64, u64, Duration, Duration),
+}
+
+/// Run a full training session per `cfg`, reporting into `log`.
+///
+/// Callers choose the backend by passing the matching factory
+/// (`NativeFactory` or `XlaFactory`); sampler threads each build their own
+/// thread-local backend through it.
+pub fn run(
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    log: &mut MetricsLog,
+) -> anyhow::Result<RunResult> {
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(
+        make_env(&cfg.env).is_some(),
+        "unknown env {:?} (known: {:?})",
+        cfg.env,
+        crate::env::registry::ENV_NAMES
+    );
+
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    let stop = AtomicBool::new(false);
+    let sync_budget = if cfg.async_mode {
+        None
+    } else {
+        Some(cfg.samples_per_iter / cfg.samplers)
+    };
+
+    let mut result: Option<RunResult> = None;
+
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        // ---- sampler workers ------------------------------------------
+        let mut handles = Vec::new();
+        for id in 0..cfg.samplers {
+            let scfg = SamplerCfg {
+                id,
+                seed: cfg.seed,
+                chunk_steps: cfg.chunk_steps,
+                sync_budget,
+                reward_scale: cfg.reward_scale,
+            };
+            let queue = &queue;
+            let store = &store;
+            let stop = &stop;
+            let env_name = cfg.env.clone();
+            let algo = cfg.algo;
+            let explore = cfg.ddpg.explore_noise;
+            handles.push(scope.spawn(move || -> anyhow::Result<SamplerReport> {
+                let env = make_env(&env_name).expect("env checked above");
+                match algo {
+                    Algo::Ppo => {
+                        let actor = factory.make_actor()?;
+                        Ok(run_ppo_sampler(scfg, env, actor, store, queue, stop))
+                    }
+                    Algo::Ddpg => {
+                        let actor = factory.make_ddpg_actor()?;
+                        Ok(run_ddpg_sampler(
+                            scfg, env, actor, explore, store, queue, stop,
+                        ))
+                    }
+                }
+            }));
+        }
+
+        // ---- learner (this thread) -------------------------------------
+        let final_params = match cfg.algo {
+            Algo::Ppo => {
+                let backend = factory.make_ppo_learner()?;
+                let shards = if cfg.learner_shards > 1 {
+                    (0..cfg.learner_shards)
+                        .map(|_| factory.make_ppo_learner())
+                        .collect::<anyhow::Result<Vec<_>>>()?
+                } else {
+                    Vec::new()
+                };
+                let mut learner = PpoLearner::new(
+                    backend,
+                    shards,
+                    factory.init_ppo_params(cfg.seed),
+                    factory.obs_dim(),
+                    cfg.seed,
+                );
+                learner.publish_initial(&store);
+                for iter in 0..cfg.iterations {
+                    let m = learner.iteration(iter, cfg, &queue, &store)?;
+                    log.push(m);
+                }
+                learner.state.flat.clone()
+            }
+            Algo::Ddpg => {
+                let backend = factory.make_ddpg_learner()?;
+                let (actor, critic) = factory.init_ddpg_params(cfg.seed);
+                let mut learner = DdpgLearner::new(
+                    backend,
+                    actor,
+                    critic,
+                    factory.obs_dim(),
+                    factory.act_dim(),
+                    cfg.ddpg.replay_capacity,
+                    cfg.seed,
+                );
+                learner.publish_initial(&store);
+                for iter in 0..cfg.iterations {
+                    let m = learner.iteration(iter, cfg, &queue, &store)?;
+                    log.push(m);
+                }
+                learner.state.actor.clone()
+            }
+        };
+
+        // ---- shutdown ---------------------------------------------------
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        // publish once more so sync-mode samplers blocked on wait_newer wake
+        store.publish(final_params.clone(), crate::algo::normalizer::NormSnapshot::identity(
+            factory.obs_dim(),
+        ));
+        let mut reports = Vec::new();
+        for h in handles {
+            reports.push(h.join().map_err(|_| anyhow::anyhow!("sampler panicked"))??);
+        }
+
+        result = Some(RunResult {
+            metrics: log.iterations.clone(),
+            sampler_reports: reports,
+            final_params,
+            queue_stats: (
+                queue.stats.pushed(),
+                queue.stats.popped(),
+                queue.stats.push_blocked(),
+                queue.stats.pop_blocked(),
+            ),
+        });
+        Ok(())
+    })?;
+
+    Ok(result.expect("run result set"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+    use crate::runtime::native_backend::NativeFactory;
+
+    fn tiny_cfg(samplers: usize, async_mode: bool) -> TrainConfig {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.backend = Backend::Native;
+        cfg.samplers = samplers;
+        cfg.samples_per_iter = 600;
+        cfg.iterations = 3;
+        cfg.chunk_steps = 100;
+        cfg.async_mode = async_mode;
+        cfg.ppo.epochs = 2;
+        cfg.ppo.minibatch = 128;
+        cfg.hidden = vec![16, 16];
+        cfg
+    }
+
+    fn factory(cfg: &TrainConfig) -> NativeFactory {
+        NativeFactory::new(3, 1, &cfg.hidden, cfg.ppo.clone(), cfg.ddpg.clone())
+    }
+
+    #[test]
+    fn async_run_completes_all_iterations() {
+        let cfg = tiny_cfg(3, true);
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 600);
+            assert!(m.collect_secs >= 0.0 && m.learn_secs > 0.0);
+        }
+        assert_eq!(r.sampler_reports.len(), 3);
+        let total_steps: u64 = r.sampler_reports.iter().map(|s| s.steps).sum();
+        assert!(total_steps >= 1800);
+        assert_eq!(r.final_params.len(), f.ppo_param_count());
+        let (pushed, popped, _, _) = r.queue_stats;
+        assert!(pushed >= popped);
+    }
+
+    #[test]
+    fn sync_mode_budget_respected() {
+        let cfg = tiny_cfg(2, false);
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        // sync: samplers produce ~budget per version; samples per iteration
+        // stay near the target (no unbounded overshoot)
+        for m in &r.metrics {
+            assert!(m.samples >= 600 && m.samples <= 1200, "samples {}", m.samples);
+        }
+    }
+
+    #[test]
+    fn single_sampler_equals_baseline_shape() {
+        // N = 1 is the paper's baseline configuration; must work identically
+        let cfg = tiny_cfg(1, true);
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        assert_eq!(r.sampler_reports.len(), 1);
+    }
+
+    #[test]
+    fn ddpg_run_completes() {
+        let mut cfg = tiny_cfg(2, true);
+        cfg.algo = Algo::Ddpg;
+        cfg.samples_per_iter = 300;
+        cfg.ddpg.warmup_steps = 100;
+        cfg.ddpg.batch = 32;
+        cfg.ddpg.updates_per_iter = 10;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        // final params are the DDPG actor
+        let actor_len = crate::nn::layout::actor_layout(3, 1, &cfg.hidden).total();
+        assert_eq!(r.final_params.len(), actor_len);
+    }
+
+    #[test]
+    fn unknown_env_fails_fast() {
+        let mut cfg = tiny_cfg(1, true);
+        cfg.env = "mujoco".into();
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        assert!(run(&cfg, &f, &mut log).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! The policy queue: versioned broadcast of policy parameters from the
+//! learner to all sampler workers — the right half of the paper's Fig 2.
+//!
+//! Implemented as a single-slot versioned store rather than a literal
+//! queue: samplers always want the *latest* parameters, so intermediate
+//! versions are superseded, exactly like the paper's "primed policy queue"
+//! that samplers read the freshest entry from. Readers poll cheaply
+//! (version check = one atomic load) and clone the Arc only on change.
+
+use crate::algo::normalizer::NormSnapshot;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Immutable snapshot shipped to samplers: parameters + obs normalization.
+#[derive(Debug, Clone)]
+pub struct PolicySnapshot {
+    pub version: u64,
+    /// Flat parameter vector (PPO nets or DDPG actor).
+    pub params: Arc<Vec<f32>>,
+    pub norm: NormSnapshot,
+}
+
+/// Versioned single-slot broadcast store.
+pub struct PolicyStore {
+    slot: Mutex<Option<Arc<PolicySnapshot>>>,
+    version: AtomicU64,
+    changed: Condvar,
+}
+
+impl PolicyStore {
+    pub fn new() -> Self {
+        Self {
+            slot: Mutex::new(None),
+            version: AtomicU64::new(0),
+            changed: Condvar::new(),
+        }
+    }
+
+    /// Publish new parameters; returns the new version (monotonic).
+    pub fn publish(&self, params: Vec<f32>, norm: NormSnapshot) -> u64 {
+        let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
+        let snap = Arc::new(PolicySnapshot {
+            version: v,
+            params: Arc::new(params),
+            norm,
+        });
+        *self.slot.lock().unwrap() = Some(snap);
+        self.changed.notify_all();
+        v
+    }
+
+    /// Latest published version (0 = nothing published yet).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Cheap staleness check for samplers.
+    pub fn newer_than(&self, seen: u64) -> bool {
+        self.version() > seen
+    }
+
+    /// Get the latest snapshot (None before the first publish).
+    pub fn latest(&self) -> Option<Arc<PolicySnapshot>> {
+        self.slot.lock().unwrap().clone()
+    }
+
+    /// Block until a version newer than `seen` is published (or timeout).
+    pub fn wait_newer(&self, seen: u64, timeout: Duration) -> Option<Arc<PolicySnapshot>> {
+        let mut g = self.slot.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(s) = g.as_ref() {
+                if s.version > seen {
+                    return Some(s.clone());
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _r) = self.changed.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+impl Default for PolicyStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn norm(dim: usize) -> NormSnapshot {
+        NormSnapshot::identity(dim)
+    }
+
+    #[test]
+    fn starts_empty_with_version_zero() {
+        let store = PolicyStore::new();
+        assert_eq!(store.version(), 0);
+        assert!(store.latest().is_none());
+        assert!(!store.newer_than(0));
+    }
+
+    #[test]
+    fn publish_increments_version_and_updates_slot() {
+        let store = PolicyStore::new();
+        let v1 = store.publish(vec![1.0, 2.0], norm(2));
+        assert_eq!(v1, 1);
+        let v2 = store.publish(vec![3.0, 4.0], norm(2));
+        assert_eq!(v2, 2);
+        let snap = store.latest().unwrap();
+        assert_eq!(snap.version, 2);
+        assert_eq!(*snap.params, vec![3.0, 4.0]);
+        assert!(store.newer_than(1));
+        assert!(!store.newer_than(2));
+    }
+
+    #[test]
+    fn readers_see_latest_not_intermediate() {
+        // single-slot semantics: a late reader skips superseded versions
+        let store = PolicyStore::new();
+        for i in 0..10 {
+            store.publish(vec![i as f32], norm(1));
+        }
+        assert_eq!(*store.latest().unwrap().params, vec![9.0]);
+    }
+
+    #[test]
+    fn wait_newer_blocks_until_publish() {
+        let store = Arc::new(PolicyStore::new());
+        store.publish(vec![0.0], norm(1));
+        let s2 = store.clone();
+        let h = thread::spawn(move || s2.wait_newer(1, Duration::from_secs(5)));
+        thread::sleep(Duration::from_millis(30));
+        store.publish(vec![1.0], norm(1));
+        let snap = h.join().unwrap().expect("should see v2");
+        assert_eq!(snap.version, 2);
+    }
+
+    #[test]
+    fn wait_newer_times_out() {
+        let store = PolicyStore::new();
+        store.publish(vec![0.0], norm(1));
+        let got = store.wait_newer(1, Duration::from_millis(30));
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn concurrent_publish_and_read_is_consistent() {
+        let store = Arc::new(PolicyStore::new());
+        let s2 = store.clone();
+        let writer = thread::spawn(move || {
+            for i in 0..1000u64 {
+                s2.publish(vec![i as f32], norm(1));
+            }
+        });
+        let s3 = store.clone();
+        let reader = thread::spawn(move || {
+            let mut last = 0u64;
+            for _ in 0..1000 {
+                if let Some(s) = s3.latest() {
+                    // versions observed must be monotonic and params match
+                    assert!(s.version >= last);
+                    assert_eq!(*s.params, vec![(s.version - 1) as f32]);
+                    last = s.version;
+                }
+            }
+        });
+        writer.join().unwrap();
+        reader.join().unwrap();
+    }
+}

@@ -1,0 +1,326 @@
+//! The experience queue: a bounded MPMC channel (Mutex + Condvar) carrying
+//! experience chunks from the N sampler workers to the learner — the left
+//! half of the paper's Fig 2. Bounded capacity gives natural backpressure:
+//! when the learner falls behind, samplers block instead of filling memory
+//! with stale experience.
+//!
+//! Hand-rolled because the offline crate set has no crossbeam-channel; the
+//! implementation also exports occupancy/block statistics that feed the
+//! Fig 6 time-accounting.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push/pop did not deliver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelClosed {
+    Closed,
+}
+
+/// Channel statistics (monotonic counters; nanoseconds for blocked time).
+#[derive(Debug, Default)]
+pub struct ChannelStats {
+    pub pushed: AtomicU64,
+    pub popped: AtomicU64,
+    pub push_blocked_ns: AtomicU64,
+    pub pop_blocked_ns: AtomicU64,
+}
+
+impl ChannelStats {
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    pub fn popped(&self) -> u64 {
+        self.popped.load(Ordering::Relaxed)
+    }
+
+    pub fn push_blocked(&self) -> Duration {
+        Duration::from_nanos(self.push_blocked_ns.load(Ordering::Relaxed))
+    }
+
+    pub fn pop_blocked(&self) -> Duration {
+        Duration::from_nanos(self.pop_blocked_ns.load(Ordering::Relaxed))
+    }
+}
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC channel.
+pub struct Channel<T> {
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+    pub stats: ChannelStats,
+}
+
+impl<T> Channel<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self {
+            inner: Mutex::new(Inner {
+                buf: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity,
+            stats: ChannelStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking push; returns Err once the channel is closed.
+    pub fn push(&self, item: T) -> Result<(), ChannelClosed> {
+        let t0 = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        while g.buf.len() >= self.capacity && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(ChannelClosed::Closed);
+        }
+        g.buf.push_back(item);
+        drop(g);
+        let waited = t0.elapsed().as_nanos() as u64;
+        self.stats.push_blocked_ns.fetch_add(waited, Ordering::Relaxed);
+        self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push; Ok(false) when full.
+    pub fn try_push(&self, item: T) -> Result<bool, ChannelClosed> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(ChannelClosed::Closed);
+        }
+        if g.buf.len() >= self.capacity {
+            return Ok(false);
+        }
+        g.buf.push_back(item);
+        drop(g);
+        self.stats.pushed.fetch_add(1, Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(true)
+    }
+
+    /// Blocking pop; returns Err once the channel is closed *and* drained.
+    pub fn pop(&self) -> Result<T, ChannelClosed> {
+        let t0 = Instant::now();
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                let waited = t0.elapsed().as_nanos() as u64;
+                self.stats.pop_blocked_ns.fetch_add(waited, Ordering::Relaxed);
+                self.stats.popped.fetch_add(1, Ordering::Relaxed);
+                self.not_full.notify_one();
+                return Ok(item);
+            }
+            if g.closed {
+                return Err(ChannelClosed::Closed);
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Result<Option<T>, ChannelClosed> {
+        let mut g = self.inner.lock().unwrap();
+        match g.buf.pop_front() {
+            Some(item) => {
+                drop(g);
+                self.stats.popped.fetch_add(1, Ordering::Relaxed);
+                self.not_full.notify_one();
+                Ok(Some(item))
+            }
+            None if g.closed => Err(ChannelClosed::Closed),
+            None => Ok(None),
+        }
+    }
+
+    /// Pop with a timeout; Ok(None) on timeout.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ChannelClosed> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.stats.popped.fetch_add(1, Ordering::Relaxed);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Err(ChannelClosed::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Close the channel: producers fail immediately; consumers drain the
+    /// remaining items, then get Err.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Discard all queued items (used when a fresh policy makes queued
+    /// experience stale in sync mode). Returns the number dropped.
+    pub fn drain(&self) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.buf.len();
+        g.buf.clear();
+        drop(g);
+        self.not_full.notify_all();
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let ch = Channel::new(8);
+        for i in 0..5 {
+            ch.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(ch.pop().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn close_unblocks_and_drains() {
+        let ch = Arc::new(Channel::new(2));
+        ch.push(1).unwrap();
+        ch.push(2).unwrap();
+        let ch2 = ch.clone();
+        let h = thread::spawn(move || ch2.push(3)); // blocks: full
+        thread::sleep(Duration::from_millis(20));
+        ch.close();
+        assert_eq!(h.join().unwrap(), Err(ChannelClosed::Closed));
+        // consumers drain remaining items then see Closed
+        assert_eq!(ch.pop().unwrap(), 1);
+        assert_eq!(ch.pop().unwrap(), 2);
+        assert!(ch.pop().is_err());
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let ch = Arc::new(Channel::new(1));
+        ch.push(0u32).unwrap();
+        let ch2 = ch.clone();
+        let t0 = Instant::now();
+        let h = thread::spawn(move || {
+            ch2.push(1).unwrap();
+            Instant::now()
+        });
+        thread::sleep(Duration::from_millis(50));
+        assert_eq!(ch.pop().unwrap(), 0);
+        let pushed_at = h.join().unwrap();
+        assert!(
+            pushed_at.duration_since(t0) >= Duration::from_millis(45),
+            "producer did not block"
+        );
+        assert!(ch.stats.push_blocked() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_exactly_once() {
+        let ch = Arc::new(Channel::new(16));
+        let producers = 4;
+        let per = 500;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let ch = ch.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    ch.push(p * per + i).unwrap();
+                }
+            }));
+        }
+        let consumers = 3;
+        let mut consumer_handles = Vec::new();
+        for _ in 0..consumers {
+            let ch = ch.clone();
+            consumer_handles.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = ch.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        ch.close();
+        let mut all: Vec<usize> = Vec::new();
+        for h in consumer_handles {
+            all.extend(h.join().unwrap());
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..producers * per).collect::<Vec<_>>());
+        assert_eq!(ch.stats.pushed(), (producers * per) as u64);
+        assert_eq!(ch.stats.popped(), (producers * per) as u64);
+    }
+
+    #[test]
+    fn try_variants_do_not_block() {
+        let ch: Channel<u8> = Channel::new(1);
+        assert_eq!(ch.try_pop().unwrap(), None);
+        assert!(ch.try_push(1).unwrap());
+        assert!(!ch.try_push(2).unwrap()); // full
+        assert_eq!(ch.try_pop().unwrap(), Some(1));
+        ch.close();
+        assert!(ch.try_push(3).is_err());
+        assert!(ch.try_pop().is_err());
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let ch: Channel<u8> = Channel::new(1);
+        let t0 = Instant::now();
+        let r = ch.pop_timeout(Duration::from_millis(30)).unwrap();
+        assert_eq!(r, None);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn drain_discards_queued() {
+        let ch = Channel::new(8);
+        for i in 0..5 {
+            ch.push(i).unwrap();
+        }
+        assert_eq!(ch.drain(), 5);
+        assert!(ch.is_empty());
+    }
+}

@@ -1,0 +1,590 @@
+//! Sampler worker: one of the paper's N parallel rollout processes.
+//!
+//! Each worker owns an environment instance, a thread-local policy backend
+//! (its own PJRT client + compiled `act` executable on the XLA path), and
+//! an independent RNG stream. It repeatedly:
+//!   1. refreshes parameters from the policy store at chunk boundaries,
+//!   2. rolls the environment, recording (obs, act, logp, V) transitions,
+//!   3. pushes experience chunks into the bounded experience queue.
+//!
+//! In async mode (the paper's architecture) workers never wait for the
+//! learner except through queue backpressure; in sync mode each worker
+//! produces its share of the per-iteration budget under one policy version
+//! and then blocks for the next publication (the ablation baseline).
+
+use crate::algo::ddpg::OuNoise;
+use crate::algo::normalizer::RunningNorm;
+use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
+use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
+use crate::coordinator::queue::Channel;
+use crate::env::{clip_action, Env};
+use crate::runtime::{ActorBackend, DdpgActorBackend};
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Static sampler configuration.
+#[derive(Debug, Clone)]
+pub struct SamplerCfg {
+    pub id: usize,
+    pub seed: u64,
+    pub chunk_steps: usize,
+    /// Some(budget) = sync mode: produce `budget` samples per policy
+    /// version, then wait for the next version.
+    pub sync_budget: Option<usize>,
+    /// Learning-signal reward scale (reported episode returns stay raw).
+    pub reward_scale: f32,
+}
+
+/// What a sampler did before stopping (for logs/tests).
+#[derive(Debug, Clone, Default)]
+pub struct SamplerReport {
+    pub steps: u64,
+    pub episodes: u64,
+    pub chunks: u64,
+    pub policy_refreshes: u64,
+}
+
+fn wait_first_policy(store: &PolicyStore, stop: &AtomicBool) -> Option<Arc<PolicySnapshot>> {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        if let Some(s) = store.wait_newer(0, Duration::from_millis(50)) {
+            return Some(s);
+        }
+    }
+}
+
+/// Buffers for an in-progress chunk (reused across chunks).
+struct ChunkBuf {
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: Vec<f32>,
+    logp: Vec<f32>,
+    value: Vec<f32>,
+    episode_returns: Vec<f32>,
+    episode_lengths: Vec<usize>,
+    /// Raw-obs Welford stats shipped to the learner's master normalizer.
+    stats: RunningNorm,
+    /// Busy seconds accumulated for the current chunk (work only).
+    busy_secs: f64,
+}
+
+impl ChunkBuf {
+    fn new(obs_dim: usize) -> Self {
+        Self {
+            obs: Vec::new(),
+            act: Vec::new(),
+            rew: Vec::new(),
+            logp: Vec::new(),
+            value: Vec::new(),
+            episode_returns: Vec::new(),
+            episode_lengths: Vec::new(),
+            stats: RunningNorm::new(obs_dim, 10.0),
+            busy_secs: 0.0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.rew.len()
+    }
+
+    fn take(
+        &mut self,
+        id: usize,
+        version: u64,
+        end: ChunkEnd,
+        bootstrap: f32,
+    ) -> ExperienceChunk {
+        let dim = self.stats.dim();
+        ExperienceChunk {
+            sampler_id: id,
+            policy_version: version,
+            obs: std::mem::take(&mut self.obs),
+            act: std::mem::take(&mut self.act),
+            rew: std::mem::take(&mut self.rew),
+            logp: std::mem::take(&mut self.logp),
+            value: std::mem::take(&mut self.value),
+            end,
+            bootstrap_value: bootstrap,
+            episode_returns: std::mem::take(&mut self.episode_returns),
+            episode_lengths: std::mem::take(&mut self.episode_lengths),
+            obs_stats: Some(std::mem::replace(&mut self.stats, RunningNorm::new(dim, 10.0))),
+            busy_secs: std::mem::take(&mut self.busy_secs),
+        }
+    }
+}
+
+/// Run the PPO sampler loop until `stop` is set or the queue closes.
+pub fn run_ppo_sampler(
+    cfg: SamplerCfg,
+    mut env: Box<dyn Env>,
+    mut actor: Box<dyn ActorBackend>,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    let mut report = SamplerReport::default();
+    let obs_dim = env.obs_dim();
+    let act_dim = env.act_dim();
+    let backend_batch = actor.batch().max(1);
+
+    let mut policy = match wait_first_policy(store, stop) {
+        Some(p) => p,
+        None => return report,
+    };
+    let mut produced_for_version = 0usize;
+
+    let mut rng = Pcg64::with_stream(cfg.seed, cfg.id as u64 + 1);
+    let mut raw_obs = vec![0.0f32; obs_dim];
+    // backend may require a fixed batch > 1: rows past 0 are zero padding
+    let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
+    let mut noise = vec![0.0f32; backend_batch * act_dim];
+    let mut buf = ChunkBuf::new(obs_dim);
+
+    env.reset(&mut rng, &mut raw_obs);
+    let mut norm_obs = raw_obs.clone();
+    policy.norm.apply(&mut norm_obs);
+    let mut ep_return = 0.0f32;
+    let mut ep_len = 0usize;
+    let max_ep = env.max_episode_steps();
+
+    // evaluate V(s) of the current normalized obs (used for bootstrapping)
+    macro_rules! value_of {
+        ($norm_obs:expr) => {{
+            obs_in[..obs_dim].copy_from_slice($norm_obs);
+            for z in noise.iter_mut() {
+                *z = 0.0;
+            }
+            match actor.act(&policy.params, &obs_in, &noise) {
+                Ok(r) => r.value[0],
+                Err(_) => 0.0,
+            }
+        }};
+    }
+
+    'outer: loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+
+        // --- one environment step under the current policy (busy-timed
+        // with the per-thread CPU clock: preemption-immune)
+        let busy_t0 = crate::util::timer::thread_cpu_secs();
+        obs_in[..obs_dim].copy_from_slice(&norm_obs);
+        rng.fill_normal(&mut noise);
+        let out = match actor.act(&policy.params, &obs_in, &noise) {
+            Ok(r) => r,
+            Err(e) => {
+                crate::log_error!("sampler {}: act failed: {e:#}", cfg.id);
+                break;
+            }
+        };
+        let mut action = out.action[..act_dim].to_vec();
+        clip_action(&mut action);
+
+        buf.obs.extend_from_slice(&norm_obs);
+        buf.stats.update(&raw_obs); // raw obs (pre-step) feeds the normalizer
+        buf.act.extend_from_slice(&out.action[..act_dim]); // pre-clip action (matches logp)
+        buf.logp.push(out.logp[0]);
+        buf.value.push(out.value[0]);
+
+        let step = env.step(&action, &mut raw_obs);
+        buf.rew.push(step.reward * cfg.reward_scale);
+        ep_return += step.reward;
+        ep_len += 1;
+        report.steps += 1;
+
+        norm_obs.copy_from_slice(&raw_obs);
+        policy.norm.apply(&mut norm_obs);
+        buf.busy_secs += crate::util::timer::thread_cpu_secs() - busy_t0;
+
+        let terminal = step.done;
+        let truncated = !terminal && ep_len >= max_ep;
+        let chunk_full = buf.len() >= cfg.chunk_steps;
+
+        if terminal || truncated || chunk_full {
+            let boot_t0 = crate::util::timer::thread_cpu_secs();
+            let (end, bootstrap) = if terminal {
+                (ChunkEnd::Terminal, 0.0)
+            } else {
+                let v = value_of!(&norm_obs);
+                (
+                    if truncated {
+                        ChunkEnd::Truncated
+                    } else {
+                        ChunkEnd::Continuation
+                    },
+                    v,
+                )
+            };
+            buf.busy_secs += crate::util::timer::thread_cpu_secs() - boot_t0;
+
+            if terminal || truncated {
+                buf.episode_returns.push(ep_return);
+                buf.episode_lengths.push(ep_len);
+                report.episodes += 1;
+            }
+            let n = buf.len();
+            let chunk = buf.take(cfg.id, policy.version, end, bootstrap);
+            if queue.push(chunk).is_err() {
+                break 'outer; // queue closed: shutting down
+            }
+            report.chunks += 1;
+            produced_for_version += n;
+
+            if terminal || truncated {
+                env.reset(&mut rng, &mut raw_obs);
+                norm_obs.copy_from_slice(&raw_obs);
+                policy.norm.apply(&mut norm_obs);
+                ep_return = 0.0;
+                ep_len = 0;
+            }
+
+            // --- policy refresh at chunk boundaries
+            if let Some(budget) = cfg.sync_budget {
+                if produced_for_version >= budget {
+                    // sync mode: block for the next version
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break 'outer;
+                        }
+                        if let Some(p) =
+                            store.wait_newer(policy.version, Duration::from_millis(50))
+                        {
+                            policy = p;
+                            produced_for_version = 0;
+                            report.policy_refreshes += 1;
+                            break;
+                        }
+                    }
+                }
+            } else if store.newer_than(policy.version) {
+                if let Some(p) = store.latest() {
+                    policy = p;
+                    produced_for_version = 0;
+                    report.policy_refreshes += 1;
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Run the DDPG sampler loop (deterministic actor + OU exploration noise;
+/// chunks carry raw transitions for the replay buffer).
+pub fn run_ddpg_sampler(
+    cfg: SamplerCfg,
+    mut env: Box<dyn Env>,
+    mut actor: Box<dyn DdpgActorBackend>,
+    explore_noise: f32,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    let mut report = SamplerReport::default();
+    let obs_dim = env.obs_dim();
+    let act_dim = env.act_dim();
+    let backend_batch = actor.batch().max(1);
+
+    let mut policy = match wait_first_policy(store, stop) {
+        Some(p) => p,
+        None => return report,
+    };
+
+    let mut rng = Pcg64::with_stream(cfg.seed, cfg.id as u64 + 101);
+    let mut ou = OuNoise::gaussian(act_dim, explore_noise);
+    let mut raw_obs = vec![0.0f32; obs_dim];
+    let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
+    let mut noise = vec![0.0f32; act_dim];
+    let mut buf = ChunkBuf::new(obs_dim);
+
+    env.reset(&mut rng, &mut raw_obs);
+    let mut norm_obs = raw_obs.clone();
+    policy.norm.apply(&mut norm_obs);
+    let mut ep_return = 0.0f32;
+    let mut ep_len = 0usize;
+    let max_ep = env.max_episode_steps();
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let busy_t0 = crate::util::timer::thread_cpu_secs();
+        obs_in[..obs_dim].copy_from_slice(&norm_obs);
+        let mut action = match actor.act(&policy.params, &obs_in) {
+            Ok(a) => a[..act_dim].to_vec(),
+            Err(e) => {
+                crate::log_error!("ddpg sampler {}: act failed: {e:#}", cfg.id);
+                break;
+            }
+        };
+        ou.sample(&mut rng, &mut noise);
+        for (a, n) in action.iter_mut().zip(&noise) {
+            *a += n;
+        }
+        clip_action(&mut action);
+
+        buf.obs.extend_from_slice(&norm_obs);
+        buf.stats.update(&raw_obs);
+        buf.act.extend_from_slice(&action);
+        buf.logp.push(0.0);
+        buf.value.push(0.0);
+
+        let step = env.step(&action, &mut raw_obs);
+        buf.rew.push(step.reward * cfg.reward_scale);
+        ep_return += step.reward;
+        ep_len += 1;
+        report.steps += 1;
+
+        norm_obs.copy_from_slice(&raw_obs);
+        policy.norm.apply(&mut norm_obs);
+        buf.busy_secs += crate::util::timer::thread_cpu_secs() - busy_t0;
+
+        let terminal = step.done;
+        let truncated = !terminal && ep_len >= max_ep;
+        if terminal || truncated || buf.len() >= cfg.chunk_steps {
+            if terminal || truncated {
+                buf.episode_returns.push(ep_return);
+                buf.episode_lengths.push(ep_len);
+                report.episodes += 1;
+            }
+            let end = if terminal {
+                ChunkEnd::Terminal
+            } else if truncated {
+                ChunkEnd::Truncated
+            } else {
+                ChunkEnd::Continuation
+            };
+            // replay reconstruction needs s' of the last row: stash the
+            // normalized next obs in `bootstrap_value`-adjacent storage by
+            // appending it to `obs` (len+1 rows). The learner splits it.
+            buf.obs.extend_from_slice(&norm_obs);
+            let chunk = buf.take(cfg.id, policy.version, end, 0.0);
+            if queue.push(chunk).is_err() {
+                break;
+            }
+            report.chunks += 1;
+
+            if terminal || truncated {
+                env.reset(&mut rng, &mut raw_obs);
+                norm_obs.copy_from_slice(&raw_obs);
+                policy.norm.apply(&mut norm_obs);
+                ou.reset();
+                ep_return = 0.0;
+                ep_len = 0;
+            }
+            if store.newer_than(policy.version) {
+                if let Some(p) = store.latest() {
+                    policy = p;
+                    report.policy_refreshes += 1;
+                }
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::normalizer::NormSnapshot;
+    use crate::config::{DdpgCfg, PpoCfg};
+    use crate::env::registry::make_env;
+    use crate::runtime::native_backend::NativeFactory;
+    use crate::runtime::BackendFactory;
+    use std::thread;
+
+    fn pendulum_factory() -> NativeFactory {
+        NativeFactory::new(3, 1, &[8, 8], PpoCfg::default(), DdpgCfg::default())
+    }
+
+    fn spawn_ppo(
+        cfg: SamplerCfg,
+        store: Arc<PolicyStore>,
+        queue: Arc<Channel<ExperienceChunk>>,
+        stop: Arc<AtomicBool>,
+    ) -> thread::JoinHandle<SamplerReport> {
+        thread::spawn(move || {
+            let f = pendulum_factory();
+            let env = make_env("pendulum").unwrap();
+            let actor = f.make_actor().unwrap();
+            run_ppo_sampler(cfg, env, actor, &store, &queue, &stop)
+        })
+    }
+
+    #[test]
+    fn sampler_produces_chunks_with_consistent_shapes() {
+        let store = Arc::new(PolicyStore::new());
+        let queue = Arc::new(Channel::new(32));
+        let stop = Arc::new(AtomicBool::new(false));
+        let f = pendulum_factory();
+        store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+
+        let h = spawn_ppo(
+            SamplerCfg {
+                id: 0,
+                seed: 7,
+                chunk_steps: 64,
+                sync_budget: None,
+                reward_scale: 1.0,
+            },
+            store.clone(),
+            queue.clone(),
+            stop.clone(),
+        );
+
+        let mut total = 0usize;
+        let mut chunks = Vec::new();
+        while total < 600 {
+            let c = queue.pop().unwrap();
+            total += c.len();
+            chunks.push(c);
+        }
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        let report = h.join().unwrap();
+
+        for c in &chunks {
+            assert_eq!(c.obs.len(), c.len() * 3);
+            assert_eq!(c.act.len(), c.len());
+            assert_eq!(c.logp.len(), c.len());
+            assert_eq!(c.value.len(), c.len());
+            assert!(c.len() <= 64);
+            assert!(c.rew.iter().all(|r| r.is_finite()));
+            assert_eq!(c.policy_version, 1);
+            // pendulum never terminates: only Truncated (at 200) or
+            // Continuation chunks
+            assert_ne!(c.end, ChunkEnd::Terminal);
+        }
+        assert!(report.steps >= 600);
+        // pendulum episodes are 200 steps; ~3 episodes in 600 samples
+        assert!(report.episodes >= 2);
+    }
+
+    #[test]
+    fn sampler_tags_chunks_with_policy_version() {
+        let store = Arc::new(PolicyStore::new());
+        let queue = Arc::new(Channel::new(8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let f = pendulum_factory();
+        store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+
+        let h = spawn_ppo(
+            SamplerCfg {
+                id: 1,
+                seed: 8,
+                chunk_steps: 50,
+                sync_budget: None,
+                reward_scale: 1.0,
+            },
+            store.clone(),
+            queue.clone(),
+            stop.clone(),
+        );
+
+        // consume a few v1 chunks, then publish v2 and expect the tag to move
+        for _ in 0..3 {
+            assert_eq!(queue.pop().unwrap().policy_version, 1);
+        }
+        store.publish(f.init_ppo_params(1), NormSnapshot::identity(3));
+        let mut saw_v2 = false;
+        for _ in 0..10 {
+            if queue.pop().unwrap().policy_version == 2 {
+                saw_v2 = true;
+                break;
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        let report = h.join().unwrap();
+        assert!(saw_v2, "sampler never picked up v2");
+        assert!(report.policy_refreshes >= 1);
+    }
+
+    #[test]
+    fn sync_mode_stops_at_budget() {
+        let store = Arc::new(PolicyStore::new());
+        let queue = Arc::new(Channel::new(64));
+        let stop = Arc::new(AtomicBool::new(false));
+        let f = pendulum_factory();
+        store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+
+        let h = spawn_ppo(
+            SamplerCfg {
+                id: 0,
+                seed: 9,
+                chunk_steps: 40,
+                sync_budget: Some(120),
+                reward_scale: 1.0,
+            },
+            store.clone(),
+            queue.clone(),
+            stop.clone(),
+        );
+
+        // worker should produce exactly ceil-to-chunk >= 120 samples then stall
+        thread::sleep(Duration::from_millis(300));
+        let mut total = 0;
+        while let Ok(Some(c)) = queue.try_pop() {
+            assert_eq!(c.policy_version, 1);
+            total += c.len();
+        }
+        assert!(
+            (120..=160).contains(&total),
+            "sync budget not respected: {total}"
+        );
+        // release the barrier with v2; more chunks must arrive
+        store.publish(f.init_ppo_params(2), NormSnapshot::identity(3));
+        let c = queue.pop_timeout(Duration::from_secs(5)).unwrap();
+        assert!(c.is_some(), "sampler did not resume after publish");
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn ddpg_sampler_appends_next_obs_row() {
+        let store = Arc::new(PolicyStore::new());
+        let queue = Arc::new(Channel::new(8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let f = pendulum_factory();
+        let (actor_params, _) = f.init_ddpg_params(0);
+        store.publish(actor_params, NormSnapshot::identity(3));
+
+        let store2 = store.clone();
+        let queue2 = queue.clone();
+        let stop2 = stop.clone();
+        let h = thread::spawn(move || {
+            let f = pendulum_factory();
+            let env = make_env("pendulum").unwrap();
+            let actor = f.make_ddpg_actor().unwrap();
+            run_ddpg_sampler(
+                SamplerCfg {
+                    id: 0,
+                    seed: 11,
+                    chunk_steps: 32,
+                    sync_budget: None,
+                    reward_scale: 1.0,
+                },
+                env,
+                actor,
+                0.1,
+                &store2,
+                &queue2,
+                &stop2,
+            )
+        });
+
+        let c = queue.pop().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        h.join().unwrap();
+        // obs has len+1 rows (trailing next-obs row for replay)
+        assert_eq!(c.obs.len(), (c.len() + 1) * 3);
+        // actions are clipped
+        assert!(c.act.iter().all(|a| a.abs() <= 1.0));
+    }
+}

@@ -1,0 +1,165 @@
+//! Continuous-action cart-pole balance.
+//!
+//! Obs = [x, ẋ, θ, θ̇]; action = horizontal force in [-1, 1] × `force_mag`.
+//! Reward 1.0 per step alive; terminal when the pole falls past 12° or the
+//! cart leaves ±2.4 m; 500-step cap. This is the one preset env with true
+//! terminal states, so it exercises the GAE done-vs-truncation distinction.
+
+use super::{Env, Step};
+use crate::util::rng::Pcg64;
+
+pub struct CartPole {
+    x: f32,
+    x_dot: f32,
+    theta: f32,
+    theta_dot: f32,
+    gravity: f32,
+    mass_cart: f32,
+    mass_pole: f32,
+    pole_half_len: f32,
+    force_mag: f32,
+    dt: f32,
+    x_limit: f32,
+    theta_limit: f32,
+}
+
+impl Default for CartPole {
+    fn default() -> Self {
+        Self {
+            x: 0.0,
+            x_dot: 0.0,
+            theta: 0.0,
+            theta_dot: 0.0,
+            gravity: 9.8,
+            mass_cart: 1.0,
+            mass_pole: 0.1,
+            pole_half_len: 0.5,
+            force_mag: 10.0,
+            dt: 0.02,
+            x_limit: 2.4,
+            theta_limit: 12.0f32.to_radians(),
+        }
+    }
+}
+
+impl CartPole {
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.x;
+        obs[1] = self.x_dot;
+        obs[2] = self.theta;
+        obs[3] = self.theta_dot;
+    }
+
+    fn fallen(&self) -> bool {
+        self.x.abs() > self.x_limit || self.theta.abs() > self.theta_limit
+    }
+}
+
+impl Env for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        500
+    }
+
+    fn name(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.x = rng.uniform(-0.05, 0.05);
+        self.x_dot = rng.uniform(-0.05, 0.05);
+        self.theta = rng.uniform(-0.05, 0.05);
+        self.theta_dot = rng.uniform(-0.05, 0.05);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let force = action[0].clamp(-1.0, 1.0) * self.force_mag;
+        let total_mass = self.mass_cart + self.mass_pole;
+        let pole_ml = self.mass_pole * self.pole_half_len;
+        let (sin_t, cos_t) = self.theta.sin_cos();
+
+        let temp = (force + pole_ml * self.theta_dot * self.theta_dot * sin_t) / total_mass;
+        let theta_acc = (self.gravity * sin_t - cos_t * temp)
+            / (self.pole_half_len
+                * (4.0 / 3.0 - self.mass_pole * cos_t * cos_t / total_mass));
+        let x_acc = temp - pole_ml * theta_acc * cos_t / total_mass;
+
+        self.x += self.dt * self.x_dot;
+        self.x_dot += self.dt * x_acc;
+        self.theta += self.dt * self.theta_dot;
+        self.theta_dot += self.dt * theta_acc;
+
+        self.write_obs(obs);
+        Step {
+            reward: 1.0,
+            done: self.fallen(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_near_upright() {
+        let mut env = CartPole::default();
+        let mut rng = Pcg64::new(0);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut rng, &mut obs);
+        assert!(obs.iter().all(|v| v.abs() <= 0.05));
+    }
+
+    #[test]
+    fn uncontrolled_pole_eventually_falls() {
+        let mut env = CartPole::default();
+        let mut rng = Pcg64::new(1);
+        let mut obs = [0.0f32; 4];
+        env.reset(&mut rng, &mut obs);
+        let mut fell = false;
+        for _ in 0..500 {
+            if env.step(&[0.0], &mut obs).done {
+                fell = true;
+                break;
+            }
+        }
+        assert!(fell, "pole never fell without control");
+    }
+
+    #[test]
+    fn force_pushes_cart() {
+        let mut env = CartPole::default();
+        let mut obs = [0.0f32; 4];
+        for _ in 0..10 {
+            env.step(&[1.0], &mut obs);
+        }
+        assert!(env.x_dot > 0.0);
+    }
+
+    #[test]
+    fn done_at_position_limit() {
+        let mut env = CartPole {
+            x: 2.39,
+            x_dot: 10.0,
+            ..Default::default()
+        };
+        let mut obs = [0.0f32; 4];
+        let s = env.step(&[1.0], &mut obs);
+        assert!(s.done);
+    }
+
+    #[test]
+    fn reward_is_one_per_step() {
+        let mut env = CartPole::default();
+        let mut obs = [0.0f32; 4];
+        assert_eq!(env.step(&[0.0], &mut obs).reward, 1.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! Cross-env conformance suite: every registered environment must satisfy
+//! the `Env` contract (finite observations, declared dims, reproducible
+//! resets, clipped-action tolerance). Runs over the registry so a new env
+//! is automatically covered.
+
+#[cfg(test)]
+mod tests {
+    use crate::env::registry::{make_env, ENV_NAMES};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn observations_always_finite_and_right_sized() {
+        for name in ENV_NAMES {
+            let mut env = make_env(name).unwrap();
+            let mut rng = Pcg64::new(42);
+            let mut obs = vec![0.0f32; env.obs_dim()];
+            let mut act = vec![0.0f32; env.act_dim()];
+            env.reset(&mut rng, &mut obs);
+            assert!(obs.iter().all(|v| v.is_finite()), "{name} reset obs");
+            for i in 0..200 {
+                for a in act.iter_mut() {
+                    *a = rng.uniform(-1.0, 1.0);
+                }
+                let s = env.step(&act, &mut obs);
+                assert!(s.reward.is_finite(), "{name} step {i} reward");
+                assert!(
+                    obs.iter().all(|v| v.is_finite()),
+                    "{name} step {i} obs not finite"
+                );
+                if s.done {
+                    env.reset(&mut rng, &mut obs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resets_reproducible_from_seed() {
+        for name in ENV_NAMES {
+            let mut e1 = make_env(name).unwrap();
+            let mut e2 = make_env(name).unwrap();
+            let mut o1 = vec![0.0f32; e1.obs_dim()];
+            let mut o2 = vec![0.0f32; e2.obs_dim()];
+            e1.reset(&mut Pcg64::new(123), &mut o1);
+            e2.reset(&mut Pcg64::new(123), &mut o2);
+            assert_eq!(o1, o2, "{name} reset not deterministic");
+        }
+    }
+
+    #[test]
+    fn rollouts_reproducible_from_seed() {
+        for name in ENV_NAMES {
+            let run = || {
+                let mut env = make_env(name).unwrap();
+                let mut rng = Pcg64::new(9);
+                let mut obs = vec![0.0f32; env.obs_dim()];
+                let mut act = vec![0.0f32; env.act_dim()];
+                env.reset(&mut rng, &mut obs);
+                let mut total = 0.0f32;
+                for _ in 0..100 {
+                    for a in act.iter_mut() {
+                        *a = rng.uniform(-1.0, 1.0);
+                    }
+                    let s = env.step(&act, &mut obs);
+                    total += s.reward;
+                    if s.done {
+                        env.reset(&mut rng, &mut obs);
+                    }
+                }
+                (total, obs)
+            };
+            let (r1, o1) = run();
+            let (r2, o2) = run();
+            assert_eq!(r1, r2, "{name} rollout reward not deterministic");
+            assert_eq!(o1, o2, "{name} rollout obs not deterministic");
+        }
+    }
+
+    #[test]
+    fn out_of_range_actions_are_tolerated() {
+        for name in ENV_NAMES {
+            let mut env = make_env(name).unwrap();
+            let mut rng = Pcg64::new(5);
+            let mut obs = vec![0.0f32; env.obs_dim()];
+            env.reset(&mut rng, &mut obs);
+            let huge = vec![1e6f32; env.act_dim()];
+            for _ in 0..20 {
+                let s = env.step(&huge, &mut obs);
+                assert!(s.reward.is_finite(), "{name} blew up on huge action");
+                if s.done {
+                    env.reset(&mut rng, &mut obs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn episode_caps_are_positive_and_sane() {
+        for name in ENV_NAMES {
+            let env = make_env(name).unwrap();
+            let cap = env.max_episode_steps();
+            assert!(cap >= 50 && cap <= 1000, "{name} cap {cap}");
+        }
+    }
+}

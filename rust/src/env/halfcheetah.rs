@@ -1,0 +1,316 @@
+//! HalfCheetah-Lite: planar cheetah locomotion on the rigid-body engine —
+//! WALL-E's substitute for MuJoCo `HalfCheetah-v2` (DESIGN.md §3).
+//!
+//! Seven rods (torso + back/front thigh, shin, foot) connected by six
+//! motorized revolute joints with MuJoCo-like limits and gear ratios.
+//! Matching the original task interface exactly:
+//!   * obs (17) = [torso height, torso pitch, 6 joint angles,
+//!                 torso vx, vy, pitch rate, 6 joint speeds]
+//!   * act (6)  = normalized joint torques in [-1, 1] × gear
+//!   * reward   = forward torso velocity − 0.1 ‖action‖²
+//!   * 1000-step episodes, no early termination.
+//!
+//! Physics runs at dt = 0.01 with frame_skip = 5 (control dt = 0.05 s),
+//! the same discretization as the original.
+
+use super::physics::{v2, Body, RevoluteJoint, World, WorldCfg};
+use super::{Env, Step};
+use crate::util::rng::Pcg64;
+
+const N_JOINTS: usize = 6;
+const FRAME_SKIP: usize = 5;
+const DT: f32 = 0.01;
+
+/// Per-joint gear (torque scale). MuJoCo uses [120, 90, 60, 120, 60, 30];
+/// scaled down for our lighter 2-D bodies.
+const GEARS: [f32; N_JOINTS] = [60.0, 45.0, 30.0, 60.0, 30.0, 15.0];
+
+/// Joint limits (radians), MuJoCo-like: bthigh, bshin, bfoot, fthigh,
+/// fshin, ffoot.
+const LIMITS: [(f32, f32); N_JOINTS] = [
+    (-0.52, 1.05),
+    (-0.78, 0.78),
+    (-0.40, 0.78),
+    (-1.00, 0.70),
+    (-1.20, 0.87),
+    (-0.50, 0.50),
+];
+
+/// Limb (mass, half_len): back thigh/shin/foot, front thigh/shin/foot.
+const LIMBS: [(f32, f32); N_JOINTS] = [
+    (1.54, 0.145),
+    (1.58, 0.15),
+    (1.07, 0.094),
+    (1.43, 0.133),
+    (1.18, 0.106),
+    (0.84, 0.07),
+];
+
+const TORSO_MASS: f32 = 6.36;
+const TORSO_HALF_LEN: f32 = 0.5;
+const INIT_HEIGHT: f32 = 0.58;
+
+pub struct HalfCheetah {
+    world: World,
+    steps: usize,
+}
+
+impl Default for HalfCheetah {
+    fn default() -> Self {
+        let mut hc = HalfCheetah {
+            world: build_world(),
+            steps: 0,
+        };
+        hc.world.reset_solver_state();
+        hc
+    }
+}
+
+fn build_world() -> World {
+    let cfg = WorldCfg {
+        gravity: -9.81,
+        ground_y: 0.0,
+        friction: 0.9,
+        velocity_iters: 14,
+        baumgarte: 0.2,
+        contact_slop: 0.005,
+        damping: 0.05,
+        max_vel: 30.0,
+        max_omega: 30.0,
+    };
+    let mut w = World::new(cfg);
+    // torso: rod along +x at standing height
+    let torso = w.add_body(Body::rod(
+        v2(0.0, INIT_HEIGHT),
+        0.0,
+        TORSO_MASS,
+        TORSO_HALF_LEN,
+        0.046,
+    ));
+
+    // back leg hangs from the rear end, front leg from the front end
+    let hips = [v2(-TORSO_HALF_LEN, 0.0), v2(TORSO_HALF_LEN, 0.0)];
+    for (leg, hip_local) in hips.iter().enumerate() {
+        let mut parent = torso;
+        let mut parent_anchor = *hip_local;
+        let mut anchor_world = match leg {
+            0 => v2(-TORSO_HALF_LEN, INIT_HEIGHT),
+            _ => v2(TORSO_HALF_LEN, INIT_HEIGHT),
+        };
+        for seg in 0..3 {
+            let (mass, hl) = LIMBS[leg * 3 + seg];
+            // limb hangs straight down: center hl below the anchor, with the
+            // local +x end at the anchor (angle = +π/2 rotates +x upward)
+            let center = anchor_world - v2(0.0, hl);
+            let body = w.add_body(Body::rod(
+                center,
+                std::f32::consts::FRAC_PI_2,
+                mass,
+                hl,
+                0.04,
+            ));
+            let parent_angle = if parent == torso {
+                0.0
+            } else {
+                std::f32::consts::FRAC_PI_2
+            };
+            let ref_angle = std::f32::consts::FRAC_PI_2 - parent_angle;
+            let (lo, hi) = LIMITS[leg * 3 + seg];
+            w.add_joint(RevoluteJoint::new(
+                parent,
+                body,
+                parent_anchor,
+                v2(hl, 0.0),
+                ref_angle,
+                Some((lo, hi)),
+            ));
+            parent = body;
+            parent_anchor = v2(-hl, 0.0); // next segment attaches at distal end
+            anchor_world = anchor_world - v2(0.0, 2.0 * hl);
+        }
+    }
+    w
+}
+
+impl HalfCheetah {
+    fn torso(&self) -> &Body {
+        &self.world.bodies[0]
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let t = self.torso();
+        obs[0] = t.pos.y;
+        obs[1] = t.angle;
+        for j in 0..N_JOINTS {
+            obs[2 + j] = self.world.joints[j].angle(&self.world.bodies);
+        }
+        obs[8] = t.vel.x;
+        obs[9] = t.vel.y;
+        obs[10] = t.omega;
+        for j in 0..N_JOINTS {
+            obs[11 + j] = self.world.joints[j].speed(&self.world.bodies);
+        }
+    }
+}
+
+impl Env for HalfCheetah {
+    fn obs_dim(&self) -> usize {
+        17
+    }
+
+    fn act_dim(&self) -> usize {
+        N_JOINTS
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        1000
+    }
+
+    fn name(&self) -> &'static str {
+        "halfcheetah"
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.world = build_world();
+        self.world.reset_solver_state();
+        self.steps = 0;
+        // small random perturbations, as MuJoCo does on qpos/qvel
+        for b in &mut self.world.bodies {
+            b.pos.x += rng.uniform(-0.005, 0.005);
+            b.pos.y += rng.uniform(-0.005, 0.005);
+            b.angle += rng.uniform(-0.02, 0.02);
+            b.vel = v2(rng.uniform(-0.05, 0.05), rng.uniform(-0.05, 0.05));
+            b.omega = rng.uniform(-0.05, 0.05);
+        }
+        // settle contacts for a few passive steps so the start is stable
+        for _ in 0..5 {
+            self.world.step(DT);
+        }
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let x_before = self.torso().pos.x;
+        let mut ctrl_cost = 0.0f32;
+        for _ in 0..FRAME_SKIP {
+            for j in 0..N_JOINTS {
+                let a = action[j].clamp(-1.0, 1.0);
+                self.world.set_motor(j, a * GEARS[j]);
+            }
+            self.world.step(DT);
+        }
+        for j in 0..N_JOINTS {
+            let a = action[j].clamp(-1.0, 1.0);
+            ctrl_cost += 0.1 * a * a;
+        }
+        let x_after = self.torso().pos.x;
+        let forward_vel = (x_after - x_before) / (DT * FRAME_SKIP as f32);
+        self.steps += 1;
+        self.write_obs(obs);
+        Step {
+            reward: forward_vel - ctrl_cost,
+            done: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_dims_match_preset() {
+        let env = HalfCheetah::default();
+        assert_eq!(env.obs_dim(), 17);
+        assert_eq!(env.act_dim(), 6);
+        assert_eq!(env.max_episode_steps(), 1000);
+    }
+
+    #[test]
+    fn settles_on_ground_without_action() {
+        let mut env = HalfCheetah::default();
+        let mut rng = Pcg64::new(0);
+        let mut obs = [0.0f32; 17];
+        env.reset(&mut rng, &mut obs);
+        for _ in 0..100 {
+            env.step(&[0.0; 6], &mut obs);
+        }
+        let h = obs[0];
+        assert!(h > 0.05 && h < 1.0, "torso height {h}");
+        assert!(obs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn reward_is_velocity_minus_ctrl_cost() {
+        let mut env = HalfCheetah::default();
+        let mut rng = Pcg64::new(1);
+        let mut obs = [0.0f32; 17];
+        env.reset(&mut rng, &mut obs);
+        let x0 = env.torso().pos.x;
+        let a = [0.5f32, -0.5, 0.2, 0.1, -0.3, 0.4];
+        let s = env.step(&a, &mut obs);
+        let x1 = env.torso().pos.x;
+        let vel = (x1 - x0) / 0.05;
+        let ctrl: f32 = a.iter().map(|x| 0.1 * x * x).sum();
+        assert!((s.reward - (vel - ctrl)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn survives_random_torque_abuse() {
+        let mut env = HalfCheetah::default();
+        let mut rng = Pcg64::new(2);
+        let mut obs = [0.0f32; 17];
+        env.reset(&mut rng, &mut obs);
+        let mut a = [0.0f32; 6];
+        for _ in 0..1000 {
+            for x in a.iter_mut() {
+                *x = rng.uniform(-1.0, 1.0);
+            }
+            let s = env.step(&a, &mut obs);
+            assert!(s.reward.is_finite());
+            assert!(obs.iter().all(|v| v.is_finite()));
+        }
+        // body must not have sunk through the floor or launched into orbit
+        assert!(obs[0] > -0.5 && obs[0] < 5.0, "height={}", obs[0]);
+    }
+
+    #[test]
+    fn reset_is_reproducible_per_seed() {
+        let mut e1 = HalfCheetah::default();
+        let mut e2 = HalfCheetah::default();
+        let mut o1 = [0.0f32; 17];
+        let mut o2 = [0.0f32; 17];
+        e1.reset(&mut Pcg64::new(7), &mut o1);
+        e2.reset(&mut Pcg64::new(7), &mut o2);
+        assert_eq!(o1, o2);
+        // and stepping with the same actions stays identical
+        let a = [0.3f32, -0.2, 0.1, 0.4, -0.1, 0.2];
+        let s1 = e1.step(&a, &mut o1);
+        let s2 = e2.step(&a, &mut o2);
+        assert_eq!(s1, s2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn constant_forward_gait_moves_somewhere() {
+        // not asserting locomotion quality — only that torques move the body
+        let mut env = HalfCheetah::default();
+        let mut rng = Pcg64::new(3);
+        let mut obs = [0.0f32; 17];
+        env.reset(&mut rng, &mut obs);
+        let x0 = env.torso().pos.x;
+        for i in 0..200 {
+            let phase = i as f32 * 0.3;
+            let a = [
+                phase.sin(),
+                (phase + 1.0).sin(),
+                (phase + 2.0).sin(),
+                -phase.sin(),
+                -(phase + 1.0).sin(),
+                -(phase + 2.0).sin(),
+            ];
+            env.step(&a, &mut obs);
+        }
+        assert!((env.torso().pos.x - x0).abs() > 0.01);
+    }
+}

@@ -1,0 +1,69 @@
+//! Environment substrate: the `Env` trait, concrete continuous-control
+//! tasks (pendulum, cartpole, reacher, half-cheetah on the planar physics
+//! engine), wrappers, and a name-based registry.
+//!
+//! Conventions (enforced by `env::conformance` tests):
+//!   * actions live in `[-1, 1]^act_dim`; envs clip then scale internally;
+//!   * observations are finite f32;
+//!   * `reset` draws initial state from the env's own distribution using
+//!     the caller-supplied RNG (reproducible per sampler stream);
+//!   * episodes end after `max_episode_steps()` (the sampler enforces the
+//!     cap and marks the boundary as a *time-limit truncation*, which GAE
+//!     bootstraps through, vs a true `done` which it does not).
+
+pub mod cartpole;
+pub mod conformance;
+pub mod halfcheetah;
+pub mod pendulum;
+pub mod physics;
+pub mod reacher;
+pub mod registry;
+pub mod wrappers;
+
+use crate::util::rng::Pcg64;
+
+/// Result of one environment step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step {
+    pub reward: f32,
+    /// True terminal state (failure/goal) — GAE must NOT bootstrap through.
+    pub done: bool,
+}
+
+/// A single environment instance. `Send` so sampler threads can own one.
+pub trait Env: Send {
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+
+    /// Episode cap the sampler enforces (time-limit truncation).
+    fn max_episode_steps(&self) -> usize;
+
+    /// Reset to a fresh initial state; writes the observation into `obs`.
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]);
+
+    /// Apply `action` (clipped to [-1,1] by the caller), advance one step,
+    /// write the next observation into `obs`.
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step;
+
+    /// Environment name (for logs/metrics).
+    fn name(&self) -> &'static str;
+}
+
+/// Clip an action slice into [-1, 1] in place (sampler-side helper).
+pub fn clip_action(action: &mut [f32]) {
+    for a in action.iter_mut() {
+        *a = a.clamp(-1.0, 1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_action_clamps() {
+        let mut a = [-3.0, 0.5, 2.0];
+        clip_action(&mut a);
+        assert_eq!(a, [-1.0, 0.5, 1.0]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Classic torque-limited pendulum swing-up (gym `Pendulum-v1` semantics).
+//!
+//! Obs = [cos θ, sin θ, θ̇]; action = normalized torque in [-1, 1] scaled
+//! by `max_torque`; reward = -(θ² + 0.1 θ̇² + 0.001 u²); 200-step episodes,
+//! no terminal states. Closed-form dynamics — the cheapest env, used by
+//! quickstart, tests and DDPG examples.
+
+use super::{Env, Step};
+use crate::util::rng::Pcg64;
+
+pub struct Pendulum {
+    theta: f32,
+    theta_dot: f32,
+    g: f32,
+    m: f32,
+    l: f32,
+    dt: f32,
+    max_torque: f32,
+    max_speed: f32,
+}
+
+impl Default for Pendulum {
+    fn default() -> Self {
+        Self {
+            theta: 0.0,
+            theta_dot: 0.0,
+            g: 10.0,
+            m: 1.0,
+            l: 1.0,
+            dt: 0.05,
+            max_torque: 2.0,
+            max_speed: 8.0,
+        }
+    }
+}
+
+impl Pendulum {
+    fn write_obs(&self, obs: &mut [f32]) {
+        obs[0] = self.theta.cos();
+        obs[1] = self.theta.sin();
+        obs[2] = self.theta_dot;
+    }
+}
+
+/// Wrap an angle into [-π, π].
+pub fn angle_normalize(x: f32) -> f32 {
+    let two_pi = 2.0 * std::f32::consts::PI;
+    let y = (x + std::f32::consts::PI).rem_euclid(two_pi);
+    y - std::f32::consts::PI
+}
+
+impl Env for Pendulum {
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        200
+    }
+
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.theta = rng.uniform(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot = rng.uniform(-1.0, 1.0);
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let u = action[0].clamp(-1.0, 1.0) * self.max_torque;
+        let th = angle_normalize(self.theta);
+        let cost = th * th + 0.1 * self.theta_dot * self.theta_dot + 0.001 * u * u;
+
+        // θ̈ = 3g/(2l) sin θ + 3/(m l²) u   (θ = 0 is upright)
+        let acc = 3.0 * self.g / (2.0 * self.l) * self.theta.sin()
+            + 3.0 / (self.m * self.l * self.l) * u;
+        self.theta_dot = (self.theta_dot + acc * self.dt)
+            .clamp(-self.max_speed, self.max_speed);
+        self.theta += self.theta_dot * self.dt;
+
+        self.write_obs(obs);
+        Step {
+            reward: -cost,
+            done: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_is_unit_circle_plus_speed() {
+        let mut env = Pendulum::default();
+        let mut rng = Pcg64::new(0);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        let r = obs[0] * obs[0] + obs[1] * obs[1];
+        assert!((r - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn reward_is_negative_cost() {
+        let mut env = Pendulum::default();
+        let mut rng = Pcg64::new(1);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        let s = env.step(&[0.0], &mut obs);
+        assert!(s.reward <= 0.0);
+        assert!(!s.done);
+    }
+
+    #[test]
+    fn upright_zero_velocity_is_near_zero_cost() {
+        let mut env = Pendulum {
+            theta: 0.0,
+            theta_dot: 0.0,
+            ..Default::default()
+        };
+        let mut obs = [0.0f32; 3];
+        let s = env.step(&[0.0], &mut obs);
+        assert!(s.reward > -0.01, "reward={}", s.reward);
+    }
+
+    #[test]
+    fn hanging_pendulum_accelerates_downward() {
+        // θ = π (hanging): sin θ ≈ 0 at exactly π, so nudge slightly
+        let mut env = Pendulum {
+            theta: 2.0,
+            theta_dot: 0.0,
+            ..Default::default()
+        };
+        let mut obs = [0.0f32; 3];
+        env.step(&[0.0], &mut obs);
+        assert!(env.theta_dot > 0.0); // gravity pulls toward π
+    }
+
+    #[test]
+    fn angle_normalize_wraps() {
+        // 3π wraps to ±π (both represent the same angle)
+        assert!((angle_normalize(3.0 * std::f32::consts::PI).abs() - std::f32::consts::PI).abs() < 1e-5);
+        assert!((angle_normalize(0.3) - 0.3).abs() < 1e-6);
+        assert!((angle_normalize(-4.0 * std::f32::consts::PI)).abs() < 1e-4);
+        // always lands in [-π, π]
+        for i in -20..20 {
+            let a = angle_normalize(i as f32 * 0.7);
+            assert!((-std::f32::consts::PI..=std::f32::consts::PI).contains(&a));
+        }
+    }
+
+    #[test]
+    fn torque_saturates_at_max() {
+        let mut e1 = Pendulum {
+            theta: 1.0,
+            ..Default::default()
+        };
+        let mut e2 = Pendulum {
+            theta: 1.0,
+            ..Default::default()
+        };
+        let mut obs = [0.0f32; 3];
+        e1.step(&[1.0], &mut obs);
+        e2.step(&[100.0], &mut obs); // must clip to same torque
+        assert_eq!(e1.theta_dot, e2.theta_dot);
+    }
+}

@@ -1,0 +1,12 @@
+//! Planar rigid-body physics substrate (the MuJoCo substitute).
+//!
+//! `vec2` — 2-D vector math; `world` — bodies, motorized revolute joints
+//! with limits, ground contacts with friction, sequential-impulse solver.
+//! Built from scratch per DESIGN.md §3: the paper's systems claims need a
+//! CPU-bound, learnable locomotion substrate, not bit-exact MuJoCo.
+
+pub mod vec2;
+pub mod world;
+
+pub use vec2::{v2, Vec2};
+pub use world::{Body, RevoluteJoint, World, WorldCfg};

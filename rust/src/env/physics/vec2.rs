@@ -1,0 +1,131 @@
+//! 2-D vector math for the planar rigid-body engine.
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub};
+
+/// Plain 2-D vector (f32; the engine is f32 end-to-end like the nets).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Vec2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+pub const fn v2(x: f32, y: f32) -> Vec2 {
+    Vec2 { x, y }
+}
+
+impl Vec2 {
+    pub const ZERO: Vec2 = v2(0.0, 0.0);
+
+    #[inline]
+    pub fn dot(self, o: Vec2) -> f32 {
+        self.x * o.x + self.y * o.y
+    }
+
+    /// 2-D cross product (scalar z-component).
+    #[inline]
+    pub fn cross(self, o: Vec2) -> f32 {
+        self.x * o.y - self.y * o.x
+    }
+
+    /// scalar ω × r  (angular velocity crossed with a lever arm).
+    #[inline]
+    pub fn cross_scalar(w: f32, r: Vec2) -> Vec2 {
+        v2(-w * r.y, w * r.x)
+    }
+
+    #[inline]
+    pub fn len(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    #[inline]
+    pub fn len2(self) -> f32 {
+        self.dot(self)
+    }
+
+    /// Rotate by angle (radians).
+    #[inline]
+    pub fn rotate(self, angle: f32) -> Vec2 {
+        let (s, c) = angle.sin_cos();
+        v2(c * self.x - s * self.y, s * self.x + c * self.y)
+    }
+
+    #[inline]
+    pub fn perp(self) -> Vec2 {
+        v2(-self.y, self.x)
+    }
+}
+
+impl Add for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn add(self, o: Vec2) -> Vec2 {
+        v2(self.x + o.x, self.y + o.y)
+    }
+}
+
+impl AddAssign for Vec2 {
+    #[inline]
+    fn add_assign(&mut self, o: Vec2) {
+        self.x += o.x;
+        self.y += o.y;
+    }
+}
+
+impl Sub for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn sub(self, o: Vec2) -> Vec2 {
+        v2(self.x - o.x, self.y - o.y)
+    }
+}
+
+impl Mul<f32> for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn mul(self, s: f32) -> Vec2 {
+        v2(self.x * s, self.y * s)
+    }
+}
+
+impl Neg for Vec2 {
+    type Output = Vec2;
+    #[inline]
+    fn neg(self) -> Vec2 {
+        v2(-self.x, -self.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_cross_known() {
+        let a = v2(1.0, 2.0);
+        let b = v2(3.0, 4.0);
+        assert_eq!(a.dot(b), 11.0);
+        assert_eq!(a.cross(b), -2.0);
+    }
+
+    #[test]
+    fn rotate_quarter_turn() {
+        let r = v2(1.0, 0.0).rotate(std::f32::consts::FRAC_PI_2);
+        assert!((r.x - 0.0).abs() < 1e-6 && (r.y - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cross_scalar_is_perp_times_w() {
+        let r = v2(2.0, 1.0);
+        let got = Vec2::cross_scalar(3.0, r);
+        assert_eq!(got, v2(-3.0, 6.0));
+    }
+
+    #[test]
+    fn arithmetic() {
+        assert_eq!(v2(1.0, 2.0) + v2(3.0, 4.0), v2(4.0, 6.0));
+        assert_eq!(v2(1.0, 2.0) - v2(3.0, 4.0), v2(-2.0, -2.0));
+        assert_eq!(v2(1.0, 2.0) * 2.0, v2(2.0, 4.0));
+        assert_eq!(-v2(1.0, -2.0), v2(-1.0, 2.0));
+    }
+}

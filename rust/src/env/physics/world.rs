@@ -1,0 +1,594 @@
+//! Planar rigid-body dynamics with sequential-impulse constraint solving.
+//!
+//! This is WALL-E's MuJoCo substitute (DESIGN.md §3): articulated chains of
+//! rod-shaped bodies connected by motorized revolute joints with angle
+//! limits, a static ground half-plane with Coulomb friction, semi-implicit
+//! Euler integration and Baumgarte stabilization — the standard Box2D-style
+//! formulation, specialized to what locomotion tasks need.
+//!
+//! The engine is deliberately *deterministic* (fixed iteration counts, no
+//! reordering): identical seeds give identical rollouts, which the
+//! coordinator's reproducibility tests rely on.
+
+use super::vec2::{v2, Vec2};
+
+/// A rigid rod (capsule) in the plane. The rod spans `[-half_len, half_len]`
+/// along its local x-axis; contacts test both endpoints against the ground.
+#[derive(Debug, Clone)]
+pub struct Body {
+    pub pos: Vec2,
+    pub angle: f32,
+    pub vel: Vec2,
+    pub omega: f32,
+    pub force: Vec2,
+    pub torque: f32,
+    pub half_len: f32,
+    pub radius: f32,
+    pub inv_mass: f32,
+    pub inv_inertia: f32,
+}
+
+impl Body {
+    /// A rod of given mass/half-length; inertia of a thin rod.
+    pub fn rod(pos: Vec2, angle: f32, mass: f32, half_len: f32, radius: f32) -> Body {
+        let inertia = mass * (2.0 * half_len) * (2.0 * half_len) / 12.0 + mass * radius * radius / 4.0;
+        Body {
+            pos,
+            angle,
+            vel: Vec2::ZERO,
+            omega: 0.0,
+            force: Vec2::ZERO,
+            torque: 0.0,
+            half_len,
+            radius,
+            inv_mass: 1.0 / mass,
+            inv_inertia: 1.0 / inertia,
+        }
+    }
+
+    /// World position of a point given in body-local coordinates.
+    pub fn world_point(&self, local: Vec2) -> Vec2 {
+        self.pos + local.rotate(self.angle)
+    }
+
+    /// Velocity of a world-space point attached to the body.
+    pub fn velocity_at(&self, world_point: Vec2) -> Vec2 {
+        self.vel + Vec2::cross_scalar(self.omega, world_point - self.pos)
+    }
+
+    pub fn endpoints(&self) -> [Vec2; 2] {
+        [
+            self.world_point(v2(-self.half_len, 0.0)),
+            self.world_point(v2(self.half_len, 0.0)),
+        ]
+    }
+}
+
+/// Motorized revolute joint with optional angle limits, expressed between
+/// body-local anchor points.
+#[derive(Debug, Clone)]
+pub struct RevoluteJoint {
+    pub body_a: usize,
+    pub body_b: usize,
+    pub anchor_a: Vec2,
+    pub anchor_b: Vec2,
+    /// Joint angle limits relative to the reference angle (lo <= hi).
+    pub limit: Option<(f32, f32)>,
+    /// Reference relative angle (angle_b - angle_a at assembly).
+    pub ref_angle: f32,
+    /// Motor torque applied this step (+ on B, - on A).
+    pub motor_torque: f32,
+    // solver state (warm starting)
+    impulse: Vec2,
+    limit_impulse: f32,
+}
+
+impl RevoluteJoint {
+    pub fn new(
+        body_a: usize,
+        body_b: usize,
+        anchor_a: Vec2,
+        anchor_b: Vec2,
+        ref_angle: f32,
+        limit: Option<(f32, f32)>,
+    ) -> Self {
+        Self {
+            body_a,
+            body_b,
+            anchor_a,
+            anchor_b,
+            limit,
+            ref_angle,
+            motor_torque: 0.0,
+            impulse: Vec2::ZERO,
+            limit_impulse: 0.0,
+        }
+    }
+
+    /// Current joint angle (relative angle minus reference).
+    pub fn angle(&self, bodies: &[Body]) -> f32 {
+        bodies[self.body_b].angle - bodies[self.body_a].angle - self.ref_angle
+    }
+
+    /// Current joint angular velocity.
+    pub fn speed(&self, bodies: &[Body]) -> f32 {
+        bodies[self.body_b].omega - bodies[self.body_a].omega
+    }
+}
+
+/// Contact solver state for one body endpoint against the ground.
+#[derive(Debug, Clone, Copy, Default)]
+struct ContactState {
+    normal_impulse: f32,
+    tangent_impulse: f32,
+}
+
+/// World parameters.
+#[derive(Debug, Clone)]
+pub struct WorldCfg {
+    pub gravity: f32,
+    pub ground_y: f32,
+    pub friction: f32,
+    pub velocity_iters: usize,
+    pub baumgarte: f32,
+    pub contact_slop: f32,
+    /// Linear/angular velocity damping per second (keeps chains tame).
+    pub damping: f32,
+    /// Hard velocity clamps — guard rails against solver blow-ups.
+    pub max_vel: f32,
+    pub max_omega: f32,
+}
+
+impl Default for WorldCfg {
+    fn default() -> Self {
+        Self {
+            gravity: -9.81,
+            ground_y: 0.0,
+            friction: 0.9,
+            velocity_iters: 12,
+            baumgarte: 0.2,
+            contact_slop: 0.005,
+            damping: 0.02,
+            max_vel: 50.0,
+            max_omega: 50.0,
+        }
+    }
+}
+
+/// The planar world: bodies + joints + ground.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub cfg: WorldCfg,
+    pub bodies: Vec<Body>,
+    pub joints: Vec<RevoluteJoint>,
+    contacts: Vec<ContactState>,
+}
+
+impl World {
+    pub fn new(cfg: WorldCfg) -> World {
+        World {
+            cfg,
+            bodies: Vec::new(),
+            joints: Vec::new(),
+            contacts: Vec::new(),
+        }
+    }
+
+    pub fn add_body(&mut self, b: Body) -> usize {
+        self.bodies.push(b);
+        self.contacts.push(ContactState::default());
+        self.contacts.push(ContactState::default());
+        self.bodies.len() - 1
+    }
+
+    pub fn add_joint(&mut self, j: RevoluteJoint) -> usize {
+        self.joints.push(j);
+        self.joints.len() - 1
+    }
+
+    /// Apply a motor torque to joint `j` for the next step.
+    pub fn set_motor(&mut self, j: usize, torque: f32) {
+        self.joints[j].motor_torque = torque;
+    }
+
+    /// Advance one fixed timestep.
+    pub fn step(&mut self, dt: f32) {
+        let cfg = self.cfg.clone();
+
+        // --- integrate velocities (gravity, applied forces, motors, damping)
+        for b in &mut self.bodies {
+            if b.inv_mass > 0.0 {
+                b.vel += (v2(0.0, cfg.gravity) + b.force * b.inv_mass) * dt;
+                b.omega += b.torque * b.inv_inertia * dt;
+                let d = 1.0 / (1.0 + cfg.damping * dt);
+                b.vel = b.vel * d;
+                b.omega *= d;
+            }
+            b.force = Vec2::ZERO;
+            b.torque = 0.0;
+        }
+        for j in 0..self.joints.len() {
+            let (a, bb, tau) = {
+                let jt = &self.joints[j];
+                (jt.body_a, jt.body_b, jt.motor_torque)
+            };
+            self.bodies[a].omega -= tau * self.bodies[a].inv_inertia * dt;
+            self.bodies[bb].omega += tau * self.bodies[bb].inv_inertia * dt;
+        }
+
+        // --- solve velocity constraints (joints + contacts), warm-started
+        for _ in 0..cfg.velocity_iters {
+            self.solve_joints(dt);
+            self.solve_contacts(dt);
+        }
+
+        // --- integrate positions + clamp runaway velocities
+        for b in &mut self.bodies {
+            let sp = b.vel.len();
+            if sp > cfg.max_vel {
+                b.vel = b.vel * (cfg.max_vel / sp);
+            }
+            b.omega = b.omega.clamp(-cfg.max_omega, cfg.max_omega);
+            b.pos += b.vel * dt;
+            b.angle += b.omega * dt;
+        }
+    }
+
+    fn solve_joints(&mut self, dt: f32) {
+        let baumgarte = self.cfg.baumgarte;
+        for j in 0..self.joints.len() {
+            let (ia, ib, anchor_a, anchor_b, limit, ref_angle) = {
+                let jt = &self.joints[j];
+                (
+                    jt.body_a,
+                    jt.body_b,
+                    jt.anchor_a,
+                    jt.anchor_b,
+                    jt.limit,
+                    jt.ref_angle,
+                )
+            };
+            let (pa, aa, va, wa, ima, iia) = {
+                let b = &self.bodies[ia];
+                (b.pos, b.angle, b.vel, b.omega, b.inv_mass, b.inv_inertia)
+            };
+            let (pb, ab, vb, wb, imb, iib) = {
+                let b = &self.bodies[ib];
+                (b.pos, b.angle, b.vel, b.omega, b.inv_mass, b.inv_inertia)
+            };
+            let ra = anchor_a.rotate(aa);
+            let rb = anchor_b.rotate(ab);
+
+            // Point-velocity constraint: vB + wB×rB - vA - wA×rA = -bias
+            let cdot = vb + Vec2::cross_scalar(wb, rb) - va - Vec2::cross_scalar(wa, ra);
+            let c = (pb + rb) - (pa + ra); // positional drift
+            let bias = c * (baumgarte / dt);
+
+            // K = (1/mA + 1/mB) I + iiA [ra]x[ra]x' + iiB [rb]x[rb]x'
+            let k11 = ima + imb + iia * ra.y * ra.y + iib * rb.y * rb.y;
+            let k12 = -iia * ra.x * ra.y - iib * rb.x * rb.y;
+            let k22 = ima + imb + iia * ra.x * ra.x + iib * rb.x * rb.x;
+            let det = k11 * k22 - k12 * k12;
+            if det.abs() < 1e-12 {
+                continue;
+            }
+            let rhs = -(cdot + bias);
+            let imp = v2(
+                (k22 * rhs.x - k12 * rhs.y) / det,
+                (k11 * rhs.y - k12 * rhs.x) / det,
+            );
+
+            let ba = &mut self.bodies[ia];
+            ba.vel = ba.vel - imp * ba.inv_mass;
+            ba.omega -= ba.inv_inertia * ra.cross(imp);
+            let bb = &mut self.bodies[ib];
+            bb.vel = bb.vel + imp * bb.inv_mass;
+            bb.omega += bb.inv_inertia * rb.cross(imp);
+            self.joints[j].impulse += imp;
+
+            // --- angle limits (inequality on relative angle)
+            if let Some((lo, hi)) = limit {
+                let angle = ab - aa - ref_angle;
+                let wrel = self.bodies[ib].omega - self.bodies[ia].omega;
+                let ii = iia + iib;
+                if ii > 0.0 {
+                    let mut imp_l = 0.0f32;
+                    if angle < lo {
+                        let cdot = wrel + (angle - lo) * (baumgarte / dt);
+                        imp_l = (-cdot / ii).max(0.0);
+                    } else if angle > hi {
+                        let cdot = wrel + (angle - hi) * (baumgarte / dt);
+                        imp_l = (-cdot / ii).min(0.0);
+                    }
+                    if imp_l != 0.0 {
+                        self.bodies[ia].omega -= iia * imp_l;
+                        self.bodies[ib].omega += iib * imp_l;
+                        self.joints[j].limit_impulse += imp_l;
+                    }
+                }
+            }
+        }
+    }
+
+    fn solve_contacts(&mut self, dt: f32) {
+        let cfg = &self.cfg;
+        for bi in 0..self.bodies.len() {
+            for (ei, ep) in self.bodies[bi].endpoints().iter().enumerate() {
+                let pen = (cfg.ground_y + self.bodies[bi].radius) - ep.y;
+                let ci = bi * 2 + ei;
+                if pen < 0.0 {
+                    self.contacts[ci] = ContactState::default();
+                    continue;
+                }
+                let b = &self.bodies[bi];
+                let r = *ep - b.pos;
+                let vn = b.velocity_at(*ep).y;
+                let kn = b.inv_mass + b.inv_inertia * r.x * r.x;
+                if kn <= 0.0 {
+                    continue;
+                }
+                let bias = -cfg.baumgarte / dt * (pen - cfg.contact_slop).max(0.0);
+                let mut dpn = -(vn + bias) / kn;
+                // clamp accumulated normal impulse to be repulsive
+                let old = self.contacts[ci].normal_impulse;
+                let new = (old + dpn).max(0.0);
+                dpn = new - old;
+                self.contacts[ci].normal_impulse = new;
+                {
+                    let b = &mut self.bodies[bi];
+                    b.vel.y += dpn * b.inv_mass;
+                    b.omega += b.inv_inertia * r.x * dpn;
+                }
+
+                // friction along x, clamped by μ * Pn
+                let b = &self.bodies[bi];
+                let vt = b.velocity_at(*ep).x;
+                let kt = b.inv_mass + b.inv_inertia * r.y * r.y;
+                if kt <= 0.0 {
+                    continue;
+                }
+                let mut dpt = -vt / kt;
+                let max_f = cfg.friction * self.contacts[ci].normal_impulse;
+                let old_t = self.contacts[ci].tangent_impulse;
+                let new_t = (old_t + dpt).clamp(-max_f, max_f);
+                dpt = new_t - old_t;
+                self.contacts[ci].tangent_impulse = new_t;
+                let b = &mut self.bodies[bi];
+                b.vel.x += dpt * b.inv_mass;
+                b.omega -= b.inv_inertia * r.y * dpt;
+            }
+        }
+    }
+
+    /// Reset all solver warm-start state (call on env reset).
+    pub fn reset_solver_state(&mut self) {
+        for c in &mut self.contacts {
+            *c = ContactState::default();
+        }
+        for j in &mut self.joints {
+            j.impulse = Vec2::ZERO;
+            j.limit_impulse = 0.0;
+        }
+    }
+
+    /// Total mechanical energy (diagnostics / tests).
+    pub fn energy(&self) -> f32 {
+        self.bodies
+            .iter()
+            .map(|b| {
+                let ke = if b.inv_mass > 0.0 {
+                    0.5 * b.vel.len2() / b.inv_mass + 0.5 * b.omega * b.omega / b.inv_inertia
+                } else {
+                    0.0
+                };
+                let pe = if b.inv_mass > 0.0 {
+                    -self.cfg.gravity * b.pos.y / b.inv_mass
+                } else {
+                    0.0
+                };
+                ke + pe
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DT: f32 = 0.01;
+
+    #[test]
+    fn free_fall_matches_kinematics() {
+        let mut w = World::new(WorldCfg {
+            ground_y: -1000.0,
+            damping: 0.0,
+            ..Default::default()
+        });
+        w.add_body(Body::rod(v2(0.0, 0.0), 0.0, 1.0, 0.5, 0.05));
+        for _ in 0..100 {
+            w.step(DT);
+        }
+        // semi-implicit Euler: y = -g * dt^2 * n(n+1)/2
+        let n = 100.0f32;
+        let want = -9.81 * DT * DT * n * (n + 1.0) / 2.0;
+        let got = w.bodies[0].pos.y;
+        assert!((got - want).abs() < 0.02, "got={got} want={want}");
+    }
+
+    #[test]
+    fn ground_stops_falling_body() {
+        let mut w = World::new(WorldCfg::default());
+        w.add_body(Body::rod(v2(0.0, 1.0), 0.0, 1.0, 0.5, 0.05));
+        for _ in 0..500 {
+            w.step(DT);
+        }
+        let b = &w.bodies[0];
+        // resting on ground: endpoint y ≈ ground + radius, tiny velocity
+        assert!((b.pos.y - b.radius).abs() < 0.02, "y={}", b.pos.y);
+        assert!(b.vel.len() < 0.05);
+    }
+
+    #[test]
+    fn revolute_joint_holds_bodies_together() {
+        let mut w = World::new(WorldCfg {
+            ground_y: -1000.0,
+            ..Default::default()
+        });
+        let a = w.add_body(Body::rod(v2(0.0, 0.0), 0.0, 5.0, 0.5, 0.05));
+        let b = w.add_body(Body::rod(v2(1.0, 0.0), 0.0, 1.0, 0.5, 0.05));
+        w.add_joint(RevoluteJoint::new(
+            a,
+            b,
+            v2(0.5, 0.0),
+            v2(-0.5, 0.0),
+            0.0,
+            None,
+        ));
+        // give B a kick; the joint must keep anchors coincident
+        w.bodies[b].vel = v2(3.0, 5.0);
+        for _ in 0..300 {
+            w.step(DT);
+        }
+        let pa = w.bodies[a].world_point(v2(0.5, 0.0));
+        let pb = w.bodies[b].world_point(v2(-0.5, 0.0));
+        assert!((pa - pb).len() < 0.02, "drift={}", (pa - pb).len());
+    }
+
+    #[test]
+    fn pendulum_swings_under_gravity() {
+        // rod pinned to a static body swings when released horizontally
+        let mut w = World::new(WorldCfg {
+            ground_y: -1000.0,
+            damping: 0.0,
+            ..Default::default()
+        });
+        let mut anchor = Body::rod(v2(0.0, 0.0), 0.0, 1.0, 0.1, 0.01);
+        anchor.inv_mass = 0.0;
+        anchor.inv_inertia = 0.0;
+        let a = w.add_body(anchor);
+        let b = w.add_body(Body::rod(v2(0.5, 0.0), 0.0, 1.0, 0.5, 0.02));
+        w.add_joint(RevoluteJoint::new(a, b, Vec2::ZERO, v2(-0.5, 0.0), 0.0, None));
+        for _ in 0..60 {
+            w.step(DT);
+        }
+        // should have swung downward (angle decreased, y below start)
+        assert!(w.bodies[b].pos.y < -0.05, "y={}", w.bodies[b].pos.y);
+    }
+
+    #[test]
+    fn joint_limits_bound_angle() {
+        let mut w = World::new(WorldCfg {
+            ground_y: -1000.0,
+            ..Default::default()
+        });
+        let mut anchor = Body::rod(v2(0.0, 0.0), 0.0, 1.0, 0.1, 0.01);
+        anchor.inv_mass = 0.0;
+        anchor.inv_inertia = 0.0;
+        let a = w.add_body(anchor);
+        let b = w.add_body(Body::rod(v2(0.5, 0.0), 0.0, 1.0, 0.5, 0.02));
+        let j = w.add_joint(RevoluteJoint::new(
+            a,
+            b,
+            Vec2::ZERO,
+            v2(-0.5, 0.0),
+            0.0,
+            Some((-0.5, 0.5)),
+        ));
+        // strong motor trying to spin it past the limit
+        for _ in 0..500 {
+            w.set_motor(j, 50.0);
+            w.step(DT);
+        }
+        let angle = w.joints[j].angle(&w.bodies);
+        assert!(angle < 0.7, "angle={angle} exceeded limit");
+    }
+
+    #[test]
+    fn motor_torque_spins_joint() {
+        let mut w = World::new(WorldCfg {
+            ground_y: -1000.0,
+            gravity: 0.0,
+            ..Default::default()
+        });
+        let mut anchor = Body::rod(v2(0.0, 0.0), 0.0, 1.0, 0.1, 0.01);
+        anchor.inv_mass = 0.0;
+        anchor.inv_inertia = 0.0;
+        let a = w.add_body(anchor);
+        let b = w.add_body(Body::rod(v2(0.5, 0.0), 0.0, 1.0, 0.5, 0.02));
+        let j = w.add_joint(RevoluteJoint::new(a, b, Vec2::ZERO, v2(-0.5, 0.0), 0.0, None));
+        for _ in 0..50 {
+            w.set_motor(j, 2.0);
+            w.step(DT);
+        }
+        assert!(w.joints[j].speed(&w.bodies) > 0.1);
+    }
+
+    #[test]
+    fn determinism_bitwise() {
+        let build = || {
+            let mut w = World::new(WorldCfg::default());
+            let a = w.add_body(Body::rod(v2(0.0, 0.6), 0.3, 2.0, 0.5, 0.05));
+            let b = w.add_body(Body::rod(v2(1.0, 0.6), -0.2, 1.0, 0.4, 0.05));
+            w.add_joint(RevoluteJoint::new(
+                a,
+                b,
+                v2(0.5, 0.0),
+                v2(-0.4, 0.0),
+                -0.5,
+                Some((-1.0, 1.0)),
+            ));
+            w
+        };
+        let mut w1 = build();
+        let mut w2 = build();
+        for i in 0..200 {
+            let tau = ((i as f32) * 0.1).sin();
+            w1.set_motor(0, tau);
+            w2.set_motor(0, tau);
+            w1.step(DT);
+            w2.step(DT);
+        }
+        assert_eq!(w1.bodies[0].pos, w2.bodies[0].pos);
+        assert_eq!(w1.bodies[1].angle, w2.bodies[1].angle);
+    }
+
+    #[test]
+    fn stack_stays_finite_under_abuse() {
+        // random-ish torques on a 3-link chain must not blow up
+        let mut w = World::new(WorldCfg::default());
+        let mut prev = w.add_body(Body::rod(v2(0.0, 0.5), 0.0, 3.0, 0.5, 0.05));
+        for i in 0..3 {
+            let nb = w.add_body(Body::rod(
+                v2(1.0 + i as f32, 0.5),
+                0.0,
+                1.0,
+                0.4,
+                0.05,
+            ));
+            w.add_joint(RevoluteJoint::new(
+                prev,
+                nb,
+                v2(0.5, 0.0),
+                v2(-0.4, 0.0),
+                0.0,
+                Some((-1.2, 1.2)),
+            ));
+            prev = nb;
+        }
+        let mut x = 0u64;
+        for _ in 0..2000 {
+            for j in 0..w.joints.len() {
+                x = crate::util::rng::splitmix64(x);
+                let tau = ((x % 200) as f32 / 100.0 - 1.0) * 10.0;
+                w.set_motor(j, tau);
+            }
+            w.step(DT);
+        }
+        for b in &w.bodies {
+            assert!(b.pos.x.is_finite() && b.pos.y.is_finite());
+            assert!(b.vel.len() <= w.cfg.max_vel + 1.0);
+            assert!(b.pos.y > -1.0, "sank through ground: {}", b.pos.y);
+        }
+    }
+}

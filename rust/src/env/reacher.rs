@@ -1,0 +1,210 @@
+//! Two-link planar reacher (gym `Reacher-v2` semantics, analytic dynamics).
+//!
+//! A 2-DoF arm in the horizontal plane (no gravity) must place its
+//! fingertip on a random target. Obs(10) = [cos q1, cos q2, sin q1, sin q2,
+//! target x, target y, q̇1, q̇2, (fingertip − target) x, y]; action =
+//! joint torques in [-1, 1] × gear; reward = −‖fingertip − target‖ −
+//! ‖action‖²; 50-step episodes.
+//!
+//! Dynamics: standard two-link manipulator equations
+//! M(q) q̈ + C(q, q̇) q̇ = τ, integrated semi-implicitly.
+
+use super::{Env, Step};
+use crate::util::rng::Pcg64;
+
+pub struct Reacher {
+    q: [f32; 2],
+    qd: [f32; 2],
+    target: [f32; 2],
+    l1: f32,
+    l2: f32,
+    m1: f32,
+    m2: f32,
+    gear: f32,
+    dt: f32,
+    damping: f32,
+}
+
+impl Default for Reacher {
+    fn default() -> Self {
+        Self {
+            q: [0.0; 2],
+            qd: [0.0; 2],
+            target: [0.1, 0.1],
+            l1: 0.1,
+            l2: 0.11,
+            m1: 0.05,
+            m2: 0.05,
+            gear: 0.05,
+            dt: 0.02,
+            damping: 1.0,
+        }
+    }
+}
+
+impl Reacher {
+    pub fn fingertip(&self) -> [f32; 2] {
+        let x = self.l1 * self.q[0].cos() + self.l2 * (self.q[0] + self.q[1]).cos();
+        let y = self.l1 * self.q[0].sin() + self.l2 * (self.q[0] + self.q[1]).sin();
+        [x, y]
+    }
+
+    fn write_obs(&self, obs: &mut [f32]) {
+        let tip = self.fingertip();
+        obs[0] = self.q[0].cos();
+        obs[1] = self.q[1].cos();
+        obs[2] = self.q[0].sin();
+        obs[3] = self.q[1].sin();
+        obs[4] = self.target[0];
+        obs[5] = self.target[1];
+        obs[6] = self.qd[0];
+        obs[7] = self.qd[1];
+        obs[8] = tip[0] - self.target[0];
+        obs[9] = tip[1] - self.target[1];
+    }
+}
+
+impl Env for Reacher {
+    fn obs_dim(&self) -> usize {
+        10
+    }
+
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        50
+    }
+
+    fn name(&self) -> &'static str {
+        "reacher"
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.q = [
+            rng.uniform(-std::f32::consts::PI, std::f32::consts::PI),
+            rng.uniform(-std::f32::consts::PI, std::f32::consts::PI),
+        ];
+        self.qd = [rng.uniform(-0.1, 0.1), rng.uniform(-0.1, 0.1)];
+        // target inside the reachable annulus
+        loop {
+            let t = [rng.uniform(-0.2, 0.2), rng.uniform(-0.2, 0.2)];
+            let r = (t[0] * t[0] + t[1] * t[1]).sqrt();
+            if r <= self.l1 + self.l2 {
+                self.target = t;
+                break;
+            }
+        }
+        self.write_obs(obs);
+    }
+
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let tau = [
+            action[0].clamp(-1.0, 1.0) * self.gear,
+            action[1].clamp(-1.0, 1.0) * self.gear,
+        ];
+
+        // two-link dynamics (point masses at link ends)
+        let (l1, l2, m1, m2) = (self.l1, self.l2, self.m1, self.m2);
+        let c2 = self.q[1].cos();
+        let s2 = self.q[1].sin();
+        let m11 = (m1 + m2) * l1 * l1 + m2 * l2 * l2 + 2.0 * m2 * l1 * l2 * c2;
+        let m12 = m2 * l2 * l2 + m2 * l1 * l2 * c2;
+        let m22 = m2 * l2 * l2;
+        // Coriolis/centrifugal
+        let h = m2 * l1 * l2 * s2;
+        let c1 = -h * self.qd[1] * (2.0 * self.qd[0] + self.qd[1]);
+        let c2t = h * self.qd[0] * self.qd[0];
+
+        let rhs1 = tau[0] - c1 - self.damping * 1e-3 * self.qd[0];
+        let rhs2 = tau[1] - c2t - self.damping * 1e-3 * self.qd[1];
+        let det = m11 * m22 - m12 * m12;
+        let qdd1 = (m22 * rhs1 - m12 * rhs2) / det;
+        let qdd2 = (m11 * rhs2 - m12 * rhs1) / det;
+
+        self.qd[0] = (self.qd[0] + qdd1 * self.dt).clamp(-50.0, 50.0);
+        self.qd[1] = (self.qd[1] + qdd2 * self.dt).clamp(-50.0, 50.0);
+        self.q[0] += self.qd[0] * self.dt;
+        self.q[1] += self.qd[1] * self.dt;
+
+        let tip = self.fingertip();
+        let dx = tip[0] - self.target[0];
+        let dy = tip[1] - self.target[1];
+        let dist = (dx * dx + dy * dy).sqrt();
+        let ctrl = action[0].clamp(-1.0, 1.0).powi(2) + action[1].clamp(-1.0, 1.0).powi(2);
+
+        self.write_obs(obs);
+        Step {
+            reward: -dist - ctrl * 0.1,
+            done: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingertip_at_stretched_pose() {
+        let r = Reacher {
+            q: [0.0, 0.0],
+            ..Default::default()
+        };
+        let tip = r.fingertip();
+        assert!((tip[0] - 0.21).abs() < 1e-6);
+        assert!(tip[1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn target_always_reachable() {
+        let mut env = Reacher::default();
+        let mut rng = Pcg64::new(0);
+        let mut obs = [0.0f32; 10];
+        for _ in 0..100 {
+            env.reset(&mut rng, &mut obs);
+            let r = (env.target[0].powi(2) + env.target[1].powi(2)).sqrt();
+            assert!(r <= env.l1 + env.l2 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn reward_improves_when_tip_approaches_target() {
+        let mut env = Reacher {
+            q: [0.3, 0.2],
+            qd: [0.0, 0.0],
+            target: [0.15, 0.1],
+            ..Default::default()
+        };
+        // reward with zero action at two distances: move tip onto target
+        let mut obs = [0.0f32; 10];
+        let far = env.step(&[0.0, 0.0], &mut obs).reward;
+        // teleport near target
+        env.q = [0.588, 0.0]; // tip ≈ (0.175, 0.116)
+        env.qd = [0.0, 0.0];
+        let near = env.step(&[0.0, 0.0], &mut obs).reward;
+        assert!(near > far, "near={near} far={far}");
+    }
+
+    #[test]
+    fn torque_accelerates_joints() {
+        let mut env = Reacher::default();
+        let mut obs = [0.0f32; 10];
+        env.step(&[1.0, 0.0], &mut obs);
+        assert!(env.qd[0] != 0.0);
+    }
+
+    #[test]
+    fn dynamics_stay_finite() {
+        let mut env = Reacher::default();
+        let mut rng = Pcg64::new(3);
+        let mut obs = [0.0f32; 10];
+        env.reset(&mut rng, &mut obs);
+        for i in 0..1000 {
+            let a = [((i as f32) * 0.7).sin(), ((i as f32) * 1.3).cos()];
+            env.step(&a, &mut obs);
+        }
+        assert!(obs.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,57 @@
+//! Name-based environment registry: maps preset names (the same names the
+//! AOT artifacts use) to constructors, so the launcher, benches and tests
+//! all build envs through one path.
+
+use super::cartpole::CartPole;
+use super::halfcheetah::HalfCheetah;
+use super::pendulum::Pendulum;
+use super::reacher::Reacher;
+use super::Env;
+
+/// All registered env names, in preset order.
+pub const ENV_NAMES: [&str; 4] = ["pendulum", "cartpole", "reacher", "halfcheetah"];
+
+/// Construct an env by name. Returns `None` for unknown names.
+pub fn make_env(name: &str) -> Option<Box<dyn Env>> {
+    match name {
+        "pendulum" => Some(Box::new(Pendulum::default())),
+        "cartpole" => Some(Box::new(CartPole::default())),
+        "reacher" => Some(Box::new(Reacher::default())),
+        "halfcheetah" => Some(Box::new(HalfCheetah::default())),
+        _ => None,
+    }
+}
+
+/// (obs_dim, act_dim) for a registered env.
+pub fn env_dims(name: &str) -> Option<(usize, usize)> {
+    let e = make_env(name)?;
+    Some((e.obs_dim(), e.act_dim()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_construct() {
+        for name in ENV_NAMES {
+            let env = make_env(name).unwrap();
+            assert_eq!(env.name(), name);
+            assert!(env.obs_dim() > 0 && env.act_dim() > 0);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(make_env("mujoco").is_none());
+    }
+
+    #[test]
+    fn dims_match_aot_presets() {
+        // must agree with python/compile/aot.py PRESETS
+        assert_eq!(env_dims("pendulum"), Some((3, 1)));
+        assert_eq!(env_dims("cartpole"), Some((4, 1)));
+        assert_eq!(env_dims("reacher"), Some((10, 2)));
+        assert_eq!(env_dims("halfcheetah"), Some((17, 6)));
+    }
+}

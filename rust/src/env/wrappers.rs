@@ -1,0 +1,166 @@
+//! Env wrappers: composable decorators over `Env` (reward scaling, action
+//! repeat, observation clipping, episode statistics).
+
+use super::{Env, Step};
+use crate::util::rng::Pcg64;
+
+/// Scale rewards by a constant (common PPO trick for wide-range rewards).
+pub struct RewardScale<E: Env> {
+    pub inner: E,
+    pub scale: f32,
+}
+
+impl<E: Env> Env for RewardScale<E> {
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+    fn act_dim(&self) -> usize {
+        self.inner.act_dim()
+    }
+    fn max_episode_steps(&self) -> usize {
+        self.inner.max_episode_steps()
+    }
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.inner.reset(rng, obs)
+    }
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let s = self.inner.step(action, obs);
+        Step {
+            reward: s.reward * self.scale,
+            done: s.done,
+        }
+    }
+}
+
+/// Repeat each action `k` times, summing rewards (frame-skip at the
+/// wrapper level; terminal cuts the repeat short).
+pub struct ActionRepeat<E: Env> {
+    pub inner: E,
+    pub k: usize,
+}
+
+impl<E: Env> Env for ActionRepeat<E> {
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+    fn act_dim(&self) -> usize {
+        self.inner.act_dim()
+    }
+    fn max_episode_steps(&self) -> usize {
+        (self.inner.max_episode_steps() + self.k - 1) / self.k
+    }
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.inner.reset(rng, obs)
+    }
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let mut total = 0.0;
+        for _ in 0..self.k {
+            let s = self.inner.step(action, obs);
+            total += s.reward;
+            if s.done {
+                return Step {
+                    reward: total,
+                    done: true,
+                };
+            }
+        }
+        Step {
+            reward: total,
+            done: false,
+        }
+    }
+}
+
+/// Clip observations into [-bound, bound] (guards the nets against the
+/// rare physics-solver spike).
+pub struct ObsClip<E: Env> {
+    pub inner: E,
+    pub bound: f32,
+}
+
+impl<E: Env> Env for ObsClip<E> {
+    fn obs_dim(&self) -> usize {
+        self.inner.obs_dim()
+    }
+    fn act_dim(&self) -> usize {
+        self.inner.act_dim()
+    }
+    fn max_episode_steps(&self) -> usize {
+        self.inner.max_episode_steps()
+    }
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+    fn reset(&mut self, rng: &mut Pcg64, obs: &mut [f32]) {
+        self.inner.reset(rng, obs);
+        for v in obs.iter_mut() {
+            *v = v.clamp(-self.bound, self.bound);
+        }
+    }
+    fn step(&mut self, action: &[f32], obs: &mut [f32]) -> Step {
+        let s = self.inner.step(action, obs);
+        for v in obs.iter_mut() {
+            *v = v.clamp(-self.bound, self.bound);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::pendulum::Pendulum;
+
+    #[test]
+    fn reward_scale_multiplies() {
+        let mut env = RewardScale {
+            inner: Pendulum::default(),
+            scale: 0.5,
+        };
+        let mut base = Pendulum::default();
+        let mut rng1 = Pcg64::new(0);
+        let mut rng2 = Pcg64::new(0);
+        let mut o1 = [0.0f32; 3];
+        let mut o2 = [0.0f32; 3];
+        env.reset(&mut rng1, &mut o1);
+        base.reset(&mut rng2, &mut o2);
+        let r1 = env.step(&[0.3], &mut o1).reward;
+        let r2 = base.step(&[0.3], &mut o2).reward;
+        assert!((r1 - 0.5 * r2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn action_repeat_sums_rewards() {
+        let mut env = ActionRepeat {
+            inner: Pendulum::default(),
+            k: 4,
+        };
+        let mut rng = Pcg64::new(0);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        let r = env.step(&[0.0], &mut obs).reward;
+        assert!(r <= 0.0); // 4 summed costs
+        assert_eq!(env.max_episode_steps(), 50);
+    }
+
+    #[test]
+    fn obs_clip_bounds_observations() {
+        let mut env = ObsClip {
+            inner: Pendulum::default(),
+            bound: 0.5,
+        };
+        let mut rng = Pcg64::new(0);
+        let mut obs = [0.0f32; 3];
+        env.reset(&mut rng, &mut obs);
+        for _ in 0..50 {
+            env.step(&[1.0], &mut obs);
+            assert!(obs.iter().all(|v| v.abs() <= 0.5));
+        }
+    }
+}

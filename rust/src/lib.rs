@@ -1,0 +1,28 @@
+//! # WALL-E: An Efficient Reinforcement Learning Research Framework
+//!
+//! Reproduction of Xu, Zhang & Zhao (2018): parallel rollout samplers
+//! feeding an asynchronous PPO learner through an experience queue, with
+//! policy parameters broadcast back through a policy queue.
+//!
+//! Three-layer architecture (DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: sampler workers, queues,
+//!   learner, metrics, CLI, plus every substrate (physics envs, native nn,
+//!   JSON/CLI/RNG utilities).
+//! * **L2 (JAX, build-time)** — policy/value networks + PPO/DDPG update
+//!   rules, AOT-lowered to HLO text artifacts.
+//! * **L1 (Pallas, build-time)** — fused dense, GAE-scan and Adam kernels
+//!   inside those artifacts.
+//!
+//! At runtime Python is never on the path: `runtime::XlaBackend` loads the
+//! HLO artifacts via PJRT; `runtime::NativeBackend` is the artifact-free
+//! pure-Rust mirror used for tests and quick starts.
+
+pub mod algo;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod env;
+pub mod nn;
+pub mod replay;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,263 @@
+//! `walle` — the WALL-E launcher.
+//!
+//! Subcommands:
+//!   train    train a policy (PPO or DDPG) with N parallel samplers
+//!   eval     evaluate a saved policy checkpoint deterministically
+//!   figures  regenerate the paper's figures (3–7) as CSV series
+//!   info     inspect artifacts / presets / config
+//!
+//! Examples:
+//!   walle train --env halfcheetah --samplers 10 --iterations 200 --backend xla
+//!   walle train --env pendulum --algo ddpg --backend native
+//!   walle figures --all --out-dir results
+//!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
+
+use walle::bench::figures;
+use walle::config::{Algo, Backend, TrainConfig};
+use walle::coordinator::metrics::MetricsLog;
+use walle::coordinator::{eval, orchestrator};
+use walle::env::registry::{make_env, ENV_NAMES};
+use walle::runtime::make_factory;
+use walle::util::cli::Args;
+use walle::util::logging::{set_level, Level};
+
+const USAGE: &str = "\
+walle — An Efficient Reinforcement Learning Research Framework
+
+USAGE:
+  walle <COMMAND> [FLAGS]
+
+COMMANDS:
+  train     train a policy with N parallel rollout samplers
+  eval      deterministically evaluate a saved checkpoint
+  figures   regenerate the paper's evaluation figures as CSVs
+  info      show presets, artifacts and the resolved config
+
+COMMON FLAGS:
+  --env NAME             pendulum|cartpole|reacher|halfcheetah
+  --backend NAME         xla|native (default native)
+  --config FILE          load a JSON TrainConfig (flags override)
+  --seed N               root RNG seed
+  --verbose / --quiet    log level
+
+TRAIN FLAGS:
+  --samplers N           parallel sampler workers (paper's N, default 10)
+  --iterations N         training iterations
+  --samples-per-iter N   samples per iteration (paper: 20000)
+  --algo ppo|ddpg        learner algorithm
+  --sync                 synchronous barrier mode (ablation)
+  --learner-shards N     data-parallel learner shards (§6.2)
+  --out-dir DIR          write metrics.csv + params.bin + config.json
+
+FIGURES FLAGS:
+  --all | --fig N        which figure(s): 3,4,5,6,7
+  --ns LIST              sampler counts, e.g. 1,2,4,6,8,10
+  --iterations N         iterations per point
+  --out-dir DIR          output directory (default results)
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("verbose") {
+        set_level(Level::Debug);
+    } else if args.has("quiet") {
+        set_level(Level::Warn);
+    }
+    let code = match args.command.as_deref() {
+        Some("train") => run_train(&args),
+        Some("eval") => run_eval(&args),
+        Some("figures") => run_figures(&args),
+        Some("info") => run_info(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Build a TrainConfig from --config + flag overrides.
+fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::load(path)?,
+        None => TrainConfig::preset(&args.str_or("env", "halfcheetah")),
+    };
+    if let Some(env) = args.get("env") {
+        cfg.env = env.to_string();
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a).ok_or_else(|| anyhow::anyhow!("bad --algo {a:?}"))?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = Backend::parse(b).ok_or_else(|| anyhow::anyhow!("bad --backend {b:?}"))?;
+    }
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.samplers = args.usize_or("samplers", cfg.samplers)?;
+    cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
+    cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
+    cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;
+    cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
+    cfg.learner_shards = args.usize_or("learner-shards", cfg.learner_shards)?;
+    cfg.ppo.lr = args.f32_or("lr", cfg.ppo.lr)?;
+    cfg.ppo.epochs = args.usize_or("epochs", cfg.ppo.epochs)?;
+    if args.has("sync") {
+        cfg.async_mode = false;
+    }
+    if let Some(d) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn run_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let out_dir = args.str_or("out-dir", &format!("runs/{}", cfg.env));
+    std::fs::create_dir_all(&out_dir)?;
+    cfg.save(&format!("{out_dir}/config.json"))?;
+
+    walle::log_info!(
+        "training {} with {} samplers ({} mode, {} backend), {} samples/iter",
+        cfg.env,
+        cfg.samplers,
+        if cfg.async_mode { "async" } else { "sync" },
+        cfg.backend.name(),
+        cfg.samples_per_iter
+    );
+    let factory = make_factory(&cfg)?;
+    let mut log = MetricsLog::new().with_csv(&format!("{out_dir}/metrics.csv"))?;
+    let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+
+    save_params(&format!("{out_dir}/params.bin"), &result.final_params)?;
+    let (pushed, popped, pblk, cblk) = result.queue_stats;
+    walle::log_info!(
+        "done: {} iterations, queue pushed {pushed} popped {popped}, \
+         producer blocked {:.2}s consumer blocked {:.2}s; saved {out_dir}/params.bin",
+        result.metrics.len(),
+        pblk.as_secs_f64(),
+        cblk.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn run_eval(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    let ckpt = args.require("checkpoint")?;
+    let params = load_params(ckpt)?;
+    let factory = make_factory(&cfg)?;
+    anyhow::ensure!(
+        params.len() == factory.ppo_param_count(),
+        "checkpoint has {} params, preset expects {}",
+        params.len(),
+        factory.ppo_param_count()
+    );
+    let mut env = make_env(&cfg.env).unwrap();
+    let mut actor = factory.make_actor()?;
+    let episodes = args.usize_or("episodes", 10)?;
+    let norm = walle::algo::normalizer::NormSnapshot::identity(factory.obs_dim());
+    let r = eval::evaluate(
+        env.as_mut(),
+        actor.as_mut(),
+        &params,
+        &norm,
+        episodes,
+        cfg.seed,
+    )?;
+    println!(
+        "eval {}: mean return {:.2} ± {:.2} over {} episodes (mean len {:.0})",
+        cfg.env, r.mean_return, r.std_return, episodes, r.mean_len
+    );
+    Ok(())
+}
+
+fn run_figures(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = config_from(args)?;
+    // figure sweeps need only a handful of steady-state iterations per
+    // point; the training default (100) would make `figures --all` take
+    // hours. Explicit --iterations still wins.
+    if args.get("iterations").is_none() {
+        cfg.iterations = 4;
+    }
+    let out_dir = args.str_or("out-dir", "results");
+    let ns = args.usize_list_or("ns", &[1, 2, 4, 6, 8, 10])?;
+    let which: Vec<usize> = if args.has("all") || !args.has("fig") {
+        vec![3, 4, 5, 6, 7]
+    } else {
+        vec![args.usize_or("fig", 4)?]
+    };
+    let factory_for = |c: &TrainConfig| make_factory(c);
+
+    if which.iter().any(|f| (4..=7).contains(f)) {
+        let skip = if cfg.iterations > 2 { 1 } else { 0 };
+        let rows = figures::scaling_sweep(&cfg, &factory_for, &ns, skip)?;
+        figures::print_sweep_table(&rows, &format!("Figs 4-7 sweep ({})", cfg.env));
+        figures::write_sweep_csvs(&rows, &out_dir)?;
+        walle::log_info!("wrote fig4..fig7 CSVs to {out_dir}/");
+    }
+    if which.contains(&3) {
+        let fig3_ns = if ns.contains(&10) { vec![1, 10] } else { ns.clone() };
+        let curves = figures::fig3_return_curves(&cfg, &factory_for, &fig3_ns)?;
+        figures::write_fig3_csv(&curves, &out_dir)?;
+        for (n, ms) in &curves {
+            let last = ms.last().map(|m| m.mean_return).unwrap_or(f32::NAN);
+            walle::log_info!("fig3 N={n}: final return {last:.2}");
+        }
+        walle::log_info!("wrote fig3 CSV to {out_dir}/");
+    }
+    Ok(())
+}
+
+fn run_info(args: &Args) -> anyhow::Result<()> {
+    let env = args.str_or("env", "halfcheetah");
+    println!("registered envs: {ENV_NAMES:?}");
+    if let Some((o, a)) = walle::env::registry::env_dims(&env) {
+        println!("{env}: obs_dim={o} act_dim={a}");
+    }
+    let cfg = config_from(args)?;
+    println!("resolved config:\n{}", cfg.to_json());
+    let artifacts_dir = cfg.artifacts_dir.clone();
+    match walle::runtime::artifacts::PresetMeta::load(&artifacts_dir, &env) {
+        Ok(meta) => {
+            println!(
+                "artifacts ({artifacts_dir}/{env}): {} params, act_batch {}, minibatch {}, horizon {}",
+                meta.param_count, meta.act_batch, meta.minibatch, meta.horizon
+            );
+        }
+        Err(e) => println!("artifacts not available: {e:#}"),
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- checkpoint I/O
+
+/// Save a flat f32 vector as little-endian bytes.
+fn save_params(path: &str, params: &[f32]) -> anyhow::Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn load_params(path: &str) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "corrupt checkpoint");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,125 @@
+//! Native Adam optimizer over a flat f32 vector — the exact mirror of the
+//! L1 `adam_step` Pallas kernel (`python/compile/kernels/adam.py`), used by
+//! the `NativeBackend` and as the oracle in XLA-vs-native parity tests.
+
+/// Adam hyper-parameters (defaults match the AOT artifacts).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamCfg {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamCfg {
+    fn default() -> Self {
+        Self {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+/// Adam state for one flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamCfg,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize, cfg: AdamCfg) -> Self {
+        Self {
+            cfg,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// In-place update of `params` with gradient `grad`; increments t.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let t = self.t as f32;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + self.cfg.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_grad_is_noop() {
+        let mut adam = Adam::new(4, AdamCfg::default());
+        let mut p = vec![1.0, -2.0, 3.0, 0.5];
+        let orig = p.clone();
+        adam.step(&mut p, &[0.0; 4], 1e-3);
+        for (a, b) in p.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        // f(p) = ||p||^2, grad = 2p
+        let mut adam = Adam::new(8, AdamCfg::default());
+        let mut p: Vec<f32> = (0..8).map(|i| (i as f32 - 3.5) * 0.5).collect();
+        let start: f32 = p.iter().map(|x| x * x).sum();
+        for _ in 0..300 {
+            let g: Vec<f32> = p.iter().map(|x| 2.0 * x).collect();
+            adam.step(&mut p, &g, 0.05);
+        }
+        let end: f32 = p.iter().map(|x| x * x).sum();
+        assert!(end < 0.01 * start, "start={start} end={end}");
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // with bias correction, |Δp| of the very first step ≈ lr
+        let mut adam = Adam::new(1, AdamCfg::default());
+        let mut p = vec![0.0f32];
+        adam.step(&mut p, &[123.0], 1e-2);
+        assert!((p[0].abs() - 1e-2).abs() < 1e-4, "p={}", p[0]);
+    }
+
+    #[test]
+    fn matches_reference_formula() {
+        // hand-rolled single-step reference (same formula as kernels/ref.py)
+        let cfg = AdamCfg::default();
+        let mut adam = Adam::new(3, cfg);
+        let mut p = vec![1.0f32, -1.0, 0.2];
+        let g = vec![0.3f32, -0.1, 0.7];
+        let lr = 3e-4;
+        let want: Vec<f32> = p
+            .iter()
+            .zip(&g)
+            .map(|(&pi, &gi)| {
+                let m = (1.0 - cfg.beta1) * gi;
+                let v = (1.0 - cfg.beta2) * gi * gi;
+                let mhat = m / (1.0 - cfg.beta1);
+                let vhat = v / (1.0 - cfg.beta2);
+                pi - lr * mhat / (vhat.sqrt() + cfg.eps)
+            })
+            .collect();
+        adam.step(&mut p, &g, lr);
+        for (a, b) in p.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Flat-parameter layout: the Rust mirror of `python/compile/model.py`'s
+//! `param_spec` / `actor_spec` / `critic_spec`.
+//!
+//! Both sides must agree byte-for-byte on (name, shape, offset, init) —
+//! the AOT `meta.json` carries the Python side's layout and
+//! `runtime::artifacts` cross-checks it against this module at startup, so
+//! a drift fails fast instead of silently mis-slicing parameters.
+
+use crate::util::rng::Pcg64;
+
+/// Initialization scheme for one tensor (mirrors meta.json `init`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Glorot,
+    Zeros,
+    Const(f32),
+}
+
+impl Init {
+    pub fn parse(s: &str) -> Option<Init> {
+        match s {
+            "glorot" => Some(Init::Glorot),
+            "zeros" => Some(Init::Zeros),
+            _ => s.strip_prefix("const:").and_then(|v| v.parse().ok().map(Init::Const)),
+        }
+    }
+}
+
+/// One tensor inside a flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub init: Init,
+}
+
+impl ParamEntry {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered layout of a flat parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamLayout {
+    pub entries: Vec<ParamEntry>,
+}
+
+impl ParamLayout {
+    pub fn total(&self) -> usize {
+        self.entries.iter().map(|e| e.size()).sum()
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ParamEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Slice of `flat` for entry `name`.
+    pub fn view<'a>(&self, flat: &'a [f32], name: &str) -> Option<&'a [f32]> {
+        let e = self.find(name)?;
+        Some(&flat[e.offset..e.offset + e.size()])
+    }
+
+    /// Initialize a fresh flat parameter vector (Glorot / zeros / const —
+    /// the same schemes as python `model.init_flat`, with WALL-E's own RNG).
+    pub fn init_flat(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.total()];
+        for e in &self.entries {
+            let dst = &mut flat[e.offset..e.offset + e.size()];
+            match e.init {
+                Init::Zeros => {}
+                Init::Const(v) => dst.fill(v),
+                Init::Glorot => {
+                    assert_eq!(e.shape.len(), 2, "glorot needs a 2-D tensor");
+                    let (fi, fo) = (e.shape[0] as f32, e.shape[1] as f32);
+                    let bound = (6.0 / (fi + fo)).sqrt();
+                    rng.fill_uniform(dst, -bound, bound);
+                }
+            }
+        }
+        flat
+    }
+}
+
+fn mlp_entries(
+    prefix: &str,
+    in_dim: usize,
+    hidden: &[usize],
+    out_dim: usize,
+    offset: &mut usize,
+    entries: &mut Vec<ParamEntry>,
+) {
+    let mut dims = vec![in_dim];
+    dims.extend_from_slice(hidden);
+    dims.push(out_dim);
+    for i in 0..dims.len() - 1 {
+        let (fi, fo) = (dims[i], dims[i + 1]);
+        let name = if i < hidden.len() {
+            format!("{prefix}/l{i}")
+        } else {
+            format!("{prefix}/out")
+        };
+        entries.push(ParamEntry {
+            name: format!("{name}/w"),
+            shape: vec![fi, fo],
+            offset: *offset,
+            init: Init::Glorot,
+        });
+        *offset += fi * fo;
+        entries.push(ParamEntry {
+            name: format!("{name}/b"),
+            shape: vec![fo],
+            offset: *offset,
+            init: Init::Zeros,
+        });
+        *offset += fo;
+    }
+}
+
+/// PPO layout: policy MLP, log_std, value MLP (== python `param_spec`).
+pub fn ppo_layout(obs_dim: usize, act_dim: usize, hidden: &[usize]) -> ParamLayout {
+    let mut entries = Vec::new();
+    let mut off = 0;
+    mlp_entries("pi", obs_dim, hidden, act_dim, &mut off, &mut entries);
+    entries.push(ParamEntry {
+        name: "pi/log_std".into(),
+        shape: vec![act_dim],
+        offset: off,
+        init: Init::Const(-0.5),
+    });
+    off += act_dim;
+    mlp_entries("vf", obs_dim, hidden, 1, &mut off, &mut entries);
+    ParamLayout { entries }
+}
+
+/// DDPG actor layout (== python `actor_spec`).
+pub fn actor_layout(obs_dim: usize, act_dim: usize, hidden: &[usize]) -> ParamLayout {
+    let mut entries = Vec::new();
+    let mut off = 0;
+    mlp_entries("actor", obs_dim, hidden, act_dim, &mut off, &mut entries);
+    ParamLayout { entries }
+}
+
+/// DDPG critic layout (== python `critic_spec`; input = concat(obs, act)).
+pub fn critic_layout(obs_dim: usize, act_dim: usize, hidden: &[usize]) -> ParamLayout {
+    let mut entries = Vec::new();
+    let mut off = 0;
+    mlp_entries("critic", obs_dim + act_dim, hidden, 1, &mut off, &mut entries);
+    ParamLayout { entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halfcheetah_count_matches_python() {
+        // asserted on the python side in test_model.py as well
+        let l = ppo_layout(17, 6, &[64, 64]);
+        let pi = 17 * 64 + 64 + 64 * 64 + 64 + 64 * 6 + 6 + 6;
+        let vf = 17 * 64 + 64 + 64 * 64 + 64 + 64 + 1;
+        assert_eq!(l.total(), pi + vf);
+    }
+
+    #[test]
+    fn offsets_contiguous() {
+        let l = ppo_layout(3, 2, &[16, 16]);
+        let mut off = 0;
+        for e in &l.entries {
+            assert_eq!(e.offset, off, "{}", e.name);
+            off += e.size();
+        }
+        assert_eq!(off, l.total());
+    }
+
+    #[test]
+    fn entry_names_match_python_order() {
+        let l = ppo_layout(3, 1, &[8, 8]);
+        let names: Vec<&str> = l.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "pi/l0/w", "pi/l0/b", "pi/l1/w", "pi/l1/b", "pi/out/w", "pi/out/b",
+                "pi/log_std",
+                "vf/l0/w", "vf/l0/b", "vf/l1/w", "vf/l1/b", "vf/out/w", "vf/out/b",
+            ]
+        );
+    }
+
+    #[test]
+    fn init_respects_schemes() {
+        let l = ppo_layout(4, 2, &[8, 8]);
+        let mut rng = Pcg64::new(0);
+        let flat = l.init_flat(&mut rng);
+        // log_std == -0.5 everywhere
+        let ls = l.view(&flat, "pi/log_std").unwrap();
+        assert!(ls.iter().all(|&v| (v + 0.5).abs() < 1e-6));
+        // biases zero
+        let b = l.view(&flat, "pi/l0/b").unwrap();
+        assert!(b.iter().all(|&v| v == 0.0));
+        // weights inside glorot bound and non-degenerate
+        let w = l.view(&flat, "pi/l0/w").unwrap();
+        let bound = (6.0f32 / (4.0 + 8.0)).sqrt();
+        assert!(w.iter().all(|&v| v.abs() <= bound + 1e-6));
+        assert!(w.iter().any(|&v| v.abs() > 0.01));
+    }
+
+    #[test]
+    fn actor_critic_counts() {
+        assert_eq!(
+            actor_layout(17, 6, &[64, 64]).total(),
+            17 * 64 + 64 + 64 * 64 + 64 + 64 * 6 + 6
+        );
+        assert_eq!(
+            critic_layout(17, 6, &[64, 64]).total(),
+            23 * 64 + 64 + 64 * 64 + 64 + 64 + 1
+        );
+    }
+
+    #[test]
+    fn init_parse_round_trip() {
+        assert_eq!(Init::parse("glorot"), Some(Init::Glorot));
+        assert_eq!(Init::parse("zeros"), Some(Init::Zeros));
+        assert_eq!(Init::parse("const:-0.5"), Some(Init::Const(-0.5)));
+        assert_eq!(Init::parse("bogus"), None);
+    }
+}

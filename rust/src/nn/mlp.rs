@@ -1,0 +1,651 @@
+//! Native (pure-Rust) policy/value networks with manual backprop.
+//!
+//! This is the exact mathematical mirror of `python/compile/model.py` over
+//! the same flat-parameter layout (`nn::layout`): tanh MLP Gaussian policy
+//! with state-independent log-std, tanh MLP value function, PPO
+//! clipped-surrogate loss, and the DDPG actor/critic. It serves three
+//! roles: (1) the artifact-free `NativeBackend` so `cargo test` and quick
+//! experiments run without Python, (2) an independent oracle the XLA
+//! backend is integration-tested against, (3) the baseline for perf
+//! comparisons in the benches.
+
+use crate::nn::layout::ParamLayout;
+use crate::nn::tensor::{
+    act_grad_from_out, add_bias, apply_act, col_sums, matmul, matmul_nt, matmul_tn,
+    mul_inplace, Act, Mat,
+};
+
+pub const LOG_2PI: f32 = 1.837877066409345;
+
+/// Network hyper-shape (which layers exist inside the flat vector).
+#[derive(Debug, Clone)]
+pub struct NetShape {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: Vec<usize>,
+}
+
+impl NetShape {
+    pub fn new(obs_dim: usize, act_dim: usize, hidden: &[usize]) -> Self {
+        Self {
+            obs_dim,
+            act_dim,
+            hidden: hidden.to_vec(),
+        }
+    }
+}
+
+fn entry<'a>(layout: &ParamLayout, flat: &'a [f32], name: &str) -> (&'a [f32], Vec<usize>) {
+    let e = layout
+        .find(name)
+        .unwrap_or_else(|| panic!("missing param {name}"));
+    (&flat[e.offset..e.offset + e.size()], e.shape.clone())
+}
+
+fn weight(layout: &ParamLayout, flat: &[f32], name: &str) -> Mat {
+    let (data, shape) = entry(layout, flat, name);
+    Mat::from_vec(shape[0], shape[1], data.to_vec())
+}
+
+/// Forward through an MLP prefix; returns every layer *output* (post-
+/// activation), input first — the residuals manual backprop needs.
+fn mlp_forward(
+    layout: &ParamLayout,
+    flat: &[f32],
+    prefix: &str,
+    x: &Mat,
+    n_hidden: usize,
+    hidden_act: Act,
+    out_act: Act,
+) -> Vec<Mat> {
+    let mut acts = vec![x.clone()];
+    for i in 0..=n_hidden {
+        let name = if i < n_hidden {
+            format!("{prefix}/l{i}")
+        } else {
+            format!("{prefix}/out")
+        };
+        let w = weight(layout, flat, &format!("{name}/w"));
+        let (b, _) = entry(layout, flat, &format!("{name}/b"));
+        let mut y = matmul(acts.last().unwrap(), &w);
+        add_bias(&mut y, b);
+        apply_act(&mut y, if i < n_hidden { hidden_act } else { out_act });
+        acts.push(y);
+    }
+    acts
+}
+
+/// Backprop through an MLP prefix given the forward residuals. Writes
+/// dW/db into `grad` (accumulating) and returns d(input).
+fn mlp_backward(
+    layout: &ParamLayout,
+    flat: &[f32],
+    prefix: &str,
+    acts: &[Mat],
+    mut dy: Mat,
+    n_hidden: usize,
+    hidden_act: Act,
+    out_act: Act,
+    grad: &mut [f32],
+) -> Mat {
+    for i in (0..=n_hidden).rev() {
+        let name = if i < n_hidden {
+            format!("{prefix}/l{i}")
+        } else {
+            format!("{prefix}/out")
+        };
+        let y = &acts[i + 1];
+        let x = &acts[i];
+        let g = act_grad_from_out(y, if i < n_hidden { hidden_act } else { out_act });
+        mul_inplace(&mut dy, &g); // dz = dy * act'(y)
+        let dw = matmul_tn(x, &dy); // x^T @ dz
+        let db = col_sums(&dy);
+        let we = layout.find(&format!("{name}/w")).unwrap();
+        let be = layout.find(&format!("{name}/b")).unwrap();
+        for (o, v) in grad[we.offset..we.offset + we.size()]
+            .iter_mut()
+            .zip(&dw.data)
+        {
+            *o += v;
+        }
+        for (o, v) in grad[be.offset..be.offset + be.size()].iter_mut().zip(&db) {
+            *o += v;
+        }
+        // propagate to the layer input (at i == 0 this is d(network input),
+        // which DDPG's actor update needs as dQ/da)
+        let w = weight(layout, flat, &format!("{name}/w"));
+        dy = matmul_nt(&dy, &w); // dz @ w^T
+    }
+    dy
+}
+
+// ---------------------------------------------------------------------------
+// PPO policy/value
+// ---------------------------------------------------------------------------
+
+/// Output of one batched `act` call (mirrors the AOT `act` artifact).
+#[derive(Debug, Clone)]
+pub struct ActOut {
+    pub action: Mat,
+    pub logp: Vec<f32>,
+    pub value: Vec<f32>,
+    pub mean: Mat,
+}
+
+/// mean[B,A], log_std[A], value[B] for a batch of observations.
+pub fn policy_value(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+) -> (Mat, Vec<f32>, Vec<f32>) {
+    let nh = shape.hidden.len();
+    let pi = mlp_forward(layout, flat, "pi", obs, nh, Act::Tanh, Act::Id);
+    let vf = mlp_forward(layout, flat, "vf", obs, nh, Act::Tanh, Act::Id);
+    let mean = pi.last().unwrap().clone();
+    let value = vf.last().unwrap().data.clone();
+    let (log_std, _) = entry(layout, flat, "pi/log_std");
+    (mean, log_std.to_vec(), value)
+}
+
+/// Diagonal-Gaussian log-density summed over actions.
+pub fn gaussian_logp(a: &Mat, mean: &Mat, log_std: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0; a.rows];
+    for r in 0..a.rows {
+        let mut acc = 0.0f32;
+        for c in 0..a.cols {
+            let z = (a.at(r, c) - mean.at(r, c)) * (-log_std[c]).exp();
+            acc += -0.5 * z * z - log_std[c] - 0.5 * LOG_2PI;
+        }
+        out[r] = acc;
+    }
+    out
+}
+
+/// Entropy of the (state-independent) Gaussian.
+pub fn gaussian_entropy(log_std: &[f32]) -> f32 {
+    log_std.iter().map(|ls| ls + 0.5 * (LOG_2PI + 1.0)).sum()
+}
+
+/// Sampler entry point: action = mean + exp(log_std) * noise.
+pub fn act(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    noise: &Mat,
+) -> ActOut {
+    let (mean, log_std, value) = policy_value(layout, flat, shape, obs);
+    let mut action = mean.clone();
+    for r in 0..action.rows {
+        for c in 0..action.cols {
+            *action.at_mut(r, c) += log_std[c].exp() * noise.at(r, c);
+        }
+    }
+    let logp = gaussian_logp(&action, &mean, &log_std);
+    ActOut {
+        action,
+        logp,
+        value,
+        mean,
+    }
+}
+
+/// PPO hyper-parameters baked into the loss (mirror of model.PpoConfig).
+#[derive(Debug, Clone, Copy)]
+pub struct PpoLossCfg {
+    pub clip: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+}
+
+impl Default for PpoLossCfg {
+    fn default() -> Self {
+        Self {
+            clip: 0.2,
+            ent_coef: 0.0,
+            vf_coef: 0.5,
+        }
+    }
+}
+
+/// One PPO minibatch (rows already padded/masked by the caller).
+#[derive(Debug, Clone)]
+pub struct PpoBatch {
+    pub obs: Mat,
+    pub act: Mat,
+    pub old_logp: Vec<f32>,
+    pub adv: Vec<f32>,
+    pub ret: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+/// Loss statistics (mirror of the AOT train_ppo tuple tail).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PpoStats {
+    pub total: f32,
+    pub pi_loss: f32,
+    pub v_loss: f32,
+    pub entropy: f32,
+    pub approx_kl: f32,
+    pub clip_frac: f32,
+}
+
+/// PPO clipped-surrogate loss and its gradient w.r.t. the flat vector.
+/// Exact mirror of `model.ppo_loss` (masked means, same clip semantics).
+pub fn ppo_loss_grad(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    batch: &PpoBatch,
+    cfg: &PpoLossCfg,
+) -> (Vec<f32>, PpoStats) {
+    let nh = shape.hidden.len();
+    let b = batch.obs.rows;
+    assert_eq!(batch.act.rows, b);
+
+    let pi_acts = mlp_forward(layout, flat, "pi", &batch.obs, nh, Act::Tanh, Act::Id);
+    let vf_acts = mlp_forward(layout, flat, "vf", &batch.obs, nh, Act::Tanh, Act::Id);
+    let mean = pi_acts.last().unwrap();
+    let value = &vf_acts.last().unwrap().data;
+    let (log_std, _) = entry(layout, flat, "pi/log_std");
+
+    let logp = gaussian_logp(&batch.act, mean, log_std);
+    let w: f32 = batch.mask.iter().sum::<f32>().max(1.0);
+
+    // --- forward losses + per-row dlogp coefficient
+    let mut pi_loss = 0.0f32;
+    let mut v_loss = 0.0f32;
+    let mut approx_kl = 0.0f32;
+    let mut clip_frac = 0.0f32;
+    let mut dlogp = vec![0.0f32; b]; // dL/dlogp_i
+    let mut dvalue = vec![0.0f32; b]; // dL/dvalue_i
+    for i in 0..b {
+        let m = batch.mask[i];
+        if m == 0.0 {
+            continue;
+        }
+        let ratio = (logp[i] - batch.old_logp[i]).exp();
+        let clipped = ratio.clamp(1.0 - cfg.clip, 1.0 + cfg.clip);
+        let s1 = ratio * batch.adv[i];
+        let s2 = clipped * batch.adv[i];
+        let surr = s1.min(s2);
+        pi_loss -= m * surr / w;
+        // gradient flows only through the unclipped branch when it is the min
+        if s1 <= s2 {
+            dlogp[i] = -m * batch.adv[i] * ratio / w;
+        }
+        let verr = value[i] - batch.ret[i];
+        v_loss += 0.5 * m * verr * verr / w;
+        dvalue[i] = cfg.vf_coef * m * verr / w;
+        approx_kl += m * (batch.old_logp[i] - logp[i]) / w;
+        if (ratio - 1.0).abs() > cfg.clip {
+            clip_frac += m / w;
+        }
+    }
+    let entropy = gaussian_entropy(log_std);
+    let total = pi_loss + cfg.vf_coef * v_loss - cfg.ent_coef * entropy;
+
+    // --- backward
+    let mut grad = vec![0.0f32; layout.total()];
+
+    // dlogp -> dmean and dlog_std
+    let a = shape.act_dim;
+    let mut dmean = Mat::zeros(b, a);
+    let ls_e = layout.find("pi/log_std").unwrap();
+    for i in 0..b {
+        if dlogp[i] == 0.0 && batch.mask[i] == 0.0 {
+            continue;
+        }
+        for j in 0..a {
+            let inv_std = (-log_std[j]).exp();
+            let z = (batch.act.at(i, j) - mean.at(i, j)) * inv_std;
+            // dlogp/dmean_j = z * inv_std ; dlogp/dlog_std_j = z^2 - 1
+            *dmean.at_mut(i, j) = dlogp[i] * z * inv_std;
+            grad[ls_e.offset + j] += dlogp[i] * (z * z - 1.0);
+        }
+    }
+    // entropy: dL/dlog_std_j -= ent_coef
+    for j in 0..a {
+        grad[ls_e.offset + j] -= cfg.ent_coef;
+    }
+
+    mlp_backward(
+        layout, flat, "pi", &pi_acts, dmean, nh, Act::Tanh, Act::Id, &mut grad,
+    );
+    let dv = Mat::from_vec(b, 1, dvalue);
+    mlp_backward(
+        layout, flat, "vf", &vf_acts, dv, nh, Act::Tanh, Act::Id, &mut grad,
+    );
+
+    (
+        grad,
+        PpoStats {
+            total,
+            pi_loss,
+            v_loss,
+            entropy,
+            approx_kl,
+            clip_frac,
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// DDPG actor/critic
+// ---------------------------------------------------------------------------
+
+/// Deterministic actor forward: relu hidden, tanh output.
+pub fn ddpg_actor(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+) -> Mat {
+    mlp_forward(layout, flat, "actor", obs, shape.hidden.len(), Act::Relu, Act::Tanh)
+        .pop()
+        .unwrap()
+}
+
+/// Critic forward on concat(obs, act).
+pub fn ddpg_critic(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    action: &Mat,
+) -> Vec<f32> {
+    let x = concat_cols(obs, action);
+    mlp_forward(layout, flat, "critic", &x, shape.hidden.len(), Act::Relu, Act::Id)
+        .pop()
+        .unwrap()
+        .data
+}
+
+pub fn concat_cols(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let mut out = Mat::zeros(a.rows, a.cols + b.cols);
+    for r in 0..a.rows {
+        out.row_mut(r)[..a.cols].copy_from_slice(a.row(r));
+        out.row_mut(r)[a.cols..].copy_from_slice(b.row(r));
+    }
+    out
+}
+
+/// Gradient of mean squared TD error w.r.t. critic params.
+/// Returns (grad, q_loss).
+pub fn ddpg_critic_grad(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    action: &Mat,
+    target: &[f32],
+) -> (Vec<f32>, f32) {
+    let nh = shape.hidden.len();
+    let x = concat_cols(obs, action);
+    let acts = mlp_forward(layout, flat, "critic", &x, nh, Act::Relu, Act::Id);
+    let q = &acts.last().unwrap().data;
+    let b = q.len() as f32;
+    let mut loss = 0.0;
+    let mut dq = Mat::zeros(q.len(), 1);
+    for i in 0..q.len() {
+        let e = q[i] - target[i];
+        loss += e * e / b;
+        dq.data[i] = 2.0 * e / b;
+    }
+    let mut grad = vec![0.0f32; layout.total()];
+    mlp_backward(layout, flat, "critic", &acts, dq, nh, Act::Relu, Act::Id, &mut grad);
+    (grad, loss)
+}
+
+/// Gradient of -mean(Q(s, actor(s))) w.r.t. actor params (DPG step).
+/// Returns (actor_grad, pi_loss).
+pub fn ddpg_actor_grad(
+    alayout: &ParamLayout,
+    actor_flat: &[f32],
+    clayout: &ParamLayout,
+    critic_flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+) -> (Vec<f32>, f32) {
+    let nh = shape.hidden.len();
+    let acts = mlp_forward(alayout, actor_flat, "actor", obs, nh, Act::Relu, Act::Tanh);
+    let action = acts.last().unwrap().clone();
+    let x = concat_cols(obs, &action);
+    let cacts = mlp_forward(clayout, critic_flat, "critic", &x, nh, Act::Relu, Act::Id);
+    let q = &cacts.last().unwrap().data;
+    let b = q.len() as f32;
+    let pi_loss = -q.iter().sum::<f32>() / b;
+
+    // dL/dq = -1/B; backprop through critic to its *input*, slice action part
+    let dq = Mat::from_vec(q.len(), 1, vec![-1.0 / b; q.len()]);
+    let mut scratch = vec![0.0f32; clayout.total()]; // critic grads discarded
+    let dx = mlp_backward(
+        clayout, critic_flat, "critic", &cacts, dq, nh, Act::Relu, Act::Id, &mut scratch,
+    );
+    let mut da = Mat::zeros(obs.rows, shape.act_dim);
+    for r in 0..obs.rows {
+        da.row_mut(r)
+            .copy_from_slice(&dx.row(r)[shape.obs_dim..]);
+    }
+
+    let mut grad = vec![0.0f32; alayout.total()];
+    mlp_backward(
+        alayout, actor_flat, "actor", &acts, da, nh, Act::Relu, Act::Tanh, &mut grad,
+    );
+    (grad, pi_loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layout::{actor_layout, critic_layout, ppo_layout};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (ParamLayout, Vec<f32>, NetShape) {
+        let shape = NetShape::new(3, 2, &[16, 16]);
+        let layout = ppo_layout(3, 2, &[16, 16]);
+        let mut rng = Pcg64::new(0);
+        let flat = layout.init_flat(&mut rng);
+        (layout, flat, shape)
+    }
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[test]
+    fn act_zero_noise_returns_mean() {
+        let (layout, flat, shape) = setup();
+        let mut rng = Pcg64::new(1);
+        let obs = rand_mat(&mut rng, 5, 3);
+        let noise = Mat::zeros(5, 2);
+        let out = act(&layout, &flat, &shape, &obs, &noise);
+        assert!(out.action.max_abs_diff(&out.mean) < 1e-7);
+        assert_eq!(out.logp.len(), 5);
+        assert_eq!(out.value.len(), 5);
+    }
+
+    #[test]
+    fn logp_matches_closed_form() {
+        let mean = Mat::from_rows(&[&[0.5, -1.0]]);
+        let a = Mat::from_rows(&[&[0.7, -0.5]]);
+        let log_std = [0.1f32, -0.3];
+        let got = gaussian_logp(&a, &mean, &log_std)[0];
+        let mut want = 0.0f32;
+        for i in 0..2 {
+            let s = log_std[i].exp();
+            let z = (a.at(0, i) - mean.at(0, i)) / s;
+            want += -0.5 * z * z - log_std[i] - 0.5 * LOG_2PI;
+        }
+        assert!((got - want).abs() < 1e-6);
+    }
+
+    /// Finite-difference check of the full PPO gradient — the strongest
+    /// native-side correctness signal.
+    #[test]
+    fn ppo_grad_matches_finite_difference() {
+        let (layout, flat, shape) = setup();
+        let mut rng = Pcg64::new(2);
+        let b = 8;
+        let obs = rand_mat(&mut rng, b, 3);
+        let noise = rand_mat(&mut rng, b, 2);
+        let out = act(&layout, &flat, &shape, &obs, &noise);
+        // perturbed old_logp so ratios differ from 1 (exercise clip paths)
+        let old_logp: Vec<f32> = out.logp.iter().map(|l| l - 0.2).collect();
+        let adv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let ret: Vec<f32> = out.value.iter().map(|v| v + 0.3).collect();
+        let batch = PpoBatch {
+            obs,
+            act: out.action.clone(),
+            old_logp,
+            adv,
+            ret,
+            mask: vec![1.0; b],
+        };
+        let cfg = PpoLossCfg {
+            clip: 0.2,
+            ent_coef: 0.01,
+            vf_coef: 0.5,
+        };
+        let (grad, stats) = ppo_loss_grad(&layout, &flat, &shape, &batch, &cfg);
+
+        let loss_of = |f: &[f32]| ppo_loss_grad(&layout, f, &shape, &batch, &cfg).1.total;
+        let eps = 3e-3f32;
+        let mut checked = 0;
+        // probe a spread of parameter indices incl. log_std
+        let ls_off = layout.find("pi/log_std").unwrap().offset;
+        let mut idxs: Vec<usize> = (0..layout.total()).step_by(layout.total() / 40).collect();
+        idxs.push(ls_off);
+        idxs.push(ls_off + 1);
+        for &i in &idxs {
+            let mut fp = flat.clone();
+            fp[i] += eps;
+            let mut fm = flat.clone();
+            fm[i] -= eps;
+            let fd = (loss_of(&fp) - loss_of(&fm)) / (2.0 * eps);
+            let denom = fd.abs().max(grad[i].abs()).max(1e-2);
+            assert!(
+                (fd - grad[i]).abs() / denom < 0.08,
+                "param {i}: fd={fd} analytic={}",
+                grad[i]
+            );
+            checked += 1;
+        }
+        assert!(checked > 30);
+        assert!(stats.total.is_finite());
+    }
+
+    #[test]
+    fn ppo_mask_zeroes_padding_contribution() {
+        let (layout, flat, shape) = setup();
+        let mut rng = Pcg64::new(3);
+        let obs = rand_mat(&mut rng, 6, 3);
+        let noise = rand_mat(&mut rng, 6, 2);
+        let out = act(&layout, &flat, &shape, &obs, &noise);
+        let mk = |mask: Vec<f32>, adv_tail: f32| PpoBatch {
+            obs: obs.clone(),
+            act: out.action.clone(),
+            old_logp: out.logp.clone(),
+            adv: vec![0.5, -0.2, 0.1, adv_tail, adv_tail, adv_tail],
+            ret: out.value.clone(),
+            mask,
+        };
+        let cfg = PpoLossCfg::default();
+        let full = mk(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0], 1e6);
+        let (g1, s1) = ppo_loss_grad(&layout, &flat, &shape, &full, &cfg);
+        let clean = mk(vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0], 0.0);
+        let (g2, s2) = ppo_loss_grad(&layout, &flat, &shape, &clean, &cfg);
+        assert!((s1.total - s2.total).abs() < 1e-5);
+        let diff: f32 = g1
+            .iter()
+            .zip(&g2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff < 1e-5);
+    }
+
+    #[test]
+    fn ratio_one_gives_zero_kl_and_clipfrac() {
+        let (layout, flat, shape) = setup();
+        let mut rng = Pcg64::new(4);
+        let obs = rand_mat(&mut rng, 4, 3);
+        let noise = rand_mat(&mut rng, 4, 2);
+        let out = act(&layout, &flat, &shape, &obs, &noise);
+        let batch = PpoBatch {
+            obs,
+            act: out.action,
+            old_logp: out.logp,
+            adv: vec![1.0; 4],
+            ret: out.value,
+            mask: vec![1.0; 4],
+        };
+        let (_, stats) = ppo_loss_grad(&layout, &flat, &shape, &batch, &PpoLossCfg::default());
+        assert!(stats.approx_kl.abs() < 1e-5);
+        assert_eq!(stats.clip_frac, 0.0);
+        assert!((stats.pi_loss + 1.0).abs() < 1e-5); // -mean(adv) = -1
+    }
+
+    #[test]
+    fn ddpg_actor_bounded_and_critic_grad_fd() {
+        let shape = NetShape::new(3, 2, &[8, 8]);
+        let al = actor_layout(3, 2, &[8, 8]);
+        let cl = critic_layout(3, 2, &[8, 8]);
+        let mut rng = Pcg64::new(5);
+        let af = al.init_flat(&mut rng);
+        let cf = cl.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 6, 3);
+        let a = ddpg_actor(&al, &af, &shape, &obs);
+        assert!(a.data.iter().all(|v| v.abs() <= 1.0));
+
+        let target = vec![0.7f32; 6];
+        let (grad, _q) = ddpg_critic_grad(&cl, &cf, &shape, &obs, &a, &target);
+        let loss_of = |f: &[f32]| {
+            let q = ddpg_critic(&cl, f, &shape, &obs, &a);
+            q.iter()
+                .zip(&target)
+                .map(|(qi, ti)| (qi - ti) * (qi - ti))
+                .sum::<f32>()
+                / 6.0
+        };
+        let eps = 2e-3;
+        for i in (0..cl.total()).step_by(cl.total() / 25) {
+            let mut fp = cf.clone();
+            fp[i] += eps;
+            let mut fm = cf.clone();
+            fm[i] -= eps;
+            let fd = (loss_of(&fp) - loss_of(&fm)) / (2.0 * eps);
+            let denom = fd.abs().max(grad[i].abs()).max(1e-2);
+            assert!((fd - grad[i]).abs() / denom < 0.08, "param {i}");
+        }
+    }
+
+    #[test]
+    fn ddpg_actor_grad_fd() {
+        let shape = NetShape::new(3, 2, &[8, 8]);
+        let al = actor_layout(3, 2, &[8, 8]);
+        let cl = critic_layout(3, 2, &[8, 8]);
+        let mut rng = Pcg64::new(6);
+        let af = al.init_flat(&mut rng);
+        let cf = cl.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 5, 3);
+        let (grad, _pi) = ddpg_actor_grad(&al, &af, &cl, &cf, &shape, &obs);
+        let loss_of = |f: &[f32]| {
+            let a = ddpg_actor(&al, f, &shape, &obs);
+            -ddpg_critic(&cl, &cf, &shape, &obs, &a).iter().sum::<f32>() / 5.0
+        };
+        let eps = 2e-3;
+        for i in (0..al.total()).step_by(al.total() / 25) {
+            let mut fp = af.clone();
+            fp[i] += eps;
+            let mut fm = af.clone();
+            fm[i] -= eps;
+            let fd = (loss_of(&fp) - loss_of(&fm)) / (2.0 * eps);
+            let denom = fd.abs().max(grad[i].abs()).max(1e-2);
+            assert!((fd - grad[i]).abs() / denom < 0.1, "param {i}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Native neural-network substrate: flat-parameter layout, minimal dense
+//! linear algebra, MLP forward/backward, and Adam.
+//!
+//! This is the pure-Rust mirror of the L2 JAX model (same math, same flat
+//! layout) backing `runtime::NativeBackend`; the AOT/XLA path is
+//! integration-tested against it.
+
+pub mod adam;
+pub mod layout;
+pub mod mlp;
+pub mod tensor;

@@ -1,0 +1,280 @@
+//! Minimal dense linear algebra for the native (pure-Rust) backend.
+//!
+//! Row-major `Mat` plus the handful of kernels an MLP needs: matmul with
+//! optional operand transposes, bias add, activations. The matmul is a
+//! cache-blocked ikj loop — plenty for 64-wide policy networks (the XLA
+//! backend owns the real hot path; this backend is the artifact-free
+//! fallback and the test oracle).
+
+/// Row-major 2-D matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[&[f32]]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat {
+            rows: r,
+            cols: c,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// out = a @ b. a:[m,k] b:[k,n] -> [m,n]; ikj loop order for locality.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for (p, &av) in arow.iter().enumerate().take(k) {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out = a^T @ b. a:[k,m] b:[k,n] -> [m,n] (no explicit transpose alloc).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn dim mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for (i, &av) in arow.iter().enumerate().take(m) {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// out = a @ b^T. a:[m,k] b:[n,k] -> [m,n].
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            *out.at_mut(i, j) = acc;
+        }
+    }
+    out
+}
+
+/// y += bias (bias broadcast over rows).
+pub fn add_bias(y: &mut Mat, bias: &[f32]) {
+    assert_eq!(bias.len(), y.cols);
+    for r in 0..y.rows {
+        for (v, b) in y.row_mut(r).iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Supported fused activations (mirror of python kernels/ref.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Id,
+    Tanh,
+    Relu,
+}
+
+pub fn apply_act(y: &mut Mat, act: Act) {
+    match act {
+        Act::Id => {}
+        Act::Tanh => {
+            for v in &mut y.data {
+                *v = v.tanh();
+            }
+        }
+        Act::Relu => {
+            for v in &mut y.data {
+                *v = v.max(0.0);
+            }
+        }
+    }
+}
+
+/// d(act)/d(pre) expressed from the *output* (same trick as the Pallas
+/// backward): tanh' = 1 - y^2, relu' = [y>0], id' = 1.
+pub fn act_grad_from_out(y: &Mat, act: Act) -> Mat {
+    let mut g = Mat::zeros(y.rows, y.cols);
+    match act {
+        Act::Id => g.data.fill(1.0),
+        Act::Tanh => {
+            for (o, &v) in g.data.iter_mut().zip(&y.data) {
+                *o = 1.0 - v * v;
+            }
+        }
+        Act::Relu => {
+            for (o, &v) in g.data.iter_mut().zip(&y.data) {
+                *o = if v > 0.0 { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    g
+}
+
+/// Column sums (bias gradient). y:[m,n] -> [n].
+pub fn col_sums(y: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0; y.cols];
+    for r in 0..y.rows {
+        for (o, &v) in out.iter_mut().zip(y.row(r)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Element-wise product in place: a *= b.
+pub fn mul_inplace(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x *= y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Mat, b: &Mat, tol: f32) {
+        assert!(a.max_abs_diff(b) < tol, "\n{a:?}\nvs\n{b:?}");
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = matmul(&a, &b);
+        approx(&c, &Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]), 1e-6);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit_transpose() {
+        let mut rng = crate::util::rng::Pcg64::new(0);
+        let a = Mat::from_vec(7, 5, (0..35).map(|_| rng.normal()).collect());
+        let b = Mat::from_vec(7, 4, (0..28).map(|_| rng.normal()).collect());
+        approx(&matmul_tn(&a, &b), &matmul(&a.t(), &b), 1e-5);
+        let c = Mat::from_vec(6, 5, (0..30).map(|_| rng.normal()).collect());
+        approx(&matmul_nt(&a, &c), &matmul(&a, &c.t()), 1e-5);
+    }
+
+    #[test]
+    fn bias_and_activations() {
+        let mut y = Mat::from_rows(&[&[-1.0, 0.0], &[2.0, -3.0]]);
+        add_bias(&mut y, &[1.0, 1.0]);
+        let mut relu = y.clone();
+        apply_act(&mut relu, Act::Relu);
+        approx(&relu, &Mat::from_rows(&[&[0.0, 1.0], &[3.0, 0.0]]), 1e-6);
+        let mut tanh = y.clone();
+        apply_act(&mut tanh, Act::Tanh);
+        assert!((tanh.at(1, 0) - 3.0f32.tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn act_grads_from_output() {
+        let y = Mat::from_rows(&[&[0.5, -0.5]]);
+        let g = act_grad_from_out(&y, Act::Tanh);
+        assert!((g.at(0, 0) - 0.75).abs() < 1e-6);
+        let g = act_grad_from_out(&y, Act::Relu);
+        assert_eq!(g.data, vec![1.0, 0.0]);
+        let g = act_grad_from_out(&y, Act::Id);
+        assert_eq!(g.data, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn col_sums_known() {
+        let y = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(col_sums(&y), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul dim mismatch")]
+    fn matmul_rejects_bad_shapes() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        matmul(&a, &b);
+    }
+}

@@ -1,0 +1,228 @@
+//! AOT artifact metadata: loads `artifacts/<preset>/meta.json` (written by
+//! `python/compile/aot.py`), reconstructs the flat-parameter layout, and
+//! cross-checks it against the native `nn::layout` — any drift between the
+//! Python and Rust layout definitions fails loudly at startup instead of
+//! silently mis-slicing parameters.
+
+use crate::nn::layout::{self, Init, ParamEntry, ParamLayout};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// DDPG-specific metadata (present when the preset emits DDPG artifacts).
+#[derive(Debug, Clone)]
+pub struct DdpgMeta {
+    pub batch: usize,
+    pub gamma: f32,
+    pub tau: f32,
+    pub actor_layout: ParamLayout,
+    pub critic_layout: ParamLayout,
+}
+
+/// Parsed per-preset artifact metadata.
+#[derive(Debug, Clone)]
+pub struct PresetMeta {
+    pub preset: String,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: Vec<usize>,
+    pub act_batch: usize,
+    pub eval_batch: usize,
+    pub minibatch: usize,
+    pub horizon: usize,
+    pub gamma: f32,
+    pub lam: f32,
+    pub clip: f32,
+    pub ent_coef: f32,
+    pub vf_coef: f32,
+    pub param_count: usize,
+    pub layout: ParamLayout,
+    pub ddpg: Option<DdpgMeta>,
+    /// artifact name -> absolute path
+    artifact_paths: std::collections::BTreeMap<String, PathBuf>,
+}
+
+impl PresetMeta {
+    /// Load `<dir>/<preset>/meta.json`.
+    pub fn load(artifacts_dir: &str, preset: &str) -> Result<PresetMeta> {
+        let dir = Path::new(artifacts_dir);
+        let meta_path = dir.join(preset).join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`?)"))?;
+        let j = Json::parse(&text).context("parsing meta.json")?;
+
+        let layout = parse_layout(j.get("params")?)?;
+        let meta = PresetMeta {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            obs_dim: j.get("obs_dim")?.as_usize()?,
+            act_dim: j.get("act_dim")?.as_usize()?,
+            hidden: j
+                .get("hidden")?
+                .as_arr()?
+                .iter()
+                .map(|h| h.as_usize())
+                .collect::<std::result::Result<_, _>>()?,
+            act_batch: j.get("act_batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            minibatch: j.get("minibatch")?.as_usize()?,
+            horizon: j.get("horizon")?.as_usize()?,
+            gamma: j.get("gamma")?.as_f32()?,
+            lam: j.get("lam")?.as_f32()?,
+            clip: j.get("clip")?.as_f32()?,
+            ent_coef: j.get("ent_coef")?.as_f32()?,
+            vf_coef: j.get("vf_coef")?.as_f32()?,
+            param_count: j.get("param_count")?.as_usize()?,
+            layout,
+            ddpg: match j.opt("ddpg") {
+                None => None,
+                Some(d) => Some(DdpgMeta {
+                    batch: d.get("batch")?.as_usize()?,
+                    gamma: d.get("gamma")?.as_f32()?,
+                    tau: d.get("tau")?.as_f32()?,
+                    actor_layout: parse_layout(d.get("actor_params")?)?,
+                    critic_layout: parse_layout(d.get("critic_params")?)?,
+                }),
+            },
+            artifact_paths: j
+                .get("artifacts")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), dir.join(v.as_str()?))))
+                .collect::<Result<_>>()?,
+        };
+        meta.cross_check()?;
+        Ok(meta)
+    }
+
+    /// Absolute path of one artifact (e.g. "act", "train_ppo", "gae").
+    pub fn artifact(&self, name: &str) -> Result<&Path> {
+        let p = self
+            .artifact_paths
+            .get(name)
+            .ok_or_else(|| anyhow!("preset {} has no artifact {name:?}", self.preset))?;
+        if !p.exists() {
+            return Err(anyhow!("artifact file missing: {p:?} (run `make artifacts`)"));
+        }
+        Ok(p)
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_paths.contains_key(name)
+    }
+
+    /// Verify the Python-exported layout equals the native construction —
+    /// both sides must agree byte-for-byte on the flat-parameter ABI.
+    fn cross_check(&self) -> Result<()> {
+        let native = layout::ppo_layout(self.obs_dim, self.act_dim, &self.hidden);
+        if native != self.layout {
+            return Err(anyhow!(
+                "flat-param layout drift between python meta.json and nn::layout \
+                 for preset {} — rebuild artifacts or fix the layout mirror",
+                self.preset
+            ));
+        }
+        if native.total() != self.param_count {
+            return Err(anyhow!(
+                "param_count mismatch: meta {} vs native {}",
+                self.param_count,
+                native.total()
+            ));
+        }
+        if let Some(d) = &self.ddpg {
+            let na = layout::actor_layout(self.obs_dim, self.act_dim, &self.hidden);
+            let nc = layout::critic_layout(self.obs_dim, self.act_dim, &self.hidden);
+            if na != d.actor_layout || nc != d.critic_layout {
+                return Err(anyhow!("DDPG layout drift for preset {}", self.preset));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_layout(j: &Json) -> Result<ParamLayout> {
+    let entries = j
+        .as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(ParamEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<std::result::Result<_, _>>()?,
+                offset: e.get("offset")?.as_usize()?,
+                init: Init::parse(e.get("init")?.as_str()?)
+                    .ok_or_else(|| anyhow!("bad init {:?}", e.get("init")))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ParamLayout { entries })
+}
+
+/// List presets available in an artifacts directory (via index.json).
+pub fn list_presets(artifacts_dir: &str) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(Path::new(artifacts_dir).join("index.json"))
+        .with_context(|| format!("reading {artifacts_dir}/index.json"))?;
+    let j = Json::parse(&text)?;
+    Ok(j.as_obj()?.keys().cloned().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are the contract
+    /// check between the Python emitter and the Rust loader.
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/index.json").exists()
+    }
+
+    #[test]
+    fn loads_all_indexed_presets() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        for preset in list_presets("artifacts").unwrap() {
+            let meta = PresetMeta::load("artifacts", &preset).unwrap();
+            assert_eq!(meta.preset, preset);
+            assert!(meta.param_count > 0);
+            assert!(meta.artifact("act").is_ok());
+            assert!(meta.artifact("train_ppo").is_ok());
+            assert!(meta.artifact("gae").is_ok());
+        }
+    }
+
+    #[test]
+    fn pendulum_meta_matches_native_layout() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let meta = PresetMeta::load("artifacts", "pendulum").unwrap();
+        assert_eq!(meta.obs_dim, 3);
+        assert_eq!(meta.act_dim, 1);
+        assert!(meta.ddpg.is_some());
+        let native = layout::ppo_layout(3, 1, &meta.hidden);
+        assert_eq!(native, meta.layout);
+    }
+
+    #[test]
+    fn missing_preset_errors_helpfully() {
+        let err = PresetMeta::load("artifacts", "nonexistent").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn unknown_artifact_name_errors() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let meta = PresetMeta::load("artifacts", "pendulum").unwrap();
+        assert!(meta.artifact("bogus").is_err());
+        assert!(!meta.has_artifact("bogus"));
+    }
+}

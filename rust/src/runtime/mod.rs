@@ -1,0 +1,213 @@
+//! Runtime: the compute-backend abstraction the coordinator talks to.
+//!
+//! Two implementations of the same traits:
+//! * [`xla_backend::XlaFactory`] — loads the AOT HLO-text artifacts and
+//!   executes them through the PJRT CPU client (the production path; the
+//!   request path never touches Python).
+//! * [`native_backend::NativeFactory`] — the pure-Rust mirror (`nn::`),
+//!   artifact-free; used by `cargo test`, quickstarts, and as the oracle
+//!   in XLA-vs-native parity tests.
+//!
+//! PJRT handles are not `Send` (raw pointers into xla_extension), so
+//! backends are created *per thread* through a `Send + Sync` factory: each
+//! sampler thread owns its own client + compiled executables. Compilation
+//! happens once at worker startup, never on the hot path.
+
+pub mod artifacts;
+pub mod native_backend;
+pub mod xla_backend;
+
+use crate::nn::mlp::PpoStats;
+
+/// Output of one batched policy evaluation (mirrors the AOT `act` tuple).
+#[derive(Debug, Clone)]
+pub struct ActResult {
+    /// [B*A] sampled actions (pre-clip).
+    pub action: Vec<f32>,
+    /// [B] log π(a|s).
+    pub logp: Vec<f32>,
+    /// [B] value estimates.
+    pub value: Vec<f32>,
+    /// [B*A] distribution means (deterministic action for eval).
+    pub mean: Vec<f32>,
+}
+
+/// Policy evaluation for sampler workers (PPO Gaussian policy).
+pub trait ActorBackend {
+    /// Fixed batch the backend expects per call (XLA artifacts are shape-
+    /// specialized). Callers must pass exactly `batch()` rows.
+    fn batch(&self) -> usize;
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+
+    /// Evaluate the policy: `obs` is [batch * obs_dim], `noise` is
+    /// [batch * act_dim] of N(0,1) draws supplied by the caller's RNG.
+    fn act(&mut self, flat: &[f32], obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResult>;
+}
+
+/// Mutable PPO training state (flat params + Adam moments).
+#[derive(Debug, Clone)]
+pub struct PpoTrainState {
+    pub flat: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based Adam step counter (incremented per train_step).
+    pub t: u64,
+}
+
+impl PpoTrainState {
+    pub fn new(flat: Vec<f32>) -> Self {
+        let n = flat.len();
+        Self {
+            flat,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+}
+
+/// One PPO minibatch view (already padded to the backend's size; `mask`
+/// zeroes padding rows exactly).
+#[derive(Debug, Clone)]
+pub struct PpoMinibatch<'a> {
+    pub obs: &'a [f32],
+    pub act: &'a [f32],
+    pub old_logp: &'a [f32],
+    pub adv: &'a [f32],
+    pub ret: &'a [f32],
+    pub mask: &'a [f32],
+}
+
+/// PPO learner operations.
+pub trait PpoLearnerBackend {
+    /// Fixed minibatch row count (0 = any size accepted).
+    fn minibatch_size(&self) -> usize;
+
+    /// One Adam minibatch step (forward + backward + update), in place.
+    fn train_step(
+        &mut self,
+        state: &mut PpoTrainState,
+        lr: f32,
+        mb: &PpoMinibatch<'_>,
+    ) -> anyhow::Result<PpoStats>;
+
+    /// Gradient only (for sharded data-parallel learning, §6.2). Returns
+    /// (grad[P], total_loss, n_valid_rows).
+    fn grad(&mut self, flat: &[f32], mb: &PpoMinibatch<'_>) -> anyhow::Result<(Vec<f32>, f32, f32)>;
+
+    /// Apply externally averaged gradients with one Adam step.
+    fn apply_grads(
+        &mut self,
+        state: &mut PpoTrainState,
+        grads: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<()>;
+
+    /// GAE through the backend (XLA: the L1 Pallas gae_scan artifact).
+    /// `val` has T+1 entries (bootstrap last); returns (adv[T], ret[T]).
+    fn gae(&mut self, rew: &[f32], val: &[f32], cont: &[f32])
+        -> anyhow::Result<(Vec<f32>, Vec<f32>)>;
+}
+
+/// Mutable DDPG training state (four flat vectors + two Adam states).
+#[derive(Debug, Clone)]
+pub struct DdpgTrainState {
+    pub actor: Vec<f32>,
+    pub critic: Vec<f32>,
+    pub targ_actor: Vec<f32>,
+    pub targ_critic: Vec<f32>,
+    pub am: Vec<f32>,
+    pub av: Vec<f32>,
+    pub cm: Vec<f32>,
+    pub cv: Vec<f32>,
+    pub t: u64,
+}
+
+impl DdpgTrainState {
+    pub fn new(actor: Vec<f32>, critic: Vec<f32>) -> Self {
+        let (pa, pc) = (actor.len(), critic.len());
+        Self {
+            targ_actor: actor.clone(),
+            targ_critic: critic.clone(),
+            actor,
+            critic,
+            am: vec![0.0; pa],
+            av: vec![0.0; pa],
+            cm: vec![0.0; pc],
+            cv: vec![0.0; pc],
+            t: 0,
+        }
+    }
+}
+
+/// One DDPG replay minibatch view.
+#[derive(Debug, Clone)]
+pub struct DdpgBatch<'a> {
+    pub obs: &'a [f32],
+    pub act: &'a [f32],
+    pub rew: &'a [f32],
+    pub next_obs: &'a [f32],
+    pub done: &'a [f32],
+}
+
+/// DDPG actor evaluation (sampler side; exploration noise added by caller).
+pub trait DdpgActorBackend {
+    fn batch(&self) -> usize;
+    /// Deterministic actor: obs [batch*obs_dim] -> action [batch*act_dim].
+    fn act(&mut self, actor: &[f32], obs: &[f32]) -> anyhow::Result<Vec<f32>>;
+}
+
+/// DDPG learner operations.
+pub trait DdpgLearnerBackend {
+    fn batch_size(&self) -> usize;
+    /// One fused update (critic TD step, actor DPG step, Polyak targets).
+    /// Returns (q_loss, pi_loss).
+    fn train_step(
+        &mut self,
+        state: &mut DdpgTrainState,
+        lr_actor: f32,
+        lr_critic: f32,
+        batch: &DdpgBatch<'_>,
+    ) -> anyhow::Result<(f32, f32)>;
+}
+
+/// Build the factory selected by a run config: `Backend::Xla` loads the
+/// preset's AOT artifacts; `Backend::Native` mirrors them in pure Rust.
+pub fn make_factory(
+    cfg: &crate::config::TrainConfig,
+) -> anyhow::Result<Box<dyn BackendFactory>> {
+    let (obs_dim, act_dim) = crate::env::registry::env_dims(&cfg.env)
+        .ok_or_else(|| anyhow::anyhow!("unknown env {:?}", cfg.env))?;
+    match cfg.backend {
+        crate::config::Backend::Xla => Ok(Box::new(xla_backend::XlaFactory::new(
+            &cfg.artifacts_dir,
+            &cfg.env,
+        )?)),
+        crate::config::Backend::Native => Ok(Box::new(native_backend::NativeFactory::new(
+            obs_dim,
+            act_dim,
+            &cfg.hidden,
+            cfg.ppo.clone(),
+            cfg.ddpg.clone(),
+        ))),
+    }
+}
+
+/// Per-thread backend construction. The factory is shared across workers
+/// (`Send + Sync`); the backends it makes are thread-local.
+pub trait BackendFactory: Send + Sync {
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Total flat parameter count for the PPO nets.
+    fn ppo_param_count(&self) -> usize;
+    /// Fresh PPO parameters (Glorot / zeros / const per layout).
+    fn init_ppo_params(&self, seed: u64) -> Vec<f32>;
+    /// Fresh DDPG (actor, critic) parameters.
+    fn init_ddpg_params(&self, seed: u64) -> (Vec<f32>, Vec<f32>);
+
+    fn make_actor(&self) -> anyhow::Result<Box<dyn ActorBackend>>;
+    fn make_ppo_learner(&self) -> anyhow::Result<Box<dyn PpoLearnerBackend>>;
+    fn make_ddpg_actor(&self) -> anyhow::Result<Box<dyn DdpgActorBackend>>;
+    fn make_ddpg_learner(&self) -> anyhow::Result<Box<dyn DdpgLearnerBackend>>;
+}

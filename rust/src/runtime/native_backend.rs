@@ -1,0 +1,470 @@
+//! Pure-Rust backend: the artifact-free mirror of the AOT/XLA path.
+//!
+//! Same math, same flat-parameter ABI (`nn::layout` == python `model.py`),
+//! so a run can switch `--backend native|xla` and produce statistically
+//! identical learning curves. Used by `cargo test` (no Python needed), the
+//! quickstart example, and as the oracle in parity tests.
+
+use super::{
+    ActResult, ActorBackend, BackendFactory, DdpgActorBackend, DdpgBatch, DdpgLearnerBackend,
+    DdpgTrainState, PpoLearnerBackend, PpoMinibatch, PpoTrainState,
+};
+use crate::algo::gae as gae_mod;
+use crate::config::{DdpgCfg, PpoCfg};
+use crate::nn::adam::{Adam, AdamCfg};
+use crate::nn::layout::{actor_layout, critic_layout, ppo_layout, ParamLayout};
+use crate::nn::mlp::{self, NetShape, PpoBatch, PpoLossCfg, PpoStats};
+use crate::nn::tensor::Mat;
+use crate::util::rng::Pcg64;
+
+/// Factory for native backends.
+pub struct NativeFactory {
+    obs_dim: usize,
+    act_dim: usize,
+    hidden: Vec<usize>,
+    ppo: PpoCfg,
+    ddpg: DdpgCfg,
+}
+
+impl NativeFactory {
+    pub fn new(
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: &[usize],
+        ppo: PpoCfg,
+        ddpg: DdpgCfg,
+    ) -> Self {
+        Self {
+            obs_dim,
+            act_dim,
+            hidden: hidden.to_vec(),
+            ppo,
+            ddpg,
+        }
+    }
+
+    fn shape(&self) -> NetShape {
+        NetShape::new(self.obs_dim, self.act_dim, &self.hidden)
+    }
+
+    fn layout(&self) -> ParamLayout {
+        ppo_layout(self.obs_dim, self.act_dim, &self.hidden)
+    }
+}
+
+impl BackendFactory for NativeFactory {
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn ppo_param_count(&self) -> usize {
+        self.layout().total()
+    }
+
+    fn init_ppo_params(&self, seed: u64) -> Vec<f32> {
+        self.layout().init_flat(&mut Pcg64::new(seed))
+    }
+
+    fn init_ddpg_params(&self, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let a = actor_layout(self.obs_dim, self.act_dim, &self.hidden).init_flat(&mut rng);
+        let c = critic_layout(self.obs_dim, self.act_dim, &self.hidden).init_flat(&mut rng);
+        (a, c)
+    }
+
+    fn make_actor(&self) -> anyhow::Result<Box<dyn ActorBackend>> {
+        Ok(Box::new(NativeActor {
+            layout: self.layout(),
+            shape: self.shape(),
+        }))
+    }
+
+    fn make_ppo_learner(&self) -> anyhow::Result<Box<dyn PpoLearnerBackend>> {
+        Ok(Box::new(NativePpoLearner {
+            layout: self.layout(),
+            shape: self.shape(),
+            loss_cfg: PpoLossCfg {
+                clip: self.ppo.clip,
+                ent_coef: self.ppo.ent_coef,
+                vf_coef: self.ppo.vf_coef,
+            },
+            gamma: self.ppo.gamma,
+            lam: self.ppo.lam,
+            adam: AdamCfg::default(),
+        }))
+    }
+
+    fn make_ddpg_actor(&self) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
+        Ok(Box::new(NativeDdpgActor {
+            layout: actor_layout(self.obs_dim, self.act_dim, &self.hidden),
+            shape: self.shape(),
+        }))
+    }
+
+    fn make_ddpg_learner(&self) -> anyhow::Result<Box<dyn DdpgLearnerBackend>> {
+        Ok(Box::new(NativeDdpgLearner {
+            alayout: actor_layout(self.obs_dim, self.act_dim, &self.hidden),
+            clayout: critic_layout(self.obs_dim, self.act_dim, &self.hidden),
+            shape: self.shape(),
+            gamma: self.ddpg.gamma,
+            tau: self.ddpg.tau,
+            adam: AdamCfg::default(),
+        }))
+    }
+}
+
+// ---------------------------------------------------------------- actor
+
+struct NativeActor {
+    layout: ParamLayout,
+    shape: NetShape,
+}
+
+impl ActorBackend for NativeActor {
+    fn batch(&self) -> usize {
+        0 // any
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.shape.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.shape.act_dim
+    }
+
+    fn act(&mut self, flat: &[f32], obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResult> {
+        let o = self.shape.obs_dim;
+        let a = self.shape.act_dim;
+        let b = obs.len() / o;
+        anyhow::ensure!(obs.len() == b * o && noise.len() == b * a, "bad act shapes");
+        let obs_m = Mat::from_vec(b, o, obs.to_vec());
+        let noise_m = Mat::from_vec(b, a, noise.to_vec());
+        let out = mlp::act(&self.layout, flat, &self.shape, &obs_m, &noise_m);
+        Ok(ActResult {
+            action: out.action.data,
+            logp: out.logp,
+            value: out.value,
+            mean: out.mean.data,
+        })
+    }
+}
+
+// --------------------------------------------------------------- learner
+
+struct NativePpoLearner {
+    layout: ParamLayout,
+    shape: NetShape,
+    loss_cfg: PpoLossCfg,
+    gamma: f32,
+    lam: f32,
+    adam: AdamCfg,
+}
+
+impl NativePpoLearner {
+    fn to_batch(&self, mb: &PpoMinibatch<'_>) -> PpoBatch {
+        let o = self.shape.obs_dim;
+        let a = self.shape.act_dim;
+        let b = mb.old_logp.len();
+        PpoBatch {
+            obs: Mat::from_vec(b, o, mb.obs.to_vec()),
+            act: Mat::from_vec(b, a, mb.act.to_vec()),
+            old_logp: mb.old_logp.to_vec(),
+            adv: mb.adv.to_vec(),
+            ret: mb.ret.to_vec(),
+            mask: mb.mask.to_vec(),
+        }
+    }
+
+    fn adam_for(&self, state: &PpoTrainState) -> Adam {
+        Adam {
+            cfg: self.adam,
+            m: state.m.clone(),
+            v: state.v.clone(),
+            t: state.t,
+        }
+    }
+}
+
+impl PpoLearnerBackend for NativePpoLearner {
+    fn minibatch_size(&self) -> usize {
+        0 // any
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut PpoTrainState,
+        lr: f32,
+        mb: &PpoMinibatch<'_>,
+    ) -> anyhow::Result<PpoStats> {
+        let batch = self.to_batch(mb);
+        let (grad, stats) =
+            mlp::ppo_loss_grad(&self.layout, &state.flat, &self.shape, &batch, &self.loss_cfg);
+        let mut adam = self.adam_for(state);
+        adam.step(&mut state.flat, &grad, lr);
+        state.m = adam.m;
+        state.v = adam.v;
+        state.t = adam.t;
+        Ok(stats)
+    }
+
+    fn grad(
+        &mut self,
+        flat: &[f32],
+        mb: &PpoMinibatch<'_>,
+    ) -> anyhow::Result<(Vec<f32>, f32, f32)> {
+        let batch = self.to_batch(mb);
+        let (grad, stats) =
+            mlp::ppo_loss_grad(&self.layout, flat, &self.shape, &batch, &self.loss_cfg);
+        let n: f32 = mb.mask.iter().sum();
+        Ok((grad, stats.total, n))
+    }
+
+    fn apply_grads(
+        &mut self,
+        state: &mut PpoTrainState,
+        grads: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<()> {
+        let mut adam = self.adam_for(state);
+        adam.step(&mut state.flat, grads, lr);
+        state.m = adam.m;
+        state.v = adam.v;
+        state.t = adam.t;
+        Ok(())
+    }
+
+    fn gae(
+        &mut self,
+        rew: &[f32],
+        val: &[f32],
+        cont: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        Ok(gae_mod::gae(rew, val, cont, self.gamma, self.lam))
+    }
+}
+
+// ----------------------------------------------------------------- DDPG
+
+struct NativeDdpgActor {
+    layout: ParamLayout,
+    shape: NetShape,
+}
+
+impl DdpgActorBackend for NativeDdpgActor {
+    fn batch(&self) -> usize {
+        0
+    }
+
+    fn act(&mut self, actor: &[f32], obs: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let o = self.shape.obs_dim;
+        let b = obs.len() / o;
+        let obs_m = Mat::from_vec(b, o, obs.to_vec());
+        Ok(mlp::ddpg_actor(&self.layout, actor, &self.shape, &obs_m).data)
+    }
+}
+
+struct NativeDdpgLearner {
+    alayout: ParamLayout,
+    clayout: ParamLayout,
+    shape: NetShape,
+    gamma: f32,
+    tau: f32,
+    adam: AdamCfg,
+}
+
+impl DdpgLearnerBackend for NativeDdpgLearner {
+    fn batch_size(&self) -> usize {
+        0
+    }
+
+    fn train_step(
+        &mut self,
+        st: &mut DdpgTrainState,
+        lr_actor: f32,
+        lr_critic: f32,
+        batch: &DdpgBatch<'_>,
+    ) -> anyhow::Result<(f32, f32)> {
+        let o = self.shape.obs_dim;
+        let a = self.shape.act_dim;
+        let b = batch.rew.len();
+        let obs = Mat::from_vec(b, o, batch.obs.to_vec());
+        let act = Mat::from_vec(b, a, batch.act.to_vec());
+        let next_obs = Mat::from_vec(b, o, batch.next_obs.to_vec());
+
+        // TD target from target nets
+        let next_a = mlp::ddpg_actor(&self.alayout, &st.targ_actor, &self.shape, &next_obs);
+        let q_next = mlp::ddpg_critic(&self.clayout, &st.targ_critic, &self.shape, &next_obs, &next_a);
+        let target: Vec<f32> = (0..b)
+            .map(|i| batch.rew[i] + self.gamma * (1.0 - batch.done[i]) * q_next[i])
+            .collect();
+
+        st.t += 1;
+        // critic step
+        let (cgrad, q_loss) =
+            mlp::ddpg_critic_grad(&self.clayout, &st.critic, &self.shape, &obs, &act, &target);
+        let mut cadam = Adam {
+            cfg: self.adam,
+            m: st.cm.clone(),
+            v: st.cv.clone(),
+            t: st.t - 1,
+        };
+        cadam.step(&mut st.critic, &cgrad, lr_critic);
+        st.cm = cadam.m;
+        st.cv = cadam.v;
+
+        // actor step (through the updated critic, matching model.py)
+        let (agrad, pi_loss) = mlp::ddpg_actor_grad(
+            &self.alayout,
+            &st.actor,
+            &self.clayout,
+            &st.critic,
+            &self.shape,
+            &obs,
+        );
+        let mut aadam = Adam {
+            cfg: self.adam,
+            m: st.am.clone(),
+            v: st.av.clone(),
+            t: st.t - 1,
+        };
+        aadam.step(&mut st.actor, &agrad, lr_actor);
+        st.am = aadam.m;
+        st.av = aadam.v;
+
+        // Polyak soft target update
+        for i in 0..st.actor.len() {
+            st.targ_actor[i] = (1.0 - self.tau) * st.targ_actor[i] + self.tau * st.actor[i];
+        }
+        for i in 0..st.critic.len() {
+            st.targ_critic[i] = (1.0 - self.tau) * st.targ_critic[i] + self.tau * st.critic[i];
+        }
+        Ok((q_loss, pi_loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn factory() -> NativeFactory {
+        NativeFactory::new(3, 2, &[16, 16], PpoCfg::default(), DdpgCfg::default())
+    }
+
+    #[test]
+    fn actor_shapes_and_determinism() {
+        let f = factory();
+        let flat = f.init_ppo_params(0);
+        let mut actor = f.make_actor().unwrap();
+        let obs = vec![0.1f32; 4 * 3];
+        let noise = vec![0.0f32; 4 * 2];
+        let r1 = actor.act(&flat, &obs, &noise).unwrap();
+        let r2 = actor.act(&flat, &obs, &noise).unwrap();
+        assert_eq!(r1.action, r2.action);
+        assert_eq!(r1.action.len(), 8);
+        assert_eq!(r1.logp.len(), 4);
+        assert_eq!(r1.action, r1.mean); // zero noise
+    }
+
+    #[test]
+    fn train_step_mutates_state_and_advances_t() {
+        let f = factory();
+        let mut learner = f.make_ppo_learner().unwrap();
+        let mut st = PpoTrainState::new(f.init_ppo_params(1));
+        let before = st.flat.clone();
+        let b = 16;
+        let mut rng = Pcg64::new(2);
+        let obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+        let act: Vec<f32> = (0..b * 2).map(|_| rng.normal()).collect();
+        let old_logp = vec![-2.0f32; b];
+        let adv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let ret: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let mask = vec![1.0f32; b];
+        let mb = PpoMinibatch {
+            obs: &obs,
+            act: &act,
+            old_logp: &old_logp,
+            adv: &adv,
+            ret: &ret,
+            mask: &mask,
+        };
+        let stats = learner.train_step(&mut st, 1e-3, &mb).unwrap();
+        assert!(stats.total.is_finite());
+        assert_eq!(st.t, 1);
+        assert_ne!(st.flat, before);
+    }
+
+    #[test]
+    fn grad_then_apply_equals_train_step() {
+        let f = factory();
+        let mut l1 = f.make_ppo_learner().unwrap();
+        let mut l2 = f.make_ppo_learner().unwrap();
+        let flat = f.init_ppo_params(3);
+        let mut s1 = PpoTrainState::new(flat.clone());
+        let mut s2 = PpoTrainState::new(flat);
+        let b = 8;
+        let mut rng = Pcg64::new(4);
+        let obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+        let act: Vec<f32> = (0..b * 2).map(|_| rng.normal()).collect();
+        let old_logp = vec![-2.5f32; b];
+        let adv: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let ret = vec![0.0f32; b];
+        let mask = vec![1.0f32; b];
+        let mb = PpoMinibatch {
+            obs: &obs,
+            act: &act,
+            old_logp: &old_logp,
+            adv: &adv,
+            ret: &ret,
+            mask: &mask,
+        };
+        l1.train_step(&mut s1, 1e-3, &mb).unwrap();
+        let (g, _, _) = l2.grad(&s2.flat, &mb).unwrap();
+        l2.apply_grads(&mut s2, &g, 1e-3).unwrap();
+        let max_diff = s1
+            .flat
+            .iter()
+            .zip(&s2.flat)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-6, "{max_diff}");
+    }
+
+    #[test]
+    fn ddpg_train_step_moves_targets_toward_online() {
+        let f = factory();
+        let mut learner = f.make_ddpg_learner().unwrap();
+        let (a, c) = f.init_ddpg_params(5);
+        let mut st = DdpgTrainState::new(a, c);
+        let b = 8;
+        let mut rng = Pcg64::new(6);
+        let obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+        let act: Vec<f32> = (0..b * 2).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let rew = vec![1.0f32; b];
+        let next_obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+        let done = vec![0.0f32; b];
+        let batch = DdpgBatch {
+            obs: &obs,
+            act: &act,
+            rew: &rew,
+            next_obs: &next_obs,
+            done: &done,
+        };
+        let ta_before = st.targ_actor.clone();
+        let (q_loss, pi_loss) = learner.train_step(&mut st, 1e-3, 1e-3, &batch).unwrap();
+        assert!(q_loss.is_finite() && pi_loss.is_finite());
+        assert_ne!(st.targ_actor, ta_before);
+        // targets moved only a little (tau = 0.005)
+        let drift: f32 = st
+            .targ_actor
+            .iter()
+            .zip(&ta_before)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(drift < 0.01, "target drift {drift}");
+    }
+}

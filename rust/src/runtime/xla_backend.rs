@@ -1,0 +1,491 @@
+//! XLA/PJRT backend: loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! This is the production request path: Python is never loaded; the HLO
+//! text (containing the lowered L2 model and L1 Pallas kernels) is parsed,
+//! compiled once per worker thread at startup, and executed with `Literal`
+//! buffers from then on. PJRT handles are not `Send`, so `XlaFactory`
+//! (which is `Send + Sync`) carries only paths/metadata and each call to
+//! `make_*` constructs a thread-local client + executables.
+
+use super::{
+    ActResult, ActorBackend, BackendFactory, DdpgActorBackend, DdpgBatch, DdpgLearnerBackend,
+    DdpgTrainState, PpoLearnerBackend, PpoMinibatch, PpoTrainState,
+};
+use crate::nn::mlp::PpoStats;
+use crate::runtime::artifacts::PresetMeta;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::Path;
+
+/// Factory carrying artifact metadata; backends are built per thread.
+pub struct XlaFactory {
+    meta: PresetMeta,
+}
+
+impl XlaFactory {
+    pub fn new(artifacts_dir: &str, preset: &str) -> Result<Self> {
+        let meta = PresetMeta::load(artifacts_dir, preset)?;
+        Ok(Self { meta })
+    }
+
+    pub fn meta(&self) -> &PresetMeta {
+        &self.meta
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {path:?}"))
+}
+
+/// Execute and unpack the (return_tuple=True) result into literals.
+fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+    Ok(result.to_tuple()?)
+}
+
+fn lit_1d(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    ensure!(data.len() == rows * cols, "bad 2d literal shape");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+fn to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Device-resident parameter buffer cache (§Perf, EXPERIMENTS.md).
+///
+/// The sampler hot path calls `act` once per environment step but the
+/// parameter vector only changes when the policy store publishes a new
+/// version, so re-staging the (tens of KB) flat vector as a fresh Literal
+/// every call dominated inference latency. We cache the params as a
+/// `PjRtBuffer` keyed by a cheap fingerprint (pointer + length + sampled
+/// values) and only re-upload on change.
+struct ParamBufCache {
+    key: u128,
+    buf: Option<xla::PjRtBuffer>,
+}
+
+impl ParamBufCache {
+    fn new() -> Self {
+        Self { key: 0, buf: None }
+    }
+
+    fn fingerprint(data: &[f32]) -> u128 {
+        let mut h = data.as_ptr() as u128;
+        h = h.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(data.len() as u128);
+        // sample a few values so a reused allocation with new content
+        // cannot alias the old key
+        for &i in &[0usize, data.len() / 2, data.len().saturating_sub(1)] {
+            if let Some(v) = data.get(i) {
+                h = h
+                    .wrapping_mul(0x100000001b3)
+                    .wrapping_add(v.to_bits() as u128);
+            }
+        }
+        h | 1 // never 0 (the empty-cache sentinel)
+    }
+
+    fn get(
+        &mut self,
+        client: &xla::PjRtClient,
+        data: &[f32],
+    ) -> Result<&xla::PjRtBuffer> {
+        let key = Self::fingerprint(data);
+        if self.key != key || self.buf.is_none() {
+            self.buf = Some(client.buffer_from_host_buffer(data, &[data.len()], None)?);
+            self.key = key;
+        }
+        Ok(self.buf.as_ref().unwrap())
+    }
+}
+
+fn scalar_of(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+impl BackendFactory for XlaFactory {
+    fn obs_dim(&self) -> usize {
+        self.meta.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.meta.act_dim
+    }
+
+    fn ppo_param_count(&self) -> usize {
+        self.meta.param_count
+    }
+
+    fn init_ppo_params(&self, seed: u64) -> Vec<f32> {
+        self.meta.layout.init_flat(&mut Pcg64::new(seed))
+    }
+
+    fn init_ddpg_params(&self, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let d = self.meta.ddpg.as_ref().expect("preset has no DDPG artifacts");
+        let mut rng = Pcg64::new(seed);
+        (
+            d.actor_layout.init_flat(&mut rng),
+            d.critic_layout.init_flat(&mut rng),
+        )
+    }
+
+    fn make_actor(&self) -> Result<Box<dyn ActorBackend>> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = compile(&client, self.meta.artifact("act")?)?;
+        Ok(Box::new(XlaActor {
+            client,
+            exe,
+            batch: self.meta.act_batch,
+            obs_dim: self.meta.obs_dim,
+            act_dim: self.meta.act_dim,
+            params: ParamBufCache::new(),
+        }))
+    }
+
+    fn make_ppo_learner(&self) -> Result<Box<dyn PpoLearnerBackend>> {
+        let client = xla::PjRtClient::cpu()?;
+        let train = compile(&client, self.meta.artifact("train_ppo")?)?;
+        let gae = compile(&client, self.meta.artifact("gae")?)?;
+        let grad = if self.meta.has_artifact("grad_ppo") {
+            Some(compile(&client, self.meta.artifact("grad_ppo")?)?)
+        } else {
+            None
+        };
+        let apply = if self.meta.has_artifact("apply_grads") {
+            Some(compile(&client, self.meta.artifact("apply_grads")?)?)
+        } else {
+            None
+        };
+        Ok(Box::new(XlaPpoLearner {
+            _client: client,
+            train,
+            gae,
+            grad,
+            apply,
+            minibatch: self.meta.minibatch,
+            horizon: self.meta.horizon,
+            obs_dim: self.meta.obs_dim,
+            act_dim: self.meta.act_dim,
+            param_count: self.meta.param_count,
+        }))
+    }
+
+    fn make_ddpg_actor(&self) -> Result<Box<dyn DdpgActorBackend>> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = compile(&client, self.meta.artifact("act_ddpg")?)?;
+        Ok(Box::new(XlaDdpgActor {
+            client,
+            exe,
+            batch: self.meta.act_batch,
+            obs_dim: self.meta.obs_dim,
+            params: ParamBufCache::new(),
+        }))
+    }
+
+    fn make_ddpg_learner(&self) -> Result<Box<dyn DdpgLearnerBackend>> {
+        let d = self
+            .meta
+            .ddpg
+            .as_ref()
+            .ok_or_else(|| anyhow!("preset {} has no DDPG artifacts", self.meta.preset))?;
+        let client = xla::PjRtClient::cpu()?;
+        let exe = compile(&client, self.meta.artifact("train_ddpg")?)?;
+        Ok(Box::new(XlaDdpgLearner {
+            _client: client,
+            exe,
+            batch: d.batch,
+            obs_dim: self.meta.obs_dim,
+            act_dim: self.meta.act_dim,
+        }))
+    }
+}
+
+// ----------------------------------------------------------------- actor
+
+struct XlaActor {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    params: ParamBufCache,
+}
+
+impl ActorBackend for XlaActor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn act(&mut self, flat: &[f32], obs: &[f32], noise: &[f32]) -> Result<ActResult> {
+        ensure!(
+            obs.len() == self.batch * self.obs_dim,
+            "act: obs len {} != B{} * O{}",
+            obs.len(),
+            self.batch,
+            self.obs_dim
+        );
+        let param_buf = self.params.get(&self.client, flat)?;
+        let obs_buf =
+            self.client
+                .buffer_from_host_buffer(obs, &[self.batch, self.obs_dim], None)?;
+        let noise_buf =
+            self.client
+                .buffer_from_host_buffer(noise, &[self.batch, self.act_dim], None)?;
+        let result =
+            self.exe.execute_b::<&xla::PjRtBuffer>(&[param_buf, &obs_buf, &noise_buf])?[0][0]
+                .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 4, "act artifact returned {} outputs", outs.len());
+        Ok(ActResult {
+            action: to_vec(&outs[0])?,
+            logp: to_vec(&outs[1])?,
+            value: to_vec(&outs[2])?,
+            mean: to_vec(&outs[3])?,
+        })
+    }
+}
+
+// --------------------------------------------------------------- learner
+
+struct XlaPpoLearner {
+    _client: xla::PjRtClient,
+    train: xla::PjRtLoadedExecutable,
+    gae: xla::PjRtLoadedExecutable,
+    grad: Option<xla::PjRtLoadedExecutable>,
+    apply: Option<xla::PjRtLoadedExecutable>,
+    minibatch: usize,
+    horizon: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    param_count: usize,
+}
+
+impl PpoLearnerBackend for XlaPpoLearner {
+    fn minibatch_size(&self) -> usize {
+        self.minibatch
+    }
+
+    fn train_step(
+        &mut self,
+        state: &mut PpoTrainState,
+        lr: f32,
+        mb: &PpoMinibatch<'_>,
+    ) -> Result<PpoStats> {
+        let m = self.minibatch;
+        ensure!(state.flat.len() == self.param_count, "bad param count");
+        ensure!(mb.old_logp.len() == m, "minibatch must be padded to {m}");
+        state.t += 1;
+        let args = [
+            lit_1d(&state.flat),
+            lit_1d(&state.m),
+            lit_1d(&state.v),
+            lit_scalar(state.t as f32),
+            lit_scalar(lr),
+            lit_2d(mb.obs, m, self.obs_dim)?,
+            lit_2d(mb.act, m, self.act_dim)?,
+            lit_1d(mb.old_logp),
+            lit_1d(mb.adv),
+            lit_1d(mb.ret),
+            lit_1d(mb.mask),
+        ];
+        let outs = run(&self.train, &args)?;
+        ensure!(outs.len() == 9, "train_ppo returned {} outputs", outs.len());
+        state.flat = to_vec(&outs[0])?;
+        state.m = to_vec(&outs[1])?;
+        state.v = to_vec(&outs[2])?;
+        Ok(PpoStats {
+            total: scalar_of(&outs[3])?,
+            pi_loss: scalar_of(&outs[4])?,
+            v_loss: scalar_of(&outs[5])?,
+            entropy: scalar_of(&outs[6])?,
+            approx_kl: scalar_of(&outs[7])?,
+            clip_frac: scalar_of(&outs[8])?,
+        })
+    }
+
+    fn grad(&mut self, flat: &[f32], mb: &PpoMinibatch<'_>) -> Result<(Vec<f32>, f32, f32)> {
+        let exe = self
+            .grad
+            .as_ref()
+            .ok_or_else(|| anyhow!("grad_ppo artifact not emitted for this preset"))?;
+        let m = self.minibatch;
+        let args = [
+            lit_1d(flat),
+            lit_2d(mb.obs, m, self.obs_dim)?,
+            lit_2d(mb.act, m, self.act_dim)?,
+            lit_1d(mb.old_logp),
+            lit_1d(mb.adv),
+            lit_1d(mb.ret),
+            lit_1d(mb.mask),
+        ];
+        let outs = run(exe, &args)?;
+        ensure!(outs.len() == 3, "grad_ppo returned {} outputs", outs.len());
+        Ok((to_vec(&outs[0])?, scalar_of(&outs[1])?, scalar_of(&outs[2])?))
+    }
+
+    fn apply_grads(&mut self, state: &mut PpoTrainState, grads: &[f32], lr: f32) -> Result<()> {
+        let exe = self
+            .apply
+            .as_ref()
+            .ok_or_else(|| anyhow!("apply_grads artifact not emitted for this preset"))?;
+        state.t += 1;
+        let args = [
+            lit_1d(&state.flat),
+            lit_1d(&state.m),
+            lit_1d(&state.v),
+            lit_1d(grads),
+            lit_scalar(state.t as f32),
+            lit_scalar(lr),
+        ];
+        let outs = run(exe, &args)?;
+        ensure!(outs.len() == 3, "apply_grads returned {} outputs", outs.len());
+        state.flat = to_vec(&outs[0])?;
+        state.m = to_vec(&outs[1])?;
+        state.v = to_vec(&outs[2])?;
+        Ok(())
+    }
+
+    /// GAE via the L1 Pallas gae_scan artifact. Ragged inputs are padded to
+    /// the preset horizon; the padding contributes exactly zero because
+    /// `cont` is zero there (see kernels/gae.py).
+    fn gae(&mut self, rew: &[f32], val: &[f32], cont: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let t_len = rew.len();
+        ensure!(val.len() == t_len + 1, "val needs bootstrap entry");
+        ensure!(
+            t_len <= self.horizon,
+            "trajectory length {t_len} exceeds artifact horizon {}",
+            self.horizon
+        );
+        let h = self.horizon;
+        let mut rew_p = vec![0.0f32; h];
+        rew_p[..t_len].copy_from_slice(rew);
+        let mut cont_p = vec![0.0f32; h];
+        cont_p[..t_len].copy_from_slice(cont);
+        let mut val_p = vec![0.0f32; h + 1];
+        val_p[..=t_len].copy_from_slice(val);
+        if t_len < h {
+            // Make the first padded step's delta exactly zero:
+            //   delta[t_len] = rew[t_len] + γ·cont[t_len]·val[t_len+1] - val[t_len]
+            // cont[t_len] = 0 and rew[t_len] = val[t_len] (the bootstrap)
+            // gives delta = 0, so adv[t_len] = 0 and the carry into the
+            // last real step is clean while delta[t_len-1] still sees the
+            // bootstrap in val[t_len].
+            rew_p[t_len] = val[t_len];
+        }
+        let args = [lit_1d(&rew_p), lit_1d(&val_p), lit_1d(&cont_p)];
+        let outs = run(&self.gae, &args)?;
+        ensure!(outs.len() == 2, "gae returned {} outputs", outs.len());
+        let mut adv = to_vec(&outs[0])?;
+        let mut ret = to_vec(&outs[1])?;
+        adv.truncate(t_len);
+        ret.truncate(t_len);
+        Ok((adv, ret))
+    }
+}
+
+// ------------------------------------------------------------------ DDPG
+
+struct XlaDdpgActor {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    obs_dim: usize,
+    params: ParamBufCache,
+}
+
+impl DdpgActorBackend for XlaDdpgActor {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn act(&mut self, actor: &[f32], obs: &[f32]) -> Result<Vec<f32>> {
+        let param_buf = self.params.get(&self.client, actor)?;
+        let obs_buf =
+            self.client
+                .buffer_from_host_buffer(obs, &[self.batch, self.obs_dim], None)?;
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&[param_buf, &obs_buf])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 1, "act_ddpg returned {} outputs", outs.len());
+        to_vec(&outs[0])
+    }
+}
+
+struct XlaDdpgLearner {
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl DdpgLearnerBackend for XlaDdpgLearner {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn train_step(
+        &mut self,
+        st: &mut DdpgTrainState,
+        lr_actor: f32,
+        lr_critic: f32,
+        batch: &DdpgBatch<'_>,
+    ) -> Result<(f32, f32)> {
+        let b = self.batch;
+        ensure!(batch.rew.len() == b, "ddpg batch must be exactly {b}");
+        st.t += 1;
+        let args = [
+            lit_1d(&st.actor),
+            lit_1d(&st.critic),
+            lit_1d(&st.targ_actor),
+            lit_1d(&st.targ_critic),
+            lit_1d(&st.am),
+            lit_1d(&st.av),
+            lit_1d(&st.cm),
+            lit_1d(&st.cv),
+            lit_scalar(st.t as f32),
+            lit_scalar(lr_actor),
+            lit_scalar(lr_critic),
+            lit_2d(batch.obs, b, self.obs_dim)?,
+            lit_2d(batch.act, b, self.act_dim)?,
+            lit_1d(batch.rew),
+            lit_2d(batch.next_obs, b, self.obs_dim)?,
+            lit_1d(batch.done),
+        ];
+        let outs = run(&self.exe, &args)?;
+        ensure!(outs.len() == 10, "train_ddpg returned {} outputs", outs.len());
+        st.actor = to_vec(&outs[0])?;
+        st.critic = to_vec(&outs[1])?;
+        st.targ_actor = to_vec(&outs[2])?;
+        st.targ_critic = to_vec(&outs[3])?;
+        st.am = to_vec(&outs[4])?;
+        st.av = to_vec(&outs[5])?;
+        st.cm = to_vec(&outs[6])?;
+        st.cv = to_vec(&outs[7])?;
+        Ok((scalar_of(&outs[8])?, scalar_of(&outs[9])?))
+    }
+}

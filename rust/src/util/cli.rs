@@ -1,0 +1,192 @@
+//! Minimal command-line argument parser (the offline crate set has no
+//! `clap`). Supports subcommands, `--flag`, `--key value` / `--key=value`,
+//! typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+/// CLI parse/validation error.
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl Args {
+    /// Parse raw argv (without the program name). The first token that does
+    /// not start with `--` becomes the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(CliError("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // (then it is a boolean switch).
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if args.command.is_none() && args.positional.is_empty() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected float, got {v:?}"))),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(CliError(format!("--{key}: expected bool, got {v:?}"))),
+        }
+    }
+
+    /// Comma-separated usize list, e.g. `--samplers 1,2,4,8,10`.
+    pub fn usize_list_or(
+        &self,
+        key: &str,
+        default: &[usize],
+    ) -> Result<Vec<usize>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: bad list item {s:?}")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Fail if a required flag is absent.
+    pub fn require(&self, key: &str) -> Result<&str, CliError> {
+        self.get(key)
+            .ok_or_else(|| CliError(format!("missing required flag --{key}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --env halfcheetah --samplers 10 --verbose");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("env"), Some("halfcheetah"));
+        assert_eq!(a.usize_or("samplers", 1).unwrap(), 10);
+        assert!(a.bool_or("verbose", false).unwrap());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("figures --fig=4 --out-dir=/tmp/x");
+        assert_eq!(a.usize_or("fig", 0).unwrap(), 4);
+        assert_eq!(a.get("out-dir"), Some("/tmp/x"));
+    }
+
+    #[test]
+    fn boolean_switch_before_flag() {
+        let a = parse("train --fast --env pendulum");
+        assert!(a.bool_or("fast", false).unwrap());
+        assert_eq!(a.get("env"), Some("pendulum"));
+    }
+
+    #[test]
+    fn numeric_and_list_parsing() {
+        let a = parse("x --lr 3e-4 --ns 1,2,4");
+        assert!((a.f32_or("lr", 0.0).unwrap() - 3e-4).abs() < 1e-9);
+        assert_eq!(a.usize_list_or("ns", &[]).unwrap(), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn errors_on_bad_types() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 1).is_err());
+        assert!(a.require("missing").is_err());
+        assert!(parse("x --b maybe").bool_or("b", false).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("x --offset -3");
+        // "-3" doesn't start with --, so it's consumed as the value
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse("eval ckpt.bin more");
+        assert_eq!(a.command.as_deref(), Some("eval"));
+        assert_eq!(a.positional(), &["ckpt.bin".to_string(), "more".to_string()]);
+    }
+}

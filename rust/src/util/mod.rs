@@ -1,0 +1,14 @@
+//! Hand-rolled substrates: RNG, JSON, CLI parsing, statistics, timing,
+//! logging and a mini property-test harness.
+//!
+//! These exist because the build environment is fully offline and the
+//! cached crate set has no `rand` / `serde` / `clap` / `proptest`; see
+//! DESIGN.md §7. Each module is small, documented and unit-tested.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,204 @@
+//! Mini property-testing harness (the offline crate set has no `proptest`).
+//!
+//! `check` runs a property over `cases` randomly generated inputs; on
+//! failure it performs greedy shrinking via the generator's `shrink` hook
+//! and panics with the minimal counter-example it found, plus the seed to
+//! reproduce. Coordinator invariants (routing, batching, queue state) and
+//! the GAE/normalizer math are property-tested with this.
+
+use crate::util::rng::Pcg64;
+
+/// A random-input generator with optional shrinking.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Candidate smaller inputs; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` random inputs from `gen` (seeded, reproducible).
+/// Panics with the (shrunk) counter-example on failure.
+pub fn check<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(gen, input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}).\n\
+                 minimal counter-example: {minimal:#?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+) -> G::Value {
+    // Greedy: keep taking the first shrink candidate that still fails.
+    for _ in 0..1000 {
+        let mut advanced = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// stock generators
+// ---------------------------------------------------------------------------
+
+/// usize in [lo, hi]; shrinks toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// f32 in [lo, hi); shrinks toward 0 (clamped into range).
+pub struct F32In(pub f32, pub f32);
+
+impl Gen for F32In {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Pcg64) -> f32 {
+        rng.uniform(self.0, self.1)
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let zero = 0.0f32.clamp(self.0, self.1);
+        if (*v - zero).abs() < 1e-6 {
+            Vec::new()
+        } else {
+            vec![zero, *v / 2.0]
+        }
+    }
+}
+
+/// Vec of f32 with length in [min_len, max_len]; shrinks by halving length
+/// and zeroing elements.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..len).map(|_| rng.uniform(self.lo, self.hi)).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            out.push(v[..self.min_len.max(v.len() / 2)].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; v.len()]);
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, &UsizeIn(0, 100), |&v| v <= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counter-example")]
+    fn failing_property_panics_with_counterexample() {
+        check(2, 200, &UsizeIn(0, 100), |&v| v < 50);
+    }
+
+    #[test]
+    fn shrinks_to_boundary() {
+        // verify the shrinker finds the minimal failing usize (50)
+        let gen = UsizeIn(0, 100);
+        let failing = 93usize;
+        let min = shrink_loop(&gen, failing, &|&v: &usize| v < 50);
+        assert_eq!(min, 50);
+    }
+
+    #[test]
+    fn vec_gen_respects_length_bounds() {
+        let gen = VecF32 {
+            min_len: 2,
+            max_len: 9,
+            lo: -1.0,
+            hi: 1.0,
+        };
+        let mut rng = Pcg64::new(3);
+        for _ in 0..100 {
+            let v = gen.generate(&mut rng);
+            assert!((2..=9).contains(&v.len()));
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        let gen = Pair(UsizeIn(1, 4), F32In(0.0, 1.0));
+        check(4, 100, &gen, |(n, x)| *n >= 1 && *x < 1.0);
+    }
+}

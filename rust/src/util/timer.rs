@@ -1,0 +1,159 @@
+//! Timing utilities: scoped stopwatch and a named-phase accumulator used by
+//! the coordinator to attribute each iteration's wall-clock to experience
+//! collection vs policy learning (the paper's Figs 4–7 decomposition).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Per-thread CPU time in seconds (CLOCK_THREAD_CPUTIME_ID) — counts only
+/// cycles this thread actually executed, immune to preemption. This is
+/// what the sampler busy-time accounting uses so that the virtual-core
+/// timing model (DESIGN.md §3) stays exact even when N worker threads
+/// share fewer physical cores.
+pub fn thread_cpu_secs() -> f64 {
+    let mut ts = libc::timespec {
+        tv_sec: 0,
+        tv_nsec: 0,
+    };
+    // SAFETY: ts is a valid out-pointer; the clock id is a constant.
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates durations under string keys; cheap enough for per-iteration
+/// bookkeeping (a handful of map lookups per iteration, not per step).
+#[derive(Debug, Clone, Default)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, Duration>,
+}
+
+impl PhaseTimer {
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+    }
+
+    /// Time a closure and accumulate under `phase`, returning its value.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn secs(&self, phase: &str) -> f64 {
+        self.acc
+            .get(phase)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.acc.values().map(|d| d.as_secs_f64()).sum()
+    }
+
+    /// Fraction of the accumulated total spent in `phase` (0 if empty).
+    pub fn fraction(&self, phase: &str) -> f64 {
+        let total = self.total_secs();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.secs(phase) / total
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.clear();
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.acc.iter().map(|(k, v)| (*k, v.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_time_advances_with_work() {
+        let t0 = thread_cpu_secs();
+        // burn some CPU
+        let mut acc = 0u64;
+        for i in 0..5_000_000u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        let spin = thread_cpu_secs() - t0;
+        assert!(spin > 0.0, "cpu time did not advance");
+        // and sleeping must NOT advance it (the whole point)
+        let t1 = thread_cpu_secs();
+        std::thread::sleep(Duration::from_millis(30));
+        let slept = thread_cpu_secs() - t1;
+        assert!(slept < 0.02, "sleep counted as cpu time: {slept}");
+    }
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(sw.elapsed_secs() >= 0.009);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::default();
+        t.add("collect", Duration::from_millis(30));
+        t.add("learn", Duration::from_millis(10));
+        t.add("collect", Duration::from_millis(30));
+        assert!((t.secs("collect") - 0.06).abs() < 1e-9);
+        assert!((t.secs("learn") - 0.01).abs() < 1e-9);
+        assert!((t.fraction("collect") - 6.0 / 7.0).abs() < 1e-9);
+        assert_eq!(t.secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimer::default();
+        let v = t.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t.secs("work") >= 0.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut t = PhaseTimer::default();
+        t.add("a", Duration::from_millis(5));
+        t.reset();
+        assert_eq!(t.total_secs(), 0.0);
+    }
+}

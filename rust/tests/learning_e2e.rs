@@ -1,0 +1,72 @@
+//! Learning end-to-end: the full WALL-E stack must actually *learn* —
+//! pendulum PPO return improves substantially over a short native-backend
+//! run (fast, artifact-free), and the N>1 configuration learns as well as
+//! N=1 at equal sample budget (the paper's "parallelism does not hurt
+//! average return" claim, Fig 3/4 discussion).
+
+use walle::config::{Backend, TrainConfig};
+use walle::coordinator::metrics::MetricsLog;
+use walle::coordinator::orchestrator;
+use walle::runtime::make_factory;
+use walle::util::stats::mean_f32;
+
+fn learn_cfg(samplers: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("pendulum");
+    cfg.backend = Backend::Native;
+    cfg.samplers = samplers;
+    cfg.seed = seed;
+    cfg.samples_per_iter = 4_000;
+    cfg.iterations = 40;
+    cfg.chunk_steps = 200;
+    cfg.hidden = vec![64, 64];
+    cfg.ppo.epochs = 10;
+    cfg.ppo.minibatch = 256;
+    cfg.ppo.lr = 1e-3;
+    cfg
+}
+
+fn run_returns(cfg: &TrainConfig) -> Vec<f32> {
+    let factory = make_factory(cfg).unwrap();
+    let mut log = MetricsLog::quiet();
+    let r = orchestrator::run(cfg, factory.as_ref(), &mut log).unwrap();
+    r.metrics.iter().map(|m| m.mean_return).collect()
+}
+
+#[test]
+fn ppo_improves_pendulum_return() {
+    let returns = run_returns(&learn_cfg(4, 0));
+    let early = mean_f32(&returns[..3]);
+    // best 5-iteration window in the back half (PPO curves oscillate)
+    let best_late = returns[returns.len() / 2..]
+        .windows(5)
+        .map(mean_f32)
+        .fold(f32::NEG_INFINITY, f32::max);
+    // pendulum random policy ~ -1100..-1400; a learning run reaches much
+    // better than that within 40 iterations (typically better than -500)
+    assert!(
+        best_late > early + 500.0,
+        "no learning: early {early:.0} best_late {best_late:.0} ({returns:?})"
+    );
+    assert!(best_late > -800.0, "final return too weak: {best_late:.0}");
+}
+
+#[test]
+fn parallel_sampling_does_not_hurt_learning() {
+    // Same sample budget per iteration with N=1 vs N=6: final returns must
+    // be in the same band (the paper's core "no return degradation" claim).
+    let best = |r: &Vec<f32>| {
+        r[r.len() / 2..]
+            .windows(5)
+            .map(mean_f32)
+            .fold(f32::NEG_INFINITY, f32::max)
+    };
+    let r1 = run_returns(&learn_cfg(1, 1));
+    let r6 = run_returns(&learn_cfg(6, 1));
+    let (t1, t6) = (best(&r1), best(&r6));
+    assert!(
+        (t1 - t6).abs() < 450.0,
+        "N=6 diverged from N=1 baseline: {t1:.0} vs {t6:.0}"
+    );
+    // and both actually learned
+    assert!(t1 > -800.0 && t6 > -800.0, "t1={t1:.0} t6={t6:.0}");
+}

@@ -1,0 +1,253 @@
+//! Integration: the AOT/XLA path against the native oracle.
+//!
+//! These tests require `make artifacts` to have run (they are the
+//! authentic consumer of the HLO text files): load each artifact through
+//! PJRT, execute it, and compare numerics against the pure-Rust mirror,
+//! which is itself finite-difference-verified in unit tests. Agreement
+//! here certifies the whole Python→HLO→PJRT→Rust chain.
+
+use walle::config::{DdpgCfg, PpoCfg};
+use walle::runtime::native_backend::NativeFactory;
+use walle::runtime::xla_backend::XlaFactory;
+use walle::runtime::{BackendFactory, DdpgBatch, DdpgTrainState, PpoMinibatch, PpoTrainState};
+use walle::util::rng::Pcg64;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/index.json").exists()
+}
+
+fn xla_factory(preset: &str) -> XlaFactory {
+    XlaFactory::new("artifacts", preset).expect("artifact load")
+}
+
+fn native_for(xf: &XlaFactory) -> NativeFactory {
+    let m = xf.meta();
+    NativeFactory::new(
+        m.obs_dim,
+        m.act_dim,
+        &m.hidden,
+        PpoCfg {
+            clip: m.clip,
+            ent_coef: m.ent_coef,
+            vf_coef: m.vf_coef,
+            gamma: m.gamma,
+            lam: m.lam,
+            ..Default::default()
+        },
+        DdpgCfg {
+            gamma: m.ddpg.as_ref().map(|d| d.gamma).unwrap_or(0.99),
+            tau: m.ddpg.as_ref().map(|d| d.tau).unwrap_or(0.005),
+            ..Default::default()
+        },
+    )
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn act_artifact_matches_native_oracle() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let xf = xla_factory("pendulum");
+    let nf = native_for(&xf);
+    let flat = xf.init_ppo_params(42);
+    let mut xa = xf.make_actor().unwrap();
+    let mut na = nf.make_actor().unwrap();
+    let b = xa.batch();
+    let mut rng = Pcg64::new(1);
+    for trial in 0..10 {
+        let obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+        let noise: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+        let xr = xa.act(&flat, &obs, &noise).unwrap();
+        let nr = na.act(&flat, &obs, &noise).unwrap();
+        assert!(
+            max_abs_diff(&xr.action, &nr.action) < 1e-4,
+            "trial {trial}: actions diverge"
+        );
+        assert!(max_abs_diff(&xr.logp, &nr.logp) < 1e-3, "trial {trial}: logp");
+        assert!(max_abs_diff(&xr.value, &nr.value) < 1e-4, "trial {trial}: value");
+        assert!(max_abs_diff(&xr.mean, &nr.mean) < 1e-4, "trial {trial}: mean");
+    }
+}
+
+#[test]
+fn gae_artifact_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let xf = xla_factory("pendulum");
+    let nf = native_for(&xf);
+    let mut xl = xf.make_ppo_learner().unwrap();
+    let mut nl = nf.make_ppo_learner().unwrap();
+    let mut rng = Pcg64::new(2);
+    // ragged lengths exercise the horizon padding path
+    for t in [1usize, 7, 100, 200, 256] {
+        let rew: Vec<f32> = (0..t).map(|_| rng.normal()).collect();
+        let val: Vec<f32> = (0..=t).map(|_| rng.normal()).collect();
+        let cont: Vec<f32> = (0..t)
+            .map(|_| if rng.next_f32() < 0.1 { 0.0 } else { 1.0 })
+            .collect();
+        let (xa, xr) = xl.gae(&rew, &val, &cont).unwrap();
+        let (na, nr) = nl.gae(&rew, &val, &cont).unwrap();
+        assert_eq!(xa.len(), t);
+        assert!(max_abs_diff(&xa, &na) < 1e-3, "T={t}: adv diverges");
+        assert!(max_abs_diff(&xr, &nr) < 1e-3, "T={t}: ret diverges");
+    }
+}
+
+#[test]
+fn train_ppo_artifact_matches_native_step() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let xf = xla_factory("pendulum");
+    let nf = native_for(&xf);
+    let flat = xf.init_ppo_params(7);
+    let mut xl = xf.make_ppo_learner().unwrap();
+    let mut nl = nf.make_ppo_learner().unwrap();
+    let m = xl.minibatch_size();
+    let mut rng = Pcg64::new(3);
+
+    // consistent synthetic batch: actions drawn from the policy itself
+    let mut actor = nf.make_actor().unwrap();
+    let obs: Vec<f32> = (0..m * 3).map(|_| rng.normal()).collect();
+    let noise: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let out = actor.act(&flat, &obs, &noise).unwrap();
+    let old_logp: Vec<f32> = out.logp.iter().map(|l| l - 0.1).collect();
+    let adv: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let ret: Vec<f32> = out.value.iter().map(|v| v + 0.5).collect();
+    // mask the tail to exercise exact padding semantics
+    let mut mask = vec![1.0f32; m];
+    for v in mask.iter_mut().skip(m - 16) {
+        *v = 0.0;
+    }
+    let mb = PpoMinibatch {
+        obs: &obs,
+        act: &out.action,
+        old_logp: &old_logp,
+        adv: &adv,
+        ret: &ret,
+        mask: &mask,
+    };
+
+    let mut xs = PpoTrainState::new(flat.clone());
+    let mut ns = PpoTrainState::new(flat);
+    let xstats = xl.train_step(&mut xs, 3e-4, &mb).unwrap();
+    let nstats = nl.train_step(&mut ns, 3e-4, &mb).unwrap();
+
+    assert!((xstats.total - nstats.total).abs() < 2e-3, "{xstats:?} vs {nstats:?}");
+    assert!((xstats.pi_loss - nstats.pi_loss).abs() < 2e-3);
+    assert!((xstats.v_loss - nstats.v_loss).abs() < 2e-3);
+    assert!((xstats.approx_kl - nstats.approx_kl).abs() < 1e-3);
+    assert!((xstats.clip_frac - nstats.clip_frac).abs() < 1e-5);
+    // updated parameters agree to float tolerance
+    assert!(
+        max_abs_diff(&xs.flat, &ns.flat) < 5e-4,
+        "params diverged after one step: {}",
+        max_abs_diff(&xs.flat, &ns.flat)
+    );
+    assert_eq!(xs.t, 1);
+
+    // a few more steps should stay in lockstep
+    for _ in 0..3 {
+        xl.train_step(&mut xs, 3e-4, &mb).unwrap();
+        nl.train_step(&mut ns, 3e-4, &mb).unwrap();
+    }
+    assert!(max_abs_diff(&xs.flat, &ns.flat) < 3e-3);
+}
+
+#[test]
+fn grad_and_apply_artifacts_match_fused_step() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // halfcheetah is the preset with grad_ppo/apply_grads (§6.2)
+    let xf = xla_factory("halfcheetah");
+    let flat = xf.init_ppo_params(11);
+    let mut xl = xf.make_ppo_learner().unwrap();
+    let m = xl.minibatch_size();
+    let (o, a) = (17usize, 6usize);
+    let mut rng = Pcg64::new(5);
+    let obs: Vec<f32> = (0..m * o).map(|_| rng.normal()).collect();
+    let act: Vec<f32> = (0..m * a).map(|_| rng.normal()).collect();
+    let old_logp: Vec<f32> = (0..m).map(|_| -8.0 - rng.next_f32()).collect();
+    let adv: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let ret: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+    let mask = vec![1.0f32; m];
+    let mb = PpoMinibatch {
+        obs: &obs,
+        act: &act,
+        old_logp: &old_logp,
+        adv: &adv,
+        ret: &ret,
+        mask: &mask,
+    };
+
+    let mut fused = PpoTrainState::new(flat.clone());
+    let mut split = PpoTrainState::new(flat.clone());
+    xl.train_step(&mut fused, 1e-3, &mb).unwrap();
+    let (g, _loss, n) = xl.grad(&flat, &mb).unwrap();
+    assert_eq!(n as usize, m);
+    xl.apply_grads(&mut split, &g, 1e-3).unwrap();
+    assert!(
+        max_abs_diff(&fused.flat, &split.flat) < 5e-4,
+        "grad+apply != fused train step: {}",
+        max_abs_diff(&fused.flat, &split.flat)
+    );
+}
+
+#[test]
+fn ddpg_artifacts_match_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let xf = xla_factory("pendulum");
+    let nf = native_for(&xf);
+    let (actor, critic) = xf.init_ddpg_params(21);
+    let d = xf.meta().ddpg.clone().unwrap();
+    let b = d.batch;
+    let mut rng = Pcg64::new(6);
+
+    // actor forward parity
+    let mut xa = xf.make_ddpg_actor().unwrap();
+    let mut na = nf.make_ddpg_actor().unwrap();
+    let ab = xa.batch();
+    let obs1: Vec<f32> = (0..ab * 3).map(|_| rng.normal()).collect();
+    let x_act = xa.act(&actor, &obs1).unwrap();
+    let n_act = na.act(&actor, &obs1).unwrap();
+    assert!(max_abs_diff(&x_act, &n_act) < 1e-4);
+
+    // one fused train step parity
+    let mut xl = xf.make_ddpg_learner().unwrap();
+    let mut nl = nf.make_ddpg_learner().unwrap();
+    let obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+    let act: Vec<f32> = (0..b).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let rew: Vec<f32> = (0..b).map(|_| rng.normal()).collect();
+    let next_obs: Vec<f32> = (0..b * 3).map(|_| rng.normal()).collect();
+    let done: Vec<f32> = (0..b).map(|_| if rng.next_f32() < 0.1 { 1.0 } else { 0.0 }).collect();
+    let batch = DdpgBatch {
+        obs: &obs,
+        act: &act,
+        rew: &rew,
+        next_obs: &next_obs,
+        done: &done,
+    };
+    let mut xs = DdpgTrainState::new(actor.clone(), critic.clone());
+    let mut ns = DdpgTrainState::new(actor, critic);
+    let (xq, xpi) = xl.train_step(&mut xs, 1e-3, 1e-3, &batch).unwrap();
+    let (nq, npi) = nl.train_step(&mut ns, 1e-3, 1e-3, &batch).unwrap();
+    assert!((xq - nq).abs() < 2e-3, "q_loss {xq} vs {nq}");
+    assert!((xpi - npi).abs() < 2e-3, "pi_loss {xpi} vs {npi}");
+    assert!(max_abs_diff(&xs.actor, &ns.actor) < 5e-4);
+    assert!(max_abs_diff(&xs.critic, &ns.critic) < 5e-4);
+    assert!(max_abs_diff(&xs.targ_actor, &ns.targ_actor) < 5e-4);
+}
