@@ -24,6 +24,7 @@ fn main() -> anyhow::Result<()> {
     cfg.backend = Backend::parse(&args.str_or("backend", "native"))
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.samplers = args.usize_or("samplers", 4)?;
+    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
     cfg.iterations = args.usize_or("iterations", 60)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", 1_000)?;
     cfg.chunk_steps = 100;

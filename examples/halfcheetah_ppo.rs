@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.iterations = args.usize_or("iterations", 150)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", 20_000)?;
+    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
     cfg.seed = args.u64_or("seed", 0)?;
 
     println!(

@@ -22,12 +22,14 @@ fn main() -> anyhow::Result<()> {
     cfg.backend = Backend::parse(&args.str_or("backend", "native"))
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.samplers = args.usize_or("samplers", 4)?;
+    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
     cfg.iterations = args.usize_or("iterations", 40)?;
     cfg.seed = args.u64_or("seed", 0)?;
 
     println!(
-        "WALL-E quickstart: PPO on pendulum, N={} samplers, {} backend",
+        "WALL-E quickstart: PPO on pendulum, N={} samplers x {} envs, {} backend",
         cfg.samplers,
+        cfg.envs_per_sampler,
         cfg.backend.name()
     );
 

@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.iterations = args.usize_or("iterations", 6)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", 20_000)?;
+    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
     cfg.seed = args.u64_or("seed", 0)?;
     // sync mode isolates pure collection time per iteration (the paper
     // plots rollout time for a fixed 20k budget); async is the default
@@ -37,8 +38,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!(
-        "WALL-E scaling sweep ({}): N in {:?}, {} samples/iter, {} iters each",
-        cfg.env, ns, cfg.samples_per_iter, cfg.iterations
+        "WALL-E scaling sweep ({}): N in {:?}, {} envs/sampler, {} samples/iter, {} iters each",
+        cfg.env, ns, cfg.envs_per_sampler, cfg.samples_per_iter, cfg.iterations
     );
 
     let factory_for = |c: &TrainConfig| make_factory(c);

@@ -24,6 +24,7 @@ fn dataset(n: usize, obs_dim: usize, act_dim: usize) -> PpoDataset {
     let mut rng = Pcg64::new(7);
     let chunk = ExperienceChunk {
         sampler_id: 0,
+        env_slot: 0,
         policy_version: 0,
         obs: (0..n * obs_dim).map(|_| rng.normal()).collect(),
         act: (0..n * act_dim).map(|_| rng.normal()).collect(),

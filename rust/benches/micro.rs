@@ -97,6 +97,39 @@ fn bench_gae() {
         });
 }
 
+/// Act-throughput sweep over batch size: the case for vectorized
+/// sampling. One forward amortized over B envs should push rows/s far
+/// above the B=1 rate (the `envs_per_sampler` speedup is this curve).
+fn bench_act_batch_sweep() {
+    let f = NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
+    let flat = f.init_ppo_params(0);
+    let mut rng = Pcg64::new(7);
+    let mut base_rate = 0.0f64;
+    for b in [1usize, 4, 8, 16, 32] {
+        let mut actor = f.make_actor_batched(b).unwrap();
+        let mut obs = vec![0.0f32; b * 17];
+        let mut noise = vec![0.0f32; b * 6];
+        rng.fill_normal(&mut obs);
+        rng.fill_normal(&mut noise);
+        let r = Bench::new(&format!("act_native batched (B={b}, 17->64x64->6)"))
+            .warmup(5)
+            .samples(10)
+            .iters_per_sample(2000)
+            .run(|| {
+                let _ = actor.act(&flat, &obs, &noise).unwrap();
+            });
+        let rows_per_sec = b as f64 / r.summary().mean;
+        if b == 1 {
+            base_rate = rows_per_sec;
+        }
+        println!(
+            "    -> {rows_per_sec:.0} env-steps-worth of inference/s/core \
+             ({:.2}x the B=1 rate)",
+            rows_per_sec / base_rate
+        );
+    }
+}
+
 fn bench_native_backend() {
     let f = NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
     let flat = f.init_ppo_params(0);
@@ -204,6 +237,8 @@ fn main() {
     bench_gae();
     println!("-- native backend --");
     bench_native_backend();
+    println!("-- act batch sweep (vectorized sampling) --");
+    bench_act_batch_sweep();
     println!("-- xla backend --");
     bench_xla_backend();
 }

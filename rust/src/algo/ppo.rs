@@ -186,6 +186,7 @@ mod tests {
         let mut rng = Pcg64::new(seed);
         let chunk = ExperienceChunk {
             sampler_id: 0,
+            env_slot: 0,
             policy_version: 0,
             obs: (0..n * obs_dim).map(|_| rng.normal()).collect(),
             act: (0..n * act_dim).map(|_| rng.normal()).collect(),

@@ -22,6 +22,10 @@ pub enum ChunkEnd {
 #[derive(Debug, Clone)]
 pub struct ExperienceChunk {
     pub sampler_id: usize,
+    /// Which env slot of the (vectorized) sampler produced this chunk:
+    /// `0..envs_per_sampler`. Chunks are per-env, so GAE segments never
+    /// mix transitions from different envs.
+    pub env_slot: usize,
     /// Policy version that generated this chunk (staleness tracking).
     pub policy_version: u64,
     /// Row-major [len * obs_dim].
@@ -178,6 +182,7 @@ mod tests {
     fn chunk(len: usize, end: ChunkEnd, bootstrap: f32) -> ExperienceChunk {
         ExperienceChunk {
             sampler_id: 0,
+            env_slot: 0,
             policy_version: 1,
             obs: (0..len * 2).map(|i| i as f32).collect(),
             act: (0..len).map(|i| -(i as f32)).collect(),

@@ -129,6 +129,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Number of parallel sampler workers (the paper's N).
     pub samplers: usize,
+    /// Vectorized envs per sampler worker (M): each worker steps M
+    /// homogeneous envs in lockstep behind ONE batched policy forward per
+    /// sim tick, multiplying rollout throughput per thread. 1 = the
+    /// paper's original one-env-per-worker loop.
+    pub envs_per_sampler: usize,
     /// Samples collected per iteration (paper: 20,000).
     pub samples_per_iter: usize,
     pub iterations: usize,
@@ -167,6 +172,7 @@ impl Default for TrainConfig {
             backend: Backend::Native,
             seed: 0,
             samplers: 10,
+            envs_per_sampler: 1,
             samples_per_iter: 20_000,
             iterations: 100,
             queue_capacity: 16,
@@ -220,6 +226,17 @@ impl TrainConfig {
         if self.samplers == 0 {
             return Err("samplers must be >= 1".into());
         }
+        if self.envs_per_sampler == 0 {
+            return Err("envs_per_sampler must be >= 1".into());
+        }
+        if self.samplers * self.envs_per_sampler > self.samples_per_iter {
+            return Err(format!(
+                "samplers * envs_per_sampler = {} exceeds samples_per_iter {} — \
+                 every env must contribute at least one step per iteration",
+                self.samplers * self.envs_per_sampler,
+                self.samples_per_iter
+            ));
+        }
         if self.samples_per_iter == 0 {
             return Err("samples_per_iter must be > 0".into());
         }
@@ -253,6 +270,10 @@ impl TrainConfig {
         m.insert("backend".into(), Json::Str(self.backend.name().into()));
         m.insert("seed".into(), Json::Num(self.seed as f64));
         m.insert("samplers".into(), Json::Num(self.samplers as f64));
+        m.insert(
+            "envs_per_sampler".into(),
+            Json::Num(self.envs_per_sampler as f64),
+        );
         m.insert(
             "samples_per_iter".into(),
             Json::Num(self.samples_per_iter as f64),
@@ -332,6 +353,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.opt("samplers") {
             cfg.samplers = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("envs_per_sampler") {
+            cfg.envs_per_sampler = v.as_usize()?;
         }
         if let Some(v) = j.opt("samples_per_iter") {
             cfg.samples_per_iter = v.as_usize()?;
@@ -469,6 +493,7 @@ mod tests {
         cfg.ppo.lr = 1e-3;
         cfg.ddpg.tau = 0.01;
         cfg.learner_shards = 4;
+        cfg.envs_per_sampler = 8;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cfg, back);
@@ -497,6 +522,18 @@ mod tests {
         let mut cfg = TrainConfig::default();
         cfg.learner_shards = 0;
         assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::default();
+        cfg.envs_per_sampler = 0;
+        assert!(cfg.validate().is_err());
+        // every env must get at least one step per iteration
+        let mut cfg = TrainConfig::default();
+        cfg.samplers = 4;
+        cfg.envs_per_sampler = 64;
+        cfg.samples_per_iter = 100;
+        cfg.chunk_steps = 50;
+        assert!(cfg.validate().is_err());
+        cfg.samples_per_iter = 4_000;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -4,7 +4,14 @@
 //!   with backpressure and block-time accounting.
 //! * [`policy_store`] — versioned **policy queue** (learner → samplers):
 //!   single-slot broadcast; samplers always read the freshest parameters.
-//! * [`sampler`] — the N parallel rollout workers.
+//! * [`sampler`] — the N parallel rollout workers, each **vectorized**
+//!   over `envs_per_sampler` lockstep envs: one batched `act` call with M
+//!   real rows per sim tick drives all M envs (amortizing inference
+//!   M-fold per worker), scattering per-env transitions into per-env
+//!   chunk buffers so GAE segment semantics are preserved exactly.
+//!   Measure the amortization curve with `cargo bench --bench micro`
+//!   (act batch sweep B=1..32) and the end-to-end per-worker steps/sec
+//!   with `cargo bench --bench fig4_rollout_time` (M=1 vs M=8).
 //! * [`learner`] — the asynchronous agent process (collect → GAE →
 //!   minibatch epochs → publish), PPO and DDPG variants.
 //! * [`orchestrator`] — spawn/join lifecycle, sync/async modes.

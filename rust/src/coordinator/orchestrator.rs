@@ -1,5 +1,6 @@
 //! Orchestrator: process topology and lifecycle for one training run —
-//! spawns the N sampler workers and the learner, wires the experience
+//! spawns the N sampler workers (each driving `envs_per_sampler`
+//! vectorized envs in lockstep) and the learner, wires the experience
 //! queue and policy store between them, runs the iteration loop, and
 //! shuts everything down cleanly (the WALL-E launcher in Fig 2).
 
@@ -11,6 +12,7 @@ use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
 use crate::coordinator::sampler::{run_ddpg_sampler, run_ppo_sampler, SamplerCfg, SamplerReport};
 use crate::env::registry::make_env;
+use crate::env::vec_env::VecEnv;
 use crate::runtime::BackendFactory;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
@@ -49,13 +51,22 @@ pub fn run(
     let sync_budget = if cfg.async_mode {
         None
     } else {
-        Some(cfg.samples_per_iter / cfg.samplers)
+        // ceil-divide: workers cut at their budget within M-1 samples, so
+        // a floor here would undershoot the iteration total whenever
+        // samplers does not divide samples_per_iter and deadlock the
+        // learner's blocking collect against blocked samplers.
+        Some((cfg.samples_per_iter + cfg.samplers - 1) / cfg.samplers)
     };
 
     let mut result: Option<RunResult> = None;
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
         // ---- sampler workers ------------------------------------------
+        // Each worker drives `envs_per_sampler` envs in lockstep; env
+        // dynamics streams are numbered globally (worker id * M + slot,
+        // offset by 1), so a trajectory is pinned to its global slot
+        // regardless of how envs are packed onto workers.
+        let m = cfg.envs_per_sampler;
         let mut handles = Vec::new();
         for id in 0..cfg.samplers {
             let scfg = SamplerCfg {
@@ -72,16 +83,21 @@ pub fn run(
             let algo = cfg.algo;
             let explore = cfg.ddpg.explore_noise;
             handles.push(scope.spawn(move || -> anyhow::Result<SamplerReport> {
-                let env = make_env(&env_name).expect("env checked above");
+                let venv = VecEnv::from_registry(
+                    &env_name,
+                    m,
+                    scfg.seed,
+                    (id * m) as u64 + 1,
+                )?;
                 match algo {
                     Algo::Ppo => {
-                        let actor = factory.make_actor()?;
-                        Ok(run_ppo_sampler(scfg, env, actor, store, queue, stop))
+                        let actor = factory.make_actor_batched(m)?;
+                        Ok(run_ppo_sampler(scfg, venv, actor, store, queue, stop))
                     }
                     Algo::Ddpg => {
-                        let actor = factory.make_ddpg_actor()?;
+                        let actor = factory.make_ddpg_actor_batched(m)?;
                         Ok(run_ddpg_sampler(
-                            scfg, env, actor, explore, store, queue, stop,
+                            scfg, venv, actor, explore, store, queue, stop,
                         ))
                     }
                 }
@@ -217,6 +233,54 @@ mod tests {
         // stay near the target (no unbounded overshoot)
         for m in &r.metrics {
             assert!(m.samples >= 600 && m.samples <= 1200, "samples {}", m.samples);
+        }
+    }
+
+    #[test]
+    fn vectorized_samplers_complete_all_iterations() {
+        let mut cfg = tiny_cfg(2, true);
+        cfg.envs_per_sampler = 4;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 600);
+        }
+        // 2 workers x 4 envs stepping in lockstep: every tick adds 4
+        // steps per worker, so totals are large and multiples of 4
+        let total_steps: u64 = r.sampler_reports.iter().map(|s| s.steps).sum();
+        assert!(total_steps >= 1800);
+        for s in &r.sampler_reports {
+            assert_eq!(s.steps % 4, 0, "lockstep tick must add M steps");
+        }
+    }
+
+    #[test]
+    fn sync_mode_terminates_when_samplers_do_not_divide_budget() {
+        // 500 / 3 floors to 166 -> 3 workers would deliver 498 < 500 and
+        // deadlock the learner; the ceil-divided budget must cover it
+        let mut cfg = tiny_cfg(3, false);
+        cfg.samples_per_iter = 500;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 500, "samples {}", m.samples);
+        }
+    }
+
+    #[test]
+    fn vectorized_sync_mode_respects_budget() {
+        let mut cfg = tiny_cfg(2, false);
+        cfg.envs_per_sampler = 2;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 600 && m.samples <= 1400, "samples {}", m.samples);
         }
     }
 

@@ -1,28 +1,51 @@
-//! Sampler worker: one of the paper's N parallel rollout processes.
+//! Sampler worker: one of the paper's N parallel rollout processes,
+//! vectorized over M environments per worker.
 //!
-//! Each worker owns an environment instance, a thread-local policy backend
-//! (its own PJRT client + compiled `act` executable on the XLA path), and
-//! an independent RNG stream. It repeatedly:
+//! Each worker owns a [`VecEnv`] of `envs_per_sampler` homogeneous env
+//! instances, a thread-local policy backend (its own PJRT client +
+//! compiled `act` executable on the XLA path), and per-env RNG streams.
+//! It repeatedly:
 //!   1. refreshes parameters from the policy store at chunk boundaries,
-//!   2. rolls the environment, recording (obs, act, logp, V) transitions,
-//!   3. pushes experience chunks into the bounded experience queue.
+//!   2. issues ONE batched `act` call with M real rows per sim tick and
+//!      steps all M envs in lockstep, scattering (obs, act, logp, V)
+//!      into per-env chunk buffers,
+//!   3. flushes per-env `ExperienceChunk`s into the bounded experience
+//!      queue, preserving GAE segment semantics exactly (terminal vs
+//!      time-limit truncation vs mid-episode continuation).
 //!
-//! In async mode (the paper's architecture) workers never wait for the
-//! learner except through queue backpressure; in sync mode each worker
-//! produces its share of the per-iteration budget under one policy version
-//! and then blocks for the next publication (the ablation baseline).
+//! Chunk cuts follow two rules (see `plan_boundaries`): episode ends cut
+//! only their own env, while full-buffer cuts happen for the whole worker
+//! at a shared `chunk_steps` window edge — so the V(s') bootstrap forward
+//! fires once per window plus once per mid-window truncation (not once
+//! per env), and a policy refresh (which flushes every buffer to keep
+//! chunks single-version) always lands on empty buffers.
+//!
+//! Vectorization amortizes policy inference M-fold per worker (the
+//! WarpDrive/Spreeze observation); per-env RNG streams keep every env's
+//! trajectory bitwise-independent of M. In async mode (the paper's
+//! architecture) workers never wait for the learner except through queue
+//! backpressure; in sync mode each worker produces its share of the
+//! per-iteration budget under one policy version and then blocks for the
+//! next publication (the ablation baseline).
 
 use crate::algo::ddpg::OuNoise;
-use crate::algo::normalizer::RunningNorm;
+use crate::algo::normalizer::{NormSnapshot, RunningNorm};
 use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::coordinator::queue::Channel;
-use crate::env::{clip_action, Env};
+use crate::env::vec_env::{VecEnv, VecStepInfo};
 use crate::runtime::{ActorBackend, DdpgActorBackend};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Stream-id base for PPO action-noise RNGs (global env index is added).
+/// High bases keep noise streams disjoint from env dynamics streams,
+/// which the orchestrator numbers from 1.
+const PPO_NOISE_STREAM_BASE: u64 = 1 << 32;
+/// Stream-id base for DDPG exploration-noise RNGs.
+const DDPG_NOISE_STREAM_BASE: u64 = 1 << 33;
 
 /// Static sampler configuration.
 #[derive(Debug, Clone)]
@@ -35,6 +58,15 @@ pub struct SamplerCfg {
     pub sync_budget: Option<usize>,
     /// Learning-signal reward scale (reported episode returns stay raw).
     pub reward_scale: f32,
+}
+
+impl SamplerCfg {
+    /// Global index of this worker's env slot `i` (workers hold `m` envs
+    /// each, numbered contiguously). Noise streams derive from this, so a
+    /// trajectory is pinned to its global slot, not to the worker layout.
+    fn global_env(&self, m: usize, i: usize) -> u64 {
+        (self.id * m + i) as u64
+    }
 }
 
 /// What a sampler did before stopping (for logs/tests).
@@ -57,7 +89,92 @@ fn wait_first_policy(store: &PolicyStore, stop: &AtomicBool) -> Option<Arc<Polic
     }
 }
 
-/// Buffers for an in-progress chunk (reused across chunks).
+/// Normalize `rows` raw observation rows from `src` into `dst` in place.
+fn normalize_rows(dst: &mut [f32], src: &[f32], norm: &NormSnapshot, rows: usize, dim: usize) {
+    dst[..rows * dim].copy_from_slice(&src[..rows * dim]);
+    for r in 0..rows {
+        norm.apply(&mut dst[r * dim..(r + 1) * dim]);
+    }
+}
+
+/// Decide this tick's chunk cuts (shared by the PPO and DDPG loops).
+///
+/// Cuts happen per env at episode ends, and for ALL envs together at the
+/// worker's chunk window edge (`window_ticks >= chunk_steps`). Aligning
+/// full-buffer cuts on one global window keeps buffers from drifting
+/// apart after uneven episode ends, so the bootstrap forward fires at
+/// most once per window instead of once per env.
+///
+/// A pending policy refresh forces every buffer to cut as well, keeping
+/// the one-policy-version-per-chunk invariant. Sync mode evaluates its
+/// budget against produced + currently-buffered samples every tick, so a
+/// worker overshoots its per-version share by at most M-1 samples no
+/// matter how large M is. Returns (any_flush, do_refresh).
+#[allow(clippy::too_many_arguments)]
+fn plan_boundaries(
+    infos: &[VecStepInfo],
+    bufs: &[ChunkBuf],
+    window_ticks: usize,
+    chunk_steps: usize,
+    produced_for_version: usize,
+    sync_budget: Option<usize>,
+    store: &PolicyStore,
+    policy_version: u64,
+    flush: &mut [bool],
+) -> (bool, bool) {
+    let window_cut = window_ticks >= chunk_steps;
+    for (f, info) in flush.iter_mut().zip(infos) {
+        *f = info.ended() || window_cut;
+    }
+    let natural = flush.iter().any(|&f| f);
+    let do_refresh = match sync_budget {
+        Some(budget) => {
+            let buffered: usize = bufs.iter().map(|b| b.len()).sum();
+            produced_for_version + buffered >= budget
+        }
+        // async: refresh only piggybacks on a natural boundary
+        None => natural && store.newer_than(policy_version),
+    };
+    if do_refresh {
+        for f in flush.iter_mut() {
+            *f = true;
+        }
+    }
+    (natural || do_refresh, do_refresh)
+}
+
+/// Take a fresher policy at a chunk boundary. Sync mode blocks until the
+/// learner publishes the next version; async just swaps in the latest.
+/// Returns false when `stop` was raised while blocking.
+fn refresh_policy(
+    policy: &mut Arc<PolicySnapshot>,
+    sync: bool,
+    store: &PolicyStore,
+    stop: &AtomicBool,
+    report: &mut SamplerReport,
+) -> bool {
+    if sync {
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            if let Some(p) = store.wait_newer(policy.version, Duration::from_millis(50)) {
+                *policy = p;
+                report.policy_refreshes += 1;
+                return true;
+            }
+        }
+    }
+    if let Some(p) = store.latest() {
+        if p.version > policy.version {
+            *policy = p;
+            report.policy_refreshes += 1;
+        }
+    }
+    true
+}
+
+/// Buffers for an in-progress chunk (one per env slot, reused).
 struct ChunkBuf {
     obs: Vec<f32>,
     act: Vec<f32>,
@@ -94,6 +211,7 @@ impl ChunkBuf {
     fn take(
         &mut self,
         id: usize,
+        env_slot: usize,
         version: u64,
         end: ChunkEnd,
         bootstrap: f32,
@@ -101,6 +219,7 @@ impl ChunkBuf {
         let dim = self.stats.dim();
         ExperienceChunk {
             sampler_id: id,
+            env_slot,
             policy_version: version,
             obs: std::mem::take(&mut self.obs),
             act: std::mem::take(&mut self.act),
@@ -118,18 +237,35 @@ impl ChunkBuf {
 }
 
 /// Run the PPO sampler loop until `stop` is set or the queue closes.
+///
+/// `venv` holds this worker's M lockstep envs; `actor` must accept at
+/// least M rows per call (`BackendFactory::make_actor_batched` aligns the
+/// two so the forward carries no padding on the native path).
 pub fn run_ppo_sampler(
     cfg: SamplerCfg,
-    mut env: Box<dyn Env>,
+    mut venv: VecEnv,
     mut actor: Box<dyn ActorBackend>,
     store: &PolicyStore,
     queue: &Channel<ExperienceChunk>,
     stop: &AtomicBool,
 ) -> SamplerReport {
     let mut report = SamplerReport::default();
-    let obs_dim = env.obs_dim();
-    let act_dim = env.act_dim();
-    let backend_batch = actor.batch().max(1);
+    let m = venv.num_envs();
+    let obs_dim = venv.obs_dim();
+    let act_dim = venv.act_dim();
+    // backend may require a fixed batch > M (XLA artifacts): rows past M
+    // are zero padding whose outputs are ignored. Native batched actors
+    // advertise exactly M, so the forward is full.
+    let backend_batch = if actor.batch() == 0 { m } else { actor.batch() };
+    if backend_batch < m {
+        crate::log_error!(
+            "sampler {}: backend batch {} cannot hold {} envs",
+            cfg.id,
+            backend_batch,
+            m
+        );
+        return report;
+    }
 
     let mut policy = match wait_first_policy(store, stop) {
         Some(p) => p,
@@ -137,44 +273,36 @@ pub fn run_ppo_sampler(
     };
     let mut produced_for_version = 0usize;
 
-    let mut rng = Pcg64::with_stream(cfg.seed, cfg.id as u64 + 1);
-    let mut raw_obs = vec![0.0f32; obs_dim];
-    // backend may require a fixed batch > 1: rows past 0 are zero padding
+    // per-env policy-noise streams: disjoint from env dynamics streams and
+    // pinned to the global env slot, so trajectories don't depend on M.
+    let mut noise_rngs: Vec<Pcg64> = (0..m)
+        .map(|i| Pcg64::with_stream(cfg.seed, PPO_NOISE_STREAM_BASE + cfg.global_env(m, i)))
+        .collect();
+
     let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
     let mut noise = vec![0.0f32; backend_batch * act_dim];
-    let mut buf = ChunkBuf::new(obs_dim);
+    let mut actions = vec![0.0f32; m * act_dim];
+    let mut infos = vec![VecStepInfo::default(); m];
+    let mut flush = vec![false; m];
+    let mut boot_values = vec![0.0f32; m];
+    let mut bufs: Vec<ChunkBuf> = (0..m).map(|_| ChunkBuf::new(obs_dim)).collect();
+    // ticks since the last whole-worker chunk cut (see plan_boundaries)
+    let mut window_ticks = 0usize;
 
-    env.reset(&mut rng, &mut raw_obs);
-    let mut norm_obs = raw_obs.clone();
-    policy.norm.apply(&mut norm_obs);
-    let mut ep_return = 0.0f32;
-    let mut ep_len = 0usize;
-    let max_ep = env.max_episode_steps();
-
-    // evaluate V(s) of the current normalized obs (used for bootstrapping)
-    macro_rules! value_of {
-        ($norm_obs:expr) => {{
-            obs_in[..obs_dim].copy_from_slice($norm_obs);
-            for z in noise.iter_mut() {
-                *z = 0.0;
-            }
-            match actor.act(&policy.params, &obs_in, &noise) {
-                Ok(r) => r.value[0],
-                Err(_) => 0.0,
-            }
-        }};
-    }
+    venv.reset_all();
 
     'outer: loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
 
-        // --- one environment step under the current policy (busy-timed
+        // --- one lockstep sim tick under the current policy (busy-timed
         // with the per-thread CPU clock: preemption-immune)
         let busy_t0 = crate::util::timer::thread_cpu_secs();
-        obs_in[..obs_dim].copy_from_slice(&norm_obs);
-        rng.fill_normal(&mut noise);
+        normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
+        for (i, rng) in noise_rngs.iter_mut().enumerate() {
+            rng.fill_normal(&mut noise[i * act_dim..(i + 1) * act_dim]);
+        }
         let out = match actor.act(&policy.params, &obs_in, &noise) {
             Ok(r) => r,
             Err(e) => {
@@ -182,102 +310,130 @@ pub fn run_ppo_sampler(
                 break;
             }
         };
-        let mut action = out.action[..act_dim].to_vec();
-        clip_action(&mut action);
+        for i in 0..m {
+            let buf = &mut bufs[i];
+            buf.obs
+                .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
+            buf.stats.update(venv.obs_row(i)); // raw pre-step obs feeds the normalizer
+            let arow = &out.action[i * act_dim..(i + 1) * act_dim];
+            buf.act.extend_from_slice(arow); // pre-clip action (matches logp)
+            buf.logp.push(out.logp[i]);
+            buf.value.push(out.value[i]);
+            let dst = &mut actions[i * act_dim..(i + 1) * act_dim];
+            dst.copy_from_slice(arow);
+            crate::env::clip_action(dst);
+        }
 
-        buf.obs.extend_from_slice(&norm_obs);
-        buf.stats.update(&raw_obs); // raw obs (pre-step) feeds the normalizer
-        buf.act.extend_from_slice(&out.action[..act_dim]); // pre-clip action (matches logp)
-        buf.logp.push(out.logp[0]);
-        buf.value.push(out.value[0]);
+        venv.step_all(&actions, &mut infos);
+        for (buf, info) in bufs.iter_mut().zip(&infos) {
+            buf.rew.push(info.reward * cfg.reward_scale);
+        }
+        report.steps += m as u64;
+        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0;
+        for buf in bufs.iter_mut() {
+            buf.busy_secs += tick_busy / m as f64;
+        }
 
-        let step = env.step(&action, &mut raw_obs);
-        buf.rew.push(step.reward * cfg.reward_scale);
-        ep_return += step.reward;
-        ep_len += 1;
-        report.steps += 1;
+        // --- chunk boundaries
+        window_ticks += 1;
+        let (any_flush, do_refresh) = plan_boundaries(
+            &infos,
+            &bufs,
+            window_ticks,
+            cfg.chunk_steps,
+            produced_for_version,
+            cfg.sync_budget,
+            store,
+            policy.version,
+            &mut flush,
+        );
+        if !any_flush {
+            continue;
+        }
+        if flush.iter().all(|&f| f) {
+            window_ticks = 0; // every buffer restarts together
+        }
+        let mut any_needs_boot = false;
+        for i in 0..m {
+            any_needs_boot |= flush[i] && !infos[i].terminal;
+        }
+        let n_flush = flush.iter().filter(|&&f| f).count();
 
-        norm_obs.copy_from_slice(&raw_obs);
-        policy.norm.apply(&mut norm_obs);
-        buf.busy_secs += crate::util::timer::thread_cpu_secs() - busy_t0;
-
-        let terminal = step.done;
-        let truncated = !terminal && ep_len >= max_ep;
-        let chunk_full = buf.len() >= cfg.chunk_steps;
-
-        if terminal || truncated || chunk_full {
+        // Bootstrap values V(s') for truncated/continuation cuts: one
+        // batched forward over the post-step observations, zero noise.
+        // An inference failure here would silently corrupt GAE targets
+        // (V = 0 looks like a terminal), so it terminates the worker
+        // exactly like the main-loop path.
+        if any_needs_boot {
             let boot_t0 = crate::util::timer::thread_cpu_secs();
-            let (end, bootstrap) = if terminal {
-                (ChunkEnd::Terminal, 0.0)
-            } else {
-                let v = value_of!(&norm_obs);
-                (
-                    if truncated {
-                        ChunkEnd::Truncated
-                    } else {
-                        ChunkEnd::Continuation
-                    },
-                    v,
-                )
-            };
-            buf.busy_secs += crate::util::timer::thread_cpu_secs() - boot_t0;
+            normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
+            for z in noise.iter_mut() {
+                *z = 0.0;
+            }
+            match actor.act(&policy.params, &obs_in, &noise) {
+                Ok(r) => boot_values[..m].copy_from_slice(&r.value[..m]),
+                Err(e) => {
+                    crate::log_error!(
+                        "sampler {}: bootstrap value inference failed: {e:#}",
+                        cfg.id
+                    );
+                    break 'outer;
+                }
+            }
+            let boot_busy = crate::util::timer::thread_cpu_secs() - boot_t0;
+            for (i, buf) in bufs.iter_mut().enumerate() {
+                if flush[i] {
+                    buf.busy_secs += boot_busy / n_flush as f64;
+                }
+            }
+        }
 
+        for i in 0..m {
+            if !flush[i] {
+                continue;
+            }
+            let (terminal, truncated) = (infos[i].terminal, infos[i].truncated);
             if terminal || truncated {
-                buf.episode_returns.push(ep_return);
-                buf.episode_lengths.push(ep_len);
+                bufs[i].episode_returns.push(venv.ep_return(i));
+                bufs[i].episode_lengths.push(venv.ep_len(i));
                 report.episodes += 1;
             }
-            let n = buf.len();
-            let chunk = buf.take(cfg.id, policy.version, end, bootstrap);
+            let (end, bootstrap) = if terminal {
+                (ChunkEnd::Terminal, 0.0)
+            } else if truncated {
+                (ChunkEnd::Truncated, boot_values[i])
+            } else {
+                (ChunkEnd::Continuation, boot_values[i])
+            };
+            let n = bufs[i].len();
+            let chunk = bufs[i].take(cfg.id, i, policy.version, end, bootstrap);
             if queue.push(chunk).is_err() {
                 break 'outer; // queue closed: shutting down
             }
             report.chunks += 1;
             produced_for_version += n;
-
             if terminal || truncated {
-                env.reset(&mut rng, &mut raw_obs);
-                norm_obs.copy_from_slice(&raw_obs);
-                policy.norm.apply(&mut norm_obs);
-                ep_return = 0.0;
-                ep_len = 0;
+                venv.reset_env(i);
             }
+        }
 
-            // --- policy refresh at chunk boundaries
-            if let Some(budget) = cfg.sync_budget {
-                if produced_for_version >= budget {
-                    // sync mode: block for the next version
-                    loop {
-                        if stop.load(Ordering::Relaxed) {
-                            break 'outer;
-                        }
-                        if let Some(p) =
-                            store.wait_newer(policy.version, Duration::from_millis(50))
-                        {
-                            policy = p;
-                            produced_for_version = 0;
-                            report.policy_refreshes += 1;
-                            break;
-                        }
-                    }
-                }
-            } else if store.newer_than(policy.version) {
-                if let Some(p) = store.latest() {
-                    policy = p;
-                    produced_for_version = 0;
-                    report.policy_refreshes += 1;
-                }
+        // --- policy refresh (all buffers are empty now: flush-all above)
+        if do_refresh {
+            if !refresh_policy(&mut policy, cfg.sync_budget.is_some(), store, stop, &mut report)
+            {
+                break 'outer;
             }
+            produced_for_version = 0;
         }
     }
     report
 }
 
-/// Run the DDPG sampler loop (deterministic actor + OU exploration noise;
-/// chunks carry raw transitions for the replay buffer).
+/// Run the DDPG sampler loop (deterministic actor + per-env exploration
+/// noise; chunks carry raw transitions for the replay buffer).
 pub fn run_ddpg_sampler(
     cfg: SamplerCfg,
-    mut env: Box<dyn Env>,
+    mut venv: VecEnv,
     mut actor: Box<dyn DdpgActorBackend>,
     explore_noise: f32,
     store: &PolicyStore,
@@ -285,70 +441,111 @@ pub fn run_ddpg_sampler(
     stop: &AtomicBool,
 ) -> SamplerReport {
     let mut report = SamplerReport::default();
-    let obs_dim = env.obs_dim();
-    let act_dim = env.act_dim();
-    let backend_batch = actor.batch().max(1);
+    let m = venv.num_envs();
+    let obs_dim = venv.obs_dim();
+    let act_dim = venv.act_dim();
+    let backend_batch = if actor.batch() == 0 { m } else { actor.batch() };
+    if backend_batch < m {
+        crate::log_error!(
+            "ddpg sampler {}: backend batch {} cannot hold {} envs",
+            cfg.id,
+            backend_batch,
+            m
+        );
+        return report;
+    }
 
     let mut policy = match wait_first_policy(store, stop) {
         Some(p) => p,
         None => return report,
     };
 
-    let mut rng = Pcg64::with_stream(cfg.seed, cfg.id as u64 + 101);
-    let mut ou = OuNoise::gaussian(act_dim, explore_noise);
-    let mut raw_obs = vec![0.0f32; obs_dim];
+    let mut noise_rngs: Vec<Pcg64> = (0..m)
+        .map(|i| Pcg64::with_stream(cfg.seed, DDPG_NOISE_STREAM_BASE + cfg.global_env(m, i)))
+        .collect();
+    let mut ous: Vec<OuNoise> = (0..m)
+        .map(|_| OuNoise::gaussian(act_dim, explore_noise))
+        .collect();
+
     let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
     let mut noise = vec![0.0f32; act_dim];
-    let mut buf = ChunkBuf::new(obs_dim);
+    let mut actions = vec![0.0f32; m * act_dim];
+    let mut infos = vec![VecStepInfo::default(); m];
+    let mut flush = vec![false; m];
+    let mut bufs: Vec<ChunkBuf> = (0..m).map(|_| ChunkBuf::new(obs_dim)).collect();
+    let mut window_ticks = 0usize;
+    let mut produced_for_version = 0usize;
 
-    env.reset(&mut rng, &mut raw_obs);
-    let mut norm_obs = raw_obs.clone();
-    policy.norm.apply(&mut norm_obs);
-    let mut ep_return = 0.0f32;
-    let mut ep_len = 0usize;
-    let max_ep = env.max_episode_steps();
+    venv.reset_all();
 
-    loop {
+    'outer: loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
         let busy_t0 = crate::util::timer::thread_cpu_secs();
-        obs_in[..obs_dim].copy_from_slice(&norm_obs);
-        let mut action = match actor.act(&policy.params, &obs_in) {
-            Ok(a) => a[..act_dim].to_vec(),
+        normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
+        let det_actions = match actor.act(&policy.params, &obs_in) {
+            Ok(a) => a,
             Err(e) => {
                 crate::log_error!("ddpg sampler {}: act failed: {e:#}", cfg.id);
                 break;
             }
         };
-        ou.sample(&mut rng, &mut noise);
-        for (a, n) in action.iter_mut().zip(&noise) {
-            *a += n;
+        for i in 0..m {
+            let buf = &mut bufs[i];
+            buf.obs
+                .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
+            buf.stats.update(venv.obs_row(i));
+            let dst = &mut actions[i * act_dim..(i + 1) * act_dim];
+            dst.copy_from_slice(&det_actions[i * act_dim..(i + 1) * act_dim]);
+            ous[i].sample(&mut noise_rngs[i], &mut noise);
+            for (a, n) in dst.iter_mut().zip(&noise) {
+                *a += n;
+            }
+            crate::env::clip_action(dst);
+            buf.act.extend_from_slice(dst);
+            buf.logp.push(0.0);
+            buf.value.push(0.0);
         }
-        clip_action(&mut action);
 
-        buf.obs.extend_from_slice(&norm_obs);
-        buf.stats.update(&raw_obs);
-        buf.act.extend_from_slice(&action);
-        buf.logp.push(0.0);
-        buf.value.push(0.0);
+        venv.step_all(&actions, &mut infos);
+        for (buf, info) in bufs.iter_mut().zip(&infos) {
+            buf.rew.push(info.reward * cfg.reward_scale);
+        }
+        report.steps += m as u64;
+        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0;
+        for buf in bufs.iter_mut() {
+            buf.busy_secs += tick_busy / m as f64;
+        }
 
-        let step = env.step(&action, &mut raw_obs);
-        buf.rew.push(step.reward * cfg.reward_scale);
-        ep_return += step.reward;
-        ep_len += 1;
-        report.steps += 1;
+        // --- chunk boundaries (same rules as the PPO loop)
+        window_ticks += 1;
+        let (any_flush, do_refresh) = plan_boundaries(
+            &infos,
+            &bufs,
+            window_ticks,
+            cfg.chunk_steps,
+            produced_for_version,
+            cfg.sync_budget,
+            store,
+            policy.version,
+            &mut flush,
+        );
+        if !any_flush {
+            continue;
+        }
+        if flush.iter().all(|&f| f) {
+            window_ticks = 0;
+        }
 
-        norm_obs.copy_from_slice(&raw_obs);
-        policy.norm.apply(&mut norm_obs);
-        buf.busy_secs += crate::util::timer::thread_cpu_secs() - busy_t0;
-
-        let terminal = step.done;
-        let truncated = !terminal && ep_len >= max_ep;
-        if terminal || truncated || buf.len() >= cfg.chunk_steps {
+        for i in 0..m {
+            if !flush[i] {
+                continue;
+            }
+            let (terminal, truncated) = (infos[i].terminal, infos[i].truncated);
             if terminal || truncated {
-                buf.episode_returns.push(ep_return);
-                buf.episode_lengths.push(ep_len);
+                bufs[i].episode_returns.push(venv.ep_return(i));
+                bufs[i].episode_lengths.push(venv.ep_len(i));
                 report.episodes += 1;
             }
             let end = if terminal {
@@ -358,30 +555,31 @@ pub fn run_ddpg_sampler(
             } else {
                 ChunkEnd::Continuation
             };
-            // replay reconstruction needs s' of the last row: stash the
-            // normalized next obs in `bootstrap_value`-adjacent storage by
-            // appending it to `obs` (len+1 rows). The learner splits it.
-            buf.obs.extend_from_slice(&norm_obs);
-            let chunk = buf.take(cfg.id, policy.version, end, 0.0);
+            // replay reconstruction needs s' of the last row: append the
+            // normalized next obs to `obs` (len+1 rows). The learner
+            // splits it.
+            let mut next_row = venv.obs_row(i).to_vec();
+            policy.norm.apply(&mut next_row);
+            bufs[i].obs.extend_from_slice(&next_row);
+            let n = bufs[i].len();
+            let chunk = bufs[i].take(cfg.id, i, policy.version, end, 0.0);
             if queue.push(chunk).is_err() {
-                break;
+                break 'outer;
             }
             report.chunks += 1;
-
+            produced_for_version += n;
             if terminal || truncated {
-                env.reset(&mut rng, &mut raw_obs);
-                norm_obs.copy_from_slice(&raw_obs);
-                policy.norm.apply(&mut norm_obs);
-                ou.reset();
-                ep_return = 0.0;
-                ep_len = 0;
+                venv.reset_env(i);
+                ous[i].reset();
             }
-            if store.newer_than(policy.version) {
-                if let Some(p) = store.latest() {
-                    policy = p;
-                    report.policy_refreshes += 1;
-                }
+        }
+
+        if do_refresh {
+            if !refresh_policy(&mut policy, cfg.sync_budget.is_some(), store, stop, &mut report)
+            {
+                break 'outer;
             }
+            produced_for_version = 0;
         }
     }
     report
@@ -392,7 +590,6 @@ mod tests {
     use super::*;
     use crate::algo::normalizer::NormSnapshot;
     use crate::config::{DdpgCfg, PpoCfg};
-    use crate::env::registry::make_env;
     use crate::runtime::native_backend::NativeFactory;
     use crate::runtime::BackendFactory;
     use std::thread;
@@ -401,17 +598,22 @@ mod tests {
         NativeFactory::new(3, 1, &[8, 8], PpoCfg::default(), DdpgCfg::default())
     }
 
+    fn pendulum_venv(id: usize, m: usize, seed: u64) -> VecEnv {
+        VecEnv::from_registry("pendulum", m, seed, (id * m) as u64 + 1).unwrap()
+    }
+
     fn spawn_ppo(
         cfg: SamplerCfg,
+        m: usize,
         store: Arc<PolicyStore>,
         queue: Arc<Channel<ExperienceChunk>>,
         stop: Arc<AtomicBool>,
     ) -> thread::JoinHandle<SamplerReport> {
         thread::spawn(move || {
             let f = pendulum_factory();
-            let env = make_env("pendulum").unwrap();
-            let actor = f.make_actor().unwrap();
-            run_ppo_sampler(cfg, env, actor, &store, &queue, &stop)
+            let venv = pendulum_venv(cfg.id, m, cfg.seed);
+            let actor = f.make_actor_batched(m).unwrap();
+            run_ppo_sampler(cfg, venv, actor, &store, &queue, &stop)
         })
     }
 
@@ -431,6 +633,7 @@ mod tests {
                 sync_budget: None,
                 reward_scale: 1.0,
             },
+            1,
             store.clone(),
             queue.clone(),
             stop.clone(),
@@ -455,6 +658,7 @@ mod tests {
             assert!(c.len() <= 64);
             assert!(c.rew.iter().all(|r| r.is_finite()));
             assert_eq!(c.policy_version, 1);
+            assert_eq!(c.env_slot, 0);
             // pendulum never terminates: only Truncated (at 200) or
             // Continuation chunks
             assert_ne!(c.end, ChunkEnd::Terminal);
@@ -462,6 +666,119 @@ mod tests {
         assert!(report.steps >= 600);
         // pendulum episodes are 200 steps; ~3 episodes in 600 samples
         assert!(report.episodes >= 2);
+    }
+
+    #[test]
+    fn vectorized_sampler_fans_chunks_across_env_slots() {
+        let m = 4;
+        let store = Arc::new(PolicyStore::new());
+        let queue = Arc::new(Channel::new(64));
+        let stop = Arc::new(AtomicBool::new(false));
+        let f = pendulum_factory();
+        store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+
+        let h = spawn_ppo(
+            SamplerCfg {
+                id: 0,
+                seed: 21,
+                chunk_steps: 50,
+                sync_budget: None,
+                reward_scale: 1.0,
+            },
+            m,
+            store.clone(),
+            queue.clone(),
+            stop.clone(),
+        );
+
+        let mut total = 0usize;
+        let mut chunks = Vec::new();
+        while total < 1600 {
+            let c = queue.pop().unwrap();
+            total += c.len();
+            chunks.push(c);
+        }
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        let report = h.join().unwrap();
+
+        for c in &chunks {
+            assert!(c.env_slot < m);
+            assert_eq!(c.obs.len(), c.len() * 3);
+            assert!(c.len() <= 50);
+            assert!(c
+                .obs_stats
+                .as_ref()
+                .map(|s| s.count() as usize == c.len())
+                .unwrap_or(false));
+        }
+        // all env slots contribute
+        for slot in 0..m {
+            assert!(
+                chunks.iter().any(|c| c.env_slot == slot),
+                "no chunks from env slot {slot}"
+            );
+        }
+        assert!(report.steps >= 1600);
+        // M envs in lockstep: first M chunks (one full chunk per env)
+        // arrive within the same policy version
+        assert!(report.chunks >= m as u64);
+    }
+
+    /// Vectorization must be observationally transparent: under a fixed
+    /// policy, env slot 0's chunk stream from an M=4 worker is bitwise-
+    /// identical to the chunk stream of an M=1 worker with the same
+    /// dynamics + noise streams.
+    #[test]
+    fn env_slot_trajectories_independent_of_vector_width() {
+        let collect = |m: usize, budget: usize| -> Vec<ExperienceChunk> {
+            let store = Arc::new(PolicyStore::new());
+            let queue = Arc::new(Channel::new(256));
+            let stop = Arc::new(AtomicBool::new(false));
+            let f = pendulum_factory();
+            store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+            let h = spawn_ppo(
+                SamplerCfg {
+                    id: 0,
+                    seed: 33,
+                    chunk_steps: 40,
+                    sync_budget: None,
+                    reward_scale: 1.0,
+                },
+                m,
+                store.clone(),
+                queue.clone(),
+                stop.clone(),
+            );
+            let mut total = 0usize;
+            let mut chunks = Vec::new();
+            while total < budget {
+                let c = queue.pop().unwrap();
+                total += c.len();
+                chunks.push(c);
+            }
+            stop.store(true, Ordering::Relaxed);
+            queue.close();
+            h.join().unwrap();
+            chunks
+        };
+
+        let solo: Vec<_> = collect(1, 400);
+        let vec4: Vec<_> = collect(4, 1600)
+            .into_iter()
+            .filter(|c| c.env_slot == 0)
+            .collect();
+        let n = solo.len().min(vec4.len());
+        assert!(n >= 3, "not enough chunks to compare ({n})");
+        for (a, b) in solo[..n].iter().zip(&vec4[..n]) {
+            assert_eq!(a.obs, b.obs, "obs diverged between M=1 and M=4");
+            assert_eq!(a.act, b.act, "actions diverged");
+            assert_eq!(a.rew, b.rew, "rewards diverged");
+            assert_eq!(a.logp, b.logp, "logp diverged");
+            assert_eq!(a.value, b.value, "values diverged");
+            assert_eq!(a.end, b.end, "chunk ends diverged");
+            assert_eq!(a.bootstrap_value, b.bootstrap_value, "bootstraps diverged");
+        }
     }
 
     #[test]
@@ -480,6 +797,7 @@ mod tests {
                 sync_budget: None,
                 reward_scale: 1.0,
             },
+            1,
             store.clone(),
             queue.clone(),
             stop.clone(),
@@ -520,6 +838,7 @@ mod tests {
                 sync_budget: Some(120),
                 reward_scale: 1.0,
             },
+            1,
             store.clone(),
             queue.clone(),
             stop.clone(),
@@ -559,8 +878,8 @@ mod tests {
         let stop2 = stop.clone();
         let h = thread::spawn(move || {
             let f = pendulum_factory();
-            let env = make_env("pendulum").unwrap();
-            let actor = f.make_ddpg_actor().unwrap();
+            let venv = pendulum_venv(0, 2, 11);
+            let actor = f.make_ddpg_actor_batched(2).unwrap();
             run_ddpg_sampler(
                 SamplerCfg {
                     id: 0,
@@ -569,7 +888,7 @@ mod tests {
                     sync_budget: None,
                     reward_scale: 1.0,
                 },
-                env,
+                venv,
                 actor,
                 0.1,
                 &store2,
@@ -586,5 +905,6 @@ mod tests {
         assert_eq!(c.obs.len(), (c.len() + 1) * 3);
         // actions are clipped
         assert!(c.act.iter().all(|a| a.abs() <= 1.0));
+        assert!(c.env_slot < 2);
     }
 }

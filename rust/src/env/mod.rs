@@ -1,15 +1,22 @@
 //! Environment substrate: the `Env` trait, concrete continuous-control
 //! tasks (pendulum, cartpole, reacher, half-cheetah on the planar physics
-//! engine), wrappers, and a name-based registry.
+//! engine), wrappers, the vectorized [`vec_env::VecEnv`] layer, and a
+//! name-based registry.
 //!
 //! Conventions (enforced by `env::conformance` tests):
 //!   * actions live in `[-1, 1]^act_dim`; envs clip then scale internally;
 //!   * observations are finite f32;
 //!   * `reset` draws initial state from the env's own distribution using
 //!     the caller-supplied RNG (reproducible per sampler stream);
-//!   * episodes end after `max_episode_steps()` (the sampler enforces the
+//!   * episodes end after `max_episode_steps()` (`VecEnv` enforces the
 //!     cap and marks the boundary as a *time-limit truncation*, which GAE
 //!     bootstraps through, vs a true `done` which it does not).
+//!
+//! Vectorized sampling: each sampler worker owns a [`vec_env::VecEnv`] of
+//! `envs_per_sampler` homogeneous instances and drives all of them with
+//! ONE batched policy forward per sim tick (see `coordinator::sampler`).
+//! Per-env RNG streams make the batching observationally transparent: an
+//! env's trajectory is bitwise-identical at any vector width.
 
 pub mod cartpole;
 pub mod conformance;
@@ -18,6 +25,7 @@ pub mod pendulum;
 pub mod physics;
 pub mod reacher;
 pub mod registry;
+pub mod vec_env;
 pub mod wrappers;
 
 use crate::util::rng::Pcg64;

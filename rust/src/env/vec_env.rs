@@ -1,0 +1,384 @@
+//! Vectorized environments: M homogeneous `Env` instances stepped in
+//! lockstep behind one contiguous observation buffer.
+//!
+//! `VecEnv` is the substrate of vectorized sampling (WarpDrive / Spreeze
+//! style): one batched policy forward drives all M envs of a sampler
+//! worker per sim tick, so inference cost is amortized M-fold without
+//! adding threads. Invariants:
+//!
+//!   * each env owns an **independent RNG stream**, so env `i`'s
+//!     trajectory is bitwise-identical whether it runs inside a `VecEnv`
+//!     of size 1 or size M (see the conformance tests below);
+//!   * per-env episode state (step count, raw return, time-limit
+//!     truncation) lives here, not in the sampler, so every consumer
+//!     agrees on boundary semantics: `terminal` = env-reported done (GAE
+//!     must NOT bootstrap through), `truncated` = time-limit cut (GAE
+//!     bootstraps with V(s'));
+//!   * `step_all` never auto-resets: callers read the post-step
+//!     observation (the bootstrap state s') first, then call
+//!     [`VecEnv::reset_env`] for each finished env — exactly the ordering
+//!     the single-env sampler loop used.
+
+use super::Env;
+use crate::util::rng::Pcg64;
+
+/// Outcome of one lockstep tick for one env slot.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct VecStepInfo {
+    /// Raw (unscaled) reward of this transition.
+    pub reward: f32,
+    /// True terminal state (env returned done).
+    pub terminal: bool,
+    /// Time-limit truncation (episode cap reached without terminal).
+    pub truncated: bool,
+}
+
+impl VecStepInfo {
+    /// Episode boundary of any kind (caller must `reset_env` afterwards).
+    pub fn ended(&self) -> bool {
+        self.terminal || self.truncated
+    }
+}
+
+/// M homogeneous environments stepped in lockstep with per-env RNG
+/// streams and per-env episode accounting.
+pub struct VecEnv {
+    envs: Vec<Box<dyn Env>>,
+    rngs: Vec<Pcg64>,
+    /// Row-major [M * obs_dim] raw observations (current state per env).
+    obs: Vec<f32>,
+    ep_len: Vec<usize>,
+    ep_return: Vec<f32>,
+    obs_dim: usize,
+    act_dim: usize,
+    max_ep: usize,
+}
+
+impl VecEnv {
+    /// Bundle `envs` (all the same task) with one RNG stream per env.
+    pub fn new(envs: Vec<Box<dyn Env>>, rngs: Vec<Pcg64>) -> anyhow::Result<VecEnv> {
+        anyhow::ensure!(!envs.is_empty(), "VecEnv needs at least one env");
+        anyhow::ensure!(
+            envs.len() == rngs.len(),
+            "VecEnv: {} envs but {} rng streams",
+            envs.len(),
+            rngs.len()
+        );
+        let obs_dim = envs[0].obs_dim();
+        let act_dim = envs[0].act_dim();
+        let max_ep = envs[0].max_episode_steps();
+        for e in &envs {
+            anyhow::ensure!(
+                e.obs_dim() == obs_dim
+                    && e.act_dim() == act_dim
+                    && e.max_episode_steps() == max_ep,
+                "VecEnv requires homogeneous envs"
+            );
+        }
+        let m = envs.len();
+        Ok(VecEnv {
+            envs,
+            rngs,
+            obs: vec![0.0; m * obs_dim],
+            ep_len: vec![0; m],
+            ep_return: vec![0.0; m],
+            obs_dim,
+            act_dim,
+            max_ep,
+        })
+    }
+
+    /// Build M instances of a registered env. Env `i` gets RNG stream
+    /// `first_stream + i`, so the same `(seed, stream)` pair always
+    /// reproduces the same trajectory regardless of M or worker layout.
+    pub fn from_registry(
+        name: &str,
+        m: usize,
+        seed: u64,
+        first_stream: u64,
+    ) -> anyhow::Result<VecEnv> {
+        let envs = (0..m)
+            .map(|_| {
+                super::registry::make_env(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown env {name:?}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let rngs = (0..m)
+            .map(|i| Pcg64::with_stream(seed, first_stream + i as u64))
+            .collect();
+        VecEnv::new(envs, rngs)
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    pub fn max_episode_steps(&self) -> usize {
+        self.max_ep
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.envs[0].name()
+    }
+
+    /// Contiguous raw observations, row-major [M * obs_dim].
+    pub fn obs(&self) -> &[f32] {
+        &self.obs
+    }
+
+    /// Raw observation row of env `i`.
+    pub fn obs_row(&self, i: usize) -> &[f32] {
+        &self.obs[i * self.obs_dim..(i + 1) * self.obs_dim]
+    }
+
+    /// Steps taken in env `i`'s current episode.
+    pub fn ep_len(&self, i: usize) -> usize {
+        self.ep_len[i]
+    }
+
+    /// Raw (unscaled) return accumulated in env `i`'s current episode.
+    pub fn ep_return(&self, i: usize) -> f32 {
+        self.ep_return[i]
+    }
+
+    /// Reset every env from its own stream (fresh episodes everywhere).
+    pub fn reset_all(&mut self) {
+        for i in 0..self.envs.len() {
+            self.reset_env(i);
+        }
+    }
+
+    /// Reset env `i` only: fresh initial state from env `i`'s RNG stream,
+    /// episode counters cleared, observation row rewritten.
+    pub fn reset_env(&mut self, i: usize) {
+        let row = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
+        self.envs[i].reset(&mut self.rngs[i], row);
+        self.ep_len[i] = 0;
+        self.ep_return[i] = 0.0;
+    }
+
+    /// Step all M envs in index order with `actions` ([M * act_dim],
+    /// already clipped by the caller), writing per-env outcomes into
+    /// `out` ([M]) and the next observations into the contiguous buffer.
+    ///
+    /// Finished envs (terminal or truncated) are NOT auto-reset; their
+    /// rows hold s' until the caller invokes [`VecEnv::reset_env`].
+    pub fn step_all(&mut self, actions: &[f32], out: &mut [VecStepInfo]) {
+        debug_assert_eq!(actions.len(), self.envs.len() * self.act_dim);
+        debug_assert_eq!(out.len(), self.envs.len());
+        for i in 0..self.envs.len() {
+            let act = &actions[i * self.act_dim..(i + 1) * self.act_dim];
+            let row = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
+            let step = self.envs[i].step(act, row);
+            self.ep_len[i] += 1;
+            self.ep_return[i] += step.reward;
+            out[i] = VecStepInfo {
+                reward: step.reward,
+                terminal: step.done,
+                truncated: !step.done && self.ep_len[i] >= self.max_ep,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::registry::{make_env, ENV_NAMES};
+
+    /// Reference driver: one independent env with its own RNG stream,
+    /// mirroring the VecEnv episode bookkeeping exactly.
+    struct SingleRef {
+        env: Box<dyn Env>,
+        rng: Pcg64,
+        obs: Vec<f32>,
+        ep_len: usize,
+        ep_return: f32,
+    }
+
+    impl SingleRef {
+        fn new(name: &str, seed: u64, stream: u64) -> SingleRef {
+            let env = make_env(name).unwrap();
+            let obs = vec![0.0; env.obs_dim()];
+            SingleRef {
+                env,
+                rng: Pcg64::with_stream(seed, stream),
+                obs,
+                ep_len: 0,
+                ep_return: 0.0,
+            }
+        }
+
+        fn reset(&mut self) {
+            self.env.reset(&mut self.rng, &mut self.obs);
+            self.ep_len = 0;
+            self.ep_return = 0.0;
+        }
+
+        fn step(&mut self, act: &[f32]) -> VecStepInfo {
+            let s = self.env.step(act, &mut self.obs);
+            self.ep_len += 1;
+            self.ep_return += s.reward;
+            VecStepInfo {
+                reward: s.reward,
+                terminal: s.done,
+                truncated: !s.done && self.ep_len >= self.env.max_episode_steps(),
+            }
+        }
+    }
+
+    /// Satellite conformance test: M vectorized envs must produce
+    /// bitwise-identical trajectories to M independent single envs driven
+    /// with the same per-env RNG streams, including reset-on-done and
+    /// time-limit truncation ordering.
+    #[test]
+    fn lockstep_matches_independent_envs_bitwise() {
+        let m = 4;
+        let seed = 7u64;
+        for name in ENV_NAMES {
+            let mut venv = VecEnv::from_registry(name, m, seed, 1).unwrap();
+            venv.reset_all();
+            let mut refs: Vec<SingleRef> = (0..m)
+                .map(|i| SingleRef::new(name, seed, 1 + i as u64))
+                .collect();
+            for r in refs.iter_mut() {
+                r.reset();
+            }
+            let act_dim = venv.act_dim();
+            // action streams are shared between both sides and disjoint
+            // from the env dynamics streams
+            let mut act_rngs: Vec<Pcg64> = (0..m)
+                .map(|i| Pcg64::with_stream(seed, 1000 + i as u64))
+                .collect();
+
+            let mut actions = vec![0.0f32; m * act_dim];
+            let mut infos = vec![VecStepInfo::default(); m];
+            let ticks = venv.max_episode_steps() * 2 + 17; // cross ≥2 truncations
+            for tick in 0..ticks {
+                for (i, rng) in act_rngs.iter_mut().enumerate() {
+                    rng.fill_uniform(
+                        &mut actions[i * act_dim..(i + 1) * act_dim],
+                        -1.0,
+                        1.0,
+                    );
+                }
+                venv.step_all(&actions, &mut infos);
+                for (i, r) in refs.iter_mut().enumerate() {
+                    let want = r.step(&actions[i * act_dim..(i + 1) * act_dim]);
+                    assert_eq!(
+                        infos[i], want,
+                        "{name} env {i} tick {tick}: step info diverged"
+                    );
+                    assert_eq!(
+                        venv.obs_row(i),
+                        &r.obs[..],
+                        "{name} env {i} tick {tick}: obs diverged"
+                    );
+                    assert_eq!(venv.ep_len(i), r.ep_len, "{name} env {i} ep_len");
+                    assert_eq!(
+                        venv.ep_return(i).to_bits(),
+                        r.ep_return.to_bits(),
+                        "{name} env {i} ep_return not bitwise equal"
+                    );
+                    if infos[i].ended() {
+                        venv.reset_env(i);
+                        r.reset();
+                        assert_eq!(
+                            venv.obs_row(i),
+                            &r.obs[..],
+                            "{name} env {i} tick {tick}: reset obs diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Env 0's trajectory must not depend on how many siblings share the
+    /// VecEnv (per-env streams ⇒ batching is observationally transparent).
+    #[test]
+    fn trajectory_independent_of_vector_width() {
+        for &(name, stream0) in &[("pendulum", 1u64), ("cartpole", 5)] {
+            let run = |m: usize| {
+                let mut venv = VecEnv::from_registry(name, m, 99, stream0).unwrap();
+                venv.reset_all();
+                let act_dim = venv.act_dim();
+                let mut act_rng = Pcg64::with_stream(99, 777);
+                let mut actions = vec![0.0f32; m * act_dim];
+                let mut infos = vec![VecStepInfo::default(); m];
+                let mut trace = Vec::new();
+                for _ in 0..300 {
+                    // env 0's action comes from the shared stream; siblings
+                    // act independently (their own streams don't matter here)
+                    act_rng.fill_uniform(&mut actions[..act_dim], -1.0, 1.0);
+                    for i in 1..m {
+                        for a in actions[i * act_dim..(i + 1) * act_dim].iter_mut() {
+                            *a = 0.0;
+                        }
+                    }
+                    venv.step_all(&actions, &mut infos);
+                    trace.push((infos[0].reward.to_bits(), venv.obs_row(0).to_vec()));
+                    for i in 0..m {
+                        if infos[i].ended() {
+                            venv.reset_env(i);
+                        }
+                    }
+                }
+                trace
+            };
+            assert_eq!(run(1), run(8), "{name}: env 0 trajectory depends on M");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_envs_rejected() {
+        let envs = vec![make_env("pendulum").unwrap(), make_env("cartpole").unwrap()];
+        let rngs = vec![Pcg64::new(0), Pcg64::new(1)];
+        assert!(VecEnv::new(envs, rngs).is_err());
+        assert!(VecEnv::new(vec![], vec![]).is_err());
+        let envs = vec![make_env("pendulum").unwrap()];
+        assert!(VecEnv::new(envs, vec![]).is_err());
+    }
+
+    #[test]
+    fn episode_accounting_resets_per_env() {
+        let mut venv = VecEnv::from_registry("pendulum", 2, 3, 1).unwrap();
+        venv.reset_all();
+        let mut infos = vec![VecStepInfo::default(); 2];
+        let actions = vec![0.5f32; 2];
+        venv.step_all(&actions, &mut infos);
+        venv.step_all(&actions, &mut infos);
+        assert_eq!(venv.ep_len(0), 2);
+        assert_eq!(venv.ep_len(1), 2);
+        assert!(venv.ep_return(0) <= 0.0); // pendulum rewards are costs
+        venv.reset_env(0);
+        assert_eq!(venv.ep_len(0), 0);
+        assert_eq!(venv.ep_return(0), 0.0);
+        assert_eq!(venv.ep_len(1), 2, "reset_env(0) must not touch env 1");
+    }
+
+    #[test]
+    fn truncation_flag_fires_exactly_at_cap() {
+        let mut venv = VecEnv::from_registry("pendulum", 1, 11, 1).unwrap();
+        venv.reset_all();
+        let cap = venv.max_episode_steps();
+        let mut infos = vec![VecStepInfo::default(); 1];
+        for t in 1..=cap {
+            venv.step_all(&[0.0], &mut infos);
+            assert_eq!(
+                infos[0].truncated,
+                t == cap,
+                "truncation at step {t} (cap {cap})"
+            );
+            assert!(!infos[0].terminal, "pendulum never terminates");
+        }
+    }
+}

@@ -42,6 +42,8 @@ COMMON FLAGS:
 
 TRAIN FLAGS:
   --samplers N           parallel sampler workers (paper's N, default 10)
+  --envs-per-sampler M   vectorized envs per worker, one batched policy
+                         forward drives all M in lockstep (default 1)
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo ppo|ddpg        learner algorithm
@@ -106,6 +108,7 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     }
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.samplers = args.usize_or("samplers", cfg.samplers)?;
+    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", cfg.envs_per_sampler)?;
     cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
     cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;
@@ -130,9 +133,10 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
     cfg.save(&format!("{out_dir}/config.json"))?;
 
     walle::log_info!(
-        "training {} with {} samplers ({} mode, {} backend), {} samples/iter",
+        "training {} with {} samplers x {} envs ({} mode, {} backend), {} samples/iter",
         cfg.env,
         cfg.samplers,
+        cfg.envs_per_sampler,
         if cfg.async_mode { "async" } else { "sync" },
         cfg.backend.name(),
         cfg.samples_per_iter

@@ -210,4 +210,23 @@ pub trait BackendFactory: Send + Sync {
     fn make_ppo_learner(&self) -> anyhow::Result<Box<dyn PpoLearnerBackend>>;
     fn make_ddpg_actor(&self) -> anyhow::Result<Box<dyn DdpgActorBackend>>;
     fn make_ddpg_learner(&self) -> anyhow::Result<Box<dyn DdpgLearnerBackend>>;
+
+    /// Build an actor sized for exactly `batch` rows per call, so the
+    /// vectorized sampler's forward is full — no zero padding. Backends
+    /// with shape-specialized executables (XLA) return their fixed-batch
+    /// actor after checking it can hold `batch` real rows; the sampler
+    /// pads only the difference.
+    fn make_actor_batched(&self, batch: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+        let _ = batch;
+        self.make_actor()
+    }
+
+    /// DDPG counterpart of [`BackendFactory::make_actor_batched`].
+    fn make_ddpg_actor_batched(
+        &self,
+        batch: usize,
+    ) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
+        let _ = batch;
+        self.make_ddpg_actor()
+    }
 }

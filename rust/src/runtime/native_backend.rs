@@ -80,6 +80,19 @@ impl BackendFactory for NativeFactory {
         Ok(Box::new(NativeActor {
             layout: self.layout(),
             shape: self.shape(),
+            batch: 0,
+        }))
+    }
+
+    fn make_actor_batched(&self, batch: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+        anyhow::ensure!(batch > 0, "make_actor_batched: batch must be >= 1");
+        // native kernels are shape-agnostic, so "aligning" the backend is
+        // free: the actor simply advertises (and enforces) the exact row
+        // count, and the sampler never zero-pads — including batch == 1.
+        Ok(Box::new(NativeActor {
+            layout: self.layout(),
+            shape: self.shape(),
+            batch,
         }))
     }
 
@@ -102,6 +115,19 @@ impl BackendFactory for NativeFactory {
         Ok(Box::new(NativeDdpgActor {
             layout: actor_layout(self.obs_dim, self.act_dim, &self.hidden),
             shape: self.shape(),
+            batch: 0,
+        }))
+    }
+
+    fn make_ddpg_actor_batched(
+        &self,
+        batch: usize,
+    ) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
+        anyhow::ensure!(batch > 0, "make_ddpg_actor_batched: batch must be >= 1");
+        Ok(Box::new(NativeDdpgActor {
+            layout: actor_layout(self.obs_dim, self.act_dim, &self.hidden),
+            shape: self.shape(),
+            batch,
         }))
     }
 
@@ -122,11 +148,13 @@ impl BackendFactory for NativeFactory {
 struct NativeActor {
     layout: ParamLayout,
     shape: NetShape,
+    /// Exact rows per call when > 0 (batched sampler path); 0 = any.
+    batch: usize,
 }
 
 impl ActorBackend for NativeActor {
     fn batch(&self) -> usize {
-        0 // any
+        self.batch
     }
 
     fn obs_dim(&self) -> usize {
@@ -142,6 +170,11 @@ impl ActorBackend for NativeActor {
         let a = self.shape.act_dim;
         let b = obs.len() / o;
         anyhow::ensure!(obs.len() == b * o && noise.len() == b * a, "bad act shapes");
+        anyhow::ensure!(
+            self.batch == 0 || b == self.batch,
+            "act: got {b} rows, batched actor expects exactly {}",
+            self.batch
+        );
         let obs_m = Mat::from_vec(b, o, obs.to_vec());
         let noise_m = Mat::from_vec(b, a, noise.to_vec());
         let out = mlp::act(&self.layout, flat, &self.shape, &obs_m, &noise_m);
@@ -253,16 +286,23 @@ impl PpoLearnerBackend for NativePpoLearner {
 struct NativeDdpgActor {
     layout: ParamLayout,
     shape: NetShape,
+    /// Exact rows per call when > 0 (batched sampler path); 0 = any.
+    batch: usize,
 }
 
 impl DdpgActorBackend for NativeDdpgActor {
     fn batch(&self) -> usize {
-        0
+        self.batch
     }
 
     fn act(&mut self, actor: &[f32], obs: &[f32]) -> anyhow::Result<Vec<f32>> {
         let o = self.shape.obs_dim;
         let b = obs.len() / o;
+        anyhow::ensure!(
+            self.batch == 0 || b == self.batch,
+            "ddpg act: got {b} rows, batched actor expects exactly {}",
+            self.batch
+        );
         let obs_m = Mat::from_vec(b, o, obs.to_vec());
         Ok(mlp::ddpg_actor(&self.layout, actor, &self.shape, &obs_m).data)
     }
@@ -368,6 +408,31 @@ mod tests {
         assert_eq!(r1.action.len(), 8);
         assert_eq!(r1.logp.len(), 4);
         assert_eq!(r1.action, r1.mean); // zero noise
+    }
+
+    #[test]
+    fn batched_actor_enforces_exact_rows_and_matches_flexible() {
+        let f = factory();
+        let flat = f.init_ppo_params(0);
+        let mut any = f.make_actor().unwrap();
+        let mut four = f.make_actor_batched(4).unwrap();
+        assert_eq!(any.batch(), 0);
+        assert_eq!(four.batch(), 4);
+        let obs = vec![0.3f32; 4 * 3];
+        let noise = vec![0.0f32; 4 * 2];
+        let ra = any.act(&flat, &obs, &noise).unwrap();
+        let rb = four.act(&flat, &obs, &noise).unwrap();
+        assert_eq!(ra.action, rb.action);
+        assert_eq!(ra.value, rb.value);
+        // wrong row count is a hard error, not silent padding
+        assert!(four.act(&flat, &obs[..3], &noise[..2]).is_err());
+        assert!(f.make_actor_batched(0).is_err());
+
+        let mut d1 = f.make_ddpg_actor_batched(1).unwrap();
+        assert_eq!(d1.batch(), 1);
+        let (a, _) = f.init_ddpg_params(1);
+        assert_eq!(d1.act(&a, &[0.1, 0.2, 0.3]).unwrap().len(), 2);
+        assert!(d1.act(&a, &obs).is_err());
     }
 
     #[test]

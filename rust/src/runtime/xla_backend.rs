@@ -186,6 +186,45 @@ impl BackendFactory for XlaFactory {
         }))
     }
 
+    /// XLA `act` executables are shape-specialized at AOT time, so the
+    /// batch cannot be re-sized here; we hand out the fixed-batch actor
+    /// after checking it can hold `batch` real rows (the sampler pads
+    /// rows `batch..act_batch` and ignores their outputs). For a padding-
+    /// free forward, rebuild artifacts with `act_batch == envs_per_sampler`
+    /// (python/compile/aot.py).
+    fn make_actor_batched(&self, batch: usize) -> Result<Box<dyn ActorBackend>> {
+        ensure!(batch > 0, "make_actor_batched: batch must be >= 1");
+        ensure!(
+            batch <= self.meta.act_batch,
+            "envs_per_sampler {} exceeds AOT act_batch {} for preset {} — \
+             rebuild artifacts with a larger act_batch",
+            batch,
+            self.meta.act_batch,
+            self.meta.preset
+        );
+        if batch < self.meta.act_batch {
+            crate::log_debug!(
+                "xla actor: {} real rows in act_batch {} ({} padded rows per call)",
+                batch,
+                self.meta.act_batch,
+                self.meta.act_batch - batch
+            );
+        }
+        self.make_actor()
+    }
+
+    fn make_ddpg_actor_batched(&self, batch: usize) -> Result<Box<dyn DdpgActorBackend>> {
+        ensure!(batch > 0, "make_ddpg_actor_batched: batch must be >= 1");
+        ensure!(
+            batch <= self.meta.act_batch,
+            "envs_per_sampler {} exceeds AOT act_batch {} for preset {}",
+            batch,
+            self.meta.act_batch,
+            self.meta.preset
+        );
+        self.make_ddpg_actor()
+    }
+
     fn make_ddpg_actor(&self) -> Result<Box<dyn DdpgActorBackend>> {
         let client = xla::PjRtClient::cpu()?;
         let exe = compile(&client, self.meta.artifact("act_ddpg")?)?;

@@ -9,7 +9,7 @@ use walle::config::{DdpgCfg, PpoCfg};
 use walle::coordinator::policy_store::PolicyStore;
 use walle::coordinator::queue::Channel;
 use walle::coordinator::sampler::{run_ppo_sampler, SamplerCfg};
-use walle::env::registry::make_env;
+use walle::env::vec_env::VecEnv;
 use walle::runtime::native_backend::NativeFactory;
 use walle::runtime::BackendFactory;
 use walle::util::prop::{check, Gen, Pair, UsizeIn};
@@ -95,8 +95,8 @@ fn sampler_chunks_always_well_formed() {
                     sync_budget: None,
                     reward_scale: 1.0,
                 },
-                make_env("pendulum").unwrap(),
-                f.make_actor().unwrap(),
+                VecEnv::from_registry("pendulum", 1, chunk_steps as u64, 4).unwrap(),
+                f.make_actor_batched(1).unwrap(),
                 &store2,
                 &queue2,
                 &stop2,
@@ -170,6 +170,7 @@ fn ddpg_chunk_transition_reconstruction() {
         }
         let c = ExperienceChunk {
             sampler_id: 0,
+            env_slot: 0,
             policy_version: 1,
             obs,
             act: vec![0.0; len],

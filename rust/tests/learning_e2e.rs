@@ -51,6 +51,26 @@ fn ppo_improves_pendulum_return() {
 }
 
 #[test]
+fn vectorized_sampling_learns_too() {
+    // 2 workers x 4 lockstep envs at the same sample budget: the batched
+    // hot loop must not change what the learner sees structurally —
+    // returns improve just like the one-env-per-worker configuration.
+    let mut cfg = learn_cfg(2, 3);
+    cfg.envs_per_sampler = 4;
+    let returns = run_returns(&cfg);
+    let early = mean_f32(&returns[..3]);
+    let best_late = returns[returns.len() / 2..]
+        .windows(5)
+        .map(mean_f32)
+        .fold(f32::NEG_INFINITY, f32::max);
+    assert!(
+        best_late > early + 500.0,
+        "no learning with envs_per_sampler=4: early {early:.0} best_late {best_late:.0}"
+    );
+    assert!(best_late > -800.0, "final return too weak: {best_late:.0}");
+}
+
+#[test]
 fn parallel_sampling_does_not_hurt_learning() {
     // Same sample budget per iteration with N=1 vs N=6: final returns must
     // be in the same band (the paper's core "no return degradation" claim).

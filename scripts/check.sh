@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command: build, tests, lints.
+#
+#   scripts/check.sh
+#
+# Mirrors the ROADMAP's tier-1 gate (`cargo build --release &&
+# cargo test -q`) and adds clippy with warnings denied so CI and local
+# runs agree on what "clean" means.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== check.sh: all green =="
