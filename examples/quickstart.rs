@@ -8,7 +8,7 @@
 //! the learning curves are statistically identical (see
 //! rust/tests/runtime_roundtrip.rs for the numeric parity proof).
 
-use walle::config::{Backend, TrainConfig};
+use walle::config::{Backend, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::{eval, orchestrator};
 use walle::env::registry::make_env;
@@ -23,14 +23,19 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.samplers = args.usize_or("samplers", 4)?;
     cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
+    // try `--inference-mode shared`: one server thread batches all
+    // samplers' rows into a single forward per sim tick
+    cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
+        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
     cfg.iterations = args.usize_or("iterations", 40)?;
     cfg.seed = args.u64_or("seed", 0)?;
 
     println!(
-        "WALL-E quickstart: PPO on pendulum, N={} samplers x {} envs, {} backend",
+        "WALL-E quickstart: PPO on pendulum, N={} samplers x {} envs, {} backend, {} inference",
         cfg.samplers,
         cfg.envs_per_sampler,
-        cfg.backend.name()
+        cfg.backend.name(),
+        cfg.inference_mode.name()
     );
 
     let factory = make_factory(&cfg)?;
@@ -53,6 +58,9 @@ fn main() -> anyhow::Result<()> {
     let first = result.metrics.first().map(|m| m.mean_return).unwrap_or(0.0);
     let last = result.metrics.last().map(|m| m.mean_return).unwrap_or(0.0);
     println!("\ntraining return: {first:.0} -> {last:.0}");
+    if let Some(rep) = &result.infer {
+        println!("{}", rep.render());
+    }
     println!(
         "deterministic eval: {:.0} ± {:.0} over 10 episodes",
         eval_result.mean_return, eval_result.std_return

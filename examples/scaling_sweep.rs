@@ -14,7 +14,7 @@
 //!   Fig 7: learn time per iteration roughly constant in N
 
 use walle::bench::figures;
-use walle::config::{Backend, TrainConfig};
+use walle::config::{Backend, InferenceMode, TrainConfig};
 use walle::runtime::make_factory;
 use walle::util::cli::Args;
 
@@ -29,6 +29,11 @@ fn main() -> anyhow::Result<()> {
     cfg.iterations = args.usize_or("iterations", 6)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", 20_000)?;
     cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
+    // `--inference-mode shared` batches all N workers' rows into one
+    // fleet-wide forward per tick (the PR 2 mega-batch server)
+    cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
+        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
+    cfg.infer_max_wait_us = args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us)?;
     cfg.seed = args.u64_or("seed", 0)?;
     // sync mode isolates pure collection time per iteration (the paper
     // plots rollout time for a fixed 20k budget); async is the default
@@ -38,8 +43,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!(
-        "WALL-E scaling sweep ({}): N in {:?}, {} envs/sampler, {} samples/iter, {} iters each",
-        cfg.env, ns, cfg.envs_per_sampler, cfg.samples_per_iter, cfg.iterations
+        "WALL-E scaling sweep ({}): N in {:?}, {} envs/sampler, {} inference, \
+         {} samples/iter, {} iters each",
+        cfg.env,
+        ns,
+        cfg.envs_per_sampler,
+        cfg.inference_mode.name(),
+        cfg.samples_per_iter,
+        cfg.iterations
     );
 
     let factory_for = |c: &TrainConfig| make_factory(c);

@@ -48,6 +48,12 @@ class Preset:
     act_dim: int
     hidden: Tuple[int, ...] = (64, 64)
     act_batch: int = 1  # sampler inference batch (1 env per sampler, paper §3)
+    # every batch size to emit a shape-specialized ``act`` artifact for:
+    # ``act`` covers act_batch, ``act_b{B}`` covers each other B. Rust's
+    # runtime picks the exact artifact for its envs-per-sampler M (or the
+    # shared-inference fleet size N*M), so the forward is padding-free at
+    # any emitted size and pads only between sizes.
+    act_batches: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
     eval_batch: int = 32  # batched inference artifact for eval / benches
     minibatch: int = 512  # PPO minibatch rows (padded + masked by rust)
     horizon: int = 1024  # GAE artifact T (rust pads shorter trajectories)
@@ -126,6 +132,11 @@ def build_entries(p: Preset) -> Dict[str, Tuple[Callable, List]]:
     entries: Dict[str, Tuple[Callable, List]] = {
         "act": (act, [_f32(P), _f32(p.act_batch, O), _f32(p.act_batch, A)]),
         "act_eval": (act, [_f32(P), _f32(p.eval_batch, O), _f32(p.eval_batch, A)]),
+        **{
+            f"act_b{b}": (act, [_f32(P), _f32(b, O), _f32(b, A)])
+            for b in p.act_batches
+            if b != p.act_batch
+        },
         "train_ppo": (
             train_ppo,
             [_f32(P), _f32(P), _f32(P), _f32(), _f32(),
@@ -170,6 +181,9 @@ def build_entries(p: Preset) -> Dict[str, Tuple[Callable, List]]:
             )
 
         entries["act_ddpg"] = (act_ddpg, [_f32(Pa), _f32(p.act_batch, O)])
+        for b in p.act_batches:
+            if b != p.act_batch:
+                entries[f"act_ddpg_b{b}"] = (act_ddpg, [_f32(Pa), _f32(b, O)])
         entries["train_ddpg"] = (
             train_ddpg,
             [_f32(Pa), _f32(Pc), _f32(Pa), _f32(Pc),
@@ -189,6 +203,7 @@ def preset_meta(p: Preset, artifacts: Dict[str, str]) -> dict:
         "act_dim": p.act_dim,
         "hidden": list(p.hidden),
         "act_batch": p.act_batch,
+        "act_batches": sorted(set(p.act_batches) | {p.act_batch}),
         "eval_batch": p.eval_batch,
         "minibatch": p.minibatch,
         "horizon": p.horizon,

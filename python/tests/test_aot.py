@@ -36,6 +36,28 @@ class TestEmission:
             if p.parallel_learn:
                 assert {"grad_ppo", "apply_grads"} <= set(entries)
 
+    def test_per_batch_act_entries_emitted(self):
+        """One shape-specialized act per Preset.act_batches, so the Rust
+        runtime gets a padding-free forward at any emitted M (and the
+        shared-inference fleet sizes N*M in between pad minimally)."""
+        for name, p in aot.PRESETS.items():
+            entries = aot.build_entries(p)
+            for b in p.act_batches:
+                key = "act" if b == p.act_batch else f"act_b{b}"
+                assert key in entries, f"{name}: missing {key}"
+                _, args = entries[key]
+                assert args[1].shape == (b, p.obs_dim)
+                assert args[2].shape == (b, p.act_dim)
+                if p.ddpg and b != p.act_batch:
+                    dkey = f"act_ddpg_b{b}"
+                    assert dkey in entries, f"{name}: missing {dkey}"
+                    assert entries[dkey][1][1].shape == (b, p.obs_dim)
+
+    def test_meta_records_act_batches(self):
+        p = aot.PRESETS["pendulum"]
+        meta = aot.preset_meta(p, {})
+        assert meta["act_batches"] == sorted(set(p.act_batches) | {p.act_batch})
+
     def test_hlo_text_parses(self, pendulum_dir):
         path = os.path.join(pendulum_dir, "pendulum", "act.hlo.txt")
         text = open(path).read()

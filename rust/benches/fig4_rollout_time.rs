@@ -1,18 +1,35 @@
 //! Bench: paper Fig 4 — experience-collection (rollout) time per
 //! iteration vs number of sampler processes N, at a fixed per-iteration
 //! sample budget, swept over `envs_per_sampler` M (the vectorized-
-//! sampling axis). Expected shapes: monotone decrease in N at every M,
-//! and at equal N the M=8 rows collect a multiple faster than M=1 —
-//! one batched forward amortized over 8 envs.
+//! sampling axis) and the inference placement (PR 2's shared mega-batch
+//! server vs N private backends). Expected shapes: monotone decrease in N
+//! at every M, at equal N the M=8 rows collect a multiple faster than M=1
+//! (one batched forward amortized over 8 envs), and at N=8+ the shared
+//! rows approach one fleet-wide forward per sim tick (batch-fill ratio
+//! near 1 when workers stay in phase).
 //!
 //!     cargo bench --bench fig4_rollout_time
 //!
 //! Scaled-down workload (benches must terminate quickly); the full-size
-//! run is `examples/scaling_sweep.rs` / `walle figures`.
+//! run is `examples/scaling_sweep.rs` / `walle figures`. Results are also
+//! written machine-readable to `BENCH_fig4.json` so the repo records a
+//! perf trajectory across commits.
 
 use walle::bench::figures;
-use walle::config::{Backend, TrainConfig};
+use walle::config::{Backend, InferenceMode, TrainConfig};
 use walle::runtime::make_factory;
+use walle::util::json::Json;
+
+struct Series {
+    label: &'static str,
+    m: usize,
+    mode: InferenceMode,
+    rows: Vec<figures::SweepRow>,
+}
+
+fn steps_per_sec_per_worker(cfg: &TrainConfig, r: &figures::SweepRow) -> f64 {
+    cfg.samples_per_iter as f64 / r.collect_secs / r.n as f64
+}
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = TrainConfig::preset("halfcheetah");
@@ -23,44 +40,124 @@ fn main() -> anyhow::Result<()> {
     cfg.async_mode = false; // isolate pure collection time per iteration
 
     let ns = [1usize, 2, 4, 6, 8, 10];
-    let ms = [1usize, 8];
-    let mut per_m = Vec::new();
-    for &m in &ms {
+    let configs = [
+        ("local_m1", 1usize, InferenceMode::Local),
+        ("local_m8", 8, InferenceMode::Local),
+        ("shared_m8", 8, InferenceMode::Shared),
+    ];
+    let mut series = Vec::new();
+    for &(label, m, mode) in &configs {
         let mut c = cfg.clone();
         c.envs_per_sampler = m;
+        c.inference_mode = mode;
         let rows = figures::scaling_sweep(&c, &|cc| make_factory(cc), &ns, 1)?;
         figures::print_sweep_table(
             &rows,
-            &format!("Fig 4: rollout time vs N (halfcheetah, 6k samples/iter, M={m})"),
+            &format!(
+                "Fig 4: rollout time vs N (halfcheetah, 6k samples/iter, M={m}, {} inference)",
+                mode.name()
+            ),
         );
         let monotone = rows
             .windows(2)
             .all(|w| w[1].collect_secs <= w[0].collect_secs * 1.15);
-        println!("\nfig4 M={m} shape check (monotone decreasing within 15% noise): {monotone}");
+        println!("\nfig4 {label} shape check (monotone decreasing within 15% noise): {monotone}");
         assert!(
             rows.last().unwrap().collect_secs < rows.first().unwrap().collect_secs,
-            "N=10 must collect faster than N=1 (M={m})"
+            "N=10 must collect faster than N=1 ({label})"
         );
-        per_m.push((m, rows));
+        series.push(Series {
+            label,
+            m,
+            mode,
+            rows,
+        });
     }
 
     // the vectorization claim, measured: steps/sec per sampler worker at
     // equal N, M=8 vs M=1 (acceptance target: >= 2x on the native backend)
     println!("\n== vectorized sampling: per-worker throughput, M=8 vs M=1 ==");
-    let (_, base) = &per_m[0];
-    let (_, vec8) = &per_m[per_m.len() - 1];
+    let base = &series[0].rows;
+    let vec8 = &series[1].rows;
     for (b, v) in base.iter().zip(vec8) {
         assert_eq!(b.n, v.n);
-        let steps_per_sec = |r: &figures::SweepRow| {
-            cfg.samples_per_iter as f64 / r.collect_secs / r.n as f64
-        };
-        let ratio = steps_per_sec(v) / steps_per_sec(b);
+        let ratio = steps_per_sec_per_worker(&cfg, v) / steps_per_sec_per_worker(&cfg, b);
         println!(
             "N={:>2}: {:>9.0} steps/s/worker (M=1) vs {:>9.0} (M=8) -> {ratio:.2}x",
             b.n,
-            steps_per_sec(b),
-            steps_per_sec(v)
+            steps_per_sec_per_worker(&cfg, b),
+            steps_per_sec_per_worker(&cfg, v)
         );
     }
+
+    // the mega-batch claim: shared vs local at M=8, with batch-fill ratio
+    println!("\n== shared mega-batch inference vs N private backends (M=8) ==");
+    let shared = &series[2].rows;
+    for (l, s) in vec8.iter().zip(shared) {
+        assert_eq!(l.n, s.n);
+        let ratio = steps_per_sec_per_worker(&cfg, s) / steps_per_sec_per_worker(&cfg, l);
+        println!(
+            "N={:>2}: {:>9.0} steps/s/worker (local) vs {:>9.0} (shared, fill {:>5.1}%) -> {ratio:.2}x",
+            l.n,
+            steps_per_sec_per_worker(&cfg, l),
+            steps_per_sec_per_worker(&cfg, s),
+            100.0 * s.mean_batch_fill.unwrap_or(0.0)
+        );
+    }
+
+    // machine-readable record (BENCH_fig4.json): rows/s, steps/s-per-
+    // worker and batch-fill per (series, N)
+    let json = Json::obj(vec![
+        ("bench", Json::Str("fig4_rollout_time".into())),
+        ("env", Json::Str(cfg.env.clone())),
+        ("samples_per_iter", Json::Num(cfg.samples_per_iter as f64)),
+        ("iterations", Json::Num(cfg.iterations as f64)),
+        (
+            "series",
+            Json::Arr(
+                series
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("label", Json::Str(s.label.into())),
+                            ("envs_per_sampler", Json::Num(s.m as f64)),
+                            ("inference_mode", Json::Str(s.mode.name().into())),
+                            (
+                                "rows",
+                                Json::Arr(
+                                    s.rows
+                                        .iter()
+                                        .map(|r| {
+                                            Json::obj(vec![
+                                                ("n", Json::Num(r.n as f64)),
+                                                ("collect_secs", Json::Num(r.collect_secs)),
+                                                (
+                                                    "wall_collect_secs",
+                                                    Json::Num(r.wall_collect_secs),
+                                                ),
+                                                ("learn_secs", Json::Num(r.learn_secs)),
+                                                (
+                                                    "steps_per_sec_per_worker",
+                                                    Json::Num(steps_per_sec_per_worker(&cfg, r)),
+                                                ),
+                                                (
+                                                    "batch_fill",
+                                                    r.mean_batch_fill
+                                                        .map(Json::Num)
+                                                        .unwrap_or(Json::Null),
+                                                ),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_fig4.json", json.to_string())?;
+    println!("\nwrote BENCH_fig4.json");
     Ok(())
 }

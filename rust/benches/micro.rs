@@ -1,18 +1,28 @@
 //! Micro-benchmarks of WALL-E's hot paths: environment stepping, policy
-//! inference (native + XLA), the experience queue, GAE, and the PPO train
-//! step. These are the §Perf profiling probes (EXPERIMENTS.md §Perf).
+//! inference (native + XLA), the experience queue, GAE, the PPO train
+//! step, and shared-vs-private fleet inference (the PR 2 mega-batch
+//! server). These are the §Perf profiling probes (EXPERIMENTS.md §Perf).
+//! Headline rates are also written to `BENCH_micro.json` so the repo
+//! records a perf trajectory across commits.
 //!
 //!     cargo bench --bench micro
 
 use walle::algo::gae::gae;
+use walle::algo::normalizer::NormSnapshot;
 use walle::bench::harness::{fmt_secs, Bench};
 use walle::config::{DdpgCfg, PpoCfg};
+use walle::coordinator::policy_store::PolicyStore;
 use walle::coordinator::queue::Channel;
 use walle::env::registry::make_env;
+use walle::runtime::inference_server::{InferenceServer, InferenceServerCfg};
 use walle::runtime::native_backend::NativeFactory;
+#[cfg(feature = "xla")]
 use walle::runtime::xla_backend::XlaFactory;
 use walle::runtime::{BackendFactory, PpoMinibatch, PpoTrainState};
+use walle::util::json::Json;
 use walle::util::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn bench_env_steps() {
     for name in ["pendulum", "cartpole", "reacher", "halfcheetah"] {
@@ -100,11 +110,13 @@ fn bench_gae() {
 /// Act-throughput sweep over batch size: the case for vectorized
 /// sampling. One forward amortized over B envs should push rows/s far
 /// above the B=1 rate (the `envs_per_sampler` speedup is this curve).
-fn bench_act_batch_sweep() {
+/// Returns (batch, rows_per_sec) for the JSON record.
+fn bench_act_batch_sweep() -> Vec<(usize, f64)> {
     let f = NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
     let flat = f.init_ppo_params(0);
     let mut rng = Pcg64::new(7);
     let mut base_rate = 0.0f64;
+    let mut out = Vec::new();
     for b in [1usize, 4, 8, 16, 32] {
         let mut actor = f.make_actor_batched(b).unwrap();
         let mut obs = vec![0.0f32; b * 17];
@@ -127,7 +139,94 @@ fn bench_act_batch_sweep() {
              ({:.2}x the B=1 rate)",
             rows_per_sec / base_rate
         );
+        out.push((b, rows_per_sec));
     }
+    out
+}
+
+/// Fleet inference head-to-head: N worker threads each needing M rows per
+/// tick, served by (a) N private batched actors vs (b) the shared
+/// inference server coalescing all slabs into one N*M-row forward.
+/// Returns (private_rows_per_sec, shared_rows_per_sec, mean_fill).
+fn bench_shared_vs_private_fleet() -> (f64, f64, f64) {
+    let n = 8usize;
+    let m = 4usize;
+    let ticks = 400usize;
+    let f = || NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
+
+    // (a) N private actors, each on its own thread
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..n {
+            s.spawn(move || {
+                let fac = f();
+                let flat = fac.init_ppo_params(0);
+                let mut actor = fac.make_actor_batched(m).unwrap();
+                let mut rng = Pcg64::new(w as u64);
+                let mut obs = vec![0.0f32; m * 17];
+                let mut noise = vec![0.0f32; m * 6];
+                rng.fill_normal(&mut obs);
+                rng.fill_normal(&mut noise);
+                for _ in 0..ticks {
+                    let _ = actor.act(&flat, &obs, &noise).unwrap();
+                }
+            });
+        }
+    });
+    let private_secs = t0.elapsed().as_secs_f64();
+    let private_rate = (n * m * ticks) as f64 / private_secs;
+
+    // (b) one shared server, N clients
+    let fac = f();
+    let store = Arc::new(PolicyStore::new());
+    store.publish(fac.init_ppo_params(0), NormSnapshot::identity(17));
+    let server = Arc::new(InferenceServer::new(InferenceServerCfg {
+        max_wait: Duration::from_micros(200),
+        fleet_rows: n * m,
+        obs_dim: 17,
+        act_dim: 6,
+    }));
+    let clients: Vec<_> = (0..n).map(|_| server.client()).collect();
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        {
+            let server = server.clone();
+            let store = store.clone();
+            s.spawn(move || {
+                let fac = f();
+                server.serve_ppo(&fac, &store).unwrap();
+            });
+        }
+        for (w, client) in clients.into_iter().enumerate() {
+            s.spawn(move || {
+                let mut rng = Pcg64::new(w as u64);
+                let mut obs = vec![0.0f32; m * 17];
+                let mut noise = vec![0.0f32; m * 6];
+                rng.fill_normal(&mut obs);
+                rng.fill_normal(&mut noise);
+                for _ in 0..ticks {
+                    let _ = client.act(&obs, &noise).unwrap();
+                }
+            });
+        }
+    });
+    let shared_secs = t0.elapsed().as_secs_f64();
+    let shared_rate = (n * m * ticks) as f64 / shared_secs;
+    let rep = server.report();
+
+    println!(
+        "fleet inference (N={n} workers x M={m} rows, 17->64x64->6):\n\
+         \x20   private backends: {private_rate:>9.0} rows/s ({})\n\
+         \x20   shared server:    {shared_rate:>9.0} rows/s ({}) \
+         [{} forwards, fill {:.1}%, {} timeout cuts] -> {:.2}x",
+        fmt_secs(private_secs),
+        fmt_secs(shared_secs),
+        rep.forwards,
+        100.0 * rep.mean_fill(),
+        rep.timeout_dispatches,
+        shared_rate / private_rate
+    );
+    (private_rate, shared_rate, rep.mean_fill())
 }
 
 fn bench_native_backend() {
@@ -171,6 +270,12 @@ fn bench_native_backend() {
         });
 }
 
+#[cfg(not(feature = "xla"))]
+fn bench_xla_backend() {
+    println!("xla benches skipped: built without the `xla` feature");
+}
+
+#[cfg(feature = "xla")]
 fn bench_xla_backend() {
     if !std::path::Path::new("artifacts/index.json").exists() {
         println!("xla benches skipped: run `make artifacts` first");
@@ -238,7 +343,43 @@ fn main() {
     println!("-- native backend --");
     bench_native_backend();
     println!("-- act batch sweep (vectorized sampling) --");
-    bench_act_batch_sweep();
+    let sweep = bench_act_batch_sweep();
+    println!("-- shared vs private fleet inference --");
+    let (private_rate, shared_rate, fill) = bench_shared_vs_private_fleet();
     println!("-- xla backend --");
     bench_xla_backend();
+
+    // machine-readable record (BENCH_micro.json)
+    let json = Json::obj(vec![
+        ("bench", Json::Str("micro".into())),
+        (
+            "act_batch_sweep",
+            Json::Arr(
+                sweep
+                    .iter()
+                    .map(|&(b, rate)| {
+                        Json::obj(vec![
+                            ("batch", Json::Num(b as f64)),
+                            ("rows_per_sec", Json::Num(rate)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "fleet_inference",
+            Json::obj(vec![
+                ("workers", Json::Num(8.0)),
+                ("rows_per_worker", Json::Num(4.0)),
+                ("private_rows_per_sec", Json::Num(private_rate)),
+                ("shared_rows_per_sec", Json::Num(shared_rate)),
+                ("shared_batch_fill", Json::Num(fill)),
+            ]),
+        ),
+    ]);
+    if let Err(e) = std::fs::write("BENCH_micro.json", json.to_string()) {
+        eprintln!("could not write BENCH_micro.json: {e}");
+    } else {
+        println!("\nwrote BENCH_micro.json");
+    }
 }

@@ -38,6 +38,9 @@ pub struct SweepRow {
     pub collect_frac: f64,
     pub learn_frac: f64,
     pub mean_return: f32,
+    /// Shared inference only: mean fraction of the fleet mega-batch
+    /// filled per forward (None in local mode).
+    pub mean_batch_fill: Option<f64>,
 }
 
 /// Run the N-sweep behind Figs 4–7: same sample budget per iteration,
@@ -74,6 +77,7 @@ pub fn scaling_sweep(
             collect_frac: collect / (collect + learn),
             learn_frac: learn / (collect + learn),
             mean_return,
+            mean_batch_fill: result.infer.as_ref().map(|r| r.mean_fill()),
         });
         crate::log_info!(
             "sweep N={n}: collect {collect:.3}s learn {learn:.3}s return {mean_return:.1}"
@@ -242,6 +246,19 @@ mod tests {
     }
 
     #[test]
+    fn shared_inference_sweep_records_batch_fill() {
+        let mut base = tiny_base();
+        base.inference_mode = crate::config::InferenceMode::Shared;
+        base.infer_max_wait_us = 500;
+        let rows = scaling_sweep(&base, &factory_for, &[2], 0).unwrap();
+        let fill = rows[0].mean_batch_fill.expect("shared sweep must record fill");
+        assert!(fill > 0.0 && fill <= 1.0 + 1e-9, "fill {fill}");
+        // local sweeps leave it unset
+        let rows = scaling_sweep(&tiny_base(), &factory_for, &[1], 0).unwrap();
+        assert!(rows[0].mean_batch_fill.is_none());
+    }
+
+    #[test]
     fn speedups_normalize_to_n1() {
         let rows = vec![
             SweepRow {
@@ -252,6 +269,7 @@ mod tests {
                 collect_frac: 8.0 / 9.0,
                 learn_frac: 1.0 / 9.0,
                 mean_return: 0.0,
+                mean_batch_fill: None,
             },
             SweepRow {
                 n: 4,
@@ -261,6 +279,7 @@ mod tests {
                 collect_frac: 2.0 / 3.0,
                 learn_frac: 1.0 / 3.0,
                 mean_return: 0.0,
+                mean_batch_fill: None,
             },
         ];
         let (series, slope, r2) = speedups(&rows);

@@ -57,6 +57,35 @@ impl Backend {
     }
 }
 
+/// How sampler workers evaluate the policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferenceMode {
+    /// Every worker owns a private backend sized to its M envs (PR 1
+    /// vectorized path): N small forwards per sim tick fleet-wide.
+    Local,
+    /// One shared inference server owns a fleet-sized backend and
+    /// coalesces all workers' rows into one mega-batch forward per sim
+    /// tick (SEED/Spreeze-style centralized inference).
+    Shared,
+}
+
+impl InferenceMode {
+    pub fn parse(s: &str) -> Option<InferenceMode> {
+        match s {
+            "local" => Some(InferenceMode::Local),
+            "shared" => Some(InferenceMode::Shared),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferenceMode::Local => "local",
+            InferenceMode::Shared => "shared",
+        }
+    }
+}
+
 /// PPO hyper-parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PpoCfg {
@@ -134,6 +163,13 @@ pub struct TrainConfig {
     /// sim tick, multiplying rollout throughput per thread. 1 = the
     /// paper's original one-env-per-worker loop.
     pub envs_per_sampler: usize,
+    /// Where policy inference runs: `local` = one private backend per
+    /// worker (N forwards per tick); `shared` = one inference server
+    /// batches every worker's rows into a single fleet-wide forward.
+    pub inference_mode: InferenceMode,
+    /// Shared mode: max microseconds the server waits for stragglers
+    /// before dispatching a partial batch (the adaptive cut policy).
+    pub infer_max_wait_us: u64,
     /// Samples collected per iteration (paper: 20,000).
     pub samples_per_iter: usize,
     pub iterations: usize,
@@ -173,6 +209,8 @@ impl Default for TrainConfig {
             seed: 0,
             samplers: 10,
             envs_per_sampler: 1,
+            inference_mode: InferenceMode::Local,
+            infer_max_wait_us: 200,
             samples_per_iter: 20_000,
             iterations: 100,
             queue_capacity: 16,
@@ -275,6 +313,14 @@ impl TrainConfig {
             Json::Num(self.envs_per_sampler as f64),
         );
         m.insert(
+            "inference_mode".into(),
+            Json::Str(self.inference_mode.name().into()),
+        );
+        m.insert(
+            "infer_max_wait_us".into(),
+            Json::Num(self.infer_max_wait_us as f64),
+        );
+        m.insert(
             "samples_per_iter".into(),
             Json::Num(self.samples_per_iter as f64),
         );
@@ -356,6 +402,13 @@ impl TrainConfig {
         }
         if let Some(v) = j.opt("envs_per_sampler") {
             cfg.envs_per_sampler = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("inference_mode") {
+            cfg.inference_mode = InferenceMode::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad inference_mode {v:?}")))?;
+        }
+        if let Some(v) = j.opt("infer_max_wait_us") {
+            cfg.infer_max_wait_us = v.as_f64()? as u64;
         }
         if let Some(v) = j.opt("samples_per_iter") {
             cfg.samples_per_iter = v.as_usize()?;
@@ -494,6 +547,8 @@ mod tests {
         cfg.ddpg.tau = 0.01;
         cfg.learner_shards = 4;
         cfg.envs_per_sampler = 8;
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_max_wait_us = 750;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cfg, back);
@@ -542,6 +597,20 @@ mod tests {
         assert!(TrainConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"backend": "gpu"}"#).unwrap();
         assert!(TrainConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"inference_mode": "remote"}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn inference_mode_parses_and_defaults_local() {
+        assert_eq!(TrainConfig::default().inference_mode, InferenceMode::Local);
+        assert_eq!(InferenceMode::parse("shared"), Some(InferenceMode::Shared));
+        assert_eq!(InferenceMode::parse("local"), Some(InferenceMode::Local));
+        assert_eq!(InferenceMode::parse("gpu"), None);
+        let j = Json::parse(r#"{"inference_mode": "shared", "infer_max_wait_us": 50}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.inference_mode, InferenceMode::Shared);
+        assert_eq!(cfg.infer_max_wait_us, 50);
     }
 
     #[test]

@@ -2,9 +2,233 @@
 //! collection (rollout) time, learning time, their fractions (Figs 4, 6,
 //! 7), and average return (Fig 3). Collected by the learner, logged to
 //! stdout, and written as CSV/JSON for the bench harness.
+//!
+//! Also home to the shared-inference instrumentation: a fixed-bucket
+//! [`Histogram`] and the [`InferenceReport`] the inference server fills
+//! with dispatch-size, batch-fill-ratio and queue-wait distributions,
+//! surfaced in the end-of-run report.
 
 use crate::util::json::Json;
 use std::io::Write;
+
+/// Fixed-bucket histogram (upper-edge buckets plus an overflow bucket).
+/// Cheap enough to update once per inference dispatch / request.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Inclusive upper edges, ascending; values above the last edge land
+    /// in the overflow bucket.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// (upper_edge, count) pairs; the final entry is (+inf, overflow).
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.bounds
+            .iter()
+            .copied()
+            .chain(std::iter::once(f64::INFINITY))
+            .zip(self.counts.iter().copied())
+            .collect()
+    }
+
+    /// One-line summary: `n=.. mean=.. min=.. max=.. | <=1:3 <=4:10 inf:0`.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "n={} mean={:.2} min={:.2} max={:.2} |",
+            self.count,
+            self.mean(),
+            self.min(),
+            self.max()
+        );
+        for (edge, n) in self.buckets() {
+            if edge.is_finite() {
+                s.push_str(&format!(" <={edge:.0}:{n}"));
+            } else {
+                s.push_str(&format!(" inf:{n}"));
+            }
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("min", Json::Num(self.min())),
+            ("max", Json::Num(self.max())),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets()
+                        .into_iter()
+                        .map(|(edge, n)| {
+                            Json::obj(vec![
+                                (
+                                    "le",
+                                    if edge.is_finite() {
+                                        Json::Num(edge)
+                                    } else {
+                                        Json::Str("inf".into())
+                                    },
+                                ),
+                                ("count", Json::Num(n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// End-of-run statistics from the shared inference server (`--inference-mode
+/// shared`): how well cross-worker coalescing filled the mega-batch.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    /// Total batched forwards the server executed.
+    pub forwards: u64,
+    /// Total real rows served across all forwards.
+    pub rows: u64,
+    /// Fleet capacity in rows (N workers x M envs).
+    pub fleet_rows: usize,
+    /// Dispatches that went out with every active worker's slab on board.
+    pub full_dispatches: u64,
+    /// Partial dispatches forced by the `infer_max_wait_us` straggler cut.
+    pub timeout_dispatches: u64,
+    /// Real rows per dispatch.
+    pub dispatch_rows: Histogram,
+    /// rows / fleet_rows per dispatch (1.0 = perfectly coalesced).
+    pub fill_ratio: Histogram,
+    /// Per-request microseconds between submit and dispatch.
+    pub queue_wait_us: Histogram,
+}
+
+impl InferenceReport {
+    pub fn new(fleet_rows: usize) -> InferenceReport {
+        let f = fleet_rows as f64;
+        InferenceReport {
+            forwards: 0,
+            rows: 0,
+            fleet_rows,
+            full_dispatches: 0,
+            timeout_dispatches: 0,
+            dispatch_rows: Histogram::new(&[
+                1.0,
+                (f / 8.0).max(2.0),
+                (f / 4.0).max(3.0),
+                (f / 2.0).max(4.0),
+                f.max(5.0),
+            ]),
+            fill_ratio: Histogram::new(&[0.125, 0.25, 0.5, 0.75, 0.9, 1.0]),
+            queue_wait_us: Histogram::new(&[10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 5000.0]),
+        }
+    }
+
+    /// Mean fraction of the fleet batch filled per forward.
+    pub fn mean_fill(&self) -> f64 {
+        self.fill_ratio.mean()
+    }
+
+    /// Mean real rows per forward.
+    pub fn mean_dispatch_rows(&self) -> f64 {
+        self.dispatch_rows.mean()
+    }
+
+    /// Multi-line end-of-run report block.
+    pub fn render(&self) -> String {
+        format!(
+            "shared inference: {} forwards, {} rows ({} fleet rows), \
+             {} full / {} timeout cuts, mean fill {:.1}%\n\
+             dispatch rows: {}\n\
+             batch fill:    {}\n\
+             queue wait us: {}",
+            self.forwards,
+            self.rows,
+            self.fleet_rows,
+            self.full_dispatches,
+            self.timeout_dispatches,
+            100.0 * self.mean_fill(),
+            self.dispatch_rows.summary(),
+            self.fill_ratio.summary(),
+            self.queue_wait_us.summary()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("forwards", Json::Num(self.forwards as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("fleet_rows", Json::Num(self.fleet_rows as f64)),
+            ("full_dispatches", Json::Num(self.full_dispatches as f64)),
+            (
+                "timeout_dispatches",
+                Json::Num(self.timeout_dispatches as f64),
+            ),
+            ("mean_fill", Json::Num(self.mean_fill())),
+            ("dispatch_rows", self.dispatch_rows.to_json()),
+            ("fill_ratio", self.fill_ratio.to_json()),
+            ("queue_wait_us", self.queue_wait_us.to_json()),
+        ])
+    }
+}
 
 /// One training iteration's record.
 #[derive(Debug, Clone, Default)]
@@ -246,6 +470,49 @@ mod tests {
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("iter,"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let mut h = Histogram::new(&[1.0, 4.0, 8.0]);
+        for v in [0.5, 1.0, 3.0, 9.0, 100.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        let buckets = h.buckets();
+        assert_eq!(buckets.len(), 4);
+        assert_eq!(buckets[0], (1.0, 2)); // 0.5 and 1.0 (inclusive edge)
+        assert_eq!(buckets[1], (4.0, 1)); // 3.0
+        assert_eq!(buckets[2], (8.0, 0));
+        assert_eq!(buckets[3].1, 2); // 9.0, 100.0 overflow
+        assert!((h.mean() - 113.5 / 5.0).abs() < 1e-12);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 100.0);
+        assert!(h.summary().contains("n=5"));
+        let empty = Histogram::new(&[1.0]);
+        assert_eq!(empty.mean(), 0.0);
+        assert_eq!(empty.min(), 0.0);
+    }
+
+    #[test]
+    fn inference_report_renders_and_serializes() {
+        let mut r = InferenceReport::new(16);
+        r.forwards = 2;
+        r.rows = 24;
+        r.full_dispatches = 1;
+        r.timeout_dispatches = 1;
+        r.dispatch_rows.record(16.0);
+        r.dispatch_rows.record(8.0);
+        r.fill_ratio.record(1.0);
+        r.fill_ratio.record(0.5);
+        assert!((r.mean_fill() - 0.75).abs() < 1e-12);
+        assert!((r.mean_dispatch_rows() - 12.0).abs() < 1e-12);
+        let text = r.render();
+        assert!(text.contains("2 forwards"));
+        assert!(text.contains("mean fill 75.0%"));
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"fleet_rows\""));
+        assert!(j.contains("\"mean_fill\""));
     }
 
     #[test]

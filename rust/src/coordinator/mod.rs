@@ -9,9 +9,19 @@
 //!   real rows per sim tick drives all M envs (amortizing inference
 //!   M-fold per worker), scattering per-env transitions into per-env
 //!   chunk buffers so GAE segment semantics are preserved exactly.
-//!   Measure the amortization curve with `cargo bench --bench micro`
-//!   (act batch sweep B=1..32) and the end-to-end per-worker steps/sec
-//!   with `cargo bench --bench fig4_rollout_time` (M=1 vs M=8).
+//!   Inference runs either on a private per-worker backend
+//!   (`--inference-mode local`) or through the shared inference server
+//!   (`--inference-mode shared`): one `runtime::inference_server` thread
+//!   owns an N*M-row backend, coalesces every worker's slab into a
+//!   single mega-batch forward per sim tick (straggler-cut after
+//!   `--infer-max-wait-us`), observes the policy store once per dispatch
+//!   so all rows share a version, and hands back normalized obs +
+//!   per-row outputs. Per-env trajectories are bitwise identical across
+//!   modes. Measure the amortization curve with `cargo bench --bench
+//!   micro` (act batch sweep B=1..32, plus shared-vs-private fleet
+//!   throughput) and the end-to-end per-worker steps/sec with
+//!   `cargo bench --bench fig4_rollout_time` (M=1 vs M=8, local vs
+//!   shared); both write machine-readable `BENCH_*.json` results.
 //! * [`learner`] — the asynchronous agent process (collect → GAE →
 //!   minibatch epochs → publish), PPO and DDPG variants.
 //! * [`orchestrator`] — spawn/join lifecycle, sync/async modes.

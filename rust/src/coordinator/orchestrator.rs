@@ -1,20 +1,27 @@
 //! Orchestrator: process topology and lifecycle for one training run —
 //! spawns the N sampler workers (each driving `envs_per_sampler`
-//! vectorized envs in lockstep) and the learner, wires the experience
-//! queue and policy store between them, runs the iteration loop, and
+//! vectorized envs in lockstep), the learner, and — under
+//! `--inference-mode shared` — the inference-server thread that owns the
+//! fleet-sized actor; wires the experience queue, policy store, and
+//! inference request queue between them, runs the iteration loop, and
 //! shuts everything down cleanly (the WALL-E launcher in Fig 2).
 
 use crate::algo::rollout::ExperienceChunk;
-use crate::config::{Algo, TrainConfig};
+use crate::config::{Algo, InferenceMode, TrainConfig};
 use crate::coordinator::learner::{DdpgLearner, PpoLearner};
-use crate::coordinator::metrics::{IterationMetrics, MetricsLog};
+use crate::coordinator::metrics::{InferenceReport, IterationMetrics, MetricsLog};
 use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
-use crate::coordinator::sampler::{run_ddpg_sampler, run_ppo_sampler, SamplerCfg, SamplerReport};
+use crate::coordinator::sampler::{
+    run_ddpg_sampler_from, run_ppo_sampler_from, DdpgPolicySource, PpoPolicySource, SamplerCfg,
+    SamplerReport,
+};
 use crate::env::registry::make_env;
 use crate::env::vec_env::VecEnv;
+use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
 use crate::runtime::BackendFactory;
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Outcome of one full run.
@@ -25,6 +32,9 @@ pub struct RunResult {
     pub final_params: Vec<f32>,
     /// (pushed, popped, producer blocked, consumer blocked).
     pub queue_stats: (u64, u64, Duration, Duration),
+    /// Dispatch statistics of the shared inference server
+    /// (`--inference-mode shared` only).
+    pub infer: Option<InferenceReport>,
 }
 
 /// Run a full training session per `cfg`, reporting into `log`.
@@ -61,12 +71,39 @@ pub fn run(
     let mut result: Option<RunResult> = None;
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
+        // ---- shared inference server (one per run, optional) ----------
+        // Clients are registered BEFORE the serve thread starts so it
+        // never observes an empty fleet and exits early; the thread
+        // builds the fleet-sized backend on itself (PJRT is not Send)
+        // and runs until every worker has dropped its handle.
+        let m = cfg.envs_per_sampler;
+        let server = match cfg.inference_mode {
+            InferenceMode::Local => None,
+            InferenceMode::Shared => Some(Arc::new(InferenceServer::new(InferenceServerCfg {
+                max_wait: Duration::from_micros(cfg.infer_max_wait_us),
+                fleet_rows: cfg.samplers * m,
+                obs_dim: factory.obs_dim(),
+                act_dim: factory.act_dim(),
+            }))),
+        };
+        let mut clients: Vec<_> = (0..cfg.samplers)
+            .map(|_| server.as_ref().map(|s| s.client()))
+            .collect();
+        let server_handle = server.as_ref().map(|s| {
+            let s = s.clone();
+            let store = &store;
+            let algo = cfg.algo;
+            scope.spawn(move || match algo {
+                Algo::Ppo => s.serve_ppo(factory, store),
+                Algo::Ddpg => s.serve_ddpg(factory, store),
+            })
+        });
+
         // ---- sampler workers ------------------------------------------
         // Each worker drives `envs_per_sampler` envs in lockstep; env
         // dynamics streams are numbered globally (worker id * M + slot,
         // offset by 1), so a trajectory is pinned to its global slot
         // regardless of how envs are packed onto workers.
-        let m = cfg.envs_per_sampler;
         let mut handles = Vec::new();
         for id in 0..cfg.samplers {
             let scfg = SamplerCfg {
@@ -82,6 +119,7 @@ pub fn run(
             let env_name = cfg.env.clone();
             let algo = cfg.algo;
             let explore = cfg.ddpg.explore_noise;
+            let client = clients[id].take();
             handles.push(scope.spawn(move || -> anyhow::Result<SamplerReport> {
                 let venv = VecEnv::from_registry(
                     &env_name,
@@ -91,13 +129,21 @@ pub fn run(
                 )?;
                 match algo {
                     Algo::Ppo => {
-                        let actor = factory.make_actor_batched(m)?;
-                        Ok(run_ppo_sampler(scfg, venv, actor, store, queue, stop))
+                        let source = match client {
+                            Some(c) => PpoPolicySource::Shared(c),
+                            None => PpoPolicySource::Local(factory.make_actor_batched(m)?),
+                        };
+                        Ok(run_ppo_sampler_from(scfg, venv, source, store, queue, stop))
                     }
                     Algo::Ddpg => {
-                        let actor = factory.make_ddpg_actor_batched(m)?;
-                        Ok(run_ddpg_sampler(
-                            scfg, venv, actor, explore, store, queue, stop,
+                        let source = match client {
+                            Some(c) => DdpgPolicySource::Shared(c),
+                            None => {
+                                DdpgPolicySource::Local(factory.make_ddpg_actor_batched(m)?)
+                            }
+                        };
+                        Ok(run_ddpg_sampler_from(
+                            scfg, venv, source, explore, store, queue, stop,
                         ))
                     }
                 }
@@ -161,6 +207,11 @@ pub fn run(
         for h in handles {
             reports.push(h.join().map_err(|_| anyhow::anyhow!("sampler panicked"))??);
         }
+        // the serve loop exits once every worker drops its client handle
+        if let Some(h) = server_handle {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("inference server panicked"))??;
+        }
 
         result = Some(RunResult {
             metrics: log.iterations.clone(),
@@ -172,6 +223,7 @@ pub fn run(
                 queue.stats.push_blocked(),
                 queue.stats.pop_blocked(),
             ),
+            infer: server.map(|s| s.report()),
         });
         Ok(())
     })?;
@@ -282,6 +334,70 @@ mod tests {
         for m in &r.metrics {
             assert!(m.samples >= 600 && m.samples <= 1400, "samples {}", m.samples);
         }
+    }
+
+    #[test]
+    fn shared_inference_run_completes_and_reports_dispatch_stats() {
+        let mut cfg = tiny_cfg(3, true);
+        cfg.envs_per_sampler = 2;
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_max_wait_us = 500;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 600);
+        }
+        let rep = r.infer.expect("shared mode must produce an inference report");
+        assert_eq!(rep.fleet_rows, 6);
+        assert!(rep.forwards > 0, "server never dispatched");
+        // every sampled step went through the server exactly once: total
+        // rows >= steps (bootstrap forwards add more)
+        let total_steps: u64 = r.sampler_reports.iter().map(|s| s.steps).sum();
+        assert!(rep.rows >= total_steps, "rows {} < steps {total_steps}", rep.rows);
+        assert!(rep.mean_fill() > 0.0 && rep.mean_fill() <= 1.0 + 1e-9);
+        assert_eq!(rep.forwards, rep.full_dispatches + rep.timeout_dispatches);
+    }
+
+    #[test]
+    fn shared_inference_sync_mode_completes() {
+        let mut cfg = tiny_cfg(2, false);
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_max_wait_us = 500;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 600, "samples {}", m.samples);
+        }
+        assert!(r.infer.is_some());
+    }
+
+    #[test]
+    fn local_mode_reports_no_inference_stats() {
+        let cfg = tiny_cfg(1, true);
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert!(r.infer.is_none());
+    }
+
+    #[test]
+    fn shared_inference_ddpg_run_completes() {
+        let mut cfg = tiny_cfg(2, true);
+        cfg.algo = Algo::Ddpg;
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.samples_per_iter = 300;
+        cfg.ddpg.warmup_steps = 100;
+        cfg.ddpg.batch = 32;
+        cfg.ddpg.updates_per_iter = 10;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        assert!(r.infer.unwrap().forwards > 0);
     }
 
     #[test]

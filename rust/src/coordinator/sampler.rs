@@ -27,6 +27,28 @@
 //! backpressure; in sync mode each worker produces its share of the
 //! per-iteration budget under one policy version and then blocks for the
 //! next publication (the ablation baseline).
+//!
+//! ## Inference placement
+//!
+//! The hot loops are generic over a [`PpoPolicySource`] /
+//! [`DdpgPolicySource`]:
+//!
+//! * **Local** — the worker owns a private `ActorBackend` and normalizes
+//!   observations itself under its current snapshot; policy refreshes
+//!   piggyback on chunk boundaries (the PR 1 path, bit-for-bit).
+//! * **Shared** — the worker submits its raw M-row slab to the shared
+//!   inference server through an `ActorClient` and blocks on the
+//!   response, which carries the rows' outputs, the server-normalized
+//!   obs, and the policy snapshot the dispatch used. Refresh is
+//!   server-driven: when a response's version moves past the version of
+//!   the rows buffered so far, the worker cuts every non-empty chunk
+//!   *before* appending the new tick (a `Continuation` bootstrapped with
+//!   this tick's V(s_t)), preserving one-policy-version-per-chunk without
+//!   any worker-side store polling.
+//!
+//! Under a fixed policy version the two modes produce bitwise-identical
+//! per-env chunk streams (the MLP forward is row-independent; see the
+//! `shared_mode_chunk_stream_matches_local_bitwise` test).
 
 use crate::algo::ddpg::OuNoise;
 use crate::algo::normalizer::{NormSnapshot, RunningNorm};
@@ -34,11 +56,26 @@ use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::coordinator::queue::Channel;
 use crate::env::vec_env::{VecEnv, VecStepInfo};
+use crate::runtime::inference_server::ActorClient;
 use crate::runtime::{ActorBackend, DdpgActorBackend};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Where a PPO sampler evaluates the policy each sim tick.
+pub enum PpoPolicySource {
+    /// Private per-worker backend (N forwards per tick fleet-wide).
+    Local(Box<dyn ActorBackend>),
+    /// Shared inference server handle (one fleet-wide mega-batch forward).
+    Shared(ActorClient),
+}
+
+/// Where a DDPG sampler evaluates the deterministic actor each sim tick.
+pub enum DdpgPolicySource {
+    Local(Box<dyn DdpgActorBackend>),
+    Shared(ActorClient),
+}
 
 /// Stream-id base for PPO action-noise RNGs (global env index is added).
 /// High bases keep noise streams disjoint from env dynamics streams,
@@ -109,7 +146,10 @@ fn normalize_rows(dst: &mut [f32], src: &[f32], norm: &NormSnapshot, rows: usize
 /// the one-policy-version-per-chunk invariant. Sync mode evaluates its
 /// budget against produced + currently-buffered samples every tick, so a
 /// worker overshoots its per-version share by at most M-1 samples no
-/// matter how large M is. Returns (any_flush, do_refresh).
+/// matter how large M is. With `server_refresh` (shared inference mode)
+/// the async arm never fires: the server observes the store once per
+/// dispatch and the worker cuts on the version it sees in responses
+/// instead of polling the store itself. Returns (any_flush, do_refresh).
 #[allow(clippy::too_many_arguments)]
 fn plan_boundaries(
     infos: &[VecStepInfo],
@@ -118,6 +158,7 @@ fn plan_boundaries(
     chunk_steps: usize,
     produced_for_version: usize,
     sync_budget: Option<usize>,
+    server_refresh: bool,
     store: &PolicyStore,
     policy_version: u64,
     flush: &mut [bool],
@@ -132,8 +173,9 @@ fn plan_boundaries(
             let buffered: usize = bufs.iter().map(|b| b.len()).sum();
             produced_for_version + buffered >= budget
         }
-        // async: refresh only piggybacks on a natural boundary
-        None => natural && store.newer_than(policy_version),
+        // async: refresh only piggybacks on a natural boundary (and in
+        // shared mode not at all — the server drives it)
+        None => !server_refresh && natural && store.newer_than(policy_version),
     };
     if do_refresh {
         for f in flush.iter_mut() {
@@ -170,6 +212,61 @@ fn refresh_policy(
             *policy = p;
             report.policy_refreshes += 1;
         }
+    }
+    true
+}
+
+/// Shared-mode version cut (PPO): the server's dispatch moved to a newer
+/// policy version, so every row buffered so far belongs to `old_version`
+/// and this tick's rows must not join them. Flush each non-empty buffer
+/// as a `Continuation` chunk bootstrapped with V(s_t) — the value this
+/// tick's forward just produced for the pre-step observation, which is
+/// exactly the state the cut chunk ends on. Returns false if the queue
+/// closed.
+fn flush_version_cut(
+    cfg: &SamplerCfg,
+    bufs: &mut [ChunkBuf],
+    values: &[f32],
+    old_version: u64,
+    queue: &Channel<ExperienceChunk>,
+    report: &mut SamplerReport,
+) -> bool {
+    for (i, buf) in bufs.iter_mut().enumerate() {
+        if buf.len() == 0 {
+            continue;
+        }
+        let chunk = buf.take(cfg.id, i, old_version, ChunkEnd::Continuation, values[i]);
+        if queue.push(chunk).is_err() {
+            return false;
+        }
+        report.chunks += 1;
+    }
+    true
+}
+
+/// Shared-mode version cut (DDPG): same boundary rule, but replay chunks
+/// carry s' as a trailing obs row — the current (pre-tick) observation,
+/// normalized under the OLD snapshot the chunk was collected with.
+fn ddpg_flush_version_cut(
+    cfg: &SamplerCfg,
+    bufs: &mut [ChunkBuf],
+    venv: &VecEnv,
+    policy: &PolicySnapshot,
+    queue: &Channel<ExperienceChunk>,
+    report: &mut SamplerReport,
+) -> bool {
+    for (i, buf) in bufs.iter_mut().enumerate() {
+        if buf.len() == 0 {
+            continue;
+        }
+        let mut next_row = venv.obs_row(i).to_vec();
+        policy.norm.apply(&mut next_row);
+        buf.obs.extend_from_slice(&next_row);
+        let chunk = buf.take(cfg.id, i, policy.version, ChunkEnd::Continuation, 0.0);
+        if queue.push(chunk).is_err() {
+            return false;
+        }
+        report.chunks += 1;
     }
     true
 }
@@ -236,15 +333,30 @@ impl ChunkBuf {
     }
 }
 
-/// Run the PPO sampler loop until `stop` is set or the queue closes.
-///
-/// `venv` holds this worker's M lockstep envs; `actor` must accept at
-/// least M rows per call (`BackendFactory::make_actor_batched` aligns the
-/// two so the forward carries no padding on the native path).
+/// Run the PPO sampler loop with a private per-worker backend (local
+/// inference mode). Thin wrapper over [`run_ppo_sampler_from`].
 pub fn run_ppo_sampler(
     cfg: SamplerCfg,
+    venv: VecEnv,
+    actor: Box<dyn ActorBackend>,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    run_ppo_sampler_from(cfg, venv, PpoPolicySource::Local(actor), store, queue, stop)
+}
+
+/// Run the PPO sampler loop until `stop` is set or the queue closes.
+///
+/// `venv` holds this worker's M lockstep envs; a Local `source` must
+/// accept at least M rows per call (`BackendFactory::make_actor_batched`
+/// aligns the two so the forward carries no padding on the native path),
+/// while a Shared source submits exactly M raw rows per tick to the
+/// inference server.
+pub fn run_ppo_sampler_from(
+    cfg: SamplerCfg,
     mut venv: VecEnv,
-    mut actor: Box<dyn ActorBackend>,
+    mut source: PpoPolicySource,
     store: &PolicyStore,
     queue: &Channel<ExperienceChunk>,
     stop: &AtomicBool,
@@ -253,10 +365,15 @@ pub fn run_ppo_sampler(
     let m = venv.num_envs();
     let obs_dim = venv.obs_dim();
     let act_dim = venv.act_dim();
-    // backend may require a fixed batch > M (XLA artifacts): rows past M
-    // are zero padding whose outputs are ignored. Native batched actors
-    // advertise exactly M, so the forward is full.
-    let backend_batch = if actor.batch() == 0 { m } else { actor.batch() };
+    let shared = matches!(source, PpoPolicySource::Shared(_));
+    // a local backend may require a fixed batch > M (XLA artifacts): rows
+    // past M are zero padding whose outputs are ignored. Native batched
+    // actors advertise exactly M, so the forward is full. Shared mode
+    // always submits exactly M rows (the server owns any padding).
+    let backend_batch = match &source {
+        PpoPolicySource::Local(actor) if actor.batch() != 0 => actor.batch(),
+        _ => m,
+    };
     if backend_batch < m {
         crate::log_error!(
             "sampler {}: backend batch {} cannot hold {} envs",
@@ -299,15 +416,50 @@ pub fn run_ppo_sampler(
         // --- one lockstep sim tick under the current policy (busy-timed
         // with the per-thread CPU clock: preemption-immune)
         let busy_t0 = crate::util::timer::thread_cpu_secs();
-        normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
         for (i, rng) in noise_rngs.iter_mut().enumerate() {
             rng.fill_normal(&mut noise[i * act_dim..(i + 1) * act_dim]);
         }
-        let out = match actor.act(&policy.params, &obs_in, &noise) {
-            Ok(r) => r,
-            Err(e) => {
-                crate::log_error!("sampler {}: act failed: {e:#}", cfg.id);
-                break;
+        let (out, server_busy) = match &mut source {
+            PpoPolicySource::Local(actor) => {
+                normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
+                match actor.act(&policy.params, &obs_in, &noise) {
+                    Ok(r) => (r, 0.0),
+                    Err(e) => {
+                        crate::log_error!("sampler {}: act failed: {e:#}", cfg.id);
+                        break;
+                    }
+                }
+            }
+            PpoPolicySource::Shared(client) => {
+                let resp = match client.act(venv.obs(), &noise[..m * act_dim]) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        crate::log_error!("sampler {}: shared act failed: {e:#}", cfg.id);
+                        break;
+                    }
+                };
+                // the server normalized our rows under its dispatch
+                // snapshot — record those, they are what the policy saw
+                obs_in[..m * obs_dim].copy_from_slice(&resp.norm_obs);
+                if resp.snapshot.version != policy.version {
+                    // server-driven refresh: cut buffered (old-version)
+                    // chunks before this tick's rows join them
+                    if !flush_version_cut(
+                        &cfg,
+                        &mut bufs,
+                        &resp.out.value,
+                        policy.version,
+                        queue,
+                        &mut report,
+                    ) {
+                        break 'outer;
+                    }
+                    window_ticks = 0;
+                    produced_for_version = 0;
+                    policy = resp.snapshot.clone();
+                    report.policy_refreshes += 1;
+                }
+                (resp.out, resp.server_busy_secs)
             }
         };
         for i in 0..m {
@@ -329,7 +481,10 @@ pub fn run_ppo_sampler(
             buf.rew.push(info.reward * cfg.reward_scale);
         }
         report.steps += m as u64;
-        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0;
+        // shared mode: fold in this slab's share of the server's forward
+        // CPU time so virtual-core rollout timing stays comparable across
+        // inference modes
+        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0 + server_busy;
         for buf in bufs.iter_mut() {
             buf.busy_secs += tick_busy / m as f64;
         }
@@ -343,6 +498,7 @@ pub fn run_ppo_sampler(
             cfg.chunk_steps,
             produced_for_version,
             cfg.sync_budget,
+            shared,
             store,
             policy.version,
             &mut flush,
@@ -366,12 +522,28 @@ pub fn run_ppo_sampler(
         // exactly like the main-loop path.
         if any_needs_boot {
             let boot_t0 = crate::util::timer::thread_cpu_secs();
-            normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
             for z in noise.iter_mut() {
                 *z = 0.0;
             }
-            match actor.act(&policy.params, &obs_in, &noise) {
-                Ok(r) => boot_values[..m].copy_from_slice(&r.value[..m]),
+            let boot = match &mut source {
+                PpoPolicySource::Local(actor) => {
+                    normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
+                    actor
+                        .act(&policy.params, &obs_in, &noise)
+                        .map(|r| (r.value, 0.0))
+                }
+                // snapshot of a bootstrap response is deliberately not
+                // adopted: the buffers are being flushed right here, and
+                // V(s') under the freshest params is the better target
+                PpoPolicySource::Shared(client) => client
+                    .act(venv.obs(), &noise[..m * act_dim])
+                    .map(|r| (r.out.value, r.server_busy_secs)),
+            };
+            let boot_server_busy = match boot {
+                Ok((v, sb)) => {
+                    boot_values[..m].copy_from_slice(&v[..m]);
+                    sb
+                }
                 Err(e) => {
                     crate::log_error!(
                         "sampler {}: bootstrap value inference failed: {e:#}",
@@ -379,8 +551,9 @@ pub fn run_ppo_sampler(
                     );
                     break 'outer;
                 }
-            }
-            let boot_busy = crate::util::timer::thread_cpu_secs() - boot_t0;
+            };
+            let boot_busy =
+                crate::util::timer::thread_cpu_secs() - boot_t0 + boot_server_busy;
             for (i, buf) in bufs.iter_mut().enumerate() {
                 if flush[i] {
                     buf.busy_secs += boot_busy / n_flush as f64;
@@ -429,12 +602,34 @@ pub fn run_ppo_sampler(
     report
 }
 
-/// Run the DDPG sampler loop (deterministic actor + per-env exploration
-/// noise; chunks carry raw transitions for the replay buffer).
+/// Run the DDPG sampler loop with a private per-worker backend (local
+/// inference mode). Thin wrapper over [`run_ddpg_sampler_from`].
 pub fn run_ddpg_sampler(
     cfg: SamplerCfg,
+    venv: VecEnv,
+    actor: Box<dyn DdpgActorBackend>,
+    explore_noise: f32,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    run_ddpg_sampler_from(
+        cfg,
+        venv,
+        DdpgPolicySource::Local(actor),
+        explore_noise,
+        store,
+        queue,
+        stop,
+    )
+}
+
+/// Run the DDPG sampler loop (deterministic actor + per-env exploration
+/// noise; chunks carry raw transitions for the replay buffer).
+pub fn run_ddpg_sampler_from(
+    cfg: SamplerCfg,
     mut venv: VecEnv,
-    mut actor: Box<dyn DdpgActorBackend>,
+    mut source: DdpgPolicySource,
     explore_noise: f32,
     store: &PolicyStore,
     queue: &Channel<ExperienceChunk>,
@@ -444,7 +639,11 @@ pub fn run_ddpg_sampler(
     let m = venv.num_envs();
     let obs_dim = venv.obs_dim();
     let act_dim = venv.act_dim();
-    let backend_batch = if actor.batch() == 0 { m } else { actor.batch() };
+    let shared = matches!(source, DdpgPolicySource::Shared(_));
+    let backend_batch = match &source {
+        DdpgPolicySource::Local(actor) if actor.batch() != 0 => actor.batch(),
+        _ => m,
+    };
     if backend_batch < m {
         crate::log_error!(
             "ddpg sampler {}: backend batch {} cannot hold {} envs",
@@ -483,12 +682,45 @@ pub fn run_ddpg_sampler(
             break;
         }
         let busy_t0 = crate::util::timer::thread_cpu_secs();
-        normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
-        let det_actions = match actor.act(&policy.params, &obs_in) {
-            Ok(a) => a,
-            Err(e) => {
-                crate::log_error!("ddpg sampler {}: act failed: {e:#}", cfg.id);
-                break;
+        let (det_actions, server_busy) = match &mut source {
+            DdpgPolicySource::Local(actor) => {
+                normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
+                match actor.act(&policy.params, &obs_in) {
+                    Ok(a) => (a, 0.0),
+                    Err(e) => {
+                        crate::log_error!("ddpg sampler {}: act failed: {e:#}", cfg.id);
+                        break;
+                    }
+                }
+            }
+            DdpgPolicySource::Shared(client) => {
+                let resp = match client.act(venv.obs(), &[]) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        crate::log_error!("ddpg sampler {}: shared act failed: {e:#}", cfg.id);
+                        break;
+                    }
+                };
+                obs_in[..m * obs_dim].copy_from_slice(&resp.norm_obs);
+                if resp.snapshot.version != policy.version {
+                    // server-driven refresh: close out old-version chunks
+                    // (with their s' rows) before this tick appends
+                    if !ddpg_flush_version_cut(
+                        &cfg,
+                        &mut bufs,
+                        &venv,
+                        &policy,
+                        queue,
+                        &mut report,
+                    ) {
+                        break 'outer;
+                    }
+                    window_ticks = 0;
+                    produced_for_version = 0;
+                    policy = resp.snapshot.clone();
+                    report.policy_refreshes += 1;
+                }
+                (resp.out.action, resp.server_busy_secs)
             }
         };
         for i in 0..m {
@@ -513,7 +745,7 @@ pub fn run_ddpg_sampler(
             buf.rew.push(info.reward * cfg.reward_scale);
         }
         report.steps += m as u64;
-        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0;
+        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0 + server_busy;
         for buf in bufs.iter_mut() {
             buf.busy_secs += tick_busy / m as f64;
         }
@@ -527,6 +759,7 @@ pub fn run_ddpg_sampler(
             cfg.chunk_steps,
             produced_for_version,
             cfg.sync_budget,
+            shared,
             store,
             policy.version,
             &mut flush,
@@ -779,6 +1012,284 @@ mod tests {
             assert_eq!(a.end, b.end, "chunk ends diverged");
             assert_eq!(a.bootstrap_value, b.bootstrap_value, "bootstraps diverged");
         }
+    }
+
+    /// Tentpole acceptance: `--inference-mode shared` must be
+    /// observationally transparent. Under a fixed policy version, every
+    /// (worker, env slot) chunk stream produced through the shared
+    /// inference server is bitwise identical to the local-backend stream
+    /// at N=2 workers x M=2 envs — the server batches across workers but
+    /// the row-independent forward and server-side normalization leave
+    /// every trajectory untouched.
+    #[test]
+    fn shared_mode_chunk_stream_matches_local_bitwise() {
+        use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+        use std::collections::BTreeMap;
+
+        let n = 2usize;
+        let m = 2usize;
+        let budget = 1200usize;
+
+        let collect = |shared: bool| -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+            let store = Arc::new(PolicyStore::new());
+            let queue = Arc::new(Channel::new(256));
+            let stop = Arc::new(AtomicBool::new(false));
+            let f = pendulum_factory();
+            store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+
+            let server = shared.then(|| {
+                Arc::new(InferenceServer::new(InferenceServerCfg {
+                    max_wait: Duration::from_millis(5),
+                    fleet_rows: n * m,
+                    obs_dim: 3,
+                    act_dim: 1,
+                }))
+            });
+            let mut clients: Vec<_> = (0..n)
+                .map(|_| server.as_ref().map(|s| s.client()))
+                .collect();
+            let mut handles = Vec::new();
+            for id in 0..n {
+                let scfg = SamplerCfg {
+                    id,
+                    seed: 33,
+                    chunk_steps: 40,
+                    sync_budget: None,
+                    reward_scale: 1.0,
+                };
+                let store2 = store.clone();
+                let queue2 = queue.clone();
+                let stop2 = stop.clone();
+                let client = clients[id].take();
+                handles.push(thread::spawn(move || {
+                    let f = pendulum_factory();
+                    let venv = pendulum_venv(id, m, scfg.seed);
+                    let source = match client {
+                        Some(c) => PpoPolicySource::Shared(c),
+                        None => PpoPolicySource::Local(f.make_actor_batched(m).unwrap()),
+                    };
+                    run_ppo_sampler_from(scfg, venv, source, &store2, &queue2, &stop2)
+                }));
+            }
+            let server_h = server.as_ref().map(|s| {
+                let s = s.clone();
+                let store2 = store.clone();
+                thread::spawn(move || {
+                    let f = pendulum_factory();
+                    s.serve_ppo(&f, &store2).unwrap();
+                })
+            });
+
+            let mut total = 0usize;
+            let mut streams: BTreeMap<(usize, usize), Vec<ExperienceChunk>> = BTreeMap::new();
+            while total < budget {
+                let c = queue.pop().unwrap();
+                total += c.len();
+                streams.entry((c.sampler_id, c.env_slot)).or_default().push(c);
+            }
+            stop.store(true, Ordering::Relaxed);
+            queue.close();
+            for h in handles {
+                h.join().unwrap();
+            }
+            if let Some(h) = server_h {
+                h.join().unwrap();
+            }
+            streams
+        };
+
+        let local = collect(false);
+        let shared = collect(true);
+        assert_eq!(shared.len(), n * m, "every (worker, slot) must contribute");
+        for (key, lchunks) in &local {
+            let schunks = &shared[key];
+            let k = lchunks.len().min(schunks.len());
+            assert!(k >= 3, "stream {key:?}: only {k} comparable chunks");
+            for (a, b) in lchunks[..k].iter().zip(&schunks[..k]) {
+                assert_eq!(a.policy_version, b.policy_version, "{key:?}: version");
+                assert_eq!(a.obs, b.obs, "{key:?}: obs diverged");
+                assert_eq!(a.act, b.act, "{key:?}: actions diverged");
+                assert_eq!(a.rew, b.rew, "{key:?}: rewards diverged");
+                assert_eq!(a.logp, b.logp, "{key:?}: logp diverged");
+                assert_eq!(a.value, b.value, "{key:?}: values diverged");
+                assert_eq!(a.end, b.end, "{key:?}: chunk ends diverged");
+                assert_eq!(
+                    a.bootstrap_value, b.bootstrap_value,
+                    "{key:?}: bootstraps diverged"
+                );
+            }
+        }
+    }
+
+    /// DDPG counterpart of the bitwise-equivalence acceptance test: the
+    /// shared server must leave replay chunk streams (including the
+    /// trailing normalized s' row and post-round-trip OU noise order)
+    /// untouched at N=2 workers x M=2 envs under a fixed actor.
+    #[test]
+    fn ddpg_shared_mode_chunk_stream_matches_local_bitwise() {
+        use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+        use std::collections::BTreeMap;
+
+        let n = 2usize;
+        let m = 2usize;
+        let budget = 800usize;
+
+        let collect = |shared: bool| -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+            let store = Arc::new(PolicyStore::new());
+            let queue = Arc::new(Channel::new(256));
+            let stop = Arc::new(AtomicBool::new(false));
+            let f = pendulum_factory();
+            let (actor_params, _) = f.init_ddpg_params(0);
+            store.publish(actor_params, NormSnapshot::identity(3));
+
+            let server = shared.then(|| {
+                Arc::new(InferenceServer::new(InferenceServerCfg {
+                    max_wait: Duration::from_millis(5),
+                    fleet_rows: n * m,
+                    obs_dim: 3,
+                    act_dim: 1,
+                }))
+            });
+            let mut clients: Vec<_> = (0..n)
+                .map(|_| server.as_ref().map(|s| s.client()))
+                .collect();
+            let mut handles = Vec::new();
+            for id in 0..n {
+                let scfg = SamplerCfg {
+                    id,
+                    seed: 17,
+                    chunk_steps: 32,
+                    sync_budget: None,
+                    reward_scale: 1.0,
+                };
+                let store2 = store.clone();
+                let queue2 = queue.clone();
+                let stop2 = stop.clone();
+                let client = clients[id].take();
+                handles.push(thread::spawn(move || {
+                    let f = pendulum_factory();
+                    let venv = pendulum_venv(id, m, scfg.seed);
+                    let source = match client {
+                        Some(c) => DdpgPolicySource::Shared(c),
+                        None => {
+                            DdpgPolicySource::Local(f.make_ddpg_actor_batched(m).unwrap())
+                        }
+                    };
+                    run_ddpg_sampler_from(
+                        scfg, venv, source, 0.1, &store2, &queue2, &stop2,
+                    )
+                }));
+            }
+            let server_h = server.as_ref().map(|s| {
+                let s = s.clone();
+                let store2 = store.clone();
+                thread::spawn(move || {
+                    let f = pendulum_factory();
+                    s.serve_ddpg(&f, &store2).unwrap();
+                })
+            });
+
+            let mut total = 0usize;
+            let mut streams: BTreeMap<(usize, usize), Vec<ExperienceChunk>> = BTreeMap::new();
+            while total < budget {
+                let c = queue.pop().unwrap();
+                total += c.len();
+                streams.entry((c.sampler_id, c.env_slot)).or_default().push(c);
+            }
+            stop.store(true, Ordering::Relaxed);
+            queue.close();
+            for h in handles {
+                h.join().unwrap();
+            }
+            if let Some(h) = server_h {
+                h.join().unwrap();
+            }
+            streams
+        };
+
+        let local = collect(false);
+        let shared = collect(true);
+        assert_eq!(shared.len(), n * m, "every (worker, slot) must contribute");
+        for (key, lchunks) in &local {
+            let schunks = &shared[key];
+            let k = lchunks.len().min(schunks.len());
+            assert!(k >= 2, "stream {key:?}: only {k} comparable chunks");
+            for (a, b) in lchunks[..k].iter().zip(&schunks[..k]) {
+                assert_eq!(a.obs, b.obs, "{key:?}: obs (incl. s' row) diverged");
+                assert_eq!(a.act, b.act, "{key:?}: actions diverged");
+                assert_eq!(a.rew, b.rew, "{key:?}: rewards diverged");
+                assert_eq!(a.end, b.end, "{key:?}: chunk ends diverged");
+            }
+        }
+    }
+
+    /// Shared mode must also track published policy versions (the server
+    /// observes the store per dispatch; workers cut on version changes).
+    #[test]
+    fn shared_sampler_adopts_server_driven_refresh() {
+        use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+
+        let store = Arc::new(PolicyStore::new());
+        // small queue: bounds how many stale v1 chunks can pile up before
+        // the publish below, so a short pop budget must reach v2
+        let queue = Arc::new(Channel::new(8));
+        let stop = Arc::new(AtomicBool::new(false));
+        let f = pendulum_factory();
+        store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+
+        let server = Arc::new(InferenceServer::new(InferenceServerCfg {
+            max_wait: Duration::from_millis(2),
+            fleet_rows: 1,
+            obs_dim: 3,
+            act_dim: 1,
+        }));
+        let client = server.client();
+        let server_h = {
+            let s = server.clone();
+            let store2 = store.clone();
+            thread::spawn(move || {
+                let f = pendulum_factory();
+                s.serve_ppo(&f, &store2).unwrap();
+            })
+        };
+        let store2 = store.clone();
+        let queue2 = queue.clone();
+        let stop2 = stop.clone();
+        let h = thread::spawn(move || {
+            let venv = pendulum_venv(0, 1, 8);
+            run_ppo_sampler_from(
+                SamplerCfg {
+                    id: 0,
+                    seed: 8,
+                    chunk_steps: 50,
+                    sync_budget: None,
+                    reward_scale: 1.0,
+                },
+                venv,
+                PpoPolicySource::Shared(client),
+                &store2,
+                &queue2,
+                &stop2,
+            )
+        });
+
+        for _ in 0..3 {
+            assert_eq!(queue.pop().unwrap().policy_version, 1);
+        }
+        store.publish(f.init_ppo_params(1), NormSnapshot::identity(3));
+        let mut saw_v2 = false;
+        for _ in 0..30 {
+            if queue.pop().unwrap().policy_version == 2 {
+                saw_v2 = true;
+                break;
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        let report = h.join().unwrap();
+        server_h.join().unwrap();
+        assert!(saw_v2, "shared sampler never produced v2 chunks");
+        assert!(report.policy_refreshes >= 1);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
 
 use walle::bench::figures;
-use walle::config::{Algo, Backend, TrainConfig};
+use walle::config::{Algo, Backend, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::{eval, orchestrator};
 use walle::env::registry::{make_env, ENV_NAMES};
@@ -44,6 +44,12 @@ TRAIN FLAGS:
   --samplers N           parallel sampler workers (paper's N, default 10)
   --envs-per-sampler M   vectorized envs per worker, one batched policy
                          forward drives all M in lockstep (default 1)
+  --inference-mode MODE  local = private backend per worker (default);
+                         shared = one server batches all N workers' rows
+                         into a single fleet-wide forward per sim tick
+  --infer-max-wait-us U  shared mode: dispatch a partial batch after U
+                         microseconds instead of waiting for stragglers
+                         (default 200)
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo ppo|ddpg        learner algorithm
@@ -109,6 +115,11 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     cfg.samplers = args.usize_or("samplers", cfg.samplers)?;
     cfg.envs_per_sampler = args.usize_or("envs-per-sampler", cfg.envs_per_sampler)?;
+    if let Some(mode) = args.get("inference-mode") {
+        cfg.inference_mode = InferenceMode::parse(mode)
+            .ok_or_else(|| anyhow::anyhow!("bad --inference-mode {mode:?} (local|shared)"))?;
+    }
+    cfg.infer_max_wait_us = args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us)?;
     cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
     cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;
@@ -133,12 +144,14 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
     cfg.save(&format!("{out_dir}/config.json"))?;
 
     walle::log_info!(
-        "training {} with {} samplers x {} envs ({} mode, {} backend), {} samples/iter",
+        "training {} with {} samplers x {} envs ({} mode, {} backend, {} inference), \
+         {} samples/iter",
         cfg.env,
         cfg.samplers,
         cfg.envs_per_sampler,
         if cfg.async_mode { "async" } else { "sync" },
         cfg.backend.name(),
+        cfg.inference_mode.name(),
         cfg.samples_per_iter
     );
     let factory = make_factory(&cfg)?;
@@ -154,6 +167,15 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         pblk.as_secs_f64(),
         cblk.as_secs_f64()
     );
+    if let Some(rep) = &result.infer {
+        for line in rep.render().lines() {
+            walle::log_info!("{line}");
+        }
+        std::fs::write(
+            format!("{out_dir}/inference.json"),
+            rep.to_json().to_string(),
+        )?;
+    }
     Ok(())
 }
 

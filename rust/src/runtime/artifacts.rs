@@ -27,6 +27,12 @@ pub struct PresetMeta {
     pub act_dim: usize,
     pub hidden: Vec<usize>,
     pub act_batch: usize,
+    /// Every batch size a shape-specialized `act` artifact was emitted
+    /// for (`act` covers `act_batch`; `act_b{B}` covers each other B).
+    /// Lets the runtime pick a padding-free executable for any
+    /// `envs_per_sampler` / shared-fleet size (older meta.json without
+    /// the field falls back to `[act_batch]`).
+    pub act_batches: Vec<usize>,
     pub eval_batch: usize,
     pub minibatch: usize,
     pub horizon: usize,
@@ -52,6 +58,20 @@ impl PresetMeta {
         let j = Json::parse(&text).context("parsing meta.json")?;
 
         let layout = parse_layout(j.get("params")?)?;
+        let act_batch = j.get("act_batch")?.as_usize()?;
+        let mut act_batches = match j.opt("act_batches") {
+            Some(v) => v
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_usize())
+                .collect::<std::result::Result<Vec<_>, _>>()?,
+            None => vec![act_batch],
+        };
+        if !act_batches.contains(&act_batch) {
+            act_batches.push(act_batch);
+        }
+        act_batches.sort_unstable();
+        act_batches.dedup();
         let meta = PresetMeta {
             preset: j.get("preset")?.as_str()?.to_string(),
             obs_dim: j.get("obs_dim")?.as_usize()?,
@@ -62,7 +82,8 @@ impl PresetMeta {
                 .iter()
                 .map(|h| h.as_usize())
                 .collect::<std::result::Result<_, _>>()?,
-            act_batch: j.get("act_batch")?.as_usize()?,
+            act_batch,
+            act_batches,
             eval_batch: j.get("eval_batch")?.as_usize()?,
             minibatch: j.get("minibatch")?.as_usize()?,
             horizon: j.get("horizon")?.as_usize()?,
@@ -108,6 +129,39 @@ impl PresetMeta {
 
     pub fn has_artifact(&self, name: &str) -> bool {
         self.artifact_paths.contains_key(name)
+    }
+
+    /// Pick the `act`-family artifact (`prefix` = "act" or "act_ddpg")
+    /// for `rows` real rows: an exact-batch artifact first (padding-free
+    /// forward), else the smallest emitted batch that holds `rows` (the
+    /// caller zero-pads the difference). Returns (artifact name, batch).
+    pub fn act_artifact_for(&self, prefix: &str, rows: usize) -> Result<(String, usize)> {
+        let candidate = |b: usize| -> Option<String> {
+            let name = if b == self.act_batch {
+                prefix.to_string()
+            } else {
+                format!("{prefix}_b{b}")
+            };
+            self.has_artifact(&name).then_some(name)
+        };
+        if let Some(name) = candidate(rows) {
+            return Ok((name, rows));
+        }
+        for &b in &self.act_batches {
+            // ascending: first fit is the smallest (least padding)
+            if b >= rows {
+                if let Some(name) = candidate(b) {
+                    return Ok((name, b));
+                }
+            }
+        }
+        Err(anyhow!(
+            "no {prefix} artifact holds {rows} rows for preset {} (emitted batches \
+             {:?}) — rebuild artifacts with a larger act batch \
+             (python/compile/aot.py, Preset.act_batches)",
+            self.preset,
+            self.act_batches
+        ))
     }
 
     /// Verify the Python-exported layout equals the native construction —
@@ -207,6 +261,56 @@ mod tests {
         assert!(meta.ddpg.is_some());
         let native = layout::ppo_layout(3, 1, &meta.hidden);
         assert_eq!(native, meta.layout);
+    }
+
+    /// Synthetic meta (no artifacts dir needed): batch selection must
+    /// prefer an exact per-M artifact and otherwise pad on the smallest
+    /// emitted batch that fits.
+    #[test]
+    fn act_artifact_selection_prefers_exact_then_smallest_fit() {
+        let meta = PresetMeta {
+            preset: "synthetic".into(),
+            obs_dim: 3,
+            act_dim: 1,
+            hidden: vec![8, 8],
+            act_batch: 1,
+            act_batches: vec![1, 4, 16],
+            eval_batch: 32,
+            minibatch: 256,
+            horizon: 256,
+            gamma: 0.99,
+            lam: 0.95,
+            clip: 0.2,
+            ent_coef: 0.0,
+            vf_coef: 0.5,
+            param_count: layout::ppo_layout(3, 1, &[8, 8]).total(),
+            layout: layout::ppo_layout(3, 1, &[8, 8]),
+            ddpg: None,
+            artifact_paths: [("act", "p/act"), ("act_b4", "p/act_b4"), ("act_b16", "p/act_b16")]
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), PathBuf::from(v)))
+                .collect(),
+        };
+        // exact hits are padding-free
+        assert_eq!(meta.act_artifact_for("act", 1).unwrap(), ("act".into(), 1));
+        assert_eq!(
+            meta.act_artifact_for("act", 4).unwrap(),
+            ("act_b4".into(), 4)
+        );
+        // 3 rows pad into the b4 artifact, 9 into b16
+        assert_eq!(
+            meta.act_artifact_for("act", 3).unwrap(),
+            ("act_b4".into(), 4)
+        );
+        assert_eq!(
+            meta.act_artifact_for("act", 9).unwrap(),
+            ("act_b16".into(), 16)
+        );
+        // beyond every emitted batch: actionable error
+        let err = meta.act_artifact_for("act", 17).unwrap_err();
+        assert!(format!("{err:#}").contains("rebuild artifacts"));
+        // ddpg prefix has no artifacts in this synthetic meta
+        assert!(meta.act_artifact_for("act_ddpg", 1).is_err());
     }
 
     #[test]

@@ -1,0 +1,739 @@
+//! Shared inference server: one fleet-sized batched forward serves all N
+//! sampler workers (`--inference-mode shared`).
+//!
+//! PR 1 vectorized each worker over M lockstep envs, but every worker
+//! still ran its own private backend: N small forwards per sim tick
+//! fleet-wide. This module centralizes policy evaluation the way
+//! SEED-style systems and Spreeze do: a dedicated server thread owns ONE
+//! `ActorBackend` sized to `N * M` rows, workers submit their M-row slabs
+//! through an MPSC request queue via an [`ActorClient`] handle and block
+//! on a per-client completion slot, and the server coalesces pending
+//! slabs into one mega-batch forward.
+//!
+//! **Adaptive cut policy.** A dispatch fires when every active client has
+//! a slab pending (the fleet is in phase: one forward per sim tick) OR
+//! when `infer_max_wait_us` has elapsed since the first slab of the batch
+//! arrived — so a straggler worker (env reset, episode bookkeeping, queue
+//! backpressure, sync-mode parking) never stalls the rest of the fleet.
+//!
+//! **Policy refresh.** The server observes the [`PolicyStore`] once per
+//! dispatch, so every row in a forward is evaluated under the same
+//! parameter version, and each response carries the snapshot used. A
+//! worker that sees the version move cuts its in-progress chunks before
+//! appending the new tick (see `coordinator::sampler`), preserving the
+//! one-policy-version-per-chunk invariant without any worker-side polling.
+//!
+//! **Normalization.** Clients submit *raw* observations; the server
+//! normalizes them under the dispatch snapshot and returns the normalized
+//! rows, so the obs recorded into experience chunks always match what the
+//! policy actually saw. The native MLP forward is row-independent, which
+//! makes shared-vs-local bitwise equivalence a testable property (see the
+//! sampler tests), not an aspiration.
+//!
+//! Threading: backends are not `Send` on the XLA path, so [`InferenceServer::serve_ppo`]
+//! / [`serve_ddpg`](InferenceServer::serve_ddpg) build the backend on the
+//! calling thread (the orchestrator spawns one server thread per run) and
+//! everything else communicates through `Mutex`/`Condvar` queues.
+
+use crate::coordinator::metrics::InferenceReport;
+use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
+use crate::runtime::{ActResult, ActorBackend, BackendFactory, DdpgActorBackend};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Static server configuration (derived from `TrainConfig`).
+#[derive(Debug, Clone)]
+pub struct InferenceServerCfg {
+    /// Straggler cut: max wait from the first pending slab to dispatch.
+    pub max_wait: Duration,
+    /// Fleet capacity in rows (N workers x M envs per worker).
+    pub fleet_rows: usize,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+}
+
+/// One policy evaluation answer for a single worker's slab.
+pub struct ActResponse {
+    /// This worker's rows only (actions/logp/value sliced out of the
+    /// mega-batch result; DDPG fills `action` and zero logp/value).
+    pub out: ActResult,
+    /// The worker's obs normalized under `snapshot` ([rows * obs_dim]).
+    pub norm_obs: Vec<f32>,
+    /// The policy snapshot this forward used (same for every row of the
+    /// dispatch — the one-version-per-forward guarantee).
+    pub snapshot: Arc<PolicySnapshot>,
+    /// This slab's row-proportional share of the server's CPU time for
+    /// the dispatch (normalize + forward). Workers fold it into their
+    /// busy-time accounting so the virtual-core rollout timing model
+    /// stays honest when inference runs off-thread.
+    pub server_busy_secs: f64,
+}
+
+/// Completion slot: SPSC — the server fills it, exactly one client waits.
+struct ReplySlot {
+    cell: Mutex<Option<Result<ActResponse, String>>>,
+    ready: Condvar,
+}
+
+struct PendingReq {
+    rows: usize,
+    obs: Vec<f32>,
+    /// [rows * act_dim] N(0,1) draws (PPO) or empty (DDPG deterministic).
+    noise: Vec<f32>,
+    enqueued: Instant,
+    reply: Arc<ReplySlot>,
+}
+
+struct QueueState {
+    pending: Vec<PendingReq>,
+    pending_rows: usize,
+    /// Arrival time of the oldest slab in the current batch window.
+    first_enqueue: Option<Instant>,
+    /// Live client handles; the server exits when this reaches zero.
+    active_clients: usize,
+    /// Set once the serve loop has exited: submits fail fast.
+    server_down: bool,
+}
+
+struct ServerShared {
+    cfg: InferenceServerCfg,
+    q: Mutex<QueueState>,
+    submitted: Condvar,
+    metrics: Mutex<InferenceReport>,
+}
+
+/// Handle the orchestrator creates (one per run); `client()` handles go to
+/// workers, `serve_*` runs on a dedicated thread.
+pub struct InferenceServer {
+    shared: Arc<ServerShared>,
+}
+
+/// Worker-side handle: submit one slab, block until the server's next
+/// dispatch answers it. Dropping the handle deregisters the worker so the
+/// server stops waiting for it (and exits once all clients are gone).
+pub struct ActorClient {
+    shared: Arc<ServerShared>,
+    slot: Arc<ReplySlot>,
+}
+
+impl InferenceServer {
+    pub fn new(cfg: InferenceServerCfg) -> InferenceServer {
+        let fleet_rows = cfg.fleet_rows;
+        InferenceServer {
+            shared: Arc::new(ServerShared {
+                cfg,
+                q: Mutex::new(QueueState {
+                    pending: Vec::new(),
+                    pending_rows: 0,
+                    first_enqueue: None,
+                    active_clients: 0,
+                    server_down: false,
+                }),
+                submitted: Condvar::new(),
+                metrics: Mutex::new(InferenceReport::new(fleet_rows)),
+            }),
+        }
+    }
+
+    /// Register a worker and hand out its submission handle. Create every
+    /// client BEFORE spawning the serve thread, or the server may observe
+    /// zero active clients and exit immediately.
+    pub fn client(&self) -> ActorClient {
+        self.shared.q.lock().unwrap().active_clients += 1;
+        ActorClient {
+            shared: self.shared.clone(),
+            slot: Arc::new(ReplySlot {
+                cell: Mutex::new(None),
+                ready: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Snapshot of the dispatch statistics (valid any time; final after
+    /// the serve thread exits).
+    pub fn report(&self) -> InferenceReport {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    /// Serve PPO `act` requests on the current thread until every client
+    /// handle is dropped. Builds the fleet-sized backend here (backends
+    /// are thread-local on the XLA path).
+    pub fn serve_ppo(
+        &self,
+        factory: &dyn BackendFactory,
+        store: &PolicyStore,
+    ) -> anyhow::Result<()> {
+        let actor = match factory.make_actor_shared(self.shared.cfg.fleet_rows) {
+            Ok(a) => a,
+            Err(e) => {
+                self.fail_all(&format!("shared actor construction failed: {e:#}"));
+                return Err(e);
+            }
+        };
+        self.serve(ServerBackend::Ppo(actor), store)
+    }
+
+    /// DDPG counterpart of [`InferenceServer::serve_ppo`].
+    pub fn serve_ddpg(
+        &self,
+        factory: &dyn BackendFactory,
+        store: &PolicyStore,
+    ) -> anyhow::Result<()> {
+        let actor = match factory.make_ddpg_actor_shared(self.shared.cfg.fleet_rows) {
+            Ok(a) => a,
+            Err(e) => {
+                self.fail_all(&format!("shared ddpg actor construction failed: {e:#}"));
+                return Err(e);
+            }
+        };
+        self.serve(ServerBackend::Ddpg(actor), store)
+    }
+
+    /// Mark the server down and fail every pending request (and all future
+    /// submits). Called on any serve-loop exit path, including unwinds —
+    /// so it must tolerate a poisoned queue lock (a panic mid-dispatch
+    /// must not escalate to a double panic, it must release the fleet).
+    fn fail_all(&self, msg: &str) {
+        let mut q = self
+            .shared
+            .q
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        q.server_down = true;
+        q.pending_rows = 0;
+        q.first_enqueue = None;
+        for req in q.pending.drain(..) {
+            reply(&req.reply, Err(msg.to_string()));
+        }
+    }
+
+    fn serve(&self, mut backend: ServerBackend, store: &PolicyStore) -> anyhow::Result<()> {
+        // Unwind guard: if the serve loop panics (bad artifact shapes, a
+        // backend bug), mark the server down and fail outstanding slabs —
+        // otherwise every worker would spin on its completion slot forever
+        // and the run would hang instead of erroring. Idempotent with the
+        // explicit fail_all calls on clean exit paths.
+        struct DownGuard<'a>(&'a InferenceServer);
+        impl Drop for DownGuard<'_> {
+            fn drop(&mut self) {
+                self.0.fail_all("inference server terminated unexpectedly");
+            }
+        }
+        let _guard = DownGuard(self);
+        let sh = &*self.shared;
+        let o = sh.cfg.obs_dim;
+        let a = sh.cfg.act_dim;
+        // fixed > 0: shape-specialized backend (XLA artifact); partial
+        // dispatches are padded up to `fixed` with zero rows whose outputs
+        // are dropped. fixed == 0: flexible backend, every forward carries
+        // exactly the real rows (the native path — padding-free).
+        let fixed = backend.fixed_batch();
+        if fixed > 0 && fixed < sh.cfg.fleet_rows {
+            let msg = format!(
+                "shared backend batch {fixed} cannot hold the fleet's {} rows",
+                sh.cfg.fleet_rows
+            );
+            self.fail_all(&msg);
+            anyhow::bail!(msg);
+        }
+        let cap = if fixed > 0 {
+            fixed.max(sh.cfg.fleet_rows)
+        } else {
+            sh.cfg.fleet_rows
+        };
+        let mut obs_buf = vec![0.0f32; cap * o];
+        let mut noise_buf = vec![0.0f32; cap * a];
+
+        loop {
+            // ---- gather one batch under the adaptive cut policy --------
+            let (batch, was_full) = {
+                let mut q = sh.q.lock().unwrap();
+                loop {
+                    if q.pending.is_empty() {
+                        if q.active_clients == 0 {
+                            drop(q);
+                            self.fail_all("inference server shut down");
+                            return Ok(());
+                        }
+                        let (g, _) = sh
+                            .submitted
+                            .wait_timeout(q, Duration::from_millis(50))
+                            .unwrap();
+                        q = g;
+                        continue;
+                    }
+                    let full = q.pending.len() >= q.active_clients
+                        || q.pending_rows >= sh.cfg.fleet_rows;
+                    let deadline = q.first_enqueue.expect("pending implies first_enqueue")
+                        + sh.cfg.max_wait;
+                    let now = Instant::now();
+                    if full || now >= deadline {
+                        q.pending_rows = 0;
+                        q.first_enqueue = None;
+                        break (std::mem::take(&mut q.pending), full);
+                    }
+                    let (g, _) = sh.submitted.wait_timeout(q, deadline - now).unwrap();
+                    q = g;
+                }
+            };
+
+            // ---- one policy observation per dispatch -------------------
+            let snapshot = loop {
+                match store.latest() {
+                    Some(s) => break s,
+                    // clients gate on the first publish, so this only
+                    // spins in pathological test setups
+                    None => std::thread::sleep(Duration::from_millis(1)),
+                }
+            };
+
+            // ---- pack + normalize the mega-batch -----------------------
+            let rows: usize = batch.iter().map(|r| r.rows).sum();
+            let dispatched_at = Instant::now();
+            let busy_t0 = crate::util::timer::thread_cpu_secs();
+            debug_assert!(rows <= cap, "batch of {rows} rows exceeds capacity {cap}");
+            let mut cursor = 0usize;
+            for req in &batch {
+                let n = req.rows * o;
+                obs_buf[cursor * o..cursor * o + n].copy_from_slice(&req.obs);
+                for r in 0..req.rows {
+                    let row = &mut obs_buf[(cursor + r) * o..(cursor + r + 1) * o];
+                    snapshot.norm.apply(row);
+                }
+                if !req.noise.is_empty() {
+                    noise_buf[cursor * a..cursor * a + req.rows * a]
+                        .copy_from_slice(&req.noise);
+                }
+                cursor += req.rows;
+            }
+            let fwd_rows = if fixed > 0 { fixed } else { rows };
+            for z in &mut obs_buf[rows * o..fwd_rows * o] {
+                *z = 0.0; // padding rows (fixed-batch backends only)
+            }
+            for z in &mut noise_buf[rows * a..fwd_rows * a] {
+                *z = 0.0;
+            }
+
+            // ---- the one forward ---------------------------------------
+            let result = backend.forward(
+                &snapshot.params,
+                &obs_buf[..fwd_rows * o],
+                &noise_buf[..fwd_rows * a],
+                fwd_rows,
+                a,
+            );
+            let dispatch_busy = crate::util::timer::thread_cpu_secs() - busy_t0;
+
+            // ---- metrics -----------------------------------------------
+            {
+                let mut m = sh.metrics.lock().unwrap();
+                m.forwards += 1;
+                m.rows += rows as u64;
+                if was_full {
+                    m.full_dispatches += 1;
+                } else {
+                    m.timeout_dispatches += 1;
+                }
+                m.dispatch_rows.record(rows as f64);
+                m.fill_ratio.record(rows as f64 / sh.cfg.fleet_rows as f64);
+                for req in &batch {
+                    m.queue_wait_us
+                        .record((dispatched_at - req.enqueued).as_secs_f64() * 1e6);
+                }
+            }
+
+            // ---- scatter responses -------------------------------------
+            match result {
+                Ok(res) => {
+                    let mut cursor = 0usize;
+                    for req in batch {
+                        let (r0, r1) = (cursor, cursor + req.rows);
+                        reply(
+                            &req.reply,
+                            Ok(ActResponse {
+                                out: ActResult {
+                                    action: res.action[r0 * a..r1 * a].to_vec(),
+                                    logp: res.logp[r0..r1].to_vec(),
+                                    value: res.value[r0..r1].to_vec(),
+                                    mean: res.mean[r0 * a..r1 * a].to_vec(),
+                                },
+                                norm_obs: obs_buf[r0 * o..r1 * o].to_vec(),
+                                snapshot: snapshot.clone(),
+                                server_busy_secs: dispatch_busy * req.rows as f64
+                                    / rows as f64,
+                            }),
+                        );
+                        cursor = r1;
+                    }
+                }
+                Err(e) => {
+                    // reply the error to every slab in the dispatch and
+                    // keep serving: workers terminate themselves exactly
+                    // like a local-backend act failure
+                    let msg = format!("shared inference forward failed: {e:#}");
+                    crate::log_error!("{msg}");
+                    for req in batch {
+                        reply(&req.reply, Err(msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn reply(slot: &ReplySlot, r: Result<ActResponse, String>) {
+    *slot.cell.lock().unwrap() = Some(r);
+    slot.ready.notify_one();
+}
+
+impl ActorClient {
+    /// Submit this worker's slab (raw obs, per-row noise) and block until
+    /// the server's dispatch answers it. `noise` must hold `rows *
+    /// act_dim` N(0,1) draws for PPO, or be empty for DDPG.
+    pub fn act(&self, raw_obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResponse> {
+        let sh = &*self.shared;
+        let o = sh.cfg.obs_dim;
+        let a = sh.cfg.act_dim;
+        anyhow::ensure!(
+            !raw_obs.is_empty() && raw_obs.len() % o == 0,
+            "client slab must be a whole number of obs rows"
+        );
+        let rows = raw_obs.len() / o;
+        anyhow::ensure!(
+            noise.is_empty() || noise.len() == rows * a,
+            "noise must be empty (ddpg) or rows * act_dim"
+        );
+        anyhow::ensure!(
+            rows <= sh.cfg.fleet_rows,
+            "slab of {rows} rows exceeds fleet capacity {}",
+            sh.cfg.fleet_rows
+        );
+        {
+            let mut q = sh.q.lock().unwrap();
+            anyhow::ensure!(!q.server_down, "inference server is down");
+            let now = Instant::now();
+            q.pending.push(PendingReq {
+                rows,
+                obs: raw_obs.to_vec(),
+                noise: noise.to_vec(),
+                enqueued: now,
+                reply: self.slot.clone(),
+            });
+            q.pending_rows += rows;
+            q.first_enqueue.get_or_insert(now);
+        }
+        sh.submitted.notify_all();
+
+        // await the completion slot; periodically probe server liveness
+        // (never hold the slot lock while probing — server replies while
+        // holding the queue lock on its exit path)
+        let mut cell = self.slot.cell.lock().unwrap();
+        loop {
+            if let Some(r) = cell.take() {
+                return r.map_err(|e| anyhow::anyhow!(e));
+            }
+            let (g, _) = self
+                .slot
+                .ready
+                .wait_timeout(cell, Duration::from_millis(50))
+                .unwrap();
+            cell = g;
+            if cell.is_some() {
+                continue;
+            }
+            drop(cell);
+            if self.shared.q.lock().unwrap().server_down {
+                let mut c = self.slot.cell.lock().unwrap();
+                // the terminal reply may have landed in the gap
+                if let Some(r) = c.take() {
+                    return r.map_err(|e| anyhow::anyhow!(e));
+                }
+                anyhow::bail!("inference server terminated");
+            }
+            cell = self.slot.cell.lock().unwrap();
+        }
+    }
+}
+
+impl Drop for ActorClient {
+    fn drop(&mut self) {
+        // poison-tolerant: a worker unwinding past its client must still
+        // deregister, or the server would wait on a dead peer forever
+        let mut q = self
+            .shared
+            .q
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        q.active_clients = q.active_clients.saturating_sub(1);
+        drop(q);
+        // wake the server so it re-evaluates the full-batch condition
+        // (remaining workers shouldn't wait max_wait for a dead peer)
+        self.shared.submitted.notify_all();
+    }
+}
+
+/// The server's view of a policy backend: PPO (stochastic, needs noise)
+/// or DDPG (deterministic actor; logp/value are zero-filled).
+enum ServerBackend {
+    Ppo(Box<dyn ActorBackend>),
+    Ddpg(Box<dyn DdpgActorBackend>),
+}
+
+impl ServerBackend {
+    fn fixed_batch(&self) -> usize {
+        match self {
+            ServerBackend::Ppo(b) => b.batch(),
+            ServerBackend::Ddpg(b) => b.batch(),
+        }
+    }
+
+    fn forward(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        noise: &[f32],
+        rows: usize,
+        act_dim: usize,
+    ) -> anyhow::Result<ActResult> {
+        match self {
+            ServerBackend::Ppo(b) => b.act(params, obs, noise),
+            ServerBackend::Ddpg(b) => {
+                let action = b.act(params, obs)?;
+                anyhow::ensure!(
+                    action.len() >= rows * act_dim,
+                    "ddpg actor returned {} values for {} rows",
+                    action.len(),
+                    rows
+                );
+                Ok(ActResult {
+                    mean: action.clone(),
+                    action,
+                    logp: vec![0.0; rows],
+                    value: vec![0.0; rows],
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::normalizer::NormSnapshot;
+    use crate::config::{DdpgCfg, PpoCfg};
+    use crate::runtime::native_backend::NativeFactory;
+    use std::thread;
+
+    fn factory(obs: usize, act: usize) -> NativeFactory {
+        NativeFactory::new(obs, act, &[8, 8], PpoCfg::default(), DdpgCfg::default())
+    }
+
+    fn server(fleet_rows: usize, max_wait_ms: u64) -> InferenceServer {
+        InferenceServer::new(InferenceServerCfg {
+            max_wait: Duration::from_millis(max_wait_ms),
+            fleet_rows,
+            obs_dim: 3,
+            act_dim: 1,
+        })
+    }
+
+    fn published_store(f: &NativeFactory) -> Arc<PolicyStore> {
+        let store = Arc::new(PolicyStore::new());
+        store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
+        store
+    }
+
+    /// The acceptance-criterion property: with all N workers in phase,
+    /// the server issues exactly ONE forward per sim tick fleet-wide.
+    #[test]
+    fn in_phase_fleet_gets_one_forward_per_tick() {
+        let n = 8;
+        let ticks = 25;
+        let f = factory(3, 1);
+        let store = published_store(&f);
+        let srv = Arc::new(server(n, 5_000)); // generous cut: never fires
+        let clients: Vec<ActorClient> = (0..n).map(|_| srv.client()).collect();
+
+        let srv2 = srv.clone();
+        let store2 = store.clone();
+        let server_h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+
+        let mut worker_hs = Vec::new();
+        for (w, client) in clients.into_iter().enumerate() {
+            worker_hs.push(thread::spawn(move || {
+                let obs = vec![0.1 * (w as f32 + 1.0); 3];
+                let noise = vec![0.0f32; 1];
+                for _ in 0..ticks {
+                    let resp = client.act(&obs, &noise).unwrap();
+                    assert_eq!(resp.out.action.len(), 1);
+                    assert_eq!(resp.norm_obs, obs); // identity norm
+                    assert_eq!(resp.snapshot.version, 1);
+                }
+            }));
+        }
+        for h in worker_hs {
+            h.join().unwrap();
+        }
+        // all clients dropped inside the worker threads -> server exits
+        server_h.join().unwrap().unwrap();
+
+        let rep = srv.report();
+        assert_eq!(
+            rep.forwards, ticks as u64,
+            "expected exactly one forward per tick"
+        );
+        assert_eq!(rep.rows, (n * ticks) as u64);
+        assert_eq!(rep.full_dispatches, ticks as u64);
+        assert_eq!(rep.timeout_dispatches, 0);
+        assert!((rep.mean_fill() - 1.0).abs() < 1e-9);
+    }
+
+    /// The straggler guard: with one worker parked, the other's slab must
+    /// dispatch as a partial batch once `max_wait` elapses.
+    #[test]
+    fn timeout_cut_dispatches_partial_batch_past_parked_worker() {
+        let f = factory(3, 1);
+        let store = published_store(&f);
+        let srv = Arc::new(server(2, 30));
+        let active = srv.client();
+        let parked = srv.client(); // registered, never submits
+
+        let srv2 = srv.clone();
+        let store2 = store.clone();
+        let server_h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+
+        let t0 = Instant::now();
+        let resp = active.act(&[0.1, 0.2, 0.3], &[0.0]).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(resp.out.action.len(), 1);
+        assert!(
+            waited >= Duration::from_millis(25),
+            "dispatched before the cut: {waited:?}"
+        );
+        assert!(
+            waited < Duration::from_secs(2),
+            "straggler stalled the fleet: {waited:?}"
+        );
+
+        drop(active);
+        drop(parked);
+        server_h.join().unwrap().unwrap();
+        let rep = srv.report();
+        assert_eq!(rep.forwards, 1);
+        assert_eq!(rep.timeout_dispatches, 1);
+        assert_eq!(rep.full_dispatches, 0);
+        assert!((rep.mean_fill() - 0.5).abs() < 1e-9);
+        assert!(rep.queue_wait_us.mean() >= 25_000.0);
+    }
+
+    /// Batched results must equal per-worker local forwards row for row
+    /// (the server adds no numerical perturbation).
+    #[test]
+    fn shared_rows_match_local_forward_bitwise() {
+        let f = factory(3, 2);
+        let store = Arc::new(PolicyStore::new());
+        store.publish(f.init_ppo_params(3), NormSnapshot::identity(3));
+        let srv = Arc::new(InferenceServer::new(InferenceServerCfg {
+            max_wait: Duration::from_millis(500),
+            fleet_rows: 4,
+            obs_dim: 3,
+            act_dim: 2,
+        }));
+        let c0 = srv.client();
+        let c1 = srv.client();
+        let srv2 = srv.clone();
+        let store2 = store.clone();
+        let server_h = thread::spawn(move || {
+            let f = factory(3, 2);
+            srv2.serve_ppo(&f, &store2)
+        });
+
+        let obs0 = vec![0.3, -0.1, 0.7, 0.2, 0.0, -0.5];
+        let noise0 = vec![0.4, -0.2, 0.1, 0.9];
+        let obs1 = vec![-0.9, 0.5, 0.05, 0.6, -0.3, 0.8];
+        let noise1 = vec![-0.7, 0.3, 0.0, -0.1];
+        let (o0c, n0c) = (obs0.clone(), noise0.clone());
+        let h0 = thread::spawn(move || c0.act(&o0c, &n0c).unwrap());
+        let (o1c, n1c) = (obs1.clone(), noise1.clone());
+        let h1 = thread::spawn(move || c1.act(&o1c, &n1c).unwrap());
+        let r0 = h0.join().unwrap();
+        let r1 = h1.join().unwrap();
+        server_h.join().unwrap().unwrap();
+
+        let flat = f.init_ppo_params(3);
+        let mut local = f.make_actor_batched(2).unwrap();
+        let want0 = local.act(&flat, &obs0, &noise0).unwrap();
+        let want1 = local.act(&flat, &obs1, &noise1).unwrap();
+        assert_eq!(r0.out.action, want0.action);
+        assert_eq!(r0.out.logp, want0.logp);
+        assert_eq!(r0.out.value, want0.value);
+        assert_eq!(r1.out.action, want1.action);
+        assert_eq!(r1.out.logp, want1.logp);
+        assert_eq!(r1.out.value, want1.value);
+    }
+
+    #[test]
+    fn server_exits_when_all_clients_drop_and_rejects_late_submits() {
+        let f = factory(3, 1);
+        let store = published_store(&f);
+        let srv = Arc::new(server(1, 10));
+        let client = srv.client();
+        let srv2 = srv.clone();
+        let store2 = store.clone();
+        let server_h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+        client.act(&[0.0, 0.0, 0.0], &[0.0]).unwrap();
+        drop(client);
+        server_h.join().unwrap().unwrap();
+        // a client created after shutdown fails fast instead of hanging
+        let late = srv.client();
+        assert!(late.act(&[0.0, 0.0, 0.0], &[0.0]).is_err());
+    }
+
+    #[test]
+    fn ddpg_requests_use_empty_noise_and_zero_logp() {
+        let f = factory(3, 1);
+        let store = Arc::new(PolicyStore::new());
+        let (actor_params, _) = f.init_ddpg_params(0);
+        store.publish(actor_params.clone(), NormSnapshot::identity(3));
+        let srv = Arc::new(server(2, 20));
+        let client = srv.client();
+        let srv2 = srv.clone();
+        let store2 = store.clone();
+        let server_h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ddpg(&f, &store2)
+        });
+        let resp = client.act(&[0.2, -0.2, 0.4, 0.1, 0.3, -0.6], &[]).unwrap();
+        assert_eq!(resp.out.action.len(), 2);
+        assert_eq!(resp.out.logp, vec![0.0, 0.0]);
+        assert_eq!(resp.out.value, vec![0.0, 0.0]);
+        let mut local = f.make_ddpg_actor_batched(2).unwrap();
+        let want = local
+            .act(&actor_params, &[0.2, -0.2, 0.4, 0.1, 0.3, -0.6])
+            .unwrap();
+        assert_eq!(resp.out.action, want);
+        drop(client);
+        server_h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn client_validates_slab_shapes() {
+        let srv = server(4, 10);
+        let client = srv.client();
+        // not a whole number of rows
+        assert!(client.act(&[0.0, 0.0], &[]).is_err());
+        // bad noise length
+        assert!(client.act(&[0.0; 3], &[0.0, 0.0]).is_err());
+        // slab larger than the fleet
+        assert!(client.act(&[0.0; 15], &[]).is_err());
+    }
+}

@@ -12,9 +12,28 @@
 //! backends are created *per thread* through a `Send + Sync` factory: each
 //! sampler thread owns its own client + compiled executables. Compilation
 //! happens once at worker startup, never on the hot path.
+//!
+//! ## Inference placement (`--inference-mode`)
+//!
+//! * **local** (default) — every sampler worker builds its own actor via
+//!   [`BackendFactory::make_actor_batched`] and runs M-row forwards
+//!   privately: N forwards per sim tick fleet-wide.
+//! * **shared** — the orchestrator spawns one [`inference_server`] thread
+//!   which builds a single fleet-sized actor via
+//!   [`BackendFactory::make_actor_shared`] and coalesces every worker's
+//!   M-row slab into ONE `N*M`-row forward per sim tick (dispatching
+//!   early after `--infer-max-wait-us` if a straggler holds the batch).
+//!   Workers talk to it through `inference_server::ActorClient` handles.
+//!
+//! Both modes produce bitwise-identical per-env trajectories (the MLP
+//! forward is row-independent); shared mode trades a request/response hop
+//! for mega-batch amortization, which wins once N small forwards per tick
+//! dominate the rollout loop.
 
 pub mod artifacts;
+pub mod inference_server;
 pub mod native_backend;
+#[cfg(feature = "xla")]
 pub mod xla_backend;
 
 use crate::nn::mlp::PpoStats;
@@ -180,10 +199,16 @@ pub fn make_factory(
     let (obs_dim, act_dim) = crate::env::registry::env_dims(&cfg.env)
         .ok_or_else(|| anyhow::anyhow!("unknown env {:?}", cfg.env))?;
     match cfg.backend {
+        #[cfg(feature = "xla")]
         crate::config::Backend::Xla => Ok(Box::new(xla_backend::XlaFactory::new(
             &cfg.artifacts_dir,
             &cfg.env,
         )?)),
+        #[cfg(not(feature = "xla"))]
+        crate::config::Backend::Xla => anyhow::bail!(
+            "this build has no XLA/PJRT support — rebuild with `--features xla` \
+             (the native backend runs everywhere: `--backend native`)"
+        ),
         crate::config::Backend::Native => Ok(Box::new(native_backend::NativeFactory::new(
             obs_dim,
             act_dim,
@@ -227,6 +252,26 @@ pub trait BackendFactory: Send + Sync {
         batch: usize,
     ) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
         let _ = batch;
+        self.make_ddpg_actor()
+    }
+
+    /// Build the fleet-sized actor for the shared inference server: it
+    /// must accept ANY row count from 1 to `max_rows` per call (dispatch
+    /// sizes vary with the adaptive cut). Flexible backends (native,
+    /// `batch() == 0`) serve every dispatch padding-free; shape-
+    /// specialized backends (XLA) return a fixed-batch executable of at
+    /// least `max_rows` rows and the server zero-pads partial dispatches.
+    fn make_actor_shared(&self, max_rows: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+        let _ = max_rows;
+        self.make_actor()
+    }
+
+    /// DDPG counterpart of [`BackendFactory::make_actor_shared`].
+    fn make_ddpg_actor_shared(
+        &self,
+        max_rows: usize,
+    ) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
+        let _ = max_rows;
         self.make_ddpg_actor()
     }
 }

@@ -96,6 +96,22 @@ impl BackendFactory for NativeFactory {
         }))
     }
 
+    fn make_actor_shared(&self, max_rows: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+        anyhow::ensure!(max_rows > 0, "make_actor_shared: max_rows must be >= 1");
+        // native kernels accept any row count, so the inference server's
+        // fleet actor is simply a flexible (batch = 0) actor: every
+        // dispatch — full or straggler-cut partial — runs padding-free.
+        self.make_actor()
+    }
+
+    fn make_ddpg_actor_shared(
+        &self,
+        max_rows: usize,
+    ) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
+        anyhow::ensure!(max_rows > 0, "make_ddpg_actor_shared: max_rows must be >= 1");
+        self.make_ddpg_actor()
+    }
+
     fn make_ppo_learner(&self) -> anyhow::Result<Box<dyn PpoLearnerBackend>> {
         Ok(Box::new(NativePpoLearner {
             layout: self.layout(),
@@ -433,6 +449,22 @@ mod tests {
         let (a, _) = f.init_ddpg_params(1);
         assert_eq!(d1.act(&a, &[0.1, 0.2, 0.3]).unwrap().len(), 2);
         assert!(d1.act(&a, &obs).is_err());
+    }
+
+    #[test]
+    fn shared_actor_accepts_any_row_count() {
+        let f = factory();
+        let flat = f.init_ppo_params(0);
+        let mut shared = f.make_actor_shared(8).unwrap();
+        assert_eq!(shared.batch(), 0, "native shared actor must be flexible");
+        for b in [1usize, 3, 8] {
+            let obs = vec![0.2f32; b * 3];
+            let noise = vec![0.0f32; b * 2];
+            assert_eq!(shared.act(&flat, &obs, &noise).unwrap().logp.len(), b);
+        }
+        assert!(f.make_actor_shared(0).is_err());
+        assert!(f.make_ddpg_actor_shared(0).is_err());
+        assert_eq!(f.make_ddpg_actor_shared(4).unwrap().batch(), 0);
     }
 
     #[test]

@@ -32,6 +32,37 @@ impl XlaFactory {
     pub fn meta(&self) -> &PresetMeta {
         &self.meta
     }
+
+    /// Compile one `act`-family artifact into a fixed-batch PPO actor.
+    fn make_actor_with(&self, artifact: &str, batch: usize) -> Result<Box<dyn ActorBackend>> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = compile(&client, self.meta.artifact(artifact)?)?;
+        Ok(Box::new(XlaActor {
+            client,
+            exe,
+            batch,
+            obs_dim: self.meta.obs_dim,
+            act_dim: self.meta.act_dim,
+            params: ParamBufCache::new(),
+        }))
+    }
+
+    /// Compile one `act_ddpg`-family artifact into a fixed-batch actor.
+    fn make_ddpg_actor_with(
+        &self,
+        artifact: &str,
+        batch: usize,
+    ) -> Result<Box<dyn DdpgActorBackend>> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = compile(&client, self.meta.artifact(artifact)?)?;
+        Ok(Box::new(XlaDdpgActor {
+            client,
+            exe,
+            batch,
+            obs_dim: self.meta.obs_dim,
+            params: ParamBufCache::new(),
+        }))
+    }
 }
 
 fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
@@ -146,16 +177,7 @@ impl BackendFactory for XlaFactory {
     }
 
     fn make_actor(&self) -> Result<Box<dyn ActorBackend>> {
-        let client = xla::PjRtClient::cpu()?;
-        let exe = compile(&client, self.meta.artifact("act")?)?;
-        Ok(Box::new(XlaActor {
-            client,
-            exe,
-            batch: self.meta.act_batch,
-            obs_dim: self.meta.obs_dim,
-            act_dim: self.meta.act_dim,
-            params: ParamBufCache::new(),
-        }))
+        self.make_actor_with("act", self.meta.act_batch)
     }
 
     fn make_ppo_learner(&self) -> Result<Box<dyn PpoLearnerBackend>> {
@@ -186,55 +208,47 @@ impl BackendFactory for XlaFactory {
         }))
     }
 
-    /// XLA `act` executables are shape-specialized at AOT time, so the
-    /// batch cannot be re-sized here; we hand out the fixed-batch actor
-    /// after checking it can hold `batch` real rows (the sampler pads
-    /// rows `batch..act_batch` and ignores their outputs). For a padding-
-    /// free forward, rebuild artifacts with `act_batch == envs_per_sampler`
-    /// (python/compile/aot.py).
+    /// XLA `act` executables are shape-specialized at AOT time; aot.py
+    /// emits one per batch size in `Preset.act_batches`, so any
+    /// `envs_per_sampler` with a matching artifact gets a padding-free
+    /// forward. Row counts without an exact artifact run inside the
+    /// smallest emitted batch that fits (rows `batch..B` are zero padding
+    /// whose outputs the sampler ignores).
     fn make_actor_batched(&self, batch: usize) -> Result<Box<dyn ActorBackend>> {
         ensure!(batch > 0, "make_actor_batched: batch must be >= 1");
-        ensure!(
-            batch <= self.meta.act_batch,
-            "envs_per_sampler {} exceeds AOT act_batch {} for preset {} — \
-             rebuild artifacts with a larger act_batch",
-            batch,
-            self.meta.act_batch,
-            self.meta.preset
-        );
-        if batch < self.meta.act_batch {
+        let (artifact, b) = self.meta.act_artifact_for("act", batch)?;
+        if b > batch {
             crate::log_debug!(
-                "xla actor: {} real rows in act_batch {} ({} padded rows per call)",
-                batch,
-                self.meta.act_batch,
-                self.meta.act_batch - batch
+                "xla actor: {batch} real rows in {artifact} (batch {b}, {} padded rows per call)",
+                b - batch
             );
         }
-        self.make_actor()
+        self.make_actor_with(&artifact, b)
     }
 
     fn make_ddpg_actor_batched(&self, batch: usize) -> Result<Box<dyn DdpgActorBackend>> {
         ensure!(batch > 0, "make_ddpg_actor_batched: batch must be >= 1");
-        ensure!(
-            batch <= self.meta.act_batch,
-            "envs_per_sampler {} exceeds AOT act_batch {} for preset {}",
-            batch,
-            self.meta.act_batch,
-            self.meta.preset
-        );
-        self.make_ddpg_actor()
+        let (artifact, b) = self.meta.act_artifact_for("act_ddpg", batch)?;
+        self.make_ddpg_actor_with(&artifact, b)
+    }
+
+    /// Fleet actor for the shared inference server: the executable must
+    /// hold `max_rows` (= N * M) rows; the server zero-pads straggler-cut
+    /// partial dispatches up to the artifact batch.
+    fn make_actor_shared(&self, max_rows: usize) -> Result<Box<dyn ActorBackend>> {
+        ensure!(max_rows > 0, "make_actor_shared: max_rows must be >= 1");
+        let (artifact, b) = self.meta.act_artifact_for("act", max_rows)?;
+        self.make_actor_with(&artifact, b)
+    }
+
+    fn make_ddpg_actor_shared(&self, max_rows: usize) -> Result<Box<dyn DdpgActorBackend>> {
+        ensure!(max_rows > 0, "make_ddpg_actor_shared: max_rows must be >= 1");
+        let (artifact, b) = self.meta.act_artifact_for("act_ddpg", max_rows)?;
+        self.make_ddpg_actor_with(&artifact, b)
     }
 
     fn make_ddpg_actor(&self) -> Result<Box<dyn DdpgActorBackend>> {
-        let client = xla::PjRtClient::cpu()?;
-        let exe = compile(&client, self.meta.artifact("act_ddpg")?)?;
-        Ok(Box::new(XlaDdpgActor {
-            client,
-            exe,
-            batch: self.meta.act_batch,
-            obs_dim: self.meta.obs_dim,
-            params: ParamBufCache::new(),
-        }))
+        self.make_ddpg_actor_with("act_ddpg", self.meta.act_batch)
     }
 
     fn make_ddpg_learner(&self) -> Result<Box<dyn DdpgLearnerBackend>> {

@@ -3,7 +3,7 @@
 //! train artifact — the production configuration of the paper's Fig 2,
 //! shrunk to test scale. Requires `make artifacts`.
 
-use walle::config::{Algo, Backend, TrainConfig};
+use walle::config::{Algo, Backend, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::orchestrator;
 use walle::runtime::make_factory;
@@ -65,6 +65,35 @@ fn xla_ddpg_run_end_to_end() {
     let r = orchestrator::run(&cfg, factory.as_ref(), &mut log).unwrap();
     assert_eq!(r.metrics.len(), 2);
     assert!(r.metrics.iter().all(|m| m.samples >= 400));
+}
+
+/// Shared mega-batch inference end-to-end on the native backend (runs
+/// everywhere, no artifacts needed): the full coordinator with the
+/// inference-server thread in the loop, checked for liveness, sample
+/// accounting, and a sane dispatch report.
+#[test]
+fn native_shared_inference_run_end_to_end() {
+    let mut cfg = xla_cfg();
+    cfg.backend = Backend::Native;
+    cfg.hidden = vec![16, 16];
+    cfg.inference_mode = InferenceMode::Shared;
+    cfg.infer_max_wait_us = 500;
+    cfg.envs_per_sampler = 2;
+    let factory = make_factory(&cfg).unwrap();
+    let mut log = MetricsLog::quiet();
+    let r = orchestrator::run(&cfg, factory.as_ref(), &mut log).unwrap();
+    assert_eq!(r.metrics.len(), 2);
+    for m in &r.metrics {
+        assert!(m.samples >= 800);
+        assert!(m.mean_return.is_finite());
+    }
+    let rep = r.infer.expect("shared run must carry an inference report");
+    assert_eq!(rep.fleet_rows, cfg.samplers * cfg.envs_per_sampler);
+    assert!(rep.forwards > 0);
+    let total_steps: u64 = r.sampler_reports.iter().map(|s| s.steps).sum();
+    assert!(rep.rows >= total_steps);
+    // coalescing must actually happen: strictly fewer forwards than rows
+    assert!(rep.forwards < rep.rows, "server never batched anything");
 }
 
 #[test]

@@ -1,10 +1,16 @@
 //! Integration: the AOT/XLA path against the native oracle.
 //!
+//! Compiled only with `--features xla` (the published `xla` crate binds
+//! xla_extension, which most CI/dev boxes don't carry); at runtime the
+//! tests additionally skip unless `make artifacts` has run.
+//!
 //! These tests require `make artifacts` to have run (they are the
 //! authentic consumer of the HLO text files): load each artifact through
 //! PJRT, execute it, and compare numerics against the pure-Rust mirror,
 //! which is itself finite-difference-verified in unit tests. Agreement
 //! here certifies the whole Python→HLO→PJRT→Rust chain.
+
+#![cfg(feature = "xla")]
 
 use walle::config::{DdpgCfg, PpoCfg};
 use walle::runtime::native_backend::NativeFactory;
