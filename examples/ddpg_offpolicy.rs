@@ -10,7 +10,7 @@
 //! target networks, publishing fresh actor parameters through the same
 //! policy store.
 
-use walle::config::{Algo, Backend, TrainConfig};
+use walle::config::{Algo, Backend, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::orchestrator;
 use walle::runtime::make_factory;
@@ -25,6 +25,9 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.samplers = args.usize_or("samplers", 4)?;
     cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
+    // the sharded inference pool serves the deterministic actor too
+    cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
+        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
     cfg.iterations = args.usize_or("iterations", 60)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", 1_000)?;
     cfg.chunk_steps = 100;

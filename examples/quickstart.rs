@@ -8,7 +8,7 @@
 //! the learning curves are statistically identical (see
 //! rust/tests/runtime_roundtrip.rs for the numeric parity proof).
 
-use walle::config::{Backend, InferenceMode, TrainConfig};
+use walle::config::{Backend, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::{eval, orchestrator};
 use walle::env::registry::make_env;
@@ -23,10 +23,15 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
     cfg.samplers = args.usize_or("samplers", 4)?;
     cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
-    // try `--inference-mode shared`: one server thread batches all
-    // samplers' rows into a single forward per sim tick
+    // try `--inference-mode shared`: the inference pool batches all
+    // samplers' rows into fleet-wide forwards (shard it with
+    // `--infer-shards`, tune the straggler cut with `--infer-wait`)
     cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
         .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
+    cfg.infer_shards = InferShards::parse(&args.str_or("infer-shards", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("--infer-shards must be auto or a count >= 1"))?;
+    cfg.infer_wait = InferWait::parse(&args.str_or("infer-wait", "adaptive"))
+        .ok_or_else(|| anyhow::anyhow!("--infer-wait must be adaptive or fixed:<us>"))?;
     cfg.iterations = args.usize_or("iterations", 40)?;
     cfg.seed = args.u64_or("seed", 0)?;
 

@@ -14,7 +14,7 @@
 //!   Fig 7: learn time per iteration roughly constant in N
 
 use walle::bench::figures;
-use walle::config::{Backend, InferenceMode, TrainConfig};
+use walle::config::{Backend, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::runtime::make_factory;
 use walle::util::cli::Args;
 
@@ -29,11 +29,20 @@ fn main() -> anyhow::Result<()> {
     cfg.iterations = args.usize_or("iterations", 6)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", 20_000)?;
     cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
-    // `--inference-mode shared` batches all N workers' rows into one
-    // fleet-wide forward per tick (the PR 2 mega-batch server)
+    // `--inference-mode shared` batches workers' rows into fleet-wide
+    // forwards through the sharded inference pool; size it with
+    // `--infer-shards` and tune the straggler cut with `--infer-wait`
     cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
         .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
-    cfg.infer_max_wait_us = args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us)?;
+    cfg.infer_shards = InferShards::parse(&args.str_or("infer-shards", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("--infer-shards must be auto or a count >= 1"))?;
+    cfg.infer_wait = InferWait::parse(&args.str_or("infer-wait", "adaptive"))
+        .ok_or_else(|| anyhow::anyhow!("--infer-wait must be adaptive or fixed:<us>"))?;
+    if args.get("infer-wait").is_none() && args.has("infer-max-wait-us") {
+        // legacy PR 2 spelling still honored so old sweep commands stay
+        // comparable with their recorded results
+        cfg.infer_wait = InferWait::Fixed(args.u64_or("infer-max-wait-us", 200)?);
+    }
     cfg.seed = args.u64_or("seed", 0)?;
     // sync mode isolates pure collection time per iteration (the paper
     // plots rollout time for a fixed 20k budget); async is the default

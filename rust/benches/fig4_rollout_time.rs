@@ -10,13 +10,18 @@
 //!
 //!     cargo bench --bench fig4_rollout_time
 //!
+//! Also sweeps the inference-pool shard count (S=1/2/4 at N=16, M=4):
+//! one shard serializes every dispatch on a single serve thread, while
+//! S>1 shards overlap their forwards, which is what keeps shared mode
+//! scaling once a single mega-batch saturates a core.
+//!
 //! Scaled-down workload (benches must terminate quickly); the full-size
 //! run is `examples/scaling_sweep.rs` / `walle figures`. Results are also
-//! written machine-readable to `BENCH_fig4.json` so the repo records a
-//! perf trajectory across commits.
+//! written machine-readable to `BENCH_fig4.json` (see docs/BENCHMARKS.md
+//! for the schema) so the repo records a perf trajectory across commits.
 
 use walle::bench::figures;
-use walle::config::{Backend, InferenceMode, TrainConfig};
+use walle::config::{Backend, InferShards, InferenceMode, TrainConfig};
 use walle::runtime::make_factory;
 use walle::util::json::Json;
 
@@ -105,8 +110,31 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // the sharding claim: S inference shards at a fixed large fleet
+    // (N=16 workers x M=4 envs). One shard serializes all dispatches on
+    // one thread; S=2/4 split the fleet so shard forwards overlap —
+    // collect time should not regress and saturates later in N*M.
+    println!("\n== inference shard sweep (N=16, M=4, shared) ==");
+    let shard_counts = [1usize, 2, 4];
+    let mut shard_rows = Vec::new();
+    for &s in &shard_counts {
+        let mut c = cfg.clone();
+        c.envs_per_sampler = 4;
+        c.inference_mode = InferenceMode::Shared;
+        c.infer_shards = InferShards::Fixed(s);
+        let rows = figures::scaling_sweep(&c, &|cc| make_factory(cc), &[16], 1)?;
+        let r = rows.into_iter().next().expect("one N=16 row");
+        println!(
+            "S={s}: collect {:>7.3}s | {:>9.0} steps/s/worker | fill {:>5.1}%",
+            r.collect_secs,
+            steps_per_sec_per_worker(&c, &r),
+            100.0 * r.mean_batch_fill.unwrap_or(0.0)
+        );
+        shard_rows.push((s, c, r));
+    }
+
     // machine-readable record (BENCH_fig4.json): rows/s, steps/s-per-
-    // worker and batch-fill per (series, N)
+    // worker and batch-fill per (series, N), plus the shard sweep
     let json = Json::obj(vec![
         ("bench", Json::Str("fig4_rollout_time".into())),
         ("env", Json::Str(cfg.env.clone())),
@@ -150,6 +178,31 @@ fn main() -> anyhow::Result<()> {
                                         })
                                         .collect(),
                                 ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "shard_sweep",
+            Json::Arr(
+                shard_rows
+                    .iter()
+                    .map(|(s, c, r)| {
+                        Json::obj(vec![
+                            ("shards", Json::Num(*s as f64)),
+                            ("n", Json::Num(r.n as f64)),
+                            ("envs_per_sampler", Json::Num(4.0)),
+                            ("collect_secs", Json::Num(r.collect_secs)),
+                            ("wall_collect_secs", Json::Num(r.wall_collect_secs)),
+                            (
+                                "steps_per_sec_per_worker",
+                                Json::Num(steps_per_sec_per_worker(c, r)),
+                            ),
+                            (
+                                "batch_fill",
+                                r.mean_batch_fill.map(Json::Num).unwrap_or(Json::Null),
                             ),
                         ])
                     })

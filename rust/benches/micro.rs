@@ -1,9 +1,11 @@
 //! Micro-benchmarks of WALL-E's hot paths: environment stepping, policy
 //! inference (native + XLA), the experience queue, GAE, the PPO train
-//! step, and shared-vs-private fleet inference (the PR 2 mega-batch
-//! server). These are the §Perf profiling probes (EXPERIMENTS.md §Perf).
-//! Headline rates are also written to `BENCH_micro.json` so the repo
-//! records a perf trajectory across commits.
+//! step, and the sharded inference pool vs N private backends (shard
+//! sweep S=1/2/4 at N=16, including the steady-state zero-allocation
+//! assertion on the slab transport). These are the §Perf profiling
+//! probes (EXPERIMENTS.md §Perf). Headline rates are also written to
+//! `BENCH_micro.json` so the repo records a perf trajectory across
+//! commits — see docs/BENCHMARKS.md for the schema.
 //!
 //!     cargo bench --bench micro
 
@@ -14,14 +16,14 @@ use walle::config::{DdpgCfg, PpoCfg};
 use walle::coordinator::policy_store::PolicyStore;
 use walle::coordinator::queue::Channel;
 use walle::env::registry::make_env;
-use walle::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+use walle::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
 use walle::runtime::native_backend::NativeFactory;
 #[cfg(feature = "xla")]
 use walle::runtime::xla_backend::XlaFactory;
 use walle::runtime::{BackendFactory, PpoMinibatch, PpoTrainState};
 use walle::util::json::Json;
 use walle::util::rng::Pcg64;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 fn bench_env_steps() {
@@ -144,22 +146,41 @@ fn bench_act_batch_sweep() -> Vec<(usize, f64)> {
     out
 }
 
-/// Fleet inference head-to-head: N worker threads each needing M rows per
-/// tick, served by (a) N private batched actors vs (b) the shared
-/// inference server coalescing all slabs into one N*M-row forward.
-/// Returns (private_rows_per_sec, shared_rows_per_sec, mean_fill).
-fn bench_shared_vs_private_fleet() -> (f64, f64, f64) {
-    let n = 8usize;
-    let m = 4usize;
-    let ticks = 400usize;
-    let f = || NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
+/// One shared-pool fleet measurement at shard count `shards`.
+struct FleetPoint {
+    shards: usize,
+    rows_per_sec: f64,
+    mean_fill: f64,
+    /// Hot-path allocation events observed AFTER warmup (must be 0: the
+    /// steady-state slab transport is allocation-free).
+    steady_allocs: u64,
+}
 
-    // (a) N private actors, each on its own thread
-    let t0 = std::time::Instant::now();
+const FLEET_N: usize = 16;
+const FLEET_M: usize = 4;
+const FLEET_TICKS: usize = 300;
+const FLEET_WARMUP: usize = 30;
+
+fn fleet_factory() -> NativeFactory {
+    NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default())
+}
+
+/// (a) baseline: N private batched actors, each on its own thread.
+/// Symmetric with [`bench_shared_fleet`]: thread spawn, factory/actor
+/// construction, and warmup ticks all happen OUTSIDE the timed region
+/// (barrier-fenced), so the recorded ratio compares steady states only.
+fn bench_private_fleet() -> f64 {
+    let (n, m, ticks) = (FLEET_N, FLEET_M, FLEET_TICKS);
+    let warmed = Arc::new(Barrier::new(n + 1));
+    let resume = Arc::new(Barrier::new(n + 1));
+    let mut secs = 0.0f64;
     std::thread::scope(|s| {
+        let mut worker_hs = Vec::new();
         for w in 0..n {
-            s.spawn(move || {
-                let fac = f();
+            let warmed = warmed.clone();
+            let resume = resume.clone();
+            worker_hs.push(s.spawn(move || {
+                let fac = fleet_factory();
                 let flat = fac.init_ppo_params(0);
                 let mut actor = fac.make_actor_batched(m).unwrap();
                 let mut rng = Pcg64::new(w as u64);
@@ -167,66 +188,118 @@ fn bench_shared_vs_private_fleet() -> (f64, f64, f64) {
                 let mut noise = vec![0.0f32; m * 6];
                 rng.fill_normal(&mut obs);
                 rng.fill_normal(&mut noise);
+                for _ in 0..FLEET_WARMUP {
+                    let _ = actor.act(&flat, &obs, &noise).unwrap();
+                }
+                warmed.wait();
+                resume.wait();
                 for _ in 0..ticks {
                     let _ = actor.act(&flat, &obs, &noise).unwrap();
                 }
-            });
+            }));
         }
+        warmed.wait();
+        let t0 = std::time::Instant::now();
+        resume.wait();
+        for h in worker_hs {
+            h.join().unwrap();
+        }
+        secs = t0.elapsed().as_secs_f64();
     });
-    let private_secs = t0.elapsed().as_secs_f64();
-    let private_rate = (n * m * ticks) as f64 / private_secs;
+    let rate = (n * m * ticks) as f64 / secs;
+    println!(
+        "fleet inference baseline (N={n} x M={m}, 17->64x64->6, steady state): \
+         private backends {rate:>9.0} rows/s ({})",
+        fmt_secs(secs)
+    );
+    rate
+}
 
-    // (b) one shared server, N clients
-    let fac = f();
+/// (b) the sharded pool at shard count S: N clients, S serve threads.
+/// All clients warm up, a barrier lets the main thread snapshot the
+/// hot-path allocation counter, then the timed steady-state phase runs —
+/// the counter must not move (zero allocations per tick).
+fn bench_shared_fleet(shards: usize, private_rate: f64) -> FleetPoint {
+    let (n, m, ticks) = (FLEET_N, FLEET_M, FLEET_TICKS);
+    let fac = fleet_factory();
     let store = Arc::new(PolicyStore::new());
     store.publish(fac.init_ppo_params(0), NormSnapshot::identity(17));
-    let server = Arc::new(InferenceServer::new(InferenceServerCfg {
-        max_wait: Duration::from_micros(200),
-        fleet_rows: n * m,
+    let pool = Arc::new(InferencePool::new(InferencePoolCfg {
+        workers: n,
+        rows_per_worker: m,
+        shards,
+        wait: WaitPolicy::Fixed(Duration::from_micros(200)),
         obs_dim: 17,
         act_dim: 6,
     }));
-    let clients: Vec<_> = (0..n).map(|_| server.client()).collect();
-    let t0 = std::time::Instant::now();
+    let clients: Vec<_> = (0..n).map(|w| pool.client(w)).collect();
+    // n workers + the main thread rendezvous twice around the snapshot
+    let warmed = Arc::new(Barrier::new(n + 1));
+    let resume = Arc::new(Barrier::new(n + 1));
+    let mut steady_allocs = 0u64;
+    let mut steady_secs = 0.0f64;
     std::thread::scope(|s| {
-        {
-            let server = server.clone();
+        for shard in pool.shards() {
+            let shard = shard.clone();
             let store = store.clone();
             s.spawn(move || {
-                let fac = f();
-                server.serve_ppo(&fac, &store).unwrap();
+                let fac = fleet_factory();
+                shard.serve_ppo(&fac, &store).unwrap();
             });
         }
-        for (w, client) in clients.into_iter().enumerate() {
-            s.spawn(move || {
+        let mut worker_hs = Vec::new();
+        for (w, mut client) in clients.into_iter().enumerate() {
+            let warmed = warmed.clone();
+            let resume = resume.clone();
+            worker_hs.push(s.spawn(move || {
                 let mut rng = Pcg64::new(w as u64);
                 let mut obs = vec![0.0f32; m * 17];
                 let mut noise = vec![0.0f32; m * 6];
                 rng.fill_normal(&mut obs);
                 rng.fill_normal(&mut noise);
+                for _ in 0..FLEET_WARMUP {
+                    let _ = client.act(&obs, &noise).unwrap();
+                }
+                warmed.wait();
+                resume.wait();
                 for _ in 0..ticks {
                     let _ = client.act(&obs, &noise).unwrap();
                 }
-            });
+            }));
         }
+        warmed.wait();
+        let after_warmup = pool.report().hot_allocs;
+        let t0 = std::time::Instant::now();
+        resume.wait();
+        for h in worker_hs {
+            h.join().unwrap();
+        }
+        steady_secs = t0.elapsed().as_secs_f64();
+        steady_allocs = pool.report().hot_allocs - after_warmup;
     });
-    let shared_secs = t0.elapsed().as_secs_f64();
-    let shared_rate = (n * m * ticks) as f64 / shared_secs;
-    let rep = server.report();
-
+    let rate = (n * m * ticks) as f64 / steady_secs;
+    let rep = pool.report();
     println!(
-        "fleet inference (N={n} workers x M={m} rows, 17->64x64->6):\n\
-         \x20   private backends: {private_rate:>9.0} rows/s ({})\n\
-         \x20   shared server:    {shared_rate:>9.0} rows/s ({}) \
-         [{} forwards, fill {:.1}%, {} timeout cuts] -> {:.2}x",
-        fmt_secs(private_secs),
-        fmt_secs(shared_secs),
+        "    S={shards}: {rate:>9.0} rows/s ({}) [{} forwards, fill {:.1}%, \
+         {} timeout cuts, steady-state hot-path allocs: {steady_allocs}] -> {:.2}x private",
+        fmt_secs(steady_secs),
         rep.forwards,
         100.0 * rep.mean_fill(),
         rep.timeout_dispatches,
-        shared_rate / private_rate
+        rate / private_rate
     );
-    (private_rate, shared_rate, rep.mean_fill())
+    // the acceptance criterion: the steady-state shared-mode hot path
+    // performs ZERO allocations per tick (slab transport fully recycled)
+    assert_eq!(
+        steady_allocs, 0,
+        "shared-mode hot path allocated after warmup at S={shards}"
+    );
+    FleetPoint {
+        shards,
+        rows_per_sec: rate,
+        mean_fill: rep.mean_fill(),
+        steady_allocs,
+    }
 }
 
 fn bench_native_backend() {
@@ -344,8 +417,12 @@ fn main() {
     bench_native_backend();
     println!("-- act batch sweep (vectorized sampling) --");
     let sweep = bench_act_batch_sweep();
-    println!("-- shared vs private fleet inference --");
-    let (private_rate, shared_rate, fill) = bench_shared_vs_private_fleet();
+    println!("-- sharded vs private fleet inference (shard sweep) --");
+    let private_rate = bench_private_fleet();
+    let points: Vec<FleetPoint> = [1usize, 2, 4]
+        .iter()
+        .map(|&s| bench_shared_fleet(s, private_rate))
+        .collect();
     println!("-- xla backend --");
     bench_xla_backend();
 
@@ -369,11 +446,28 @@ fn main() {
         (
             "fleet_inference",
             Json::obj(vec![
-                ("workers", Json::Num(8.0)),
-                ("rows_per_worker", Json::Num(4.0)),
+                ("workers", Json::Num(FLEET_N as f64)),
+                ("rows_per_worker", Json::Num(FLEET_M as f64)),
                 ("private_rows_per_sec", Json::Num(private_rate)),
-                ("shared_rows_per_sec", Json::Num(shared_rate)),
-                ("shared_batch_fill", Json::Num(fill)),
+                (
+                    "shard_sweep",
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("shards", Json::Num(p.shards as f64)),
+                                    ("rows_per_sec", Json::Num(p.rows_per_sec)),
+                                    ("batch_fill", Json::Num(p.mean_fill)),
+                                    (
+                                        "steady_state_hot_allocs",
+                                        Json::Num(p.steady_allocs as f64),
+                                    ),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
     ]);

@@ -249,7 +249,7 @@ mod tests {
     fn shared_inference_sweep_records_batch_fill() {
         let mut base = tiny_base();
         base.inference_mode = crate::config::InferenceMode::Shared;
-        base.infer_max_wait_us = 500;
+        base.infer_wait = crate::config::InferWait::Fixed(500);
         let rows = scaling_sweep(&base, &factory_for, &[2], 0).unwrap();
         let fill = rows[0].mean_batch_fill.expect("shared sweep must record fill");
         assert!(fill > 0.0 && fill <= 1.0 + 1e-9, "fill {fill}");

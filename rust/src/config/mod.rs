@@ -86,17 +86,120 @@ impl InferenceMode {
     }
 }
 
+/// Shard count of the shared inference pool (`--infer-shards`).
+///
+/// Shared mode runs `S` server threads; worker `w` is statically assigned
+/// to shard `w % S`, so each shard coalesces its own workers' rows into
+/// one batched forward per sim tick. Per-env trajectories are independent
+/// of `S` (the forward is row-independent; see
+/// `runtime::inference_server`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferShards {
+    /// `clamp(N / 8, 1, cores / 2)` — one shard per ~8 workers, never
+    /// more than half the machine's cores (the serve threads must leave
+    /// room for the samplers they feed).
+    Auto,
+    /// Exactly this many shards. `TrainConfig::validate` rejects shared
+    /// runs where this exceeds the worker count (every shard must own at
+    /// least one worker); direct [`InferShards::resolve_with`] callers
+    /// get the value clamped to `[1, N]` instead.
+    Fixed(usize),
+}
+
+impl InferShards {
+    /// Parse `"auto"` or a positive integer.
+    pub fn parse(s: &str) -> Option<InferShards> {
+        if s == "auto" {
+            return Some(InferShards::Auto);
+        }
+        s.parse::<usize>()
+            .ok()
+            .filter(|&n| n > 0)
+            .map(InferShards::Fixed)
+    }
+
+    /// CLI/JSON spelling: `"auto"` or the shard count.
+    pub fn name(&self) -> String {
+        match self {
+            InferShards::Auto => "auto".into(),
+            InferShards::Fixed(n) => n.to_string(),
+        }
+    }
+
+    /// Resolve to a concrete shard count for `workers` samplers on this
+    /// machine.
+    pub fn resolve(&self, workers: usize) -> usize {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(8);
+        self.resolve_with(workers, cores)
+    }
+
+    /// [`InferShards::resolve`] with an explicit core count (testable).
+    pub fn resolve_with(&self, workers: usize, cores: usize) -> usize {
+        let w = workers.max(1);
+        match *self {
+            InferShards::Fixed(s) => s.clamp(1, w),
+            InferShards::Auto => (w / 8).clamp(1, (cores / 2).max(1)).min(w),
+        }
+    }
+}
+
+/// Straggler-cut policy of the shared inference pool (`--infer-wait`).
+///
+/// A shard dispatches a partial batch rather than wait indefinitely for a
+/// straggler worker (env reset, sync-mode parking, queue backpressure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferWait {
+    /// Track an EWMA/MAD of client inter-arrival gaps per shard and cut
+    /// once the queue has been quiet for `2*EWMA + 4*MAD` microseconds —
+    /// the expected marginal batch fill no longer pays for the wait. See
+    /// `runtime::inference_server::AdaptiveWait`.
+    Adaptive,
+    /// Cut a fixed number of microseconds after the first pending slab
+    /// (the PR 2 `--infer-max-wait-us` behavior).
+    Fixed(u64),
+}
+
+impl InferWait {
+    /// Parse `"adaptive"`, `"fixed:<us>"`, or a bare microsecond count.
+    pub fn parse(s: &str) -> Option<InferWait> {
+        if s == "adaptive" {
+            return Some(InferWait::Adaptive);
+        }
+        let us = s.strip_prefix("fixed:").unwrap_or(s);
+        us.parse::<u64>().ok().map(InferWait::Fixed)
+    }
+
+    /// CLI/JSON spelling: `"adaptive"` or `"fixed:<us>"`.
+    pub fn name(&self) -> String {
+        match self {
+            InferWait::Adaptive => "adaptive".into(),
+            InferWait::Fixed(us) => format!("fixed:{us}"),
+        }
+    }
+}
+
 /// PPO hyper-parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PpoCfg {
+    /// Optimization epochs over each iteration's batch.
     pub epochs: usize,
+    /// Minibatch size per Adam step.
     pub minibatch: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Linearly anneal `lr` to zero over the run.
     pub lr_anneal: bool,
+    /// Discount factor.
     pub gamma: f32,
+    /// GAE lambda.
     pub lam: f32,
+    /// PPO clip range epsilon.
     pub clip: f32,
+    /// Entropy bonus coefficient.
     pub ent_coef: f32,
+    /// Value-loss coefficient.
     pub vf_coef: f32,
     /// Normalize advantages per iteration.
     pub norm_adv: bool,
@@ -122,14 +225,23 @@ impl Default for PpoCfg {
 /// DDPG hyper-parameters (further-work §6.1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DdpgCfg {
+    /// Replay minibatch size per update.
     pub batch: usize,
+    /// Discount factor.
     pub gamma: f32,
+    /// Polyak averaging rate for the target networks.
     pub tau: f32,
+    /// Actor Adam learning rate.
     pub lr_actor: f32,
+    /// Critic Adam learning rate.
     pub lr_critic: f32,
+    /// Replay ring-buffer capacity in transitions.
     pub replay_capacity: usize,
+    /// Transitions collected before the first update.
     pub warmup_steps: usize,
+    /// Gaussian exploration-noise stddev added to actions.
     pub explore_noise: f32,
+    /// Gradient updates per training iteration.
     pub updates_per_iter: usize,
 }
 
@@ -149,12 +261,21 @@ impl Default for DdpgCfg {
     }
 }
 
-/// Full run configuration.
+/// Full run configuration: one source of truth per training run, built
+/// from CLI flags and/or a `--config file.json` and echoed into every
+/// run's `config.json` so results are self-describing.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
+    /// Environment name (`pendulum`, `cartpole`, `reacher`,
+    /// `halfcheetah` — see `env::registry::ENV_NAMES`).
     pub env: String,
+    /// Learner algorithm driving the run (PPO or DDPG).
     pub algo: Algo,
+    /// Compute backend executing policy/learner math (AOT XLA artifacts
+    /// or the pure-Rust native mirror).
     pub backend: Backend,
+    /// Root RNG seed; every env/noise stream derives from it
+    /// deterministically.
     pub seed: u64,
     /// Number of parallel sampler workers (the paper's N).
     pub samplers: usize,
@@ -164,14 +285,18 @@ pub struct TrainConfig {
     /// paper's original one-env-per-worker loop.
     pub envs_per_sampler: usize,
     /// Where policy inference runs: `local` = one private backend per
-    /// worker (N forwards per tick); `shared` = one inference server
-    /// batches every worker's rows into a single fleet-wide forward.
+    /// worker (N forwards per tick); `shared` = the sharded inference
+    /// pool batches workers' rows into fleet-wide forwards.
     pub inference_mode: InferenceMode,
-    /// Shared mode: max microseconds the server waits for stragglers
-    /// before dispatching a partial batch (the adaptive cut policy).
-    pub infer_max_wait_us: u64,
+    /// Shared mode: how many inference-server shards serve the fleet
+    /// (`auto` = one per ~8 workers, capped at half the cores).
+    pub infer_shards: InferShards,
+    /// Shared mode: the straggler-cut policy — when a shard dispatches a
+    /// partial batch instead of waiting for late workers.
+    pub infer_wait: InferWait,
     /// Samples collected per iteration (paper: 20,000).
     pub samples_per_iter: usize,
+    /// Training iterations to run.
     pub iterations: usize,
     /// Sampler→learner queue capacity, in chunks (backpressure bound).
     pub queue_capacity: usize,
@@ -188,9 +313,13 @@ pub struct TrainConfig {
     /// reported unscaled). Keeps value-loss magnitudes sane for envs with
     /// large return scales.
     pub reward_scale: f32,
+    /// Directory holding the AOT artifacts (`--backend xla` only).
     pub artifacts_dir: String,
+    /// Hidden-layer widths of the policy/value MLPs.
     pub hidden: Vec<usize>,
+    /// PPO hyper-parameters (used when `algo == Algo::Ppo`).
     pub ppo: PpoCfg,
+    /// DDPG hyper-parameters (used when `algo == Algo::Ddpg`).
     pub ddpg: DdpgCfg,
     /// Parallel-learning shards (further-work §6.2); 1 = single learner.
     pub learner_shards: usize,
@@ -210,7 +339,8 @@ impl Default for TrainConfig {
             samplers: 10,
             envs_per_sampler: 1,
             inference_mode: InferenceMode::Local,
-            infer_max_wait_us: 200,
+            infer_shards: InferShards::Auto,
+            infer_wait: InferWait::Adaptive,
             samples_per_iter: 20_000,
             iterations: 100,
             queue_capacity: 16,
@@ -296,6 +426,18 @@ impl TrainConfig {
         if self.learner_shards == 0 {
             return Err("learner_shards must be >= 1".into());
         }
+        if let InferShards::Fixed(s) = self.infer_shards {
+            if s == 0 {
+                return Err("infer_shards must be >= 1 (or \"auto\")".into());
+            }
+            if self.inference_mode == InferenceMode::Shared && s > self.samplers {
+                return Err(format!(
+                    "infer_shards {} exceeds samplers {} — every shard must own \
+                     at least one worker",
+                    s, self.samplers
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -317,9 +459,10 @@ impl TrainConfig {
             Json::Str(self.inference_mode.name().into()),
         );
         m.insert(
-            "infer_max_wait_us".into(),
-            Json::Num(self.infer_max_wait_us as f64),
+            "infer_shards".into(),
+            Json::Str(self.infer_shards.name()),
         );
+        m.insert("infer_wait".into(), Json::Str(self.infer_wait.name()));
         m.insert(
             "samples_per_iter".into(),
             Json::Num(self.samples_per_iter as f64),
@@ -407,8 +550,23 @@ impl TrainConfig {
             cfg.inference_mode = InferenceMode::parse(v.as_str()?)
                 .ok_or_else(|| JsonError::Access(format!("bad inference_mode {v:?}")))?;
         }
-        if let Some(v) = j.opt("infer_max_wait_us") {
-            cfg.infer_max_wait_us = v.as_f64()? as u64;
+        if let Some(v) = j.opt("infer_shards") {
+            // accept "auto"/"4" strings or a bare number
+            cfg.infer_shards = match v {
+                Json::Num(n) if *n >= 1.0 => InferShards::Fixed(*n as usize),
+                _ => InferShards::parse(v.as_str()?)
+                    .ok_or_else(|| JsonError::Access(format!("bad infer_shards {v:?}")))?,
+            };
+        }
+        if let Some(v) = j.opt("infer_wait") {
+            cfg.infer_wait = match v {
+                Json::Num(n) if *n >= 0.0 => InferWait::Fixed(*n as u64),
+                _ => InferWait::parse(v.as_str()?)
+                    .ok_or_else(|| JsonError::Access(format!("bad infer_wait {v:?}")))?,
+            };
+        } else if let Some(v) = j.opt("infer_max_wait_us") {
+            // legacy (pre-shard) configs: a fixed straggler cut in us
+            cfg.infer_wait = InferWait::Fixed(v.as_f64()? as u64);
         }
         if let Some(v) = j.opt("samples_per_iter") {
             cfg.samples_per_iter = v.as_usize()?;
@@ -548,7 +706,8 @@ mod tests {
         cfg.learner_shards = 4;
         cfg.envs_per_sampler = 8;
         cfg.inference_mode = InferenceMode::Shared;
-        cfg.infer_max_wait_us = 750;
+        cfg.infer_shards = InferShards::Fixed(2);
+        cfg.infer_wait = InferWait::Fixed(750);
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cfg, back);
@@ -607,10 +766,84 @@ mod tests {
         assert_eq!(InferenceMode::parse("shared"), Some(InferenceMode::Shared));
         assert_eq!(InferenceMode::parse("local"), Some(InferenceMode::Local));
         assert_eq!(InferenceMode::parse("gpu"), None);
-        let j = Json::parse(r#"{"inference_mode": "shared", "infer_max_wait_us": 50}"#).unwrap();
+        let j = Json::parse(
+            r#"{"inference_mode": "shared", "infer_wait": "fixed:50", "infer_shards": "2"}"#,
+        )
+        .unwrap();
         let cfg = TrainConfig::from_json(&j).unwrap();
         assert_eq!(cfg.inference_mode, InferenceMode::Shared);
-        assert_eq!(cfg.infer_max_wait_us, 50);
+        assert_eq!(cfg.infer_wait, InferWait::Fixed(50));
+        assert_eq!(cfg.infer_shards, InferShards::Fixed(2));
+    }
+
+    #[test]
+    fn infer_knobs_parse_and_default() {
+        let d = TrainConfig::default();
+        assert_eq!(d.infer_shards, InferShards::Auto);
+        assert_eq!(d.infer_wait, InferWait::Adaptive);
+        assert_eq!(InferShards::parse("auto"), Some(InferShards::Auto));
+        assert_eq!(InferShards::parse("4"), Some(InferShards::Fixed(4)));
+        assert_eq!(InferShards::parse("0"), None);
+        assert_eq!(InferShards::parse("many"), None);
+        assert_eq!(InferWait::parse("adaptive"), Some(InferWait::Adaptive));
+        assert_eq!(InferWait::parse("fixed:200"), Some(InferWait::Fixed(200)));
+        assert_eq!(InferWait::parse("350"), Some(InferWait::Fixed(350)));
+        assert_eq!(InferWait::parse("fixed:"), None);
+        assert_eq!(InferWait::parse("never"), None);
+        // round-trippable spellings
+        assert_eq!(InferShards::Auto.name(), "auto");
+        assert_eq!(InferShards::Fixed(4).name(), "4");
+        assert_eq!(InferWait::Adaptive.name(), "adaptive");
+        assert_eq!(InferWait::Fixed(200).name(), "fixed:200");
+    }
+
+    #[test]
+    fn infer_shards_resolution() {
+        // auto = clamp(N/8, 1, cores/2), never exceeding N
+        assert_eq!(InferShards::Auto.resolve_with(1, 16), 1);
+        assert_eq!(InferShards::Auto.resolve_with(8, 16), 1);
+        assert_eq!(InferShards::Auto.resolve_with(16, 16), 2);
+        assert_eq!(InferShards::Auto.resolve_with(64, 16), 8);
+        assert_eq!(InferShards::Auto.resolve_with(256, 16), 8); // cores/2 cap
+        assert_eq!(InferShards::Auto.resolve_with(256, 2), 1); // tiny machine
+        assert_eq!(InferShards::Auto.resolve_with(2, 64), 1); // S <= N
+        assert_eq!(InferShards::Fixed(4).resolve_with(16, 16), 4);
+        assert_eq!(InferShards::Fixed(9).resolve_with(4, 16), 4); // clamp to N
+    }
+
+    #[test]
+    fn legacy_infer_max_wait_us_maps_to_fixed_wait() {
+        let j = Json::parse(r#"{"infer_max_wait_us": 500}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.infer_wait, InferWait::Fixed(500));
+        // the new key wins when both are present
+        let j =
+            Json::parse(r#"{"infer_max_wait_us": 500, "infer_wait": "adaptive"}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.infer_wait, InferWait::Adaptive);
+        // numeric forms also accepted for the new keys
+        let j = Json::parse(r#"{"infer_wait": 120, "infer_shards": 3}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.infer_wait, InferWait::Fixed(120));
+        assert_eq!(cfg.infer_shards, InferShards::Fixed(3));
+    }
+
+    #[test]
+    fn shard_validation_requires_a_worker_per_shard() {
+        let mut cfg = TrainConfig::default();
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.samplers = 4;
+        cfg.infer_shards = InferShards::Fixed(8);
+        assert!(cfg.validate().is_err());
+        cfg.infer_shards = InferShards::Fixed(4);
+        assert!(cfg.validate().is_ok());
+        // local mode ignores the knob; auto always validates
+        cfg.inference_mode = InferenceMode::Local;
+        cfg.infer_shards = InferShards::Fixed(8);
+        assert!(cfg.validate().is_ok());
+        cfg.infer_shards = InferShards::Auto;
+        cfg.inference_mode = InferenceMode::Shared;
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -51,6 +51,23 @@ impl Histogram {
         self.max = self.max.max(v);
     }
 
+    /// Fold another histogram into this one (bucket-wise). Both must use
+    /// identical bounds — the inference pool guarantees this by sizing
+    /// every shard's report with the same bucket edges.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            self.bounds, other.bounds,
+            "cannot merge histograms with different bucket bounds"
+        );
+        for (c, oc) in self.counts.iter_mut().zip(&other.counts) {
+            *c += oc;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -139,35 +156,59 @@ impl Histogram {
     }
 }
 
-/// End-of-run statistics from the shared inference server (`--inference-mode
-/// shared`): how well cross-worker coalescing filled the mega-batch.
+/// End-of-run statistics from the shared inference pool (`--inference-mode
+/// shared`): how well cross-worker coalescing filled the mega-batch. One
+/// report per shard at collection time; [`InferenceReport::merge`] folds
+/// them into the pool-wide report surfaced to the user (so `fleet_rows`
+/// sums to N*M and `shards` counts the pool size).
 #[derive(Debug, Clone)]
 pub struct InferenceReport {
     /// Total batched forwards the server executed.
     pub forwards: u64,
     /// Total real rows served across all forwards.
     pub rows: u64,
-    /// Fleet capacity in rows (N workers x M envs).
+    /// Row capacity: this shard's workers x M envs (after merging: the
+    /// whole fleet, N x M).
     pub fleet_rows: usize,
+    /// Number of shard reports folded into this one (1 for a single
+    /// shard's own report).
+    pub shards: usize,
+    /// Hot-path buffer-growth events (slab transport, client + server
+    /// side). Flat after warmup == zero allocations per steady-state tick;
+    /// see `runtime::inference_server`.
+    pub hot_allocs: u64,
     /// Dispatches that went out with every active worker's slab on board.
     pub full_dispatches: u64,
-    /// Partial dispatches forced by the `infer_max_wait_us` straggler cut.
+    /// Partial dispatches forced by the straggler cut (`--infer-wait`).
     pub timeout_dispatches: u64,
     /// Real rows per dispatch.
     pub dispatch_rows: Histogram,
-    /// rows / fleet_rows per dispatch (1.0 = perfectly coalesced).
+    /// rows / shard capacity per dispatch (1.0 = perfectly coalesced).
     pub fill_ratio: Histogram,
     /// Per-request microseconds between submit and dispatch.
     pub queue_wait_us: Histogram,
+    /// Straggler-cut budget (microseconds) in effect at each timeout
+    /// dispatch — shows what the adaptive policy converged to (constant
+    /// under `--infer-wait fixed:<us>`).
+    pub cut_us: Histogram,
 }
 
 impl InferenceReport {
     pub fn new(fleet_rows: usize) -> InferenceReport {
-        let f = fleet_rows as f64;
+        Self::with_bounds(fleet_rows, fleet_rows)
+    }
+
+    /// Report for a shard of capacity `fleet_rows`, with dispatch-size
+    /// buckets derived from `bounds_rows` (the max shard capacity
+    /// pool-wide) so reports from unevenly-sized shards stay mergeable.
+    pub fn with_bounds(fleet_rows: usize, bounds_rows: usize) -> InferenceReport {
+        let f = bounds_rows as f64;
         InferenceReport {
             forwards: 0,
             rows: 0,
             fleet_rows,
+            shards: 1,
+            hot_allocs: 0,
             full_dispatches: 0,
             timeout_dispatches: 0,
             dispatch_rows: Histogram::new(&[
@@ -179,10 +220,27 @@ impl InferenceReport {
             ]),
             fill_ratio: Histogram::new(&[0.125, 0.25, 0.5, 0.75, 0.9, 1.0]),
             queue_wait_us: Histogram::new(&[10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 5000.0]),
+            cut_us: Histogram::new(&[10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 10_000.0]),
         }
     }
 
-    /// Mean fraction of the fleet batch filled per forward.
+    /// Fold another shard's report into this one (capacities sum, shard
+    /// count accumulates, histograms merge bucket-wise).
+    pub fn merge(&mut self, other: &InferenceReport) {
+        self.forwards += other.forwards;
+        self.rows += other.rows;
+        self.fleet_rows += other.fleet_rows;
+        self.shards += other.shards;
+        self.hot_allocs += other.hot_allocs;
+        self.full_dispatches += other.full_dispatches;
+        self.timeout_dispatches += other.timeout_dispatches;
+        self.dispatch_rows.merge(&other.dispatch_rows);
+        self.fill_ratio.merge(&other.fill_ratio);
+        self.queue_wait_us.merge(&other.queue_wait_us);
+        self.cut_us.merge(&other.cut_us);
+    }
+
+    /// Mean fraction of the shard batch filled per forward.
     pub fn mean_fill(&self) -> f64 {
         self.fill_ratio.mean()
     }
@@ -195,20 +253,25 @@ impl InferenceReport {
     /// Multi-line end-of-run report block.
     pub fn render(&self) -> String {
         format!(
-            "shared inference: {} forwards, {} rows ({} fleet rows), \
-             {} full / {} timeout cuts, mean fill {:.1}%\n\
+            "shared inference: {} forwards, {} rows ({} fleet rows, {} shard{}), \
+             {} full / {} timeout cuts, mean fill {:.1}%, {} hot-path allocs\n\
              dispatch rows: {}\n\
              batch fill:    {}\n\
-             queue wait us: {}",
+             queue wait us: {}\n\
+             cut budget us: {}",
             self.forwards,
             self.rows,
             self.fleet_rows,
+            self.shards,
+            if self.shards == 1 { "" } else { "s" },
             self.full_dispatches,
             self.timeout_dispatches,
             100.0 * self.mean_fill(),
+            self.hot_allocs,
             self.dispatch_rows.summary(),
             self.fill_ratio.summary(),
-            self.queue_wait_us.summary()
+            self.queue_wait_us.summary(),
+            self.cut_us.summary()
         )
     }
 
@@ -217,6 +280,8 @@ impl InferenceReport {
             ("forwards", Json::Num(self.forwards as f64)),
             ("rows", Json::Num(self.rows as f64)),
             ("fleet_rows", Json::Num(self.fleet_rows as f64)),
+            ("shards", Json::Num(self.shards as f64)),
+            ("hot_allocs", Json::Num(self.hot_allocs as f64)),
             ("full_dispatches", Json::Num(self.full_dispatches as f64)),
             (
                 "timeout_dispatches",
@@ -226,6 +291,7 @@ impl InferenceReport {
             ("dispatch_rows", self.dispatch_rows.to_json()),
             ("fill_ratio", self.fill_ratio.to_json()),
             ("queue_wait_us", self.queue_wait_us.to_json()),
+            ("cut_us", self.cut_us.to_json()),
         ])
     }
 }
@@ -510,9 +576,85 @@ mod tests {
         let text = r.render();
         assert!(text.contains("2 forwards"));
         assert!(text.contains("mean fill 75.0%"));
+        assert!(text.contains("1 shard)"));
         let j = r.to_json().to_string();
         assert!(j.contains("\"fleet_rows\""));
         assert!(j.contains("\"mean_fill\""));
+        assert!(j.contains("\"shards\""));
+        assert!(j.contains("\"hot_allocs\""));
+        assert!(j.contains("\"cut_us\""));
+    }
+
+    /// An empty histogram (e.g. cut_us when no timeout dispatch ever
+    /// fired) must serialize finite numbers, never inf/-inf tokens that
+    /// would corrupt inference.json.
+    #[test]
+    fn empty_histogram_serializes_finite_json() {
+        let h = Histogram::new(&[1.0, 4.0]);
+        let j = h.to_json().to_string();
+        // the guarded min()/max() accessors put 0, not the raw ±inf
+        // sentinels, into the serialization
+        assert!(j.contains("\"min\":0") && j.contains("\"max\":0"), "{j}");
+        // and the whole thing round-trips through our own parser
+        crate::util::json::Json::parse(&j).unwrap();
+    }
+
+    #[test]
+    fn histogram_merge_folds_counts_and_extremes() {
+        let mut a = Histogram::new(&[1.0, 4.0]);
+        a.record(0.5);
+        a.record(3.0);
+        let mut b = Histogram::new(&[1.0, 4.0]);
+        b.record(10.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min(), 0.5);
+        assert_eq!(a.max(), 10.0);
+        assert!((a.mean() - 13.5 / 3.0).abs() < 1e-12);
+        let buckets = a.buckets();
+        assert_eq!(buckets[0].1, 1);
+        assert_eq!(buckets[1].1, 1);
+        assert_eq!(buckets[2].1, 1);
+        // merging into an empty histogram keeps extremes sane
+        let mut empty = Histogram::new(&[1.0, 4.0]);
+        empty.merge(&a);
+        assert_eq!(empty.min(), 0.5);
+        assert_eq!(empty.max(), 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different bucket bounds")]
+    fn histogram_merge_rejects_mismatched_bounds() {
+        let mut a = Histogram::new(&[1.0]);
+        a.merge(&Histogram::new(&[2.0]));
+    }
+
+    #[test]
+    fn inference_report_merge_sums_shards() {
+        // uneven shards share bucket bounds via with_bounds
+        let mut a = InferenceReport::with_bounds(6, 6);
+        let mut b = InferenceReport::with_bounds(4, 6);
+        a.forwards = 10;
+        a.rows = 50;
+        a.full_dispatches = 8;
+        a.timeout_dispatches = 2;
+        a.hot_allocs = 7;
+        a.fill_ratio.record(1.0);
+        b.forwards = 5;
+        b.rows = 20;
+        b.full_dispatches = 5;
+        b.hot_allocs = 3;
+        b.fill_ratio.record(0.5);
+        a.merge(&b);
+        assert_eq!(a.forwards, 15);
+        assert_eq!(a.rows, 70);
+        assert_eq!(a.fleet_rows, 10);
+        assert_eq!(a.shards, 2);
+        assert_eq!(a.hot_allocs, 10);
+        assert_eq!(a.full_dispatches, 13);
+        assert_eq!(a.timeout_dispatches, 2);
+        assert!((a.mean_fill() - 0.75).abs() < 1e-12);
+        assert!(a.render().contains("2 shards"));
     }
 
     #[test]

@@ -1,13 +1,13 @@
 //! Orchestrator: process topology and lifecycle for one training run —
 //! spawns the N sampler workers (each driving `envs_per_sampler`
 //! vectorized envs in lockstep), the learner, and — under
-//! `--inference-mode shared` — the inference-server thread that owns the
-//! fleet-sized actor; wires the experience queue, policy store, and
-//! inference request queue between them, runs the iteration loop, and
-//! shuts everything down cleanly (the WALL-E launcher in Fig 2).
+//! `--inference-mode shared` — the S inference-pool shard threads, each
+//! owning a fleet-slice actor; wires the experience queue, policy store,
+//! and inference request queues between them, runs the iteration loop,
+//! and shuts everything down cleanly (the WALL-E launcher in Fig 2).
 
 use crate::algo::rollout::ExperienceChunk;
-use crate::config::{Algo, InferenceMode, TrainConfig};
+use crate::config::{Algo, InferWait, InferenceMode, TrainConfig};
 use crate::coordinator::learner::{DdpgLearner, PpoLearner};
 use crate::coordinator::metrics::{InferenceReport, IterationMetrics, MetricsLog};
 use crate::coordinator::policy_store::PolicyStore;
@@ -18,7 +18,7 @@ use crate::coordinator::sampler::{
 };
 use crate::env::registry::make_env;
 use crate::env::vec_env::VecEnv;
-use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
 use crate::runtime::BackendFactory;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -71,33 +71,47 @@ pub fn run(
     let mut result: Option<RunResult> = None;
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
-        // ---- shared inference server (one per run, optional) ----------
-        // Clients are registered BEFORE the serve thread starts so it
-        // never observes an empty fleet and exits early; the thread
-        // builds the fleet-sized backend on itself (PJRT is not Send)
-        // and runs until every worker has dropped its handle.
+        // ---- sharded inference pool (one per run, optional) -----------
+        // Clients are registered BEFORE any serve thread starts so no
+        // shard can observe an empty fleet and exit early; each shard
+        // thread builds its own fleet-slice backend on itself (PJRT is
+        // not Send) and runs until every one of its workers has dropped
+        // its handle.
         let m = cfg.envs_per_sampler;
-        let server = match cfg.inference_mode {
+        let pool = match cfg.inference_mode {
             InferenceMode::Local => None,
-            InferenceMode::Shared => Some(Arc::new(InferenceServer::new(InferenceServerCfg {
-                max_wait: Duration::from_micros(cfg.infer_max_wait_us),
-                fleet_rows: cfg.samplers * m,
+            InferenceMode::Shared => Some(Arc::new(InferencePool::new(InferencePoolCfg {
+                workers: cfg.samplers,
+                rows_per_worker: m,
+                shards: cfg.infer_shards.resolve(cfg.samplers),
+                wait: match cfg.infer_wait {
+                    InferWait::Adaptive => WaitPolicy::Adaptive,
+                    InferWait::Fixed(us) => WaitPolicy::Fixed(Duration::from_micros(us)),
+                },
                 obs_dim: factory.obs_dim(),
                 act_dim: factory.act_dim(),
             }))),
         };
         let mut clients: Vec<_> = (0..cfg.samplers)
-            .map(|_| server.as_ref().map(|s| s.client()))
+            .map(|id| pool.as_ref().map(|p| p.client(id)))
             .collect();
-        let server_handle = server.as_ref().map(|s| {
-            let s = s.clone();
-            let store = &store;
-            let algo = cfg.algo;
-            scope.spawn(move || match algo {
-                Algo::Ppo => s.serve_ppo(factory, store),
-                Algo::Ddpg => s.serve_ddpg(factory, store),
+        let server_handles: Vec<_> = pool
+            .as_ref()
+            .map(|p| {
+                p.shards()
+                    .iter()
+                    .map(|shard| {
+                        let shard = shard.clone();
+                        let store = &store;
+                        let algo = cfg.algo;
+                        scope.spawn(move || match algo {
+                            Algo::Ppo => shard.serve_ppo(factory, store),
+                            Algo::Ddpg => shard.serve_ddpg(factory, store),
+                        })
+                    })
+                    .collect()
             })
-        });
+            .unwrap_or_default();
 
         // ---- sampler workers ------------------------------------------
         // Each worker drives `envs_per_sampler` envs in lockstep; env
@@ -207,10 +221,11 @@ pub fn run(
         for h in handles {
             reports.push(h.join().map_err(|_| anyhow::anyhow!("sampler panicked"))??);
         }
-        // the serve loop exits once every worker drops its client handle
-        if let Some(h) = server_handle {
+        // each shard's serve loop exits once all ITS workers drop their
+        // client handles
+        for h in server_handles {
             h.join()
-                .map_err(|_| anyhow::anyhow!("inference server panicked"))??;
+                .map_err(|_| anyhow::anyhow!("inference shard panicked"))??;
         }
 
         result = Some(RunResult {
@@ -223,7 +238,7 @@ pub fn run(
                 queue.stats.push_blocked(),
                 queue.stats.pop_blocked(),
             ),
-            infer: server.map(|s| s.report()),
+            infer: pool.map(|p| p.report()),
         });
         Ok(())
     })?;
@@ -341,7 +356,7 @@ mod tests {
         let mut cfg = tiny_cfg(3, true);
         cfg.envs_per_sampler = 2;
         cfg.inference_mode = InferenceMode::Shared;
-        cfg.infer_max_wait_us = 500;
+        cfg.infer_wait = InferWait::Fixed(500);
         let f = factory(&cfg);
         let mut log = MetricsLog::quiet();
         let r = run(&cfg, &f, &mut log).unwrap();
@@ -351,6 +366,7 @@ mod tests {
         }
         let rep = r.infer.expect("shared mode must produce an inference report");
         assert_eq!(rep.fleet_rows, 6);
+        assert_eq!(rep.shards, 1, "3 workers resolve to one auto shard");
         assert!(rep.forwards > 0, "server never dispatched");
         // every sampled step went through the server exactly once: total
         // rows >= steps (bootstrap forwards add more)
@@ -364,7 +380,7 @@ mod tests {
     fn shared_inference_sync_mode_completes() {
         let mut cfg = tiny_cfg(2, false);
         cfg.inference_mode = InferenceMode::Shared;
-        cfg.infer_max_wait_us = 500;
+        cfg.infer_wait = InferWait::Fixed(500);
         let f = factory(&cfg);
         let mut log = MetricsLog::quiet();
         let r = run(&cfg, &f, &mut log).unwrap();
@@ -373,6 +389,48 @@ mod tests {
             assert!(m.samples >= 600, "samples {}", m.samples);
         }
         assert!(r.infer.is_some());
+    }
+
+    #[test]
+    fn sharded_inference_run_completes_and_reports_per_shard() {
+        let mut cfg = tiny_cfg(4, true);
+        cfg.envs_per_sampler = 2;
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_shards = crate::config::InferShards::Fixed(2);
+        cfg.infer_wait = InferWait::Fixed(500);
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        for m in &r.metrics {
+            assert!(m.samples >= 600);
+        }
+        let rep = r.infer.expect("sharded run must produce a merged report");
+        assert_eq!(rep.shards, 2);
+        assert_eq!(rep.fleet_rows, 8, "capacities sum across shards");
+        assert!(rep.forwards > 0);
+        let total_steps: u64 = r.sampler_reports.iter().map(|s| s.steps).sum();
+        assert!(rep.rows >= total_steps);
+    }
+
+    #[test]
+    fn adaptive_wait_shared_run_completes() {
+        let mut cfg = tiny_cfg(2, true);
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_wait = InferWait::Adaptive; // the default, stated explicitly
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        let rep = r.infer.unwrap();
+        assert!(rep.forwards > 0);
+        // steady state must stop allocating on the slab transport path:
+        // warmup is bounded by a small constant per client + shard
+        assert!(
+            rep.hot_allocs < 200,
+            "hot-path allocations kept growing: {}",
+            rep.hot_allocs
+        );
     }
 
     #[test]

@@ -56,8 +56,8 @@ use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::coordinator::queue::Channel;
 use crate::env::vec_env::{VecEnv, VecStepInfo};
-use crate::runtime::inference_server::ActorClient;
-use crate::runtime::{ActorBackend, DdpgActorBackend};
+use crate::runtime::inference_server::{ActResponse, ActorClient};
+use crate::runtime::{ActResult, ActorBackend, DdpgActorBackend};
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -67,14 +67,63 @@ use std::time::Duration;
 pub enum PpoPolicySource {
     /// Private per-worker backend (N forwards per tick fleet-wide).
     Local(Box<dyn ActorBackend>),
-    /// Shared inference server handle (one fleet-wide mega-batch forward).
+    /// Shared inference-pool shard handle (cross-worker mega-batch
+    /// forwards; see `runtime::inference_server`).
     Shared(ActorClient),
 }
 
 /// Where a DDPG sampler evaluates the deterministic actor each sim tick.
 pub enum DdpgPolicySource {
+    /// Private per-worker backend.
     Local(Box<dyn DdpgActorBackend>),
+    /// Shared inference-pool shard handle.
     Shared(ActorClient),
+}
+
+/// One tick's PPO policy outputs: owned by the worker (local backend) or
+/// held in the recycled shared-inference response. Drop it before the
+/// next inference call so the shared buffers return to the client.
+enum PpoTickOut {
+    Local(ActResult),
+    Shared(ActResponse),
+}
+
+impl PpoTickOut {
+    fn action(&self) -> &[f32] {
+        match self {
+            PpoTickOut::Local(r) => &r.action,
+            PpoTickOut::Shared(r) => r.action(),
+        }
+    }
+
+    fn logp(&self) -> &[f32] {
+        match self {
+            PpoTickOut::Local(r) => &r.logp,
+            PpoTickOut::Shared(r) => r.logp(),
+        }
+    }
+
+    fn value(&self) -> &[f32] {
+        match self {
+            PpoTickOut::Local(r) => &r.value,
+            PpoTickOut::Shared(r) => r.value(),
+        }
+    }
+}
+
+/// DDPG counterpart of [`PpoTickOut`] (deterministic actions only).
+enum DdpgTickOut {
+    Local(Vec<f32>),
+    Shared(ActResponse),
+}
+
+impl DdpgTickOut {
+    fn action(&self) -> &[f32] {
+        match self {
+            DdpgTickOut::Local(a) => a,
+            DdpgTickOut::Shared(r) => r.action(),
+        }
+    }
 }
 
 /// Stream-id base for PPO action-noise RNGs (global env index is added).
@@ -423,7 +472,7 @@ pub fn run_ppo_sampler_from(
             PpoPolicySource::Local(actor) => {
                 normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
                 match actor.act(&policy.params, &obs_in, &noise) {
-                    Ok(r) => (r, 0.0),
+                    Ok(r) => (PpoTickOut::Local(r), 0.0),
                     Err(e) => {
                         crate::log_error!("sampler {}: act failed: {e:#}", cfg.id);
                         break;
@@ -440,14 +489,14 @@ pub fn run_ppo_sampler_from(
                 };
                 // the server normalized our rows under its dispatch
                 // snapshot — record those, they are what the policy saw
-                obs_in[..m * obs_dim].copy_from_slice(&resp.norm_obs);
+                obs_in[..m * obs_dim].copy_from_slice(resp.norm_obs());
                 if resp.snapshot.version != policy.version {
                     // server-driven refresh: cut buffered (old-version)
                     // chunks before this tick's rows join them
                     if !flush_version_cut(
                         &cfg,
                         &mut bufs,
-                        &resp.out.value,
+                        resp.value(),
                         policy.version,
                         queue,
                         &mut report,
@@ -459,7 +508,8 @@ pub fn run_ppo_sampler_from(
                     policy = resp.snapshot.clone();
                     report.policy_refreshes += 1;
                 }
-                (resp.out, resp.server_busy_secs)
+                let sb = resp.server_busy_secs;
+                (PpoTickOut::Shared(resp), sb)
             }
         };
         for i in 0..m {
@@ -467,14 +517,17 @@ pub fn run_ppo_sampler_from(
             buf.obs
                 .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
             buf.stats.update(venv.obs_row(i)); // raw pre-step obs feeds the normalizer
-            let arow = &out.action[i * act_dim..(i + 1) * act_dim];
+            let arow = &out.action()[i * act_dim..(i + 1) * act_dim];
             buf.act.extend_from_slice(arow); // pre-clip action (matches logp)
-            buf.logp.push(out.logp[i]);
-            buf.value.push(out.value[i]);
+            buf.logp.push(out.logp()[i]);
+            buf.value.push(out.value()[i]);
             let dst = &mut actions[i * act_dim..(i + 1) * act_dim];
             dst.copy_from_slice(arow);
             crate::env::clip_action(dst);
         }
+        // recycle the shared-inference buffers BEFORE the bootstrap call
+        // below may need them (keeps the steady-state tick allocation-free)
+        drop(out);
 
         venv.step_all(&actions, &mut infos);
         for (buf, info) in bufs.iter_mut().zip(&infos) {
@@ -528,22 +581,23 @@ pub fn run_ppo_sampler_from(
             let boot = match &mut source {
                 PpoPolicySource::Local(actor) => {
                     normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
-                    actor
-                        .act(&policy.params, &obs_in, &noise)
-                        .map(|r| (r.value, 0.0))
+                    actor.act(&policy.params, &obs_in, &noise).map(|r| {
+                        boot_values[..m].copy_from_slice(&r.value[..m]);
+                        0.0
+                    })
                 }
                 // snapshot of a bootstrap response is deliberately not
                 // adopted: the buffers are being flushed right here, and
                 // V(s') under the freshest params is the better target
-                PpoPolicySource::Shared(client) => client
-                    .act(venv.obs(), &noise[..m * act_dim])
-                    .map(|r| (r.out.value, r.server_busy_secs)),
+                PpoPolicySource::Shared(client) => {
+                    client.act(venv.obs(), &noise[..m * act_dim]).map(|r| {
+                        boot_values[..m].copy_from_slice(&r.value()[..m]);
+                        r.server_busy_secs
+                    })
+                }
             };
             let boot_server_busy = match boot {
-                Ok((v, sb)) => {
-                    boot_values[..m].copy_from_slice(&v[..m]);
-                    sb
-                }
+                Ok(sb) => sb,
                 Err(e) => {
                     crate::log_error!(
                         "sampler {}: bootstrap value inference failed: {e:#}",
@@ -686,7 +740,7 @@ pub fn run_ddpg_sampler_from(
             DdpgPolicySource::Local(actor) => {
                 normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
                 match actor.act(&policy.params, &obs_in) {
-                    Ok(a) => (a, 0.0),
+                    Ok(a) => (DdpgTickOut::Local(a), 0.0),
                     Err(e) => {
                         crate::log_error!("ddpg sampler {}: act failed: {e:#}", cfg.id);
                         break;
@@ -701,7 +755,7 @@ pub fn run_ddpg_sampler_from(
                         break;
                     }
                 };
-                obs_in[..m * obs_dim].copy_from_slice(&resp.norm_obs);
+                obs_in[..m * obs_dim].copy_from_slice(resp.norm_obs());
                 if resp.snapshot.version != policy.version {
                     // server-driven refresh: close out old-version chunks
                     // (with their s' rows) before this tick appends
@@ -720,7 +774,8 @@ pub fn run_ddpg_sampler_from(
                     policy = resp.snapshot.clone();
                     report.policy_refreshes += 1;
                 }
-                (resp.out.action, resp.server_busy_secs)
+                let sb = resp.server_busy_secs;
+                (DdpgTickOut::Shared(resp), sb)
             }
         };
         for i in 0..m {
@@ -729,7 +784,7 @@ pub fn run_ddpg_sampler_from(
                 .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
             buf.stats.update(venv.obs_row(i));
             let dst = &mut actions[i * act_dim..(i + 1) * act_dim];
-            dst.copy_from_slice(&det_actions[i * act_dim..(i + 1) * act_dim]);
+            dst.copy_from_slice(&det_actions.action()[i * act_dim..(i + 1) * act_dim]);
             ous[i].sample(&mut noise_rngs[i], &mut noise);
             for (a, n) in dst.iter_mut().zip(&noise) {
                 *a += n;
@@ -739,6 +794,8 @@ pub fn run_ddpg_sampler_from(
             buf.logp.push(0.0);
             buf.value.push(0.0);
         }
+        // recycle the shared-inference buffers before the next tick
+        drop(det_actions);
 
         venv.step_all(&actions, &mut infos);
         for (buf, info) in bufs.iter_mut().zip(&infos) {
@@ -1015,38 +1072,42 @@ mod tests {
     }
 
     /// Tentpole acceptance: `--inference-mode shared` must be
-    /// observationally transparent. Under a fixed policy version, every
-    /// (worker, env slot) chunk stream produced through the shared
-    /// inference server is bitwise identical to the local-backend stream
-    /// at N=2 workers x M=2 envs — the server batches across workers but
-    /// the row-independent forward and server-side normalization leave
-    /// every trajectory untouched.
+    /// observationally transparent at ANY shard count. Under a fixed
+    /// policy version, every (worker, env slot) chunk stream produced
+    /// through the sharded inference pool — S=1 or S=2 — is bitwise
+    /// identical to the local-backend stream at N=4 workers x M=2 envs:
+    /// the pool batches across workers but the row-independent forward,
+    /// server-side normalization, and static worker->shard assignment
+    /// leave every trajectory untouched.
     #[test]
-    fn shared_mode_chunk_stream_matches_local_bitwise() {
-        use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+    fn shard_count_does_not_change_ppo_chunk_streams() {
+        use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
         use std::collections::BTreeMap;
 
-        let n = 2usize;
+        let n = 4usize;
         let m = 2usize;
-        let budget = 1200usize;
+        let budget = 2400usize;
 
-        let collect = |shared: bool| -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+        // None = local backends; Some(s) = shared pool with s shards
+        let collect = |shards: Option<usize>| -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
             let store = Arc::new(PolicyStore::new());
             let queue = Arc::new(Channel::new(256));
             let stop = Arc::new(AtomicBool::new(false));
             let f = pendulum_factory();
             store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
 
-            let server = shared.then(|| {
-                Arc::new(InferenceServer::new(InferenceServerCfg {
-                    max_wait: Duration::from_millis(5),
-                    fleet_rows: n * m,
+            let pool = shards.map(|s| {
+                Arc::new(InferencePool::new(InferencePoolCfg {
+                    workers: n,
+                    rows_per_worker: m,
+                    shards: s,
+                    wait: WaitPolicy::Fixed(Duration::from_millis(5)),
                     obs_dim: 3,
                     act_dim: 1,
                 }))
             });
             let mut clients: Vec<_> = (0..n)
-                .map(|_| server.as_ref().map(|s| s.client()))
+                .map(|id| pool.as_ref().map(|p| p.client(id)))
                 .collect();
             let mut handles = Vec::new();
             for id in 0..n {
@@ -1071,14 +1132,22 @@ mod tests {
                     run_ppo_sampler_from(scfg, venv, source, &store2, &queue2, &stop2)
                 }));
             }
-            let server_h = server.as_ref().map(|s| {
-                let s = s.clone();
-                let store2 = store.clone();
-                thread::spawn(move || {
-                    let f = pendulum_factory();
-                    s.serve_ppo(&f, &store2).unwrap();
+            let server_hs: Vec<_> = pool
+                .as_ref()
+                .map(|p| {
+                    p.shards()
+                        .iter()
+                        .map(|shard| {
+                            let shard = shard.clone();
+                            let store2 = store.clone();
+                            thread::spawn(move || {
+                                let f = pendulum_factory();
+                                shard.serve_ppo(&f, &store2).unwrap();
+                            })
+                        })
+                        .collect()
                 })
-            });
+                .unwrap_or_default();
 
             let mut total = 0usize;
             let mut streams: BTreeMap<(usize, usize), Vec<ExperienceChunk>> = BTreeMap::new();
@@ -1092,49 +1161,57 @@ mod tests {
             for h in handles {
                 h.join().unwrap();
             }
-            if let Some(h) = server_h {
+            for h in server_hs {
                 h.join().unwrap();
             }
             streams
         };
 
-        let local = collect(false);
-        let shared = collect(true);
-        assert_eq!(shared.len(), n * m, "every (worker, slot) must contribute");
-        for (key, lchunks) in &local {
-            let schunks = &shared[key];
-            let k = lchunks.len().min(schunks.len());
-            assert!(k >= 3, "stream {key:?}: only {k} comparable chunks");
-            for (a, b) in lchunks[..k].iter().zip(&schunks[..k]) {
-                assert_eq!(a.policy_version, b.policy_version, "{key:?}: version");
-                assert_eq!(a.obs, b.obs, "{key:?}: obs diverged");
-                assert_eq!(a.act, b.act, "{key:?}: actions diverged");
-                assert_eq!(a.rew, b.rew, "{key:?}: rewards diverged");
-                assert_eq!(a.logp, b.logp, "{key:?}: logp diverged");
-                assert_eq!(a.value, b.value, "{key:?}: values diverged");
-                assert_eq!(a.end, b.end, "{key:?}: chunk ends diverged");
-                assert_eq!(
-                    a.bootstrap_value, b.bootstrap_value,
-                    "{key:?}: bootstraps diverged"
-                );
+        let local = collect(None);
+        let shard1 = collect(Some(1));
+        let shard2 = collect(Some(2));
+        for (label, shared) in [("S=1", &shard1), ("S=2", &shard2)] {
+            assert_eq!(
+                shared.len(),
+                n * m,
+                "{label}: every (worker, slot) must contribute"
+            );
+            for (key, lchunks) in &local {
+                let schunks = &shared[key];
+                let k = lchunks.len().min(schunks.len());
+                assert!(k >= 3, "{label} stream {key:?}: only {k} comparable chunks");
+                for (a, b) in lchunks[..k].iter().zip(&schunks[..k]) {
+                    assert_eq!(a.policy_version, b.policy_version, "{label} {key:?}: version");
+                    assert_eq!(a.obs, b.obs, "{label} {key:?}: obs diverged");
+                    assert_eq!(a.act, b.act, "{label} {key:?}: actions diverged");
+                    assert_eq!(a.rew, b.rew, "{label} {key:?}: rewards diverged");
+                    assert_eq!(a.logp, b.logp, "{label} {key:?}: logp diverged");
+                    assert_eq!(a.value, b.value, "{label} {key:?}: values diverged");
+                    assert_eq!(a.end, b.end, "{label} {key:?}: chunk ends diverged");
+                    assert_eq!(
+                        a.bootstrap_value, b.bootstrap_value,
+                        "{label} {key:?}: bootstraps diverged"
+                    );
+                }
             }
         }
     }
 
-    /// DDPG counterpart of the bitwise-equivalence acceptance test: the
-    /// shared server must leave replay chunk streams (including the
-    /// trailing normalized s' row and post-round-trip OU noise order)
-    /// untouched at N=2 workers x M=2 envs under a fixed actor.
+    /// DDPG counterpart of the shard-determinism acceptance test: the
+    /// sharded pool (S=1 and S=2) must leave replay chunk streams
+    /// (including the trailing normalized s' row and post-round-trip OU
+    /// noise order) untouched at N=4 workers x M=2 envs under a fixed
+    /// actor.
     #[test]
-    fn ddpg_shared_mode_chunk_stream_matches_local_bitwise() {
-        use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+    fn shard_count_does_not_change_ddpg_chunk_streams() {
+        use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
         use std::collections::BTreeMap;
 
-        let n = 2usize;
+        let n = 4usize;
         let m = 2usize;
-        let budget = 800usize;
+        let budget = 1600usize;
 
-        let collect = |shared: bool| -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+        let collect = |shards: Option<usize>| -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
             let store = Arc::new(PolicyStore::new());
             let queue = Arc::new(Channel::new(256));
             let stop = Arc::new(AtomicBool::new(false));
@@ -1142,16 +1219,18 @@ mod tests {
             let (actor_params, _) = f.init_ddpg_params(0);
             store.publish(actor_params, NormSnapshot::identity(3));
 
-            let server = shared.then(|| {
-                Arc::new(InferenceServer::new(InferenceServerCfg {
-                    max_wait: Duration::from_millis(5),
-                    fleet_rows: n * m,
+            let pool = shards.map(|s| {
+                Arc::new(InferencePool::new(InferencePoolCfg {
+                    workers: n,
+                    rows_per_worker: m,
+                    shards: s,
+                    wait: WaitPolicy::Fixed(Duration::from_millis(5)),
                     obs_dim: 3,
                     act_dim: 1,
                 }))
             });
             let mut clients: Vec<_> = (0..n)
-                .map(|_| server.as_ref().map(|s| s.client()))
+                .map(|id| pool.as_ref().map(|p| p.client(id)))
                 .collect();
             let mut handles = Vec::new();
             for id in 0..n {
@@ -1180,14 +1259,22 @@ mod tests {
                     )
                 }));
             }
-            let server_h = server.as_ref().map(|s| {
-                let s = s.clone();
-                let store2 = store.clone();
-                thread::spawn(move || {
-                    let f = pendulum_factory();
-                    s.serve_ddpg(&f, &store2).unwrap();
+            let server_hs: Vec<_> = pool
+                .as_ref()
+                .map(|p| {
+                    p.shards()
+                        .iter()
+                        .map(|shard| {
+                            let shard = shard.clone();
+                            let store2 = store.clone();
+                            thread::spawn(move || {
+                                let f = pendulum_factory();
+                                shard.serve_ddpg(&f, &store2).unwrap();
+                            })
+                        })
+                        .collect()
                 })
-            });
+                .unwrap_or_default();
 
             let mut total = 0usize;
             let mut streams: BTreeMap<(usize, usize), Vec<ExperienceChunk>> = BTreeMap::new();
@@ -1201,24 +1288,31 @@ mod tests {
             for h in handles {
                 h.join().unwrap();
             }
-            if let Some(h) = server_h {
+            for h in server_hs {
                 h.join().unwrap();
             }
             streams
         };
 
-        let local = collect(false);
-        let shared = collect(true);
-        assert_eq!(shared.len(), n * m, "every (worker, slot) must contribute");
-        for (key, lchunks) in &local {
-            let schunks = &shared[key];
-            let k = lchunks.len().min(schunks.len());
-            assert!(k >= 2, "stream {key:?}: only {k} comparable chunks");
-            for (a, b) in lchunks[..k].iter().zip(&schunks[..k]) {
-                assert_eq!(a.obs, b.obs, "{key:?}: obs (incl. s' row) diverged");
-                assert_eq!(a.act, b.act, "{key:?}: actions diverged");
-                assert_eq!(a.rew, b.rew, "{key:?}: rewards diverged");
-                assert_eq!(a.end, b.end, "{key:?}: chunk ends diverged");
+        let local = collect(None);
+        let shard1 = collect(Some(1));
+        let shard2 = collect(Some(2));
+        for (label, shared) in [("S=1", &shard1), ("S=2", &shard2)] {
+            assert_eq!(
+                shared.len(),
+                n * m,
+                "{label}: every (worker, slot) must contribute"
+            );
+            for (key, lchunks) in &local {
+                let schunks = &shared[key];
+                let k = lchunks.len().min(schunks.len());
+                assert!(k >= 2, "{label} stream {key:?}: only {k} comparable chunks");
+                for (a, b) in lchunks[..k].iter().zip(&schunks[..k]) {
+                    assert_eq!(a.obs, b.obs, "{label} {key:?}: obs (incl. s' row) diverged");
+                    assert_eq!(a.act, b.act, "{label} {key:?}: actions diverged");
+                    assert_eq!(a.rew, b.rew, "{label} {key:?}: rewards diverged");
+                    assert_eq!(a.end, b.end, "{label} {key:?}: chunk ends diverged");
+                }
             }
         }
     }
@@ -1227,7 +1321,9 @@ mod tests {
     /// observes the store per dispatch; workers cut on version changes).
     #[test]
     fn shared_sampler_adopts_server_driven_refresh() {
-        use crate::runtime::inference_server::{InferenceServer, InferenceServerCfg};
+        use crate::runtime::inference_server::{
+            InferenceServer, InferenceServerCfg, WaitPolicy,
+        };
 
         let store = Arc::new(PolicyStore::new());
         // small queue: bounds how many stale v1 chunks can pile up before
@@ -1237,12 +1333,12 @@ mod tests {
         let f = pendulum_factory();
         store.publish(f.init_ppo_params(0), NormSnapshot::identity(3));
 
-        let server = Arc::new(InferenceServer::new(InferenceServerCfg {
-            max_wait: Duration::from_millis(2),
-            fleet_rows: 1,
-            obs_dim: 3,
-            act_dim: 1,
-        }));
+        let server = Arc::new(InferenceServer::new(InferenceServerCfg::single(
+            WaitPolicy::Fixed(Duration::from_millis(2)),
+            1,
+            3,
+            1,
+        )));
         let client = server.client();
         let server_h = {
             let s = server.clone();

@@ -13,7 +13,7 @@
 //!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
 
 use walle::bench::figures;
-use walle::config::{Algo, Backend, InferenceMode, TrainConfig};
+use walle::config::{Algo, Backend, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::{eval, orchestrator};
 use walle::env::registry::{make_env, ENV_NAMES};
@@ -45,11 +45,15 @@ TRAIN FLAGS:
   --envs-per-sampler M   vectorized envs per worker, one batched policy
                          forward drives all M in lockstep (default 1)
   --inference-mode MODE  local = private backend per worker (default);
-                         shared = one server batches all N workers' rows
-                         into a single fleet-wide forward per sim tick
-  --infer-max-wait-us U  shared mode: dispatch a partial batch after U
-                         microseconds instead of waiting for stragglers
-                         (default 200)
+                         shared = a sharded inference pool batches the
+                         workers' rows into fleet-wide forwards
+  --infer-shards S       shared mode: number of inference-server shards,
+                         `auto` (default) = clamp(N/8, 1, cores/2);
+                         worker w is served by shard w % S
+  --infer-wait POLICY    shared mode straggler cut: `adaptive` (default)
+                         tracks inter-arrival gaps and dispatches when
+                         waiting stops paying; `fixed:<us>` dispatches a
+                         partial batch after exactly <us> microseconds
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo ppo|ddpg        learner algorithm
@@ -119,7 +123,17 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
         cfg.inference_mode = InferenceMode::parse(mode)
             .ok_or_else(|| anyhow::anyhow!("bad --inference-mode {mode:?} (local|shared)"))?;
     }
-    cfg.infer_max_wait_us = args.u64_or("infer-max-wait-us", cfg.infer_max_wait_us)?;
+    if let Some(s) = args.get("infer-shards") {
+        cfg.infer_shards = InferShards::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --infer-shards {s:?} (auto or a count >= 1)"))?;
+    }
+    if let Some(w) = args.get("infer-wait") {
+        cfg.infer_wait = InferWait::parse(w)
+            .ok_or_else(|| anyhow::anyhow!("bad --infer-wait {w:?} (adaptive or fixed:<us>)"))?;
+    } else if args.has("infer-max-wait-us") {
+        // legacy PR 2 spelling: a fixed straggler cut in microseconds
+        cfg.infer_wait = InferWait::Fixed(args.u64_or("infer-max-wait-us", 200)?);
+    }
     cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
     cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;

@@ -30,8 +30,8 @@ pub struct PresetMeta {
     /// Every batch size a shape-specialized `act` artifact was emitted
     /// for (`act` covers `act_batch`; `act_b{B}` covers each other B).
     /// Lets the runtime pick a padding-free executable for any
-    /// `envs_per_sampler` / shared-fleet size (older meta.json without
-    /// the field falls back to `[act_batch]`).
+    /// `envs_per_sampler` / shared-inference shard size (older meta.json
+    /// without the field falls back to `[act_batch]`).
     pub act_batches: Vec<usize>,
     pub eval_batch: usize,
     pub minibatch: usize,
@@ -162,6 +162,27 @@ impl PresetMeta {
             self.preset,
             self.act_batches
         ))
+    }
+
+    /// Largest row count any emitted `prefix` artifact can hold — the
+    /// ceiling on a shared-inference shard's capacity on the XLA path.
+    /// With `--infer-shards S`, each shard needs an artifact for
+    /// `ceil(N/S) * M` rows, so raising S is the way to serve fleets
+    /// beyond the largest emitted act batch without re-running aot.py.
+    pub fn max_act_rows(&self, prefix: &str) -> usize {
+        self.act_batches
+            .iter()
+            .rev()
+            .copied()
+            .find(|&b| {
+                let name = if b == self.act_batch {
+                    prefix.to_string()
+                } else {
+                    format!("{prefix}_b{b}")
+                };
+                self.has_artifact(&name)
+            })
+            .unwrap_or(0)
     }
 
     /// Verify the Python-exported layout equals the native construction —
@@ -311,6 +332,9 @@ mod tests {
         assert!(format!("{err:#}").contains("rebuild artifacts"));
         // ddpg prefix has no artifacts in this synthetic meta
         assert!(meta.act_artifact_for("act_ddpg", 1).is_err());
+        // shard-capacity ceiling: the largest emitted (and present) batch
+        assert_eq!(meta.max_act_rows("act"), 16);
+        assert_eq!(meta.max_act_rows("act_ddpg"), 0);
     }
 
     #[test]

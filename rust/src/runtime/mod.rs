@@ -1,7 +1,8 @@
 //! Runtime: the compute-backend abstraction the coordinator talks to.
 //!
 //! Two implementations of the same traits:
-//! * [`xla_backend::XlaFactory`] — loads the AOT HLO-text artifacts and
+//! * `xla_backend::XlaFactory` (behind the `xla` feature, so a link
+//!   would dangle in default builds) — loads the AOT HLO-text artifacts and
 //!   executes them through the PJRT CPU client (the production path; the
 //!   request path never touches Python).
 //! * [`native_backend::NativeFactory`] — the pure-Rust mirror (`nn::`),
@@ -18,17 +19,23 @@
 //! * **local** (default) — every sampler worker builds its own actor via
 //!   [`BackendFactory::make_actor_batched`] and runs M-row forwards
 //!   privately: N forwards per sim tick fleet-wide.
-//! * **shared** — the orchestrator spawns one [`inference_server`] thread
-//!   which builds a single fleet-sized actor via
-//!   [`BackendFactory::make_actor_shared`] and coalesces every worker's
-//!   M-row slab into ONE `N*M`-row forward per sim tick (dispatching
-//!   early after `--infer-max-wait-us` if a straggler holds the batch).
-//!   Workers talk to it through `inference_server::ActorClient` handles.
+//! * **shared** — the orchestrator spawns an
+//!   [`inference_server::InferencePool`] of `--infer-shards S` serve
+//!   threads; worker `w` is statically assigned to shard `w % S`, each
+//!   shard builds an actor sized to exactly its workers' rows via
+//!   [`BackendFactory::make_actor_shared`] and coalesces their M-row
+//!   slabs into one forward per sim tick (dispatching early under the
+//!   `--infer-wait` straggler-cut policy — adaptive by default). Workers
+//!   talk to their shard through `inference_server::ActorClient` handles
+//!   whose request/response buffers are recycled, keeping the
+//!   steady-state tick allocation-free.
 //!
-//! Both modes produce bitwise-identical per-env trajectories (the MLP
-//! forward is row-independent); shared mode trades a request/response hop
-//! for mega-batch amortization, which wins once N small forwards per tick
-//! dominate the rollout loop.
+//! All modes and shard counts produce bitwise-identical per-env
+//! trajectories under a fixed policy version (the MLP forward is
+//! row-independent); shared mode trades a request/response hop for
+//! mega-batch amortization, which wins once N small forwards per tick
+//! dominate the rollout loop, and sharding keeps that win once a single
+//! mega-batch forward saturates a core.
 
 pub mod artifacts;
 pub mod inference_server;
@@ -255,12 +262,15 @@ pub trait BackendFactory: Send + Sync {
         self.make_ddpg_actor()
     }
 
-    /// Build the fleet-sized actor for the shared inference server: it
-    /// must accept ANY row count from 1 to `max_rows` per call (dispatch
-    /// sizes vary with the adaptive cut). Flexible backends (native,
-    /// `batch() == 0`) serve every dispatch padding-free; shape-
-    /// specialized backends (XLA) return a fixed-batch executable of at
-    /// least `max_rows` rows and the server zero-pads partial dispatches.
+    /// Build a fleet-slice actor for one shared-inference shard: it must
+    /// accept ANY row count from 1 to `max_rows` per call (dispatch sizes
+    /// vary with the straggler cut). `max_rows` is the shard's capacity —
+    /// its assigned workers x M envs, NOT the whole fleet — so each of
+    /// the pool's S shards gets an exactly-sized actor. Flexible backends
+    /// (native, `batch() == 0`) serve every dispatch padding-free; shape-
+    /// specialized backends (XLA) return the smallest emitted artifact
+    /// holding `max_rows` rows (see `artifacts::PresetMeta::act_artifact_for`)
+    /// and the server zero-pads partial dispatches.
     fn make_actor_shared(&self, max_rows: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
         let _ = max_rows;
         self.make_actor()

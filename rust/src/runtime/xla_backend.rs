@@ -232,18 +232,36 @@ impl BackendFactory for XlaFactory {
         self.make_ddpg_actor_with(&artifact, b)
     }
 
-    /// Fleet actor for the shared inference server: the executable must
-    /// hold `max_rows` (= N * M) rows; the server zero-pads straggler-cut
-    /// partial dispatches up to the artifact batch.
+    /// Fleet-slice actor for one shared-inference shard: the executable
+    /// must hold `max_rows` (the shard's workers x M) rows; the server
+    /// zero-pads straggler-cut partial dispatches up to the artifact
+    /// batch. When no emitted artifact is large enough, the error says
+    /// how many rows the artifacts CAN hold so the user can raise
+    /// `--infer-shards` instead of re-running aot.py.
     fn make_actor_shared(&self, max_rows: usize) -> Result<Box<dyn ActorBackend>> {
         ensure!(max_rows > 0, "make_actor_shared: max_rows must be >= 1");
-        let (artifact, b) = self.meta.act_artifact_for("act", max_rows)?;
+        let (artifact, b) = self.meta.act_artifact_for("act", max_rows).with_context(|| {
+            format!(
+                "shard needs {max_rows} rows but the largest act artifact holds {} — \
+                 raise --infer-shards so each shard's workers*M fits",
+                self.meta.max_act_rows("act")
+            )
+        })?;
         self.make_actor_with(&artifact, b)
     }
 
     fn make_ddpg_actor_shared(&self, max_rows: usize) -> Result<Box<dyn DdpgActorBackend>> {
         ensure!(max_rows > 0, "make_ddpg_actor_shared: max_rows must be >= 1");
-        let (artifact, b) = self.meta.act_artifact_for("act_ddpg", max_rows)?;
+        let (artifact, b) = self
+            .meta
+            .act_artifact_for("act_ddpg", max_rows)
+            .with_context(|| {
+                format!(
+                    "shard needs {max_rows} rows but the largest act_ddpg artifact holds {} — \
+                     raise --infer-shards so each shard's workers*M fits",
+                    self.meta.max_act_rows("act_ddpg")
+                )
+            })?;
         self.make_ddpg_actor_with(&artifact, b)
     }
 

@@ -3,7 +3,7 @@
 //! train artifact — the production configuration of the paper's Fig 2,
 //! shrunk to test scale. Requires `make artifacts`.
 
-use walle::config::{Algo, Backend, InferenceMode, TrainConfig};
+use walle::config::{Algo, Backend, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::orchestrator;
 use walle::runtime::make_factory;
@@ -77,7 +77,7 @@ fn native_shared_inference_run_end_to_end() {
     cfg.backend = Backend::Native;
     cfg.hidden = vec![16, 16];
     cfg.inference_mode = InferenceMode::Shared;
-    cfg.infer_max_wait_us = 500;
+    cfg.infer_wait = InferWait::Fixed(500);
     cfg.envs_per_sampler = 2;
     let factory = make_factory(&cfg).unwrap();
     let mut log = MetricsLog::quiet();
@@ -94,6 +94,34 @@ fn native_shared_inference_run_end_to_end() {
     assert!(rep.rows >= total_steps);
     // coalescing must actually happen: strictly fewer forwards than rows
     assert!(rep.forwards < rep.rows, "server never batched anything");
+}
+
+/// Sharded + adaptive-wait configuration end-to-end on the native
+/// backend: two shards serve four workers, the adaptive cut keeps the
+/// run live, and the merged report accounts for the whole fleet.
+#[test]
+fn native_sharded_adaptive_inference_run_end_to_end() {
+    let mut cfg = xla_cfg();
+    cfg.backend = Backend::Native;
+    cfg.hidden = vec![16, 16];
+    cfg.samplers = 4;
+    cfg.inference_mode = InferenceMode::Shared;
+    cfg.infer_shards = InferShards::Fixed(2);
+    cfg.infer_wait = InferWait::Adaptive;
+    cfg.envs_per_sampler = 2;
+    let factory = make_factory(&cfg).unwrap();
+    let mut log = MetricsLog::quiet();
+    let r = orchestrator::run(&cfg, factory.as_ref(), &mut log).unwrap();
+    assert_eq!(r.metrics.len(), 2);
+    for m in &r.metrics {
+        assert!(m.samples >= 800);
+        assert!(m.mean_return.is_finite());
+    }
+    let rep = r.infer.expect("sharded run must carry a merged report");
+    assert_eq!(rep.shards, 2);
+    assert_eq!(rep.fleet_rows, cfg.samplers * cfg.envs_per_sampler);
+    assert!(rep.forwards > 0);
+    assert!(rep.forwards < rep.rows, "shards never batched anything");
 }
 
 #[test]
