@@ -8,7 +8,7 @@
 //! the learning curves are statistically identical (see
 //! rust/tests/runtime_roundtrip.rs for the numeric parity proof).
 
-use walle::config::{Backend, InferShards, InferWait, InferenceMode, TrainConfig};
+use walle::config::{Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::{eval, orchestrator};
 use walle::env::registry::make_env;
@@ -32,6 +32,11 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--infer-shards must be auto or a count >= 1"))?;
     cfg.infer_wait = InferWait::parse(&args.str_or("infer-wait", "adaptive"))
         .ok_or_else(|| anyhow::anyhow!("--infer-wait must be adaptive or fixed:<us>"))?;
+    // `--infer-epoch pool` (default) flips every shard to a new policy
+    // version on one dispatch boundary; `shard` restores independent
+    // per-shard store observation
+    cfg.infer_epoch = InferEpoch::parse(&args.str_or("infer-epoch", "pool"))
+        .ok_or_else(|| anyhow::anyhow!("--infer-epoch must be pool or shard"))?;
     cfg.iterations = args.usize_or("iterations", 40)?;
     cfg.seed = args.u64_or("seed", 0)?;
 

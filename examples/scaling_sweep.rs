@@ -14,7 +14,7 @@
 //!   Fig 7: learn time per iteration roughly constant in N
 
 use walle::bench::figures;
-use walle::config::{Backend, InferShards, InferWait, InferenceMode, TrainConfig};
+use walle::config::{Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::runtime::make_factory;
 use walle::util::cli::Args;
 
@@ -38,9 +38,15 @@ fn main() -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--infer-shards must be auto or a count >= 1"))?;
     cfg.infer_wait = InferWait::parse(&args.str_or("infer-wait", "adaptive"))
         .ok_or_else(|| anyhow::anyhow!("--infer-wait must be adaptive or fixed:<us>"))?;
+    // `--infer-epoch pool` (default) flips every shard to a new policy
+    // version on one dispatch boundary; `shard` restores independent
+    // per-shard store observation
+    cfg.infer_epoch = InferEpoch::parse(&args.str_or("infer-epoch", "pool"))
+        .ok_or_else(|| anyhow::anyhow!("--infer-epoch must be pool or shard"))?;
     if args.get("infer-wait").is_none() && args.has("infer-max-wait-us") {
         // legacy PR 2 spelling still honored so old sweep commands stay
         // comparable with their recorded results
+        walle::config::warn_legacy_infer_max_wait_us();
         cfg.infer_wait = InferWait::Fixed(args.u64_or("infer-max-wait-us", 200)?);
     }
     cfg.seed = args.u64_or("seed", 0)?;

@@ -16,6 +16,7 @@ use walle::config::{DdpgCfg, PpoCfg};
 use walle::coordinator::policy_store::PolicyStore;
 use walle::coordinator::queue::Channel;
 use walle::env::registry::make_env;
+use walle::runtime::epoch::EpochMode;
 use walle::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
 use walle::runtime::native_backend::NativeFactory;
 #[cfg(feature = "xla")]
@@ -229,6 +230,9 @@ fn bench_shared_fleet(shards: usize, private_rate: f64) -> FleetPoint {
         rows_per_worker: m,
         shards,
         wait: WaitPolicy::Fixed(Duration::from_micros(200)),
+        // the pool gate is on the dispatch path even without publishes:
+        // bench it in its default configuration
+        epoch: EpochMode::Pool,
         obs_dim: 17,
         act_dim: 6,
     }));

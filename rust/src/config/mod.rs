@@ -180,6 +180,62 @@ impl InferWait {
     }
 }
 
+static LEGACY_INFER_WAIT_ONCE: std::sync::Once = std::sync::Once::new();
+
+/// Warn — exactly once per process, enforced by the `Once` — that
+/// `infer_max_wait_us` is the deprecated PR 2 spelling of
+/// `infer_wait = "fixed:<us>"`. Shared by the JSON loader and the CLI
+/// legacy-flag paths so repeated configs don't spam the log.
+pub fn warn_legacy_infer_max_wait_us() {
+    LEGACY_INFER_WAIT_ONCE.call_once(|| {
+        crate::log_warn!(
+            "`infer_max_wait_us` is deprecated; spell it `infer_wait`: \"fixed:<us>\" \
+             (or use the adaptive default)"
+        );
+    });
+}
+
+/// Whether the deprecation warning has fired (it can fire at most once
+/// per process by construction — the regression test asserts it does).
+pub fn legacy_infer_wait_warned() -> bool {
+    LEGACY_INFER_WAIT_ONCE.is_completed()
+}
+
+/// How the shared-inference pool adopts newly published policy versions
+/// (`--infer-epoch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferEpoch {
+    /// Pool-wide epochs (default): a learner publish becomes a *proposed*
+    /// epoch and ALL shards flip to the new snapshot on the same dispatch
+    /// boundary (`runtime::epoch::EpochGate`), so `--infer-shards` stays
+    /// a pure performance knob even across mid-run version changes.
+    Pool,
+    /// Each shard observes the policy store independently, once per
+    /// dispatch (the pre-epoch behavior): two shards may adopt a publish
+    /// a dispatch apart. Escape hatch for isolating gate behavior;
+    /// per-worker chunk streams stay single-version-per-chunk either way.
+    Shard,
+}
+
+impl InferEpoch {
+    /// Parse `"pool"` or `"shard"`.
+    pub fn parse(s: &str) -> Option<InferEpoch> {
+        match s {
+            "pool" => Some(InferEpoch::Pool),
+            "shard" => Some(InferEpoch::Shard),
+            _ => None,
+        }
+    }
+
+    /// CLI/JSON spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferEpoch::Pool => "pool",
+            InferEpoch::Shard => "shard",
+        }
+    }
+}
+
 /// PPO hyper-parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PpoCfg {
@@ -294,6 +350,11 @@ pub struct TrainConfig {
     /// Shared mode: the straggler-cut policy — when a shard dispatches a
     /// partial batch instead of waiting for late workers.
     pub infer_wait: InferWait,
+    /// Shared mode: how the pool adopts newly published policy versions
+    /// (`pool` = all shards flip on one dispatch boundary behind the
+    /// epoch gate, the default; `shard` = independent per-shard store
+    /// observation, the pre-epoch behavior).
+    pub infer_epoch: InferEpoch,
     /// Samples collected per iteration (paper: 20,000).
     pub samples_per_iter: usize,
     /// Training iterations to run.
@@ -341,6 +402,7 @@ impl Default for TrainConfig {
             inference_mode: InferenceMode::Local,
             infer_shards: InferShards::Auto,
             infer_wait: InferWait::Adaptive,
+            infer_epoch: InferEpoch::Pool,
             samples_per_iter: 20_000,
             iterations: 100,
             queue_capacity: 16,
@@ -464,6 +526,10 @@ impl TrainConfig {
         );
         m.insert("infer_wait".into(), Json::Str(self.infer_wait.name()));
         m.insert(
+            "infer_epoch".into(),
+            Json::Str(self.infer_epoch.name().into()),
+        );
+        m.insert(
             "samples_per_iter".into(),
             Json::Num(self.samples_per_iter as f64),
         );
@@ -566,7 +632,12 @@ impl TrainConfig {
             };
         } else if let Some(v) = j.opt("infer_max_wait_us") {
             // legacy (pre-shard) configs: a fixed straggler cut in us
+            warn_legacy_infer_max_wait_us();
             cfg.infer_wait = InferWait::Fixed(v.as_f64()? as u64);
+        }
+        if let Some(v) = j.opt("infer_epoch") {
+            cfg.infer_epoch = InferEpoch::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad infer_epoch {v:?}")))?;
         }
         if let Some(v) = j.opt("samples_per_iter") {
             cfg.samples_per_iter = v.as_usize()?;
@@ -708,6 +779,7 @@ mod tests {
         cfg.inference_mode = InferenceMode::Shared;
         cfg.infer_shards = InferShards::Fixed(2);
         cfg.infer_wait = InferWait::Fixed(750);
+        cfg.infer_epoch = InferEpoch::Shard;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cfg, back);
@@ -809,6 +881,46 @@ mod tests {
         assert_eq!(InferShards::Auto.resolve_with(2, 64), 1); // S <= N
         assert_eq!(InferShards::Fixed(4).resolve_with(16, 16), 4);
         assert_eq!(InferShards::Fixed(9).resolve_with(4, 16), 4); // clamp to N
+    }
+
+    #[test]
+    fn infer_epoch_parses_and_defaults_pool() {
+        assert_eq!(TrainConfig::default().infer_epoch, InferEpoch::Pool);
+        assert_eq!(InferEpoch::parse("pool"), Some(InferEpoch::Pool));
+        assert_eq!(InferEpoch::parse("shard"), Some(InferEpoch::Shard));
+        assert_eq!(InferEpoch::parse("tick"), None);
+        assert_eq!(InferEpoch::Pool.name(), "pool");
+        assert_eq!(InferEpoch::Shard.name(), "shard");
+        let j = Json::parse(r#"{"infer_epoch": "shard"}"#).unwrap();
+        assert_eq!(
+            TrainConfig::from_json(&j).unwrap().infer_epoch,
+            InferEpoch::Shard
+        );
+        assert!(TrainConfig::from_json(&Json::parse(r#"{"infer_epoch": "x"}"#).unwrap())
+            .is_err());
+    }
+
+    /// Satellite regression: the pre-shard `infer_max_wait_us` key still
+    /// round-trips as `InferWait::Fixed` and fires its deprecation
+    /// warning exactly once per process no matter how often it parses.
+    #[test]
+    fn legacy_infer_max_wait_us_round_trips_and_warns_once() {
+        let j = Json::parse(r#"{"infer_max_wait_us": 750}"#).unwrap();
+        let cfg = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.infer_wait, InferWait::Fixed(750));
+        // the modern spelling comes back out of to_json and parses to the
+        // same policy
+        let back =
+            TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.infer_wait, InferWait::Fixed(750));
+        assert_eq!(back, cfg);
+        // parse the legacy key again: the warning fired, and the Once
+        // guarantees it can never fire a second time
+        let _ = TrainConfig::from_json(
+            &Json::parse(r#"{"infer_max_wait_us": 10}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(legacy_infer_wait_warned());
     }
 
     #[test]

@@ -191,6 +191,18 @@ pub struct InferenceReport {
     /// dispatch — shows what the adaptive policy converged to (constant
     /// under `--infer-wait fixed:<us>`).
     pub cut_us: Histogram,
+    /// Per dispatch: how many versions the served snapshot lagged the
+    /// newest publish (0 = fresh). Under `--infer-epoch pool` a non-zero
+    /// entry means a publish was parked behind the flip barrier for that
+    /// dispatch; under `--infer-epoch shard` it is raw observation
+    /// staleness.
+    pub epoch_lag: Histogram,
+    /// Microseconds a shard spent parked at the pool epoch barrier while
+    /// waiting for its peers to drain (recorded only on acquires that
+    /// actually stalled; empty in `--infer-epoch shard` mode). Bounded
+    /// per flip by one straggler-cut window, or the serve loop's ~5ms
+    /// idle poll when a peer shard happens to be idle.
+    pub flip_stall_us: Histogram,
 }
 
 impl InferenceReport {
@@ -221,6 +233,10 @@ impl InferenceReport {
             fill_ratio: Histogram::new(&[0.125, 0.25, 0.5, 0.75, 0.9, 1.0]),
             queue_wait_us: Histogram::new(&[10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 5000.0]),
             cut_us: Histogram::new(&[10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 10_000.0]),
+            epoch_lag: Histogram::new(&[0.0, 1.0, 2.0, 4.0, 8.0, 16.0]),
+            flip_stall_us: Histogram::new(&[
+                10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 5000.0, 10_000.0,
+            ]),
         }
     }
 
@@ -238,6 +254,8 @@ impl InferenceReport {
         self.fill_ratio.merge(&other.fill_ratio);
         self.queue_wait_us.merge(&other.queue_wait_us);
         self.cut_us.merge(&other.cut_us);
+        self.epoch_lag.merge(&other.epoch_lag);
+        self.flip_stall_us.merge(&other.flip_stall_us);
     }
 
     /// Mean fraction of the shard batch filled per forward.
@@ -258,7 +276,9 @@ impl InferenceReport {
              dispatch rows: {}\n\
              batch fill:    {}\n\
              queue wait us: {}\n\
-             cut budget us: {}",
+             cut budget us: {}\n\
+             epoch lag:     {}\n\
+             flip stall us: {}",
             self.forwards,
             self.rows,
             self.fleet_rows,
@@ -271,7 +291,9 @@ impl InferenceReport {
             self.dispatch_rows.summary(),
             self.fill_ratio.summary(),
             self.queue_wait_us.summary(),
-            self.cut_us.summary()
+            self.cut_us.summary(),
+            self.epoch_lag.summary(),
+            self.flip_stall_us.summary()
         )
     }
 
@@ -292,6 +314,8 @@ impl InferenceReport {
             ("fill_ratio", self.fill_ratio.to_json()),
             ("queue_wait_us", self.queue_wait_us.to_json()),
             ("cut_us", self.cut_us.to_json()),
+            ("epoch_lag", self.epoch_lag.to_json()),
+            ("flip_stall_us", self.flip_stall_us.to_json()),
         ])
     }
 }
@@ -583,6 +607,24 @@ mod tests {
         assert!(j.contains("\"shards\""));
         assert!(j.contains("\"hot_allocs\""));
         assert!(j.contains("\"cut_us\""));
+        assert!(j.contains("\"epoch_lag\""));
+        assert!(j.contains("\"flip_stall_us\""));
+    }
+
+    /// The epoch histograms merge across shards like every other report
+    /// field (identical fixed bounds regardless of shard capacity).
+    #[test]
+    fn epoch_histograms_merge_across_uneven_shards() {
+        let mut a = InferenceReport::with_bounds(6, 6);
+        let mut b = InferenceReport::with_bounds(4, 6);
+        a.epoch_lag.record(0.0);
+        a.flip_stall_us.record(120.0);
+        b.epoch_lag.record(1.0);
+        a.merge(&b);
+        assert_eq!(a.epoch_lag.count(), 2);
+        assert_eq!(a.flip_stall_us.count(), 1);
+        assert!(a.render().contains("epoch lag:"));
+        assert!(a.render().contains("flip stall us:"));
     }
 
     /// An empty histogram (e.g. cut_us when no timeout dispatch ever

@@ -7,7 +7,7 @@
 //! and shuts everything down cleanly (the WALL-E launcher in Fig 2).
 
 use crate::algo::rollout::ExperienceChunk;
-use crate::config::{Algo, InferWait, InferenceMode, TrainConfig};
+use crate::config::{Algo, InferEpoch, InferWait, InferenceMode, TrainConfig};
 use crate::coordinator::learner::{DdpgLearner, PpoLearner};
 use crate::coordinator::metrics::{InferenceReport, IterationMetrics, MetricsLog};
 use crate::coordinator::policy_store::PolicyStore;
@@ -18,9 +18,12 @@ use crate::coordinator::sampler::{
 };
 use crate::env::registry::make_env;
 use crate::env::vec_env::VecEnv;
-use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
+use crate::runtime::epoch::EpochMode;
+use crate::runtime::inference_server::{
+    ActorClient, InferencePool, InferencePoolCfg, WaitPolicy,
+};
 use crate::runtime::BackendFactory;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -88,6 +91,10 @@ pub fn run(
                     InferWait::Adaptive => WaitPolicy::Adaptive,
                     InferWait::Fixed(us) => WaitPolicy::Fixed(Duration::from_micros(us)),
                 },
+                epoch: match cfg.infer_epoch {
+                    InferEpoch::Pool => EpochMode::Pool,
+                    InferEpoch::Shard => EpochMode::Shard,
+                },
                 obs_dim: factory.obs_dim(),
                 act_dim: factory.act_dim(),
             }))),
@@ -118,6 +125,7 @@ pub fn run(
         // dynamics streams are numbered globally (worker id * M + slot,
         // offset by 1), so a trajectory is pinned to its global slot
         // regardless of how envs are packed onto workers.
+        let live_samplers = Arc::new(AtomicUsize::new(cfg.samplers));
         let mut handles = Vec::new();
         for id in 0..cfg.samplers {
             let scfg = SamplerCfg {
@@ -134,79 +142,46 @@ pub fn run(
             let algo = cfg.algo;
             let explore = cfg.ddpg.explore_noise;
             let client = clients[id].take();
+            let live = live_samplers.clone();
             handles.push(scope.spawn(move || -> anyhow::Result<SamplerReport> {
-                let venv = VecEnv::from_registry(
-                    &env_name,
-                    m,
-                    scfg.seed,
-                    (id * m) as u64 + 1,
-                )?;
-                match algo {
-                    Algo::Ppo => {
-                        let source = match client {
-                            Some(c) => PpoPolicySource::Shared(c),
-                            None => PpoPolicySource::Local(factory.make_actor_batched(m)?),
-                        };
-                        Ok(run_ppo_sampler_from(scfg, venv, source, store, queue, stop))
-                    }
-                    Algo::Ddpg => {
-                        let source = match client {
-                            Some(c) => DdpgPolicySource::Shared(c),
-                            None => {
-                                DdpgPolicySource::Local(factory.make_ddpg_actor_batched(m)?)
-                            }
-                        };
-                        Ok(run_ddpg_sampler_from(
-                            scfg, venv, source, explore, store, queue, stop,
-                        ))
-                    }
-                }
+                // drop guard, NOT ordinary post-code: a worker that
+                // panics (instead of returning an error) must still
+                // decrement the live count and trip the queue close, or
+                // the learner would inherit the very hang this PR closes
+                let _guard = FleetGuard {
+                    id,
+                    live,
+                    sync: sync_budget.is_some(),
+                    queue,
+                    stop,
+                };
+                run_sampler_worker(
+                    scfg, m, &env_name, algo, explore, client, factory, store, queue, stop,
+                )
             }));
         }
 
         // ---- learner (this thread) -------------------------------------
-        let final_params = match cfg.algo {
-            Algo::Ppo => {
-                let backend = factory.make_ppo_learner()?;
-                let shards = if cfg.learner_shards > 1 {
-                    (0..cfg.learner_shards)
-                        .map(|_| factory.make_ppo_learner())
-                        .collect::<anyhow::Result<Vec<_>>>()?
-                } else {
-                    Vec::new()
-                };
-                let mut learner = PpoLearner::new(
-                    backend,
-                    shards,
-                    factory.init_ppo_params(cfg.seed),
-                    factory.obs_dim(),
-                    cfg.seed,
-                );
-                learner.publish_initial(&store);
-                for iter in 0..cfg.iterations {
-                    let m = learner.iteration(iter, cfg, &queue, &store)?;
-                    log.push(m);
+        let final_params = match run_learner(cfg, factory, &queue, &store, log) {
+            Ok(p) => p,
+            Err(e) => {
+                // A learner failure must still release the samplers and
+                // inference shards before propagating — the scope join
+                // below would otherwise wait forever on workers that were
+                // never told to stop (the hang class this PR closes).
+                stop.store(true, Ordering::Relaxed);
+                queue.close();
+                // Join the scoped threads ourselves, discarding their
+                // results: leaving a panicked serve thread to the scope's
+                // implicit join would re-raise the panic and turn this
+                // reported error into a process abort.
+                for h in handles {
+                    let _ = h.join();
                 }
-                learner.state.flat.clone()
-            }
-            Algo::Ddpg => {
-                let backend = factory.make_ddpg_learner()?;
-                let (actor, critic) = factory.init_ddpg_params(cfg.seed);
-                let mut learner = DdpgLearner::new(
-                    backend,
-                    actor,
-                    critic,
-                    factory.obs_dim(),
-                    factory.act_dim(),
-                    cfg.ddpg.replay_capacity,
-                    cfg.seed,
-                );
-                learner.publish_initial(&store);
-                for iter in 0..cfg.iterations {
-                    let m = learner.iteration(iter, cfg, &queue, &store)?;
-                    log.push(m);
+                for h in server_handles {
+                    let _ = h.join();
                 }
-                learner.state.actor.clone()
+                return Err(e);
             }
         };
 
@@ -217,15 +192,39 @@ pub fn run(
         store.publish(final_params.clone(), crate::algo::normalizer::NormSnapshot::identity(
             factory.obs_dim(),
         ));
+        // Join EVERY scoped thread before surfacing the first failure:
+        // early-returning on the first bad join would leave later
+        // panicked threads to the scope's implicit join, which re-raises
+        // their panic and turns a reportable error into a process abort.
         let mut reports = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
         for h in handles {
-            reports.push(h.join().map_err(|_| anyhow::anyhow!("sampler panicked"))??);
+            match h.join() {
+                Ok(Ok(report)) => reports.push(report),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(|| anyhow::anyhow!("sampler panicked"));
+                }
+            }
         }
         // each shard's serve loop exits once all ITS workers drop their
         // client handles
         for h in server_handles {
-            h.join()
-                .map_err(|_| anyhow::anyhow!("inference shard panicked"))??;
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err
+                        .get_or_insert_with(|| anyhow::anyhow!("inference shard panicked"));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
         }
 
         result = Some(RunResult {
@@ -244,6 +243,136 @@ pub fn run(
     })?;
 
     Ok(result.expect("run result set"))
+}
+
+/// Worker-exit supervision, armed as a drop guard so it fires on panics
+/// too. A worker exiting before shutdown died on an error: the async
+/// fleet can absorb losses until the LAST worker is gone, but in sync
+/// mode ANY loss makes the per-iteration budget unreachable (survivors
+/// park at their own budget waiting for a publish that needs the full
+/// budget first) — so fail fast by closing the experience queue: the
+/// learner's blocking collect errors loudly instead of waiting forever
+/// for chunks that can never arrive. A worker that merely unwound
+/// because the queue was ALREADY closed by a real failure stays silent.
+struct FleetGuard<'a> {
+    id: usize,
+    live: Arc<AtomicUsize>,
+    sync: bool,
+    queue: &'a Channel<ExperienceChunk>,
+    stop: &'a AtomicBool,
+}
+
+impl Drop for FleetGuard<'_> {
+    fn drop(&mut self) {
+        let last = self.live.fetch_sub(1, Ordering::SeqCst) == 1;
+        if !self.stop.load(Ordering::Relaxed)
+            && !self.queue.is_closed()
+            && (last || self.sync)
+        {
+            crate::log_error!(
+                "sampler worker {} terminated mid-run ({}); closing the experience queue",
+                self.id,
+                if last { "fleet empty" } else { "sync budget unreachable" }
+            );
+            self.queue.close();
+        }
+    }
+}
+
+/// One sampler worker body: build the env + policy source and run the
+/// algorithm loop. Factored out of [`run`] so the spawn closure can arm
+/// the [`FleetGuard`] supervision around it.
+#[allow(clippy::too_many_arguments)]
+fn run_sampler_worker(
+    scfg: SamplerCfg,
+    m: usize,
+    env_name: &str,
+    algo: Algo,
+    explore: f32,
+    client: Option<ActorClient>,
+    factory: &dyn BackendFactory,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> anyhow::Result<SamplerReport> {
+    let id = scfg.id;
+    let venv = VecEnv::from_registry(env_name, m, scfg.seed, (id * m) as u64 + 1)?;
+    match algo {
+        Algo::Ppo => {
+            let source = match client {
+                Some(c) => PpoPolicySource::Shared(c),
+                None => PpoPolicySource::Local(factory.make_actor_batched(m)?),
+            };
+            Ok(run_ppo_sampler_from(scfg, venv, source, store, queue, stop))
+        }
+        Algo::Ddpg => {
+            let source = match client {
+                Some(c) => DdpgPolicySource::Shared(c),
+                None => DdpgPolicySource::Local(factory.make_ddpg_actor_batched(m)?),
+            };
+            Ok(run_ddpg_sampler_from(
+                scfg, venv, source, explore, store, queue, stop,
+            ))
+        }
+    }
+}
+
+/// Build the learner for `cfg.algo` and drive every training iteration on
+/// the calling thread, returning the final policy parameters. Factored
+/// out of [`run`] so a learner failure can be intercepted to release the
+/// worker fleet before the thread scope joins (otherwise the join would
+/// wait forever on samplers that were never told to stop).
+fn run_learner(
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    queue: &Channel<ExperienceChunk>,
+    store: &PolicyStore,
+    log: &mut MetricsLog,
+) -> anyhow::Result<Vec<f32>> {
+    match cfg.algo {
+        Algo::Ppo => {
+            let backend = factory.make_ppo_learner()?;
+            let shards = if cfg.learner_shards > 1 {
+                (0..cfg.learner_shards)
+                    .map(|_| factory.make_ppo_learner())
+                    .collect::<anyhow::Result<Vec<_>>>()?
+            } else {
+                Vec::new()
+            };
+            let mut learner = PpoLearner::new(
+                backend,
+                shards,
+                factory.init_ppo_params(cfg.seed),
+                factory.obs_dim(),
+                cfg.seed,
+            );
+            learner.publish_initial(store);
+            for iter in 0..cfg.iterations {
+                let m = learner.iteration(iter, cfg, queue, store)?;
+                log.push(m);
+            }
+            Ok(learner.state.flat.clone())
+        }
+        Algo::Ddpg => {
+            let backend = factory.make_ddpg_learner()?;
+            let (actor, critic) = factory.init_ddpg_params(cfg.seed);
+            let mut learner = DdpgLearner::new(
+                backend,
+                actor,
+                critic,
+                factory.obs_dim(),
+                factory.act_dim(),
+                cfg.ddpg.replay_capacity,
+                cfg.seed,
+            );
+            learner.publish_initial(store);
+            for iter in 0..cfg.iterations {
+                let m = learner.iteration(iter, cfg, queue, store)?;
+                log.push(m);
+            }
+            Ok(learner.state.actor.clone())
+        }
+    }
 }
 
 #[cfg(test)]
@@ -493,5 +622,64 @@ mod tests {
         let f = factory(&cfg);
         let mut log = MetricsLog::quiet();
         assert!(run(&cfg, &f, &mut log).is_err());
+    }
+
+    #[test]
+    fn shard_epoch_escape_hatch_completes_without_gate() {
+        let mut cfg = tiny_cfg(4, true);
+        cfg.envs_per_sampler = 2;
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_shards = crate::config::InferShards::Fixed(2);
+        cfg.infer_wait = InferWait::Fixed(500);
+        cfg.infer_epoch = crate::config::InferEpoch::Shard;
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        let rep = r.infer.expect("shared run must carry a report");
+        assert_eq!(rep.shards, 2);
+        // gateless shards never park at a flip barrier
+        assert_eq!(rep.flip_stall_us.count(), 0);
+        // but observation staleness is still recorded per dispatch
+        assert_eq!(rep.epoch_lag.count(), rep.forwards);
+    }
+
+    /// Acceptance criterion: a forced serve-thread panic at S=2
+    /// terminates the run with a logged error — the dead shard's workers
+    /// unwind instead of deadlocking on their completion slots, the
+    /// surviving shard keeps feeding the learner to completion, and the
+    /// orchestrator surfaces the dead shard as a run error.
+    #[test]
+    fn shard_panic_terminates_run_instead_of_deadlocking() {
+        use crate::runtime::test_support::PanickingSharedFactory;
+
+        let mut cfg = tiny_cfg(4, true);
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_shards = crate::config::InferShards::Fixed(2);
+        cfg.infer_wait = InferWait::Fixed(500);
+        // the first shard to build its shared actor dies after 25 forwards
+        let f = PanickingSharedFactory::new(factory(&cfg), 25);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log);
+        assert!(r.is_err(), "run must terminate with an error, not hang");
+    }
+
+    /// Sync-mode variant of the shard-panic acceptance test: with half
+    /// the fleet dead the per-iteration budget is unreachable, so the
+    /// surviving workers' budget barrier + the learner's blocking collect
+    /// would deadlock forever — any mid-run worker death in sync mode
+    /// must close the queue and fail the run instead.
+    #[test]
+    fn shard_panic_terminates_sync_run_instead_of_deadlocking() {
+        use crate::runtime::test_support::PanickingSharedFactory;
+
+        let mut cfg = tiny_cfg(4, false); // sync barrier mode
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_shards = crate::config::InferShards::Fixed(2);
+        cfg.infer_wait = InferWait::Fixed(500);
+        let f = PanickingSharedFactory::new(factory(&cfg), 25);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log);
+        assert!(r.is_err(), "sync run must fail loudly, not deadlock");
     }
 }

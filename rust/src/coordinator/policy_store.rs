@@ -8,6 +8,7 @@
 //! (version check = one atomic load) and clone the Arc only on change.
 
 use crate::algo::normalizer::NormSnapshot;
+use crate::util::{cv_wait, plock};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -38,6 +39,9 @@ impl PolicyStore {
     }
 
     /// Publish new parameters; returns the new version (monotonic).
+    /// Poison-tolerant: the slot always holds a complete snapshot, so a
+    /// reader or writer that panicked elsewhere must not wedge the whole
+    /// policy broadcast.
     pub fn publish(&self, params: Vec<f32>, norm: NormSnapshot) -> u64 {
         let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
         let snap = Arc::new(PolicySnapshot {
@@ -45,7 +49,7 @@ impl PolicyStore {
             params: Arc::new(params),
             norm,
         });
-        *self.slot.lock().unwrap() = Some(snap);
+        *plock(&self.slot) = Some(snap);
         self.changed.notify_all();
         v
     }
@@ -62,12 +66,12 @@ impl PolicyStore {
 
     /// Get the latest snapshot (None before the first publish).
     pub fn latest(&self) -> Option<Arc<PolicySnapshot>> {
-        self.slot.lock().unwrap().clone()
+        plock(&self.slot).clone()
     }
 
     /// Block until a version newer than `seen` is published (or timeout).
     pub fn wait_newer(&self, seen: u64, timeout: Duration) -> Option<Arc<PolicySnapshot>> {
-        let mut g = self.slot.lock().unwrap();
+        let mut g = plock(&self.slot);
         let deadline = std::time::Instant::now() + timeout;
         loop {
             if let Some(s) = g.as_ref() {
@@ -79,8 +83,7 @@ impl PolicyStore {
             if now >= deadline {
                 return None;
             }
-            let (guard, _r) = self.changed.wait_timeout(g, deadline - now).unwrap();
-            g = guard;
+            g = cv_wait(&self.changed, g, deadline - now);
         }
     }
 }

@@ -8,6 +8,7 @@
 //! implementation also exports occupancy/block statistics that feed the
 //! Fig 6 time-accounting.
 
+use crate::util::{cv_wait, cv_wait_untimed, plock};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -80,7 +81,7 @@ impl<T> Channel<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        plock(&self.inner).buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -90,9 +91,9 @@ impl<T> Channel<T> {
     /// Blocking push; returns Err once the channel is closed.
     pub fn push(&self, item: T) -> Result<(), ChannelClosed> {
         let t0 = Instant::now();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         while g.buf.len() >= self.capacity && !g.closed {
-            g = self.not_full.wait(g).unwrap();
+            g = cv_wait_untimed(&self.not_full, g);
         }
         if g.closed {
             return Err(ChannelClosed::Closed);
@@ -108,7 +109,7 @@ impl<T> Channel<T> {
 
     /// Non-blocking push; Ok(false) when full.
     pub fn try_push(&self, item: T) -> Result<bool, ChannelClosed> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         if g.closed {
             return Err(ChannelClosed::Closed);
         }
@@ -125,7 +126,7 @@ impl<T> Channel<T> {
     /// Blocking pop; returns Err once the channel is closed *and* drained.
     pub fn pop(&self) -> Result<T, ChannelClosed> {
         let t0 = Instant::now();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         loop {
             if let Some(item) = g.buf.pop_front() {
                 drop(g);
@@ -138,13 +139,13 @@ impl<T> Channel<T> {
             if g.closed {
                 return Err(ChannelClosed::Closed);
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = cv_wait_untimed(&self.not_empty, g);
         }
     }
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Result<Option<T>, ChannelClosed> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         match g.buf.pop_front() {
             Some(item) => {
                 drop(g);
@@ -160,7 +161,7 @@ impl<T> Channel<T> {
     /// Pop with a timeout; Ok(None) on timeout.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ChannelClosed> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         loop {
             if let Some(item) = g.buf.pop_front() {
                 drop(g);
@@ -175,23 +176,29 @@ impl<T> Channel<T> {
             if now >= deadline {
                 return Ok(None);
             }
-            let (guard, _res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
-            g = guard;
+            g = cv_wait(&self.not_empty, g, deadline - now);
         }
     }
 
     /// Close the channel: producers fail immediately; consumers drain the
     /// remaining items, then get Err.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        plock(&self.inner).closed = true;
         self.not_full.notify_all();
         self.not_empty.notify_all();
+    }
+
+    /// Whether the channel has been closed (supervision probe: lets an
+    /// exiting producer tell "I hit a fresh failure" apart from "I
+    /// unwound because someone else already closed the channel").
+    pub fn is_closed(&self) -> bool {
+        plock(&self.inner).closed
     }
 
     /// Discard all queued items (used when a fresh policy makes queued
     /// experience stale in sync mode). Returns the number dropped.
     pub fn drain(&self) -> usize {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = plock(&self.inner);
         let n = g.buf.len();
         g.buf.clear();
         drop(g);
@@ -225,7 +232,9 @@ mod tests {
         let ch2 = ch.clone();
         let h = thread::spawn(move || ch2.push(3)); // blocks: full
         thread::sleep(Duration::from_millis(20));
+        assert!(!ch.is_closed());
         ch.close();
+        assert!(ch.is_closed());
         assert_eq!(h.join().unwrap(), Err(ChannelClosed::Closed));
         // consumers drain remaining items then see Closed
         assert_eq!(ch.pop().unwrap(), 1);

@@ -39,12 +39,15 @@
 //! * **Shared** — the worker submits its raw M-row slab to the shared
 //!   inference server through an `ActorClient` and blocks on the
 //!   response, which carries the rows' outputs, the server-normalized
-//!   obs, and the policy snapshot the dispatch used. Refresh is
-//!   server-driven: when a response's version moves past the version of
-//!   the rows buffered so far, the worker cuts every non-empty chunk
-//!   *before* appending the new tick (a `Continuation` bootstrapped with
-//!   this tick's V(s_t)), preserving one-policy-version-per-chunk without
-//!   any worker-side store polling.
+//!   obs, and the `(epoch, version)` of the dispatch. Refresh is
+//!   server-driven: when a response's pool epoch (or, gateless, its
+//!   snapshot version) moves past that of the rows buffered so far, the
+//!   worker cuts every non-empty chunk *before* appending the new tick
+//!   (a `Continuation` bootstrapped with this tick's V(s_t)), preserving
+//!   one-policy-version-per-chunk without any worker-side store polling.
+//!   Under `--infer-epoch pool` the epoch moves on the same dispatch
+//!   boundary for every shard, so the cut tick is fleet-consistent even
+//!   at S > 1.
 //!
 //! Under a fixed policy version the two modes produce bitwise-identical
 //! per-env chunk streams (the MLP forward is row-independent; see the
@@ -438,6 +441,9 @@ pub fn run_ppo_sampler_from(
         None => return report,
     };
     let mut produced_for_version = 0usize;
+    // pool epoch of the buffered rows (shared mode; 0 = not yet observed
+    // or gateless server, where the snapshot version alone drives cuts)
+    let mut policy_epoch = 0u64;
 
     // per-env policy-noise streams: disjoint from env dynamics streams and
     // pinned to the global env slot, so trajectories don't depend on M.
@@ -490,7 +496,12 @@ pub fn run_ppo_sampler_from(
                 // the server normalized our rows under its dispatch
                 // snapshot — record those, they are what the policy saw
                 obs_in[..m * obs_dim].copy_from_slice(resp.norm_obs());
-                if resp.snapshot.version != policy.version {
+                // epoch-driven cut: under the pool gate the epoch moves on
+                // the same dispatch boundary for every shard; a gateless
+                // server reports epoch 0 and the version comparison alone
+                // decides (the pre-epoch behavior)
+                let version_moved = resp.snapshot.version != policy.version;
+                if version_moved || (policy_epoch != 0 && resp.epoch != policy_epoch) {
                     // server-driven refresh: cut buffered (old-version)
                     // chunks before this tick's rows join them
                     if !flush_version_cut(
@@ -506,8 +517,14 @@ pub fn run_ppo_sampler_from(
                     window_ticks = 0;
                     produced_for_version = 0;
                     policy = resp.snapshot.clone();
-                    report.policy_refreshes += 1;
+                    // an epoch flip whose version the worker already
+                    // adopted from the store (sync-mode refresh) is not a
+                    // second refresh — count only real version moves
+                    if version_moved {
+                        report.policy_refreshes += 1;
+                    }
                 }
+                policy_epoch = resp.epoch;
                 let sb = resp.server_busy_secs;
                 (PpoTickOut::Shared(resp), sb)
             }
@@ -728,6 +745,8 @@ pub fn run_ddpg_sampler_from(
     let mut bufs: Vec<ChunkBuf> = (0..m).map(|_| ChunkBuf::new(obs_dim)).collect();
     let mut window_ticks = 0usize;
     let mut produced_for_version = 0usize;
+    // pool epoch of the buffered rows (see the PPO loop)
+    let mut policy_epoch = 0u64;
 
     venv.reset_all();
 
@@ -756,7 +775,9 @@ pub fn run_ddpg_sampler_from(
                     }
                 };
                 obs_in[..m * obs_dim].copy_from_slice(resp.norm_obs());
-                if resp.snapshot.version != policy.version {
+                // epoch-driven cut (see the PPO loop for the rule)
+                let version_moved = resp.snapshot.version != policy.version;
+                if version_moved || (policy_epoch != 0 && resp.epoch != policy_epoch) {
                     // server-driven refresh: close out old-version chunks
                     // (with their s' rows) before this tick appends
                     if !ddpg_flush_version_cut(
@@ -772,8 +793,12 @@ pub fn run_ddpg_sampler_from(
                     window_ticks = 0;
                     produced_for_version = 0;
                     policy = resp.snapshot.clone();
-                    report.policy_refreshes += 1;
+                    // count only real version moves (see the PPO loop)
+                    if version_moved {
+                        report.policy_refreshes += 1;
+                    }
                 }
+                policy_epoch = resp.epoch;
                 let sb = resp.server_busy_secs;
                 (DdpgTickOut::Shared(resp), sb)
             }
@@ -1081,6 +1106,7 @@ mod tests {
     /// leave every trajectory untouched.
     #[test]
     fn shard_count_does_not_change_ppo_chunk_streams() {
+        use crate::runtime::epoch::EpochMode;
         use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
         use std::collections::BTreeMap;
 
@@ -1102,6 +1128,7 @@ mod tests {
                     rows_per_worker: m,
                     shards: s,
                     wait: WaitPolicy::Fixed(Duration::from_millis(5)),
+                    epoch: EpochMode::Pool,
                     obs_dim: 3,
                     act_dim: 1,
                 }))
@@ -1204,6 +1231,7 @@ mod tests {
     /// actor.
     #[test]
     fn shard_count_does_not_change_ddpg_chunk_streams() {
+        use crate::runtime::epoch::EpochMode;
         use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
         use std::collections::BTreeMap;
 
@@ -1225,6 +1253,7 @@ mod tests {
                     rows_per_worker: m,
                     shards: s,
                     wait: WaitPolicy::Fixed(Duration::from_millis(5)),
+                    epoch: EpochMode::Pool,
                     obs_dim: 3,
                     act_dim: 1,
                 }))
@@ -1513,5 +1542,209 @@ mod tests {
         // actions are clipped
         assert!(c.act.iter().all(|a| a.abs() <= 1.0));
         assert!(c.env_slot < 2);
+    }
+
+    // ---------------------------------------------- cross-flip equivalence
+
+    /// Run N sync-mode workers (local backends, or the sharded pool with
+    /// its epoch gate) against a scripted sequence of policy publishes
+    /// and collect every chunk keyed by (worker, env slot).
+    ///
+    /// The pseudo-learner publishes version k+1 only once EVERY worker
+    /// has delivered its full per-version sample budget under version k —
+    /// the sync-mode contract — which pins each version flip to a
+    /// deterministic sim tick. That determinism is what lets the streams
+    /// be compared bitwise across shard counts AND against local mode
+    /// *across* publishes; async flips land on wall-clock-dependent ticks
+    /// and can only ever be compared within one version.
+    fn collect_across_flips(
+        ddpg: bool,
+        shards: Option<usize>,
+        n: usize,
+        m: usize,
+        budget: usize,
+        versions: usize,
+    ) -> std::collections::BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+        use crate::runtime::epoch::EpochMode;
+        use crate::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
+        use std::collections::BTreeMap;
+
+        let store = Arc::new(PolicyStore::new());
+        let queue = Arc::new(Channel::new(256));
+        let stop = Arc::new(AtomicBool::new(false));
+        // scripted parameter versions, fully predetermined by their seed
+        let params_for = |v: usize| -> Vec<f32> {
+            if ddpg {
+                pendulum_factory().init_ddpg_params(v as u64).0
+            } else {
+                pendulum_factory().init_ppo_params(v as u64)
+            }
+        };
+        store.publish(params_for(0), NormSnapshot::identity(3));
+
+        let pool = shards.map(|s| {
+            Arc::new(InferencePool::new(InferencePoolCfg {
+                workers: n,
+                rows_per_worker: m,
+                shards: s,
+                wait: WaitPolicy::Fixed(Duration::from_millis(2)),
+                epoch: EpochMode::Pool,
+                obs_dim: 3,
+                act_dim: 1,
+            }))
+        });
+        let mut clients: Vec<_> = (0..n)
+            .map(|id| pool.as_ref().map(|p| p.client(id)))
+            .collect();
+        let mut handles = Vec::new();
+        for id in 0..n {
+            let scfg = SamplerCfg {
+                id,
+                seed: 29,
+                chunk_steps: 40,
+                sync_budget: Some(budget),
+                reward_scale: 1.0,
+            };
+            let store2 = store.clone();
+            let queue2 = queue.clone();
+            let stop2 = stop.clone();
+            let client = clients[id].take();
+            handles.push(thread::spawn(move || {
+                let f = pendulum_factory();
+                let venv = pendulum_venv(id, m, scfg.seed);
+                if ddpg {
+                    let source = match client {
+                        Some(c) => DdpgPolicySource::Shared(c),
+                        None => DdpgPolicySource::Local(f.make_ddpg_actor_batched(m).unwrap()),
+                    };
+                    run_ddpg_sampler_from(scfg, venv, source, 0.1, &store2, &queue2, &stop2)
+                } else {
+                    let source = match client {
+                        Some(c) => PpoPolicySource::Shared(c),
+                        None => PpoPolicySource::Local(f.make_actor_batched(m).unwrap()),
+                    };
+                    run_ppo_sampler_from(scfg, venv, source, &store2, &queue2, &stop2)
+                }
+            }));
+        }
+        let server_hs: Vec<_> = pool
+            .as_ref()
+            .map(|p| {
+                p.shards()
+                    .iter()
+                    .map(|shard| {
+                        let shard = shard.clone();
+                        let store2 = store.clone();
+                        thread::spawn(move || {
+                            let f = pendulum_factory();
+                            if ddpg {
+                                shard.serve_ddpg(&f, &store2).unwrap();
+                            } else {
+                                shard.serve_ppo(&f, &store2).unwrap();
+                            }
+                        })
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        // the pseudo-learner: advance the scripted publishes on exact
+        // per-worker budgets
+        let mut streams: BTreeMap<(usize, usize), Vec<ExperienceChunk>> = BTreeMap::new();
+        for v in 1..=versions {
+            let mut got = vec![0usize; n];
+            while got.iter().any(|&g| g < budget) {
+                let c = queue.pop().unwrap();
+                assert_eq!(
+                    c.policy_version, v as u64,
+                    "chunk version drifted from the scripted schedule"
+                );
+                got[c.sampler_id] += c.len();
+                streams
+                    .entry((c.sampler_id, c.env_slot))
+                    .or_default()
+                    .push(c);
+            }
+            for (w, &g) in got.iter().enumerate() {
+                assert_eq!(g, budget, "worker {w} overshot its sync budget");
+            }
+            if v < versions {
+                store.publish(params_for(v), NormSnapshot::identity(3));
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for h in server_hs {
+            h.join().unwrap();
+        }
+        streams
+    }
+
+    fn assert_streams_equal(
+        label: &str,
+        a: &std::collections::BTreeMap<(usize, usize), Vec<ExperienceChunk>>,
+        b: &std::collections::BTreeMap<(usize, usize), Vec<ExperienceChunk>>,
+        versions: usize,
+    ) {
+        assert_eq!(a.len(), b.len(), "{label}: stream key sets differ");
+        for (key, ac) in a {
+            let bc = &b[key];
+            assert_eq!(ac.len(), bc.len(), "{label} {key:?}: chunk counts differ");
+            let seen: std::collections::BTreeSet<u64> =
+                ac.iter().map(|c| c.policy_version).collect();
+            let want: std::collections::BTreeSet<u64> = (1..=versions as u64).collect();
+            assert_eq!(
+                seen, want,
+                "{label} {key:?}: stream must span every scripted version"
+            );
+            for (x, y) in ac.iter().zip(bc) {
+                assert_eq!(x.policy_version, y.policy_version, "{label} {key:?}: version");
+                assert_eq!(x.obs, y.obs, "{label} {key:?}: obs diverged");
+                assert_eq!(x.act, y.act, "{label} {key:?}: actions diverged");
+                assert_eq!(x.rew, y.rew, "{label} {key:?}: rewards diverged");
+                assert_eq!(x.logp, y.logp, "{label} {key:?}: logp diverged");
+                assert_eq!(x.value, y.value, "{label} {key:?}: values diverged");
+                assert_eq!(x.end, y.end, "{label} {key:?}: chunk ends diverged");
+                assert_eq!(
+                    x.bootstrap_value, y.bootstrap_value,
+                    "{label} {key:?}: bootstraps diverged"
+                );
+            }
+        }
+    }
+
+    /// Tentpole acceptance: shard count is a pure performance knob even
+    /// ACROSS policy version flips. With flips pinned to deterministic
+    /// sim ticks (sync budgets driven by the scripted pseudo-learner),
+    /// the per-(worker, env) chunk streams — spanning two mid-run
+    /// publishes, v1 -> v2 -> v3, with an episode truncation inside the
+    /// final segment — are bitwise identical for local inference and the
+    /// epoch-gated pool at S = 1, 2 and 4 (N=4, M=2). This is exactly
+    /// the case PR 3's frozen-policy tests could not cover.
+    #[test]
+    fn version_flips_do_not_change_ppo_chunk_streams_across_shard_counts() {
+        let (n, m, budget, versions) = (4, 2, 160, 3);
+        let local = collect_across_flips(false, None, n, m, budget, versions);
+        for s in [1usize, 2, 4] {
+            let sharded = collect_across_flips(false, Some(s), n, m, budget, versions);
+            assert_streams_equal(&format!("ppo S={s}"), &local, &sharded, versions);
+        }
+    }
+
+    /// DDPG counterpart of the cross-flip acceptance test: replay chunk
+    /// streams (including the trailing normalized s' rows) are bitwise
+    /// identical for local vs S ∈ {1, 2, 4} across two scripted actor
+    /// publishes at N=4, M=2.
+    #[test]
+    fn version_flips_do_not_change_ddpg_chunk_streams_across_shard_counts() {
+        let (n, m, budget, versions) = (4, 2, 160, 3);
+        let local = collect_across_flips(true, None, n, m, budget, versions);
+        for s in [1usize, 2, 4] {
+            let sharded = collect_across_flips(true, Some(s), n, m, budget, versions);
+            assert_streams_equal(&format!("ddpg S={s}"), &local, &sharded, versions);
+        }
     }
 }

@@ -13,7 +13,7 @@
 //!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
 
 use walle::bench::figures;
-use walle::config::{Algo, Backend, InferShards, InferWait, InferenceMode, TrainConfig};
+use walle::config::{Algo, Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::coordinator::metrics::MetricsLog;
 use walle::coordinator::{eval, orchestrator};
 use walle::env::registry::{make_env, ENV_NAMES};
@@ -54,6 +54,11 @@ TRAIN FLAGS:
                          tracks inter-arrival gaps and dispatches when
                          waiting stops paying; `fixed:<us>` dispatches a
                          partial batch after exactly <us> microseconds
+  --infer-epoch MODE     shared mode version adoption: `pool` (default)
+                         flips every shard to a new policy version on the
+                         same dispatch boundary (shard count stays a pure
+                         performance knob across publishes); `shard` lets
+                         each shard observe the store independently
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo ppo|ddpg        learner algorithm
@@ -132,7 +137,12 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
             .ok_or_else(|| anyhow::anyhow!("bad --infer-wait {w:?} (adaptive or fixed:<us>)"))?;
     } else if args.has("infer-max-wait-us") {
         // legacy PR 2 spelling: a fixed straggler cut in microseconds
+        walle::config::warn_legacy_infer_max_wait_us();
         cfg.infer_wait = InferWait::Fixed(args.u64_or("infer-max-wait-us", 200)?);
+    }
+    if let Some(e) = args.get("infer-epoch") {
+        cfg.infer_epoch = InferEpoch::parse(e)
+            .ok_or_else(|| anyhow::anyhow!("bad --infer-epoch {e:?} (pool|shard)"))?;
     }
     cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;

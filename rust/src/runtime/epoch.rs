@@ -1,0 +1,373 @@
+//! Pool-wide policy epochs: the gate that makes `--infer-shards` a pure
+//! performance knob even while the learner publishes mid-run.
+//!
+//! PR 3's sharded [`InferencePool`](crate::runtime::inference_server::InferencePool)
+//! let every shard observe the [`PolicyStore`] independently, once per
+//! dispatch. Under a frozen policy that is invisible, but the moment the
+//! learner publishes, two shards could run the *same sim tick* under
+//! *different* parameter versions — per-worker chunk streams stayed
+//! single-version, yet the fleet-wide experience distribution depended on
+//! S (the exact divergence flagged in ROADMAP's Open items).
+//!
+//! The [`EpochGate`] closes that seam. One gate is shared by all S shards
+//! of a pool:
+//!
+//! 1. A learner publish does not reach shards directly — the first shard
+//!    to notice it lands it as a **proposed** epoch.
+//! 2. Each shard **acknowledges** the proposal at its next dispatch
+//!    boundary, a point where its previous window is fully drained (the
+//!    serve loop is synchronous: gather → forward → scatter). Idle shards
+//!    ack from their wait loop ([`EpochGate::poll`]); exiting shards
+//!    deregister ([`EpochGate::leave`]) so a dead peer can never wedge
+//!    the barrier.
+//! 3. Only when **every live shard** has acked does the gate **flip**:
+//!    the proposed snapshot becomes current, the pool epoch increments,
+//!    and all parked shards resume. Until then, acked shards block
+//!    ([`EpochGate::acquire`]) — the dispatch barrier that guarantees no
+//!    forward anywhere in the pool runs under the new version while
+//!    another shard still serves the old one.
+//!
+//! Every [`ActResponse`](crate::runtime::inference_server::ActResponse)
+//! carries the `(epoch, version)` pair of its dispatch, so sampler
+//! workers cut chunks on epoch movement instead of polling the store.
+//! The time a shard spends parked at the barrier is surfaced as the
+//! `flip_stall_us` histogram, and the staleness of the served snapshot
+//! against the newest publish as `epoch_lag` (both in
+//! [`InferenceReport`](crate::coordinator::metrics::InferenceReport)).
+//!
+//! The worst-case stall per flip is one straggler-cut window (a shard
+//! that is mid-gather finishes its window no later than the cut fires,
+//! then acks) or the serve loop's ~5ms idle poll for a shard with no
+//! pending requests, whichever applies. `--infer-epoch shard` bypasses
+//! the gate entirely and restores the PR 3 per-shard observation (an
+//! escape hatch; per-chunk single-version semantics hold either way).
+
+use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
+use crate::util::{cv_wait, plock};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How a shared-inference pool observes the [`PolicyStore`]
+/// (`--infer-epoch`, resolved from `config::InferEpoch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EpochMode {
+    /// Pool-wide epochs (default): a publish becomes a proposed epoch and
+    /// ALL shards flip to it on the same dispatch boundary.
+    Pool,
+    /// Each shard observes the store independently (the pre-epoch
+    /// behavior): shards may adopt a publish a dispatch apart.
+    Shard,
+}
+
+/// What [`EpochGate::acquire`] hands a shard for one dispatch.
+pub struct EpochLease {
+    /// Snapshot every row of the dispatch is evaluated under.
+    pub snapshot: Arc<PolicySnapshot>,
+    /// Pool epoch of the dispatch (1-based; bumps exactly once per
+    /// adopted publish, in lockstep across all shards).
+    pub epoch: u64,
+    /// Microseconds this shard spent parked at the flip barrier, when it
+    /// had to wait for peers on this acquire (None = no stall).
+    pub flip_stall_us: Option<f64>,
+}
+
+struct GateState {
+    /// Current pool epoch (0 until the first snapshot lands).
+    epoch: u64,
+    /// Snapshot every shard serves under the current epoch.
+    cur: Option<Arc<PolicySnapshot>>,
+    /// Snapshot parked behind the barrier (None = no flip in progress).
+    proposed: Option<Arc<PolicySnapshot>>,
+    /// Per-shard: reached a dispatch boundary since `proposed` landed.
+    acked: Vec<bool>,
+    /// Per-shard: still serving. A shard leaves on ANY exit path —
+    /// clean shutdown, backend error, or panic — so the barrier only
+    /// ever waits on shards that can still make progress.
+    live: Vec<bool>,
+    /// Completed flips (diagnostics and tests).
+    flips: u64,
+}
+
+impl GateState {
+    fn all_live_acked(&self) -> bool {
+        self.live.iter().zip(&self.acked).all(|(&l, &a)| !l || a)
+    }
+
+    /// Promote the proposed snapshot: current moves, epoch bumps, acks
+    /// reset for the next proposal cycle.
+    fn flip(&mut self) {
+        if let Some(next) = self.proposed.take() {
+            self.cur = Some(next);
+            self.epoch += 1;
+            self.flips += 1;
+            for a in self.acked.iter_mut() {
+                *a = false;
+            }
+        }
+    }
+
+    /// Adopt the very first snapshot barrier-free (there is no older
+    /// version anyone could be serving), or land a newer publish as the
+    /// proposal. Returns true while a proposal is pending. Intermediate
+    /// versions are superseded: the proposal is whatever the store holds
+    /// when it lands, and anything newer waits for the next cycle.
+    ///
+    /// The proposal decision is made on the SNAPSHOT's own version from a
+    /// single `latest()` read — never on `PolicyStore::version()`, which
+    /// is bumped before the slot is written and could otherwise race a
+    /// mid-publish learner into proposing the old snapshot (a spurious
+    /// epoch flip with an unchanged version). The atomic counter is used
+    /// only as a cheap pre-filter to skip the slot lock on the hot path.
+    fn observe(&mut self, store: &PolicyStore) -> bool {
+        match &self.cur {
+            None => {
+                if let Some(s) = store.latest() {
+                    self.cur = Some(s);
+                    self.epoch = 1;
+                }
+                false
+            }
+            Some(cur) => {
+                if self.proposed.is_none() && store.version() > cur.version {
+                    self.proposed = store.latest().filter(|s| s.version > cur.version);
+                }
+                self.proposed.is_some()
+            }
+        }
+    }
+}
+
+/// The pool-wide epoch barrier shared by all S shards (see the module
+/// docs for the protocol).
+pub struct EpochGate {
+    state: Mutex<GateState>,
+    changed: Condvar,
+}
+
+impl EpochGate {
+    pub fn new(shards: usize) -> EpochGate {
+        EpochGate {
+            state: Mutex::new(GateState {
+                epoch: 0,
+                cur: None,
+                proposed: None,
+                acked: vec![false; shards],
+                live: vec![true; shards],
+                flips: 0,
+            }),
+            changed: Condvar::new(),
+        }
+    }
+
+    /// Called by shard `shard` at a dispatch boundary (its previous
+    /// window fully drained): returns the snapshot + epoch for the next
+    /// dispatch. When a publish is parked behind the barrier this acks
+    /// the boundary and BLOCKS until every live shard has acked — no
+    /// shard dispatches under the new version while another still serves
+    /// the old one. Also blocks before the first publish (the pool has
+    /// nothing to serve yet).
+    pub fn acquire(&self, shard: usize, store: &PolicyStore) -> EpochLease {
+        let mut g = plock(&self.state);
+        let mut stalled: Option<Instant> = None;
+        loop {
+            let pending = g.observe(store);
+            if g.cur.is_some() {
+                if !pending {
+                    return EpochLease {
+                        snapshot: g.cur.clone().expect("checked above"),
+                        epoch: g.epoch,
+                        flip_stall_us: stalled.map(|t0| t0.elapsed().as_secs_f64() * 1e6),
+                    };
+                }
+                g.acked[shard] = true;
+                if g.all_live_acked() {
+                    g.flip();
+                    self.changed.notify_all();
+                    continue; // next pass returns the flipped snapshot
+                }
+                stalled.get_or_insert_with(Instant::now);
+            }
+            // park: waiting for the first publish or for peers to ack.
+            // The timeout is a safety valve (leave()/poll() notify on
+            // every state change), so a missed wakeup degrades to a
+            // bounded delay, never a hang.
+            g = cv_wait(&self.changed, g, Duration::from_millis(10));
+        }
+    }
+
+    /// Non-blocking participation for an idle shard (empty request
+    /// queue): lands proposals, acks its — trivially drained — boundary,
+    /// and completes the flip when it is the last acker. Called from the
+    /// serve loop's idle wait so a shard with parked workers (sync-mode
+    /// barrier, drained fleet) can never wedge the pool.
+    pub fn poll(&self, shard: usize, store: &PolicyStore) {
+        let mut g = plock(&self.state);
+        if g.observe(store) {
+            g.acked[shard] = true;
+            if g.all_live_acked() {
+                g.flip();
+            }
+            self.changed.notify_all();
+        }
+    }
+
+    /// Deregister an exiting shard (clean shutdown, backend error, or
+    /// panic — called from the shard's down path) so remaining shards can
+    /// still flip. Idempotent.
+    pub fn leave(&self, shard: usize) {
+        let mut g = plock(&self.state);
+        if !g.live[shard] {
+            return;
+        }
+        g.live[shard] = false;
+        g.acked[shard] = false;
+        if g.proposed.is_some() && g.live.iter().any(|&l| l) && g.all_live_acked() {
+            g.flip();
+        }
+        self.changed.notify_all();
+    }
+
+    /// Current pool epoch (0 before the first snapshot).
+    pub fn epoch(&self) -> u64 {
+        plock(&self.state).epoch
+    }
+
+    /// Completed barrier flips.
+    pub fn flips(&self) -> u64 {
+        plock(&self.state).flips
+    }
+
+    /// True while a publish is parked behind the barrier.
+    pub fn flip_pending(&self) -> bool {
+        plock(&self.state).proposed.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::normalizer::NormSnapshot;
+    use std::thread;
+
+    fn store_with(versions: usize) -> Arc<PolicyStore> {
+        let s = Arc::new(PolicyStore::new());
+        for v in 0..versions {
+            s.publish(vec![v as f32], NormSnapshot::identity(1));
+        }
+        s
+    }
+
+    #[test]
+    fn first_snapshot_adopts_without_barrier() {
+        let store = store_with(1);
+        let gate = EpochGate::new(2);
+        let lease = gate.acquire(0, &store);
+        assert_eq!(lease.epoch, 1);
+        assert_eq!(lease.snapshot.version, 1);
+        assert!(lease.flip_stall_us.is_none());
+        // the other shard needs no handshake either
+        let lease = gate.acquire(1, &store);
+        assert_eq!(lease.epoch, 1);
+        assert_eq!(gate.flips(), 0);
+    }
+
+    #[test]
+    fn flip_blocks_until_every_live_shard_acks() {
+        let store = store_with(1);
+        let gate = Arc::new(EpochGate::new(2));
+        gate.acquire(0, &store);
+        gate.acquire(1, &store);
+        store.publish(vec![9.0], NormSnapshot::identity(1));
+
+        let (g2, s2) = (gate.clone(), store.clone());
+        let h = thread::spawn(move || g2.acquire(0, &s2));
+        thread::sleep(Duration::from_millis(40));
+        // shard 1 has not acked: the pool must still be on epoch 1
+        assert_eq!(gate.epoch(), 1);
+        assert!(gate.flip_pending());
+
+        // the last acker completes the flip and goes straight through
+        let lease1 = gate.acquire(1, &store);
+        assert_eq!(lease1.epoch, 2);
+        assert_eq!(lease1.snapshot.version, 2);
+        let lease0 = h.join().unwrap();
+        assert_eq!(lease0.epoch, 2);
+        assert_eq!(lease0.snapshot.version, 2);
+        assert!(
+            lease0.flip_stall_us.unwrap() > 0.0,
+            "the parked shard must report its stall"
+        );
+        assert_eq!(gate.flips(), 1);
+        assert!(!gate.flip_pending());
+    }
+
+    #[test]
+    fn idle_poll_acks_and_completes_the_flip() {
+        let store = store_with(1);
+        let gate = Arc::new(EpochGate::new(2));
+        gate.acquire(0, &store);
+        gate.acquire(1, &store);
+        store.publish(vec![1.0], NormSnapshot::identity(1));
+
+        let (g2, s2) = (gate.clone(), store.clone());
+        let h = thread::spawn(move || g2.acquire(0, &s2));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(gate.epoch(), 1);
+        // shard 1 is idle (no pending slabs): its wait-loop poll must
+        // stand in for a dispatch-boundary ack
+        gate.poll(1, &store);
+        let lease = h.join().unwrap();
+        assert_eq!(lease.epoch, 2);
+        assert_eq!(gate.epoch(), 2);
+    }
+
+    #[test]
+    fn leave_releases_the_barrier() {
+        let store = store_with(1);
+        let gate = Arc::new(EpochGate::new(2));
+        gate.acquire(0, &store);
+        gate.acquire(1, &store);
+        store.publish(vec![1.0], NormSnapshot::identity(1));
+
+        let (g2, s2) = (gate.clone(), store.clone());
+        let h = thread::spawn(move || g2.acquire(0, &s2));
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(gate.epoch(), 1);
+        // shard 1 dies (panic/backend error): it must not wedge the pool
+        gate.leave(1);
+        gate.leave(1); // idempotent
+        let lease = h.join().unwrap();
+        assert_eq!(lease.epoch, 2);
+        assert_eq!(lease.snapshot.version, 2);
+    }
+
+    #[test]
+    fn superseded_versions_flip_once_to_the_newest() {
+        // two publishes land before the proposal cycle: single-slot
+        // semantics skip the intermediate version, one flip total
+        let store = store_with(1);
+        let gate = EpochGate::new(2);
+        gate.acquire(0, &store);
+        gate.acquire(1, &store);
+        store.publish(vec![1.0], NormSnapshot::identity(1)); // v2
+        store.publish(vec![2.0], NormSnapshot::identity(1)); // v3
+        gate.poll(0, &store);
+        let lease = gate.acquire(1, &store);
+        assert_eq!(lease.epoch, 2);
+        assert_eq!(lease.snapshot.version, 3);
+        assert_eq!(gate.flips(), 1);
+    }
+
+    #[test]
+    fn acquire_blocks_until_first_publish() {
+        let store = Arc::new(PolicyStore::new());
+        let gate = Arc::new(EpochGate::new(1));
+        let (g2, s2) = (gate.clone(), store.clone());
+        let h = thread::spawn(move || g2.acquire(0, &s2));
+        thread::sleep(Duration::from_millis(20));
+        store.publish(vec![0.0], NormSnapshot::identity(1));
+        let lease = h.join().unwrap();
+        assert_eq!(lease.epoch, 1);
+        assert_eq!(lease.snapshot.version, 1);
+    }
+}

@@ -23,16 +23,20 @@
 //!    one forward per sim tick) or when the [`WaitPolicy`] cut fires, so
 //!    a straggler worker (env reset, episode bookkeeping, queue
 //!    backpressure, sync-mode parking) never stalls its shard.
-//! 3. The server observes the [`PolicyStore`] once per dispatch, so every
-//!    row in a forward is evaluated under the same parameter version, and
-//!    each [`ActResponse`] carries the snapshot used (the
-//!    one-version-per-forward guarantee). A worker that sees the version
-//!    move cuts its in-progress chunks before appending the new tick (see
-//!    `coordinator::sampler`), preserving the
+//! 3. The server takes one policy observation per dispatch, so every row
+//!    in a forward is evaluated under the same parameter version, and
+//!    each [`ActResponse`] carries the snapshot used plus the pool epoch
+//!    (the one-version-per-forward guarantee). A worker that sees the
+//!    epoch move cuts its in-progress chunks before appending the new
+//!    tick (see `coordinator::sampler`), preserving the
 //!    one-policy-version-per-chunk invariant with zero worker-side store
-//!    polling. Shards observe the store independently, so two shards may
-//!    adopt a new version a tick apart — each worker's streams stay
-//!    single-version regardless.
+//!    polling. Under the default pool-wide epoch gate
+//!    ([`crate::runtime::epoch::EpochGate`], `--infer-epoch pool`) all S
+//!    shards flip to a newly published snapshot on the same dispatch
+//!    boundary — no shard dispatches under the new version while another
+//!    still serves the old one. `--infer-epoch shard` restores the PR 3
+//!    behavior of independent per-shard store polling (each worker's
+//!    streams stay single-version regardless).
 //! 4. Results are scattered back into each request's [`SlabBuffers`]
 //!    (actions, logp, values, means, and the server-normalized obs rows)
 //!    and handed to the blocked client. Dropping the response returns the
@@ -46,8 +50,22 @@
 //! exactly the rows of its assigned workers, and the MLP forward is
 //! row-independent — so under a fixed policy version, per-env chunk
 //! streams are bitwise identical across any shard count (and across
-//! shared vs local mode). Tested at N=4, S=1 vs S=2 in
-//! `coordinator::sampler`.
+//! shared vs local mode). With the pool epoch gate this extends *across*
+//! policy version flips whenever the flip tick is itself deterministic
+//! (e.g. sync mode's per-version sample budget). Tested at N=4: S=1 vs
+//! S=2 under a frozen policy, and local vs S∈{1,2,4} across two mid-run
+//! publishes, in `coordinator::sampler`.
+//!
+//! # Failure containment
+//!
+//! A serve thread never strands its fleet: a sentinel guard on every
+//! serve entry point marks the shard down and fails all pending and
+//! future requests on ANY exit — clean shutdown, backend construction
+//! error, forward error, or panic (including panics inside backend
+//! construction). Blocked workers observe the failure within one probe
+//! interval and terminate with a logged error instead of deadlocking on
+//! their completion slots; the shard also leaves the epoch gate so the
+//! surviving shards can still flip.
 //!
 //! # Straggler-cut policy ([`WaitPolicy`])
 //!
@@ -82,7 +100,9 @@
 
 use crate::coordinator::metrics::InferenceReport;
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
+use crate::runtime::epoch::{EpochGate, EpochMode};
 use crate::runtime::{ActResult, ActorBackend, BackendFactory, DdpgActorBackend};
+use crate::util::{cv_wait, plock};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -243,6 +263,7 @@ struct Reply {
     bufs: SlabBuffers,
     rows: usize,
     snapshot: Arc<PolicySnapshot>,
+    epoch: u64,
     server_busy_secs: f64,
 }
 
@@ -259,6 +280,12 @@ pub struct ActResponse {
     /// The policy snapshot this forward used (same for every row of the
     /// dispatch — the one-version-per-forward guarantee).
     pub snapshot: Arc<PolicySnapshot>,
+    /// Pool epoch of the dispatch. Under `--infer-epoch pool` this moves
+    /// in lockstep across every shard (all S flip on the same dispatch
+    /// boundary), so workers drive their chunk version-cuts off it; 0
+    /// when the shard runs gateless (`--infer-epoch shard`, standalone
+    /// servers), where the snapshot version alone drives cuts.
+    pub epoch: u64,
     /// This slab's row-proportional share of the server's CPU time for
     /// the dispatch (normalize + forward). Workers fold it into their
     /// busy-time accounting so the virtual-core rollout timing model
@@ -305,11 +332,7 @@ impl Drop for ActResponse {
         // a single slot: a worker may hold its tick response across the
         // bootstrap call, so up to two buffer sets cycle per client.
         if let Some(b) = self.bufs.take() {
-            self.home
-                .spare
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .push(b);
+            plock(&self.home.spare).push(b);
         }
     }
 }
@@ -352,6 +375,10 @@ struct ServerShared {
     /// Hot-path buffer-growth events (client + server side). Flat after
     /// warmup == the steady-state tick allocates nothing.
     hot_allocs: AtomicU64,
+    /// Pool-wide epoch gate (None = gateless: this shard observes the
+    /// store independently, the `--infer-epoch shard` escape hatch and
+    /// the standalone-server default).
+    gate: Option<Arc<EpochGate>>,
 }
 
 /// One shard of the shared-inference pool: owns the request queue and (on
@@ -370,7 +397,17 @@ pub struct ActorClient {
 }
 
 impl InferenceServer {
+    /// A gateless shard: observes the policy store independently per
+    /// dispatch (standalone servers, tests, `--infer-epoch shard`).
     pub fn new(cfg: InferenceServerCfg) -> InferenceServer {
+        Self::with_gate(cfg, None)
+    }
+
+    /// A shard wired to a pool-wide [`EpochGate`]: policy observations go
+    /// through the gate, which flips all shards of the pool to a new
+    /// snapshot on the same dispatch boundary ([`InferencePool::new`]
+    /// under `EpochMode::Pool`).
+    pub fn with_gate(cfg: InferenceServerCfg, gate: Option<Arc<EpochGate>>) -> InferenceServer {
         let (fleet_rows, hist_rows) = (cfg.fleet_rows, cfg.hist_rows);
         InferenceServer {
             shared: Arc::new(ServerShared {
@@ -387,6 +424,7 @@ impl InferenceServer {
                 submitted: Condvar::new(),
                 metrics: Mutex::new(InferenceReport::with_bounds(fleet_rows, hist_rows)),
                 hot_allocs: AtomicU64::new(0),
+                gate,
             }),
         }
     }
@@ -401,7 +439,7 @@ impl InferenceServer {
     /// zero active clients and exit immediately.
     pub fn client(&self) -> ActorClient {
         {
-            let mut q = self.shared.q.lock().unwrap();
+            let mut q = plock(&self.shared.q);
             q.active_clients += 1;
             // pre-size the pending queue to the client count so steady-
             // state submits never grow it
@@ -424,7 +462,7 @@ impl InferenceServer {
     /// Snapshot of the dispatch statistics (valid any time; final after
     /// the serve thread exits).
     pub fn report(&self) -> InferenceReport {
-        let mut r = self.shared.metrics.lock().unwrap().clone();
+        let mut r = plock(&self.shared.metrics).clone();
         r.hot_allocs = self.shared.hot_allocs.load(Ordering::Relaxed);
         r
     }
@@ -437,6 +475,10 @@ impl InferenceServer {
         factory: &dyn BackendFactory,
         store: &PolicyStore,
     ) -> anyhow::Result<()> {
+        // guard FIRST: a panic anywhere past this point — including one
+        // inside backend construction — must fail blocked clients
+        // instead of stranding them on their completion slots
+        let _guard = DownGuard(self);
         let actor = match factory.make_actor_shared(self.shared.cfg.fleet_rows) {
             Ok(a) => a,
             Err(e) => {
@@ -453,6 +495,7 @@ impl InferenceServer {
         factory: &dyn BackendFactory,
         store: &PolicyStore,
     ) -> anyhow::Result<()> {
+        let _guard = DownGuard(self);
         let actor = match factory.make_ddpg_actor_shared(self.shared.cfg.fleet_rows) {
             Ok(a) => a,
             Err(e) => {
@@ -463,38 +506,29 @@ impl InferenceServer {
         self.serve(ServerBackend::Ddpg(actor), store)
     }
 
-    /// Mark the server down and fail every pending request (and all future
-    /// submits). Called on any serve-loop exit path, including unwinds —
-    /// so it must tolerate a poisoned queue lock (a panic mid-dispatch
-    /// must not escalate to a double panic, it must release the fleet).
+    /// Mark the server down, fail every pending request (and all future
+    /// submits), and leave the pool epoch gate. Called on any serve exit
+    /// path, including unwinds — so it must tolerate a poisoned queue
+    /// lock (a panic mid-dispatch must not escalate to a double panic, it
+    /// must release the fleet). Idempotent.
     fn fail_all(&self, msg: &str) {
-        let mut q = self
-            .shared
-            .q
-            .lock()
-            .unwrap_or_else(|poisoned| poisoned.into_inner());
-        q.server_down = true;
-        q.pending_rows = 0;
-        q.first_enqueue = None;
-        q.last_enqueue = None;
-        for req in q.pending.drain(..) {
-            reply(&req.reply, Err(msg.to_string()));
+        {
+            let mut q = plock(&self.shared.q);
+            q.server_down = true;
+            q.pending_rows = 0;
+            q.first_enqueue = None;
+            q.last_enqueue = None;
+            for req in q.pending.drain(..) {
+                reply(&req.reply, Err(msg.to_string()));
+            }
+        }
+        // a dead shard must not wedge the surviving shards' flip barrier
+        if let Some(gate) = &self.shared.gate {
+            gate.leave(self.shared.cfg.shard_id);
         }
     }
 
     fn serve(&self, mut backend: ServerBackend, store: &PolicyStore) -> anyhow::Result<()> {
-        // Unwind guard: if the serve loop panics (bad artifact shapes, a
-        // backend bug), mark the server down and fail outstanding slabs —
-        // otherwise every worker would spin on its completion slot forever
-        // and the run would hang instead of erroring. Idempotent with the
-        // explicit fail_all calls on clean exit paths.
-        struct DownGuard<'a>(&'a InferenceServer);
-        impl Drop for DownGuard<'_> {
-            fn drop(&mut self) {
-                self.0.fail_all("inference server terminated unexpectedly");
-            }
-        }
-        let _guard = DownGuard(self);
         let sh = &*self.shared;
         let o = sh.cfg.obs_dim;
         let a = sh.cfg.act_dim;
@@ -521,13 +555,22 @@ impl InferenceServer {
         // recycled batch vec: swapped with the pending queue per dispatch,
         // so steady state moves requests without allocating
         let mut batch: Vec<PendingReq> = Vec::new();
+        // Idle-wait period. The gate has no push channel from the store
+        // (proposals are discovered by shards polling), so a gated shard
+        // polls its idle branch fast enough that a momentarily idle shard
+        // delays a pool-wide flip by at most ~5ms.
+        let idle_wait = if sh.gate.is_some() {
+            Duration::from_millis(5)
+        } else {
+            Duration::from_millis(50)
+        };
 
         loop {
             debug_assert!(batch.is_empty(), "batch drained before re-gather");
             // ---- gather one batch under the straggler-cut policy -------
             // `cut_us` records the budget that forced a timeout dispatch.
             let (was_full, cut_us) = {
-                let mut q = sh.q.lock().unwrap();
+                let mut q = plock(&sh.q);
                 loop {
                     if q.pending.is_empty() {
                         if q.active_clients == 0 {
@@ -535,11 +578,14 @@ impl InferenceServer {
                             self.fail_all("inference server shut down");
                             return Ok(());
                         }
-                        let (g, _) = sh
-                            .submitted
-                            .wait_timeout(q, Duration::from_millis(50))
-                            .unwrap();
-                        q = g;
+                        // an idle shard still participates in the epoch
+                        // protocol: it acks pending flips from here so a
+                        // shard with parked workers (sync-mode barrier)
+                        // can never wedge the pool-wide flip
+                        if let Some(gate) = &sh.gate {
+                            gate.poll(sh.cfg.shard_id, store);
+                        }
+                        q = cv_wait(&sh.submitted, q, idle_wait);
                         continue;
                     }
                     let full = q.pending.len() >= q.active_clients
@@ -568,18 +614,31 @@ impl InferenceServer {
                         std::mem::swap(&mut q.pending, &mut batch);
                         break (full, budget_us);
                     }
-                    let (g, _) = sh.submitted.wait_timeout(q, deadline - now).unwrap();
-                    q = g;
+                    q = cv_wait(&sh.submitted, q, deadline - now);
                 }
             };
 
             // ---- one policy observation per dispatch -------------------
-            let snapshot = loop {
-                match store.latest() {
-                    Some(s) => break s,
-                    // clients gate on the first publish, so this only
-                    // spins in pathological test setups
-                    None => std::thread::sleep(Duration::from_millis(1)),
+            // Pool epochs: the gate hands every shard the same snapshot
+            // and parks this shard at the flip barrier while a publish is
+            // pending, so no shard dispatches under the new version until
+            // every shard has drained its in-flight window. Gateless
+            // shards poll the store independently (epoch reported as 0).
+            let (snapshot, epoch, flip_stall_us) = match &sh.gate {
+                Some(gate) => {
+                    let lease = gate.acquire(sh.cfg.shard_id, store);
+                    (lease.snapshot, lease.epoch, lease.flip_stall_us)
+                }
+                None => {
+                    let snap = loop {
+                        match store.latest() {
+                            Some(s) => break s,
+                            // clients gate on the first publish, so this
+                            // only spins in pathological test setups
+                            None => std::thread::sleep(Duration::from_millis(1)),
+                        }
+                    };
+                    (snap, 0, None)
                 }
             };
 
@@ -622,7 +681,7 @@ impl InferenceServer {
 
             // ---- metrics -----------------------------------------------
             {
-                let mut m = sh.metrics.lock().unwrap();
+                let mut m = plock(&sh.metrics);
                 m.forwards += 1;
                 m.rows += rows as u64;
                 if was_full {
@@ -630,6 +689,14 @@ impl InferenceServer {
                 } else {
                     m.timeout_dispatches += 1;
                     m.cut_us.record(cut_us);
+                }
+                // versions the served snapshot lags the newest publish
+                // (gate mode: how long flips park behind the barrier;
+                // shard mode: raw observation staleness)
+                m.epoch_lag
+                    .record(store.version().saturating_sub(snapshot.version) as f64);
+                if let Some(us) = flip_stall_us {
+                    m.flip_stall_us.record(us);
                 }
                 m.dispatch_rows.record(rows as f64);
                 m.fill_ratio.record(rows as f64 / sh.cfg.fleet_rows as f64);
@@ -675,6 +742,7 @@ impl InferenceServer {
                                 bufs: req.bufs,
                                 rows: req.rows,
                                 snapshot: snapshot.clone(),
+                                epoch,
                                 server_busy_secs: dispatch_busy * req.rows as f64
                                     / rows as f64,
                             }),
@@ -700,8 +768,27 @@ impl InferenceServer {
     }
 }
 
+/// Sentinel marking the shard down on ANY serve exit — ordinary returns,
+/// `?` errors, and panics (backend bugs, bad artifact shapes) alike — so
+/// blocked clients always unwind with an error instead of spinning on
+/// their completion slots forever. Idempotent with the explicit fail_all
+/// calls on clean exit paths.
+struct DownGuard<'a>(&'a InferenceServer);
+
+impl Drop for DownGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            crate::log_error!(
+                "infer shard {}: serve thread panicked; failing its blocked workers",
+                self.0.shared.cfg.shard_id
+            );
+        }
+        self.0.fail_all("inference server terminated unexpectedly");
+    }
+}
+
 fn reply(slot: &ReplySlot, r: Result<Reply, String>) {
-    *slot.cell.lock().unwrap() = Some(r);
+    *plock(&slot.cell) = Some(r);
     slot.ready.notify_one();
 }
 
@@ -731,7 +818,7 @@ impl ActorClient {
             sh.cfg.fleet_rows
         );
         // reclaim the recycled buffers (first call allocates: warmup)
-        let mut bufs = match self.slot.spare.lock().unwrap().pop() {
+        let mut bufs = match plock(&self.slot.spare).pop() {
             Some(b) => b,
             None => {
                 sh.hot_allocs.fetch_add(1, Ordering::Relaxed);
@@ -743,7 +830,7 @@ impl ActorClient {
         ensure_len(&mut bufs.noise, noise.len(), &sh.hot_allocs);
         bufs.noise.copy_from_slice(noise);
         {
-            let mut q = sh.q.lock().unwrap();
+            let mut q = plock(&sh.q);
             anyhow::ensure!(!q.server_down, "inference server is down");
             let now = Instant::now();
             if matches!(sh.cfg.wait, WaitPolicy::Adaptive) {
@@ -771,24 +858,19 @@ impl ActorClient {
         // await the completion slot; periodically probe server liveness
         // (never hold the slot lock while probing — server replies while
         // holding the queue lock on its exit path)
-        let mut cell = self.slot.cell.lock().unwrap();
+        let mut cell = plock(&self.slot.cell);
         loop {
             if let Some(r) = cell.take() {
                 drop(cell);
                 return self.unpack(r);
             }
-            let (g, _) = self
-                .slot
-                .ready
-                .wait_timeout(cell, Duration::from_millis(50))
-                .unwrap();
-            cell = g;
+            cell = cv_wait(&self.slot.ready, cell, Duration::from_millis(50));
             if cell.is_some() {
                 continue;
             }
             drop(cell);
-            if self.shared.q.lock().unwrap().server_down {
-                let mut c = self.slot.cell.lock().unwrap();
+            if plock(&self.shared.q).server_down {
+                let mut c = plock(&self.slot.cell);
                 // the terminal reply may have landed in the gap
                 if let Some(r) = c.take() {
                     drop(c);
@@ -796,7 +878,7 @@ impl ActorClient {
                 }
                 anyhow::bail!("inference server terminated");
             }
-            cell = self.slot.cell.lock().unwrap();
+            cell = plock(&self.slot.cell);
         }
     }
 
@@ -809,6 +891,7 @@ impl ActorClient {
             bufs: Some(reply.bufs),
             home: self.slot.clone(),
             snapshot: reply.snapshot,
+            epoch: reply.epoch,
             server_busy_secs: reply.server_busy_secs,
         })
     }
@@ -818,11 +901,7 @@ impl Drop for ActorClient {
     fn drop(&mut self) {
         // poison-tolerant: a worker unwinding past its client must still
         // deregister, or the server would wait on a dead peer forever
-        let mut q = self
-            .shared
-            .q
-            .lock()
-            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let mut q = plock(&self.shared.q);
         q.active_clients = q.active_clients.saturating_sub(1);
         drop(q);
         // wake the server so it re-evaluates the full-batch condition
@@ -892,6 +971,11 @@ pub struct InferencePoolCfg {
     pub shards: usize,
     /// Straggler-cut policy applied by every shard.
     pub wait: WaitPolicy,
+    /// How the pool adopts newly published policy versions: `Pool` wires
+    /// every shard to one [`EpochGate`] (all S flip on the same dispatch
+    /// boundary); `Shard` lets each shard observe the store independently
+    /// (the pre-epoch behavior, `--infer-epoch shard`).
+    pub epoch: EpochMode,
     pub obs_dim: usize,
     pub act_dim: usize,
 }
@@ -902,12 +986,18 @@ pub struct InferencePoolCfg {
 /// of S (see the module docs for the invariant).
 pub struct InferencePool {
     shards: Vec<Arc<InferenceServer>>,
+    /// The pool-wide epoch barrier (None under `EpochMode::Shard`).
+    gate: Option<Arc<EpochGate>>,
 }
 
 impl InferencePool {
     pub fn new(cfg: InferencePoolCfg) -> InferencePool {
         let workers = cfg.workers.max(1);
         let s = cfg.shards.clamp(1, workers);
+        let gate = match cfg.epoch {
+            EpochMode::Pool => Some(Arc::new(EpochGate::new(s))),
+            EpochMode::Shard => None,
+        };
         // shard i serves workers {w : w % s == i}: n/s workers each, the
         // first n%s shards carry one extra
         let max_shard_workers = workers.div_euclid(s) + usize::from(workers % s > 0);
@@ -915,17 +1005,25 @@ impl InferencePool {
         let shards = (0..s)
             .map(|i| {
                 let shard_workers = workers / s + usize::from(i < workers % s);
-                Arc::new(InferenceServer::new(InferenceServerCfg {
-                    wait: cfg.wait,
-                    fleet_rows: shard_workers * cfg.rows_per_worker,
-                    obs_dim: cfg.obs_dim,
-                    act_dim: cfg.act_dim,
-                    shard_id: i,
-                    hist_rows,
-                }))
+                Arc::new(InferenceServer::with_gate(
+                    InferenceServerCfg {
+                        wait: cfg.wait,
+                        fleet_rows: shard_workers * cfg.rows_per_worker,
+                        obs_dim: cfg.obs_dim,
+                        act_dim: cfg.act_dim,
+                        shard_id: i,
+                        hist_rows,
+                    },
+                    gate.clone(),
+                ))
             })
             .collect();
-        InferencePool { shards }
+        InferencePool { shards, gate }
+    }
+
+    /// The pool-wide epoch gate (None when running `--infer-epoch shard`).
+    pub fn epoch_gate(&self) -> Option<&Arc<EpochGate>> {
+        self.gate.as_ref()
     }
 
     /// Resolved shard count S.
@@ -1348,6 +1446,7 @@ mod tests {
             rows_per_worker: 2,
             shards: 2,
             wait: WaitPolicy::Adaptive,
+            epoch: EpochMode::Pool,
             obs_dim: 3,
             act_dim: 1,
         });
@@ -1364,6 +1463,7 @@ mod tests {
             rows_per_worker: 1,
             shards: 8,
             wait: WaitPolicy::Adaptive,
+            epoch: EpochMode::Pool,
             obs_dim: 3,
             act_dim: 1,
         });
@@ -1383,6 +1483,7 @@ mod tests {
             rows_per_worker: 1,
             shards: 2,
             wait: WaitPolicy::Fixed(Duration::from_millis(5_000)),
+            epoch: EpochMode::Pool,
             obs_dim: 3,
             act_dim: 1,
         }));
@@ -1432,6 +1533,7 @@ mod tests {
             rows_per_worker: 1,
             shards: 2,
             wait: WaitPolicy::Fixed(Duration::from_millis(40)),
+            epoch: EpochMode::Pool,
             obs_dim: 3,
             act_dim: 1,
         }));
@@ -1492,5 +1594,168 @@ mod tests {
         // >= 4, not 5: shard 1's very first tick may cut as a partial if
         // one worker thread spawns pathologically late
         assert!(rep.full_dispatches >= 4, "shard 1 did not coalesce");
+    }
+
+    // ------------------------------------------------------- epoch gate
+
+    /// Tentpole: with the pool gate, a mid-run publish reaches every
+    /// shard as ONE atomic epoch flip. No response anywhere in the pool
+    /// pairs the old epoch with the new version (or vice versa), each
+    /// worker's epoch sequence moves 1 -> 2 exactly once, and the gate
+    /// records exactly one barrier flip.
+    #[test]
+    fn pool_epoch_gate_flips_all_shards_atomically() {
+        use crate::runtime::epoch::EpochMode;
+
+        let nf = factory(3, 1);
+        let store = published_store(&nf);
+        let pool = Arc::new(InferencePool::new(InferencePoolCfg {
+            workers: 2,
+            rows_per_worker: 1,
+            shards: 2,
+            wait: WaitPolicy::Fixed(Duration::from_millis(1)),
+            epoch: EpochMode::Pool,
+            obs_dim: 3,
+            act_dim: 1,
+        }));
+        let clients: Vec<ActorClient> = (0..2).map(|w| pool.client(w)).collect();
+        let mut server_hs = Vec::new();
+        for shard in pool.shards() {
+            let shard = shard.clone();
+            let store2 = store.clone();
+            server_hs.push(thread::spawn(move || {
+                let f = factory(3, 1);
+                shard.serve_ppo(&f, &store2)
+            }));
+        }
+        // quiesce both workers at a barrier around the publish: with no
+        // dispatch in flight when the proposal lands, EVERY post-barrier
+        // dispatch pool-wide must already run under (epoch 2, version 2)
+        // — any (1, 2) or (2, 1) pairing, or a late (1, 1), means a shard
+        // dispatched around the flip barrier
+        let quiesced = Arc::new(std::sync::Barrier::new(3));
+        let resume = Arc::new(std::sync::Barrier::new(3));
+        let mut worker_hs = Vec::new();
+        for (w, mut client) in clients.into_iter().enumerate() {
+            let quiesced = quiesced.clone();
+            let resume = resume.clone();
+            worker_hs.push(thread::spawn(move || {
+                let obs = vec![0.1 * (w as f32 + 1.0); 3];
+                for _ in 0..50 {
+                    let resp = client.act(&obs, &[0.0]).unwrap();
+                    assert_eq!((resp.epoch, resp.snapshot.version), (1, 1));
+                }
+                quiesced.wait(); // every pre-publish dispatch has drained
+                resume.wait(); // main published while we were parked
+                let mut seen = Vec::new();
+                for _ in 0..50 {
+                    let resp = client.act(&obs, &[0.0]).unwrap();
+                    seen.push((resp.epoch, resp.snapshot.version));
+                }
+                seen
+            }));
+        }
+        quiesced.wait();
+        store.publish(nf.init_ppo_params(1), NormSnapshot::identity(3));
+        resume.wait();
+        let seens: Vec<Vec<(u64, u64)>> =
+            worker_hs.into_iter().map(|h| h.join().unwrap()).collect();
+        for h in server_hs {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(pool.epoch_gate().expect("pool mode has a gate").flips(), 1);
+        for seen in &seens {
+            assert_eq!(seen.len(), 50);
+            assert!(
+                seen.iter().all(|&ev| ev == (2, 2)),
+                "a dispatch slipped around the flip barrier: {seen:?}"
+            );
+        }
+    }
+
+    // --------------------------------------------------- shard failure
+
+    use crate::runtime::test_support::PanickingSharedFactory;
+
+    /// Satellite acceptance: a serve-thread panic at N=2/S=2 kills ONE
+    /// shard; its blocked worker unwinds with an error within the probe
+    /// interval (no deadlock), the sibling shard keeps serving its own
+    /// worker to completion, and the panicked thread's join reports the
+    /// unwind.
+    #[test]
+    fn shard_panic_fails_blocked_clients_instead_of_hanging() {
+        use crate::runtime::epoch::EpochMode;
+
+        let nf = factory(3, 1);
+        let store = published_store(&nf);
+        let pool = Arc::new(InferencePool::new(InferencePoolCfg {
+            workers: 2,
+            rows_per_worker: 1,
+            shards: 2,
+            wait: WaitPolicy::Fixed(Duration::from_millis(1)),
+            epoch: EpochMode::Pool,
+            obs_dim: 3,
+            act_dim: 1,
+        }));
+        let clients: Vec<ActorClient> = (0..2).map(|w| pool.client(w)).collect();
+        let factory_shared = Arc::new(PanickingSharedFactory::new(factory(3, 1), 3));
+        let mut server_hs = Vec::new();
+        for shard in pool.shards() {
+            let shard = shard.clone();
+            let store2 = store.clone();
+            let f2 = factory_shared.clone();
+            server_hs.push(thread::spawn(move || shard.serve_ppo(f2.as_ref(), &store2)));
+        }
+        let mut worker_hs = Vec::new();
+        for (w, mut client) in clients.into_iter().enumerate() {
+            worker_hs.push(thread::spawn(move || {
+                let obs = vec![0.1 * (w as f32 + 1.0); 3];
+                for t in 0..50 {
+                    if client.act(&obs, &[0.0]).is_err() {
+                        return Err(t); // unwound instead of hanging
+                    }
+                }
+                Ok(())
+            }));
+        }
+        let results: Vec<Result<(), usize>> =
+            worker_hs.into_iter().map(|h| h.join().unwrap()).collect();
+        let joins: Vec<_> = server_hs.into_iter().map(|h| h.join()).collect();
+        // exactly one worker hit the dead shard and errored out early
+        assert_eq!(
+            results.iter().filter(|r| r.is_err()).count(),
+            1,
+            "exactly one worker must observe the dead shard: {results:?}"
+        );
+        // the other ran its full 50 ticks on the surviving shard
+        assert_eq!(results.iter().filter(|r| r.is_ok()).count(), 1);
+        // one serve thread panicked, the sibling exited cleanly
+        assert_eq!(joins.iter().filter(|j| j.is_err()).count(), 1);
+        assert!(joins
+            .iter()
+            .any(|j| matches!(j, Ok(r) if r.is_ok())));
+    }
+
+    /// A panic inside backend CONSTRUCTION (before the serve loop even
+    /// starts) must also fail clients — the down guard covers the whole
+    /// serve entry point, not just the dispatch loop.
+    #[test]
+    fn construction_panic_fails_clients_instead_of_hanging() {
+        let nf = factory(3, 1);
+        let store = published_store(&nf);
+        let srv = Arc::new(server(1, 10));
+        let mut client = srv.client();
+        let srv2 = srv.clone();
+        let store2 = store.clone();
+        let h = thread::spawn(move || {
+            let f = PanickingSharedFactory::new(factory(3, 1), 0);
+            srv2.serve_ppo(&f, &store2)
+        });
+        assert!(
+            client.act(&[0.0, 0.0, 0.0], &[0.0]).is_err(),
+            "client must unwind, not hang"
+        );
+        drop(client);
+        assert!(h.join().is_err(), "serve thread must have panicked");
     }
 }

@@ -35,9 +35,14 @@
 //! row-independent); shared mode trades a request/response hop for
 //! mega-batch amortization, which wins once N small forwards per tick
 //! dominate the rollout loop, and sharding keeps that win once a single
-//! mega-batch forward saturates a core.
+//! mega-batch forward saturates a core. Across version changes, the
+//! pool-wide [`epoch::EpochGate`] (default, `--infer-epoch pool`) flips
+//! every shard to a newly published snapshot on the same dispatch
+//! boundary, so shard count stays a pure performance knob even while the
+//! learner publishes mid-run.
 
 pub mod artifacts;
+pub mod epoch;
 pub mod inference_server;
 pub mod native_backend;
 #[cfg(feature = "xla")]
@@ -283,5 +288,105 @@ pub trait BackendFactory: Send + Sync {
     ) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
         let _ = max_rows;
         self.make_ddpg_actor()
+    }
+}
+
+/// Fault-injection scaffolding shared by the inference-pool and
+/// orchestrator test suites (unit tests only — never compiled into the
+/// library proper).
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::{ActResult, ActorBackend, BackendFactory, DdpgActorBackend};
+    use crate::runtime::native_backend::NativeFactory;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Wraps the native factory so the FIRST shard to build its shared
+    /// actor gets one that panics after `calls_before_panic` forwards
+    /// (0 = panic inside construction itself). Later builders get healthy
+    /// actors — the one-dead-shard scenario the failure-containment tests
+    /// exercise.
+    pub struct PanickingSharedFactory {
+        inner: NativeFactory,
+        built: AtomicUsize,
+        calls_before_panic: usize,
+    }
+
+    impl PanickingSharedFactory {
+        pub fn new(inner: NativeFactory, calls_before_panic: usize) -> Self {
+            Self {
+                inner,
+                built: AtomicUsize::new(0),
+                calls_before_panic,
+            }
+        }
+    }
+
+    struct PanicAfter {
+        inner: Box<dyn ActorBackend>,
+        left: usize,
+    }
+
+    impl ActorBackend for PanicAfter {
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+        fn obs_dim(&self) -> usize {
+            self.inner.obs_dim()
+        }
+        fn act_dim(&self) -> usize {
+            self.inner.act_dim()
+        }
+        fn act(&mut self, flat: &[f32], obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResult> {
+            if self.left == 0 {
+                panic!("injected shard backend panic");
+            }
+            self.left -= 1;
+            self.inner.act(flat, obs, noise)
+        }
+    }
+
+    impl BackendFactory for PanickingSharedFactory {
+        fn obs_dim(&self) -> usize {
+            self.inner.obs_dim()
+        }
+        fn act_dim(&self) -> usize {
+            self.inner.act_dim()
+        }
+        fn ppo_param_count(&self) -> usize {
+            self.inner.ppo_param_count()
+        }
+        fn init_ppo_params(&self, seed: u64) -> Vec<f32> {
+            self.inner.init_ppo_params(seed)
+        }
+        fn init_ddpg_params(&self, seed: u64) -> (Vec<f32>, Vec<f32>) {
+            self.inner.init_ddpg_params(seed)
+        }
+        fn make_actor(&self) -> anyhow::Result<Box<dyn ActorBackend>> {
+            self.inner.make_actor()
+        }
+        fn make_ppo_learner(&self) -> anyhow::Result<Box<dyn super::PpoLearnerBackend>> {
+            self.inner.make_ppo_learner()
+        }
+        fn make_ddpg_actor(&self) -> anyhow::Result<Box<dyn DdpgActorBackend>> {
+            self.inner.make_ddpg_actor()
+        }
+        fn make_ddpg_learner(&self) -> anyhow::Result<Box<dyn super::DdpgLearnerBackend>> {
+            self.inner.make_ddpg_learner()
+        }
+        fn make_actor_shared(&self, max_rows: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+            let first = self.built.fetch_add(1, Ordering::SeqCst) == 0;
+            if first && self.calls_before_panic == 0 {
+                panic!("injected construction panic");
+            }
+            let inner = self.inner.make_actor_shared(max_rows)?;
+            Ok(if first {
+                Box::new(PanicAfter {
+                    inner,
+                    left: self.calls_before_panic,
+                })
+            } else {
+                inner
+            })
+        }
     }
 }

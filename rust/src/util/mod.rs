@@ -12,3 +12,39 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Poison-tolerant lock: recover the guard when another thread panicked
+/// while holding the mutex. Used on coordination paths (inference pool
+/// queues, completion slots, the policy store, shutdown guards) where the
+/// protected state stays structurally valid across an unwinding writer —
+/// there, propagating the poison would turn one worker's panic into a
+/// fleet-wide deadlock instead of the logged termination we want.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant condvar wait with timeout: the companion to [`plock`]
+/// for the wait side of the same coordination paths.
+pub fn cv_wait<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    timeout: Duration,
+) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, timeout) {
+        Ok((g, _)) => g,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
+/// Untimed [`cv_wait`]: for waits whose wakeup is guaranteed by a paired
+/// notify (e.g. the bounded channel), where a timeout would only mask a
+/// missing-notify bug.
+pub fn cv_wait_untimed<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}

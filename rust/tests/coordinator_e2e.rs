@@ -122,6 +122,9 @@ fn native_sharded_adaptive_inference_run_end_to_end() {
     assert_eq!(rep.fleet_rows, cfg.samplers * cfg.envs_per_sampler);
     assert!(rep.forwards > 0);
     assert!(rep.forwards < rep.rows, "shards never batched anything");
+    // default pool-epoch mode: every dispatch records its snapshot lag,
+    // and the learner's mid-run publishes exercise the flip barrier
+    assert_eq!(rep.epoch_lag.count(), rep.forwards);
 }
 
 #[test]
