@@ -8,42 +8,57 @@
 //! N samplers roll the deterministic actor + exploration noise; the
 //! learner fills a ring replay buffer and runs TD/DPG updates with Polyak
 //! target networks, publishing fresh actor parameters through the same
-//! policy store.
+//! policy store. Built through `Session::builder()` with a configured
+//! `Ddpg` algorithm instance — swap in `Td3::default()` (see the
+//! `td3_pendulum` example) and nothing else changes.
 
-use walle::config::{Algo, Backend, InferenceMode, TrainConfig};
-use walle::coordinator::metrics::MetricsLog;
-use walle::coordinator::orchestrator;
-use walle::runtime::make_factory;
+use walle::algo::ddpg::Ddpg;
+use walle::config::{Backend, DdpgCfg, InferShards, InferenceMode};
+use walle::session::{Infer, Session};
 use walle::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
 
-    let mut cfg = TrainConfig::preset(&args.str_or("env", "pendulum"));
-    cfg.algo = Algo::Ddpg;
-    cfg.backend = Backend::parse(&args.str_or("backend", "native"))
+    let backend = Backend::parse(&args.str_or("backend", "native"))
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
-    cfg.samplers = args.usize_or("samplers", 4)?;
-    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
     // the sharded inference pool serves the deterministic actor too
-    cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
-        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
-    cfg.iterations = args.usize_or("iterations", 60)?;
-    cfg.samples_per_iter = args.usize_or("samples-per-iter", 1_000)?;
-    cfg.chunk_steps = 100;
-    cfg.seed = args.u64_or("seed", 0)?;
-    cfg.ddpg.warmup_steps = args.usize_or("warmup", 2_000)?;
-    cfg.ddpg.updates_per_iter = args.usize_or("updates-per-iter", 250)?;
-    cfg.reward_scale = 0.1;
+    let infer = match InferenceMode::parse(&args.str_or("inference-mode", "local"))
+        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?
+    {
+        InferenceMode::Local => Infer::Local,
+        InferenceMode::Shared => Infer::Shared {
+            shards: InferShards::Auto,
+        },
+    };
+    let algo = Ddpg {
+        cfg: DdpgCfg {
+            warmup_steps: args.usize_or("warmup", 2_000)?,
+            updates_per_iter: args.usize_or("updates-per-iter", 250)?,
+            ..Default::default()
+        },
+    };
+
+    let session = Session::builder()
+        .env(&args.str_or("env", "pendulum"))
+        .algo(algo)
+        .backend(backend)
+        .samplers(args.usize_or("samplers", 4)?)
+        .envs_per_sampler(args.usize_or("envs-per-sampler", 1)?)
+        .infer(infer)
+        .iterations(args.usize_or("iterations", 60)?)
+        .samples_per_iter(args.usize_or("samples-per-iter", 1_000)?)
+        .chunk_steps(100)
+        .reward_scale(0.1)
+        .seed(args.u64_or("seed", 0)?)
+        .build()?;
 
     println!(
-        "WALL-E DDPG (further-work §6.1): {} with N={} samplers, replay {} transitions",
-        cfg.env, cfg.samplers, cfg.ddpg.replay_capacity
+        "WALL-E DDPG (further-work §6.1):\n{}",
+        session.spec().render()
     );
 
-    let factory = make_factory(&cfg)?;
-    let mut log = MetricsLog::new();
-    let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+    let result = session.run()?;
 
     let first = result
         .metrics
@@ -60,7 +75,8 @@ fn main() -> anyhow::Result<()> {
     println!("\nDDPG return: first {first:.0} -> best {best:.0}");
     println!(
         "(off-policy reuse: {} gradient updates per {} fresh samples)",
-        cfg.ddpg.updates_per_iter, cfg.samples_per_iter
+        session.config().ddpg.updates_per_iter,
+        session.config().samples_per_iter
     );
     Ok(())
 }

@@ -8,13 +8,17 @@
 //!
 //! For each N this runs the full coordinator (N sampler threads, async
 //! learner), logs the return curve, and writes `fig3_return.csv`. The
-//! paper's claim reproduces as: N=10 reaches a given return in a fraction
-//! of the wall-clock of N=1 (same per-iteration sample budget), with
-//! final returns in the same band.
+//! base run is described once through `Session::builder()` (validated
+//! there); the figure harness sweeps the sampler count over it. The
+//! paper's claim reproduces as: N=10 reaches a given return in a
+//! fraction of the wall-clock of N=1 (same per-iteration sample
+//! budget), with final returns in the same band.
 
+use walle::algo::ppo::Ppo;
 use walle::bench::figures;
 use walle::config::{Backend, TrainConfig};
 use walle::runtime::make_factory;
+use walle::session::Session;
 use walle::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -22,13 +26,19 @@ fn main() -> anyhow::Result<()> {
     let ns = args.usize_list_or("ns", &[1, 10])?;
     let out_dir = args.str_or("out-dir", "results");
 
-    let mut cfg = TrainConfig::preset("halfcheetah");
-    cfg.backend = Backend::parse(&args.str_or("backend", "native"))
-        .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
-    cfg.iterations = args.usize_or("iterations", 150)?;
-    cfg.samples_per_iter = args.usize_or("samples-per-iter", 20_000)?;
-    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
-    cfg.seed = args.u64_or("seed", 0)?;
+    let session = Session::builder()
+        .env("halfcheetah")
+        .algo(Ppo::default())
+        .backend(
+            Backend::parse(&args.str_or("backend", "native"))
+                .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?,
+        )
+        .iterations(args.usize_or("iterations", 150)?)
+        .samples_per_iter(args.usize_or("samples-per-iter", 20_000)?)
+        .envs_per_sampler(args.usize_or("envs-per-sampler", 1)?)
+        .seed(args.u64_or("seed", 0)?)
+        .build()?;
+    let cfg = session.config().clone();
 
     println!(
         "WALL-E Fig 3 driver: halfcheetah PPO, {} samples/iter, {} iters, N in {:?}",

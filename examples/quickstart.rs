@@ -1,5 +1,6 @@
 //! Quickstart: train a pendulum swing-up policy with 4 parallel samplers
-//! in under a minute, then evaluate it deterministically.
+//! in under a minute, then evaluate it deterministically — all through
+//! the `Session` builder, the library's single entry point.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -8,62 +9,57 @@
 //! the learning curves are statistically identical (see
 //! rust/tests/runtime_roundtrip.rs for the numeric parity proof).
 
-use walle::config::{Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
-use walle::coordinator::metrics::MetricsLog;
-use walle::coordinator::{eval, orchestrator};
-use walle::env::registry::make_env;
-use walle::runtime::make_factory;
+use walle::algo::ppo::Ppo;
+use walle::config::{Backend, InferEpoch, InferShards, InferWait, InferenceMode};
+use walle::session::{Infer, Session};
 use walle::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
 
-    let mut cfg = TrainConfig::preset("pendulum");
-    cfg.backend = Backend::parse(&args.str_or("backend", "native"))
+    let backend = Backend::parse(&args.str_or("backend", "native"))
         .ok_or_else(|| anyhow::anyhow!("--backend must be native|xla"))?;
-    cfg.samplers = args.usize_or("samplers", 4)?;
-    cfg.envs_per_sampler = args.usize_or("envs-per-sampler", 1)?;
     // try `--inference-mode shared`: the inference pool batches all
     // samplers' rows into fleet-wide forwards (shard it with
     // `--infer-shards`, tune the straggler cut with `--infer-wait`)
-    cfg.inference_mode = InferenceMode::parse(&args.str_or("inference-mode", "local"))
-        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?;
-    cfg.infer_shards = InferShards::parse(&args.str_or("infer-shards", "auto"))
-        .ok_or_else(|| anyhow::anyhow!("--infer-shards must be auto or a count >= 1"))?;
-    cfg.infer_wait = InferWait::parse(&args.str_or("infer-wait", "adaptive"))
+    let infer = match InferenceMode::parse(&args.str_or("inference-mode", "local"))
+        .ok_or_else(|| anyhow::anyhow!("--inference-mode must be local|shared"))?
+    {
+        InferenceMode::Local => Infer::Local,
+        InferenceMode::Shared => Infer::Shared {
+            shards: InferShards::parse(&args.str_or("infer-shards", "auto"))
+                .ok_or_else(|| anyhow::anyhow!("--infer-shards must be auto or a count >= 1"))?,
+        },
+    };
+    let wait = InferWait::parse(&args.str_or("infer-wait", "adaptive"))
         .ok_or_else(|| anyhow::anyhow!("--infer-wait must be adaptive or fixed:<us>"))?;
     // `--infer-epoch pool` (default) flips every shard to a new policy
     // version on one dispatch boundary; `shard` restores independent
     // per-shard store observation
-    cfg.infer_epoch = InferEpoch::parse(&args.str_or("infer-epoch", "pool"))
+    let epoch = InferEpoch::parse(&args.str_or("infer-epoch", "pool"))
         .ok_or_else(|| anyhow::anyhow!("--infer-epoch must be pool or shard"))?;
-    cfg.iterations = args.usize_or("iterations", 40)?;
-    cfg.seed = args.u64_or("seed", 0)?;
 
-    println!(
-        "WALL-E quickstart: PPO on pendulum, N={} samplers x {} envs, {} backend, {} inference",
-        cfg.samplers,
-        cfg.envs_per_sampler,
-        cfg.backend.name(),
-        cfg.inference_mode.name()
-    );
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Ppo::default())
+        .backend(backend)
+        .samplers(args.usize_or("samplers", 4)?)
+        .envs_per_sampler(args.usize_or("envs-per-sampler", 1)?)
+        .infer(infer)
+        .infer_wait(wait)
+        .infer_epoch(epoch)
+        .iterations(args.usize_or("iterations", 40)?)
+        .seed(args.u64_or("seed", 0)?)
+        .build()?;
 
-    let factory = make_factory(&cfg)?;
-    let mut log = MetricsLog::new();
-    let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+    println!("WALL-E quickstart:\n{}", session.spec().render());
 
-    // Evaluate the trained policy with the mean action (no noise).
-    let mut env = make_env("pendulum").unwrap();
-    let mut actor = factory.make_actor()?;
-    let norm = walle::algo::normalizer::NormSnapshot::identity(3);
-    let eval_result = eval::evaluate(
-        env.as_mut(),
-        actor.as_mut(),
-        &result.final_params,
-        &norm,
-        10,
-        123,
-    )?;
+    let result = session.run()?;
+
+    // Evaluate the trained policy with the mean action (no noise) —
+    // through the SAME trait-constructed actor AND the same normalizer
+    // snapshot the training path used.
+    let eval_result = session.evaluate_with_norm(&result.final_params, &result.final_norm, 10)?;
 
     let first = result.metrics.first().map(|m| m.mean_return).unwrap_or(0.0);
     let last = result.metrics.last().map(|m| m.mean_return).unwrap_or(0.0);

@@ -16,6 +16,7 @@
 use walle::bench::figures;
 use walle::config::{Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
 use walle::runtime::make_factory;
+use walle::session::Session;
 use walle::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -56,6 +57,9 @@ fn main() -> anyhow::Result<()> {
     if args.has("sync") {
         cfg.async_mode = false;
     }
+    // validate the combination through the Session builder (the sweep
+    // below drives the same trait pipeline per point)
+    let cfg = Session::builder().config(cfg).build()?.config().clone();
 
     println!(
         "WALL-E scaling sweep ({}): N in {:?}, {} envs/sampler, {} inference, \

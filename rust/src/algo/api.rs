@@ -1,0 +1,281 @@
+//! The `Algorithm` trait: one abstraction every pipeline stage is
+//! generic over.
+//!
+//! WALL-E's coordinator used to hard-code its algorithms as duplicated
+//! pipelines — `run_ppo_sampler` vs `run_ddpg_sampler`, `serve_ppo` vs
+//! `serve_ddpg`, `PpoLearner` vs `DdpgLearner`, and `Algo::` match arms
+//! threaded through the orchestrator, eval, and the CLI. Following the
+//! factoring argument of "Parallel Actors and Learners" (Zhang et al.,
+//! 2021) and Spreeze (Hou et al., 2023), everything algorithm-specific
+//! now hangs off ONE trait, and the sampler hot loop, inference-pool
+//! serve loop, learner driver, orchestrator, and eval are each written
+//! once against it. Adding an algorithm means implementing this trait
+//! plus a `config::Algo` variant — see [`crate::algo::td3`] for the
+//! worked example (and `docs/API.md` for the full walkthrough).
+//!
+//! The trait splits along the paper's process topology:
+//!
+//! * **Actor (sampler) side** — [`Algorithm::make_sampler`] builds the
+//!   per-worker [`AlgoSampler`] hooks (exploration-noise streams, lane
+//!   recording, chunk-close semantics), and
+//!   [`Algorithm::make_local_actor`] the worker-private policy backend.
+//!   The generic hot loop in `coordinator::sampler` owns everything
+//!   else: lockstep env stepping, chunk windows, sync budgets, policy
+//!   refreshes, and the shared-inference epoch cuts.
+//! * **Shared inference side** — [`Algorithm::make_server_actor`] builds
+//!   the shard's fleet-slice forward
+//!   ([`crate::runtime::ServerActor`]); the serve loop batches, cuts,
+//!   and scatters without knowing which algorithm it serves.
+//! * **Learner side** — [`Algorithm::make_learner`] builds a
+//!   [`LearnerDriver`]; the orchestrator drives `publish_initial` + one
+//!   `iteration` per training iteration.
+//! * **Eval side** — [`Algorithm::make_eval_actor`] builds the SAME
+//!   deterministic actor construction training uses (at batch 1), so
+//!   `walle eval`, the examples, and the figure harness can never drift
+//!   from the train-time forward.
+//!
+//! The slab schema is algorithm-agnostic: each act response carries an
+//! `action` lane plus optional aux lanes (`logp`/`value`/`mean`) that
+//! stochastic algorithms fill and deterministic ones leave empty
+//! ([`TickLanes`]). Experience flows as the same
+//! [`ExperienceChunk`](crate::algo::rollout::ExperienceChunk) for every
+//! algorithm; per-algorithm payload conventions (PPO's logp/value rows,
+//! DDPG/TD3's trailing s' obs row) live entirely inside the hooks.
+
+use crate::algo::normalizer::NormSnapshot;
+use crate::algo::rollout::{ChunkBuf, ChunkEnd, ExperienceChunk};
+use crate::config::{Algo, TrainConfig};
+use crate::coordinator::metrics::IterationMetrics;
+use crate::coordinator::policy_store::PolicyStore;
+use crate::coordinator::queue::Channel;
+use crate::coordinator::sampler::SamplerCfg;
+use crate::runtime::{ActorBackend, BackendFactory, ServerActor};
+use crate::util::json::Json;
+
+/// One sim tick's policy outputs, viewed as lanes. `action` always holds
+/// `m * act_dim` entries (more for fixed-batch local backends — index by
+/// row, never by length). `logp`/`value` hold one entry per row for
+/// stochastic algorithms and are empty (local) or zero-filled (shared
+/// responses) for deterministic ones; hooks that don't fill a lane must
+/// not read it.
+pub struct TickLanes<'a> {
+    pub action: &'a [f32],
+    pub logp: &'a [f32],
+    pub value: &'a [f32],
+}
+
+/// Per-worker sampler behavior + state: exploration-noise streams, lane
+/// recording, and chunk-close semantics. Built once per worker by
+/// [`Algorithm::make_sampler`]; the generic loop in
+/// `coordinator::sampler::run_algo_sampler` calls the hooks in a fixed
+/// order each tick, so per-env RNG consumption is deterministic and
+/// independent of inference placement.
+pub trait AlgoSampler {
+    /// Whether each act call consumes a `[rows * act_dim]` lane of
+    /// N(0,1) draws (PPO's reparameterized sampling). Deterministic
+    /// algorithms submit an empty lane and add exploration noise in
+    /// [`AlgoSampler::record_tick`] instead.
+    fn uses_policy_noise(&self) -> bool {
+        false
+    }
+
+    /// Fill this tick's policy-noise lanes (`[m * act_dim]`, one row per
+    /// env slot, drawn from per-env streams). Only called when
+    /// [`AlgoSampler::uses_policy_noise`] is true.
+    fn fill_policy_noise(&mut self, _noise: &mut [f32]) {}
+
+    /// Record env slot `i`'s tick: append the algorithm's lanes
+    /// (`act`/`logp`/`value`) to `buf` and write the *executed* action
+    /// (post-exploration-noise, clipped) into `exec`
+    /// (`[act_dim]`). The loop has already appended the normalized obs
+    /// row and raw-obs stats.
+    fn record_tick(
+        &mut self,
+        i: usize,
+        lanes: &TickLanes<'_>,
+        buf: &mut ChunkBuf,
+        exec: &mut [f32],
+    );
+
+    /// Whether non-terminal chunk cuts need a V(s') bootstrap forward
+    /// (PPO's GAE targets). When false the loop never issues the extra
+    /// boundary inference call.
+    fn needs_value_bootstrap(&self) -> bool {
+        false
+    }
+
+    /// Close env slot `i`'s chunk at a cut: optionally mutate the buffer
+    /// (DDPG/TD3 append the s' row — `next_obs`, normalized under
+    /// `norm`, the snapshot the chunk was collected with) and return the
+    /// bootstrap value to record. `value_hint` is V(s') from the
+    /// bootstrap forward (boundary cuts) or V(s_t) from this tick's
+    /// forward (shared-mode version cuts); algorithms that don't
+    /// bootstrap ignore it.
+    fn close_chunk(
+        &mut self,
+        buf: &mut ChunkBuf,
+        next_obs: &[f32],
+        norm: &NormSnapshot,
+        end: ChunkEnd,
+        value_hint: f32,
+    ) -> f32;
+
+    /// An episode in env slot `i` just ended (reset exploration state;
+    /// the env itself is reset by the loop).
+    fn on_episode_end(&mut self, _i: usize) {}
+}
+
+/// The learner loop, one instance per run: consume experience chunks,
+/// update parameters, publish through the policy store. Built by
+/// [`Algorithm::make_learner`]; the orchestrator drives it without
+/// knowing the algorithm.
+pub trait LearnerDriver {
+    /// Publish the initial policy so samplers can start.
+    fn publish_initial(&self, store: &PolicyStore);
+
+    /// Run one training iteration (collect → update → publish). Errors
+    /// when the experience queue closed.
+    fn iteration(
+        &mut self,
+        iter: usize,
+        cfg: &TrainConfig,
+        queue: &Channel<ExperienceChunk>,
+        store: &PolicyStore,
+    ) -> anyhow::Result<IterationMetrics>;
+
+    /// The final policy parameters (what `walle train` checkpoints and
+    /// `walle eval` reloads).
+    fn final_params(&self) -> Vec<f32>;
+
+    /// The final observation-normalizer snapshot — the transform the
+    /// published policy expects its inputs to go through. Surfaced in
+    /// `RunResult` so evaluation can apply the SAME normalization
+    /// training used (checkpoint files don't carry it).
+    fn final_norm(&self) -> NormSnapshot;
+}
+
+/// One RL algorithm, end to end: everything the generic pipeline needs
+/// to sample with it, serve it from the shared inference pool, learn it,
+/// evaluate it, and describe it. See the module docs for the contract
+/// and `docs/API.md` for the add-your-own-algorithm walkthrough.
+pub trait Algorithm: Send + Sync {
+    /// The config-enum identity (used for spec rendering and registry
+    /// round-trips).
+    fn id(&self) -> Algo;
+
+    /// CLI/JSON name (`"ppo"`, `"ddpg"`, `"td3"`).
+    fn name(&self) -> &'static str {
+        self.id().name()
+    }
+
+    /// Per-worker sampler hooks (exploration streams are derived from
+    /// `scfg.seed` and the worker's global env slots so trajectories are
+    /// pinned to slots, not to worker layout).
+    fn make_sampler(&self, scfg: &SamplerCfg, m: usize, act_dim: usize) -> Box<dyn AlgoSampler>;
+
+    /// Worker-private policy backend sized for exactly `rows` rows per
+    /// call (local inference mode).
+    fn make_local_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        rows: usize,
+    ) -> anyhow::Result<Box<dyn ActorBackend>>;
+
+    /// Fleet-slice forward for one shared-inference shard (accepts any
+    /// row count 1..=`max_rows`; see
+    /// [`BackendFactory::make_actor_shared`]).
+    fn make_server_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        max_rows: usize,
+    ) -> anyhow::Result<Box<dyn ServerActor>>;
+
+    /// Deterministic (mean-action) single-row evaluator — the SAME
+    /// construction the training path uses at M = 1, so eval can never
+    /// drift from the train-time forward.
+    fn make_eval_actor(
+        &self,
+        factory: &dyn BackendFactory,
+    ) -> anyhow::Result<Box<dyn ActorBackend>>;
+
+    /// The learner loop for one run.
+    fn make_learner(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> anyhow::Result<Box<dyn LearnerDriver>>;
+
+    /// Flat length of the published policy parameters (checkpoint shape
+    /// check for `walle eval`).
+    fn policy_param_count(&self, factory: &dyn BackendFactory, cfg: &TrainConfig) -> usize;
+
+    /// Resolved hyper-parameters as JSON (rendered by `walle info` and
+    /// embedded in `session::SessionSpec`).
+    fn hyperparams(&self, cfg: &TrainConfig) -> Json;
+
+    /// Write this instance's identity + hyper-parameters into a
+    /// `TrainConfig` (the `Session` builder's `.algo(...)` path; the
+    /// config stays the single source of truth at run time).
+    fn apply_to(&self, cfg: &mut TrainConfig);
+
+    /// Algorithm-specific config validation beyond
+    /// `TrainConfig::validate` (which already covers cross-algorithm
+    /// structural checks).
+    fn validate(&self, _cfg: &TrainConfig) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// The algorithm registry: resolve a run config to its [`Algorithm`]
+/// instance. This match is the ONE place an algorithm registers with the
+/// pipeline — the sampler loop, inference pool, orchestrator, eval, and
+/// CLI all dispatch through the trait object it returns.
+pub fn algorithm_from_config(cfg: &TrainConfig) -> Box<dyn Algorithm> {
+    match cfg.algo {
+        Algo::Ppo => Box::new(crate::algo::ppo::Ppo {
+            cfg: cfg.ppo.clone(),
+        }),
+        Algo::Ddpg => Box::new(crate::algo::ddpg::Ddpg {
+            cfg: cfg.ddpg.clone(),
+        }),
+        Algo::Td3 => Box::new(crate::algo::td3::Td3 {
+            cfg: cfg.td3.clone(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_round_trips_every_algo() {
+        for algo in [Algo::Ppo, Algo::Ddpg, Algo::Td3] {
+            let mut cfg = TrainConfig::preset("pendulum");
+            cfg.algo = algo;
+            let a = algorithm_from_config(&cfg);
+            assert_eq!(a.id(), algo);
+            assert_eq!(a.name(), algo.name());
+            // apply_to writes the identity back
+            let mut cfg2 = TrainConfig::default();
+            a.apply_to(&mut cfg2);
+            assert_eq!(cfg2.algo, algo);
+        }
+    }
+
+    #[test]
+    fn hyperparams_render_as_json_objects() {
+        let cfg = TrainConfig::preset("pendulum");
+        for algo in [Algo::Ppo, Algo::Ddpg, Algo::Td3] {
+            let mut c = cfg.clone();
+            c.algo = algo;
+            let a = algorithm_from_config(&c);
+            let j = a.hyperparams(&c);
+            assert!(
+                j.as_obj().is_ok(),
+                "{} hyperparams must be a JSON object",
+                a.name()
+            );
+        }
+    }
+}

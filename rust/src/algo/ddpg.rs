@@ -1,10 +1,219 @@
-//! DDPG learner core (further-work §6.1): replay-buffer sampling + fused
-//! actor/critic/target updates through a `DdpgLearnerBackend`.
+//! DDPG (further-work §6.1): the deterministic-policy [`Algorithm`]
+//! registration + sampler hooks (shared with TD3), and the learner core —
+//! replay-buffer sampling + fused actor/critic/target updates through a
+//! `DdpgLearnerBackend`.
 
-use crate::config::DdpgCfg;
+use crate::algo::api::{AlgoSampler, Algorithm, LearnerDriver, TickLanes};
+use crate::algo::normalizer::NormSnapshot;
+use crate::algo::rollout::{ChunkBuf, ChunkEnd};
+use crate::config::{Algo, DdpgCfg, TrainConfig};
+use crate::coordinator::sampler::SamplerCfg;
 use crate::replay::{ReplayBuffer, ReplaySample};
-use crate::runtime::{DdpgBatch, DdpgLearnerBackend, DdpgTrainState};
+use crate::runtime::{
+    ActorBackend, BackendFactory, DdpgBatch, DdpgLearnerBackend, DdpgTrainState,
+    DeterministicRowActor, DeterministicServerActor, ServerActor,
+};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+
+/// Stream-id base for DDPG exploration-noise RNGs (disjoint from PPO's
+/// `1 << 32` and TD3's `1 << 34` so switching algorithms never aliases
+/// noise streams).
+const DDPG_NOISE_STREAM_BASE: u64 = 1 << 33;
+
+/// DDPG's [`Algorithm`] registration: deterministic actor, Gaussian
+/// exploration noise added worker-side, replay chunks carrying a
+/// trailing s' obs row (no logp/value lanes, no bootstrap forwards).
+#[derive(Debug, Clone, Default)]
+pub struct Ddpg {
+    pub cfg: DdpgCfg,
+}
+
+impl Ddpg {
+    /// A DDPG instance with everything default but the exploration-noise
+    /// stddev (the legacy `run_ddpg_sampler_from` wrapper's knob).
+    pub fn with_explore_noise(sigma: f32) -> Ddpg {
+        Ddpg {
+            cfg: DdpgCfg {
+                explore_noise: sigma,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+impl Algorithm for Ddpg {
+    fn id(&self) -> Algo {
+        Algo::Ddpg
+    }
+
+    fn make_sampler(&self, scfg: &SamplerCfg, m: usize, act_dim: usize) -> Box<dyn AlgoSampler> {
+        Box::new(DeterministicSampler::new(
+            scfg,
+            m,
+            act_dim,
+            DDPG_NOISE_STREAM_BASE,
+            self.cfg.explore_noise,
+        ))
+    }
+
+    fn make_local_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        rows: usize,
+    ) -> anyhow::Result<Box<dyn ActorBackend>> {
+        make_det_local_actor(factory, rows)
+    }
+
+    fn make_server_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        max_rows: usize,
+    ) -> anyhow::Result<Box<dyn ServerActor>> {
+        make_det_server_actor(factory, max_rows)
+    }
+
+    fn make_eval_actor(
+        &self,
+        factory: &dyn BackendFactory,
+    ) -> anyhow::Result<Box<dyn ActorBackend>> {
+        make_det_local_actor(factory, 1)
+    }
+
+    fn make_learner(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> anyhow::Result<Box<dyn LearnerDriver>> {
+        let backend = factory.make_ddpg_learner()?;
+        let (actor, critic) = factory.init_ddpg_params(cfg.seed);
+        Ok(Box::new(crate::coordinator::learner::DdpgLearner::new(
+            backend,
+            actor,
+            critic,
+            factory.obs_dim(),
+            factory.act_dim(),
+            cfg.ddpg.replay_capacity,
+            cfg.seed,
+        )))
+    }
+
+    fn policy_param_count(&self, factory: &dyn BackendFactory, cfg: &TrainConfig) -> usize {
+        crate::nn::layout::actor_layout(factory.obs_dim(), factory.act_dim(), &cfg.hidden)
+            .total()
+    }
+
+    fn hyperparams(&self, cfg: &TrainConfig) -> Json {
+        cfg.ddpg.to_json()
+    }
+
+    fn apply_to(&self, cfg: &mut TrainConfig) {
+        cfg.algo = Algo::Ddpg;
+        cfg.ddpg = self.cfg.clone();
+    }
+}
+
+/// Worker-local deterministic actor sized to exactly `rows` rows,
+/// adapted to the unified row interface — shared by every
+/// deterministic-policy algorithm (DDPG, TD3: same actor network).
+pub(crate) fn make_det_local_actor(
+    factory: &dyn BackendFactory,
+    rows: usize,
+) -> anyhow::Result<Box<dyn ActorBackend>> {
+    Ok(Box::new(DeterministicRowActor::new(
+        factory.make_ddpg_actor_batched(rows)?,
+        factory.obs_dim(),
+        factory.act_dim(),
+    )))
+}
+
+/// Shard-side deterministic fleet actor (see
+/// [`make_det_local_actor`]; the server zero-fills the aux lanes).
+pub(crate) fn make_det_server_actor(
+    factory: &dyn BackendFactory,
+    max_rows: usize,
+) -> anyhow::Result<Box<dyn ServerActor>> {
+    Ok(Box::new(DeterministicServerActor(
+        factory.make_ddpg_actor_shared(max_rows)?,
+    )))
+}
+
+/// Sampler hooks shared by every deterministic-policy algorithm (DDPG,
+/// TD3): per-env exploration-noise streams added to the actor's output,
+/// clipped executed actions recorded as the chunk's action rows,
+/// zero-filled logp/value lanes, and a trailing normalized s' obs row
+/// appended at every chunk close (the replay learner splits it).
+pub struct DeterministicSampler {
+    act_dim: usize,
+    rngs: Vec<Pcg64>,
+    ous: Vec<OuNoise>,
+    /// Per-tick noise scratch ([act_dim], reused).
+    noise: Vec<f32>,
+}
+
+impl DeterministicSampler {
+    /// `stream_base` keeps this algorithm's exploration streams disjoint
+    /// from every other stream family derived from the same seed.
+    pub fn new(
+        scfg: &SamplerCfg,
+        m: usize,
+        act_dim: usize,
+        stream_base: u64,
+        explore_noise: f32,
+    ) -> DeterministicSampler {
+        DeterministicSampler {
+            act_dim,
+            rngs: (0..m)
+                .map(|i| Pcg64::with_stream(scfg.seed, stream_base + scfg.global_env(m, i)))
+                .collect(),
+            ous: (0..m)
+                .map(|_| OuNoise::gaussian(act_dim, explore_noise))
+                .collect(),
+            noise: vec![0.0; act_dim],
+        }
+    }
+}
+
+impl AlgoSampler for DeterministicSampler {
+    fn record_tick(
+        &mut self,
+        i: usize,
+        lanes: &TickLanes<'_>,
+        buf: &mut ChunkBuf,
+        exec: &mut [f32],
+    ) {
+        let a = self.act_dim;
+        exec.copy_from_slice(&lanes.action[i * a..(i + 1) * a]);
+        self.ous[i].sample(&mut self.rngs[i], &mut self.noise);
+        for (e, n) in exec.iter_mut().zip(&self.noise) {
+            *e += n;
+        }
+        crate::env::clip_action(exec);
+        buf.act.extend_from_slice(exec);
+        buf.logp.push(0.0);
+        buf.value.push(0.0);
+    }
+
+    fn close_chunk(
+        &mut self,
+        buf: &mut ChunkBuf,
+        next_obs: &[f32],
+        norm: &NormSnapshot,
+        _end: ChunkEnd,
+        _value_hint: f32,
+    ) -> f32 {
+        // replay reconstruction needs s' of the last row: append the
+        // next obs normalized under the chunk's snapshot (len+1 rows)
+        let start = buf.obs.len();
+        buf.obs.extend_from_slice(next_obs);
+        norm.apply(&mut buf.obs[start..]);
+        0.0
+    }
+
+    fn on_episode_end(&mut self, i: usize) {
+        self.ous[i].reset();
+    }
+}
 
 /// Aggregated statistics for one DDPG update round.
 #[derive(Debug, Clone, Copy, Default)]

@@ -1,13 +1,169 @@
-//! PPO learner core: dataset → shuffled minibatch epochs → Adam steps,
-//! with optional advantage normalization, LR annealing and data-parallel
-//! gradient sharding (the paper's further-work §6.2).
+//! PPO: the stochastic-policy [`Algorithm`] (its [`Ppo`] registration +
+//! sampler hooks) and the learner core — dataset → shuffled minibatch
+//! epochs → Adam steps, with optional advantage normalization, LR
+//! annealing and data-parallel gradient sharding (further-work §6.2).
 
+use crate::algo::api::{AlgoSampler, Algorithm, LearnerDriver, TickLanes};
 use crate::algo::gae::normalize_advantages;
-use crate::algo::rollout::PpoDataset;
-use crate::config::PpoCfg;
+use crate::algo::normalizer::NormSnapshot;
+use crate::algo::rollout::{ChunkBuf, ChunkEnd, PpoDataset};
+use crate::config::{Algo, PpoCfg, TrainConfig};
+use crate::coordinator::sampler::SamplerCfg;
 use crate::nn::mlp::PpoStats;
-use crate::runtime::{PpoLearnerBackend, PpoMinibatch, PpoTrainState};
+use crate::runtime::{
+    ActorBackend, BackendFactory, PpoLearnerBackend, PpoMinibatch, PpoTrainState, ServerActor,
+    StochasticServerActor,
+};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
+
+/// Stream-id base for PPO action-noise RNGs (the global env index is
+/// added). High bases keep noise streams disjoint from env dynamics
+/// streams, which the orchestrator numbers from 1, and from the other
+/// algorithms' exploration streams.
+const PPO_NOISE_STREAM_BASE: u64 = 1 << 32;
+
+/// PPO's [`Algorithm`] registration: Gaussian policy with per-row
+/// reparameterized sampling (the noise lanes), logp/value aux lanes, and
+/// GAE value bootstraps at chunk cuts.
+#[derive(Debug, Clone, Default)]
+pub struct Ppo {
+    pub cfg: PpoCfg,
+}
+
+impl Algorithm for Ppo {
+    fn id(&self) -> Algo {
+        Algo::Ppo
+    }
+
+    fn make_sampler(&self, scfg: &SamplerCfg, m: usize, act_dim: usize) -> Box<dyn AlgoSampler> {
+        Box::new(PpoSampler {
+            act_dim,
+            rngs: (0..m)
+                .map(|i| {
+                    Pcg64::with_stream(scfg.seed, PPO_NOISE_STREAM_BASE + scfg.global_env(m, i))
+                })
+                .collect(),
+        })
+    }
+
+    fn make_local_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        rows: usize,
+    ) -> anyhow::Result<Box<dyn ActorBackend>> {
+        factory.make_actor_batched(rows)
+    }
+
+    fn make_server_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        max_rows: usize,
+    ) -> anyhow::Result<Box<dyn ServerActor>> {
+        Ok(Box::new(StochasticServerActor(
+            factory.make_actor_shared(max_rows)?,
+        )))
+    }
+
+    fn make_eval_actor(
+        &self,
+        factory: &dyn BackendFactory,
+    ) -> anyhow::Result<Box<dyn ActorBackend>> {
+        // the same construction the training path uses at M = 1 (exact
+        // one-row forward; zero noise makes action == mean)
+        factory.make_actor_batched(1)
+    }
+
+    fn make_learner(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> anyhow::Result<Box<dyn LearnerDriver>> {
+        let backend = factory.make_ppo_learner()?;
+        let shards = if cfg.learner_shards > 1 {
+            (0..cfg.learner_shards)
+                .map(|_| factory.make_ppo_learner())
+                .collect::<anyhow::Result<Vec<_>>>()?
+        } else {
+            Vec::new()
+        };
+        Ok(Box::new(crate::coordinator::learner::PpoLearner::new(
+            backend,
+            shards,
+            factory.init_ppo_params(cfg.seed),
+            factory.obs_dim(),
+            cfg.seed,
+        )))
+    }
+
+    fn policy_param_count(&self, factory: &dyn BackendFactory, _cfg: &TrainConfig) -> usize {
+        factory.ppo_param_count()
+    }
+
+    fn hyperparams(&self, cfg: &TrainConfig) -> Json {
+        cfg.ppo.to_json()
+    }
+
+    fn apply_to(&self, cfg: &mut TrainConfig) {
+        cfg.algo = Algo::Ppo;
+        cfg.ppo = self.cfg.clone();
+    }
+}
+
+/// Per-worker PPO sampler hooks: per-env reparameterization-noise
+/// streams, pre-clip action + logp/value lane recording, and value
+/// bootstraps at chunk cuts.
+struct PpoSampler {
+    act_dim: usize,
+    rngs: Vec<Pcg64>,
+}
+
+impl AlgoSampler for PpoSampler {
+    fn uses_policy_noise(&self) -> bool {
+        true
+    }
+
+    fn fill_policy_noise(&mut self, noise: &mut [f32]) {
+        let a = self.act_dim;
+        for (i, rng) in self.rngs.iter_mut().enumerate() {
+            rng.fill_normal(&mut noise[i * a..(i + 1) * a]);
+        }
+    }
+
+    fn record_tick(
+        &mut self,
+        i: usize,
+        lanes: &TickLanes<'_>,
+        buf: &mut ChunkBuf,
+        exec: &mut [f32],
+    ) {
+        let a = self.act_dim;
+        let arow = &lanes.action[i * a..(i + 1) * a];
+        buf.act.extend_from_slice(arow); // pre-clip action (matches logp)
+        buf.logp.push(lanes.logp[i]);
+        buf.value.push(lanes.value[i]);
+        exec.copy_from_slice(arow);
+        crate::env::clip_action(exec);
+    }
+
+    fn needs_value_bootstrap(&self) -> bool {
+        true
+    }
+
+    fn close_chunk(
+        &mut self,
+        _buf: &mut ChunkBuf,
+        _next_obs: &[f32],
+        _norm: &NormSnapshot,
+        end: ChunkEnd,
+        value_hint: f32,
+    ) -> f32 {
+        match end {
+            ChunkEnd::Terminal => 0.0,
+            _ => value_hint,
+        }
+    }
+}
 
 /// Aggregated statistics for one PPO update (averaged over minibatches).
 #[derive(Debug, Clone, Copy, Default)]

@@ -88,6 +88,84 @@ impl ExperienceChunk {
     }
 }
 
+/// Buffers for an in-progress chunk (one per env slot, reused by the
+/// sampler loop; algorithm hooks — `algo::api::AlgoSampler` — append the
+/// per-tick lanes and close chunks through it).
+pub struct ChunkBuf {
+    /// Row-major normalized observation rows. DDPG-style algorithms
+    /// append one trailing s' row at chunk close (the learner splits it).
+    pub obs: Vec<f32>,
+    /// Row-major action rows (pre-clip for PPO so `logp` matches; the
+    /// executed clipped action for deterministic-policy algorithms).
+    pub act: Vec<f32>,
+    pub rew: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub value: Vec<f32>,
+    pub episode_returns: Vec<f32>,
+    pub episode_lengths: Vec<usize>,
+    /// Raw-obs Welford stats shipped to the learner's master normalizer.
+    pub stats: crate::algo::normalizer::RunningNorm,
+    /// Busy seconds accumulated for the current chunk (work only).
+    pub busy_secs: f64,
+}
+
+impl ChunkBuf {
+    pub fn new(obs_dim: usize) -> Self {
+        Self {
+            obs: Vec::new(),
+            act: Vec::new(),
+            rew: Vec::new(),
+            logp: Vec::new(),
+            value: Vec::new(),
+            episode_returns: Vec::new(),
+            episode_lengths: Vec::new(),
+            stats: crate::algo::normalizer::RunningNorm::new(obs_dim, 10.0),
+            busy_secs: 0.0,
+        }
+    }
+
+    /// Transitions buffered so far.
+    pub fn len(&self) -> usize {
+        self.rew.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rew.is_empty()
+    }
+
+    /// Drain the buffers into an [`ExperienceChunk`], resetting this
+    /// buffer for the next chunk.
+    pub fn take(
+        &mut self,
+        id: usize,
+        env_slot: usize,
+        version: u64,
+        end: ChunkEnd,
+        bootstrap: f32,
+    ) -> ExperienceChunk {
+        let dim = self.stats.dim();
+        ExperienceChunk {
+            sampler_id: id,
+            env_slot,
+            policy_version: version,
+            obs: std::mem::take(&mut self.obs),
+            act: std::mem::take(&mut self.act),
+            rew: std::mem::take(&mut self.rew),
+            logp: std::mem::take(&mut self.logp),
+            value: std::mem::take(&mut self.value),
+            end,
+            bootstrap_value: bootstrap,
+            episode_returns: std::mem::take(&mut self.episode_returns),
+            episode_lengths: std::mem::take(&mut self.episode_lengths),
+            obs_stats: Some(std::mem::replace(
+                &mut self.stats,
+                crate::algo::normalizer::RunningNorm::new(dim, 10.0),
+            )),
+            busy_secs: std::mem::take(&mut self.busy_secs),
+        }
+    }
+}
+
 /// Flat PPO dataset for one iteration (all chunks concatenated, with
 /// advantages/returns already computed).
 #[derive(Debug, Clone, Default)]

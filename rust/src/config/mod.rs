@@ -7,11 +7,17 @@
 use crate::util::json::{Json, JsonError};
 use std::collections::BTreeMap;
 
-/// Which algorithm drives the learner.
+/// Which algorithm drives the learner. Each variant is backed by an
+/// `algo::api::Algorithm` implementation (see
+/// `algo::api::algorithm_from_config`, the registry this enum keys).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Algo {
     Ppo,
     Ddpg,
+    /// Twin-delayed DDPG (Fujimoto et al., 2018): twin critics, delayed
+    /// policy updates, target-policy smoothing. Native backend only for
+    /// now (no TD3 AOT artifacts).
+    Td3,
 }
 
 impl Algo {
@@ -19,6 +25,7 @@ impl Algo {
         match s {
             "ppo" => Some(Algo::Ppo),
             "ddpg" => Some(Algo::Ddpg),
+            "td3" => Some(Algo::Td3),
             _ => None,
         }
     }
@@ -27,6 +34,7 @@ impl Algo {
         match self {
             Algo::Ppo => "ppo",
             Algo::Ddpg => "ddpg",
+            Algo::Td3 => "td3",
         }
     }
 }
@@ -317,6 +325,114 @@ impl Default for DdpgCfg {
     }
 }
 
+/// TD3 hyper-parameters (Fujimoto et al., 2018). The leading fields
+/// mirror [`DdpgCfg`] (TD3 is a DDPG refinement); the last three are
+/// TD3's own tricks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Td3Cfg {
+    /// Replay minibatch size per update.
+    pub batch: usize,
+    /// Discount factor.
+    pub gamma: f32,
+    /// Polyak averaging rate for the three target networks.
+    pub tau: f32,
+    /// Actor Adam learning rate.
+    pub lr_actor: f32,
+    /// Critic Adam learning rate (both critics).
+    pub lr_critic: f32,
+    /// Replay ring-buffer capacity in transitions.
+    pub replay_capacity: usize,
+    /// Transitions collected before the first update.
+    pub warmup_steps: usize,
+    /// Gaussian exploration-noise stddev added to actions (sampler side).
+    pub explore_noise: f32,
+    /// Gradient updates per training iteration.
+    pub updates_per_iter: usize,
+    /// Delayed policy updates: the actor (and all targets) step once per
+    /// this many critic updates.
+    pub policy_delay: usize,
+    /// Target-policy smoothing: stddev of the noise added to the target
+    /// action when forming the TD target.
+    pub target_noise: f32,
+    /// Clamp for the target-policy smoothing noise.
+    pub noise_clip: f32,
+}
+
+impl Default for Td3Cfg {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            gamma: 0.99,
+            tau: 0.005,
+            lr_actor: 1e-3,
+            lr_critic: 1e-3,
+            replay_capacity: 200_000,
+            warmup_steps: 2_000,
+            explore_noise: 0.1,
+            updates_per_iter: 200,
+            policy_delay: 2,
+            target_noise: 0.2,
+            noise_clip: 0.5,
+        }
+    }
+}
+
+impl PpoCfg {
+    /// JSON object of these hyper-parameters (the `"ppo"` section of a
+    /// `TrainConfig`, also rendered by `walle info` via the trait).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("minibatch", Json::Num(self.minibatch as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("lr_anneal", Json::Bool(self.lr_anneal)),
+            ("gamma", Json::Num(self.gamma as f64)),
+            ("lam", Json::Num(self.lam as f64)),
+            ("clip", Json::Num(self.clip as f64)),
+            ("ent_coef", Json::Num(self.ent_coef as f64)),
+            ("vf_coef", Json::Num(self.vf_coef as f64)),
+            ("norm_adv", Json::Bool(self.norm_adv)),
+        ])
+    }
+}
+
+impl DdpgCfg {
+    /// JSON object of these hyper-parameters (the `"ddpg"` section).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::Num(self.batch as f64)),
+            ("gamma", Json::Num(self.gamma as f64)),
+            ("tau", Json::Num(self.tau as f64)),
+            ("lr_actor", Json::Num(self.lr_actor as f64)),
+            ("lr_critic", Json::Num(self.lr_critic as f64)),
+            ("replay_capacity", Json::Num(self.replay_capacity as f64)),
+            ("warmup_steps", Json::Num(self.warmup_steps as f64)),
+            ("explore_noise", Json::Num(self.explore_noise as f64)),
+            ("updates_per_iter", Json::Num(self.updates_per_iter as f64)),
+        ])
+    }
+}
+
+impl Td3Cfg {
+    /// JSON object of these hyper-parameters (the `"td3"` section).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::Num(self.batch as f64)),
+            ("gamma", Json::Num(self.gamma as f64)),
+            ("tau", Json::Num(self.tau as f64)),
+            ("lr_actor", Json::Num(self.lr_actor as f64)),
+            ("lr_critic", Json::Num(self.lr_critic as f64)),
+            ("replay_capacity", Json::Num(self.replay_capacity as f64)),
+            ("warmup_steps", Json::Num(self.warmup_steps as f64)),
+            ("explore_noise", Json::Num(self.explore_noise as f64)),
+            ("updates_per_iter", Json::Num(self.updates_per_iter as f64)),
+            ("policy_delay", Json::Num(self.policy_delay as f64)),
+            ("target_noise", Json::Num(self.target_noise as f64)),
+            ("noise_clip", Json::Num(self.noise_clip as f64)),
+        ])
+    }
+}
+
 /// Full run configuration: one source of truth per training run, built
 /// from CLI flags and/or a `--config file.json` and echoed into every
 /// run's `config.json` so results are self-describing.
@@ -382,6 +498,8 @@ pub struct TrainConfig {
     pub ppo: PpoCfg,
     /// DDPG hyper-parameters (used when `algo == Algo::Ddpg`).
     pub ddpg: DdpgCfg,
+    /// TD3 hyper-parameters (used when `algo == Algo::Td3`).
+    pub td3: Td3Cfg,
     /// Parallel-learning shards (further-work §6.2); 1 = single learner.
     pub learner_shards: usize,
     /// Async mode: discard chunks whose policy version lags the current
@@ -414,6 +532,7 @@ impl Default for TrainConfig {
             hidden: vec![64, 64],
             ppo: PpoCfg::default(),
             ddpg: DdpgCfg::default(),
+            td3: Td3Cfg::default(),
             learner_shards: 1,
             max_staleness: 2,
         }
@@ -500,6 +619,34 @@ impl TrainConfig {
                 ));
             }
         }
+        if self.learner_shards > 1 && self.algo != Algo::Ppo {
+            return Err(format!(
+                "learner_shards = {} is a PPO-only knob (data-parallel PPO \
+                 gradient sharding, §6.2); algo {:?} runs a single replay \
+                 learner — drop --learner-shards or switch to --algo ppo",
+                self.learner_shards, self.algo.name()
+            ));
+        }
+        if self.algo == Algo::Td3 {
+            if self.backend == Backend::Xla {
+                return Err(
+                    "algo td3 has no AOT/XLA artifacts yet — its twin-critic \
+                     learner runs native math only; use --backend native"
+                        .into(),
+                );
+            }
+            if self.td3.batch == 0 {
+                return Err("td3.batch must be > 0".into());
+            }
+            if self.td3.policy_delay == 0 {
+                return Err("td3.policy_delay must be >= 1 (1 = update the \
+                     actor every critic step, DDPG-style)"
+                    .into());
+            }
+            if !(0.0..=1.0).contains(&self.td3.gamma) {
+                return Err("td3.gamma must be in [0,1]".into());
+            }
+        }
         Ok(())
     }
 
@@ -552,41 +699,9 @@ impl TrainConfig {
             Json::Num(self.learner_shards as f64),
         );
         m.insert("max_staleness".into(), Json::Num(self.max_staleness as f64));
-        m.insert(
-            "ppo".into(),
-            Json::obj(vec![
-                ("epochs", Json::Num(self.ppo.epochs as f64)),
-                ("minibatch", Json::Num(self.ppo.minibatch as f64)),
-                ("lr", Json::Num(self.ppo.lr as f64)),
-                ("lr_anneal", Json::Bool(self.ppo.lr_anneal)),
-                ("gamma", Json::Num(self.ppo.gamma as f64)),
-                ("lam", Json::Num(self.ppo.lam as f64)),
-                ("clip", Json::Num(self.ppo.clip as f64)),
-                ("ent_coef", Json::Num(self.ppo.ent_coef as f64)),
-                ("vf_coef", Json::Num(self.ppo.vf_coef as f64)),
-                ("norm_adv", Json::Bool(self.ppo.norm_adv)),
-            ]),
-        );
-        m.insert(
-            "ddpg".into(),
-            Json::obj(vec![
-                ("batch", Json::Num(self.ddpg.batch as f64)),
-                ("gamma", Json::Num(self.ddpg.gamma as f64)),
-                ("tau", Json::Num(self.ddpg.tau as f64)),
-                ("lr_actor", Json::Num(self.ddpg.lr_actor as f64)),
-                ("lr_critic", Json::Num(self.ddpg.lr_critic as f64)),
-                (
-                    "replay_capacity",
-                    Json::Num(self.ddpg.replay_capacity as f64),
-                ),
-                ("warmup_steps", Json::Num(self.ddpg.warmup_steps as f64)),
-                ("explore_noise", Json::Num(self.ddpg.explore_noise as f64)),
-                (
-                    "updates_per_iter",
-                    Json::Num(self.ddpg.updates_per_iter as f64),
-                ),
-            ]),
-        );
+        m.insert("ppo".into(), self.ppo.to_json());
+        m.insert("ddpg".into(), self.ddpg.to_json());
+        m.insert("td3".into(), self.td3.to_json());
         Json::Obj(m)
     }
 
@@ -735,6 +850,44 @@ impl TrainConfig {
             }
             if let Some(v) = d.opt("updates_per_iter") {
                 cfg.ddpg.updates_per_iter = v.as_usize()?;
+            }
+        }
+        if let Some(t) = j.opt("td3") {
+            if let Some(v) = t.opt("batch") {
+                cfg.td3.batch = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("gamma") {
+                cfg.td3.gamma = v.as_f32()?;
+            }
+            if let Some(v) = t.opt("tau") {
+                cfg.td3.tau = v.as_f32()?;
+            }
+            if let Some(v) = t.opt("lr_actor") {
+                cfg.td3.lr_actor = v.as_f32()?;
+            }
+            if let Some(v) = t.opt("lr_critic") {
+                cfg.td3.lr_critic = v.as_f32()?;
+            }
+            if let Some(v) = t.opt("replay_capacity") {
+                cfg.td3.replay_capacity = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("warmup_steps") {
+                cfg.td3.warmup_steps = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("explore_noise") {
+                cfg.td3.explore_noise = v.as_f32()?;
+            }
+            if let Some(v) = t.opt("updates_per_iter") {
+                cfg.td3.updates_per_iter = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("policy_delay") {
+                cfg.td3.policy_delay = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("target_noise") {
+                cfg.td3.target_noise = v.as_f32()?;
+            }
+            if let Some(v) = t.opt("noise_clip") {
+                cfg.td3.noise_clip = v.as_f32()?;
             }
         }
         Ok(cfg)
@@ -955,6 +1108,41 @@ mod tests {
         assert!(cfg.validate().is_ok());
         cfg.infer_shards = InferShards::Auto;
         cfg.inference_mode = InferenceMode::Shared;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn td3_round_trips_and_validates() {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.algo = Algo::Td3;
+        cfg.td3.policy_delay = 3;
+        cfg.td3.target_noise = 0.1;
+        cfg.td3.noise_clip = 0.3;
+        cfg.validate().unwrap();
+        let back = TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(Algo::parse("td3"), Some(Algo::Td3));
+        assert_eq!(Algo::Td3.name(), "td3");
+        // TD3 has no AOT artifacts: the XLA backend is rejected loudly
+        cfg.backend = Backend::Xla;
+        assert!(cfg.validate().unwrap_err().contains("td3"));
+        cfg.backend = Backend::Native;
+        cfg.td3.policy_delay = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn learner_shards_is_a_ppo_only_knob() {
+        let mut cfg = TrainConfig::default();
+        cfg.learner_shards = 4;
+        assert!(cfg.validate().is_ok(), "sharded PPO learning is fine");
+        cfg.algo = Algo::Ddpg;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("PPO-only"), "unhelpful error: {err}");
+        cfg.algo = Algo::Td3;
+        assert!(cfg.validate().is_err());
+        cfg.learner_shards = 1;
         assert!(cfg.validate().is_ok());
     }
 

@@ -1,8 +1,18 @@
 //! Policy evaluation: deterministic (mean-action) rollouts used by the
 //! examples, the figure harness, and `walle eval`.
+//!
+//! [`evaluate_algo`] is the canonical entry point: it builds the actor
+//! through [`Algorithm::make_eval_actor`] — the SAME construction the
+//! training path uses at M = 1 — so evaluation can never silently drift
+//! from the train-time forward (the pre-trait code built its own
+//! single-row path per call site). The lower-level [`evaluate`] takes an
+//! already-built actor and applies the normalizer exactly once per
+//! observation.
 
+use crate::algo::api::Algorithm;
+use crate::env::registry::make_env;
 use crate::env::{clip_action, Env};
-use crate::runtime::ActorBackend;
+use crate::runtime::{ActorBackend, BackendFactory};
 use crate::util::rng::Pcg64;
 
 /// Evaluation outcome over `episodes` deterministic rollouts.
@@ -44,7 +54,15 @@ pub fn evaluate(
             norm.apply(&mut norm_obs);
             obs_in[..obs_dim].copy_from_slice(&norm_obs);
             let out = actor.act(params, &obs_in, &noise)?;
-            let mut action = out.mean[..act_dim].to_vec();
+            // deterministic actors leave the mean lane empty: their
+            // action IS the mean. (For stochastic actors the zero noise
+            // above makes action == mean as well; the mean lane is kept
+            // for exactness.)
+            let mut action = if out.mean.is_empty() {
+                out.action[..act_dim].to_vec()
+            } else {
+                out.mean[..act_dim].to_vec()
+            };
             clip_action(&mut action);
             let step = env.step(&action, &mut raw);
             total += step.reward;
@@ -62,6 +80,25 @@ pub fn evaluate(
         mean_len: crate::util::stats::mean_f32(&lengths),
         returns,
     })
+}
+
+/// Evaluate `params` on `env_name` through `algo`'s trait-constructed
+/// eval actor — one code path with training (same batched-actor
+/// construction at M = 1, same single normalizer application), shared by
+/// `walle eval`, `Session::evaluate`, and the examples.
+pub fn evaluate_algo(
+    algo: &dyn Algorithm,
+    factory: &dyn BackendFactory,
+    env_name: &str,
+    params: &[f32],
+    norm: &crate::algo::normalizer::NormSnapshot,
+    episodes: usize,
+    seed: u64,
+) -> anyhow::Result<EvalResult> {
+    let mut env = make_env(env_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown env {env_name:?} for evaluation"))?;
+    let mut actor = algo.make_eval_actor(factory)?;
+    evaluate(env.as_mut(), actor.as_mut(), params, norm, episodes, seed)
 }
 
 #[cfg(test)]
@@ -87,6 +124,33 @@ mod tests {
         // pendulum returns are negative costs
         assert!(r1.mean_return < 0.0);
         assert_eq!(r1.mean_len, 200.0);
+    }
+
+    /// Satellite regression: every algorithm evaluates through its OWN
+    /// trait-constructed actor (correct param count and lane semantics),
+    /// not a hard-coded PPO path.
+    #[test]
+    fn evaluate_algo_routes_every_algorithm_through_its_trait_actor() {
+        use crate::algo::api::algorithm_from_config;
+        use crate::config::{Algo, TrainConfig};
+
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.hidden = vec![8, 8];
+        let f = NativeFactory::new(3, 1, &[8, 8], cfg.ppo.clone(), cfg.ddpg.clone());
+        let norm = NormSnapshot::identity(3);
+        for algo_id in [Algo::Ppo, Algo::Ddpg, Algo::Td3] {
+            cfg.algo = algo_id;
+            let algo = algorithm_from_config(&cfg);
+            let params = vec![0.01f32; algo.policy_param_count(&f, &cfg)];
+            let r =
+                evaluate_algo(algo.as_ref(), &f, "pendulum", &params, &norm, 2, 11).unwrap();
+            assert_eq!(r.returns.len(), 2, "{}", algo.name());
+            assert!(r.mean_return.is_finite(), "{}", algo.name());
+            // deterministic given seed regardless of algorithm
+            let r2 =
+                evaluate_algo(algo.as_ref(), &f, "pendulum", &params, &norm, 2, 11).unwrap();
+            assert_eq!(r.returns, r2.returns, "{}", algo.name());
+        }
     }
 
     #[test]

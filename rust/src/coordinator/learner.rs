@@ -12,6 +12,7 @@
 //!      snapshot; async samplers pick them up at their next chunk
 //!      boundary.
 
+use crate::algo::api::LearnerDriver;
 use crate::algo::ddpg::ddpg_update;
 use crate::algo::normalizer::RunningNorm;
 use crate::algo::ppo::{annealed_lr, ppo_update, ppo_update_sharded};
@@ -207,6 +208,33 @@ impl PpoLearner {
     }
 }
 
+/// The generic pipeline drives PPO through the [`LearnerDriver`] trait
+/// (`algo::api::Algorithm::make_learner` constructs it); the inherent
+/// methods above remain the concrete API for direct use and tests.
+impl LearnerDriver for PpoLearner {
+    fn publish_initial(&self, store: &PolicyStore) {
+        PpoLearner::publish_initial(self, store)
+    }
+
+    fn iteration(
+        &mut self,
+        iter: usize,
+        cfg: &TrainConfig,
+        queue: &Channel<ExperienceChunk>,
+        store: &PolicyStore,
+    ) -> anyhow::Result<IterationMetrics> {
+        PpoLearner::iteration(self, iter, cfg, queue, store)
+    }
+
+    fn final_params(&self) -> Vec<f32> {
+        self.state.flat.clone()
+    }
+
+    fn final_norm(&self) -> crate::algo::normalizer::NormSnapshot {
+        self.norm.snapshot()
+    }
+}
+
 /// DDPG learner (further-work §6.1): replay buffer + off-policy updates
 /// under the same parallel-collection architecture.
 pub struct DdpgLearner {
@@ -327,5 +355,29 @@ impl DdpgLearner {
             v_loss: stats.q_loss,
             ..Default::default()
         })
+    }
+}
+
+impl LearnerDriver for DdpgLearner {
+    fn publish_initial(&self, store: &PolicyStore) {
+        DdpgLearner::publish_initial(self, store)
+    }
+
+    fn iteration(
+        &mut self,
+        iter: usize,
+        cfg: &TrainConfig,
+        queue: &Channel<ExperienceChunk>,
+        store: &PolicyStore,
+    ) -> anyhow::Result<IterationMetrics> {
+        DdpgLearner::iteration(self, iter, cfg, queue, store)
+    }
+
+    fn final_params(&self) -> Vec<f32> {
+        self.state.actor.clone()
+    }
+
+    fn final_norm(&self) -> crate::algo::normalizer::NormSnapshot {
+        self.norm.snapshot()
     }
 }

@@ -5,17 +5,24 @@
 //! owning a fleet-slice actor; wires the experience queue, policy store,
 //! and inference request queues between them, runs the iteration loop,
 //! and shuts everything down cleanly (the WALL-E launcher in Fig 2).
+//!
+//! Everything algorithm-specific is reached through ONE
+//! [`Algorithm`] trait object: sampler hooks, local/shared policy
+//! backends, and the learner driver. [`run`] resolves the trait object
+//! from `cfg.algo` via the registry
+//! (`algo::api::algorithm_from_config`); `session::Session` calls
+//! [`run_with`] with the instance its builder carries. Either way, this
+//! module never matches on a concrete algorithm — adding one touches
+//! the registry, not the topology.
 
+use crate::algo::api::{algorithm_from_config, Algorithm};
+use crate::algo::normalizer::NormSnapshot;
 use crate::algo::rollout::ExperienceChunk;
-use crate::config::{Algo, InferEpoch, InferWait, InferenceMode, TrainConfig};
-use crate::coordinator::learner::{DdpgLearner, PpoLearner};
+use crate::config::{InferEpoch, InferWait, InferenceMode, TrainConfig};
 use crate::coordinator::metrics::{InferenceReport, IterationMetrics, MetricsLog};
 use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
-use crate::coordinator::sampler::{
-    run_ddpg_sampler_from, run_ppo_sampler_from, DdpgPolicySource, PpoPolicySource, SamplerCfg,
-    SamplerReport,
-};
+use crate::coordinator::sampler::{run_algo_sampler, PolicySource, SamplerCfg, SamplerReport};
 use crate::env::registry::make_env;
 use crate::env::vec_env::VecEnv;
 use crate::runtime::epoch::EpochMode;
@@ -31,8 +38,13 @@ use std::time::Duration;
 pub struct RunResult {
     pub metrics: Vec<IterationMetrics>,
     pub sampler_reports: Vec<SamplerReport>,
-    /// Final policy parameters (PPO flat vector or DDPG actor).
+    /// Final policy parameters (PPO flat vector, or the DDPG/TD3 actor).
     pub final_params: Vec<f32>,
+    /// The observation-normalizer snapshot published with the final
+    /// params — pass it to `Session::evaluate_with_norm` (or
+    /// `eval::evaluate`) so evaluation applies the SAME input transform
+    /// training did. Checkpoint files carry only the parameters.
+    pub final_norm: NormSnapshot,
     /// (pushed, popped, producer blocked, consumer blocked).
     pub queue_stats: (u64, u64, Duration, Duration),
     /// Dispatch statistics of the shared inference server
@@ -44,13 +56,30 @@ pub struct RunResult {
 ///
 /// Callers choose the backend by passing the matching factory
 /// (`NativeFactory` or `XlaFactory`); sampler threads each build their own
-/// thread-local backend through it.
+/// thread-local backend through it. The algorithm is resolved from
+/// `cfg.algo` through the registry; use [`run_with`] to supply an
+/// [`Algorithm`] instance directly (the `Session` path).
 pub fn run(
     cfg: &TrainConfig,
     factory: &dyn BackendFactory,
     log: &mut MetricsLog,
 ) -> anyhow::Result<RunResult> {
+    let algo = algorithm_from_config(cfg);
+    run_with(algo.as_ref(), cfg, factory, log)
+}
+
+/// [`run`] with an explicit [`Algorithm`] instance. `cfg` remains the
+/// source of truth for every hyper-parameter the learner reads per
+/// iteration; `algo` must agree with `cfg.algo` (the `Session` builder
+/// guarantees this by construction via `Algorithm::apply_to`).
+pub fn run_with(
+    algo: &dyn Algorithm,
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    log: &mut MetricsLog,
+) -> anyhow::Result<RunResult> {
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    algo.validate(cfg).map_err(|e| anyhow::anyhow!(e))?;
     anyhow::ensure!(
         make_env(&cfg.env).is_some(),
         "unknown env {:?} (known: {:?})",
@@ -110,11 +139,7 @@ pub fn run(
                     .map(|shard| {
                         let shard = shard.clone();
                         let store = &store;
-                        let algo = cfg.algo;
-                        scope.spawn(move || match algo {
-                            Algo::Ppo => shard.serve_ppo(factory, store),
-                            Algo::Ddpg => shard.serve_ddpg(factory, store),
-                        })
+                        scope.spawn(move || shard.serve_algo(algo, factory, store))
                     })
                     .collect()
             })
@@ -139,8 +164,6 @@ pub fn run(
             let store = &store;
             let stop = &stop;
             let env_name = cfg.env.clone();
-            let algo = cfg.algo;
-            let explore = cfg.ddpg.explore_noise;
             let client = clients[id].take();
             let live = live_samplers.clone();
             handles.push(scope.spawn(move || -> anyhow::Result<SamplerReport> {
@@ -156,13 +179,14 @@ pub fn run(
                     stop,
                 };
                 run_sampler_worker(
-                    scfg, m, &env_name, algo, explore, client, factory, store, queue, stop,
+                    scfg, m, &env_name, algo, client, factory, store, queue, stop,
                 )
             }));
         }
 
         // ---- learner (this thread) -------------------------------------
-        let final_params = match run_learner(cfg, factory, &queue, &store, log) {
+        let (final_params, final_norm) = match run_learner(algo, cfg, factory, &queue, &store, log)
+        {
             Ok(p) => p,
             Err(e) => {
                 // A learner failure must still release the samplers and
@@ -189,9 +213,7 @@ pub fn run(
         stop.store(true, Ordering::Relaxed);
         queue.close();
         // publish once more so sync-mode samplers blocked on wait_newer wake
-        store.publish(final_params.clone(), crate::algo::normalizer::NormSnapshot::identity(
-            factory.obs_dim(),
-        ));
+        store.publish(final_params.clone(), final_norm.clone());
         // Join EVERY scoped thread before surfacing the first failure:
         // early-returning on the first bad join would leave later
         // panicked threads to the scope's implicit join, which re-raises
@@ -231,6 +253,7 @@ pub fn run(
             metrics: log.iterations.clone(),
             sampler_reports: reports,
             final_params,
+            final_norm,
             queue_stats: (
                 queue.stats.pushed(),
                 queue.stats.popped(),
@@ -280,15 +303,14 @@ impl Drop for FleetGuard<'_> {
 }
 
 /// One sampler worker body: build the env + policy source and run the
-/// algorithm loop. Factored out of [`run`] so the spawn closure can arm
-/// the [`FleetGuard`] supervision around it.
+/// generic algorithm loop. Factored out of [`run_with`] so the spawn
+/// closure can arm the [`FleetGuard`] supervision around it.
 #[allow(clippy::too_many_arguments)]
 fn run_sampler_worker(
     scfg: SamplerCfg,
     m: usize,
     env_name: &str,
-    algo: Algo,
-    explore: f32,
+    algo: &dyn Algorithm,
     client: Option<ActorClient>,
     factory: &dyn BackendFactory,
     store: &PolicyStore,
@@ -297,88 +319,39 @@ fn run_sampler_worker(
 ) -> anyhow::Result<SamplerReport> {
     let id = scfg.id;
     let venv = VecEnv::from_registry(env_name, m, scfg.seed, (id * m) as u64 + 1)?;
-    match algo {
-        Algo::Ppo => {
-            let source = match client {
-                Some(c) => PpoPolicySource::Shared(c),
-                None => PpoPolicySource::Local(factory.make_actor_batched(m)?),
-            };
-            Ok(run_ppo_sampler_from(scfg, venv, source, store, queue, stop))
-        }
-        Algo::Ddpg => {
-            let source = match client {
-                Some(c) => DdpgPolicySource::Shared(c),
-                None => DdpgPolicySource::Local(factory.make_ddpg_actor_batched(m)?),
-            };
-            Ok(run_ddpg_sampler_from(
-                scfg, venv, source, explore, store, queue, stop,
-            ))
-        }
-    }
+    let source = match client {
+        Some(c) => PolicySource::Shared(c),
+        None => PolicySource::Local(algo.make_local_actor(factory, m)?),
+    };
+    Ok(run_algo_sampler(algo, scfg, venv, source, store, queue, stop))
 }
 
-/// Build the learner for `cfg.algo` and drive every training iteration on
-/// the calling thread, returning the final policy parameters. Factored
-/// out of [`run`] so a learner failure can be intercepted to release the
-/// worker fleet before the thread scope joins (otherwise the join would
-/// wait forever on samplers that were never told to stop).
+/// Build `algo`'s learner and drive every training iteration on the
+/// calling thread, returning the final policy parameters. Factored out
+/// of [`run_with`] so a learner failure can be intercepted to release
+/// the worker fleet before the thread scope joins (otherwise the join
+/// would wait forever on samplers that were never told to stop).
 fn run_learner(
+    algo: &dyn Algorithm,
     cfg: &TrainConfig,
     factory: &dyn BackendFactory,
     queue: &Channel<ExperienceChunk>,
     store: &PolicyStore,
     log: &mut MetricsLog,
-) -> anyhow::Result<Vec<f32>> {
-    match cfg.algo {
-        Algo::Ppo => {
-            let backend = factory.make_ppo_learner()?;
-            let shards = if cfg.learner_shards > 1 {
-                (0..cfg.learner_shards)
-                    .map(|_| factory.make_ppo_learner())
-                    .collect::<anyhow::Result<Vec<_>>>()?
-            } else {
-                Vec::new()
-            };
-            let mut learner = PpoLearner::new(
-                backend,
-                shards,
-                factory.init_ppo_params(cfg.seed),
-                factory.obs_dim(),
-                cfg.seed,
-            );
-            learner.publish_initial(store);
-            for iter in 0..cfg.iterations {
-                let m = learner.iteration(iter, cfg, queue, store)?;
-                log.push(m);
-            }
-            Ok(learner.state.flat.clone())
-        }
-        Algo::Ddpg => {
-            let backend = factory.make_ddpg_learner()?;
-            let (actor, critic) = factory.init_ddpg_params(cfg.seed);
-            let mut learner = DdpgLearner::new(
-                backend,
-                actor,
-                critic,
-                factory.obs_dim(),
-                factory.act_dim(),
-                cfg.ddpg.replay_capacity,
-                cfg.seed,
-            );
-            learner.publish_initial(store);
-            for iter in 0..cfg.iterations {
-                let m = learner.iteration(iter, cfg, queue, store)?;
-                log.push(m);
-            }
-            Ok(learner.state.actor.clone())
-        }
+) -> anyhow::Result<(Vec<f32>, NormSnapshot)> {
+    let mut learner = algo.make_learner(factory, cfg)?;
+    learner.publish_initial(store);
+    for iter in 0..cfg.iterations {
+        let m = learner.iteration(iter, cfg, queue, store)?;
+        log.push(m);
     }
+    Ok((learner.final_params(), learner.final_norm()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Backend;
+    use crate::config::{Algo, Backend};
     use crate::runtime::native_backend::NativeFactory;
 
     fn tiny_cfg(samplers: usize, async_mode: bool) -> TrainConfig {

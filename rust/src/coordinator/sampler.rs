@@ -1,17 +1,32 @@
 //! Sampler worker: one of the paper's N parallel rollout processes,
-//! vectorized over M environments per worker.
+//! vectorized over M environments per worker — ONE generic hot loop,
+//! parameterized by the [`Algorithm`] trait.
 //!
 //! Each worker owns a [`VecEnv`] of `envs_per_sampler` homogeneous env
 //! instances, a thread-local policy backend (its own PJRT client +
-//! compiled `act` executable on the XLA path), and per-env RNG streams.
-//! It repeatedly:
+//! compiled `act` executable on the XLA path), and the algorithm's
+//! per-env exploration streams ([`AlgoSampler`]). It repeatedly:
 //!   1. refreshes parameters from the policy store at chunk boundaries,
 //!   2. issues ONE batched `act` call with M real rows per sim tick and
-//!      steps all M envs in lockstep, scattering (obs, act, logp, V)
-//!      into per-env chunk buffers,
+//!      steps all M envs in lockstep, scattering the algorithm's lanes
+//!      (actions, and logp/V for stochastic policies) into per-env chunk
+//!      buffers,
 //!   3. flushes per-env `ExperienceChunk`s into the bounded experience
-//!      queue, preserving GAE segment semantics exactly (terminal vs
+//!      queue, preserving segment semantics exactly (terminal vs
 //!      time-limit truncation vs mid-episode continuation).
+//!
+//! The loop owns everything algorithm-independent: lockstep stepping,
+//! chunk windows, sync budgets, policy refreshes, busy-time accounting,
+//! and the shared-inference epoch cuts. Everything algorithm-specific —
+//! which noise lanes each act call consumes, what gets recorded per
+//! tick, whether cuts need a V(s') bootstrap forward, and how a chunk is
+//! closed (PPO records a bootstrap value; deterministic replay
+//! algorithms append a normalized s' row) — lives behind the
+//! [`AlgoSampler`] hooks, called
+//! in a fixed per-env order so RNG consumption is deterministic. The
+//! legacy entry points (`run_ppo_sampler*`, `run_ddpg_sampler*`) are
+//! thin wrappers over [`run_algo_sampler`] and remain bit-for-bit
+//! equivalent to the pre-trait loops.
 //!
 //! Chunk cuts follow two rules (see `plan_boundaries`): episode ends cut
 //! only their own env, while full-buffer cuts happen for the whole worker
@@ -30,20 +45,20 @@
 //!
 //! ## Inference placement
 //!
-//! The hot loops are generic over a [`PpoPolicySource`] /
-//! [`DdpgPolicySource`]:
+//! The hot loop is generic over a [`PolicySource`]:
 //!
-//! * **Local** — the worker owns a private `ActorBackend` and normalizes
-//!   observations itself under its current snapshot; policy refreshes
-//!   piggyback on chunk boundaries (the PR 1 path, bit-for-bit).
+//! * **Local** — the worker owns a private [`ActorBackend`] (built via
+//!   [`Algorithm::make_local_actor`]) and normalizes observations itself
+//!   under its current snapshot; policy refreshes piggyback on chunk
+//!   boundaries (the PR 1 path, bit-for-bit).
 //! * **Shared** — the worker submits its raw M-row slab to the shared
 //!   inference server through an `ActorClient` and blocks on the
-//!   response, which carries the rows' outputs, the server-normalized
+//!   response, which carries the rows' lanes, the server-normalized
 //!   obs, and the `(epoch, version)` of the dispatch. Refresh is
 //!   server-driven: when a response's pool epoch (or, gateless, its
 //!   snapshot version) moves past that of the rows buffered so far, the
 //!   worker cuts every non-empty chunk *before* appending the new tick
-//!   (a `Continuation` bootstrapped with this tick's V(s_t)), preserving
+//!   (a `Continuation` closed through the algorithm hook), preserving
 //!   one-policy-version-per-chunk without any worker-side store polling.
 //!   Under `--infer-epoch pool` the epoch moves on the same dispatch
 //!   boundary for every shard, so the cut tick is fleet-consistent even
@@ -51,23 +66,21 @@
 //!
 //! Under a fixed policy version the two modes produce bitwise-identical
 //! per-env chunk streams (the MLP forward is row-independent; see the
-//! `shared_mode_chunk_stream_matches_local_bitwise` test).
+//! shard-determinism tests below).
 
-use crate::algo::ddpg::OuNoise;
-use crate::algo::normalizer::{NormSnapshot, RunningNorm};
-use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
+use crate::algo::api::{AlgoSampler, Algorithm, TickLanes};
+use crate::algo::rollout::{ChunkBuf, ChunkEnd, ExperienceChunk};
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::coordinator::queue::Channel;
 use crate::env::vec_env::{VecEnv, VecStepInfo};
 use crate::runtime::inference_server::{ActResponse, ActorClient};
-use crate::runtime::{ActResult, ActorBackend, DdpgActorBackend};
-use crate::util::rng::Pcg64;
+use crate::runtime::{ActResult, ActorBackend, DdpgActorBackend, DeterministicRowActor};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Where a PPO sampler evaluates the policy each sim tick.
-pub enum PpoPolicySource {
+/// Where a sampler evaluates its policy each sim tick (any algorithm).
+pub enum PolicySource {
     /// Private per-worker backend (N forwards per tick fleet-wide).
     Local(Box<dyn ActorBackend>),
     /// Shared inference-pool shard handle (cross-worker mega-batch
@@ -75,7 +88,18 @@ pub enum PpoPolicySource {
     Shared(ActorClient),
 }
 
-/// Where a DDPG sampler evaluates the deterministic actor each sim tick.
+/// Legacy PPO spelling of [`PolicySource`] (kept for the pre-trait API;
+/// `run_ppo_sampler_from` converts and delegates).
+pub enum PpoPolicySource {
+    /// Private per-worker backend.
+    Local(Box<dyn ActorBackend>),
+    /// Shared inference-pool shard handle.
+    Shared(ActorClient),
+}
+
+/// Legacy DDPG spelling of [`PolicySource`]: local sources carry the
+/// deterministic-actor backend, wrapped into the unified row interface
+/// by `run_ddpg_sampler_from`.
 pub enum DdpgPolicySource {
     /// Private per-worker backend.
     Local(Box<dyn DdpgActorBackend>),
@@ -83,58 +107,36 @@ pub enum DdpgPolicySource {
     Shared(ActorClient),
 }
 
-/// One tick's PPO policy outputs: owned by the worker (local backend) or
+/// One tick's policy outputs: owned by the worker (local backend) or
 /// held in the recycled shared-inference response. Drop it before the
 /// next inference call so the shared buffers return to the client.
-enum PpoTickOut {
+enum TickOut {
     Local(ActResult),
     Shared(ActResponse),
 }
 
-impl PpoTickOut {
+impl TickOut {
     fn action(&self) -> &[f32] {
         match self {
-            PpoTickOut::Local(r) => &r.action,
-            PpoTickOut::Shared(r) => r.action(),
+            TickOut::Local(r) => &r.action,
+            TickOut::Shared(r) => r.action(),
         }
     }
 
     fn logp(&self) -> &[f32] {
         match self {
-            PpoTickOut::Local(r) => &r.logp,
-            PpoTickOut::Shared(r) => r.logp(),
+            TickOut::Local(r) => &r.logp,
+            TickOut::Shared(r) => r.logp(),
         }
     }
 
     fn value(&self) -> &[f32] {
         match self {
-            PpoTickOut::Local(r) => &r.value,
-            PpoTickOut::Shared(r) => r.value(),
+            TickOut::Local(r) => &r.value,
+            TickOut::Shared(r) => r.value(),
         }
     }
 }
-
-/// DDPG counterpart of [`PpoTickOut`] (deterministic actions only).
-enum DdpgTickOut {
-    Local(Vec<f32>),
-    Shared(ActResponse),
-}
-
-impl DdpgTickOut {
-    fn action(&self) -> &[f32] {
-        match self {
-            DdpgTickOut::Local(a) => a,
-            DdpgTickOut::Shared(r) => r.action(),
-        }
-    }
-}
-
-/// Stream-id base for PPO action-noise RNGs (global env index is added).
-/// High bases keep noise streams disjoint from env dynamics streams,
-/// which the orchestrator numbers from 1.
-const PPO_NOISE_STREAM_BASE: u64 = 1 << 32;
-/// Stream-id base for DDPG exploration-noise RNGs.
-const DDPG_NOISE_STREAM_BASE: u64 = 1 << 33;
 
 /// Static sampler configuration.
 #[derive(Debug, Clone)]
@@ -153,7 +155,7 @@ impl SamplerCfg {
     /// Global index of this worker's env slot `i` (workers hold `m` envs
     /// each, numbered contiguously). Noise streams derive from this, so a
     /// trajectory is pinned to its global slot, not to the worker layout.
-    fn global_env(&self, m: usize, i: usize) -> u64 {
+    pub fn global_env(&self, m: usize, i: usize) -> u64 {
         (self.id * m + i) as u64
     }
 }
@@ -179,14 +181,20 @@ fn wait_first_policy(store: &PolicyStore, stop: &AtomicBool) -> Option<Arc<Polic
 }
 
 /// Normalize `rows` raw observation rows from `src` into `dst` in place.
-fn normalize_rows(dst: &mut [f32], src: &[f32], norm: &NormSnapshot, rows: usize, dim: usize) {
+fn normalize_rows(
+    dst: &mut [f32],
+    src: &[f32],
+    norm: &crate::algo::normalizer::NormSnapshot,
+    rows: usize,
+    dim: usize,
+) {
     dst[..rows * dim].copy_from_slice(&src[..rows * dim]);
     for r in 0..rows {
         norm.apply(&mut dst[r * dim..(r + 1) * dim]);
     }
 }
 
-/// Decide this tick's chunk cuts (shared by the PPO and DDPG loops).
+/// Decide this tick's chunk cuts (shared by every algorithm).
 ///
 /// Cuts happen per env at episode ends, and for ALL envs together at the
 /// worker's chunk window edge (`window_ticks >= chunk_steps`). Aligning
@@ -268,121 +276,45 @@ fn refresh_policy(
     true
 }
 
-/// Shared-mode version cut (PPO): the server's dispatch moved to a newer
-/// policy version, so every row buffered so far belongs to `old_version`
-/// and this tick's rows must not join them. Flush each non-empty buffer
-/// as a `Continuation` chunk bootstrapped with V(s_t) — the value this
-/// tick's forward just produced for the pre-step observation, which is
-/// exactly the state the cut chunk ends on. Returns false if the queue
+/// Shared-mode version cut: the server's dispatch moved to a newer
+/// policy version (or pool epoch), so every row buffered so far belongs
+/// to the old snapshot and this tick's rows must not join them. Each
+/// non-empty buffer is closed through the algorithm hook as a
+/// `Continuation` — PPO bootstraps with V(s_t), the value this tick's
+/// forward just produced for the pre-step observation (exactly the state
+/// the cut chunk ends on); deterministic replay algorithms append that
+/// pre-step observation as the chunk's s' row, normalized under the OLD
+/// snapshot the chunk was collected with. Returns false if the queue
 /// closed.
+#[allow(clippy::too_many_arguments)]
 fn flush_version_cut(
-    cfg: &SamplerCfg,
-    bufs: &mut [ChunkBuf],
-    values: &[f32],
-    old_version: u64,
-    queue: &Channel<ExperienceChunk>,
-    report: &mut SamplerReport,
-) -> bool {
-    for (i, buf) in bufs.iter_mut().enumerate() {
-        if buf.len() == 0 {
-            continue;
-        }
-        let chunk = buf.take(cfg.id, i, old_version, ChunkEnd::Continuation, values[i]);
-        if queue.push(chunk).is_err() {
-            return false;
-        }
-        report.chunks += 1;
-    }
-    true
-}
-
-/// Shared-mode version cut (DDPG): same boundary rule, but replay chunks
-/// carry s' as a trailing obs row — the current (pre-tick) observation,
-/// normalized under the OLD snapshot the chunk was collected with.
-fn ddpg_flush_version_cut(
+    hooks: &mut dyn AlgoSampler,
     cfg: &SamplerCfg,
     bufs: &mut [ChunkBuf],
     venv: &VecEnv,
     policy: &PolicySnapshot,
+    values: &[f32],
     queue: &Channel<ExperienceChunk>,
     report: &mut SamplerReport,
 ) -> bool {
     for (i, buf) in bufs.iter_mut().enumerate() {
-        if buf.len() == 0 {
+        if buf.is_empty() {
             continue;
         }
-        let mut next_row = venv.obs_row(i).to_vec();
-        policy.norm.apply(&mut next_row);
-        buf.obs.extend_from_slice(&next_row);
-        let chunk = buf.take(cfg.id, i, policy.version, ChunkEnd::Continuation, 0.0);
+        let boot = hooks.close_chunk(
+            buf,
+            venv.obs_row(i),
+            &policy.norm,
+            ChunkEnd::Continuation,
+            values[i],
+        );
+        let chunk = buf.take(cfg.id, i, policy.version, ChunkEnd::Continuation, boot);
         if queue.push(chunk).is_err() {
             return false;
         }
         report.chunks += 1;
     }
     true
-}
-
-/// Buffers for an in-progress chunk (one per env slot, reused).
-struct ChunkBuf {
-    obs: Vec<f32>,
-    act: Vec<f32>,
-    rew: Vec<f32>,
-    logp: Vec<f32>,
-    value: Vec<f32>,
-    episode_returns: Vec<f32>,
-    episode_lengths: Vec<usize>,
-    /// Raw-obs Welford stats shipped to the learner's master normalizer.
-    stats: RunningNorm,
-    /// Busy seconds accumulated for the current chunk (work only).
-    busy_secs: f64,
-}
-
-impl ChunkBuf {
-    fn new(obs_dim: usize) -> Self {
-        Self {
-            obs: Vec::new(),
-            act: Vec::new(),
-            rew: Vec::new(),
-            logp: Vec::new(),
-            value: Vec::new(),
-            episode_returns: Vec::new(),
-            episode_lengths: Vec::new(),
-            stats: RunningNorm::new(obs_dim, 10.0),
-            busy_secs: 0.0,
-        }
-    }
-
-    fn len(&self) -> usize {
-        self.rew.len()
-    }
-
-    fn take(
-        &mut self,
-        id: usize,
-        env_slot: usize,
-        version: u64,
-        end: ChunkEnd,
-        bootstrap: f32,
-    ) -> ExperienceChunk {
-        let dim = self.stats.dim();
-        ExperienceChunk {
-            sampler_id: id,
-            env_slot,
-            policy_version: version,
-            obs: std::mem::take(&mut self.obs),
-            act: std::mem::take(&mut self.act),
-            rew: std::mem::take(&mut self.rew),
-            logp: std::mem::take(&mut self.logp),
-            value: std::mem::take(&mut self.value),
-            end,
-            bootstrap_value: bootstrap,
-            episode_returns: std::mem::take(&mut self.episode_returns),
-            episode_lengths: std::mem::take(&mut self.episode_lengths),
-            obs_stats: Some(std::mem::replace(&mut self.stats, RunningNorm::new(dim, 10.0))),
-            busy_secs: std::mem::take(&mut self.busy_secs),
-        }
-    }
 }
 
 /// Run the PPO sampler loop with a private per-worker backend (local
@@ -399,16 +331,85 @@ pub fn run_ppo_sampler(
 }
 
 /// Run the PPO sampler loop until `stop` is set or the queue closes.
-///
-/// `venv` holds this worker's M lockstep envs; a Local `source` must
-/// accept at least M rows per call (`BackendFactory::make_actor_batched`
-/// aligns the two so the forward carries no padding on the native path),
-/// while a Shared source submits exactly M raw rows per tick to the
-/// inference server.
+/// Thin wrapper over the generic [`run_algo_sampler`] with the PPO
+/// algorithm hooks (the pre-trait behavior, bit-for-bit).
 pub fn run_ppo_sampler_from(
     cfg: SamplerCfg,
+    venv: VecEnv,
+    source: PpoPolicySource,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    let source = match source {
+        PpoPolicySource::Local(actor) => PolicySource::Local(actor),
+        PpoPolicySource::Shared(client) => PolicySource::Shared(client),
+    };
+    let algo = crate::algo::ppo::Ppo::default();
+    run_algo_sampler(&algo, cfg, venv, source, store, queue, stop)
+}
+
+/// Run the DDPG sampler loop with a private per-worker backend (local
+/// inference mode). Thin wrapper over [`run_ddpg_sampler_from`].
+pub fn run_ddpg_sampler(
+    cfg: SamplerCfg,
+    venv: VecEnv,
+    actor: Box<dyn DdpgActorBackend>,
+    explore_noise: f32,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    run_ddpg_sampler_from(
+        cfg,
+        venv,
+        DdpgPolicySource::Local(actor),
+        explore_noise,
+        store,
+        queue,
+        stop,
+    )
+}
+
+/// Run the DDPG sampler loop (deterministic actor + per-env exploration
+/// noise; chunks carry raw transitions for the replay buffer). Thin
+/// wrapper over the generic [`run_algo_sampler`] with the DDPG algorithm
+/// hooks (the pre-trait behavior, bit-for-bit).
+pub fn run_ddpg_sampler_from(
+    cfg: SamplerCfg,
+    venv: VecEnv,
+    source: DdpgPolicySource,
+    explore_noise: f32,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    let (obs_dim, act_dim) = (venv.obs_dim(), venv.act_dim());
+    let source = match source {
+        DdpgPolicySource::Local(actor) => PolicySource::Local(Box::new(
+            DeterministicRowActor::new(actor, obs_dim, act_dim),
+        )),
+        DdpgPolicySource::Shared(client) => PolicySource::Shared(client),
+    };
+    let algo = crate::algo::ddpg::Ddpg::with_explore_noise(explore_noise);
+    run_algo_sampler(&algo, cfg, venv, source, store, queue, stop)
+}
+
+/// The generic sampler hot loop: run `algo`'s rollout worker until
+/// `stop` is set or the queue closes.
+///
+/// `venv` holds this worker's M lockstep envs; a Local `source` must
+/// accept at least M rows per call ([`Algorithm::make_local_actor`]
+/// aligns the two so the forward carries no padding on the native path),
+/// while a Shared source submits exactly M raw rows per tick to the
+/// inference server. All algorithm-specific behavior goes through the
+/// [`AlgoSampler`] hooks built once per worker — see the module docs for
+/// the division of labor.
+pub fn run_algo_sampler(
+    algo: &dyn Algorithm,
+    cfg: SamplerCfg,
     mut venv: VecEnv,
-    mut source: PpoPolicySource,
+    mut source: PolicySource,
     store: &PolicyStore,
     queue: &Channel<ExperienceChunk>,
     stop: &AtomicBool,
@@ -417,13 +418,14 @@ pub fn run_ppo_sampler_from(
     let m = venv.num_envs();
     let obs_dim = venv.obs_dim();
     let act_dim = venv.act_dim();
-    let shared = matches!(source, PpoPolicySource::Shared(_));
+    let mut hooks = algo.make_sampler(&cfg, m, act_dim);
+    let shared = matches!(source, PolicySource::Shared(_));
     // a local backend may require a fixed batch > M (XLA artifacts): rows
     // past M are zero padding whose outputs are ignored. Native batched
     // actors advertise exactly M, so the forward is full. Shared mode
     // always submits exactly M rows (the server owns any padding).
     let backend_batch = match &source {
-        PpoPolicySource::Local(actor) if actor.batch() != 0 => actor.batch(),
+        PolicySource::Local(actor) if actor.batch() != 0 => actor.batch(),
         _ => m,
     };
     if backend_batch < m {
@@ -445,14 +447,15 @@ pub fn run_ppo_sampler_from(
     // or gateless server, where the snapshot version alone drives cuts)
     let mut policy_epoch = 0u64;
 
-    // per-env policy-noise streams: disjoint from env dynamics streams and
-    // pinned to the global env slot, so trajectories don't depend on M.
-    let mut noise_rngs: Vec<Pcg64> = (0..m)
-        .map(|i| Pcg64::with_stream(cfg.seed, PPO_NOISE_STREAM_BASE + cfg.global_env(m, i)))
-        .collect();
-
     let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
-    let mut noise = vec![0.0f32; backend_batch * act_dim];
+    // policy-noise lanes: stochastic algorithms consume one
+    // [act_dim] row per env (padding rows stay zero for fixed-batch
+    // backends); deterministic algorithms submit an empty lane.
+    let mut noise = if hooks.uses_policy_noise() {
+        vec![0.0f32; backend_batch * act_dim]
+    } else {
+        Vec::new()
+    };
     let mut actions = vec![0.0f32; m * act_dim];
     let mut infos = vec![VecStepInfo::default(); m];
     let mut flush = vec![false; m];
@@ -471,22 +474,27 @@ pub fn run_ppo_sampler_from(
         // --- one lockstep sim tick under the current policy (busy-timed
         // with the per-thread CPU clock: preemption-immune)
         let busy_t0 = crate::util::timer::thread_cpu_secs();
-        for (i, rng) in noise_rngs.iter_mut().enumerate() {
-            rng.fill_normal(&mut noise[i * act_dim..(i + 1) * act_dim]);
+        if !noise.is_empty() {
+            hooks.fill_policy_noise(&mut noise[..m * act_dim]);
         }
         let (out, server_busy) = match &mut source {
-            PpoPolicySource::Local(actor) => {
+            PolicySource::Local(actor) => {
                 normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
                 match actor.act(&policy.params, &obs_in, &noise) {
-                    Ok(r) => (PpoTickOut::Local(r), 0.0),
+                    Ok(r) => (TickOut::Local(r), 0.0),
                     Err(e) => {
                         crate::log_error!("sampler {}: act failed: {e:#}", cfg.id);
                         break;
                     }
                 }
             }
-            PpoPolicySource::Shared(client) => {
-                let resp = match client.act(venv.obs(), &noise[..m * act_dim]) {
+            PolicySource::Shared(client) => {
+                let submit: &[f32] = if noise.is_empty() {
+                    &[]
+                } else {
+                    &noise[..m * act_dim]
+                };
+                let resp = match client.act(venv.obs(), submit) {
                     Ok(r) => r,
                     Err(e) => {
                         crate::log_error!("sampler {}: shared act failed: {e:#}", cfg.id);
@@ -505,10 +513,12 @@ pub fn run_ppo_sampler_from(
                     // server-driven refresh: cut buffered (old-version)
                     // chunks before this tick's rows join them
                     if !flush_version_cut(
+                        hooks.as_mut(),
                         &cfg,
                         &mut bufs,
+                        &venv,
+                        &policy,
                         resp.value(),
-                        policy.version,
                         queue,
                         &mut report,
                     ) {
@@ -526,7 +536,7 @@ pub fn run_ppo_sampler_from(
                 }
                 policy_epoch = resp.epoch;
                 let sb = resp.server_busy_secs;
-                (PpoTickOut::Shared(resp), sb)
+                (TickOut::Shared(resp), sb)
             }
         };
         for i in 0..m {
@@ -534,13 +544,17 @@ pub fn run_ppo_sampler_from(
             buf.obs
                 .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
             buf.stats.update(venv.obs_row(i)); // raw pre-step obs feeds the normalizer
-            let arow = &out.action()[i * act_dim..(i + 1) * act_dim];
-            buf.act.extend_from_slice(arow); // pre-clip action (matches logp)
-            buf.logp.push(out.logp()[i]);
-            buf.value.push(out.value()[i]);
-            let dst = &mut actions[i * act_dim..(i + 1) * act_dim];
-            dst.copy_from_slice(arow);
-            crate::env::clip_action(dst);
+            let lanes = TickLanes {
+                action: out.action(),
+                logp: out.logp(),
+                value: out.value(),
+            };
+            hooks.record_tick(
+                i,
+                &lanes,
+                buf,
+                &mut actions[i * act_dim..(i + 1) * act_dim],
+            );
         }
         // recycle the shared-inference buffers BEFORE the bootstrap call
         // below may need them (keeps the steady-state tick allocation-free)
@@ -579,24 +593,27 @@ pub fn run_ppo_sampler_from(
         if flush.iter().all(|&f| f) {
             window_ticks = 0; // every buffer restarts together
         }
-        let mut any_needs_boot = false;
-        for i in 0..m {
-            any_needs_boot |= flush[i] && !infos[i].terminal;
-        }
-        let n_flush = flush.iter().filter(|&&f| f).count();
 
         // Bootstrap values V(s') for truncated/continuation cuts: one
         // batched forward over the post-step observations, zero noise.
-        // An inference failure here would silently corrupt GAE targets
-        // (V = 0 looks like a terminal), so it terminates the worker
-        // exactly like the main-loop path.
+        // Only algorithms that bootstrap (PPO) pay for it. An inference
+        // failure here would silently corrupt GAE targets (V = 0 looks
+        // like a terminal), so it terminates the worker exactly like the
+        // main-loop path.
+        let mut any_needs_boot = false;
+        if hooks.needs_value_bootstrap() {
+            for i in 0..m {
+                any_needs_boot |= flush[i] && !infos[i].terminal;
+            }
+        }
         if any_needs_boot {
+            let n_flush = flush.iter().filter(|&&f| f).count();
             let boot_t0 = crate::util::timer::thread_cpu_secs();
             for z in noise.iter_mut() {
                 *z = 0.0;
             }
             let boot = match &mut source {
-                PpoPolicySource::Local(actor) => {
+                PolicySource::Local(actor) => {
                     normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
                     actor.act(&policy.params, &obs_in, &noise).map(|r| {
                         boot_values[..m].copy_from_slice(&r.value[..m]);
@@ -606,8 +623,13 @@ pub fn run_ppo_sampler_from(
                 // snapshot of a bootstrap response is deliberately not
                 // adopted: the buffers are being flushed right here, and
                 // V(s') under the freshest params is the better target
-                PpoPolicySource::Shared(client) => {
-                    client.act(venv.obs(), &noise[..m * act_dim]).map(|r| {
+                PolicySource::Shared(client) => {
+                    let submit: &[f32] = if noise.is_empty() {
+                        &[]
+                    } else {
+                        &noise[..m * act_dim]
+                    };
+                    client.act(venv.obs(), submit).map(|r| {
                         boot_values[..m].copy_from_slice(&r.value()[..m]);
                         r.server_busy_secs
                     })
@@ -642,227 +664,6 @@ pub fn run_ppo_sampler_from(
                 bufs[i].episode_lengths.push(venv.ep_len(i));
                 report.episodes += 1;
             }
-            let (end, bootstrap) = if terminal {
-                (ChunkEnd::Terminal, 0.0)
-            } else if truncated {
-                (ChunkEnd::Truncated, boot_values[i])
-            } else {
-                (ChunkEnd::Continuation, boot_values[i])
-            };
-            let n = bufs[i].len();
-            let chunk = bufs[i].take(cfg.id, i, policy.version, end, bootstrap);
-            if queue.push(chunk).is_err() {
-                break 'outer; // queue closed: shutting down
-            }
-            report.chunks += 1;
-            produced_for_version += n;
-            if terminal || truncated {
-                venv.reset_env(i);
-            }
-        }
-
-        // --- policy refresh (all buffers are empty now: flush-all above)
-        if do_refresh {
-            if !refresh_policy(&mut policy, cfg.sync_budget.is_some(), store, stop, &mut report)
-            {
-                break 'outer;
-            }
-            produced_for_version = 0;
-        }
-    }
-    report
-}
-
-/// Run the DDPG sampler loop with a private per-worker backend (local
-/// inference mode). Thin wrapper over [`run_ddpg_sampler_from`].
-pub fn run_ddpg_sampler(
-    cfg: SamplerCfg,
-    venv: VecEnv,
-    actor: Box<dyn DdpgActorBackend>,
-    explore_noise: f32,
-    store: &PolicyStore,
-    queue: &Channel<ExperienceChunk>,
-    stop: &AtomicBool,
-) -> SamplerReport {
-    run_ddpg_sampler_from(
-        cfg,
-        venv,
-        DdpgPolicySource::Local(actor),
-        explore_noise,
-        store,
-        queue,
-        stop,
-    )
-}
-
-/// Run the DDPG sampler loop (deterministic actor + per-env exploration
-/// noise; chunks carry raw transitions for the replay buffer).
-pub fn run_ddpg_sampler_from(
-    cfg: SamplerCfg,
-    mut venv: VecEnv,
-    mut source: DdpgPolicySource,
-    explore_noise: f32,
-    store: &PolicyStore,
-    queue: &Channel<ExperienceChunk>,
-    stop: &AtomicBool,
-) -> SamplerReport {
-    let mut report = SamplerReport::default();
-    let m = venv.num_envs();
-    let obs_dim = venv.obs_dim();
-    let act_dim = venv.act_dim();
-    let shared = matches!(source, DdpgPolicySource::Shared(_));
-    let backend_batch = match &source {
-        DdpgPolicySource::Local(actor) if actor.batch() != 0 => actor.batch(),
-        _ => m,
-    };
-    if backend_batch < m {
-        crate::log_error!(
-            "ddpg sampler {}: backend batch {} cannot hold {} envs",
-            cfg.id,
-            backend_batch,
-            m
-        );
-        return report;
-    }
-
-    let mut policy = match wait_first_policy(store, stop) {
-        Some(p) => p,
-        None => return report,
-    };
-
-    let mut noise_rngs: Vec<Pcg64> = (0..m)
-        .map(|i| Pcg64::with_stream(cfg.seed, DDPG_NOISE_STREAM_BASE + cfg.global_env(m, i)))
-        .collect();
-    let mut ous: Vec<OuNoise> = (0..m)
-        .map(|_| OuNoise::gaussian(act_dim, explore_noise))
-        .collect();
-
-    let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
-    let mut noise = vec![0.0f32; act_dim];
-    let mut actions = vec![0.0f32; m * act_dim];
-    let mut infos = vec![VecStepInfo::default(); m];
-    let mut flush = vec![false; m];
-    let mut bufs: Vec<ChunkBuf> = (0..m).map(|_| ChunkBuf::new(obs_dim)).collect();
-    let mut window_ticks = 0usize;
-    let mut produced_for_version = 0usize;
-    // pool epoch of the buffered rows (see the PPO loop)
-    let mut policy_epoch = 0u64;
-
-    venv.reset_all();
-
-    'outer: loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        let busy_t0 = crate::util::timer::thread_cpu_secs();
-        let (det_actions, server_busy) = match &mut source {
-            DdpgPolicySource::Local(actor) => {
-                normalize_rows(&mut obs_in, venv.obs(), &policy.norm, m, obs_dim);
-                match actor.act(&policy.params, &obs_in) {
-                    Ok(a) => (DdpgTickOut::Local(a), 0.0),
-                    Err(e) => {
-                        crate::log_error!("ddpg sampler {}: act failed: {e:#}", cfg.id);
-                        break;
-                    }
-                }
-            }
-            DdpgPolicySource::Shared(client) => {
-                let resp = match client.act(venv.obs(), &[]) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        crate::log_error!("ddpg sampler {}: shared act failed: {e:#}", cfg.id);
-                        break;
-                    }
-                };
-                obs_in[..m * obs_dim].copy_from_slice(resp.norm_obs());
-                // epoch-driven cut (see the PPO loop for the rule)
-                let version_moved = resp.snapshot.version != policy.version;
-                if version_moved || (policy_epoch != 0 && resp.epoch != policy_epoch) {
-                    // server-driven refresh: close out old-version chunks
-                    // (with their s' rows) before this tick appends
-                    if !ddpg_flush_version_cut(
-                        &cfg,
-                        &mut bufs,
-                        &venv,
-                        &policy,
-                        queue,
-                        &mut report,
-                    ) {
-                        break 'outer;
-                    }
-                    window_ticks = 0;
-                    produced_for_version = 0;
-                    policy = resp.snapshot.clone();
-                    // count only real version moves (see the PPO loop)
-                    if version_moved {
-                        report.policy_refreshes += 1;
-                    }
-                }
-                policy_epoch = resp.epoch;
-                let sb = resp.server_busy_secs;
-                (DdpgTickOut::Shared(resp), sb)
-            }
-        };
-        for i in 0..m {
-            let buf = &mut bufs[i];
-            buf.obs
-                .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
-            buf.stats.update(venv.obs_row(i));
-            let dst = &mut actions[i * act_dim..(i + 1) * act_dim];
-            dst.copy_from_slice(&det_actions.action()[i * act_dim..(i + 1) * act_dim]);
-            ous[i].sample(&mut noise_rngs[i], &mut noise);
-            for (a, n) in dst.iter_mut().zip(&noise) {
-                *a += n;
-            }
-            crate::env::clip_action(dst);
-            buf.act.extend_from_slice(dst);
-            buf.logp.push(0.0);
-            buf.value.push(0.0);
-        }
-        // recycle the shared-inference buffers before the next tick
-        drop(det_actions);
-
-        venv.step_all(&actions, &mut infos);
-        for (buf, info) in bufs.iter_mut().zip(&infos) {
-            buf.rew.push(info.reward * cfg.reward_scale);
-        }
-        report.steps += m as u64;
-        let tick_busy = crate::util::timer::thread_cpu_secs() - busy_t0 + server_busy;
-        for buf in bufs.iter_mut() {
-            buf.busy_secs += tick_busy / m as f64;
-        }
-
-        // --- chunk boundaries (same rules as the PPO loop)
-        window_ticks += 1;
-        let (any_flush, do_refresh) = plan_boundaries(
-            &infos,
-            &bufs,
-            window_ticks,
-            cfg.chunk_steps,
-            produced_for_version,
-            cfg.sync_budget,
-            shared,
-            store,
-            policy.version,
-            &mut flush,
-        );
-        if !any_flush {
-            continue;
-        }
-        if flush.iter().all(|&f| f) {
-            window_ticks = 0;
-        }
-
-        for i in 0..m {
-            if !flush[i] {
-                continue;
-            }
-            let (terminal, truncated) = (infos[i].terminal, infos[i].truncated);
-            if terminal || truncated {
-                bufs[i].episode_returns.push(venv.ep_return(i));
-                bufs[i].episode_lengths.push(venv.ep_len(i));
-                report.episodes += 1;
-            }
             let end = if terminal {
                 ChunkEnd::Terminal
             } else if truncated {
@@ -870,25 +671,27 @@ pub fn run_ddpg_sampler_from(
             } else {
                 ChunkEnd::Continuation
             };
-            // replay reconstruction needs s' of the last row: append the
-            // normalized next obs to `obs` (len+1 rows). The learner
-            // splits it.
-            let mut next_row = venv.obs_row(i).to_vec();
-            policy.norm.apply(&mut next_row);
-            bufs[i].obs.extend_from_slice(&next_row);
+            let boot = hooks.close_chunk(
+                &mut bufs[i],
+                venv.obs_row(i),
+                &policy.norm,
+                end,
+                boot_values[i],
+            );
             let n = bufs[i].len();
-            let chunk = bufs[i].take(cfg.id, i, policy.version, end, 0.0);
+            let chunk = bufs[i].take(cfg.id, i, policy.version, end, boot);
             if queue.push(chunk).is_err() {
-                break 'outer;
+                break 'outer; // queue closed: shutting down
             }
             report.chunks += 1;
             produced_for_version += n;
             if terminal || truncated {
                 venv.reset_env(i);
-                ous[i].reset();
+                hooks.on_episode_end(i);
             }
         }
 
+        // --- policy refresh (all buffers are empty now: flush-all above)
         if do_refresh {
             if !refresh_policy(&mut policy, cfg.sync_budget.is_some(), store, stop, &mut report)
             {

@@ -16,6 +16,26 @@
 //! At runtime Python is never on the path: `runtime::XlaBackend` loads the
 //! HLO artifacts via PJRT; `runtime::NativeBackend` is the artifact-free
 //! pure-Rust mirror used for tests and quick starts.
+//!
+//! The library entry point is [`session::Session`]:
+//!
+//! ```no_run
+//! use walle::algo::ppo::Ppo;
+//! use walle::session::Session;
+//!
+//! let result = Session::builder()
+//!     .env("pendulum")
+//!     .samplers(4)
+//!     .algo(Ppo::default())
+//!     .build()?
+//!     .run()?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Every pipeline stage dispatches through the [`algo::api::Algorithm`]
+//! trait (PPO, DDPG, TD3 ship in-tree); `docs/API.md` documents the
+//! trait contract, the builder, and the add-your-own-algorithm
+//! walkthrough.
 
 pub mod algo;
 pub mod bench;
@@ -25,4 +45,5 @@ pub mod env;
 pub mod nn;
 pub mod replay;
 pub mod runtime;
+pub mod session;
 pub mod util;

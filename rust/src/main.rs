@@ -1,23 +1,22 @@
-//! `walle` — the WALL-E launcher.
+//! `walle` — the WALL-E launcher: a thin CLI adapter over
+//! `walle::session::Session` (flags → `TrainConfig` → builder; all run
+//! logic lives in the library).
 //!
 //! Subcommands:
-//!   train    train a policy (PPO or DDPG) with N parallel samplers
+//!   train    train a policy (PPO, DDPG, or TD3) with N parallel samplers
 //!   eval     evaluate a saved policy checkpoint deterministically
 //!   figures  regenerate the paper's figures (3–7) as CSV series
-//!   info     inspect artifacts / presets / config
+//!   info     show the resolved SessionSpec for a config
 //!
 //! Examples:
 //!   walle train --env halfcheetah --samplers 10 --iterations 200 --backend xla
-//!   walle train --env pendulum --algo ddpg --backend native
+//!   walle train --env pendulum --algo td3 --backend native
 //!   walle figures --all --out-dir results
 //!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
 
 use walle::bench::figures;
 use walle::config::{Algo, Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
-use walle::coordinator::metrics::MetricsLog;
-use walle::coordinator::{eval, orchestrator};
-use walle::env::registry::{make_env, ENV_NAMES};
-use walle::runtime::make_factory;
+use walle::session::{load_params, Session};
 use walle::util::cli::Args;
 use walle::util::logging::{set_level, Level};
 
@@ -31,7 +30,8 @@ COMMANDS:
   train     train a policy with N parallel rollout samplers
   eval      deterministically evaluate a saved checkpoint
   figures   regenerate the paper's evaluation figures as CSVs
-  info      show presets, artifacts and the resolved config
+  info      show the resolved session spec (algorithm, hyper-parameters,
+            inference topology) for a config
 
 COMMON FLAGS:
   --env NAME             pendulum|cartpole|reacher|halfcheetah
@@ -61,9 +61,10 @@ TRAIN FLAGS:
                          each shard observe the store independently
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
-  --algo ppo|ddpg        learner algorithm
+  --algo NAME            learner algorithm: ppo|ddpg|td3
   --sync                 synchronous barrier mode (ablation)
-  --learner-shards N     data-parallel learner shards (§6.2)
+  --learner-shards N     data-parallel learner shards (§6.2, PPO only)
+  --epochs N / --lr F    PPO optimization knobs (PPO only)
   --out-dir DIR          write metrics.csv + params.bin + config.json
 
 FIGURES FLAGS:
@@ -106,7 +107,9 @@ fn main() {
     }
 }
 
-/// Build a TrainConfig from --config + flag overrides.
+/// Build a TrainConfig from --config + flag overrides. (Validation —
+/// including the structural cross-checks — happens in
+/// `Session::builder().config(..).build()`.)
 fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => TrainConfig::load(path)?,
@@ -116,7 +119,8 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
         cfg.env = env.to_string();
     }
     if let Some(a) = args.get("algo") {
-        cfg.algo = Algo::parse(a).ok_or_else(|| anyhow::anyhow!("bad --algo {a:?}"))?;
+        cfg.algo =
+            Algo::parse(a).ok_or_else(|| anyhow::anyhow!("bad --algo {a:?} (ppo|ddpg|td3)"))?;
     }
     if let Some(b) = args.get("backend") {
         cfg.backend = Backend::parse(b).ok_or_else(|| anyhow::anyhow!("bad --backend {b:?}"))?;
@@ -148,6 +152,20 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
     cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;
     cfg.queue_capacity = args.usize_or("queue-capacity", cfg.queue_capacity)?;
+    // PPO-only CLI knobs: reject loudly under other algorithms instead
+    // of silently ignoring them
+    if cfg.algo != Algo::Ppo {
+        for knob in ["lr", "epochs", "learner-shards"] {
+            if args.has(knob) {
+                anyhow::bail!(
+                    "--{knob} is a PPO-only knob but --algo is {} — drop it or \
+                     set the matching {} hyper-parameter in a --config file",
+                    cfg.algo.name(),
+                    cfg.algo.name()
+                );
+            }
+        }
+    }
     cfg.learner_shards = args.usize_or("learner-shards", cfg.learner_shards)?;
     cfg.ppo.lr = args.f32_or("lr", cfg.ppo.lr)?;
     cfg.ppo.epochs = args.usize_or("epochs", cfg.ppo.epochs)?;
@@ -157,32 +175,19 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     if let Some(d) = args.get("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
 fn run_train(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
     let out_dir = args.str_or("out-dir", &format!("runs/{}", cfg.env));
-    std::fs::create_dir_all(&out_dir)?;
-    cfg.save(&format!("{out_dir}/config.json"))?;
+    let session = Session::builder().config(cfg).out_dir(&out_dir).build()?;
 
-    walle::log_info!(
-        "training {} with {} samplers x {} envs ({} mode, {} backend, {} inference), \
-         {} samples/iter",
-        cfg.env,
-        cfg.samplers,
-        cfg.envs_per_sampler,
-        if cfg.async_mode { "async" } else { "sync" },
-        cfg.backend.name(),
-        cfg.inference_mode.name(),
-        cfg.samples_per_iter
-    );
-    let factory = make_factory(&cfg)?;
-    let mut log = MetricsLog::new().with_csv(&format!("{out_dir}/metrics.csv"))?;
-    let result = orchestrator::run(&cfg, factory.as_ref(), &mut log)?;
+    for line in session.spec().render().lines() {
+        walle::log_info!("{line}");
+    }
+    let result = session.run()?;
 
-    save_params(&format!("{out_dir}/params.bin"), &result.final_params)?;
     let (pushed, popped, pblk, cblk) = result.queue_stats;
     walle::log_info!(
         "done: {} iterations, queue pushed {pushed} popped {popped}, \
@@ -195,10 +200,6 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         for line in rep.render().lines() {
             walle::log_info!("{line}");
         }
-        std::fs::write(
-            format!("{out_dir}/inference.json"),
-            rep.to_json().to_string(),
-        )?;
     }
     Ok(())
 }
@@ -207,28 +208,17 @@ fn run_eval(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
     let ckpt = args.require("checkpoint")?;
     let params = load_params(ckpt)?;
-    let factory = make_factory(&cfg)?;
-    anyhow::ensure!(
-        params.len() == factory.ppo_param_count(),
-        "checkpoint has {} params, preset expects {}",
-        params.len(),
-        factory.ppo_param_count()
-    );
-    let mut env = make_env(&cfg.env).unwrap();
-    let mut actor = factory.make_actor()?;
     let episodes = args.usize_or("episodes", 10)?;
-    let norm = walle::algo::normalizer::NormSnapshot::identity(factory.obs_dim());
-    let r = eval::evaluate(
-        env.as_mut(),
-        actor.as_mut(),
-        &params,
-        &norm,
-        episodes,
-        cfg.seed,
-    )?;
+    let session = Session::builder().config(cfg).build()?;
+    let r = session.evaluate(&params, episodes)?;
     println!(
-        "eval {}: mean return {:.2} ± {:.2} over {} episodes (mean len {:.0})",
-        cfg.env, r.mean_return, r.std_return, episodes, r.mean_len
+        "eval {} ({}): mean return {:.2} ± {:.2} over {} episodes (mean len {:.0})",
+        session.config().env,
+        session.algorithm().name(),
+        r.mean_return,
+        r.std_return,
+        episodes,
+        r.mean_len
     );
     Ok(())
 }
@@ -241,6 +231,9 @@ fn run_figures(args: &Args) -> anyhow::Result<()> {
     if args.get("iterations").is_none() {
         cfg.iterations = 4;
     }
+    // validate the base combination once up front (each sweep point
+    // re-validates through the session/orchestrator anyway)
+    let cfg = Session::builder().config(cfg).build()?.config().clone();
     let out_dir = args.str_or("out-dir", "results");
     let ns = args.usize_list_or("ns", &[1, 2, 4, 6, 8, 10])?;
     let which: Vec<usize> = if args.has("all") || !args.has("fig") {
@@ -248,7 +241,7 @@ fn run_figures(args: &Args) -> anyhow::Result<()> {
     } else {
         vec![args.usize_or("fig", 4)?]
     };
-    let factory_for = |c: &TrainConfig| make_factory(c);
+    let factory_for = |c: &TrainConfig| walle::runtime::make_factory(c);
 
     if which.iter().any(|f| (4..=7).contains(f)) {
         let skip = if cfg.iterations > 2 { 1 } else { 0 };
@@ -270,16 +263,21 @@ fn run_figures(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Render the resolved `SessionSpec` for a config — algorithm name,
+/// hyper-parameters, and inference topology all come through the
+/// `Algorithm` trait (no hard-coded per-algo matches), and the spec JSON
+/// round-trips (`SessionSpec::from_json(spec.to_json())`).
 fn run_info(args: &Args) -> anyhow::Result<()> {
-    let env = args.str_or("env", "halfcheetah");
-    println!("registered envs: {ENV_NAMES:?}");
-    if let Some((o, a)) = walle::env::registry::env_dims(&env) {
-        println!("{env}: obs_dim={o} act_dim={a}");
-    }
-    let cfg = config_from(args)?;
-    println!("resolved config:\n{}", cfg.to_json());
-    let artifacts_dir = cfg.artifacts_dir.clone();
-    match walle::runtime::artifacts::PresetMeta::load(&artifacts_dir, &env) {
+    println!(
+        "registered envs: {:?}",
+        walle::env::registry::ENV_NAMES
+    );
+    let session = Session::builder().config(config_from(args)?).build()?;
+    print!("{}", session.spec().render());
+    println!("\nspec json:\n{}", session.spec().to_json());
+    let env = &session.config().env;
+    let artifacts_dir = session.config().artifacts_dir.clone();
+    match walle::runtime::artifacts::PresetMeta::load(&artifacts_dir, env) {
         Ok(meta) => {
             println!(
                 "artifacts ({artifacts_dir}/{env}): {} params, act_batch {}, minibatch {}, horizon {}",
@@ -289,25 +287,4 @@ fn run_info(args: &Args) -> anyhow::Result<()> {
         Err(e) => println!("artifacts not available: {e:#}"),
     }
     Ok(())
-}
-
-// ------------------------------------------------------- checkpoint I/O
-
-/// Save a flat f32 vector as little-endian bytes.
-fn save_params(path: &str, params: &[f32]) -> anyhow::Result<()> {
-    let mut bytes = Vec::with_capacity(params.len() * 4);
-    for p in params {
-        bytes.extend_from_slice(&p.to_le_bytes());
-    }
-    std::fs::write(path, bytes)?;
-    Ok(())
-}
-
-fn load_params(path: &str) -> anyhow::Result<Vec<f32>> {
-    let bytes = std::fs::read(path)?;
-    anyhow::ensure!(bytes.len() % 4 == 0, "corrupt checkpoint");
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
 }

@@ -98,10 +98,11 @@
 //! thread per shard) and everything else communicates through
 //! `Mutex`/`Condvar` queues.
 
+use crate::algo::api::Algorithm;
 use crate::coordinator::metrics::InferenceReport;
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::runtime::epoch::{EpochGate, EpochMode};
-use crate::runtime::{ActResult, ActorBackend, BackendFactory, DdpgActorBackend};
+use crate::runtime::{BackendFactory, ServerActor};
 use crate::util::{cv_wait, plock};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -467,11 +468,15 @@ impl InferenceServer {
         r
     }
 
-    /// Serve PPO `act` requests on the current thread until every client
-    /// handle is dropped. Builds the fleet-slice backend here (backends
-    /// are thread-local on the XLA path).
-    pub fn serve_ppo(
+    /// Serve `algo`'s act requests on the current thread until every
+    /// client handle is dropped. Builds the fleet-slice backend here
+    /// through [`Algorithm::make_server_actor`] (backends are
+    /// thread-local on the XLA path) — the serve loop itself is fully
+    /// algorithm-agnostic, so a new algorithm plugs into the pool with
+    /// zero edits to this module.
+    pub fn serve_algo(
         &self,
+        algo: &dyn Algorithm,
         factory: &dyn BackendFactory,
         store: &PolicyStore,
     ) -> anyhow::Result<()> {
@@ -479,14 +484,27 @@ impl InferenceServer {
         // inside backend construction — must fail blocked clients
         // instead of stranding them on their completion slots
         let _guard = DownGuard(self);
-        let actor = match factory.make_actor_shared(self.shared.cfg.fleet_rows) {
+        let actor = match algo.make_server_actor(factory, self.shared.cfg.fleet_rows) {
             Ok(a) => a,
             Err(e) => {
-                self.fail_all(&format!("shared actor construction failed: {e:#}"));
+                self.fail_all(&format!(
+                    "shared {} actor construction failed: {e:#}",
+                    algo.name()
+                ));
                 return Err(e);
             }
         };
-        self.serve(ServerBackend::Ppo(actor), store)
+        self.serve(actor, store)
+    }
+
+    /// Serve PPO `act` requests: thin wrapper over
+    /// [`InferenceServer::serve_algo`] with the PPO algorithm.
+    pub fn serve_ppo(
+        &self,
+        factory: &dyn BackendFactory,
+        store: &PolicyStore,
+    ) -> anyhow::Result<()> {
+        self.serve_algo(&crate::algo::ppo::Ppo::default(), factory, store)
     }
 
     /// DDPG counterpart of [`InferenceServer::serve_ppo`].
@@ -495,15 +513,7 @@ impl InferenceServer {
         factory: &dyn BackendFactory,
         store: &PolicyStore,
     ) -> anyhow::Result<()> {
-        let _guard = DownGuard(self);
-        let actor = match factory.make_ddpg_actor_shared(self.shared.cfg.fleet_rows) {
-            Ok(a) => a,
-            Err(e) => {
-                self.fail_all(&format!("shared ddpg actor construction failed: {e:#}"));
-                return Err(e);
-            }
-        };
-        self.serve(ServerBackend::Ddpg(actor), store)
+        self.serve_algo(&crate::algo::ddpg::Ddpg::default(), factory, store)
     }
 
     /// Mark the server down, fail every pending request (and all future
@@ -528,7 +538,7 @@ impl InferenceServer {
         }
     }
 
-    fn serve(&self, mut backend: ServerBackend, store: &PolicyStore) -> anyhow::Result<()> {
+    fn serve(&self, mut backend: Box<dyn ServerActor>, store: &PolicyStore) -> anyhow::Result<()> {
         let sh = &*self.shared;
         let o = sh.cfg.obs_dim;
         let a = sh.cfg.act_dim;
@@ -910,52 +920,6 @@ impl Drop for ActorClient {
     }
 }
 
-/// The server's view of a policy backend: PPO (stochastic, needs noise)
-/// or DDPG (deterministic actor; the scatter stage zero-fills logp/value
-/// and reuses the action rows as the mean).
-enum ServerBackend {
-    Ppo(Box<dyn ActorBackend>),
-    Ddpg(Box<dyn DdpgActorBackend>),
-}
-
-impl ServerBackend {
-    fn fixed_batch(&self) -> usize {
-        match self {
-            ServerBackend::Ppo(b) => b.batch(),
-            ServerBackend::Ddpg(b) => b.batch(),
-        }
-    }
-
-    fn forward(
-        &mut self,
-        params: &[f32],
-        obs: &[f32],
-        noise: &[f32],
-        rows: usize,
-        act_dim: usize,
-    ) -> anyhow::Result<ActResult> {
-        match self {
-            ServerBackend::Ppo(b) => b.act(params, obs, noise),
-            ServerBackend::Ddpg(b) => {
-                let action = b.act(params, obs)?;
-                anyhow::ensure!(
-                    action.len() >= rows * act_dim,
-                    "ddpg actor returned {} values for {} rows",
-                    action.len(),
-                    rows
-                );
-                // empty logp/value/mean signal "deterministic" to scatter
-                Ok(ActResult {
-                    action,
-                    logp: Vec::new(),
-                    value: Vec::new(),
-                    mean: Vec::new(),
-                })
-            }
-        }
-    }
-}
-
 // ------------------------------------------------------------------ pool
 
 /// Configuration of the sharded pool (derived from `TrainConfig` by the
@@ -1032,7 +996,7 @@ impl InferencePool {
     }
 
     /// The shards, for spawning one serve thread each (the orchestrator
-    /// calls `serve_ppo`/`serve_ddpg` on every element).
+    /// calls [`InferenceServer::serve_algo`] on every element).
     pub fn shards(&self) -> &[Arc<InferenceServer>] {
         &self.shards
     }

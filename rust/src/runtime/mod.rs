@@ -203,6 +203,137 @@ pub trait DdpgLearnerBackend {
     ) -> anyhow::Result<(f32, f32)>;
 }
 
+// --------------------------------------------- unified row-actor adapters
+
+/// Adapts a deterministic [`DdpgActorBackend`] to the unified
+/// [`ActorBackend`] row interface the generic sampler loop and the eval
+/// path speak: the policy-noise lane is ignored (deterministic actors
+/// draw no per-row noise) and the stochastic lanes come back empty —
+/// `logp`/`value`/`mean` are `Vec::new()`, which algorithm hooks that
+/// wrap this adapter (DDPG, TD3) never read.
+pub struct DeterministicRowActor {
+    inner: Box<dyn DdpgActorBackend>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl DeterministicRowActor {
+    pub fn new(inner: Box<dyn DdpgActorBackend>, obs_dim: usize, act_dim: usize) -> Self {
+        Self {
+            inner,
+            obs_dim,
+            act_dim,
+        }
+    }
+}
+
+impl ActorBackend for DeterministicRowActor {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn act(&mut self, flat: &[f32], obs: &[f32], _noise: &[f32]) -> anyhow::Result<ActResult> {
+        let action = self.inner.act(flat, obs)?;
+        Ok(ActResult {
+            action,
+            logp: Vec::new(),
+            value: Vec::new(),
+            mean: Vec::new(),
+        })
+    }
+}
+
+// ------------------------------------------------- shared-inference view
+
+/// The shared-inference shard's view of a policy backend: one batched
+/// forward over the packed mega-batch. Implementations adapt
+/// algorithm-specific backends so `runtime::inference_server` never
+/// matches on a concrete algorithm — a new algorithm plugs in through
+/// `algo::api::Algorithm::make_server_actor` with zero server edits.
+pub trait ServerActor {
+    /// Fixed rows per forward (shape-specialized XLA artifacts); 0 = the
+    /// backend accepts any row count and the server dispatches
+    /// padding-free.
+    fn fixed_batch(&self) -> usize;
+
+    /// Run ONE forward over `obs` (the packed, already-normalized
+    /// mega-batch, padded to the fixed batch by the caller). `rows` is
+    /// the real row count. Empty `logp`/`value`/`mean` lanes in the
+    /// result signal a deterministic actor; the server zero-fills those
+    /// per-slab lanes and reuses the action rows as the mean on scatter.
+    fn forward(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        noise: &[f32],
+        rows: usize,
+        act_dim: usize,
+    ) -> anyhow::Result<ActResult>;
+}
+
+/// [`ServerActor`] over a stochastic policy (PPO Gaussian actor): the
+/// noise lanes carry the workers' per-row N(0,1) draws.
+pub struct StochasticServerActor(pub Box<dyn ActorBackend>);
+
+impl ServerActor for StochasticServerActor {
+    fn fixed_batch(&self) -> usize {
+        self.0.batch()
+    }
+
+    fn forward(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        noise: &[f32],
+        _rows: usize,
+        _act_dim: usize,
+    ) -> anyhow::Result<ActResult> {
+        self.0.act(params, obs, noise)
+    }
+}
+
+/// [`ServerActor`] over a deterministic actor (DDPG/TD3): noise lanes
+/// are empty, and the empty `logp`/`value`/`mean` result lanes tell the
+/// scatter stage to zero-fill.
+pub struct DeterministicServerActor(pub Box<dyn DdpgActorBackend>);
+
+impl ServerActor for DeterministicServerActor {
+    fn fixed_batch(&self) -> usize {
+        self.0.batch()
+    }
+
+    fn forward(
+        &mut self,
+        params: &[f32],
+        obs: &[f32],
+        _noise: &[f32],
+        rows: usize,
+        act_dim: usize,
+    ) -> anyhow::Result<ActResult> {
+        let action = self.0.act(params, obs)?;
+        anyhow::ensure!(
+            action.len() >= rows * act_dim,
+            "deterministic actor returned {} values for {} rows",
+            action.len(),
+            rows
+        );
+        Ok(ActResult {
+            action,
+            logp: Vec::new(),
+            value: Vec::new(),
+            mean: Vec::new(),
+        })
+    }
+}
+
 /// Build the factory selected by a run config: `Backend::Xla` loads the
 /// preset's AOT artifacts; `Backend::Native` mirrors them in pure Rust.
 pub fn make_factory(

@@ -1,0 +1,529 @@
+//! `Session`: the library's single entry point for training, evaluation,
+//! and benches.
+//!
+//! ```no_run
+//! use walle::algo::ppo::Ppo;
+//! use walle::session::{Infer, Session};
+//! use walle::config::InferShards;
+//!
+//! let result = Session::builder()
+//!     .env("halfcheetah")
+//!     .samplers(10)
+//!     .algo(Ppo::default())
+//!     .infer(Infer::Shared { shards: InferShards::Auto })
+//!     .build()?
+//!     .run()?;
+//! # anyhow::Ok(())
+//! ```
+//!
+//! The builder collects knobs in call order on top of the env preset
+//! (`.env(name)` picks `TrainConfig::preset(name)` unless an explicit
+//! `.config(...)` base was given), folds a *customized* algorithm
+//! instance's hyper-parameters into the config via
+//! [`Algorithm::apply_to`] (a plain `X::default()` only selects the
+//! algorithm, preserving preset-tuned sections), and
+//! validates the combination at [`SessionBuilder::build`] — invalid
+//! combos (PPO-only knobs under DDPG/TD3, more inference shards than
+//! samplers, zero-env specs) fail there with actionable errors instead
+//! of deep inside the run. The built [`Session`] exposes:
+//!
+//! * [`Session::run`] — the full coordinator (N samplers, optional
+//!   sharded inference pool, learner), writing `metrics.csv`,
+//!   `config.json`, `params.bin`, and `inference.json` when an
+//!   `.out_dir(..)` was configured;
+//! * [`Session::evaluate`] — deterministic rollouts through the SAME
+//!   trait-constructed actor the training path uses;
+//! * [`Session::spec`] — the resolved [`SessionSpec`] (`walle info`
+//!   renders it; it round-trips to JSON).
+//!
+//! `main.rs` is a thin CLI adapter over this module; tests and benches
+//! can drive identical runs programmatically.
+
+use crate::algo::api::{algorithm_from_config, Algorithm};
+use crate::config::{Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
+use crate::coordinator::eval::{self, EvalResult};
+use crate::coordinator::metrics::MetricsLog;
+use crate::coordinator::orchestrator::{self, RunResult};
+use crate::runtime::make_factory;
+use crate::util::json::Json;
+
+/// Inference placement for the builder (`.infer(...)`): mirrors
+/// `--inference-mode` + `--infer-shards`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Infer {
+    /// One private backend per worker (the default).
+    Local,
+    /// The sharded inference pool batches all workers' rows into
+    /// fleet-wide forwards; `shards` sizes it (`InferShards::Auto` =
+    /// one shard per ~8 workers, capped at half the cores).
+    Shared { shards: InferShards },
+}
+
+type ConfigOp = Box<dyn FnOnce(&mut TrainConfig)>;
+
+/// Builder for a [`Session`]. Knobs apply in call order; `build()`
+/// validates the resolved combination.
+#[derive(Default)]
+pub struct SessionBuilder {
+    preset_env: Option<String>,
+    base: Option<TrainConfig>,
+    algo: Option<Box<dyn Algorithm>>,
+    ops: Vec<ConfigOp>,
+    /// PPO-only knobs the caller set explicitly (rejected at build time
+    /// when the session algorithm is not PPO).
+    ppo_only_knobs: Vec<&'static str>,
+    out_dir: Option<String>,
+    quiet: bool,
+}
+
+impl SessionBuilder {
+    fn set(mut self, op: impl FnOnce(&mut TrainConfig) + 'static) -> Self {
+        self.ops.push(Box::new(op));
+        self
+    }
+
+    /// Environment name; without an explicit `.config(...)` base this
+    /// also selects `TrainConfig::preset(name)` as the starting point.
+    pub fn env(mut self, name: &str) -> Self {
+        self.preset_env = Some(name.to_string());
+        let n = name.to_string();
+        self.set(move |c| c.env = n)
+    }
+
+    /// Start from an explicit config instead of the env preset (the CLI
+    /// path: flags have already been folded in).
+    pub fn config(mut self, cfg: TrainConfig) -> Self {
+        self.base = Some(cfg);
+        self
+    }
+
+    /// The algorithm instance. Selects the algorithm for the session;
+    /// if the instance carries non-default hyper-parameters (e.g.
+    /// `Td3 { cfg: Td3Cfg { policy_delay: 3, .. } }`) they are folded
+    /// into the config, overriding the preset/`.config` section for
+    /// that algorithm. A plain `X::default()` only selects the
+    /// algorithm and leaves the base config's (possibly preset-tuned)
+    /// hyper-parameter section untouched.
+    pub fn algo<A: Algorithm + 'static>(mut self, algo: A) -> Self {
+        self.algo = Some(Box::new(algo));
+        self
+    }
+
+    /// Compute backend (`Backend::Native` is the artifact-free default).
+    pub fn backend(self, b: Backend) -> Self {
+        self.set(move |c| c.backend = b)
+    }
+
+    /// Root RNG seed.
+    pub fn seed(self, seed: u64) -> Self {
+        self.set(move |c| c.seed = seed)
+    }
+
+    /// Parallel sampler workers (the paper's N).
+    pub fn samplers(self, n: usize) -> Self {
+        self.set(move |c| c.samplers = n)
+    }
+
+    /// Vectorized envs per sampler worker (M).
+    pub fn envs_per_sampler(self, m: usize) -> Self {
+        self.set(move |c| c.envs_per_sampler = m)
+    }
+
+    /// Training iterations.
+    pub fn iterations(self, n: usize) -> Self {
+        self.set(move |c| c.iterations = n)
+    }
+
+    /// Samples collected per iteration (paper: 20,000).
+    pub fn samples_per_iter(self, n: usize) -> Self {
+        self.set(move |c| c.samples_per_iter = n)
+    }
+
+    /// Steps per experience chunk.
+    pub fn chunk_steps(self, n: usize) -> Self {
+        self.set(move |c| c.chunk_steps = n)
+    }
+
+    /// Experience-queue capacity in chunks.
+    pub fn queue_capacity(self, n: usize) -> Self {
+        self.set(move |c| c.queue_capacity = n)
+    }
+
+    /// Hidden-layer widths of the policy/value MLPs.
+    pub fn hidden(self, widths: &[usize]) -> Self {
+        let w = widths.to_vec();
+        self.set(move |c| c.hidden = w)
+    }
+
+    /// Learning-signal reward scale.
+    pub fn reward_scale(self, s: f32) -> Self {
+        self.set(move |c| c.reward_scale = s)
+    }
+
+    /// Synchronous barrier mode (the ablation baseline; async is the
+    /// paper's architecture and the default).
+    pub fn sync(self) -> Self {
+        self.set(|c| c.async_mode = false)
+    }
+
+    /// Inference placement (local per-worker backends vs the sharded
+    /// shared pool).
+    pub fn infer(self, infer: Infer) -> Self {
+        self.set(move |c| match infer {
+            Infer::Local => c.inference_mode = InferenceMode::Local,
+            Infer::Shared { shards } => {
+                c.inference_mode = InferenceMode::Shared;
+                c.infer_shards = shards;
+            }
+        })
+    }
+
+    /// Shared-mode straggler-cut policy.
+    pub fn infer_wait(self, wait: InferWait) -> Self {
+        self.set(move |c| c.infer_wait = wait)
+    }
+
+    /// Shared-mode policy-version adoption (pool-wide epoch gate vs
+    /// per-shard observation).
+    pub fn infer_epoch(self, epoch: InferEpoch) -> Self {
+        self.set(move |c| c.infer_epoch = epoch)
+    }
+
+    /// Data-parallel PPO learner shards (§6.2). PPO-only: rejected at
+    /// build time under any other algorithm.
+    pub fn learner_shards(mut self, n: usize) -> Self {
+        self.ppo_only_knobs.push("learner_shards");
+        self.set(move |c| c.learner_shards = n)
+    }
+
+    /// Async-mode staleness bound on PPO gradient data. PPO-only: the
+    /// replay-based learners (DDPG, TD3) consume every chunk.
+    pub fn max_staleness(mut self, n: u64) -> Self {
+        self.ppo_only_knobs.push("max_staleness");
+        self.set(move |c| c.max_staleness = n)
+    }
+
+    /// Artifacts directory for the XLA backend.
+    pub fn artifacts_dir(self, dir: &str) -> Self {
+        let d = dir.to_string();
+        self.set(move |c| c.artifacts_dir = d)
+    }
+
+    /// Write run outputs (`metrics.csv`, `config.json`, `params.bin`,
+    /// `inference.json`) under this directory.
+    pub fn out_dir(mut self, dir: &str) -> Self {
+        self.out_dir = Some(dir.to_string());
+        self
+    }
+
+    /// Suppress per-iteration stdout logging (tests, sweeps).
+    pub fn quiet(mut self) -> Self {
+        self.quiet = true;
+        self
+    }
+
+    /// Resolve and validate the session. Errors are actionable: they
+    /// name the offending knob and what to change.
+    pub fn build(self) -> anyhow::Result<Session> {
+        let mut cfg = match self.base {
+            Some(c) => c,
+            None => TrainConfig::preset(self.preset_env.as_deref().unwrap_or("halfcheetah")),
+        };
+        if let Some(algo) = &self.algo {
+            // Probe whether the instance carries non-default
+            // hyper-parameters (apply_to only touches cfg.algo + its own
+            // section, so comparing against a default config with only
+            // the algo set detects exactly that). A default-configured
+            // instance — `.algo(Ppo::default())` — selects the algorithm
+            // WITHOUT clobbering the base's preset-tuned section; a
+            // customized instance overrides it.
+            let mut probe = TrainConfig::default();
+            algo.apply_to(&mut probe);
+            let default_probe = TrainConfig {
+                algo: probe.algo,
+                ..TrainConfig::default()
+            };
+            if probe == default_probe {
+                cfg.algo = probe.algo;
+            } else {
+                algo.apply_to(&mut cfg);
+            }
+        }
+        for op in self.ops {
+            op(&mut cfg);
+        }
+        // cfg.algo == algo.id() holds by construction: apply_to wrote
+        // the instance's identity into cfg and no builder op sets
+        // cfg.algo (an `.algo(..)` call deliberately overrides whatever
+        // algorithm a `.config(..)` base carried — documented above).
+        let algo = match self.algo {
+            Some(a) => a,
+            None => algorithm_from_config(&cfg),
+        };
+        if algo.id() != crate::config::Algo::Ppo && !self.ppo_only_knobs.is_empty() {
+            anyhow::bail!(
+                "{} {} PPO-only (data-parallel gradient sharding / gradient-data \
+                 staleness bounds have no meaning for a replay learner), but the \
+                 session algorithm is {} — drop the knob or use .algo(Ppo::default())",
+                self.ppo_only_knobs.join(", "),
+                if self.ppo_only_knobs.len() == 1 { "is" } else { "are" },
+                algo.name()
+            );
+        }
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        algo.validate(&cfg).map_err(|e| anyhow::anyhow!(e))?;
+        let spec = SessionSpec::resolve(algo.as_ref(), &cfg);
+        Ok(Session {
+            cfg,
+            algo,
+            spec,
+            out_dir: self.out_dir,
+            quiet: self.quiet,
+        })
+    }
+}
+
+/// A fully resolved, validated run description — build one with
+/// [`Session::builder`] or [`Session::from_config`].
+pub struct Session {
+    cfg: TrainConfig,
+    algo: Box<dyn Algorithm>,
+    spec: SessionSpec,
+    out_dir: Option<String>,
+    quiet: bool,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Build a session straight from a `TrainConfig` (the CLI adapter
+    /// path; the algorithm is resolved through the registry).
+    pub fn from_config(cfg: TrainConfig) -> anyhow::Result<Session> {
+        Session::builder().config(cfg).build()
+    }
+
+    /// The resolved config (single source of truth for the run).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// The algorithm every pipeline stage dispatches through.
+    pub fn algorithm(&self) -> &dyn Algorithm {
+        self.algo.as_ref()
+    }
+
+    /// The resolved spec (what `walle info` renders).
+    pub fn spec(&self) -> &SessionSpec {
+        &self.spec
+    }
+
+    /// Run the full training session. With an `.out_dir(..)` configured,
+    /// also writes `config.json`, `metrics.csv`, `params.bin`, and (in
+    /// shared inference mode) `inference.json` there.
+    pub fn run(&self) -> anyhow::Result<RunResult> {
+        let factory = make_factory(&self.cfg)?;
+        let mut log = if self.quiet {
+            MetricsLog::quiet()
+        } else {
+            MetricsLog::new()
+        };
+        if let Some(dir) = &self.out_dir {
+            std::fs::create_dir_all(dir)?;
+            self.cfg.save(&format!("{dir}/config.json"))?;
+            log = log.with_csv(&format!("{dir}/metrics.csv"))?;
+        }
+        let result =
+            orchestrator::run_with(self.algo.as_ref(), &self.cfg, factory.as_ref(), &mut log)?;
+        if let Some(dir) = &self.out_dir {
+            save_params(&format!("{dir}/params.bin"), &result.final_params)?;
+            if let Some(rep) = &result.infer {
+                std::fs::write(format!("{dir}/inference.json"), rep.to_json().to_string())?;
+            }
+        }
+        Ok(result)
+    }
+
+    /// Deterministically evaluate `params` over `episodes` mean-action
+    /// rollouts through the SAME trait-constructed actor the training
+    /// path uses, with an explicit observation-normalizer snapshot —
+    /// pass `RunResult::final_norm` to reproduce exactly what the
+    /// trained policy saw.
+    pub fn evaluate_with_norm(
+        &self,
+        params: &[f32],
+        norm: &crate::algo::normalizer::NormSnapshot,
+        episodes: usize,
+    ) -> anyhow::Result<EvalResult> {
+        let factory = make_factory(&self.cfg)?;
+        let want = self.algo.policy_param_count(factory.as_ref(), &self.cfg);
+        anyhow::ensure!(
+            params.len() == want,
+            "checkpoint has {} params, {} on {} expects {}",
+            params.len(),
+            self.algo.name(),
+            self.cfg.env,
+            want
+        );
+        eval::evaluate_algo(
+            self.algo.as_ref(),
+            factory.as_ref(),
+            &self.cfg.env,
+            params,
+            norm,
+            episodes,
+            self.cfg.seed,
+        )
+    }
+
+    /// [`Session::evaluate_with_norm`] with the identity normalizer —
+    /// the only faithful choice for a bare checkpoint file, which
+    /// carries parameters but NOT the training-time normalizer snapshot
+    /// (`walle eval`'s long-standing limitation). For in-process results
+    /// prefer `evaluate_with_norm(&r.final_params, &r.final_norm, ..)`.
+    pub fn evaluate(&self, params: &[f32], episodes: usize) -> anyhow::Result<EvalResult> {
+        let (obs_dim, _) = crate::env::registry::env_dims(&self.cfg.env)
+            .ok_or_else(|| anyhow::anyhow!("unknown env {:?}", self.cfg.env))?;
+        let norm = crate::algo::normalizer::NormSnapshot::identity(obs_dim);
+        self.evaluate_with_norm(params, &norm, episodes)
+    }
+}
+
+// ----------------------------------------------------------------- spec
+
+/// Resolved inference topology of a session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferTopology {
+    /// `"local"` or `"shared"`.
+    pub mode: String,
+    /// Resolved shard count S (None in local mode; Auto is resolved
+    /// against the sampler count and this machine's cores).
+    pub shards: Option<usize>,
+    /// Straggler-cut policy spelling (`"adaptive"` / `"fixed:<us>"`).
+    pub wait: String,
+    /// Version-adoption mode (`"pool"` / `"shard"`).
+    pub epoch: String,
+}
+
+/// The resolved, render-ready description of a session: algorithm name +
+/// hyper-parameters (via the [`Algorithm`] trait, no hard-coded `Algo::`
+/// matches) + inference topology, anchored on the underlying config —
+/// the ONLY source of truth; everything else here is resolved from it by
+/// [`SessionSpec::resolve`]. Round-trips to JSON
+/// ([`SessionSpec::to_json`] / [`SessionSpec::from_json`], which also
+/// accepts configs spelled with the legacy `infer_max_wait_us` key).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSpec {
+    /// Algorithm name, resolved through the trait.
+    pub algo: String,
+    /// The algorithm's hyper-parameters, rendered through the trait.
+    pub hyperparams: Json,
+    /// Resolved inference topology (Auto shard counts made concrete).
+    pub infer: InferTopology,
+    /// The full underlying config (the JSON round-trip anchor; fleet
+    /// shape, env, backend etc. are read from here).
+    pub config: TrainConfig,
+}
+
+impl SessionSpec {
+    /// Resolve a spec from a config through the algorithm trait.
+    pub fn resolve(algo: &dyn Algorithm, cfg: &TrainConfig) -> SessionSpec {
+        let shards = match cfg.inference_mode {
+            InferenceMode::Local => None,
+            InferenceMode::Shared => Some(cfg.infer_shards.resolve(cfg.samplers)),
+        };
+        SessionSpec {
+            algo: algo.name().to_string(),
+            hyperparams: algo.hyperparams(cfg),
+            infer: InferTopology {
+                mode: cfg.inference_mode.name().to_string(),
+                shards,
+                wait: cfg.infer_wait.name(),
+                epoch: cfg.infer_epoch.name().to_string(),
+            },
+            config: cfg.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut infer = vec![("mode", Json::Str(self.infer.mode.clone()))];
+        if let Some(s) = self.infer.shards {
+            infer.push(("shards", Json::Num(s as f64)));
+        }
+        infer.push(("wait", Json::Str(self.infer.wait.clone())));
+        infer.push(("epoch", Json::Str(self.infer.epoch.clone())));
+        Json::obj(vec![
+            ("algo", Json::Str(self.algo.clone())),
+            (
+                "total_envs",
+                Json::Num((self.config.samplers * self.config.envs_per_sampler) as f64),
+            ),
+            ("hyperparams", self.hyperparams.clone()),
+            ("inference", Json::obj(infer)),
+            ("config", self.config.to_json()),
+        ])
+    }
+
+    /// Rebuild a spec from its JSON form: the embedded `config` object
+    /// (or, as a fallback, a bare `TrainConfig` JSON — including ones
+    /// spelled with the legacy `infer_max_wait_us` key) is parsed and
+    /// re-resolved through the registry, so derived fields can never
+    /// drift from the config.
+    pub fn from_json(j: &Json) -> anyhow::Result<SessionSpec> {
+        let cfg_json = j.opt("config").unwrap_or(j);
+        let cfg = TrainConfig::from_json(cfg_json)?;
+        let algo = algorithm_from_config(&cfg);
+        Ok(SessionSpec::resolve(algo.as_ref(), &cfg))
+    }
+
+    /// Human-readable rendering (the `walle info` body).
+    pub fn render(&self) -> String {
+        let cfg = &self.config;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "session: {} on {} ({} backend, {} mode)\n",
+            self.algo,
+            cfg.env,
+            cfg.backend.name(),
+            if cfg.async_mode { "async" } else { "sync" }
+        ));
+        out.push_str(&format!(
+            "fleet:   {} samplers x {} envs = {} lockstep envs\n",
+            cfg.samplers,
+            cfg.envs_per_sampler,
+            cfg.samplers * cfg.envs_per_sampler
+        ));
+        match self.infer.shards {
+            Some(s) => out.push_str(&format!(
+                "infer:   shared pool, {} shard(s), wait {}, epoch {}\n",
+                s, self.infer.wait, self.infer.epoch
+            )),
+            None => out.push_str("infer:   local (one private backend per worker)\n"),
+        }
+        out.push_str(&format!("{}:     {}\n", self.algo, self.hyperparams));
+        out
+    }
+}
+
+// ------------------------------------------------------- checkpoint I/O
+
+/// Save a flat f32 parameter vector as little-endian bytes.
+pub fn save_params(path: &str, params: &[f32]) -> anyhow::Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for p in params {
+        bytes.extend_from_slice(&p.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save_params`].
+pub fn load_params(path: &str) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "corrupt checkpoint");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}

@@ -1,0 +1,284 @@
+//! `Session` builder validation + `SessionSpec` JSON round-trip +
+//! TD3-through-the-builder end-to-end — the API-redesign acceptance
+//! tests.
+
+use walle::algo::ddpg::Ddpg;
+use walle::algo::ppo::Ppo;
+use walle::algo::td3::Td3;
+use walle::config::{InferShards, InferWait, Td3Cfg, TrainConfig};
+use walle::session::{Infer, Session, SessionSpec};
+use walle::util::json::Json;
+
+// ---------------------------------------------------- builder validation
+
+#[test]
+fn builder_rejects_more_infer_shards_than_samplers() {
+    let err = Session::builder()
+        .env("pendulum")
+        .algo(Ppo::default())
+        .samplers(2)
+        .infer(Infer::Shared {
+            shards: InferShards::Fixed(8),
+        })
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("infer_shards") && err.contains("samplers"),
+        "error must name both knobs: {err}"
+    );
+    // auto always resolves to a valid count
+    Session::builder()
+        .env("pendulum")
+        .algo(Ppo::default())
+        .samplers(2)
+        .infer(Infer::Shared {
+            shards: InferShards::Auto,
+        })
+        .build()
+        .unwrap();
+}
+
+#[test]
+fn builder_rejects_ppo_only_knobs_under_replay_algorithms() {
+    for (name, build) in [
+        (
+            "ddpg",
+            Session::builder()
+                .env("pendulum")
+                .algo(Ddpg::default())
+                .learner_shards(4)
+                .build(),
+        ),
+        (
+            "td3",
+            Session::builder()
+                .env("pendulum")
+                .algo(Td3::default())
+                .max_staleness(5)
+                .build(),
+        ),
+    ] {
+        let err = build.unwrap_err().to_string();
+        assert!(
+            err.contains("PPO-only") && err.contains(name),
+            "{name}: error must say what is PPO-only and which algorithm \
+             the session runs: {err}"
+        );
+    }
+    // the same knobs are fine under PPO
+    Session::builder()
+        .env("pendulum")
+        .algo(Ppo::default())
+        .learner_shards(2)
+        .max_staleness(5)
+        .build()
+        .unwrap();
+}
+
+#[test]
+fn builder_rejects_zero_env_specs() {
+    for build in [
+        Session::builder().env("pendulum").samplers(0).build(),
+        Session::builder().env("pendulum").envs_per_sampler(0).build(),
+        Session::builder().env("pendulum").samples_per_iter(0).build(),
+    ] {
+        assert!(build.is_err(), "zero-env spec must be rejected at build()");
+    }
+}
+
+#[test]
+fn builder_rejects_td3_on_xla_backend() {
+    let err = Session::builder()
+        .env("pendulum")
+        .algo(Td3::default())
+        .backend(walle::config::Backend::Xla)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("td3") && err.contains("native"), "{err}");
+}
+
+/// `.algo(X::default())` selects the algorithm WITHOUT clobbering the
+/// env preset's tuned hyper-parameter section (pendulum's PPO preset
+/// tunes lr/minibatch; a default Ppo instance must not reset them).
+#[test]
+fn default_algo_instance_preserves_preset_tuning() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Ppo::default())
+        .build()
+        .unwrap();
+    let preset = TrainConfig::preset("pendulum");
+    assert_eq!(session.config().ppo, preset.ppo, "preset PPO tuning lost");
+    assert_eq!(session.config().ppo.lr, 1e-3);
+    assert_eq!(session.config().ppo.minibatch, 256);
+}
+
+#[test]
+fn builder_folds_algorithm_hyperparams_into_config() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Td3 {
+            cfg: Td3Cfg {
+                policy_delay: 5,
+                target_noise: 0.3,
+                ..Default::default()
+            },
+        })
+        .build()
+        .unwrap();
+    assert_eq!(session.config().algo.name(), "td3");
+    assert_eq!(session.config().td3.policy_delay, 5);
+    assert_eq!(session.spec().algo, "td3");
+    let j = session.spec().hyperparams.clone();
+    assert_eq!(j.get("policy_delay").unwrap().as_usize().unwrap(), 5);
+}
+
+// ------------------------------------------------------- spec round-trip
+
+#[test]
+fn session_spec_round_trips_to_json() {
+    let mut cfg = TrainConfig::preset("pendulum");
+    cfg.algo = walle::config::Algo::Ddpg;
+    cfg.inference_mode = walle::config::InferenceMode::Shared;
+    cfg.infer_shards = InferShards::Fixed(2);
+    cfg.infer_wait = InferWait::Fixed(750);
+    let session = Session::from_config(cfg).unwrap();
+    let spec = session.spec().clone();
+    assert_eq!(spec.infer.shards, Some(2));
+    assert_eq!(spec.infer.wait, "fixed:750");
+    let j = spec.to_json();
+    let back = SessionSpec::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+    assert_eq!(spec, back, "SessionSpec must survive a JSON round-trip");
+}
+
+/// The legacy `infer_max_wait_us` config key still resolves through the
+/// spec path (satellite regression).
+#[test]
+fn session_spec_accepts_legacy_infer_max_wait_us() {
+    let j = Json::parse(
+        r#"{"env": "pendulum", "inference_mode": "shared", "infer_max_wait_us": 750}"#,
+    )
+    .unwrap();
+    let spec = SessionSpec::from_json(&j).unwrap();
+    assert_eq!(spec.infer.wait, "fixed:750");
+    assert_eq!(spec.config.infer_wait, InferWait::Fixed(750));
+    // and the modern spelling round-trips from there
+    let back =
+        SessionSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap()).unwrap();
+    assert_eq!(spec, back);
+}
+
+#[test]
+fn spec_renders_resolved_topology_without_algo_matches() {
+    for algo in ["ppo", "ddpg", "td3"] {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.algo = walle::config::Algo::parse(algo).unwrap();
+        let session = Session::from_config(cfg).unwrap();
+        let text = session.spec().render();
+        assert!(text.contains(algo), "{algo}: {text}");
+        assert!(text.contains("pendulum"));
+        assert!(text.contains("local"), "default inference is local: {text}");
+    }
+}
+
+// -------------------------------------------------------- TD3 end-to-end
+
+/// Tentpole acceptance: TD3 trains end-to-end on pendulum via
+/// `Session::builder()`, implemented entirely against the `Algorithm`
+/// trait (no sampler/orchestrator/inference-server edits).
+#[test]
+fn td3_trains_end_to_end_on_pendulum_via_builder() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Td3 {
+            cfg: Td3Cfg {
+                warmup_steps: 100,
+                batch: 32,
+                updates_per_iter: 10,
+                ..Default::default()
+            },
+        })
+        .samplers(2)
+        .samples_per_iter(300)
+        .iterations(3)
+        .chunk_steps(100)
+        .hidden(&[16, 16])
+        .seed(7)
+        .quiet()
+        .build()
+        .unwrap();
+
+    let result = session.run().unwrap();
+    assert_eq!(result.metrics.len(), 3);
+    for m in &result.metrics {
+        assert!(m.samples >= 300);
+        assert!(m.learn_secs >= 0.0);
+    }
+    // final params are the TD3 actor (same layout as the DDPG actor)
+    let actor_len = walle::nn::layout::actor_layout(3, 1, &[16, 16]).total();
+    assert_eq!(result.final_params.len(), actor_len);
+    assert!(result.final_params.iter().all(|p| p.is_finite()));
+    // after warmup the learner must have moved the actor off its init
+    let init = walle::nn::layout::actor_layout(3, 1, &[16, 16])
+        .init_flat(&mut walle::util::rng::Pcg64::new(7));
+    assert_ne!(result.final_params, init, "actor never updated");
+
+    // deterministic eval flows through the same trait actor, under the
+    // normalizer snapshot the run actually trained with
+    let eval = session
+        .evaluate_with_norm(&result.final_params, &result.final_norm, 3)
+        .unwrap();
+    assert_eq!(eval.returns.len(), 3);
+    assert!(eval.mean_return.is_finite());
+    // the bare-checkpoint path (identity norm) also works
+    assert!(session.evaluate(&result.final_params, 1).is_ok());
+}
+
+/// TD3 also runs through the shared (sharded) inference pool — served by
+/// the SAME generic pool code that serves PPO and DDPG.
+#[test]
+fn td3_runs_under_shared_inference() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Td3 {
+            cfg: Td3Cfg {
+                warmup_steps: 100,
+                batch: 32,
+                updates_per_iter: 5,
+                ..Default::default()
+            },
+        })
+        .samplers(2)
+        .samples_per_iter(300)
+        .iterations(2)
+        .chunk_steps(100)
+        .hidden(&[16, 16])
+        .infer(Infer::Shared {
+            shards: InferShards::Fixed(2),
+        })
+        .infer_wait(InferWait::Fixed(500))
+        .quiet()
+        .build()
+        .unwrap();
+    let result = session.run().unwrap();
+    assert_eq!(result.metrics.len(), 2);
+    let rep = result.infer.expect("shared mode must report");
+    assert!(rep.forwards > 0);
+    assert_eq!(rep.shards, 2);
+}
+
+/// A checkpoint of the wrong algorithm/shape is rejected with a message
+/// naming the expectation (the old eval path silently assumed PPO).
+#[test]
+fn evaluate_rejects_wrong_param_count() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Ddpg::default())
+        .quiet()
+        .build()
+        .unwrap();
+    let err = session.evaluate(&[0.0; 7], 1).unwrap_err().to_string();
+    assert!(err.contains("ddpg") && err.contains("expects"), "{err}");
+}

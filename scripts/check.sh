@@ -4,13 +4,20 @@
 #   scripts/check.sh
 #
 # Mirrors the ROADMAP's tier-1 gate (`cargo build --release &&
-# cargo test -q`) and adds clippy with warnings denied so CI and local
-# runs agree on what "clean" means.
+# cargo test -q`) first, then adds the examples build (the builder-based
+# examples must never rot silently), clippy with warnings denied,
+# rustdoc with warnings denied, and rustfmt --check LAST — so a pure
+# formatting drift never masks a real build/test/lint failure. If fmt
+# is the only red step, run `cargo fmt` once and commit the mechanical
+# diff.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== cargo build --release --examples =="
+cargo build --release --examples
 
 echo "== cargo test -q =="
 cargo test -q
@@ -20,5 +27,8 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo doc --no-deps (deny warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== cargo fmt --check =="
+cargo fmt --check
 
 echo "== check.sh: all green =="
