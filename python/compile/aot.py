@@ -52,8 +52,13 @@ class Preset:
     # ``act`` covers act_batch, ``act_b{B}`` covers each other B. Rust's
     # runtime picks the exact artifact for its envs-per-sampler M (or the
     # shared-inference fleet size N*M), so the forward is padding-free at
-    # any emitted size and pads only between sizes.
-    act_batches: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+    # any emitted size and pads only between sizes. Shared-inference
+    # shards compile the whole ladder and run each dispatch in the
+    # smallest bucket that fits its real row count, so the mid-range
+    # steps (24, 48, 96) bound the worst-case padding of a straggler-cut
+    # partial batch to ~33% instead of 2x, and the large sizes (96, 128)
+    # raise the per-shard fleet ceiling without re-sharding.
+    act_batches: Tuple[int, ...] = (1, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128)
     eval_batch: int = 32  # batched inference artifact for eval / benches
     minibatch: int = 512  # PPO minibatch rows (padded + masked by rust)
     horizon: int = 1024  # GAE artifact T (rust pads shorter trajectories)

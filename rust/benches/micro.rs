@@ -18,6 +18,10 @@ use walle::coordinator::queue::Channel;
 use walle::env::registry::make_env;
 use walle::runtime::epoch::EpochMode;
 use walle::runtime::inference_server::{InferencePool, InferencePoolCfg, WaitPolicy};
+use walle::nn::kernels::{self, KernelMode, Lanes};
+use walle::nn::layout::ppo_layout;
+use walle::nn::mlp::NetShape;
+use walle::nn::quant::quantize_ppo;
 use walle::runtime::native_backend::NativeFactory;
 #[cfg(feature = "xla")]
 use walle::runtime::xla_backend::XlaFactory;
@@ -145,6 +149,140 @@ fn bench_act_batch_sweep() -> Vec<(usize, f64)> {
         out.push((b, rows_per_sec));
     }
     out
+}
+
+/// One GEMM throughput measurement: `variant` at `[m,k]x[k,n]`.
+struct GemmPoint {
+    m: usize,
+    k: usize,
+    n: usize,
+    variant: &'static str,
+    gflops: f64,
+}
+
+/// One act-path throughput measurement: `variant` at batch `batch`.
+struct ActKernelPoint {
+    batch: usize,
+    variant: &'static str,
+    rows_per_sec: f64,
+}
+
+/// The three f32 kernel variants swept by the microkernel benches: the
+/// portable scalar reference, the SIMD arm under the exact (bitwise)
+/// rounding contract, and the SIMD arm with FMA register tiling.
+fn f32_variants(native: Lanes) -> [(&'static str, Lanes, KernelMode); 3] {
+    [
+        ("scalar", Lanes::Scalar, KernelMode::Exact),
+        ("simd_exact", native, KernelMode::Exact),
+        ("simd_fast", native, KernelMode::Fast),
+    ]
+}
+
+/// Raw GEMM throughput per kernel variant via the explicit-dispatch
+/// entry points (no global state touched). The int8 row includes the
+/// per-call activation quantization — that is the real inference path
+/// (weights are quantized once at publish time).
+fn bench_kernel_gemm() -> Vec<GemmPoint> {
+    let native = kernels::active();
+    let mut points = Vec::new();
+    for &(m, k, n) in &[(32usize, 64usize, 64usize), (128, 128, 128)] {
+        let mut rng = Pcg64::new(11);
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let mut out = vec![0.0f32; m * n];
+        let flops = 2.0 * (m * k * n) as f64;
+        for (name, lanes, mode) in f32_variants(native) {
+            let r = Bench::new(&format!("gemm/{name} ({m}x{k}x{n})"))
+                .warmup(3)
+                .samples(8)
+                .iters_per_sample(500)
+                .run(|| {
+                    out.iter_mut().for_each(|v| *v = 0.0);
+                    kernels::matmul_via(lanes, mode, &a, &b, &mut out, m, k, n);
+                });
+            let gflops = flops / r.summary().mean / 1e9;
+            println!("    -> {gflops:.2} GFLOP/s");
+            points.push(GemmPoint { m, k, n, variant: name, gflops });
+        }
+        let mut bq = vec![0i8; k * n];
+        let mut bscale = vec![0.0f32; n];
+        kernels::quantize_cols(&b, k, n, &mut bq, &mut bscale);
+        let bias = vec![0.0f32; n];
+        let mut aq = vec![0i8; m * k];
+        let mut ascale = vec![0.0f32; m];
+        let r = Bench::new(&format!("gemm/int8 ({m}x{k}x{n})"))
+            .warmup(3)
+            .samples(8)
+            .iters_per_sample(500)
+            .run(|| {
+                kernels::quantize_rows(&a, m, k, &mut aq, &mut ascale);
+                kernels::matmul_q8_via(
+                    native, &aq, &ascale, &bq, &bscale, &bias, &mut out, m, k, n,
+                );
+            });
+        let gflops = flops / r.summary().mean / 1e9;
+        println!("    -> {gflops:.2} GFLOP/s (incl. per-call activation quantization)");
+        points.push(GemmPoint { m, k, n, variant: "int8", gflops });
+    }
+    points
+}
+
+/// End-to-end act-path rows/s per kernel variant at B in {1,8,16,32,64}.
+/// The f32 variants steer the REAL inference path (the batched native
+/// actor) through the global dispatch knobs; the int8 variant runs the
+/// quantized-snapshot forward the shared pool uses under
+/// `--infer-precision int8`. Globals are restored before returning —
+/// this bench is single-threaded while it runs.
+fn bench_kernel_act_sweep() -> Vec<ActKernelPoint> {
+    let native = kernels::active();
+    let f = NativeFactory::new(17, 6, &[64, 64], PpoCfg::default(), DdpgCfg::default());
+    let flat = f.init_ppo_params(0);
+    let layout = ppo_layout(17, 6, &[64, 64]);
+    let qsnap = quantize_ppo(&layout, &flat, &NetShape::new(17, 6, &[64, 64]));
+    let mut rng = Pcg64::new(13);
+    let mut points = Vec::new();
+    for b in [1usize, 8, 16, 32, 64] {
+        let mut obs = vec![0.0f32; b * 17];
+        let mut noise = vec![0.0f32; b * 6];
+        rng.fill_normal(&mut obs);
+        rng.fill_normal(&mut noise);
+        let mut scalar_rate = 0.0f64;
+        for (name, lanes, mode) in f32_variants(native) {
+            kernels::override_lanes(lanes);
+            kernels::set_mode(mode);
+            let mut actor = f.make_actor_batched(b).unwrap();
+            let r = Bench::new(&format!("act_kernel/{name} (B={b}, 17->64x64->6)"))
+                .warmup(5)
+                .samples(8)
+                .iters_per_sample(1000)
+                .run(|| {
+                    let _ = actor.act(&flat, &obs, &noise).unwrap();
+                });
+            let rows = b as f64 / r.summary().mean;
+            if name == "scalar" {
+                scalar_rate = rows;
+            }
+            println!("    -> {rows:.0} rows/s ({:.2}x scalar)", rows / scalar_rate);
+            points.push(ActKernelPoint { batch: b, variant: name, rows_per_sec: rows });
+        }
+        kernels::override_lanes(native);
+        kernels::set_mode(KernelMode::Exact);
+        let r = Bench::new(&format!("act_kernel/int8 (B={b}, 17->64x64->6)"))
+            .warmup(5)
+            .samples(8)
+            .iters_per_sample(1000)
+            .run(|| {
+                let _ = qsnap.forward_stochastic(&obs, &noise);
+            });
+        let rows = b as f64 / r.summary().mean;
+        println!("    -> {rows:.0} rows/s ({:.2}x scalar)", rows / scalar_rate);
+        points.push(ActKernelPoint { batch: b, variant: "int8", rows_per_sec: rows });
+    }
+    kernels::override_lanes(native);
+    kernels::set_mode(KernelMode::Exact);
+    points
 }
 
 /// One shared-pool fleet measurement at shard count `shards`.
@@ -419,6 +557,13 @@ fn main() {
     bench_gae();
     println!("-- native backend --");
     bench_native_backend();
+    println!(
+        "-- kernel microbenches (arch: {}, GEMM) --",
+        kernels::active().name()
+    );
+    let gemm = bench_kernel_gemm();
+    println!("-- kernel microbenches (act path, scalar vs simd vs int8) --");
+    let kact = bench_kernel_act_sweep();
     println!("-- act batch sweep (vectorized sampling) --");
     let sweep = bench_act_batch_sweep();
     println!("-- sharded vs private fleet inference (shard sweep) --");
@@ -433,6 +578,42 @@ fn main() {
     // machine-readable record (BENCH_micro.json)
     let json = Json::obj(vec![
         ("bench", Json::Str("micro".into())),
+        (
+            "kernels",
+            Json::obj(vec![
+                ("arch", Json::Str(kernels::active().name().into())),
+                (
+                    "gemm",
+                    Json::Arr(
+                        gemm.iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("m", Json::Num(p.m as f64)),
+                                    ("k", Json::Num(p.k as f64)),
+                                    ("n", Json::Num(p.n as f64)),
+                                    ("variant", Json::Str(p.variant.into())),
+                                    ("gflops", Json::Num(p.gflops)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                (
+                    "act_sweep",
+                    Json::Arr(
+                        kact.iter()
+                            .map(|p| {
+                                Json::obj(vec![
+                                    ("batch", Json::Num(p.batch as f64)),
+                                    ("variant", Json::Str(p.variant.into())),
+                                    ("rows_per_sec", Json::Num(p.rows_per_sec)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
         (
             "act_batch_sweep",
             Json::Arr(

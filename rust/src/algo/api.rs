@@ -224,6 +224,18 @@ pub trait Algorithm: Send + Sync {
     fn validate(&self, _cfg: &TrainConfig) -> Result<(), String> {
         Ok(())
     }
+
+    /// Publish-time int8 quantizer for this algorithm's actor (installed
+    /// into the `PolicyStore` when `--infer-precision int8`; see
+    /// `nn::quant`). `None` (the default) means the algorithm has no
+    /// quantized inference path and int8 is rejected at validation.
+    fn quantizer(
+        &self,
+        _factory: &dyn BackendFactory,
+        _cfg: &TrainConfig,
+    ) -> Option<crate::coordinator::policy_store::Quantizer> {
+        None
+    }
 }
 
 /// The algorithm registry: resolve a run config to its [`Algorithm`]

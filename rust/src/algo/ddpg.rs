@@ -111,6 +111,14 @@ impl Algorithm for Ddpg {
         cfg.algo = Algo::Ddpg;
         cfg.ddpg = self.cfg.clone();
     }
+
+    fn quantizer(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> Option<crate::coordinator::policy_store::Quantizer> {
+        Some(det_actor_quantizer(factory, cfg))
+    }
 }
 
 /// Worker-local deterministic actor sized to exactly `rows` rows,
@@ -136,6 +144,18 @@ pub(crate) fn make_det_server_actor(
     Ok(Box::new(DeterministicServerActor(
         factory.make_ddpg_actor_shared(max_rows)?,
     )))
+}
+
+/// Publish-time int8 quantizer for the deterministic actor network —
+/// shared by every deterministic-policy algorithm (DDPG, TD3).
+pub(crate) fn det_actor_quantizer(
+    factory: &dyn BackendFactory,
+    cfg: &TrainConfig,
+) -> crate::coordinator::policy_store::Quantizer {
+    let layout =
+        crate::nn::layout::actor_layout(factory.obs_dim(), factory.act_dim(), &cfg.hidden);
+    let shape = crate::nn::mlp::NetShape::new(factory.obs_dim(), factory.act_dim(), &cfg.hidden);
+    Box::new(move |p| crate::nn::quant::quantize_det_actor(&layout, p, &shape))
 }
 
 /// Sampler hooks shared by every deterministic-policy algorithm (DDPG,

@@ -108,6 +108,20 @@ impl Algorithm for Ppo {
         cfg.algo = Algo::Ppo;
         cfg.ppo = self.cfg.clone();
     }
+
+    fn quantizer(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> Option<crate::coordinator::policy_store::Quantizer> {
+        let layout =
+            crate::nn::layout::ppo_layout(factory.obs_dim(), factory.act_dim(), &cfg.hidden);
+        let shape =
+            crate::nn::mlp::NetShape::new(factory.obs_dim(), factory.act_dim(), &cfg.hidden);
+        Some(Box::new(move |p| {
+            crate::nn::quant::quantize_ppo(&layout, p, &shape)
+        }))
+    }
 }
 
 /// Per-worker PPO sampler hooks: per-env reparameterization-noise

@@ -128,6 +128,14 @@ impl Algorithm for Td3 {
         cfg.algo = Algo::Td3;
         cfg.td3 = self.cfg.clone();
     }
+
+    fn quantizer(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> Option<crate::coordinator::policy_store::Quantizer> {
+        Some(crate::algo::ddpg::det_actor_quantizer(factory, cfg))
+    }
 }
 
 /// Aggregated statistics for one TD3 update round.

@@ -244,6 +244,73 @@ impl InferEpoch {
     }
 }
 
+/// Numeric precision of the shared-inference actor forward
+/// (`--infer-precision`). The learner is always f32; int8 quantizes the
+/// actor once per policy publish (see `nn::quant`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferPrecision {
+    /// f32 forwards from the published flat vector (default).
+    F32,
+    /// int8 symmetric weights (per-column scales) + dynamic per-row
+    /// activation quantization, i32 accumulation. Native backend, shared
+    /// inference mode only.
+    Int8,
+}
+
+impl InferPrecision {
+    pub fn parse(s: &str) -> Option<InferPrecision> {
+        match s {
+            "f32" => Some(InferPrecision::F32),
+            "int8" => Some(InferPrecision::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferPrecision::F32 => "f32",
+            InferPrecision::Int8 => "int8",
+        }
+    }
+}
+
+/// Rounding contract of the native CPU kernels (`--kernels`). See
+/// `nn::kernels` for the full contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelsCfg {
+    /// SIMD kernels are bitwise identical to the scalar reference
+    /// (default — keeps cross-shard/cross-flip bitwise determinism).
+    Exact,
+    /// FMA + register tiling + vectorized reductions; results drift from
+    /// scalar only by float reassociation (~1e-6 relative).
+    Fast,
+}
+
+impl KernelsCfg {
+    pub fn parse(s: &str) -> Option<KernelsCfg> {
+        match s {
+            "exact" => Some(KernelsCfg::Exact),
+            "fast" => Some(KernelsCfg::Fast),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelsCfg::Exact => "exact",
+            KernelsCfg::Fast => "fast",
+        }
+    }
+
+    /// The `nn::kernels` mode this config selects.
+    pub fn mode(&self) -> crate::nn::kernels::KernelMode {
+        match self {
+            KernelsCfg::Exact => crate::nn::kernels::KernelMode::Exact,
+            KernelsCfg::Fast => crate::nn::kernels::KernelMode::Fast,
+        }
+    }
+}
+
 /// PPO hyper-parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PpoCfg {
@@ -471,6 +538,13 @@ pub struct TrainConfig {
     /// epoch gate, the default; `shard` = independent per-shard store
     /// observation, the pre-epoch behavior).
     pub infer_epoch: InferEpoch,
+    /// Numeric precision of the shared-inference actor forward (`f32`
+    /// default; `int8` = publish-time quantized actor snapshots — native
+    /// backend + shared inference only; the learner stays f32).
+    pub infer_precision: InferPrecision,
+    /// Rounding contract of the native CPU kernels (`exact` = SIMD
+    /// bitwise-equal to scalar, the default; `fast` = FMA + tiling).
+    pub kernels: KernelsCfg,
     /// Samples collected per iteration (paper: 20,000).
     pub samples_per_iter: usize,
     /// Training iterations to run.
@@ -521,6 +595,8 @@ impl Default for TrainConfig {
             infer_shards: InferShards::Auto,
             infer_wait: InferWait::Adaptive,
             infer_epoch: InferEpoch::Pool,
+            infer_precision: InferPrecision::F32,
+            kernels: KernelsCfg::Exact,
             samples_per_iter: 20_000,
             iterations: 100,
             queue_capacity: 16,
@@ -619,6 +695,24 @@ impl TrainConfig {
                 ));
             }
         }
+        if self.infer_precision == InferPrecision::Int8 {
+            if self.backend == Backend::Xla {
+                return Err(
+                    "infer_precision int8 quantizes the native kernel path — the \
+                     XLA artifacts are compiled f32; use --backend native (or drop \
+                     --infer-precision)"
+                        .into(),
+                );
+            }
+            if self.inference_mode != InferenceMode::Shared {
+                return Err(
+                    "infer_precision int8 applies to the shared inference pool's \
+                     publish-time snapshots; local mode actors read the f32 flat \
+                     vector directly — use --inference-mode shared"
+                        .into(),
+                );
+            }
+        }
         if self.learner_shards > 1 && self.algo != Algo::Ppo {
             return Err(format!(
                 "learner_shards = {} is a PPO-only knob (data-parallel PPO \
@@ -676,6 +770,11 @@ impl TrainConfig {
             "infer_epoch".into(),
             Json::Str(self.infer_epoch.name().into()),
         );
+        m.insert(
+            "infer_precision".into(),
+            Json::Str(self.infer_precision.name().into()),
+        );
+        m.insert("kernels".into(), Json::Str(self.kernels.name().into()));
         m.insert(
             "samples_per_iter".into(),
             Json::Num(self.samples_per_iter as f64),
@@ -753,6 +852,14 @@ impl TrainConfig {
         if let Some(v) = j.opt("infer_epoch") {
             cfg.infer_epoch = InferEpoch::parse(v.as_str()?)
                 .ok_or_else(|| JsonError::Access(format!("bad infer_epoch {v:?}")))?;
+        }
+        if let Some(v) = j.opt("infer_precision") {
+            cfg.infer_precision = InferPrecision::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad infer_precision {v:?}")))?;
+        }
+        if let Some(v) = j.opt("kernels") {
+            cfg.kernels = KernelsCfg::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad kernels {v:?}")))?;
         }
         if let Some(v) = j.opt("samples_per_iter") {
             cfg.samples_per_iter = v.as_usize()?;
@@ -1109,6 +1216,42 @@ mod tests {
         cfg.infer_shards = InferShards::Auto;
         cfg.inference_mode = InferenceMode::Shared;
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn infer_precision_and_kernels_parse_round_trip_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(d.infer_precision, InferPrecision::F32);
+        assert_eq!(d.kernels, KernelsCfg::Exact);
+        assert_eq!(InferPrecision::parse("int8"), Some(InferPrecision::Int8));
+        assert_eq!(InferPrecision::parse("f16"), None);
+        assert_eq!(KernelsCfg::parse("fast"), Some(KernelsCfg::Fast));
+        assert_eq!(KernelsCfg::parse("simd"), None);
+        assert_eq!(InferPrecision::Int8.name(), "int8");
+        assert_eq!(KernelsCfg::Fast.name(), "fast");
+
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_precision = InferPrecision::Int8;
+        cfg.kernels = KernelsCfg::Fast;
+        cfg.validate().unwrap();
+        let back = TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+
+        // int8 is a shared-inference native-backend knob
+        cfg.backend = Backend::Xla;
+        assert!(cfg.validate().unwrap_err().contains("int8"));
+        cfg.backend = Backend::Native;
+        cfg.inference_mode = InferenceMode::Local;
+        assert!(cfg.validate().unwrap_err().contains("shared"));
+
+        assert!(TrainConfig::from_json(
+            &Json::parse(r#"{"infer_precision": "int4"}"#).unwrap()
+        )
+        .is_err());
+        assert!(TrainConfig::from_json(&Json::parse(r#"{"kernels": "turbo"}"#).unwrap())
+            .is_err());
     }
 
     #[test]

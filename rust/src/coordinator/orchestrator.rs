@@ -86,9 +86,22 @@ pub fn run_with(
         cfg.env,
         crate::env::registry::ENV_NAMES
     );
+    // Kernel mode is process-global: every thread this run spawns
+    // (samplers, shards, learner) must agree on exact-vs-fast before the
+    // first forward pass.
+    crate::nn::kernels::set_mode(cfg.kernels.mode());
 
     let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
     let store = PolicyStore::new();
+    if cfg.infer_precision == crate::config::InferPrecision::Int8 {
+        let q = algo.quantizer(factory, cfg).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--infer-precision int8 is not supported by algorithm {:?}",
+                cfg.algo
+            )
+        })?;
+        store.set_quantizer(q);
+    }
     let stop = AtomicBool::new(false);
     let sync_budget = if cfg.async_mode {
         None

@@ -8,25 +8,38 @@
 //! (version check = one atomic load) and clone the Arc only on change.
 
 use crate::algo::normalizer::NormSnapshot;
+use crate::nn::quant::QuantizedPolicySnapshot;
 use crate::util::{cv_wait, plock};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-/// Immutable snapshot shipped to samplers: parameters + obs normalization.
+/// Immutable snapshot shipped to samplers: parameters + obs normalization,
+/// plus (when `--infer-precision int8` installed a quantizer) the int8
+/// actor produced from the same parameters at publish time.
 #[derive(Debug, Clone)]
 pub struct PolicySnapshot {
     pub version: u64,
     /// Flat parameter vector (PPO nets or DDPG actor).
     pub params: Arc<Vec<f32>>,
     pub norm: NormSnapshot,
+    /// int8 actor snapshot (None on the default f32 path). Rides the same
+    /// Arc through EpochGate propose/ack/flip, so every inference shard
+    /// flips to the identical quantized weights on the epoch boundary.
+    pub quant: Option<Arc<QuantizedPolicySnapshot>>,
 }
+
+/// Publish-time hook turning a flat f32 parameter vector into an int8
+/// actor snapshot (installed by the orchestrator when int8 inference is
+/// requested; algorithm-specific — see `Algorithm::quantizer`).
+pub type Quantizer = Box<dyn Fn(&[f32]) -> QuantizedPolicySnapshot + Send + Sync>;
 
 /// Versioned single-slot broadcast store.
 pub struct PolicyStore {
     slot: Mutex<Option<Arc<PolicySnapshot>>>,
     version: AtomicU64,
     changed: Condvar,
+    quantizer: Mutex<Option<Quantizer>>,
 }
 
 impl PolicyStore {
@@ -35,19 +48,32 @@ impl PolicyStore {
             slot: Mutex::new(None),
             version: AtomicU64::new(0),
             changed: Condvar::new(),
+            quantizer: Mutex::new(None),
         }
+    }
+
+    /// Install the publish-time quantizer (before the learner starts; the
+    /// learner thread owns all publishes, so there is no ordering race).
+    pub fn set_quantizer(&self, q: Quantizer) {
+        *plock(&self.quantizer) = Some(q);
     }
 
     /// Publish new parameters; returns the new version (monotonic).
     /// Poison-tolerant: the slot always holds a complete snapshot, so a
     /// reader or writer that panicked elsewhere must not wedge the whole
-    /// policy broadcast.
+    /// policy broadcast. With a quantizer installed, the int8 snapshot is
+    /// produced here — once per publish, on the learner thread — so the
+    /// per-request inference path never quantizes weights.
     pub fn publish(&self, params: Vec<f32>, norm: NormSnapshot) -> u64 {
+        let quant = plock(&self.quantizer)
+            .as_ref()
+            .map(|q| Arc::new(q(&params)));
         let v = self.version.fetch_add(1, Ordering::AcqRel) + 1;
         let snap = Arc::new(PolicySnapshot {
             version: v,
             params: Arc::new(params),
             norm,
+            quant,
         });
         *plock(&self.slot) = Some(snap);
         self.changed.notify_all();
@@ -153,6 +179,29 @@ mod tests {
         store.publish(vec![0.0], norm(1));
         let got = store.wait_newer(1, Duration::from_millis(30));
         assert!(got.is_none());
+    }
+
+    #[test]
+    fn installed_quantizer_attaches_int8_snapshot_on_publish() {
+        use crate::nn::layout::ppo_layout;
+        use crate::nn::mlp::NetShape;
+        use crate::nn::quant::quantize_ppo;
+        let shape = NetShape::new(3, 2, &[8]);
+        let layout = ppo_layout(3, 2, &[8]);
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        let flat = layout.init_flat(&mut rng);
+
+        let store = PolicyStore::new();
+        store.publish(flat.clone(), norm(3));
+        assert!(store.latest().unwrap().quant.is_none(), "no quantizer yet");
+
+        store.set_quantizer(Box::new(move |p| quantize_ppo(&layout, p, &shape)));
+        store.publish(flat, norm(3));
+        let snap = store.latest().unwrap();
+        let q = snap.quant.as_ref().expect("quantized snapshot attached");
+        assert_eq!(q.obs_dim, 3);
+        assert_eq!(q.act_dim, 2);
+        assert!(q.vf.is_some());
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
 
 use walle::bench::figures;
-use walle::config::{Algo, Backend, InferEpoch, InferShards, InferWait, InferenceMode, TrainConfig};
+use walle::config::{
+    Algo, Backend, InferEpoch, InferPrecision, InferShards, InferWait, InferenceMode, KernelsCfg,
+    TrainConfig,
+};
 use walle::session::{load_params, Session};
 use walle::util::cli::Args;
 use walle::util::logging::{set_level, Level};
@@ -59,6 +62,15 @@ TRAIN FLAGS:
                          same dispatch boundary (shard count stays a pure
                          performance knob across publishes); `shard` lets
                          each shard observe the store independently
+  --infer-precision P    inference numeric precision: `f32` (default) or
+                         `int8` — quantize each published actor snapshot
+                         to int8 weights + f32 scales for the shared
+                         pool's forwards (native backend + shared
+                         inference only; the learner stays f32)
+  --kernels MODE         `exact` (default) keeps the SIMD microkernels
+                         bitwise-identical to the scalar reference;
+                         `fast` enables FMA register tiling (~1e-6
+                         relative drift, higher throughput)
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo NAME            learner algorithm: ppo|ddpg|td3
@@ -148,6 +160,14 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
         cfg.infer_epoch = InferEpoch::parse(e)
             .ok_or_else(|| anyhow::anyhow!("bad --infer-epoch {e:?} (pool|shard)"))?;
     }
+    if let Some(p) = args.get("infer-precision") {
+        cfg.infer_precision = InferPrecision::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("bad --infer-precision {p:?} (f32|int8)"))?;
+    }
+    if let Some(k) = args.get("kernels") {
+        cfg.kernels = KernelsCfg::parse(k)
+            .ok_or_else(|| anyhow::anyhow!("bad --kernels {k:?} (exact|fast)"))?;
+    }
     cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
     cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;
@@ -206,6 +226,9 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
 
 fn run_eval(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
+    // eval bypasses the orchestrator (which sets this for training runs),
+    // so honor --kernels here too
+    walle::nn::kernels::set_mode(cfg.kernels.mode());
     let ckpt = args.require("checkpoint")?;
     let params = load_params(ckpt)?;
     let episodes = args.usize_or("episodes", 10)?;

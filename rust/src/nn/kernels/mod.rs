@@ -1,0 +1,544 @@
+//! Arch-dispatched CPU microkernels for the native backend's hot loops.
+//!
+//! Every dense op the native MLP touches — the three GEMM variants, bias
+//! add, activations, and the int8 quantized path — lives here as a
+//! slice-based kernel with (up to) three implementations:
+//!
+//! * **scalar** ([`scalar`]): the always-correct reference, byte-for-byte
+//!   the same loops `nn::tensor` shipped before this layer existed;
+//! * **AVX2/FMA** (`simd::avx2`, x86_64): 8-wide `std::arch` kernels,
+//!   compiled unconditionally and selected at runtime via
+//!   `is_x86_feature_detected!`;
+//! * **NEON** (`simd::neon`, aarch64): 4-wide kernels (NEON is baseline
+//!   on aarch64, so no feature probe is needed).
+//!
+//! # Dispatch rules
+//!
+//! The active lane set ([`Lanes`]) is detected **once** per process, on
+//! first use: AVX2+FMA on x86_64 when the CPU has both, NEON on aarch64,
+//! scalar everywhere else. The `WALLE_KERNELS` environment variable
+//! overrides detection (`scalar` forces the portable fallback — this is
+//! the CI "portable leg"; `simd`/`auto` keep auto-detection). Benches and
+//! single-threaded harnesses may also call [`override_lanes`] /
+//! [`set_mode`]; both are process-global, so concurrent tests must use
+//! the explicit `*_via` entry points instead of flipping globals.
+//!
+//! # Exact vs fast mode
+//!
+//! [`KernelMode::Exact`] (the default, `--kernels exact`) guarantees the
+//! SIMD arm is **bitwise identical** to the scalar reference for finite
+//! inputs: vector kernels keep the scalar loop's per-element operation
+//! order and rounding (broadcast multiply + separate add — never FMA),
+//! including the `a == 0.0` row skip, and ops whose scalar form is a
+//! sequential reduction (`matmul_nt`'s dot products, the Gaussian logp
+//! row sums) stay scalar. This is what keeps the cross-shard/cross-flip
+//! bitwise determinism suite green regardless of the machine's lane
+//! width. [`KernelMode::Fast`] (`--kernels fast`) lifts the rounding
+//! contract: GEMMs use fused multiply-add and a register-tiled main loop
+//! (4 rows x 2 vectors on AVX2), and `matmul_nt` vectorizes its dot
+//! products with a lane-reordered horizontal sum. Results differ from
+//! scalar only by floating-point reassociation/fusion (empirically
+//! ~1e-6 relative for the 64-wide policy nets; asserted by the parity
+//! suite at 1e-4).
+//!
+//! `tanh` always routes through libm's `f32::tanh` in both modes — a
+//! polynomial SIMD tanh would silently change every activation bit.
+//!
+//! # Shape preconditions and alignment
+//!
+//! All matrices are dense row-major `&[f32]` with no padding: `a` is
+//! `[m, k]`, `b` is `[k, n]` (or as documented per variant), `out` is
+//! `[m, n]`. Lengths are asserted at the public entry points. GEMMs
+//! **accumulate** (`out +=`); pass a zeroed buffer for a plain product.
+//! No alignment is required — kernels use unaligned loads, which cost
+//! nothing on the targeted microarchitectures; callers should still
+//! prefer freshly-allocated (16-byte-aligned) buffers.
+//!
+//! # int8 path
+//!
+//! [`matmul_q8`] computes `out[i,j] = (Σ_p aq[i,p]·bq[p,j]) · as[i]·bs[j]
+//! + bias[j]` with i32 accumulation — exact integer arithmetic, so the
+//! scalar and SIMD arms agree bitwise (the dequant epilogue uses the same
+//! multiply-then-add rounding on both). Symmetric quantization clamps to
+//! ±127 (never -128), so every product fits i16 and i32 accumulation is
+//! safe for `k < 2^31 / 127^2 ≈ 133k` — asserted. Weights quantize
+//! per-output-column ([`quantize_cols`]), activations per-row at call
+//! time ([`quantize_rows`]).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub mod scalar;
+pub mod simd;
+
+/// Rounding contract for the f32 SIMD kernels. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// SIMD arm is bitwise identical to scalar (default).
+    Exact,
+    /// FMA + register tiling + vectorized reductions; reassociation
+    /// allowed.
+    Fast,
+}
+
+/// Which kernel arm executes. `Avx2` implies FMA is also available.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lanes {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Lanes {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lanes::Scalar => "scalar",
+            Lanes::Avx2 => "avx2",
+            Lanes::Neon => "neon",
+        }
+    }
+}
+
+const LANES_UNSET: u8 = u8::MAX;
+static LANES: AtomicU8 = AtomicU8::new(LANES_UNSET);
+static MODE: AtomicU8 = AtomicU8::new(0); // 0 = Exact, 1 = Fast
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Lanes {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Lanes::Avx2
+    } else {
+        Lanes::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> Lanes {
+    Lanes::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> Lanes {
+    Lanes::Scalar
+}
+
+fn detect() -> Lanes {
+    match std::env::var("WALLE_KERNELS").ok().as_deref() {
+        Some("scalar") => Lanes::Scalar,
+        // "simd"/"auto"/unset/anything else: auto-detect (unknown values
+        // must not silently disable SIMD in production)
+        _ => detect_arch(),
+    }
+}
+
+fn lanes_to_u8(l: Lanes) -> u8 {
+    match l {
+        Lanes::Scalar => 0,
+        Lanes::Avx2 => 1,
+        Lanes::Neon => 2,
+    }
+}
+
+fn lanes_from_u8(v: u8) -> Lanes {
+    match v {
+        1 => Lanes::Avx2,
+        2 => Lanes::Neon,
+        _ => Lanes::Scalar,
+    }
+}
+
+/// The process-wide active lane set (detected once, on first use).
+pub fn active() -> Lanes {
+    let v = LANES.load(Ordering::Relaxed);
+    if v != LANES_UNSET {
+        return lanes_from_u8(v);
+    }
+    let detected = detect();
+    LANES.store(lanes_to_u8(detected), Ordering::Relaxed);
+    detected
+}
+
+/// Force a lane set (benches / single-threaded harnesses only; see the
+/// module docs). Requests for an arm the CPU can't run fall back to
+/// scalar, so this can never select an unsound path.
+pub fn override_lanes(l: Lanes) {
+    let safe = match l {
+        Lanes::Scalar => Lanes::Scalar,
+        other => {
+            if other == detect_arch() {
+                other
+            } else {
+                Lanes::Scalar
+            }
+        }
+    };
+    LANES.store(lanes_to_u8(safe), Ordering::Relaxed);
+}
+
+/// The process-wide rounding contract (default [`KernelMode::Exact`]).
+pub fn mode() -> KernelMode {
+    if MODE.load(Ordering::Relaxed) == 0 {
+        KernelMode::Exact
+    } else {
+        KernelMode::Fast
+    }
+}
+
+/// Set the rounding contract (applied by the orchestrator from
+/// `--kernels` before any worker thread starts).
+pub fn set_mode(m: KernelMode) {
+    MODE.store(if m == KernelMode::Exact { 0 } else { 1 }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// f32 GEMM family
+// ---------------------------------------------------------------------------
+
+/// out += a @ b. a:[m,k], b:[k,n], out:[m,n].
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_via(active(), mode(), a, b, out, m, k, n);
+}
+
+/// out += a^T @ b. a:[k,m], b:[k,n], out:[m,n].
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_tn_via(active(), mode(), a, b, out, m, k, n);
+}
+
+/// out += a @ b^T. a:[m,k], b:[n,k], out:[m,n].
+pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_nt_via(active(), mode(), a, b, out, m, k, n);
+}
+
+/// x[r,:] += bias for every row. Exact-safe in every arm (elementwise).
+pub fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    add_bias_via(active(), x, bias, rows, cols);
+}
+
+/// x = max(x, 0) elementwise. Exact-safe for non-NaN inputs.
+pub fn relu_inplace(x: &mut [f32]) {
+    relu_via(active(), x);
+}
+
+/// x = tanh(x) elementwise — always libm scalar (see module docs).
+pub fn tanh_inplace(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// [`matmul`] with explicit dispatch (parity tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_via(
+    lanes: Lanes,
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul: bad a len");
+    assert_eq!(b.len(), k * n, "matmul: bad b len");
+    assert_eq!(out.len(), m * n, "matmul: bad out len");
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::matmul(mode, a, b, out, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::matmul(mode, a, b, out, m, k, n),
+        _ => scalar::matmul(a, b, out, m, k, n),
+    }
+}
+
+/// [`matmul_tn`] with explicit dispatch (parity tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_via(
+    lanes: Lanes,
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), k * m, "matmul_tn: bad a len");
+    assert_eq!(b.len(), k * n, "matmul_tn: bad b len");
+    assert_eq!(out.len(), m * n, "matmul_tn: bad out len");
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::matmul_tn(mode, a, b, out, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::matmul_tn(mode, a, b, out, m, k, n),
+        _ => scalar::matmul_tn(a, b, out, m, k, n),
+    }
+}
+
+/// [`matmul_nt`] with explicit dispatch. In exact mode every arm runs the
+/// scalar dot products (a SIMD reduction would reorder the sum).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_via(
+    lanes: Lanes,
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul_nt: bad a len");
+    assert_eq!(b.len(), n * k, "matmul_nt: bad b len");
+    assert_eq!(out.len(), m * n, "matmul_nt: bad out len");
+    if mode == KernelMode::Exact {
+        return scalar::matmul_nt(a, b, out, m, k, n);
+    }
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::matmul_nt_fast(a, b, out, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::matmul_nt_fast(a, b, out, m, k, n),
+        _ => scalar::matmul_nt(a, b, out, m, k, n),
+    }
+}
+
+/// [`add_bias`] with explicit dispatch.
+pub fn add_bias_via(lanes: Lanes, x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "add_bias: bad x len");
+    assert_eq!(bias.len(), cols, "add_bias: bad bias len");
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::add_bias(x, bias, rows, cols) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::add_bias(x, bias, rows, cols),
+        _ => scalar::add_bias(x, bias, rows, cols),
+    }
+}
+
+/// [`relu_inplace`] with explicit dispatch.
+pub fn relu_via(lanes: Lanes, x: &mut [f32]) {
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::relu(x) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::relu(x),
+        _ => scalar::relu(x),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 quantized path
+// ---------------------------------------------------------------------------
+
+/// Symmetric per-row quantization: `q[r,c] = round(x[r,c] * 127/maxabs_r)`
+/// clamped to ±127, `scales[r] = maxabs_r / 127` (0 for an all-zero row).
+pub fn quantize_rows(x: &[f32], rows: usize, cols: usize, q: &mut [i8], scales: &mut [f32]) {
+    assert_eq!(x.len(), rows * cols, "quantize_rows: bad x len");
+    assert_eq!(q.len(), rows * cols, "quantize_rows: bad q len");
+    assert_eq!(scales.len(), rows, "quantize_rows: bad scales len");
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let maxabs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let (scale, inv) = if maxabs > 0.0 {
+            (maxabs / 127.0, 127.0 / maxabs)
+        } else {
+            (0.0, 0.0)
+        };
+        scales[r] = scale;
+        for (qv, &v) in q[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+            *qv = ((v * inv).round() as i32).clamp(-127, 127) as i8;
+        }
+    }
+}
+
+/// Symmetric per-column quantization of a `[k, n]` row-major weight
+/// matrix: column `j` gets `scales[j] = maxabs_j / 127`.
+pub fn quantize_cols(w: &[f32], k: usize, n: usize, q: &mut [i8], scales: &mut [f32]) {
+    assert_eq!(w.len(), k * n, "quantize_cols: bad w len");
+    assert_eq!(q.len(), k * n, "quantize_cols: bad q len");
+    assert_eq!(scales.len(), n, "quantize_cols: bad scales len");
+    for j in 0..n {
+        let mut maxabs = 0.0f32;
+        for p in 0..k {
+            maxabs = maxabs.max(w[p * n + j].abs());
+        }
+        let (scale, inv) = if maxabs > 0.0 {
+            (maxabs / 127.0, 127.0 / maxabs)
+        } else {
+            (0.0, 0.0)
+        };
+        scales[j] = scale;
+        for p in 0..k {
+            q[p * n + j] = ((w[p * n + j] * inv).round() as i32).clamp(-127, 127) as i8;
+        }
+    }
+}
+
+/// int8 GEMM + dequant + bias:
+/// `out[i,j] = (Σ_p aq[i,p]·bq[p,j]) · ascale[i]·bscale[j] + bias[j]`.
+/// aq:[m,k] (per-row scales), bq:[k,n] (per-col scales), out:[m,n]
+/// (overwritten, not accumulated). Scalar and SIMD arms agree bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q8(
+    aq: &[i8],
+    ascale: &[f32],
+    bq: &[i8],
+    bscale: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_q8_via(active(), aq, ascale, bq, bscale, bias, out, m, k, n);
+}
+
+/// [`matmul_q8`] with explicit dispatch (parity tests, benches).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q8_via(
+    lanes: Lanes,
+    aq: &[i8],
+    ascale: &[f32],
+    bq: &[i8],
+    bscale: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(aq.len(), m * k, "matmul_q8: bad aq len");
+    assert_eq!(ascale.len(), m, "matmul_q8: bad ascale len");
+    assert_eq!(bq.len(), k * n, "matmul_q8: bad bq len");
+    assert_eq!(bscale.len(), n, "matmul_q8: bad bscale len");
+    assert_eq!(bias.len(), n, "matmul_q8: bad bias len");
+    assert_eq!(out.len(), m * n, "matmul_q8: bad out len");
+    // ±127 products fit i16; i32 accumulation is safe up to this depth
+    assert!(k < (i32::MAX as usize) / (127 * 127), "matmul_q8: k too deep for i32 acc");
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::matmul_q8(aq, ascale, bq, bscale, bias, out, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::matmul_q8(aq, ascale, bq, bscale, bias, out, m, k, n),
+        _ => scalar::matmul_q8(aq, ascale, bq, bscale, bias, out, m, k, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_vec(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    /// The in-process arm (whatever this machine dispatches to) must be
+    /// bitwise identical to scalar in exact mode — the module's core
+    /// guarantee, checked across odd shapes in tests/kernel_parity.rs.
+    #[test]
+    fn active_arm_matches_scalar_bitwise_in_exact_mode() {
+        let mut rng = Pcg64::new(11);
+        let (m, k, n) = (5, 17, 23);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut o_ref = vec![0.0f32; m * n];
+        let mut o_act = vec![0.0f32; m * n];
+        scalar::matmul(&a, &b, &mut o_ref, m, k, n);
+        matmul_via(active(), KernelMode::Exact, &a, &b, &mut o_act, m, k, n);
+        for (x, y) in o_ref.iter().zip(&o_act) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn fast_mode_stays_close_to_scalar() {
+        let mut rng = Pcg64::new(12);
+        let (m, k, n) = (9, 33, 14);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut o_ref = vec![0.0f32; m * n];
+        let mut o_fast = vec![0.0f32; m * n];
+        scalar::matmul(&a, &b, &mut o_ref, m, k, n);
+        matmul_via(active(), KernelMode::Fast, &a, &b, &mut o_fast, m, k, n);
+        for (x, y) in o_ref.iter().zip(&o_fast) {
+            assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn quantize_round_trips_within_step() {
+        let mut rng = Pcg64::new(13);
+        let (rows, cols) = (4, 19);
+        let x = rand_vec(&mut rng, rows * cols);
+        let mut q = vec![0i8; rows * cols];
+        let mut s = vec![0.0f32; rows];
+        quantize_rows(&x, rows, cols, &mut q, &mut s);
+        for r in 0..rows {
+            for c in 0..cols {
+                let deq = q[r * cols + c] as f32 * s[r];
+                // symmetric round-to-nearest: error bounded by half a step
+                assert!((deq - x[r * cols + c]).abs() <= 0.5 * s[r] + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn q8_gemm_approximates_f32_gemm() {
+        let mut rng = Pcg64::new(14);
+        let (m, k, n) = (8, 32, 16);
+        let a = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+
+        let mut exact = vec![0.0f32; m * n];
+        scalar::matmul(&a, &w, &mut exact, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                exact[i * n + j] += bias[j];
+            }
+        }
+
+        let (mut aq, mut a_s) = (vec![0i8; m * k], vec![0.0f32; m]);
+        let (mut wq, mut w_s) = (vec![0i8; k * n], vec![0.0f32; n]);
+        quantize_rows(&a, m, k, &mut aq, &mut a_s);
+        quantize_cols(&w, k, n, &mut wq, &mut w_s);
+        let mut got = vec![0.0f32; m * n];
+        matmul_q8(&aq, &a_s, &wq, &w_s, &bias, &mut got, m, k, n);
+
+        let scale: f32 = exact.iter().fold(0.0f32, |s, v| s.max(v.abs()));
+        for (e, g) in exact.iter().zip(&got) {
+            // int8 with per-row/per-col scales: ~1% of dynamic range
+            assert!((e - g).abs() <= 0.02 * scale.max(1.0), "{e} vs {g}");
+        }
+    }
+
+    #[test]
+    fn zero_row_quantizes_to_zero_scale_and_zero_output() {
+        let x = vec![0.0f32; 8];
+        let mut q = vec![7i8; 8];
+        let mut s = vec![1.0f32; 1];
+        quantize_rows(&x, 1, 8, &mut q, &mut s);
+        assert_eq!(s[0], 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn override_falls_back_when_arm_unavailable() {
+        // Neon can never be forced on x86_64 (and vice versa); the
+        // override must degrade to scalar, not select an unsound arm.
+        #[cfg(target_arch = "x86_64")]
+        {
+            override_lanes(Lanes::Neon);
+            assert_eq!(active(), Lanes::Scalar);
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            override_lanes(Lanes::Avx2);
+            assert_eq!(active(), Lanes::Scalar);
+        }
+        override_lanes(detect());
+        assert_eq!(active(), detect());
+    }
+}

@@ -1,0 +1,110 @@
+//! Scalar reference kernels — the always-correct fallback arm and the
+//! bitwise oracle the SIMD arms are tested against.
+//!
+//! These are the exact loops `nn::tensor` shipped before the kernel
+//! layer existed (same iteration order, same `a == 0.0` skip, same
+//! per-element rounding), so routing through this arm reproduces the
+//! pre-kernel results bit for bit.
+
+/// out += a @ b. a:[m,k], b:[k,n], out:[m,n]; ikj order for locality.
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out += a^T @ b. a:[k,m], b:[k,n], out:[m,n] (no transpose alloc).
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out += a @ b^T. a:[m,k], b:[n,k], out:[m,n]: sequential dot products
+/// (the exact-mode reduction order; see the module docs).
+pub fn matmul_nt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            out[i * n + j] += acc;
+        }
+    }
+}
+
+/// x[r,:] += bias for every row.
+pub fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        for (v, b) in x[r * cols..(r + 1) * cols].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// x = max(x, 0) elementwise.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// int8 GEMM + dequant + bias (see [`super::matmul_q8`]). kj-inner order
+/// with an i32 accumulator row so `b` streams row-wise like the f32 path.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q8(
+    aq: &[i8],
+    ascale: &[f32],
+    bq: &[i8],
+    bscale: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut acc = vec![0i32; n];
+    for i in 0..m {
+        acc.fill(0);
+        let arow = &aq[i * k..(i + 1) * k];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &bq[p * n..(p + 1) * n];
+            for (o, &bv) in acc.iter_mut().zip(brow) {
+                *o += av * bv as i32;
+            }
+        }
+        let sa = ascale[i];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            // mul-then-add, the same rounding sequence as the SIMD arms
+            orow[j] = acc[j] as f32 * (sa * bscale[j]) + bias[j];
+        }
+    }
+}

@@ -1,0 +1,580 @@
+//! Explicit-SIMD kernel arms: AVX2/FMA (x86_64) and NEON (aarch64).
+//!
+//! Exact-mode kernels replicate the scalar arm's per-element operation
+//! order and rounding exactly — broadcast multiply + separate add (never
+//! FMA), including the `a == 0.0` row skip — so they are bitwise
+//! identical to [`super::scalar`] for finite inputs at any lane width.
+//! Fast-mode kernels use fused multiply-add (and, on AVX2, a 4x16
+//! register-tiled main loop) and may differ from scalar by rounding.
+//!
+//! # Safety
+//!
+//! The AVX2 functions are `#[target_feature(enable = "avx2,fma")]` and
+//! must only be called after `is_x86_feature_detected!` confirmed both
+//! features — [`super`]'s dispatch (and [`super::override_lanes`]'s
+//! fallback) is the sole caller and upholds this. NEON is baseline on
+//! aarch64, so the neon module exposes safe wrappers. All pointer
+//! arithmetic stays inside the slice bounds asserted by the `super::*_via`
+//! entry points.
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use super::super::KernelMode;
+    use core::arch::x86_64::*;
+
+    /// y[0..n] += s * x[0..n], scalar rounding order (mul then add).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_exact(s: f32, x: *const f32, y: *mut f32, n: usize) {
+        let vs = _mm256_set1_ps(s);
+        let mut j = 0;
+        while j + 8 <= n {
+            let xv = _mm256_loadu_ps(x.add(j));
+            let yv = _mm256_loadu_ps(y.add(j));
+            _mm256_storeu_ps(y.add(j), _mm256_add_ps(yv, _mm256_mul_ps(vs, xv)));
+            j += 8;
+        }
+        while j < n {
+            *y.add(j) += s * *x.add(j);
+            j += 1;
+        }
+    }
+
+    /// y[0..n] += s * x[0..n], fused.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_fma(s: f32, x: *const f32, y: *mut f32, n: usize) {
+        let vs = _mm256_set1_ps(s);
+        let mut j = 0;
+        while j + 8 <= n {
+            let xv = _mm256_loadu_ps(x.add(j));
+            let yv = _mm256_loadu_ps(y.add(j));
+            _mm256_storeu_ps(y.add(j), _mm256_fmadd_ps(vs, xv, yv));
+            j += 8;
+        }
+        while j < n {
+            *y.add(j) = s.mul_add(*x.add(j), *y.add(j));
+            j += 1;
+        }
+    }
+
+    /// out += a @ b (see [`super::super::matmul`] for shapes).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul(
+        mode: KernelMode,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        match mode {
+            KernelMode::Exact => matmul_exact(a, b, out, m, k, n),
+            KernelMode::Fast => matmul_tiled(a, b, out, m, k, n),
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn matmul_exact(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        for i in 0..m {
+            let orow = out.as_mut_ptr().add(i * n);
+            for p in 0..k {
+                let av = *a.get_unchecked(i * k + p);
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_exact(av, b.as_ptr().add(p * n), orow, n);
+            }
+        }
+    }
+
+    /// Register-tiled fast GEMM: 4 output rows x 16 columns held in 8
+    /// ymm accumulators across the whole k loop (each b strip is loaded
+    /// once and feeds all 4 rows).
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn matmul_tiled(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        let mut i = 0;
+        while i + 4 <= m {
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut c00 = _mm256_loadu_ps(out.as_ptr().add(i * n + j));
+                let mut c01 = _mm256_loadu_ps(out.as_ptr().add(i * n + j + 8));
+                let mut c10 = _mm256_loadu_ps(out.as_ptr().add((i + 1) * n + j));
+                let mut c11 = _mm256_loadu_ps(out.as_ptr().add((i + 1) * n + j + 8));
+                let mut c20 = _mm256_loadu_ps(out.as_ptr().add((i + 2) * n + j));
+                let mut c21 = _mm256_loadu_ps(out.as_ptr().add((i + 2) * n + j + 8));
+                let mut c30 = _mm256_loadu_ps(out.as_ptr().add((i + 3) * n + j));
+                let mut c31 = _mm256_loadu_ps(out.as_ptr().add((i + 3) * n + j + 8));
+                for p in 0..k {
+                    let b0 = _mm256_loadu_ps(b.as_ptr().add(p * n + j));
+                    let b1 = _mm256_loadu_ps(b.as_ptr().add(p * n + j + 8));
+                    let a0 = _mm256_set1_ps(*a.get_unchecked(i * k + p));
+                    c00 = _mm256_fmadd_ps(a0, b0, c00);
+                    c01 = _mm256_fmadd_ps(a0, b1, c01);
+                    let a1 = _mm256_set1_ps(*a.get_unchecked((i + 1) * k + p));
+                    c10 = _mm256_fmadd_ps(a1, b0, c10);
+                    c11 = _mm256_fmadd_ps(a1, b1, c11);
+                    let a2 = _mm256_set1_ps(*a.get_unchecked((i + 2) * k + p));
+                    c20 = _mm256_fmadd_ps(a2, b0, c20);
+                    c21 = _mm256_fmadd_ps(a2, b1, c21);
+                    let a3 = _mm256_set1_ps(*a.get_unchecked((i + 3) * k + p));
+                    c30 = _mm256_fmadd_ps(a3, b0, c30);
+                    c31 = _mm256_fmadd_ps(a3, b1, c31);
+                }
+                _mm256_storeu_ps(out.as_mut_ptr().add(i * n + j), c00);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i * n + j + 8), c01);
+                _mm256_storeu_ps(out.as_mut_ptr().add((i + 1) * n + j), c10);
+                _mm256_storeu_ps(out.as_mut_ptr().add((i + 1) * n + j + 8), c11);
+                _mm256_storeu_ps(out.as_mut_ptr().add((i + 2) * n + j), c20);
+                _mm256_storeu_ps(out.as_mut_ptr().add((i + 2) * n + j + 8), c21);
+                _mm256_storeu_ps(out.as_mut_ptr().add((i + 3) * n + j), c30);
+                _mm256_storeu_ps(out.as_mut_ptr().add((i + 3) * n + j + 8), c31);
+                j += 16;
+            }
+            // column tail for this 4-row band
+            if j < n {
+                for r in i..i + 4 {
+                    for p in 0..k {
+                        let av = *a.get_unchecked(r * k + p);
+                        if av == 0.0 {
+                            continue;
+                        }
+                        axpy_fma(
+                            av,
+                            b.as_ptr().add(p * n + j),
+                            out.as_mut_ptr().add(r * n + j),
+                            n - j,
+                        );
+                    }
+                }
+            }
+            i += 4;
+        }
+        // row tail
+        while i < m {
+            let orow = out.as_mut_ptr().add(i * n);
+            for p in 0..k {
+                let av = *a.get_unchecked(i * k + p);
+                if av == 0.0 {
+                    continue;
+                }
+                axpy_fma(av, b.as_ptr().add(p * n), orow, n);
+            }
+            i += 1;
+        }
+    }
+
+    /// out += a^T @ b (see [`super::super::matmul_tn`] for shapes).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_tn(
+        mode: KernelMode,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for p in 0..k {
+            let brow = b.as_ptr().add(p * n);
+            for i in 0..m {
+                let av = *a.get_unchecked(p * m + i);
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = out.as_mut_ptr().add(i * n);
+                match mode {
+                    KernelMode::Exact => axpy_exact(av, brow, orow, n),
+                    KernelMode::Fast => axpy_fma(av, brow, orow, n),
+                }
+            }
+        }
+    }
+
+    /// out += a @ b^T, fast mode only (vectorized dot + horizontal sum;
+    /// exact mode routes to scalar upstream).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_nt_fast(
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            let arow = a.as_ptr().add(i * k);
+            for j in 0..n {
+                let brow = b.as_ptr().add(j * k);
+                let mut acc = _mm256_setzero_ps();
+                let mut p = 0;
+                while p + 8 <= k {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_loadu_ps(arow.add(p)),
+                        _mm256_loadu_ps(brow.add(p)),
+                        acc,
+                    );
+                    p += 8;
+                }
+                let mut dot = hsum(acc);
+                while p < k {
+                    dot = (*arow.add(p)).mul_add(*brow.add(p), dot);
+                    p += 1;
+                }
+                *out.get_unchecked_mut(i * n + j) += dot;
+            }
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// x[r,:] += bias (elementwise — exact-safe in both modes).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        for r in 0..rows {
+            let row = x.as_mut_ptr().add(r * cols);
+            let mut j = 0;
+            while j + 8 <= cols {
+                let v = _mm256_add_ps(
+                    _mm256_loadu_ps(row.add(j)),
+                    _mm256_loadu_ps(bias.as_ptr().add(j)),
+                );
+                _mm256_storeu_ps(row.add(j), v);
+                j += 8;
+            }
+            while j < cols {
+                *row.add(j) += *bias.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+
+    /// x = max(x, 0). Operand order mirrors scalar `v.max(0.0)`:
+    /// `vmaxps(v, 0)` returns 0 when v is NaN.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn relu(x: &mut [f32]) {
+        let zero = _mm256_setzero_ps();
+        let ptr = x.as_mut_ptr();
+        let len = x.len();
+        let mut j = 0;
+        while j + 8 <= len {
+            _mm256_storeu_ps(ptr.add(j), _mm256_max_ps(_mm256_loadu_ps(ptr.add(j)), zero));
+            j += 8;
+        }
+        while j < len {
+            *ptr.add(j) = (*ptr.add(j)).max(0.0);
+            j += 1;
+        }
+    }
+
+    /// int8 GEMM + dequant + bias (see [`super::super::matmul_q8`]).
+    /// 16 columns per strip: i8 b-row loads widen to i16, multiply by the
+    /// broadcast a (products fit i16 at ±127), widen-accumulate into two
+    /// 8-lane i32 registers, dequantize once per strip.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn matmul_q8(
+        aq: &[i8],
+        ascale: &[f32],
+        bq: &[i8],
+        bscale: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            let sa = *ascale.get_unchecked(i);
+            let vsa = _mm256_set1_ps(sa);
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut acc0 = _mm256_setzero_si256();
+                let mut acc1 = _mm256_setzero_si256();
+                for p in 0..k {
+                    let av = *aq.get_unchecked(i * k + p);
+                    if av == 0 {
+                        continue;
+                    }
+                    let a16 = _mm256_set1_epi16(av as i16);
+                    let b8 = _mm_loadu_si128(bq.as_ptr().add(p * n + j) as *const __m128i);
+                    let b16 = _mm256_cvtepi8_epi16(b8);
+                    let prod = _mm256_mullo_epi16(a16, b16);
+                    acc0 = _mm256_add_epi32(
+                        acc0,
+                        _mm256_cvtepi16_epi32(_mm256_castsi256_si128(prod)),
+                    );
+                    acc1 = _mm256_add_epi32(
+                        acc1,
+                        _mm256_cvtepi16_epi32(_mm256_extracti128_si256(prod, 1)),
+                    );
+                }
+                // out = acc * (sa * sb) + bias — same rounding as scalar
+                let s0 = _mm256_mul_ps(vsa, _mm256_loadu_ps(bscale.as_ptr().add(j)));
+                let s1 = _mm256_mul_ps(vsa, _mm256_loadu_ps(bscale.as_ptr().add(j + 8)));
+                let o0 = _mm256_add_ps(
+                    _mm256_mul_ps(_mm256_cvtepi32_ps(acc0), s0),
+                    _mm256_loadu_ps(bias.as_ptr().add(j)),
+                );
+                let o1 = _mm256_add_ps(
+                    _mm256_mul_ps(_mm256_cvtepi32_ps(acc1), s1),
+                    _mm256_loadu_ps(bias.as_ptr().add(j + 8)),
+                );
+                _mm256_storeu_ps(out.as_mut_ptr().add(i * n + j), o0);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i * n + j + 8), o1);
+                j += 16;
+            }
+            while j < n {
+                let mut acc = 0i32;
+                for p in 0..k {
+                    let av = *aq.get_unchecked(i * k + p) as i32;
+                    if av == 0 {
+                        continue;
+                    }
+                    acc += av * *bq.get_unchecked(p * n + j) as i32;
+                }
+                *out.get_unchecked_mut(i * n + j) =
+                    acc as f32 * (sa * *bscale.get_unchecked(j)) + *bias.get_unchecked(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use super::super::KernelMode;
+    use core::arch::aarch64::*;
+
+    /// y[0..n] += s * x[0..n], scalar rounding order (mul then add).
+    #[inline]
+    fn axpy_exact(s: f32, x: &[f32], y: &mut [f32], n: usize) {
+        unsafe {
+            let vs = vdupq_n_f32(s);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let xv = vld1q_f32(xp.add(j));
+                let yv = vld1q_f32(yp.add(j));
+                vst1q_f32(yp.add(j), vaddq_f32(yv, vmulq_f32(vs, xv)));
+                j += 4;
+            }
+            while j < n {
+                *yp.add(j) += s * *xp.add(j);
+                j += 1;
+            }
+        }
+    }
+
+    /// y[0..n] += s * x[0..n], fused.
+    #[inline]
+    fn axpy_fma(s: f32, x: &[f32], y: &mut [f32], n: usize) {
+        unsafe {
+            let vs = vdupq_n_f32(s);
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let mut j = 0;
+            while j + 4 <= n {
+                let xv = vld1q_f32(xp.add(j));
+                let yv = vld1q_f32(yp.add(j));
+                vst1q_f32(yp.add(j), vfmaq_f32(yv, vs, xv));
+                j += 4;
+            }
+            while j < n {
+                *yp.add(j) = s.mul_add(*xp.add(j), *yp.add(j));
+                j += 1;
+            }
+        }
+    }
+
+    /// out += a @ b (see [`super::super::matmul`] for shapes).
+    pub fn matmul(
+        mode: KernelMode,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                match mode {
+                    KernelMode::Exact => axpy_exact(av, brow, orow, n),
+                    KernelMode::Fast => axpy_fma(av, brow, orow, n),
+                }
+            }
+        }
+    }
+
+    /// out += a^T @ b (see [`super::super::matmul_tn`] for shapes).
+    pub fn matmul_tn(
+        mode: KernelMode,
+        a: &[f32],
+        b: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for p in 0..k {
+            let brow = &b[p * n..(p + 1) * n];
+            for i in 0..m {
+                let av = a[p * m + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                match mode {
+                    KernelMode::Exact => axpy_exact(av, brow, orow, n),
+                    KernelMode::Fast => axpy_fma(av, brow, orow, n),
+                }
+            }
+        }
+    }
+
+    /// out += a @ b^T, fast mode only (4-lane dot + horizontal sum).
+    pub fn matmul_nt_fast(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+        unsafe {
+            for i in 0..m {
+                let arow = a.as_ptr().add(i * k);
+                for j in 0..n {
+                    let brow = b.as_ptr().add(j * k);
+                    let mut acc = vdupq_n_f32(0.0);
+                    let mut p = 0;
+                    while p + 4 <= k {
+                        acc = vfmaq_f32(acc, vld1q_f32(arow.add(p)), vld1q_f32(brow.add(p)));
+                        p += 4;
+                    }
+                    let mut dot = vaddvq_f32(acc);
+                    while p < k {
+                        dot = (*arow.add(p)).mul_add(*brow.add(p), dot);
+                        p += 1;
+                    }
+                    out[i * n + j] += dot;
+                }
+            }
+        }
+    }
+
+    /// x[r,:] += bias (elementwise — exact-safe in both modes).
+    pub fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, cols: usize) {
+        unsafe {
+            let bp = bias.as_ptr();
+            for r in 0..rows {
+                let row = x.as_mut_ptr().add(r * cols);
+                let mut j = 0;
+                while j + 4 <= cols {
+                    vst1q_f32(row.add(j), vaddq_f32(vld1q_f32(row.add(j)), vld1q_f32(bp.add(j))));
+                    j += 4;
+                }
+                while j < cols {
+                    *row.add(j) += *bp.add(j);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// x = max(x, 0). `vmaxnmq` follows IEEE maxNum like scalar
+    /// `v.max(0.0)` (NaN input yields 0).
+    pub fn relu(x: &mut [f32]) {
+        unsafe {
+            let zero = vdupq_n_f32(0.0);
+            let ptr = x.as_mut_ptr();
+            let len = x.len();
+            let mut j = 0;
+            while j + 4 <= len {
+                vst1q_f32(ptr.add(j), vmaxnmq_f32(vld1q_f32(ptr.add(j)), zero));
+                j += 4;
+            }
+            while j < len {
+                *ptr.add(j) = (*ptr.add(j)).max(0.0);
+                j += 1;
+            }
+        }
+    }
+
+    /// int8 GEMM + dequant + bias (see [`super::super::matmul_q8`]).
+    /// 8 columns per strip: `vmull_s8` widens the i8 products to i16,
+    /// then widening adds accumulate into two 4-lane i32 registers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_q8(
+        aq: &[i8],
+        ascale: &[f32],
+        bq: &[i8],
+        bscale: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        unsafe {
+            for i in 0..m {
+                let sa = ascale[i];
+                let vsa = vdupq_n_f32(sa);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let mut acc0 = vdupq_n_s32(0);
+                    let mut acc1 = vdupq_n_s32(0);
+                    for p in 0..k {
+                        let av = aq[i * k + p];
+                        if av == 0 {
+                            continue;
+                        }
+                        let a8 = vdup_n_s8(av);
+                        let b8 = vld1_s8(bq.as_ptr().add(p * n + j));
+                        let prod = vmull_s8(a8, b8);
+                        acc0 = vaddw_s16(acc0, vget_low_s16(prod));
+                        acc1 = vaddw_s16(acc1, vget_high_s16(prod));
+                    }
+                    let s0 = vmulq_f32(vsa, vld1q_f32(bscale.as_ptr().add(j)));
+                    let s1 = vmulq_f32(vsa, vld1q_f32(bscale.as_ptr().add(j + 4)));
+                    let o0 = vaddq_f32(
+                        vmulq_f32(vcvtq_f32_s32(acc0), s0),
+                        vld1q_f32(bias.as_ptr().add(j)),
+                    );
+                    let o1 = vaddq_f32(
+                        vmulq_f32(vcvtq_f32_s32(acc1), s1),
+                        vld1q_f32(bias.as_ptr().add(j + 4)),
+                    );
+                    vst1q_f32(out.as_mut_ptr().add(i * n + j), o0);
+                    vst1q_f32(out.as_mut_ptr().add(i * n + j + 4), o1);
+                    j += 8;
+                }
+                while j < n {
+                    let mut acc = 0i32;
+                    for p in 0..k {
+                        let av = aq[i * k + p] as i32;
+                        if av == 0 {
+                            continue;
+                        }
+                        acc += av * bq[p * n + j] as i32;
+                    }
+                    out[i * n + j] = acc as f32 * (sa * bscale[j]) + bias[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+}

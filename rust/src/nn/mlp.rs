@@ -9,10 +9,10 @@
 //! backend is integration-tested against, (3) the baseline for perf
 //! comparisons in the benches.
 
+use crate::nn::kernels;
 use crate::nn::layout::ParamLayout;
 use crate::nn::tensor::{
-    act_grad_from_out, add_bias, apply_act, col_sums, matmul, matmul_nt, matmul_tn,
-    mul_inplace, Act, Mat,
+    act_grad_from_out, apply_act, col_sums, matmul_tn, mul_inplace, Act, Mat,
 };
 
 pub const LOG_2PI: f32 = 1.837877066409345;
@@ -42,13 +42,10 @@ fn entry<'a>(layout: &ParamLayout, flat: &'a [f32], name: &str) -> (&'a [f32], V
     (&flat[e.offset..e.offset + e.size()], e.shape.clone())
 }
 
-fn weight(layout: &ParamLayout, flat: &[f32], name: &str) -> Mat {
-    let (data, shape) = entry(layout, flat, name);
-    Mat::from_vec(shape[0], shape[1], data.to_vec())
-}
-
 /// Forward through an MLP prefix; returns every layer *output* (post-
 /// activation), input first — the residuals manual backprop needs.
+/// Weights are borrowed straight from the flat vector into the kernel
+/// GEMM (no per-forward copies — this is the inference hot path).
 fn mlp_forward(
     layout: &ParamLayout,
     flat: &[f32],
@@ -65,10 +62,13 @@ fn mlp_forward(
         } else {
             format!("{prefix}/out")
         };
-        let w = weight(layout, flat, &format!("{name}/w"));
+        let (w, wshape) = entry(layout, flat, &format!("{name}/w"));
         let (b, _) = entry(layout, flat, &format!("{name}/b"));
-        let mut y = matmul(acts.last().unwrap(), &w);
-        add_bias(&mut y, b);
+        let xin = acts.last().unwrap();
+        assert_eq!(xin.cols, wshape[0], "matmul dim mismatch");
+        let mut y = Mat::zeros(xin.rows, wshape[1]);
+        kernels::matmul(&xin.data, w, &mut y.data, xin.rows, wshape[0], wshape[1]);
+        kernels::add_bias(&mut y.data, b, y.rows, y.cols);
         apply_act(&mut y, if i < n_hidden { hidden_act } else { out_act });
         acts.push(y);
     }
@@ -113,8 +113,11 @@ fn mlp_backward(
         }
         // propagate to the layer input (at i == 0 this is d(network input),
         // which DDPG's actor update needs as dQ/da)
-        let w = weight(layout, flat, &format!("{name}/w"));
-        dy = matmul_nt(&dy, &w); // dz @ w^T
+        let (w, wshape) = entry(layout, flat, &format!("{name}/w"));
+        let mut dx = Mat::zeros(dy.rows, wshape[0]);
+        // dz @ w^T: w is [k_in, n_out] row-major = the b^T operand as-is
+        kernels::matmul_nt(&dy.data, w, &mut dx.data, dy.rows, wshape[1], wshape[0]);
+        dy = dx;
     }
     dy
 }
@@ -148,16 +151,23 @@ pub fn policy_value(
     (mean, log_std.to_vec(), value)
 }
 
-/// Diagonal-Gaussian log-density summed over actions.
+/// Diagonal-Gaussian log-density summed over actions. The per-dim
+/// `exp(-log_std)` and the constant term are hoisted out of the row loop
+/// (they were recomputed B*A times — a measurable slice of the act hot
+/// path); the row reduction itself stays sequential (exact-mode order).
 pub fn gaussian_logp(a: &Mat, mean: &Mat, log_std: &[f32]) -> Vec<f32> {
+    let inv_std: Vec<f32> = log_std.iter().map(|ls| (-ls).exp()).collect();
+    let base: f32 = log_std.iter().map(|ls| -ls - 0.5 * LOG_2PI).sum();
     let mut out = vec![0.0; a.rows];
     for r in 0..a.rows {
+        let arow = a.row(r);
+        let mrow = mean.row(r);
         let mut acc = 0.0f32;
         for c in 0..a.cols {
-            let z = (a.at(r, c) - mean.at(r, c)) * (-log_std[c]).exp();
-            acc += -0.5 * z * z - log_std[c] - 0.5 * LOG_2PI;
+            let z = (arow[c] - mrow[c]) * inv_std[c];
+            acc += -0.5 * z * z;
         }
-        out[r] = acc;
+        out[r] = acc + base;
     }
     out
 }
@@ -176,10 +186,13 @@ pub fn act(
     noise: &Mat,
 ) -> ActOut {
     let (mean, log_std, value) = policy_value(layout, flat, shape, obs);
+    let std: Vec<f32> = log_std.iter().map(|ls| ls.exp()).collect();
     let mut action = mean.clone();
     for r in 0..action.rows {
-        for c in 0..action.cols {
-            *action.at_mut(r, c) += log_std[c].exp() * noise.at(r, c);
+        let arow = action.row_mut(r);
+        let nrow = noise.row(r);
+        for c in 0..arow.len() {
+            arow[c] += std[c] * nrow[c];
         }
     }
     let logp = gaussian_logp(&action, &mean, &log_std);
@@ -293,12 +306,13 @@ pub fn ppo_loss_grad(
     let a = shape.act_dim;
     let mut dmean = Mat::zeros(b, a);
     let ls_e = layout.find("pi/log_std").unwrap();
+    let inv_stds: Vec<f32> = log_std.iter().map(|ls| (-ls).exp()).collect();
     for i in 0..b {
         if dlogp[i] == 0.0 && batch.mask[i] == 0.0 {
             continue;
         }
         for j in 0..a {
-            let inv_std = (-log_std[j]).exp();
+            let inv_std = inv_stds[j];
             let z = (batch.act.at(i, j) - mean.at(i, j)) * inv_std;
             // dlogp/dmean_j = z * inv_std ; dlogp/dlog_std_j = z^2 - 1
             *dmean.at_mut(i, j) = dlogp[i] * z * inv_std;

@@ -6,6 +6,8 @@
 //! integration-tested against it.
 
 pub mod adam;
+pub mod kernels;
 pub mod layout;
 pub mod mlp;
+pub mod quant;
 pub mod tensor;

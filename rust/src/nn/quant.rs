@@ -1,0 +1,339 @@
+//! int8 quantized actor snapshots for the inference hot path.
+//!
+//! The learner stays f32; quantization happens once per policy publish
+//! (`PolicyStore::publish` with a quantizer installed), producing a
+//! [`QuantizedPolicySnapshot`] that rides inside the regular
+//! `PolicySnapshot` broadcast — the EpochGate propose/ack/flip machinery
+//! ships it to every inference shard for free, so all shards flip to the
+//! same quantized weights on the same epoch boundary.
+//!
+//! Scheme (see `nn::kernels` module docs for the integer contract):
+//! weights are symmetric per-output-column int8 (`quantize_cols`),
+//! activations are quantized per-row at call time (`quantize_rows`,
+//! dynamic range per observation), accumulation is exact i32, and the
+//! dequant epilogue applies `ascale[i]*wscale[j]` then adds the f32 bias.
+//! Biases and `log_std` stay f32 — they are tiny and precision-critical.
+//!
+//! The forward math mirrors `nn::mlp` exactly (same layer order, same
+//! activations, same Gaussian logp formula) so the quantized path is a
+//! drop-in for the server actor: only the GEMM arithmetic differs.
+
+use crate::nn::kernels;
+use crate::nn::layout::ParamLayout;
+use crate::nn::mlp::{NetShape, LOG_2PI};
+use crate::nn::tensor::Act;
+
+/// One dense layer with int8 weights: `y = act(x @ wq·scales + bias)`.
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    pub k: usize,
+    pub n: usize,
+    /// [k, n] row-major int8 weights (symmetric, per-column scales).
+    pub wq: Vec<i8>,
+    /// Per-output-column dequant scales, len n.
+    pub wscale: Vec<f32>,
+    /// f32 bias, len n.
+    pub bias: Vec<f32>,
+    pub act: Act,
+}
+
+impl QuantLinear {
+    fn from_params(w: &[f32], bias: &[f32], k: usize, n: usize, act: Act) -> QuantLinear {
+        let mut wq = vec![0i8; k * n];
+        let mut wscale = vec![0.0f32; n];
+        kernels::quantize_cols(w, k, n, &mut wq, &mut wscale);
+        QuantLinear {
+            k,
+            n,
+            wq,
+            wscale,
+            bias: bias.to_vec(),
+            act,
+        }
+    }
+}
+
+/// A whole MLP in int8 (hidden layers + output layer, in order).
+#[derive(Debug, Clone)]
+pub struct QuantMlp {
+    pub layers: Vec<QuantLinear>,
+}
+
+impl QuantMlp {
+    /// Quantize the `prefix` MLP out of a flat f32 parameter vector
+    /// (same naming scheme as `nn::mlp::mlp_forward`).
+    pub fn from_layout(
+        layout: &ParamLayout,
+        flat: &[f32],
+        prefix: &str,
+        n_hidden: usize,
+        hidden_act: Act,
+        out_act: Act,
+    ) -> QuantMlp {
+        let mut layers = Vec::with_capacity(n_hidden + 1);
+        for i in 0..=n_hidden {
+            let name = if i < n_hidden {
+                format!("{prefix}/l{i}")
+            } else {
+                format!("{prefix}/out")
+            };
+            let we = layout
+                .find(&format!("{name}/w"))
+                .unwrap_or_else(|| panic!("missing param {name}/w"));
+            let w = &flat[we.offset..we.offset + we.size()];
+            let (k, n) = (we.shape[0], we.shape[1]);
+            let bias = layout.view(flat, &format!("{name}/b")).unwrap();
+            let act = if i < n_hidden { hidden_act } else { out_act };
+            layers.push(QuantLinear::from_params(w, bias, k, n, act));
+        }
+        QuantMlp { layers }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().map_or(0, |l| l.k)
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().map_or(0, |l| l.n)
+    }
+
+    /// Batched forward: x is [rows, in_dim] row-major; returns
+    /// [rows, out_dim]. Activations are re-quantized per layer (dynamic
+    /// per-row scales), GEMM+dequant+bias is one fused `matmul_q8`.
+    pub fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        assert_eq!(x.len(), rows * self.in_dim(), "quant forward: bad x len");
+        let mut cur = x.to_vec();
+        let mut qbuf: Vec<i8> = Vec::new();
+        let mut scales = vec![0.0f32; rows];
+        for layer in &self.layers {
+            qbuf.resize(rows * layer.k, 0);
+            kernels::quantize_rows(&cur, rows, layer.k, &mut qbuf, &mut scales);
+            let mut y = vec![0.0f32; rows * layer.n];
+            kernels::matmul_q8(
+                &qbuf,
+                &scales,
+                &layer.wq,
+                &layer.wscale,
+                &layer.bias,
+                &mut y,
+                rows,
+                layer.k,
+                layer.n,
+            );
+            match layer.act {
+                Act::Id => {}
+                Act::Relu => kernels::relu_inplace(&mut y),
+                Act::Tanh => kernels::tanh_inplace(&mut y),
+            }
+            cur = y;
+        }
+        cur
+    }
+}
+
+/// Output of one quantized stochastic forward (mirror of `mlp::ActOut`,
+/// flat row-major slices instead of `Mat`).
+#[derive(Debug, Clone)]
+pub struct QuantActOut {
+    pub action: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub value: Vec<f32>,
+    pub mean: Vec<f32>,
+}
+
+/// An actor network quantized at publish time. For PPO this holds the
+/// policy mean MLP, the value MLP, and the f32 `log_std`; for DDPG/TD3
+/// only the deterministic actor (`vf == None`, `log_std` empty).
+#[derive(Debug, Clone)]
+pub struct QuantizedPolicySnapshot {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub pi: QuantMlp,
+    pub vf: Option<QuantMlp>,
+    /// f32 state-independent log-std (PPO only; empty for deterministic).
+    pub log_std: Vec<f32>,
+}
+
+/// Quantize a PPO policy (pi mean MLP + vf MLP + log_std) from its flat
+/// f32 parameter vector.
+pub fn quantize_ppo(layout: &ParamLayout, flat: &[f32], shape: &NetShape) -> QuantizedPolicySnapshot {
+    let nh = shape.hidden.len();
+    let pi = QuantMlp::from_layout(layout, flat, "pi", nh, Act::Tanh, Act::Id);
+    let vf = QuantMlp::from_layout(layout, flat, "vf", nh, Act::Tanh, Act::Id);
+    let log_std = layout.view(flat, "pi/log_std").unwrap().to_vec();
+    QuantizedPolicySnapshot {
+        obs_dim: shape.obs_dim,
+        act_dim: shape.act_dim,
+        pi,
+        vf: Some(vf),
+        log_std,
+    }
+}
+
+/// Quantize a deterministic DDPG/TD3 actor (relu hidden, tanh output).
+pub fn quantize_det_actor(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+) -> QuantizedPolicySnapshot {
+    let nh = shape.hidden.len();
+    let pi = QuantMlp::from_layout(layout, flat, "actor", nh, Act::Relu, Act::Tanh);
+    QuantizedPolicySnapshot {
+        obs_dim: shape.obs_dim,
+        act_dim: shape.act_dim,
+        pi,
+        vf: None,
+        log_std: Vec::new(),
+    }
+}
+
+impl QuantizedPolicySnapshot {
+    /// Stochastic act (PPO server path): `action = mean + std * noise`,
+    /// diagonal-Gaussian logp, value head. Same math as `mlp::act` with
+    /// the exp/constant hoists.
+    pub fn forward_stochastic(&self, obs: &[f32], noise: &[f32]) -> QuantActOut {
+        let rows = obs.len() / self.obs_dim;
+        assert_eq!(obs.len(), rows * self.obs_dim, "quant act: bad obs len");
+        assert_eq!(noise.len(), rows * self.act_dim, "quant act: bad noise len");
+        let a = self.act_dim;
+        let mean = self.pi.forward(obs, rows);
+        let value = self
+            .vf
+            .as_ref()
+            .map_or_else(|| vec![0.0; rows], |vf| vf.forward(obs, rows));
+        let std: Vec<f32> = self.log_std.iter().map(|ls| ls.exp()).collect();
+        let inv_std: Vec<f32> = self.log_std.iter().map(|ls| (-ls).exp()).collect();
+        let base: f32 = self.log_std.iter().map(|ls| -ls - 0.5 * LOG_2PI).sum();
+        let mut action = mean.clone();
+        let mut logp = vec![0.0f32; rows];
+        for r in 0..rows {
+            let arow = &mut action[r * a..(r + 1) * a];
+            let nrow = &noise[r * a..(r + 1) * a];
+            let mut acc = 0.0f32;
+            for c in 0..a {
+                arow[c] += std[c] * nrow[c];
+                // z = (action - mean) / std = noise * std * inv_std; computed
+                // from the stored values to match mlp::gaussian_logp exactly
+                let z = (arow[c] - mean[r * a + c]) * inv_std[c];
+                acc += -0.5 * z * z;
+            }
+            logp[r] = acc + base;
+        }
+        QuantActOut {
+            action,
+            logp,
+            value,
+            mean,
+        }
+    }
+
+    /// Deterministic act (DDPG/TD3 server path).
+    pub fn forward_deterministic(&self, obs: &[f32]) -> Vec<f32> {
+        let rows = obs.len() / self.obs_dim;
+        assert_eq!(obs.len(), rows * self.obs_dim, "quant act: bad obs len");
+        self.pi.forward(obs, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layout::{actor_layout, ppo_layout};
+    use crate::nn::mlp::{self, NetShape};
+    use crate::nn::tensor::Mat;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// int8 PPO forward tracks the f32 oracle within quantization error.
+    #[test]
+    fn quantized_ppo_tracks_f32_forward() {
+        let shape = NetShape::new(5, 3, &[32, 32]);
+        let layout = ppo_layout(5, 3, &[32, 32]);
+        let mut rng = Pcg64::new(21);
+        let flat = layout.init_flat(&mut rng);
+        let q = quantize_ppo(&layout, &flat, &shape);
+
+        let b = 9;
+        let obs = rand_mat(&mut rng, b, 5);
+        let noise = rand_mat(&mut rng, b, 3);
+        let fref = mlp::act(&layout, &flat, &shape, &obs, &noise);
+        let got = q.forward_stochastic(&obs.data, &noise.data);
+
+        for (g, e) in got.mean.iter().zip(&fref.mean.data) {
+            assert!((g - e).abs() < 0.05, "mean {g} vs {e}");
+        }
+        for (g, e) in got.action.iter().zip(&fref.action.data) {
+            assert!((g - e).abs() < 0.05, "action {g} vs {e}");
+        }
+        for (g, e) in got.value.iter().zip(&fref.value) {
+            assert!((g - e).abs() < 0.1, "value {g} vs {e}");
+        }
+        for (g, e) in got.logp.iter().zip(&fref.logp) {
+            assert!((g - e).abs() < 0.25, "logp {g} vs {e}");
+        }
+        assert!(got.action.iter().all(|v| v.is_finite()));
+        assert!(got.logp.iter().all(|v| v.is_finite()));
+    }
+
+    /// int8 deterministic actor stays tanh-bounded and near the oracle.
+    #[test]
+    fn quantized_det_actor_tracks_f32_forward() {
+        let shape = NetShape::new(4, 2, &[24, 24]);
+        let layout = actor_layout(4, 2, &[24, 24]);
+        let mut rng = Pcg64::new(22);
+        let flat = layout.init_flat(&mut rng);
+        let q = quantize_det_actor(&layout, &flat, &shape);
+
+        let b = 7;
+        let obs = rand_mat(&mut rng, b, 4);
+        let fref = mlp::ddpg_actor(&layout, &flat, &shape, &obs);
+        let got = q.forward_deterministic(&obs.data);
+        assert_eq!(got.len(), b * 2);
+        assert!(got.iter().all(|v| v.abs() <= 1.0));
+        for (g, e) in got.iter().zip(&fref.data) {
+            assert!((g - e).abs() < 0.05, "{g} vs {e}");
+        }
+    }
+
+    /// Quantized forwards are deterministic (same input -> same bits) —
+    /// the property the cross-shard flip machinery relies on.
+    #[test]
+    fn quantized_forward_is_deterministic() {
+        let shape = NetShape::new(3, 2, &[16]);
+        let layout = ppo_layout(3, 2, &[16]);
+        let mut rng = Pcg64::new(23);
+        let flat = layout.init_flat(&mut rng);
+        let q = quantize_ppo(&layout, &flat, &shape);
+        let obs = rand_mat(&mut rng, 4, 3);
+        let noise = rand_mat(&mut rng, 4, 2);
+        let a = q.forward_stochastic(&obs.data, &noise.data);
+        let b = q.forward_stochastic(&obs.data, &noise.data);
+        for (x, y) in a.action.iter().zip(&b.action) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.logp.iter().zip(&b.logp) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// Zero observations (zero dynamic range rows) must not NaN.
+    #[test]
+    fn zero_obs_rows_are_finite() {
+        let shape = NetShape::new(3, 2, &[8]);
+        let layout = ppo_layout(3, 2, &[8]);
+        let mut rng = Pcg64::new(24);
+        let flat = layout.init_flat(&mut rng);
+        let q = quantize_ppo(&layout, &flat, &shape);
+        let obs = vec![0.0f32; 2 * 3];
+        let noise = vec![0.5f32; 2 * 2];
+        let out = q.forward_stochastic(&obs, &noise);
+        assert!(out.action.iter().all(|v| v.is_finite()));
+        assert!(out.logp.iter().all(|v| v.is_finite()));
+        assert!(out.value.iter().all(|v| v.is_finite()));
+    }
+}

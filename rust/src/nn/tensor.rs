@@ -1,10 +1,12 @@
 //! Minimal dense linear algebra for the native (pure-Rust) backend.
 //!
-//! Row-major `Mat` plus the handful of kernels an MLP needs: matmul with
-//! optional operand transposes, bias add, activations. The matmul is a
-//! cache-blocked ikj loop — plenty for 64-wide policy networks (the XLA
-//! backend owns the real hot path; this backend is the artifact-free
-//! fallback and the test oracle).
+//! Row-major `Mat` plus the handful of ops an MLP needs: matmul with
+//! optional operand transposes, bias add, activations. The compute
+//! itself lives in [`crate::nn::kernels`] — arch-dispatched slice
+//! kernels (scalar / AVX2 / NEON) selected once at startup; this module
+//! is the `Mat`-typed veneer the MLP and tests use.
+
+use crate::nn::kernels;
 
 /// Row-major 2-D matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -81,24 +83,12 @@ impl Mat {
     }
 }
 
-/// out = a @ b. a:[m,k] b:[k,n] -> [m,n]; ikj loop order for locality.
+/// out = a @ b. a:[m,k] b:[k,n] -> [m,n].
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut out = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        let orow = out.row_mut(i);
-        for (p, &av) in arow.iter().enumerate().take(k) {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b.data[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    kernels::matmul(&a.data, &b.data, &mut out.data, m, k, n);
     out
 }
 
@@ -107,19 +97,7 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows, "matmul_tn dim mismatch");
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let mut out = Mat::zeros(m, n);
-    for p in 0..k {
-        let arow = a.row(p);
-        let brow = b.row(p);
-        for (i, &av) in arow.iter().enumerate().take(m) {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
+    kernels::matmul_tn(&a.data, &b.data, &mut out.data, m, k, n);
     out
 }
 
@@ -128,28 +106,14 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut out = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = a.row(i);
-        for j in 0..n {
-            let brow = b.row(j);
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            *out.at_mut(i, j) = acc;
-        }
-    }
+    kernels::matmul_nt(&a.data, &b.data, &mut out.data, m, k, n);
     out
 }
 
 /// y += bias (bias broadcast over rows).
 pub fn add_bias(y: &mut Mat, bias: &[f32]) {
     assert_eq!(bias.len(), y.cols);
-    for r in 0..y.rows {
-        for (v, b) in y.row_mut(r).iter_mut().zip(bias) {
-            *v += b;
-        }
-    }
+    kernels::add_bias(&mut y.data, bias, y.rows, y.cols);
 }
 
 /// Supported fused activations (mirror of python kernels/ref.py).
@@ -163,16 +127,8 @@ pub enum Act {
 pub fn apply_act(y: &mut Mat, act: Act) {
     match act {
         Act::Id => {}
-        Act::Tanh => {
-            for v in &mut y.data {
-                *v = v.tanh();
-            }
-        }
-        Act::Relu => {
-            for v in &mut y.data {
-                *v = v.max(0.0);
-            }
-        }
+        Act::Tanh => kernels::tanh_inplace(&mut y.data),
+        Act::Relu => kernels::relu_inplace(&mut y.data),
     }
 }
 

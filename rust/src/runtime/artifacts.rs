@@ -164,6 +164,30 @@ impl PresetMeta {
         ))
     }
 
+    /// Every emitted `prefix` bucket up to (and including) the smallest
+    /// batch that holds `max_rows`, ascending `(artifact name, batch)`.
+    /// The shared-inference shard compiles ALL of them and picks the
+    /// smallest fit per dispatch, so a straggler-cut partial batch pads
+    /// to the nearest bucket instead of the full shard capacity.
+    pub fn act_buckets_for(&self, prefix: &str, max_rows: usize) -> Result<Vec<(String, usize)>> {
+        let (_, cap) = self.act_artifact_for(prefix, max_rows)?;
+        let mut out = Vec::new();
+        for &b in &self.act_batches {
+            if b > cap {
+                break;
+            }
+            let name = if b == self.act_batch {
+                prefix.to_string()
+            } else {
+                format!("{prefix}_b{b}")
+            };
+            if self.has_artifact(&name) {
+                out.push((name, b));
+            }
+        }
+        Ok(out)
+    }
+
     /// Largest row count any emitted `prefix` artifact can hold — the
     /// ceiling on a shared-inference shard's capacity on the XLA path.
     /// With `--infer-shards S`, each shard needs an artifact for
@@ -330,6 +354,16 @@ mod tests {
         // beyond every emitted batch: actionable error
         let err = meta.act_artifact_for("act", 17).unwrap_err();
         assert!(format!("{err:#}").contains("rebuild artifacts"));
+        // bucket ladders stop at the smallest batch that fits max_rows
+        assert_eq!(
+            meta.act_buckets_for("act", 9).unwrap(),
+            vec![("act".into(), 1), ("act_b4".into(), 4), ("act_b16".into(), 16)]
+        );
+        assert_eq!(
+            meta.act_buckets_for("act", 3).unwrap(),
+            vec![("act".into(), 1), ("act_b4".into(), 4)]
+        );
+        assert!(meta.act_buckets_for("act", 17).is_err());
         // ddpg prefix has no artifacts in this synthetic meta
         assert!(meta.act_artifact_for("act_ddpg", 1).is_err());
         // shard-capacity ceiling: the largest emitted (and present) batch

@@ -681,7 +681,7 @@ impl InferenceServer {
 
             // ---- the one forward ---------------------------------------
             let result = backend.forward(
-                &snapshot.params,
+                &snapshot,
                 &obs_buf[..fwd_rows * o],
                 &noise_buf[..fwd_rows * a],
                 rows,

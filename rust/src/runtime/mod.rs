@@ -265,13 +265,16 @@ pub trait ServerActor {
     fn fixed_batch(&self) -> usize;
 
     /// Run ONE forward over `obs` (the packed, already-normalized
-    /// mega-batch, padded to the fixed batch by the caller). `rows` is
-    /// the real row count. Empty `logp`/`value`/`mean` lanes in the
-    /// result signal a deterministic actor; the server zero-fills those
-    /// per-slab lanes and reuses the action rows as the mean on scatter.
+    /// mega-batch, padded to the fixed batch by the caller) under the
+    /// given policy snapshot — f32 `snapshot.params` by default, or the
+    /// int8 `snapshot.quant` payload when the publish-time quantizer
+    /// attached one. `rows` is the real row count. Empty
+    /// `logp`/`value`/`mean` lanes in the result signal a deterministic
+    /// actor; the server zero-fills those per-slab lanes and reuses the
+    /// action rows as the mean on scatter.
     fn forward(
         &mut self,
-        params: &[f32],
+        snapshot: &crate::coordinator::policy_store::PolicySnapshot,
         obs: &[f32],
         noise: &[f32],
         rows: usize,
@@ -280,7 +283,8 @@ pub trait ServerActor {
 }
 
 /// [`ServerActor`] over a stochastic policy (PPO Gaussian actor): the
-/// noise lanes carry the workers' per-row N(0,1) draws.
+/// noise lanes carry the workers' per-row N(0,1) draws. Dispatches to the
+/// int8 snapshot when the publish pipeline attached one.
 pub struct StochasticServerActor(pub Box<dyn ActorBackend>);
 
 impl ServerActor for StochasticServerActor {
@@ -290,19 +294,32 @@ impl ServerActor for StochasticServerActor {
 
     fn forward(
         &mut self,
-        params: &[f32],
+        snapshot: &crate::coordinator::policy_store::PolicySnapshot,
         obs: &[f32],
         noise: &[f32],
         _rows: usize,
         _act_dim: usize,
     ) -> anyhow::Result<ActResult> {
-        self.0.act(params, obs, noise)
+        if let Some(q) = &snapshot.quant {
+            // int8 path: flexible row count (config validation pins int8
+            // to the native backend, so `fixed_batch` is 0 and `obs`
+            // carries exactly the real rows — no padding to skip)
+            let out = q.forward_stochastic(obs, noise);
+            return Ok(ActResult {
+                action: out.action,
+                logp: out.logp,
+                value: out.value,
+                mean: out.mean,
+            });
+        }
+        self.0.act(&snapshot.params, obs, noise)
     }
 }
 
 /// [`ServerActor`] over a deterministic actor (DDPG/TD3): noise lanes
 /// are empty, and the empty `logp`/`value`/`mean` result lanes tell the
-/// scatter stage to zero-fill.
+/// scatter stage to zero-fill. Dispatches to the int8 snapshot when the
+/// publish pipeline attached one.
 pub struct DeterministicServerActor(pub Box<dyn DdpgActorBackend>);
 
 impl ServerActor for DeterministicServerActor {
@@ -312,13 +329,17 @@ impl ServerActor for DeterministicServerActor {
 
     fn forward(
         &mut self,
-        params: &[f32],
+        snapshot: &crate::coordinator::policy_store::PolicySnapshot,
         obs: &[f32],
         _noise: &[f32],
         rows: usize,
         act_dim: usize,
     ) -> anyhow::Result<ActResult> {
-        let action = self.0.act(params, obs)?;
+        let action = if let Some(q) = &snapshot.quant {
+            q.forward_deterministic(obs)
+        } else {
+            self.0.act(&snapshot.params, obs)?
+        };
         anyhow::ensure!(
             action.len() >= rows * act_dim,
             "deterministic actor returned {} values for {} rows",

@@ -232,29 +232,47 @@ impl BackendFactory for XlaFactory {
         self.make_ddpg_actor_with(&artifact, b)
     }
 
-    /// Fleet-slice actor for one shared-inference shard: the executable
-    /// must hold `max_rows` (the shard's workers x M) rows; the server
-    /// zero-pads straggler-cut partial dispatches up to the artifact
-    /// batch. When no emitted artifact is large enough, the error says
-    /// how many rows the artifacts CAN hold so the user can raise
-    /// `--infer-shards` instead of re-running aot.py.
+    /// Fleet-slice actor for one shared-inference shard. Compiles EVERY
+    /// emitted act bucket up to the smallest batch that holds `max_rows`
+    /// (the shard's workers x M) and reports a flexible batch (0) to the
+    /// server, so each dispatch runs in the smallest bucket that fits
+    /// its REAL row count — a straggler-cut partial batch pads to the
+    /// nearest bucket, not the full shard capacity. When no emitted
+    /// artifact is large enough, the error says how many rows the
+    /// artifacts CAN hold so the user can raise `--infer-shards`
+    /// instead of re-running aot.py.
     fn make_actor_shared(&self, max_rows: usize) -> Result<Box<dyn ActorBackend>> {
         ensure!(max_rows > 0, "make_actor_shared: max_rows must be >= 1");
-        let (artifact, b) = self.meta.act_artifact_for("act", max_rows).with_context(|| {
+        let named = self.meta.act_buckets_for("act", max_rows).with_context(|| {
             format!(
                 "shard needs {max_rows} rows but the largest act artifact holds {} — \
                  raise --infer-shards so each shard's workers*M fits",
                 self.meta.max_act_rows("act")
             )
         })?;
-        self.make_actor_with(&artifact, b)
+        let client = xla::PjRtClient::cpu()?;
+        let mut buckets = Vec::with_capacity(named.len());
+        for (name, b) in &named {
+            buckets.push((*b, compile(&client, self.meta.artifact(name)?)?));
+        }
+        let cap = buckets.last().map_or(0, |(b, _)| *b);
+        let (o, a) = (self.meta.obs_dim, self.meta.act_dim);
+        Ok(Box::new(XlaBucketedActor {
+            client,
+            buckets,
+            obs_dim: o,
+            act_dim: a,
+            params: ParamBufCache::new(),
+            obs_pad: vec![0.0; cap * o],
+            noise_pad: vec![0.0; cap * a],
+        }))
     }
 
     fn make_ddpg_actor_shared(&self, max_rows: usize) -> Result<Box<dyn DdpgActorBackend>> {
         ensure!(max_rows > 0, "make_ddpg_actor_shared: max_rows must be >= 1");
-        let (artifact, b) = self
+        let named = self
             .meta
-            .act_artifact_for("act_ddpg", max_rows)
+            .act_buckets_for("act_ddpg", max_rows)
             .with_context(|| {
                 format!(
                     "shard needs {max_rows} rows but the largest act_ddpg artifact holds {} — \
@@ -262,7 +280,21 @@ impl BackendFactory for XlaFactory {
                     self.meta.max_act_rows("act_ddpg")
                 )
             })?;
-        self.make_ddpg_actor_with(&artifact, b)
+        let client = xla::PjRtClient::cpu()?;
+        let mut buckets = Vec::with_capacity(named.len());
+        for (name, b) in &named {
+            buckets.push((*b, compile(&client, self.meta.artifact(name)?)?));
+        }
+        let cap = buckets.last().map_or(0, |(b, _)| *b);
+        let o = self.meta.obs_dim;
+        Ok(Box::new(XlaBucketedDdpgActor {
+            client,
+            buckets,
+            obs_dim: o,
+            act_dim: self.meta.act_dim,
+            params: ParamBufCache::new(),
+            obs_pad: vec![0.0; cap * o],
+        }))
     }
 
     fn make_ddpg_actor(&self) -> Result<Box<dyn DdpgActorBackend>> {
@@ -337,6 +369,147 @@ impl ActorBackend for XlaActor {
             value: to_vec(&outs[2])?,
             mean: to_vec(&outs[3])?,
         })
+    }
+}
+
+/// Shared-inference actor over a ladder of shape-specialized
+/// executables. Reports `batch() == 0` (flexible) so the server
+/// dispatches exactly the real rows; each call runs in the smallest
+/// compiled bucket that fits, zero-padding only the bucket remainder
+/// and truncating the outputs back to the real row count.
+struct XlaBucketedActor {
+    client: xla::PjRtClient,
+    /// Ascending `(batch, executable)`; smallest fit wins per call.
+    buckets: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    obs_dim: usize,
+    act_dim: usize,
+    params: ParamBufCache,
+    /// Scratch padding buffers sized for the largest bucket.
+    obs_pad: Vec<f32>,
+    noise_pad: Vec<f32>,
+}
+
+impl ActorBackend for XlaBucketedActor {
+    fn batch(&self) -> usize {
+        0 // flexible: the server sends real rows, padding happens here
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn act(&mut self, flat: &[f32], obs: &[f32], noise: &[f32]) -> Result<ActResult> {
+        let (o, a) = (self.obs_dim, self.act_dim);
+        ensure!(
+            !obs.is_empty() && obs.len() % o == 0,
+            "act: bad obs len {} for O{o}",
+            obs.len()
+        );
+        let rows = obs.len() / o;
+        ensure!(
+            noise.len() == rows * a,
+            "act: noise len {} != rows {rows} * A{a}",
+            noise.len()
+        );
+        let idx = self
+            .buckets
+            .iter()
+            .position(|(b, _)| *b >= rows)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no act bucket holds {rows} rows (largest {})",
+                    self.buckets.last().map_or(0, |(b, _)| *b)
+                )
+            })?;
+        let b = self.buckets[idx].0;
+        let (obs_in, noise_in): (&[f32], &[f32]) = if b == rows {
+            (obs, noise)
+        } else {
+            self.obs_pad[..rows * o].copy_from_slice(obs);
+            self.obs_pad[rows * o..b * o].iter_mut().for_each(|z| *z = 0.0);
+            self.noise_pad[..rows * a].copy_from_slice(noise);
+            self.noise_pad[rows * a..b * a].iter_mut().for_each(|z| *z = 0.0);
+            (&self.obs_pad[..b * o], &self.noise_pad[..b * a])
+        };
+        let param_buf = self.params.get(&self.client, flat)?;
+        let obs_buf = self.client.buffer_from_host_buffer(obs_in, &[b, o], None)?;
+        let noise_buf = self.client.buffer_from_host_buffer(noise_in, &[b, a], None)?;
+        let exe = &self.buckets[idx].1;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&[param_buf, &obs_buf, &noise_buf])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 4, "act artifact returned {} outputs", outs.len());
+        let mut r = ActResult {
+            action: to_vec(&outs[0])?,
+            logp: to_vec(&outs[1])?,
+            value: to_vec(&outs[2])?,
+            mean: to_vec(&outs[3])?,
+        };
+        // drop the bucket's padding rows so callers see exactly `rows`
+        r.action.truncate(rows * a);
+        r.logp.truncate(rows);
+        r.value.truncate(rows);
+        r.mean.truncate(rows * a);
+        Ok(r)
+    }
+}
+
+/// DDPG/TD3 variant of [`XlaBucketedActor`] (deterministic actor head,
+/// no noise lanes).
+struct XlaBucketedDdpgActor {
+    client: xla::PjRtClient,
+    buckets: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    obs_dim: usize,
+    act_dim: usize,
+    params: ParamBufCache,
+    obs_pad: Vec<f32>,
+}
+
+impl DdpgActorBackend for XlaBucketedDdpgActor {
+    fn batch(&self) -> usize {
+        0
+    }
+
+    fn act(&mut self, actor: &[f32], obs: &[f32]) -> Result<Vec<f32>> {
+        let o = self.obs_dim;
+        ensure!(
+            !obs.is_empty() && obs.len() % o == 0,
+            "act_ddpg: bad obs len {} for O{o}",
+            obs.len()
+        );
+        let rows = obs.len() / o;
+        let idx = self
+            .buckets
+            .iter()
+            .position(|(b, _)| *b >= rows)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no act_ddpg bucket holds {rows} rows (largest {})",
+                    self.buckets.last().map_or(0, |(b, _)| *b)
+                )
+            })?;
+        let b = self.buckets[idx].0;
+        let obs_in: &[f32] = if b == rows {
+            obs
+        } else {
+            self.obs_pad[..rows * o].copy_from_slice(obs);
+            self.obs_pad[rows * o..b * o].iter_mut().for_each(|z| *z = 0.0);
+            &self.obs_pad[..b * o]
+        };
+        let param_buf = self.params.get(&self.client, actor)?;
+        let obs_buf = self.client.buffer_from_host_buffer(obs_in, &[b, o], None)?;
+        let exe = &self.buckets[idx].1;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&[param_buf, &obs_buf])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        ensure!(outs.len() == 1, "act_ddpg returned {} outputs", outs.len());
+        let mut action = to_vec(&outs[0])?;
+        action.truncate(rows * self.act_dim);
+        Ok(action)
     }
 }
 

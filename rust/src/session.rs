@@ -189,6 +189,22 @@ impl SessionBuilder {
         self.set(move |c| c.infer_epoch = epoch)
     }
 
+    /// Inference-path numeric precision. `InferPrecision::Int8` ships an
+    /// int8-quantized copy of each published actor snapshot to the
+    /// shared inference pool (the learner stays f32); requires the
+    /// native backend and shared inference mode.
+    pub fn infer_precision(self, p: crate::config::InferPrecision) -> Self {
+        self.set(move |c| c.infer_precision = p)
+    }
+
+    /// Kernel determinism mode: `KernelsCfg::Exact` (default) keeps the
+    /// SIMD microkernels bitwise-identical to the scalar reference;
+    /// `KernelsCfg::Fast` enables FMA register tiling (~1e-6 relative
+    /// drift, higher throughput).
+    pub fn kernels(self, k: crate::config::KernelsCfg) -> Self {
+        self.set(move |c| c.kernels = k)
+    }
+
     /// Data-parallel PPO learner shards (§6.2). PPO-only: rejected at
     /// build time under any other algorithm.
     pub fn learner_shards(mut self, n: usize) -> Self {
