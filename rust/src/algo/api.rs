@@ -123,6 +123,21 @@ pub trait AlgoSampler {
     /// An episode in env slot `i` just ended (reset exploration state;
     /// the env itself is reset by the loop).
     fn on_episode_end(&mut self, _i: usize) {}
+
+    /// Serialize the sampler's exploration state (per-env RNG cursors,
+    /// noise-process state) for supervisor snapshots and checkpoints.
+    /// Restoring via [`AlgoSampler::load_state`] must continue the
+    /// exploration streams bitwise. The default (empty) is only correct
+    /// for stateless samplers.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore exploration state captured by [`AlgoSampler::save_state`].
+    /// Errors when the blob doesn't match this sampler's shape.
+    fn load_state(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// The learner loop, one instance per run: consume experience chunks,
@@ -152,6 +167,22 @@ pub trait LearnerDriver {
     /// `RunResult` so evaluation can apply the SAME normalization
     /// training used (checkpoint files don't carry it).
     fn final_norm(&self) -> NormSnapshot;
+
+    /// Serialize the learner's full training state (parameters, optimizer
+    /// moments, update RNG, normalizer, counters) for
+    /// `runtime::checkpoint`. Restoring via
+    /// [`LearnerDriver::load_state`] must continue updates bitwise for
+    /// on-policy learners. The default (empty) opts the learner out of
+    /// checkpointing.
+    fn save_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore training state captured by [`LearnerDriver::save_state`].
+    /// Errors when the blob doesn't match this learner's shape.
+    fn load_state(&mut self, _bytes: &[u8]) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// One RL algorithm, end to end: everything the generic pipeline needs

@@ -13,6 +13,7 @@ use crate::runtime::{
     ActorBackend, BackendFactory, DdpgBatch, DdpgLearnerBackend, DdpgTrainState,
     DeterministicRowActor, DeterministicServerActor, ServerActor,
 };
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -233,6 +234,46 @@ impl AlgoSampler for DeterministicSampler {
     fn on_episode_end(&mut self, i: usize) {
         self.ous[i].reset();
     }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_usize(self.rngs.len());
+        for rng in &self.rngs {
+            let (state, inc) = rng.raw_state();
+            w.put_u128(state);
+            w.put_u128(inc);
+        }
+        for ou in &self.ous {
+            w.put_f32s(&ou.state);
+        }
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let n = r.read_usize()?;
+        anyhow::ensure!(
+            n == self.rngs.len(),
+            "deterministic sampler state has {n} rng lanes, expected {}",
+            self.rngs.len()
+        );
+        for rng in self.rngs.iter_mut() {
+            let state = r.read_u128()?;
+            let inc = r.read_u128()?;
+            *rng = Pcg64::from_raw(state, inc);
+        }
+        for ou in self.ous.iter_mut() {
+            let state = r.read_f32s()?;
+            anyhow::ensure!(
+                state.len() == ou.state.len(),
+                "ou noise state has {} dims, expected {}",
+                state.len(),
+                ou.state.len()
+            );
+            ou.state = state;
+        }
+        Ok(())
+    }
 }
 
 /// Aggregated statistics for one DDPG update round.
@@ -410,6 +451,52 @@ mod tests {
         let num: f32 = ys.windows(2).map(|w| (w[0] - mean) * (w[1] - mean)).sum();
         let den: f32 = ys.iter().map(|y| (y - mean) * (y - mean)).sum();
         assert!(num.abs() / den < 0.1, "gaussian autocorr {}", num / den);
+    }
+
+    #[test]
+    fn sampler_state_round_trip_continues_noise_bitwise() {
+        let scfg = SamplerCfg {
+            id: 1,
+            seed: 42,
+            chunk_steps: 40,
+            sync_budget: None,
+            reward_scale: 1.0,
+        };
+        let mut live = DeterministicSampler::new(&scfg, 2, 3, 1 << 33, 0.2);
+        // make the OU path stateful so the snapshot must carry it
+        for ou in live.ous.iter_mut() {
+            ou.theta = 0.15;
+        }
+        let mut out = [0.0f32; 3];
+        for i in 0..17 {
+            live.sample_all_for_test(&mut out, i % 2);
+        }
+        let blob = AlgoSampler::save_state(&live);
+
+        let mut restored = DeterministicSampler::new(&scfg, 2, 3, 1 << 33, 0.2);
+        for ou in restored.ous.iter_mut() {
+            ou.theta = 0.15;
+        }
+        AlgoSampler::load_state(&mut restored, &blob).unwrap();
+        let mut a = [0.0f32; 3];
+        let mut b = [0.0f32; 3];
+        for i in 0..25 {
+            live.sample_all_for_test(&mut a, i % 2);
+            restored.sample_all_for_test(&mut b, i % 2);
+            assert_eq!(a, b, "noise diverged after restore at draw {i}");
+        }
+
+        // wrong shape rejected
+        let other = DeterministicSampler::new(&scfg, 1, 3, 1 << 33, 0.2);
+        let mut bad = DeterministicSampler::new(&scfg, 2, 3, 1 << 33, 0.2);
+        assert!(AlgoSampler::load_state(&mut bad, &AlgoSampler::save_state(&other)).is_err());
+    }
+
+    impl DeterministicSampler {
+        fn sample_all_for_test(&mut self, out: &mut [f32], i: usize) {
+            let ou = &mut self.ous[i];
+            ou.sample(&mut self.rngs[i], out);
+        }
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! Normalizing on the *sampler* side keeps the policy's input distribution
 //! consistent between acting and learning.
 
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::stats::Welford;
+use anyhow::Result;
 
 /// Per-dimension running mean/std (Welford).
 #[derive(Debug, Clone)]
@@ -48,6 +50,35 @@ impl RunningNorm {
 
     pub fn count(&self) -> u64 {
         self.dims.first().map_or(0, |w| w.n)
+    }
+
+    /// Serialize the full accumulator state (clip + per-dimension Welford
+    /// registers) into a checkpoint blob. [`RunningNorm::load_state`]
+    /// restores it bitwise, so a resumed learner normalizes exactly as
+    /// the interrupted one would have.
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.put_f32(self.clip);
+        w.put_usize(self.dims.len());
+        for d in &self.dims {
+            let (n, mean, m2) = d.raw();
+            w.put_u64(n);
+            w.put_f64(mean);
+            w.put_f64(m2);
+        }
+    }
+
+    /// Rebuild a normalizer from [`RunningNorm::save_state`] output.
+    pub fn load_state(r: &mut ByteReader) -> Result<RunningNorm> {
+        let clip = r.read_f32()?;
+        let dim = r.read_usize()?;
+        let mut dims = Vec::with_capacity(dim);
+        for _ in 0..dim {
+            let n = r.read_u64()?;
+            let mean = r.read_f64()?;
+            let m2 = r.read_f64()?;
+            dims.push(Welford::from_raw(n, mean, m2));
+        }
+        Ok(RunningNorm { dims, clip })
     }
 
     pub fn snapshot(&self) -> NormSnapshot {
@@ -162,6 +193,26 @@ mod tests {
             assert!((sa.inv_std[i] - sb.inv_std[i]).abs() < 1e-4);
         }
         assert_eq!(a.count(), 200); // 600 values / 3 dims
+    }
+
+    #[test]
+    fn state_round_trip_is_bitwise() {
+        let mut norm = RunningNorm::new(3, 5.0);
+        let mut rng = Pcg64::new(4);
+        let data: Vec<f32> = (0..900).map(|_| rng.normal() * 2.0 - 1.0).collect();
+        norm.update(&data);
+        let mut w = crate::util::bytes::ByteWriter::new();
+        norm.save_state(&mut w);
+        let buf = w.into_vec();
+        let mut r = crate::util::bytes::ByteReader::new(&buf);
+        let mut back = RunningNorm::load_state(&mut r).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(norm.snapshot(), back.snapshot());
+        // continued updates agree bitwise too
+        let more: Vec<f32> = (0..90).map(|_| rng.normal()).collect();
+        norm.update(&more);
+        back.update(&more);
+        assert_eq!(norm.snapshot(), back.snapshot());
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::runtime::{
     ActorBackend, BackendFactory, PpoLearnerBackend, PpoMinibatch, PpoTrainState, ServerActor,
     StochasticServerActor,
 };
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -176,6 +177,33 @@ impl AlgoSampler for PpoSampler {
             ChunkEnd::Terminal => 0.0,
             _ => value_hint,
         }
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_usize(self.rngs.len());
+        for rng in &self.rngs {
+            let (state, inc) = rng.raw_state();
+            w.put_u128(state);
+            w.put_u128(inc);
+        }
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let n = r.read_usize()?;
+        anyhow::ensure!(
+            n == self.rngs.len(),
+            "ppo sampler state has {n} rng lanes, expected {}",
+            self.rngs.len()
+        );
+        for rng in self.rngs.iter_mut() {
+            let state = r.read_u128()?;
+            let inc = r.read_u128()?;
+            *rng = Pcg64::from_raw(state, inc);
+        }
+        Ok(())
     }
 }
 
@@ -444,6 +472,40 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 1e-5, "sharded(1) diverged from unsharded: {max_diff}");
+    }
+
+    #[test]
+    fn sampler_state_round_trip_continues_noise_bitwise() {
+        use crate::algo::api::Algorithm;
+        use crate::coordinator::sampler::SamplerCfg;
+        let scfg = SamplerCfg {
+            id: 2,
+            seed: 7,
+            chunk_steps: 40,
+            sync_budget: None,
+            reward_scale: 1.0,
+        };
+        let algo = Ppo::default();
+        let mut live = algo.make_sampler(&scfg, 2, 3);
+        let mut lane = vec![0.0f32; 2 * 3];
+        for _ in 0..19 {
+            live.fill_policy_noise(&mut lane);
+        }
+        let blob = live.save_state();
+
+        let mut restored = algo.make_sampler(&scfg, 2, 3);
+        restored.load_state(&blob).unwrap();
+        let mut a = vec![0.0f32; 2 * 3];
+        let mut b = vec![0.0f32; 2 * 3];
+        for i in 0..25 {
+            live.fill_policy_noise(&mut a);
+            restored.fill_policy_noise(&mut b);
+            assert_eq!(a, b, "noise diverged after restore at tick {i}");
+        }
+
+        // wrong lane count rejected
+        let mut bad = algo.make_sampler(&scfg, 4, 3);
+        assert!(bad.load_state(&blob).is_err());
     }
 
     #[test]

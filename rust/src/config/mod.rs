@@ -580,6 +580,26 @@ pub struct TrainConfig {
     /// one by more than this (0 = keep everything). Bounds the
     /// off-policy-ness the PPO ratios see.
     pub max_staleness: u64,
+    /// Write a durable checkpoint every this many iterations (0 = off).
+    /// See `runtime::checkpoint` for what a snapshot captures.
+    pub checkpoint_every: usize,
+    /// Directory checkpoints are written into (`--checkpoint-dir`).
+    pub checkpoint_dir: String,
+    /// Resume from the newest checkpoint in this directory ("" = fresh
+    /// run). The checkpoint's run fingerprint must match this config.
+    pub resume: String,
+    /// Deterministic fault plan (`--fault-inject`), e.g.
+    /// `"worker:1@tick:500,shard:0@dispatch:40"` or
+    /// `"random:seed=7,count=2,horizon=1000"`; "" = no injection (the
+    /// zero-cost path). See `util::fault`.
+    pub fault_inject: String,
+    /// Shared + pool-epoch mode: force a deterministic epoch flip every
+    /// this many dispatches per shard even without a learner publish
+    /// (0 = flip only on publish). See `runtime::epoch::EpochGate`.
+    pub flip_schedule: u64,
+    /// Supervisor restart budget: how many times a panicked sampler
+    /// worker or inference shard is respawned before the fleet aborts.
+    pub max_restarts: usize,
 }
 
 impl Default for TrainConfig {
@@ -611,6 +631,12 @@ impl Default for TrainConfig {
             td3: Td3Cfg::default(),
             learner_shards: 1,
             max_staleness: 2,
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
+            resume: String::new(),
+            fault_inject: String::new(),
+            flip_schedule: 0,
+            max_restarts: 2,
         }
     }
 }
@@ -721,6 +747,23 @@ impl TrainConfig {
                 self.learner_shards, self.algo.name()
             ));
         }
+        if self.checkpoint_every > 0 && self.checkpoint_dir.is_empty() {
+            return Err("checkpoint_every needs a non-empty checkpoint_dir".into());
+        }
+        if !self.fault_inject.is_empty() {
+            crate::util::fault::FaultPlan::parse(&self.fault_inject)
+                .map_err(|e| format!("bad fault_inject spec: {e}"))?;
+        }
+        if self.flip_schedule > 0
+            && (self.inference_mode != InferenceMode::Shared
+                || self.infer_epoch != InferEpoch::Pool)
+        {
+            return Err(
+                "flip_schedule drives the pool epoch gate — it needs \
+                 --inference-mode shared with --infer-epoch pool"
+                    .into(),
+            );
+        }
         if self.algo == Algo::Td3 {
             if self.backend == Backend::Xla {
                 return Err(
@@ -798,6 +841,21 @@ impl TrainConfig {
             Json::Num(self.learner_shards as f64),
         );
         m.insert("max_staleness".into(), Json::Num(self.max_staleness as f64));
+        m.insert(
+            "checkpoint_every".into(),
+            Json::Num(self.checkpoint_every as f64),
+        );
+        m.insert(
+            "checkpoint_dir".into(),
+            Json::Str(self.checkpoint_dir.clone()),
+        );
+        m.insert("resume".into(), Json::Str(self.resume.clone()));
+        m.insert("fault_inject".into(), Json::Str(self.fault_inject.clone()));
+        m.insert(
+            "flip_schedule".into(),
+            Json::Num(self.flip_schedule as f64),
+        );
+        m.insert("max_restarts".into(), Json::Num(self.max_restarts as f64));
         m.insert("ppo".into(), self.ppo.to_json());
         m.insert("ddpg".into(), self.ddpg.to_json());
         m.insert("td3".into(), self.td3.to_json());
@@ -897,6 +955,24 @@ impl TrainConfig {
         }
         if let Some(v) = j.opt("max_staleness") {
             cfg.max_staleness = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("checkpoint_every") {
+            cfg.checkpoint_every = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("checkpoint_dir") {
+            cfg.checkpoint_dir = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("resume") {
+            cfg.resume = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("fault_inject") {
+            cfg.fault_inject = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("flip_schedule") {
+            cfg.flip_schedule = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.opt("max_restarts") {
+            cfg.max_restarts = v.as_usize()?;
         }
         if let Some(p) = j.opt("ppo") {
             if let Some(v) = p.opt("epochs") {
@@ -1040,6 +1116,12 @@ mod tests {
         cfg.infer_shards = InferShards::Fixed(2);
         cfg.infer_wait = InferWait::Fixed(750);
         cfg.infer_epoch = InferEpoch::Shard;
+        cfg.checkpoint_every = 5;
+        cfg.checkpoint_dir = "ckpts".into();
+        cfg.resume = "old-ckpts".into();
+        cfg.fault_inject = "worker:1@tick:500".into();
+        cfg.flip_schedule = 32;
+        cfg.max_restarts = 3;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cfg, back);
@@ -1273,6 +1355,34 @@ mod tests {
         cfg.backend = Backend::Native;
         cfg.td3.policy_delay = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn robustness_knobs_validate() {
+        // a malformed fault plan is rejected at config time, not mid-run
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.fault_inject = "worker:zero@tick:9".into();
+        assert!(cfg.validate().unwrap_err().contains("fault_inject"));
+        cfg.fault_inject = "worker:1@tick:500,shard:0@dispatch:40".into();
+        assert!(cfg.validate().is_ok());
+
+        // flip_schedule needs the pool epoch gate to exist
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.flip_schedule = 16;
+        assert!(cfg.validate().unwrap_err().contains("flip_schedule"));
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_epoch = InferEpoch::Shard;
+        assert!(cfg.validate().is_err());
+        cfg.infer_epoch = InferEpoch::Pool;
+        assert!(cfg.validate().is_ok());
+
+        // checkpointing needs somewhere to write
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.checkpoint_every = 2;
+        cfg.checkpoint_dir = String::new();
+        assert!(cfg.validate().is_err());
+        cfg.checkpoint_dir = "checkpoints".into();
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -8,12 +8,18 @@
 //! single-row path per call site). The lower-level [`evaluate`] takes an
 //! already-built actor and applies the normalizer exactly once per
 //! observation.
+//!
+//! Evaluation is panic-contained: a backend or env that panics
+//! mid-rollout surfaces as a failed evaluation (`Err`), never as a
+//! poisoned caller — figure sweeps and `Session::evaluate` keep their
+//! remaining work.
 
 use crate::algo::api::Algorithm;
 use crate::env::registry::make_env;
 use crate::env::{clip_action, Env};
 use crate::runtime::{ActorBackend, BackendFactory};
 use crate::util::rng::Pcg64;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// Evaluation outcome over `episodes` deterministic rollouts.
 #[derive(Debug, Clone)]
@@ -45,34 +51,52 @@ pub fn evaluate(
     let mut returns = Vec::with_capacity(episodes);
     let mut lengths = Vec::with_capacity(episodes);
 
-    for _ in 0..episodes {
-        env.reset(&mut rng, &mut raw);
-        let mut total = 0.0f32;
-        let mut len = 0usize;
-        loop {
-            let mut norm_obs = raw.clone();
-            norm.apply(&mut norm_obs);
-            obs_in[..obs_dim].copy_from_slice(&norm_obs);
-            let out = actor.act(params, &obs_in, &noise)?;
-            // deterministic actors leave the mean lane empty: their
-            // action IS the mean. (For stochastic actors the zero noise
-            // above makes action == mean as well; the mean lane is kept
-            // for exactness.)
-            let mut action = if out.mean.is_empty() {
-                out.action[..act_dim].to_vec()
-            } else {
-                out.mean[..act_dim].to_vec()
-            };
-            clip_action(&mut action);
-            let step = env.step(&action, &mut raw);
-            total += step.reward;
-            len += 1;
-            if step.done || len >= env.max_episode_steps() {
-                break;
+    for ep in 0..episodes {
+        // Panic containment: a backend defect killing one rollout must
+        // fail THIS evaluation with an error, not unwind through the
+        // caller (which may hold locks or a half-finished figure sweep).
+        let episode = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<(f32, usize)> {
+            env.reset(&mut rng, &mut raw);
+            let mut total = 0.0f32;
+            let mut len = 0usize;
+            loop {
+                let mut norm_obs = raw.clone();
+                norm.apply(&mut norm_obs);
+                obs_in[..obs_dim].copy_from_slice(&norm_obs);
+                let out = actor.act(params, &obs_in, &noise)?;
+                // deterministic actors leave the mean lane empty: their
+                // action IS the mean. (For stochastic actors the zero noise
+                // above makes action == mean as well; the mean lane is kept
+                // for exactness.)
+                let mut action = if out.mean.is_empty() {
+                    out.action[..act_dim].to_vec()
+                } else {
+                    out.mean[..act_dim].to_vec()
+                };
+                clip_action(&mut action);
+                let step = env.step(&action, &mut raw);
+                total += step.reward;
+                len += 1;
+                if step.done || len >= env.max_episode_steps() {
+                    return Ok((total, len));
+                }
+            }
+        }));
+        match episode {
+            Ok(Ok((total, len))) => {
+                returns.push(total);
+                lengths.push(len as f32);
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                anyhow::bail!("evaluation panicked during episode {ep}: {msg}");
             }
         }
-        returns.push(total);
-        lengths.push(len as f32);
     }
     Ok(EvalResult {
         mean_return: crate::util::stats::mean_f32(&returns),
@@ -151,6 +175,54 @@ mod tests {
                 evaluate_algo(algo.as_ref(), &f, "pendulum", &params, &norm, 2, 11).unwrap();
             assert_eq!(r.returns, r2.returns, "{}", algo.name());
         }
+    }
+
+    /// Satellite 2: a panicking eval actor produces a failed evaluation
+    /// (`Err` naming the episode), never an unwind through the caller.
+    #[test]
+    fn panicking_actor_fails_evaluation_instead_of_unwinding() {
+        struct PanickingActor {
+            calls: usize,
+        }
+        impl crate::runtime::ActorBackend for PanickingActor {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn obs_dim(&self) -> usize {
+                3
+            }
+            fn act_dim(&self) -> usize {
+                1
+            }
+            fn act(
+                &mut self,
+                _flat: &[f32],
+                _obs: &[f32],
+                _noise: &[f32],
+            ) -> anyhow::Result<crate::runtime::ActResult> {
+                self.calls += 1;
+                if self.calls > 5 {
+                    panic!("injected eval actor fault");
+                }
+                Ok(crate::runtime::ActResult {
+                    action: vec![0.1],
+                    logp: vec![0.0],
+                    value: vec![0.0],
+                    mean: vec![0.1],
+                })
+            }
+        }
+
+        let mut env = make_env("pendulum").unwrap();
+        let mut actor = PanickingActor { calls: 0 };
+        let norm = NormSnapshot::identity(3);
+        let err = evaluate(env.as_mut(), &mut actor, &[], &norm, 2, 42).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("panicked during episode"),
+            "error must name the panic, got: {msg}"
+        );
+        assert!(msg.contains("injected eval actor fault"), "got: {msg}");
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
 use crate::replay::ReplayBuffer;
 use crate::runtime::{DdpgLearnerBackend, DdpgTrainState, PpoLearnerBackend, PpoTrainState};
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
 
@@ -126,11 +127,13 @@ impl PpoLearner {
             // episode stats and normalizer updates count even for chunks we
             // drop as too stale — only the *gradient* data must be fresh.
             eps.absorb(&c);
-            if let Some(stats) = &c.obs_stats {
-                self.norm.merge(stats);
-            }
             let lag = current_version.saturating_sub(c.policy_version);
             if cfg.max_staleness > 0 && lag > cfg.max_staleness {
+                // stats count even for dropped chunks — merged here since
+                // the chunk never reaches the canonical-order pass below
+                if let Some(stats) = &c.obs_stats {
+                    self.norm.merge(stats);
+                }
                 dropped += 1;
                 continue;
             }
@@ -141,6 +144,20 @@ impl PpoLearner {
         }
         if dropped > 0 {
             crate::log_debug!("iteration {iter}: dropped {dropped} stale chunks");
+        }
+        // Canonical chunk order: the queue interleaves workers by thread
+        // timing, so arrival order is nondeterministic run-to-run. Sorting
+        // by (version, worker, env slot) — stable, so one env's chunks
+        // keep their FIFO generation order — before every float-order-
+        // sensitive fold (normalizer merges, dataset assembly) makes the
+        // learner's output a pure function of the chunk SET. This is what
+        // lets a supervised respawn or a kill-then-resume reproduce a
+        // fault-free sync run bitwise.
+        chunks.sort_by_key(|c| (c.policy_version, c.sampler_id, c.env_slot));
+        for c in &mut chunks {
+            if let Some(stats) = c.obs_stats.take() {
+                self.norm.merge(&stats);
+            }
         }
         let collect_secs = collect_sw.elapsed_secs();
         // virtual-core rollout time: the slowest worker's measured busy time
@@ -233,6 +250,47 @@ impl LearnerDriver for PpoLearner {
     fn final_norm(&self) -> crate::algo::normalizer::NormSnapshot {
         self.norm.snapshot()
     }
+
+    /// Full on-policy training state: parameters, Adam moments + step
+    /// counter, update RNG, normalizer, and the sample counter. Taken at
+    /// an iteration boundary (post-publish), where `carry` is empty in
+    /// sync mode; any async carry-over chunks are deliberately NOT
+    /// persisted — a resumed async run re-collects them (best-effort,
+    /// like async timing itself).
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.state.flat);
+        w.put_f32s(&self.state.m);
+        w.put_f32s(&self.state.v);
+        w.put_u64(self.state.t);
+        let (rs, ri) = self.rng.raw_state();
+        w.put_u128(rs);
+        w.put_u128(ri);
+        self.norm.save_state(&mut w);
+        w.put_u64(self.total_steps);
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let flat = r.read_f32s()?;
+        anyhow::ensure!(
+            flat.len() == self.state.flat.len(),
+            "PPO learner state mismatch: snapshot has {} params, this run has {}",
+            flat.len(),
+            self.state.flat.len()
+        );
+        self.state.flat = flat;
+        self.state.m = r.read_f32s()?;
+        self.state.v = r.read_f32s()?;
+        self.state.t = r.read_u64()?;
+        let (rs, ri) = (r.read_u128()?, r.read_u128()?);
+        self.rng = Pcg64::from_raw(rs, ri);
+        self.norm = RunningNorm::load_state(&mut r)?;
+        self.total_steps = r.read_u64()?;
+        self.carry.clear();
+        Ok(())
+    }
 }
 
 /// DDPG learner (further-work §6.1): replay buffer + off-policy updates
@@ -312,6 +370,7 @@ impl DdpgLearner {
         let mut eps = EpisodeStats::default();
         let mut busy_per_worker: std::collections::BTreeMap<usize, f64> =
             std::collections::BTreeMap::new();
+        let mut chunks: Vec<ExperienceChunk> = Vec::new();
         while n < cfg.samples_per_iter {
             let c = queue
                 .pop()
@@ -319,7 +378,14 @@ impl DdpgLearner {
             n += c.len();
             eps.absorb(&c);
             *busy_per_worker.entry(c.sampler_id).or_default() += c.busy_secs;
-            self.absorb_chunk(&c);
+            chunks.push(c);
+        }
+        // canonical order before replay insertion + normalizer merges —
+        // same rationale as the PPO collect: the learner's state must be
+        // a pure function of the chunk set, not of arrival interleaving
+        chunks.sort_by_key(|c| (c.policy_version, c.sampler_id, c.env_slot));
+        for c in &chunks {
+            self.absorb_chunk(c);
         }
         let collect_secs = collect_sw.elapsed_secs();
         let virtual_collect_secs = busy_per_worker
@@ -379,5 +445,60 @@ impl LearnerDriver for DdpgLearner {
 
     fn final_norm(&self) -> crate::algo::normalizer::NormSnapshot {
         self.norm.snapshot()
+    }
+
+    /// Off-policy training state: actor/critic + targets, both Adam
+    /// moment pairs, update RNG, normalizer, counters, and the replay
+    /// cursor. Replay *contents* are deliberately not persisted (the
+    /// buffer can be hundreds of MB); a resumed run restarts with an
+    /// empty buffer at the saved cursor, so update quality dips until it
+    /// refills — documented in docs/OPERATIONS.md.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.state.actor);
+        w.put_f32s(&self.state.critic);
+        w.put_f32s(&self.state.targ_actor);
+        w.put_f32s(&self.state.targ_critic);
+        w.put_f32s(&self.state.am);
+        w.put_f32s(&self.state.av);
+        w.put_f32s(&self.state.cm);
+        w.put_f32s(&self.state.cv);
+        w.put_u64(self.state.t);
+        let (rs, ri) = self.rng.raw_state();
+        w.put_u128(rs);
+        w.put_u128(ri);
+        self.norm.save_state(&mut w);
+        w.put_u64(self.total_steps);
+        let (len, head) = self.replay.cursor();
+        w.put_usize(len);
+        w.put_usize(head);
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let actor = r.read_f32s()?;
+        anyhow::ensure!(
+            actor.len() == self.state.actor.len(),
+            "DDPG learner state mismatch: snapshot has {} actor params, this run has {}",
+            actor.len(),
+            self.state.actor.len()
+        );
+        self.state.actor = actor;
+        self.state.critic = r.read_f32s()?;
+        self.state.targ_actor = r.read_f32s()?;
+        self.state.targ_critic = r.read_f32s()?;
+        self.state.am = r.read_f32s()?;
+        self.state.av = r.read_f32s()?;
+        self.state.cm = r.read_f32s()?;
+        self.state.cv = r.read_f32s()?;
+        self.state.t = r.read_u64()?;
+        let (rs, ri) = (r.read_u128()?, r.read_u128()?);
+        self.rng = Pcg64::from_raw(rs, ri);
+        self.norm = RunningNorm::load_state(&mut r)?;
+        self.total_steps = r.read_u64()?;
+        let (len, head) = (r.read_usize()?, r.read_usize()?);
+        self.replay.set_cursor(len, head);
+        Ok(())
     }
 }

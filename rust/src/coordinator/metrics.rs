@@ -203,6 +203,14 @@ pub struct InferenceReport {
     /// per flip by one straggler-cut window, or the serve loop's ~5ms
     /// idle poll when a peer shard happens to be idle.
     pub flip_stall_us: Histogram,
+    /// Supervisor respawns across the whole fleet (sampler workers +
+    /// inference shards). 0 on a healthy run.
+    pub restarts: u64,
+    /// Scripted fault cells (`--fault-inject`) that actually fired.
+    pub faults_injected: u64,
+    /// Wall microseconds per durable checkpoint write
+    /// (`--checkpoint-every`; empty when checkpointing is off).
+    pub checkpoint_write_us: Histogram,
 }
 
 impl InferenceReport {
@@ -237,6 +245,11 @@ impl InferenceReport {
             flip_stall_us: Histogram::new(&[
                 10.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 5000.0, 10_000.0,
             ]),
+            restarts: 0,
+            faults_injected: 0,
+            checkpoint_write_us: Histogram::new(&[
+                100.0, 250.0, 500.0, 1000.0, 2500.0, 10_000.0, 50_000.0, 250_000.0,
+            ]),
         }
     }
 
@@ -256,6 +269,9 @@ impl InferenceReport {
         self.cut_us.merge(&other.cut_us);
         self.epoch_lag.merge(&other.epoch_lag);
         self.flip_stall_us.merge(&other.flip_stall_us);
+        self.restarts += other.restarts;
+        self.faults_injected += other.faults_injected;
+        self.checkpoint_write_us.merge(&other.checkpoint_write_us);
     }
 
     /// Mean fraction of the shard batch filled per forward.
@@ -278,7 +294,9 @@ impl InferenceReport {
              queue wait us: {}\n\
              cut budget us: {}\n\
              epoch lag:     {}\n\
-             flip stall us: {}",
+             flip stall us: {}\n\
+             fleet health:  {} restart{}, {} scripted fault{} fired\n\
+             checkpoint us: {}",
             self.forwards,
             self.rows,
             self.fleet_rows,
@@ -293,7 +311,12 @@ impl InferenceReport {
             self.queue_wait_us.summary(),
             self.cut_us.summary(),
             self.epoch_lag.summary(),
-            self.flip_stall_us.summary()
+            self.flip_stall_us.summary(),
+            self.restarts,
+            if self.restarts == 1 { "" } else { "s" },
+            self.faults_injected,
+            if self.faults_injected == 1 { "" } else { "s" },
+            self.checkpoint_write_us.summary()
         )
     }
 
@@ -316,6 +339,9 @@ impl InferenceReport {
             ("cut_us", self.cut_us.to_json()),
             ("epoch_lag", self.epoch_lag.to_json()),
             ("flip_stall_us", self.flip_stall_us.to_json()),
+            ("restarts", Json::Num(self.restarts as f64)),
+            ("faults_injected", Json::Num(self.faults_injected as f64)),
+            ("checkpoint_write_us", self.checkpoint_write_us.to_json()),
         ])
     }
 }
@@ -601,6 +627,13 @@ mod tests {
         assert!(text.contains("2 forwards"));
         assert!(text.contains("mean fill 75.0%"));
         assert!(text.contains("1 shard)"));
+        r.restarts = 2;
+        r.faults_injected = 1;
+        r.checkpoint_write_us.record(900.0);
+        let text = r.render();
+        assert!(text.contains("2 restarts"));
+        assert!(text.contains("1 scripted fault fired"));
+        assert!(text.contains("checkpoint us:"));
         let j = r.to_json().to_string();
         assert!(j.contains("\"fleet_rows\""));
         assert!(j.contains("\"mean_fill\""));
@@ -609,6 +642,26 @@ mod tests {
         assert!(j.contains("\"cut_us\""));
         assert!(j.contains("\"epoch_lag\""));
         assert!(j.contains("\"flip_stall_us\""));
+        assert!(j.contains("\"restarts\":2"));
+        assert!(j.contains("\"faults_injected\":1"));
+        assert!(j.contains("\"checkpoint_write_us\""));
+    }
+
+    /// The fleet-health counters fold across shard reports like every
+    /// other field, so the pool-wide report carries fleet totals.
+    #[test]
+    fn fleet_health_counters_merge() {
+        let mut a = InferenceReport::with_bounds(6, 6);
+        let mut b = InferenceReport::with_bounds(4, 6);
+        a.restarts = 1;
+        a.faults_injected = 2;
+        a.checkpoint_write_us.record(400.0);
+        b.restarts = 3;
+        b.checkpoint_write_us.record(12_000.0);
+        a.merge(&b);
+        assert_eq!(a.restarts, 4);
+        assert_eq!(a.faults_injected, 2);
+        assert_eq!(a.checkpoint_write_us.count(), 2);
     }
 
     /// The epoch histograms merge across shards like every other report

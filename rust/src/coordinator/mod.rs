@@ -24,7 +24,11 @@
 //!   shared); both write machine-readable `BENCH_*.json` results.
 //! * [`learner`] — the asynchronous agent process (collect → GAE →
 //!   minibatch epochs → publish), PPO and DDPG variants.
-//! * [`orchestrator`] — spawn/join lifecycle, sync/async modes.
+//! * [`orchestrator`] — spawn/join lifecycle, sync/async modes, and the
+//!   self-healing supervisor loops (respawn with restored state under a
+//!   bounded restart budget).
+//! * [`supervisor`] — per-worker heartbeat lanes, restorable worker
+//!   snapshots, and the supervised-sampler control block.
 //! * [`metrics`] — per-iteration collect/learn timing and returns (the
 //!   data behind the paper's Figs 3–7).
 //! * [`eval`] — deterministic policy evaluation.
@@ -36,3 +40,4 @@ pub mod orchestrator;
 pub mod policy_store;
 pub mod queue;
 pub mod sampler;
+pub mod supervisor;

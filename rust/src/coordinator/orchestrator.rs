@@ -14,23 +14,57 @@
 //! [`run_with`] with the instance its builder carries. Either way, this
 //! module never matches on a concrete algorithm — adding one touches
 //! the registry, not the topology.
+//!
+//! ## Self-healing supervision
+//!
+//! Every sampler worker and inference shard runs inside a supervision
+//! loop: a panic (a real defect, or a scripted [`crate::util::fault`]
+//! cell) is caught, and the component is respawned with exponential
+//! backoff under a bounded budget (`--max-restarts`, counted per
+//! component). Workers restore the last clean
+//! [`crate::coordinator::supervisor::WorkerSnapshot`] their lane holds
+//! and replay already-delivered chunks without re-pushing them, so in
+//! sync mode the merged per-env chunk streams are bitwise identical to a
+//! fault-free run. Shards self-revive inside `serve_algo` (epoch-gate
+//! rejoin + fresh fleet-slice actor). A component that exhausts its
+//! budget aborts the whole fleet through the PR 4 shutdown paths: the
+//! experience queue closes, the learner errors loudly, and every thread
+//! joins.
+//!
+//! ## Checkpoint / resume
+//!
+//! `--checkpoint-every K` writes a durable [`Checkpoint`] after every
+//! K-th iteration (learner state + one worker snapshot per lane), at the
+//! barrier where every worker has adopted the just-published version;
+//! `--resume <dir>` reloads the newest one, re-seats the policy-store
+//! version, primes the lanes, and continues at the saved iteration. In
+//! sync mode a kill-then-resume run reproduces the exact per-env chunk
+//! streams of an uninterrupted run.
 
-use crate::algo::api::{algorithm_from_config, Algorithm};
+use crate::algo::api::{algorithm_from_config, Algorithm, LearnerDriver};
 use crate::algo::normalizer::NormSnapshot;
 use crate::algo::rollout::ExperienceChunk;
 use crate::config::{InferEpoch, InferWait, InferenceMode, TrainConfig};
 use crate::coordinator::metrics::{InferenceReport, IterationMetrics, MetricsLog};
 use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
-use crate::coordinator::sampler::{run_algo_sampler, PolicySource, SamplerCfg, SamplerReport};
+use crate::coordinator::sampler::{
+    run_algo_sampler_supervised, PolicySource, SamplerCfg, SamplerReport,
+};
+use crate::coordinator::supervisor::{WorkerCtl, WorkerLane, WorkerSnapshot};
 use crate::env::registry::make_env;
 use crate::env::vec_env::VecEnv;
+use crate::runtime::checkpoint::{self, Checkpoint, RunFingerprint};
 use crate::runtime::epoch::EpochMode;
 use crate::runtime::inference_server::{
     ActorClient, InferencePool, InferencePoolCfg, WaitPolicy,
 };
 use crate::runtime::BackendFactory;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::fault::{CompiledFaults, FaultPlan};
+use crate::util::plock;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -48,8 +82,16 @@ pub struct RunResult {
     /// (pushed, popped, producer blocked, consumer blocked).
     pub queue_stats: (u64, u64, Duration, Duration),
     /// Dispatch statistics of the shared inference server
-    /// (`--inference-mode shared` only).
+    /// (`--inference-mode shared` only), including the fleet-health
+    /// counters below folded in for the end-of-run report.
     pub infer: Option<InferenceReport>,
+    /// Supervisor respawns across the whole fleet (workers + shards).
+    pub restarts: u64,
+    /// Scripted `--fault-inject` cells that actually fired.
+    pub faults_injected: u64,
+    /// Wall microseconds of each durable checkpoint write
+    /// (`--checkpoint-every`; empty when checkpointing is off).
+    pub checkpoint_write_us: Vec<u64>,
 }
 
 /// Run a full training session per `cfg`, reporting into `log`.
@@ -113,6 +155,64 @@ pub fn run_with(
         Some((cfg.samples_per_iter + cfg.samplers - 1) / cfg.samplers)
     };
 
+    // ---- supervision state --------------------------------------------
+    let m = cfg.envs_per_sampler;
+    let shard_count = match cfg.inference_mode {
+        InferenceMode::Local => 0,
+        InferenceMode::Shared => cfg.infer_shards.resolve(cfg.samplers),
+    };
+    let faults: Option<CompiledFaults> = if cfg.fault_inject.is_empty() {
+        None
+    } else {
+        let plan = FaultPlan::parse(&cfg.fault_inject)?;
+        Some(plan.compile(cfg.samplers, shard_count)?)
+    };
+    let faults_injected = Arc::new(AtomicU64::new(0));
+    let restarts_total = Arc::new(AtomicU64::new(0));
+    let lanes: Vec<Arc<WorkerLane>> = (0..cfg.samplers)
+        .map(|_| Arc::new(WorkerLane::new()))
+        .collect();
+
+    // ---- resume -------------------------------------------------------
+    let fingerprint = RunFingerprint {
+        env: cfg.env.clone(),
+        algo: cfg.algo.name().to_string(),
+        samplers: cfg.samplers,
+        envs_per_sampler: cfg.envs_per_sampler,
+        seed: cfg.seed,
+    };
+    let resume_ck: Option<Checkpoint> = if cfg.resume.is_empty() {
+        None
+    } else {
+        let ck = checkpoint::load_latest(Path::new(&cfg.resume))?;
+        anyhow::ensure!(
+            ck.fingerprint == fingerprint,
+            "checkpoint fingerprint {:?} does not match this run {:?} — \
+             resuming under a different topology or seed would corrupt \
+             every RNG stream",
+            ck.fingerprint,
+            fingerprint
+        );
+        anyhow::ensure!(
+            ck.workers.len() == cfg.samplers,
+            "checkpoint holds {} worker blobs for {} samplers",
+            ck.workers.len(),
+            cfg.samplers
+        );
+        for (lane, blob) in lanes.iter().zip(&ck.workers) {
+            if !blob.is_empty() {
+                *plock(&lane.snapshot) = Some(WorkerSnapshot::from_bytes(blob)?);
+            }
+        }
+        crate::log_info!(
+            "resuming from iteration {} (policy version {})",
+            ck.iteration,
+            ck.version
+        );
+        Some(ck)
+    };
+
+    let mut ckpt_write_us: Vec<u64> = Vec::new();
     let mut result: Option<RunResult> = None;
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
@@ -122,25 +222,34 @@ pub fn run_with(
         // thread builds its own fleet-slice backend on itself (PJRT is
         // not Send) and runs until every one of its workers has dropped
         // its handle.
-        let m = cfg.envs_per_sampler;
         let pool = match cfg.inference_mode {
             InferenceMode::Local => None,
-            InferenceMode::Shared => Some(Arc::new(InferencePool::new(InferencePoolCfg {
-                workers: cfg.samplers,
-                rows_per_worker: m,
-                shards: cfg.infer_shards.resolve(cfg.samplers),
-                wait: match cfg.infer_wait {
-                    InferWait::Adaptive => WaitPolicy::Adaptive,
-                    InferWait::Fixed(us) => WaitPolicy::Fixed(Duration::from_micros(us)),
+            InferenceMode::Shared => Some(Arc::new(InferencePool::with_flip_schedule(
+                InferencePoolCfg {
+                    workers: cfg.samplers,
+                    rows_per_worker: m,
+                    shards: shard_count,
+                    wait: match cfg.infer_wait {
+                        InferWait::Adaptive => WaitPolicy::Adaptive,
+                        InferWait::Fixed(us) => WaitPolicy::Fixed(Duration::from_micros(us)),
+                    },
+                    epoch: match cfg.infer_epoch {
+                        InferEpoch::Pool => EpochMode::Pool,
+                        InferEpoch::Shard => EpochMode::Shard,
+                    },
+                    obs_dim: factory.obs_dim(),
+                    act_dim: factory.act_dim(),
                 },
-                epoch: match cfg.infer_epoch {
-                    InferEpoch::Pool => EpochMode::Pool,
-                    InferEpoch::Shard => EpochMode::Shard,
-                },
-                obs_dim: factory.obs_dim(),
-                act_dim: factory.act_dim(),
-            }))),
+                cfg.flip_schedule,
+            ))),
         };
+        if let (Some(p), Some(f)) = (&pool, &faults) {
+            for (idx, shard) in p.shards().iter().enumerate() {
+                if let Some(cells) = f.shard_cells(idx) {
+                    shard.arm_faults(cells, faults_injected.clone());
+                }
+            }
+        }
         let mut clients: Vec<_> = (0..cfg.samplers)
             .map(|id| pool.as_ref().map(|p| p.client(id)))
             .collect();
@@ -149,10 +258,50 @@ pub fn run_with(
             .map(|p| {
                 p.shards()
                     .iter()
-                    .map(|shard| {
+                    .enumerate()
+                    .map(|(idx, shard)| {
                         let shard = shard.clone();
                         let store = &store;
-                        scope.spawn(move || shard.serve_algo(algo, factory, store))
+                        let queue = &queue;
+                        let stop = &stop;
+                        let restarts_total = restarts_total.clone();
+                        let max_restarts = cfg.max_restarts;
+                        scope.spawn(move || -> anyhow::Result<()> {
+                            // supervision loop: a panicked serve thread is
+                            // respawned (serve_algo self-revives: epoch
+                            // rejoin + fresh actor); a clean Err is not.
+                            let mut attempts = 0usize;
+                            loop {
+                                match catch_unwind(AssertUnwindSafe(|| {
+                                    shard.serve_algo(algo, factory, store)
+                                })) {
+                                    Ok(res) => break res,
+                                    Err(payload) => {
+                                        if stop.load(Ordering::Relaxed)
+                                            || queue.is_closed()
+                                            || attempts >= max_restarts
+                                        {
+                                            if attempts >= max_restarts && !queue.is_closed() {
+                                                crate::log_error!(
+                                                    "inference shard {idx} exhausted its \
+                                                     restart budget ({max_restarts}); \
+                                                     closing the experience queue"
+                                                );
+                                                queue.close();
+                                            }
+                                            resume_unwind(payload);
+                                        }
+                                        attempts += 1;
+                                        restarts_total.fetch_add(1, Ordering::SeqCst);
+                                        crate::log_error!(
+                                            "inference shard {idx} panicked; respawning \
+                                             (attempt {attempts}/{max_restarts})"
+                                        );
+                                        std::thread::sleep(backoff(attempts));
+                                    }
+                                }
+                            }
+                        })
                     })
                     .collect()
             })
@@ -179,11 +328,18 @@ pub fn run_with(
             let env_name = cfg.env.clone();
             let client = clients[id].take();
             let live = live_samplers.clone();
+            let lane = lanes[id].clone();
+            let wcells = faults.as_ref().and_then(|f| f.worker_cells(id));
+            let finj = faults_injected.clone();
+            let restarts_total = restarts_total.clone();
+            let pool_c = pool.clone();
+            let max_restarts = cfg.max_restarts;
             handles.push(scope.spawn(move || -> anyhow::Result<SamplerReport> {
-                // drop guard, NOT ordinary post-code: a worker that
-                // panics (instead of returning an error) must still
-                // decrement the live count and trip the queue close, or
-                // the learner would inherit the very hang this PR closes
+                // drop guard, NOT ordinary post-code: a worker that dies
+                // for good (budget exhausted, or an error return) must
+                // still decrement the live count and trip the queue
+                // close, or the learner would inherit the very hang PR 4
+                // closed
                 let _guard = FleetGuard {
                     id,
                     live,
@@ -191,21 +347,92 @@ pub fn run_with(
                     queue,
                     stop,
                 };
-                run_sampler_worker(
-                    scfg, m, &env_name, algo, client, factory, store, queue, stop,
-                )
+                // Keep this worker's shard alive across respawn gaps: a
+                // dying incarnation drops its ActorClient during the
+                // unwind, and without the hold the shard's serve loop
+                // could observe zero active clients and exit before the
+                // respawn re-registers.
+                let _hold = pool_c.as_ref().map(|p| p.shard_for(id).hold());
+                let mut client = client;
+                let mut attempts = 0usize;
+                loop {
+                    let ctl = WorkerCtl {
+                        lane: lane.clone(),
+                        restore: lane.latest(),
+                        skip_chunks: lane.pushed.load(Ordering::SeqCst),
+                        fault: wcells.clone(),
+                        faults_injected: finj.clone(),
+                    };
+                    // first incarnation uses the pre-registered client;
+                    // respawns (and resume) re-home through the pool
+                    let c = match client.take() {
+                        Some(c) => Some(c),
+                        None => pool_c.as_ref().map(|p| p.client(id)),
+                    };
+                    let scfg = scfg.clone();
+                    let env_name = &env_name;
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        run_sampler_worker(
+                            scfg,
+                            m,
+                            env_name,
+                            algo,
+                            c,
+                            factory,
+                            store,
+                            queue,
+                            stop,
+                            Some(&ctl),
+                        )
+                    })) {
+                        Ok(res) => break res,
+                        Err(payload) => {
+                            if stop.load(Ordering::Relaxed)
+                                || queue.is_closed()
+                                || attempts >= max_restarts
+                            {
+                                if attempts >= max_restarts {
+                                    crate::log_error!(
+                                        "sampler worker {id} exhausted its restart \
+                                         budget ({max_restarts}); giving up"
+                                    );
+                                }
+                                // FleetGuard handles the queue close
+                                resume_unwind(payload);
+                            }
+                            attempts += 1;
+                            lane.restarts.fetch_add(1, Ordering::SeqCst);
+                            restarts_total.fetch_add(1, Ordering::SeqCst);
+                            crate::log_error!(
+                                "sampler worker {id} panicked; respawning from its \
+                                 lane snapshot (attempt {attempts}/{max_restarts})"
+                            );
+                            std::thread::sleep(backoff(attempts));
+                        }
+                    }
+                }
             }));
         }
 
         // ---- learner (this thread) -------------------------------------
-        let (final_params, final_norm) = match run_learner(algo, cfg, factory, &queue, &store, log)
-        {
+        let (final_params, final_norm) = match run_learner(
+            algo,
+            cfg,
+            factory,
+            &queue,
+            &store,
+            log,
+            &lanes,
+            resume_ck.as_ref(),
+            &fingerprint,
+            &mut ckpt_write_us,
+        ) {
             Ok(p) => p,
             Err(e) => {
                 // A learner failure must still release the samplers and
                 // inference shards before propagating — the scope join
                 // below would otherwise wait forever on workers that were
-                // never told to stop (the hang class this PR closes).
+                // never told to stop (the hang class PR 4 closed).
                 stop.store(true, Ordering::Relaxed);
                 queue.close();
                 // Join the scoped threads ourselves, discarding their
@@ -262,6 +489,8 @@ pub fn run_with(
             return Err(e);
         }
 
+        let restarts = restarts_total.load(Ordering::SeqCst);
+        let injected = faults_injected.load(Ordering::SeqCst);
         result = Some(RunResult {
             metrics: log.iterations.clone(),
             sampler_reports: reports,
@@ -273,12 +502,29 @@ pub fn run_with(
                 queue.stats.push_blocked(),
                 queue.stats.pop_blocked(),
             ),
-            infer: pool.map(|p| p.report()),
+            infer: pool.map(|p| {
+                let mut rep = p.report();
+                rep.restarts = restarts;
+                rep.faults_injected = injected;
+                for &us in &ckpt_write_us {
+                    rep.checkpoint_write_us.record(us as f64);
+                }
+                rep
+            }),
+            restarts,
+            faults_injected: injected,
+            checkpoint_write_us: ckpt_write_us.clone(),
         });
         Ok(())
     })?;
 
     Ok(result.expect("run result set"))
+}
+
+/// Exponential supervisor backoff: 10ms doubling per attempt, capped at
+/// 320ms so a flapping component cannot stall shutdown for long.
+fn backoff(attempt: usize) -> Duration {
+    Duration::from_millis(10u64 << (attempt as u64 - 1).min(5))
 }
 
 /// Worker-exit supervision, armed as a drop guard so it fires on panics
@@ -317,7 +563,9 @@ impl Drop for FleetGuard<'_> {
 
 /// One sampler worker body: build the env + policy source and run the
 /// generic algorithm loop. Factored out of [`run_with`] so the spawn
-/// closure can arm the [`FleetGuard`] supervision around it.
+/// closure can arm the [`FleetGuard`] + restart supervision around it.
+/// `ctl` carries the supervision lane, the snapshot to restore (respawn
+/// or resume), and any armed fault cells.
 #[allow(clippy::too_many_arguments)]
 fn run_sampler_worker(
     scfg: SamplerCfg,
@@ -329,6 +577,7 @@ fn run_sampler_worker(
     store: &PolicyStore,
     queue: &Channel<ExperienceChunk>,
     stop: &AtomicBool,
+    ctl: Option<&WorkerCtl>,
 ) -> anyhow::Result<SamplerReport> {
     let id = scfg.id;
     let venv = VecEnv::from_registry(env_name, m, scfg.seed, (id * m) as u64 + 1)?;
@@ -336,7 +585,9 @@ fn run_sampler_worker(
         Some(c) => PolicySource::Shared(c),
         None => PolicySource::Local(algo.make_local_actor(factory, m)?),
     };
-    Ok(run_algo_sampler(algo, scfg, venv, source, store, queue, stop))
+    Ok(run_algo_sampler_supervised(
+        algo, scfg, venv, source, store, queue, stop, ctl,
+    ))
 }
 
 /// Build `algo`'s learner and drive every training iteration on the
@@ -344,6 +595,13 @@ fn run_sampler_worker(
 /// of [`run_with`] so a learner failure can be intercepted to release
 /// the worker fleet before the thread scope joins (otherwise the join
 /// would wait forever on samplers that were never told to stop).
+///
+/// With `resume_ck` the learner restores its saved state, the policy
+/// store is re-seated so `publish_initial` re-creates exactly the
+/// checkpoint's version, and iteration resumes where the snapshot was
+/// taken. With `cfg.checkpoint_every > 0` a durable [`Checkpoint`] is
+/// written after every K-th iteration.
+#[allow(clippy::too_many_arguments)]
 fn run_learner(
     algo: &dyn Algorithm,
     cfg: &TrainConfig,
@@ -351,14 +609,94 @@ fn run_learner(
     queue: &Channel<ExperienceChunk>,
     store: &PolicyStore,
     log: &mut MetricsLog,
+    lanes: &[Arc<WorkerLane>],
+    resume_ck: Option<&Checkpoint>,
+    fingerprint: &RunFingerprint,
+    ckpt_write_us: &mut Vec<u64>,
 ) -> anyhow::Result<(Vec<f32>, NormSnapshot)> {
     let mut learner = algo.make_learner(factory, cfg)?;
+    let mut start_iter = 0usize;
+    if let Some(ck) = resume_ck {
+        learner.load_state(&ck.learner)?;
+        // the restored learner's publish_initial must land at exactly the
+        // checkpoint's version so chunk policy_version labels stay
+        // bitwise-stable across the restart
+        store.resume_at(ck.version.saturating_sub(1));
+        start_iter = ck.iteration as usize;
+    }
     learner.publish_initial(store);
-    for iter in 0..cfg.iterations {
+    for iter in start_iter..cfg.iterations {
         let m = learner.iteration(iter, cfg, queue, store)?;
         log.push(m);
+        if cfg.checkpoint_every != 0 && (iter + 1) % cfg.checkpoint_every == 0 {
+            write_checkpoint(
+                cfg,
+                store,
+                lanes,
+                learner.as_ref(),
+                fingerprint,
+                (iter + 1) as u64,
+                ckpt_write_us,
+            )?;
+        }
     }
     Ok((learner.final_params(), learner.final_norm()))
+}
+
+/// Write one durable checkpoint: wait (bounded) for every worker lane to
+/// deposit a snapshot at the just-published policy version — the barrier
+/// that makes the snapshot clean in sync mode (chunk buffers empty, RNG
+/// cursors at a chunk boundary, nothing delivered past the deposit) —
+/// then persist atomically via [`Checkpoint::write_to`]. In async mode
+/// free-running workers may never align on one version; after the bounded
+/// wait the freshest available snapshots are persisted best-effort
+/// (resume is still valid, just not bitwise).
+fn write_checkpoint(
+    cfg: &TrainConfig,
+    store: &PolicyStore,
+    lanes: &[Arc<WorkerLane>],
+    learner: &dyn LearnerDriver,
+    fingerprint: &RunFingerprint,
+    iteration: u64,
+    ckpt_write_us: &mut Vec<u64>,
+) -> anyhow::Result<()> {
+    let version = store.version();
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let aligned = lanes
+            .iter()
+            .all(|l| l.latest().map(|s| s.version == version).unwrap_or(false));
+        if aligned {
+            break;
+        }
+        if std::time::Instant::now() >= deadline {
+            crate::log_warn!(
+                "checkpoint barrier timed out at version {version}; persisting the \
+                 freshest available worker snapshots (best-effort resume)"
+            );
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let t0 = std::time::Instant::now();
+    let ck = Checkpoint {
+        fingerprint: fingerprint.clone(),
+        iteration,
+        version,
+        learner: learner.save_state(),
+        workers: lanes
+            .iter()
+            .map(|l| l.latest().map(|s| s.to_bytes()).unwrap_or_default())
+            .collect(),
+    };
+    let path = ck.write_to(Path::new(&cfg.checkpoint_dir))?;
+    let us = t0.elapsed().as_micros() as u64;
+    ckpt_write_us.push(us);
+    crate::log_info!(
+        "checkpoint written: {} ({us} us, version {version})",
+        path.display()
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -402,6 +740,10 @@ mod tests {
         assert_eq!(r.final_params.len(), f.ppo_param_count());
         let (pushed, popped, _, _) = r.queue_stats;
         assert!(pushed >= popped);
+        // healthy run: the supervisor never fired
+        assert_eq!(r.restarts, 0);
+        assert_eq!(r.faults_injected, 0);
+        assert!(r.checkpoint_write_us.is_empty());
     }
 
     #[test]
@@ -489,6 +831,9 @@ mod tests {
         assert!(rep.rows >= total_steps, "rows {} < steps {total_steps}", rep.rows);
         assert!(rep.mean_fill() > 0.0 && rep.mean_fill() <= 1.0 + 1e-9);
         assert_eq!(rep.forwards, rep.full_dispatches + rep.timeout_dispatches);
+        // fleet-health counters ride the merged report
+        assert_eq!(rep.restarts, 0);
+        assert_eq!(rep.faults_injected, 0);
     }
 
     #[test]
@@ -630,10 +975,10 @@ mod tests {
         assert_eq!(rep.epoch_lag.count(), rep.forwards);
     }
 
-    /// Acceptance criterion: a forced serve-thread panic at S=2
-    /// terminates the run with a logged error — the dead shard's workers
-    /// unwind instead of deadlocking on their completion slots, the
-    /// surviving shard keeps feeding the learner to completion, and the
+    /// With the restart budget disabled (`max_restarts = 0`) a forced
+    /// serve-thread panic at S=2 terminates the run with a logged error —
+    /// the PR 4 fail-fast contract: the dead shard's workers unwind
+    /// instead of deadlocking on their completion slots, and the
     /// orchestrator surfaces the dead shard as a run error.
     #[test]
     fn shard_panic_terminates_run_instead_of_deadlocking() {
@@ -643,6 +988,7 @@ mod tests {
         cfg.inference_mode = InferenceMode::Shared;
         cfg.infer_shards = crate::config::InferShards::Fixed(2);
         cfg.infer_wait = InferWait::Fixed(500);
+        cfg.max_restarts = 0; // fail fast, no supervision
         // the first shard to build its shared actor dies after 25 forwards
         let f = PanickingSharedFactory::new(factory(&cfg), 25);
         let mut log = MetricsLog::quiet();
@@ -650,11 +996,11 @@ mod tests {
         assert!(r.is_err(), "run must terminate with an error, not hang");
     }
 
-    /// Sync-mode variant of the shard-panic acceptance test: with half
-    /// the fleet dead the per-iteration budget is unreachable, so the
-    /// surviving workers' budget barrier + the learner's blocking collect
-    /// would deadlock forever — any mid-run worker death in sync mode
-    /// must close the queue and fail the run instead.
+    /// Sync-mode variant of the shard-panic fail-fast test: with half
+    /// the fleet dead and no restart budget the per-iteration budget is
+    /// unreachable, so the surviving workers' budget barrier + the
+    /// learner's blocking collect would deadlock forever — any mid-run
+    /// worker death in sync mode must close the queue and fail the run.
     #[test]
     fn shard_panic_terminates_sync_run_instead_of_deadlocking() {
         use crate::runtime::test_support::PanickingSharedFactory;
@@ -663,9 +1009,133 @@ mod tests {
         cfg.inference_mode = InferenceMode::Shared;
         cfg.infer_shards = crate::config::InferShards::Fixed(2);
         cfg.infer_wait = InferWait::Fixed(500);
+        cfg.max_restarts = 0; // fail fast, no supervision
         let f = PanickingSharedFactory::new(factory(&cfg), 25);
         let mut log = MetricsLog::quiet();
         let r = run(&cfg, &f, &mut log);
         assert!(r.is_err(), "sync run must fail loudly, not deadlock");
+    }
+
+    /// Tentpole acceptance (shard leg): with the default restart budget
+    /// the SAME one-poisoned-shard scenario now self-heals — the
+    /// supervisor respawns the serve thread, serve_algo revives the
+    /// shard (epoch rejoin + fresh healthy actor), the re-homed workers'
+    /// retried requests go through, and the run completes.
+    #[test]
+    fn shard_panic_respawns_and_run_completes() {
+        use crate::runtime::test_support::PanickingSharedFactory;
+
+        let mut cfg = tiny_cfg(4, true);
+        cfg.inference_mode = InferenceMode::Shared;
+        cfg.infer_shards = crate::config::InferShards::Fixed(2);
+        cfg.infer_wait = InferWait::Fixed(500);
+        let f = PanickingSharedFactory::new(factory(&cfg), 25);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        assert!(r.restarts >= 1, "the supervisor must have respawned the shard");
+        let rep = r.infer.expect("shared run must carry a report");
+        assert_eq!(rep.restarts, r.restarts);
+    }
+
+    /// Tentpole acceptance (worker leg): a scripted worker kill mid-run
+    /// is healed by the supervisor — the worker respawns from its lane
+    /// snapshot with its original RNG lanes and the run completes, with
+    /// the restart and fault counters reflecting exactly the plan.
+    #[test]
+    fn scripted_worker_fault_respawns_and_run_completes() {
+        let mut cfg = tiny_cfg(3, true);
+        cfg.fault_inject = "worker:1@tick:50".into();
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(r.metrics.len(), 3);
+        assert_eq!(r.faults_injected, 1, "the armed cell must have fired");
+        assert_eq!(r.restarts, 1, "one kill, one respawn");
+        assert_eq!(r.sampler_reports.len(), 3);
+    }
+
+    /// A worker that keeps dying past its restart budget aborts the
+    /// fleet cleanly (run error, no hang) instead of looping forever.
+    #[test]
+    fn restart_budget_exhaustion_fails_the_run() {
+        let mut cfg = tiny_cfg(2, true);
+        cfg.max_restarts = 1;
+        cfg.fault_inject = "worker:0@tick:20,worker:0@tick:40,worker:0@tick:60".into();
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log);
+        assert!(r.is_err(), "budget exhaustion must fail the run");
+    }
+
+    /// Sync-mode checkpointing writes one durable snapshot per iteration
+    /// at the version barrier, and a resumed run continues to the same
+    /// final parameters bitwise (the learner state + every worker RNG
+    /// cursor survived the round trip).
+    #[test]
+    fn checkpoint_then_resume_reproduces_final_params() {
+        let dir = std::env::temp_dir().join("walle_orch_resume_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tiny_cfg(2, false);
+        cfg.checkpoint_every = 1;
+        cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+        let f = factory(&cfg);
+
+        // uninterrupted reference run
+        let mut log = MetricsLog::quiet();
+        let full = run(&cfg, &f, &mut log).unwrap();
+        assert_eq!(full.checkpoint_write_us.len(), 3);
+
+        // killed-after-iteration-2 run: simulate by resuming from the
+        // second checkpoint (delete the last one so load_latest picks it)
+        std::fs::remove_file(dir.join("ckpt-000003.bin")).unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.resume = cfg.checkpoint_dir.clone();
+        cfg2.checkpoint_every = 0;
+        let mut log2 = MetricsLog::quiet();
+        let resumed = run(&cfg2, &f, &mut log2).unwrap();
+        assert_eq!(resumed.metrics.len(), 1, "only the final iteration reruns");
+        assert_eq!(
+            resumed.final_params, full.final_params,
+            "resumed run must reproduce the reference parameters bitwise"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Resume refuses a checkpoint whose fingerprint does not match the
+    /// live config (different seed here) — restoring RNG cursors under a
+    /// different identity would silently corrupt every stream.
+    #[test]
+    fn resume_rejects_fingerprint_mismatch() {
+        let dir = std::env::temp_dir().join("walle_orch_fingerprint_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tiny_cfg(1, false);
+        cfg.iterations = 1;
+        cfg.checkpoint_every = 1;
+        cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        run(&cfg, &f, &mut log).unwrap();
+
+        let mut cfg2 = cfg.clone();
+        cfg2.resume = cfg.checkpoint_dir.clone();
+        cfg2.checkpoint_every = 0;
+        cfg2.seed = cfg.seed + 1;
+        let mut log2 = MetricsLog::quiet();
+        let r = run(&cfg2, &f, &mut log2);
+        assert!(r.is_err(), "fingerprint mismatch must abort resume");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A fault plan that targets a shard in local mode (no shards exist)
+    /// is rejected at startup, not discovered mid-run.
+    #[test]
+    fn shard_fault_plan_rejected_in_local_mode() {
+        let mut cfg = tiny_cfg(1, true);
+        cfg.fault_inject = "shard:0@dispatch:10".into();
+        let f = factory(&cfg);
+        let mut log = MetricsLog::quiet();
+        let r = run(&cfg, &f, &mut log);
+        assert!(r.is_err());
     }
 }

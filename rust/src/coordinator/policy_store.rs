@@ -85,6 +85,16 @@ impl PolicyStore {
         self.version.load(Ordering::Acquire)
     }
 
+    /// Re-seat the version counter so the NEXT publish lands at
+    /// `version + 1`. Resume-from-checkpoint calls this (before any
+    /// publish, on the orchestrator thread) so the restored learner's
+    /// `publish_initial` re-creates exactly the version the checkpoint
+    /// barrier was taken at, keeping chunk `policy_version` labels
+    /// bitwise-stable across the restart.
+    pub fn resume_at(&self, version: u64) {
+        self.version.store(version, Ordering::Release);
+    }
+
     /// Cheap staleness check for samplers.
     pub fn newer_than(&self, seen: u64) -> bool {
         self.version() > seen

@@ -72,6 +72,7 @@ use crate::algo::api::{AlgoSampler, Algorithm, TickLanes};
 use crate::algo::rollout::{ChunkBuf, ChunkEnd, ExperienceChunk};
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::coordinator::queue::Channel;
+use crate::coordinator::supervisor::{WorkerCtl, WorkerLane};
 use crate::env::vec_env::{VecEnv, VecStepInfo};
 use crate::runtime::inference_server::{ActResponse, ActorClient};
 use crate::runtime::{ActResult, ActorBackend, DdpgActorBackend, DeterministicRowActor};
@@ -161,7 +162,7 @@ impl SamplerCfg {
 }
 
 /// What a sampler did before stopping (for logs/tests).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SamplerReport {
     pub steps: u64,
     pub episodes: u64,
@@ -276,6 +277,46 @@ fn refresh_policy(
     true
 }
 
+/// Chunk delivery gate for supervised replay. A respawned worker
+/// regenerates the chunk sequence from its restored snapshot bitwise;
+/// the first `skip` emissions were already delivered by the previous
+/// incarnation, so they are counted (report/budget bookkeeping must run
+/// identically to the fault-free schedule) but not pushed again. The
+/// owning lane's `pushed` counter is advanced only after a successful
+/// push, so a crash between emissions re-sends at most the in-flight
+/// chunk's successors, never silently drops one (sync mode would
+/// deadlock on a dropped chunk; a scripted fault always fires at a tick
+/// boundary, where the two counters agree).
+struct EmitGate<'a> {
+    emitted: u64,
+    skip: u64,
+    lane: Option<&'a Arc<WorkerLane>>,
+}
+
+impl EmitGate<'_> {
+    /// Deliver (or drop, during replay of already-delivered emissions)
+    /// one chunk. Returns false when the queue closed.
+    fn push(&mut self, queue: &Channel<ExperienceChunk>, chunk: ExperienceChunk) -> bool {
+        self.emitted += 1;
+        if self.emitted <= self.skip {
+            return true; // regenerated chunk the learner already holds
+        }
+        if queue.push(chunk).is_err() {
+            return false;
+        }
+        if let Some(lane) = self.lane {
+            lane.pushed.store(self.emitted, Ordering::SeqCst);
+        }
+        true
+    }
+
+    /// A fresh snapshot was deposited: nothing is pending past it.
+    fn reset(&mut self) {
+        self.emitted = 0;
+        self.skip = 0;
+    }
+}
+
 /// Shared-mode version cut: the server's dispatch moved to a newer
 /// policy version (or pool epoch), so every row buffered so far belongs
 /// to the old snapshot and this tick's rows must not join them. Each
@@ -296,6 +337,7 @@ fn flush_version_cut(
     values: &[f32],
     queue: &Channel<ExperienceChunk>,
     report: &mut SamplerReport,
+    emit: &mut EmitGate<'_>,
 ) -> bool {
     for (i, buf) in bufs.iter_mut().enumerate() {
         if buf.is_empty() {
@@ -309,7 +351,7 @@ fn flush_version_cut(
             values[i],
         );
         let chunk = buf.take(cfg.id, i, policy.version, ChunkEnd::Continuation, boot);
-        if queue.push(chunk).is_err() {
+        if !emit.push(queue, chunk) {
             return false;
         }
         report.chunks += 1;
@@ -408,13 +450,41 @@ pub fn run_ddpg_sampler_from(
 pub fn run_algo_sampler(
     algo: &dyn Algorithm,
     cfg: SamplerCfg,
+    venv: VecEnv,
+    source: PolicySource,
+    store: &PolicyStore,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+) -> SamplerReport {
+    run_algo_sampler_supervised(algo, cfg, venv, source, store, queue, stop, None)
+}
+
+/// [`run_algo_sampler`] under fleet supervision: with a
+/// [`WorkerCtl`] the incarnation restores the deposited snapshot
+/// instead of resetting, replays already-delivered chunks without
+/// re-pushing them, deposits fresh snapshots at every policy
+/// version-adoption point, trips scripted fault cells on its lifetime
+/// tick counter, and retries shared-inference calls instead of dying
+/// with a temporarily-down shard (the supervisor is respawning it).
+/// `ctl = None` is exactly the unsupervised legacy behavior.
+#[allow(clippy::too_many_arguments)]
+pub fn run_algo_sampler_supervised(
+    algo: &dyn Algorithm,
+    cfg: SamplerCfg,
     mut venv: VecEnv,
     mut source: PolicySource,
     store: &PolicyStore,
     queue: &Channel<ExperienceChunk>,
     stop: &AtomicBool,
+    ctl: Option<&WorkerCtl>,
 ) -> SamplerReport {
     let mut report = SamplerReport::default();
+    let fault_label = format!("sampler worker {}", cfg.id);
+    let mut emit = EmitGate {
+        emitted: 0,
+        skip: ctl.map(|c| c.skip_chunks).unwrap_or(0),
+        lane: ctl.map(|c| &c.lane),
+    };
     let m = venv.num_envs();
     let obs_dim = venv.obs_dim();
     let act_dim = venv.act_dim();
@@ -464,11 +534,46 @@ pub fn run_algo_sampler(
     // ticks since the last whole-worker chunk cut (see plan_boundaries)
     let mut window_ticks = 0usize;
 
-    venv.reset_all();
+    // Supervised restore: a respawned (or resumed-from-checkpoint)
+    // incarnation continues from the deposited snapshot instead of
+    // resetting — same env dynamics, same per-env RNG cursors, same
+    // exploration streams, so the regenerated chunk sequence is bitwise
+    // identical. Restore failures end the worker cleanly: a shape
+    // mismatch is a construction bug, not a transient fault, and
+    // respawning would just repeat it.
+    match ctl.and_then(|c| c.restore.as_ref()) {
+        Some(snap) => {
+            if let Err(e) = venv.load_state(&snap.venv) {
+                crate::log_error!("sampler {}: env snapshot restore failed: {e:#}", cfg.id);
+                return report;
+            }
+            if let Err(e) = hooks.load_state(&snap.hooks) {
+                crate::log_error!("sampler {}: sampler state restore failed: {e:#}", cfg.id);
+                return report;
+            }
+            report = snap.report.clone();
+        }
+        None => {
+            venv.reset_all();
+            if let Some(ctl) = ctl {
+                // first recovery point: the freshly reset fleet state
+                // under the first adopted policy version
+                ctl.lane.deposit(policy.version, &venv, hooks.as_ref(), &report);
+            }
+        }
+    }
 
     'outer: loop {
         if stop.load(Ordering::Relaxed) {
             break;
+        }
+        if let Some(ctl) = ctl {
+            // lifetime tick counter: the heartbeat the supervisor reads
+            // and the progress clock scripted fault cells trigger on
+            let tick_no = ctl.lane.ticks.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(cells) = &ctl.fault {
+                crate::util::fault::trip(cells, tick_no, &ctl.faults_injected, &fault_label);
+            }
         }
 
         // --- one lockstep sim tick under the current policy (busy-timed
@@ -494,11 +599,27 @@ pub fn run_algo_sampler(
                 } else {
                     &noise[..m * act_dim]
                 };
-                let resp = match client.act(venv.obs(), submit) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        crate::log_error!("sampler {}: shared act failed: {e:#}", cfg.id);
-                        break;
+                // supervised mode retries a down shard: `act` is
+                // retry-safe after Err (fresh request slot per call) and
+                // the supervisor is respawning the server concurrently.
+                // The obs and noise rows are untouched across retries, so
+                // the eventual dispatch is the tick that would have run.
+                let resp = loop {
+                    match client.act(venv.obs(), submit) {
+                        Ok(r) => break r,
+                        Err(e) => {
+                            if ctl.is_none()
+                                || stop.load(Ordering::Relaxed)
+                                || queue.is_closed()
+                            {
+                                crate::log_error!(
+                                    "sampler {}: shared act failed: {e:#}",
+                                    cfg.id
+                                );
+                                break 'outer;
+                            }
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
                     }
                 };
                 // the server normalized our rows under its dispatch
@@ -521,17 +642,30 @@ pub fn run_algo_sampler(
                         resp.value(),
                         queue,
                         &mut report,
+                        &mut emit,
                     ) {
                         break 'outer;
                     }
                     window_ticks = 0;
                     produced_for_version = 0;
+                    let moved_forward = resp.snapshot.version > policy.version;
                     policy = resp.snapshot.clone();
                     // an epoch flip whose version the worker already
                     // adopted from the store (sync-mode refresh) is not a
                     // second refresh — count only real version moves
                     if version_moved {
                         report.policy_refreshes += 1;
+                    }
+                    // async-only best-effort recovery point: this tick's
+                    // noise lanes are already drawn, so a replay from
+                    // here is not bitwise (sync mode deposits at the
+                    // refresh_policy barrier below instead, which is)
+                    if let Some(ctl) = ctl {
+                        if cfg.sync_budget.is_none() && moved_forward {
+                            ctl.lane
+                                .deposit(policy.version, &venv, hooks.as_ref(), &report);
+                            emit.reset();
+                        }
                     }
                 }
                 policy_epoch = resp.epoch;
@@ -629,10 +763,24 @@ pub fn run_algo_sampler(
                     } else {
                         &noise[..m * act_dim]
                     };
-                    client.act(venv.obs(), submit).map(|r| {
-                        boot_values[..m].copy_from_slice(&r.value()[..m]);
-                        r.server_busy_secs
-                    })
+                    // same down-shard retry as the main act call above
+                    loop {
+                        match client.act(venv.obs(), submit) {
+                            Ok(r) => {
+                                boot_values[..m].copy_from_slice(&r.value()[..m]);
+                                break Ok(r.server_busy_secs);
+                            }
+                            Err(e) => {
+                                if ctl.is_none()
+                                    || stop.load(Ordering::Relaxed)
+                                    || queue.is_closed()
+                                {
+                                    break Err(e);
+                                }
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                        }
+                    }
                 }
             };
             let boot_server_busy = match boot {
@@ -680,7 +828,7 @@ pub fn run_algo_sampler(
             );
             let n = bufs[i].len();
             let chunk = bufs[i].take(cfg.id, i, policy.version, end, boot);
-            if queue.push(chunk).is_err() {
+            if !emit.push(queue, chunk) {
                 break 'outer; // queue closed: shutting down
             }
             report.chunks += 1;
@@ -698,6 +846,15 @@ pub fn run_algo_sampler(
                 break 'outer;
             }
             produced_for_version = 0;
+            if let Some(ctl) = ctl {
+                // version-adoption recovery point: buffers are empty and
+                // the exploration RNG sits exactly at a chunk boundary,
+                // so a replay from this snapshot is bitwise (the sync
+                // checkpoint/respawn guarantee rides on this deposit)
+                ctl.lane
+                    .deposit(policy.version, &venv, hooks.as_ref(), &report);
+                emit.reset();
+            }
         }
     }
     report

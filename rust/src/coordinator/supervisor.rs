@@ -1,0 +1,213 @@
+//! Fleet supervision state: per-worker heartbeat lanes, restorable
+//! worker snapshots, and the control block a supervised sampler runs
+//! under.
+//!
+//! The orchestrator arms one [`WorkerLane`] per sampler worker. The
+//! worker deposits a [`WorkerSnapshot`] into its lane at every policy
+//! **version adoption** point — the only moments when its state is
+//! clean: chunk buffers are empty (adoption always follows a flush-all)
+//! and the exploration RNG streams sit exactly at a chunk boundary.
+//! Between deposits the lane's `pushed` counter tracks how many chunks
+//! the worker has already delivered to the experience queue under the
+//! deposited snapshot.
+//!
+//! When a worker panics (a real defect, or a scripted
+//! [`crate::util::fault`] cell), the supervisor catches the unwind,
+//! rebuilds the worker from the deposited snapshot, and replays it with
+//! `skip_chunks = pushed`: the restored worker regenerates the exact
+//! same chunk sequence (same RNG cursors, same env state) and drops the
+//! prefix the learner already received, so the queue sees each chunk
+//! exactly once and — in sync mode — the merged per-env streams are
+//! bitwise identical to a fault-free run.
+//!
+//! The same [`WorkerSnapshot`] bytes are what `runtime::checkpoint`
+//! persists per worker: at a checkpoint barrier every lane holds a
+//! snapshot at the just-published version with `pushed == 0`, so resume
+//! is respawn-from-disk with nothing to skip.
+
+use crate::algo::api::AlgoSampler;
+use crate::coordinator::sampler::SamplerReport;
+use crate::env::vec_env::{VecEnv, VecEnvState};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::fault::FaultCell;
+use crate::util::plock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Everything needed to rebuild a sampler worker mid-run: the policy
+/// version its state is clean at, the full [`VecEnvState`] (dynamics +
+/// per-env RNG cursors + episode counters), the algorithm sampler's
+/// opaque exploration-state blob, and the progress report so counters
+/// survive the respawn.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSnapshot {
+    /// Policy version the worker had adopted when the snapshot was taken.
+    pub version: u64,
+    /// Complete vec-env state ([`VecEnv::save_state`]).
+    pub venv: VecEnvState,
+    /// Opaque [`AlgoSampler::save_state`] blob (exploration RNG cursors).
+    pub hooks: Vec<u8>,
+    /// Progress counters carried across the respawn.
+    pub report: SamplerReport,
+}
+
+impl WorkerSnapshot {
+    /// Serialize into a checkpoint worker blob (see `util::bytes`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.version);
+        self.venv.write(&mut w);
+        w.put_bytes(&self.hooks);
+        w.put_u64(self.report.steps);
+        w.put_u64(self.report.episodes);
+        w.put_u64(self.report.chunks);
+        w.put_u64(self.report.policy_refreshes);
+        w.into_vec()
+    }
+
+    /// Parse a blob produced by [`WorkerSnapshot::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<WorkerSnapshot> {
+        let mut r = ByteReader::new(bytes);
+        let version = r.read_u64()?;
+        let venv = VecEnvState::read(&mut r)?;
+        let hooks = r.read_bytes()?.to_vec();
+        let report = SamplerReport {
+            steps: r.read_u64()?,
+            episodes: r.read_u64()?,
+            chunks: r.read_u64()?,
+            policy_refreshes: r.read_u64()?,
+        };
+        Ok(WorkerSnapshot {
+            version,
+            venv,
+            hooks,
+            report,
+        })
+    }
+}
+
+/// One worker's supervision lane, shared between the supervisor thread
+/// loop and the running worker. Lives across respawns: `ticks` is the
+/// worker's *lifetime* sim-tick counter (fault cells trigger on it, so a
+/// respawned worker does not re-arm a spent cell), `restarts` counts
+/// respawns, and `snapshot`/`pushed` together describe the most recent
+/// clean state and how far past it the worker has published.
+#[derive(Debug, Default)]
+pub struct WorkerLane {
+    /// Lifetime sim ticks across all incarnations (fault counter).
+    pub ticks: AtomicU64,
+    /// Chunks delivered to the queue since the last deposit.
+    pub pushed: AtomicU64,
+    /// Times this worker was respawned after a panic.
+    pub restarts: AtomicU64,
+    /// Latest clean snapshot (None until the first deposit).
+    pub snapshot: Mutex<Option<WorkerSnapshot>>,
+}
+
+impl WorkerLane {
+    /// Empty lane (no snapshot yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deposit a clean snapshot taken at a version-adoption point and
+    /// reset the delivered-chunk counter — the worker's recovery point
+    /// moves forward and nothing is pending past it.
+    pub fn deposit(
+        &self,
+        version: u64,
+        venv: &VecEnv,
+        hooks: &dyn AlgoSampler,
+        report: &SamplerReport,
+    ) {
+        let snap = WorkerSnapshot {
+            version,
+            venv: venv.save_state(),
+            hooks: hooks.save_state(),
+            report: report.clone(),
+        };
+        *plock(&self.snapshot) = Some(snap);
+        self.pushed.store(0, Ordering::SeqCst);
+    }
+
+    /// Clone the latest deposited snapshot (None before the first).
+    pub fn latest(&self) -> Option<WorkerSnapshot> {
+        plock(&self.snapshot).clone()
+    }
+}
+
+/// Control block a supervised sampler incarnation runs under: its lane,
+/// the snapshot to restore from (None on a fresh start), the number of
+/// already-delivered chunks to regenerate-and-drop, and the armed fault
+/// cells for this worker id.
+pub struct WorkerCtl {
+    /// This worker's supervision lane.
+    pub lane: Arc<WorkerLane>,
+    /// Snapshot to restore before the hot loop (respawn / resume).
+    pub restore: Option<WorkerSnapshot>,
+    /// Chunks already delivered under the restored snapshot: regenerate
+    /// them (identical RNG consumption) but do not push them again.
+    pub skip_chunks: u64,
+    /// Armed fault cells for this worker (None ⇒ zero-cost path).
+    pub fault: Option<Vec<Arc<FaultCell>>>,
+    /// Fleet-wide injected-fault counter (bumped by `fault::trip`).
+    pub faults_injected: Arc<AtomicU64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_snapshot() -> WorkerSnapshot {
+        let venv = VecEnv::from_registry("pendulum", 2, 7, 1).unwrap();
+        WorkerSnapshot {
+            version: 3,
+            venv: venv.save_state(),
+            hooks: vec![1, 2, 3, 4],
+            report: SamplerReport {
+                steps: 400,
+                episodes: 2,
+                chunks: 10,
+                policy_refreshes: 2,
+            },
+        }
+    }
+
+    #[test]
+    fn snapshot_bytes_round_trip_is_identity() {
+        let snap = sample_snapshot();
+        let back = WorkerSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn truncated_snapshot_blob_is_rejected() {
+        let bytes = sample_snapshot().to_bytes();
+        assert!(WorkerSnapshot::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn deposit_moves_the_recovery_point_and_clears_pushed() {
+        let lane = WorkerLane::new();
+        assert!(lane.latest().is_none());
+        lane.pushed.store(5, Ordering::SeqCst);
+
+        let venv = VecEnv::from_registry("pendulum", 2, 7, 1).unwrap();
+        let algo = crate::algo::ppo::Ppo::default();
+        let cfg = crate::coordinator::sampler::SamplerCfg {
+            id: 0,
+            seed: 7,
+            chunk_steps: 40,
+            sync_budget: None,
+            reward_scale: 1.0,
+        };
+        let hooks = crate::algo::api::Algorithm::make_sampler(&algo, &cfg, 2, 1);
+        let report = SamplerReport::default();
+        lane.deposit(4, &venv, hooks.as_ref(), &report);
+
+        let snap = lane.latest().expect("deposited");
+        assert_eq!(snap.version, 4);
+        assert_eq!(snap.venv, venv.save_state());
+        assert_eq!(lane.pushed.load(Ordering::SeqCst), 0);
+    }
+}

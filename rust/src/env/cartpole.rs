@@ -103,6 +103,17 @@ impl Env for CartPole {
             done: self.fallen(),
         }
     }
+
+    fn save_state(&self) -> Vec<f32> {
+        vec![self.x, self.x_dot, self.theta, self.theta_dot]
+    }
+
+    fn load_state(&mut self, state: &[f32]) {
+        self.x = state[0];
+        self.x_dot = state[1];
+        self.theta = state[2];
+        self.theta_dot = state[3];
+    }
 }
 
 #[cfg(test)]

@@ -212,6 +212,20 @@ impl Env for HalfCheetah {
             done: false,
         }
     }
+
+    fn save_state(&self) -> Vec<f32> {
+        // world dynamic state + the step counter (episodes cap at 1000,
+        // far inside f32's exact-integer range)
+        let mut s = self.world.save_state();
+        s.push(self.steps as f32);
+        s
+    }
+
+    fn load_state(&mut self, state: &[f32]) {
+        let (world, tail) = state.split_at(state.len() - 1);
+        self.world.load_state(world);
+        self.steps = tail[0] as usize;
+    }
 }
 
 #[cfg(test)]
@@ -289,6 +303,31 @@ mod tests {
         let s2 = e2.step(&a, &mut o2);
         assert_eq!(s1, s2);
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn state_round_trip_continues_bitwise() {
+        let mut live = HalfCheetah::default();
+        let mut rng = Pcg64::new(9);
+        let mut obs = [0.0f32; 17];
+        live.reset(&mut rng, &mut obs);
+        let a = [0.4f32, -0.3, 0.2, -0.1, 0.5, -0.2];
+        for _ in 0..40 {
+            live.step(&a, &mut obs);
+        }
+        let saved = live.save_state();
+        // restore into a FRESH instance (the checkpoint scenario)
+        let mut restored = HalfCheetah::default();
+        restored.load_state(&saved);
+        assert_eq!(restored.steps, live.steps);
+        let mut o1 = [0.0f32; 17];
+        let mut o2 = [0.0f32; 17];
+        for _ in 0..40 {
+            let s1 = live.step(&a, &mut o1);
+            let s2 = restored.step(&a, &mut o2);
+            assert_eq!(s1, s2);
+            assert_eq!(o1, o2);
+        }
     }
 
     #[test]

@@ -55,6 +55,20 @@ pub trait Env: Send {
 
     /// Environment name (for logs/metrics).
     fn name(&self) -> &'static str;
+
+    /// Serialize the env's complete dynamic state as flat f32s, such that
+    /// [`Env::load_state`] on a same-typed instance reproduces future
+    /// trajectories bitwise. Powers worker respawn snapshots and durable
+    /// checkpoints (`runtime::checkpoint`). The default returns empty —
+    /// fine for stateless test doubles, wrong for real envs, so every
+    /// registry env overrides it (asserted by the conformance-style
+    /// round-trip tests in `vec_env`).
+    fn save_state(&self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Restore state captured by [`Env::save_state`] on a same-typed env.
+    fn load_state(&mut self, _state: &[f32]) {}
 }
 
 /// Clip an action slice into [-1, 1] in place (sampler-side helper).

@@ -90,6 +90,15 @@ impl Env for Pendulum {
             done: false,
         }
     }
+
+    fn save_state(&self) -> Vec<f32> {
+        vec![self.theta, self.theta_dot]
+    }
+
+    fn load_state(&mut self, state: &[f32]) {
+        self.theta = state[0];
+        self.theta_dot = state[1];
+    }
 }
 
 #[cfg(test)]

@@ -371,6 +371,60 @@ impl World {
         }
     }
 
+    /// Serialize the world's complete dynamic state (body kinematics and
+    /// pending forces, joint motor torques and warm-start impulses,
+    /// contact warm-start impulses) as flat f32s. Geometry, masses and
+    /// `WorldCfg` are construction-time data and are NOT included: a
+    /// same-topology world restored via [`World::load_state`] continues
+    /// the trajectory bitwise (the checkpoint/respawn contract).
+    pub fn save_state(&self) -> Vec<f32> {
+        let mut out =
+            Vec::with_capacity(self.bodies.len() * 9 + self.joints.len() * 4 + self.contacts.len() * 2);
+        for b in &self.bodies {
+            out.extend_from_slice(&[
+                b.pos.x, b.pos.y, b.angle, b.vel.x, b.vel.y, b.omega, b.force.x, b.force.y,
+                b.torque,
+            ]);
+        }
+        for j in &self.joints {
+            out.extend_from_slice(&[j.motor_torque, j.impulse.x, j.impulse.y, j.limit_impulse]);
+        }
+        for c in &self.contacts {
+            out.extend_from_slice(&[c.normal_impulse, c.tangent_impulse]);
+        }
+        out
+    }
+
+    /// Restore dynamic state captured by [`World::save_state`] onto a
+    /// world with identical topology (same body/joint/contact counts).
+    pub fn load_state(&mut self, state: &[f32]) {
+        let expect = self.bodies.len() * 9 + self.joints.len() * 4 + self.contacts.len() * 2;
+        assert_eq!(state.len(), expect, "world state shape mismatch");
+        let mut it = state.iter().copied();
+        let mut next = || it.next().unwrap();
+        for b in &mut self.bodies {
+            b.pos.x = next();
+            b.pos.y = next();
+            b.angle = next();
+            b.vel.x = next();
+            b.vel.y = next();
+            b.omega = next();
+            b.force.x = next();
+            b.force.y = next();
+            b.torque = next();
+        }
+        for j in &mut self.joints {
+            j.motor_torque = next();
+            j.impulse.x = next();
+            j.impulse.y = next();
+            j.limit_impulse = next();
+        }
+        for c in &mut self.contacts {
+            c.normal_impulse = next();
+            c.tangent_impulse = next();
+        }
+    }
+
     /// Total mechanical energy (diagnostics / tests).
     pub fn energy(&self) -> f32 {
         self.bodies

@@ -140,6 +140,23 @@ impl Env for Reacher {
             done: false,
         }
     }
+
+    fn save_state(&self) -> Vec<f32> {
+        vec![
+            self.q[0],
+            self.q[1],
+            self.qd[0],
+            self.qd[1],
+            self.target[0],
+            self.target[1],
+        ]
+    }
+
+    fn load_state(&mut self, state: &[f32]) {
+        self.q = [state[0], state[1]];
+        self.qd = [state[2], state[3]];
+        self.target = [state[4], state[5]];
+    }
 }
 
 #[cfg(test)]

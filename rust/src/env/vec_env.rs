@@ -20,6 +20,7 @@
 //!     the single-env sampler loop used.
 
 use super::Env;
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::rng::Pcg64;
 
 /// Outcome of one lockstep tick for one env slot.
@@ -37,6 +38,73 @@ impl VecStepInfo {
     /// Episode boundary of any kind (caller must `reset_env` afterwards).
     pub fn ended(&self) -> bool {
         self.terminal || self.truncated
+    }
+}
+
+/// Complete restorable state of a [`VecEnv`]: per-env dynamics state
+/// ([`Env::save_state`]), per-env RNG registers, the contiguous
+/// observation buffer, and the episode counters. Restoring it onto a
+/// freshly constructed same-shape `VecEnv` continues every trajectory
+/// bitwise — the substrate of worker respawn snapshots and durable
+/// checkpoints.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VecEnvState {
+    /// Per-env `Env::save_state` payloads.
+    pub env_state: Vec<Vec<f32>>,
+    /// Per-env PCG64 `(state, inc)` registers.
+    pub rng: Vec<(u128, u128)>,
+    /// Row-major [M * obs_dim] raw observation buffer.
+    pub obs: Vec<f32>,
+    /// Per-env current-episode step counts.
+    pub ep_len: Vec<u64>,
+    /// Per-env current-episode raw returns.
+    pub ep_return: Vec<f32>,
+}
+
+impl VecEnvState {
+    /// Serialize into a checkpoint blob (see `util::bytes`).
+    pub fn write(&self, w: &mut ByteWriter) {
+        w.put_usize(self.env_state.len());
+        for s in &self.env_state {
+            w.put_f32s(s);
+        }
+        for &(state, inc) in &self.rng {
+            w.put_u128(state);
+            w.put_u128(inc);
+        }
+        w.put_f32s(&self.obs);
+        for &l in &self.ep_len {
+            w.put_u64(l);
+        }
+        w.put_f32s(&self.ep_return);
+    }
+
+    /// Deserialize a blob produced by [`VecEnvState::write`].
+    pub fn read(r: &mut ByteReader) -> anyhow::Result<VecEnvState> {
+        let m = r.read_usize()?;
+        let mut env_state = Vec::with_capacity(m);
+        for _ in 0..m {
+            env_state.push(r.read_f32s()?);
+        }
+        let mut rng = Vec::with_capacity(m);
+        for _ in 0..m {
+            let state = r.read_u128()?;
+            let inc = r.read_u128()?;
+            rng.push((state, inc));
+        }
+        let obs = r.read_f32s()?;
+        let mut ep_len = Vec::with_capacity(m);
+        for _ in 0..m {
+            ep_len.push(r.read_u64()?);
+        }
+        let ep_return = r.read_f32s()?;
+        Ok(VecEnvState {
+            env_state,
+            rng,
+            obs,
+            ep_len,
+            ep_return,
+        })
     }
 }
 
@@ -163,6 +231,46 @@ impl VecEnv {
         self.envs[i].reset(&mut self.rngs[i], row);
         self.ep_len[i] = 0;
         self.ep_return[i] = 0.0;
+    }
+
+    /// Capture the complete dynamic state of all M envs (dynamics, RNG
+    /// registers, observation buffer, episode counters).
+    pub fn save_state(&self) -> VecEnvState {
+        VecEnvState {
+            env_state: self.envs.iter().map(|e| e.save_state()).collect(),
+            rng: self.rngs.iter().map(|r| r.raw_state()).collect(),
+            obs: self.obs.clone(),
+            ep_len: self.ep_len.iter().map(|&l| l as u64).collect(),
+            ep_return: self.ep_return.clone(),
+        }
+    }
+
+    /// Restore state captured by [`VecEnv::save_state`] onto a same-shape
+    /// `VecEnv` (same env type and M). Future trajectories continue
+    /// bitwise from the captured point; callers must NOT `reset_all`
+    /// afterwards (that would re-draw initial states and advance RNGs).
+    pub fn load_state(&mut self, s: &VecEnvState) -> anyhow::Result<()> {
+        let m = self.envs.len();
+        anyhow::ensure!(
+            s.env_state.len() == m && s.rng.len() == m && s.obs.len() == m * self.obs_dim,
+            "VecEnv state shape mismatch: snapshot has {} envs / {} obs, this VecEnv has {} / {}",
+            s.env_state.len(),
+            s.obs.len(),
+            m,
+            m * self.obs_dim
+        );
+        for (e, st) in self.envs.iter_mut().zip(&s.env_state) {
+            e.load_state(st);
+        }
+        for (r, &(state, inc)) in self.rngs.iter_mut().zip(&s.rng) {
+            *r = Pcg64::from_raw(state, inc);
+        }
+        self.obs.copy_from_slice(&s.obs);
+        for (l, &v) in self.ep_len.iter_mut().zip(&s.ep_len) {
+            *l = v as usize;
+        }
+        self.ep_return.copy_from_slice(&s.ep_return);
+        Ok(())
     }
 
     /// Step all M envs in index order with `actions` ([M * act_dim],
@@ -336,6 +444,71 @@ mod tests {
             };
             assert_eq!(run(1), run(8), "{name}: env 0 trajectory depends on M");
         }
+    }
+
+    /// Every registry env must restore bitwise through the VecEnv
+    /// snapshot path (incl. serialization), mid-episode and across
+    /// resets — the contract worker respawn and checkpoints rely on.
+    #[test]
+    fn snapshot_round_trip_continues_bitwise_for_all_envs() {
+        for name in ENV_NAMES {
+            let m = 2;
+            let mut live = VecEnv::from_registry(name, m, 21, 1).unwrap();
+            live.reset_all();
+            let act_dim = live.act_dim();
+            let mut act_rng = Pcg64::with_stream(21, 500);
+            let mut actions = vec![0.0f32; m * act_dim];
+            let mut infos = vec![VecStepInfo::default(); m];
+            for _ in 0..13 {
+                act_rng.fill_uniform(&mut actions, -1.0, 1.0);
+                live.step_all(&actions, &mut infos);
+                for i in 0..m {
+                    if infos[i].ended() {
+                        live.reset_env(i);
+                    }
+                }
+            }
+            // serialize → deserialize → restore into a FRESH VecEnv
+            let snap = live.save_state();
+            let mut w = crate::util::bytes::ByteWriter::new();
+            snap.write(&mut w);
+            let buf = w.into_vec();
+            let mut r = crate::util::bytes::ByteReader::new(&buf);
+            let back = VecEnvState::read(&mut r).unwrap();
+            assert!(r.is_empty());
+            assert_eq!(snap, back);
+            let mut restored = VecEnv::from_registry(name, m, 999, 77).unwrap();
+            restored.load_state(&back).unwrap();
+            assert_eq!(live.obs(), restored.obs(), "{name}: obs after restore");
+            // both sides must now agree bitwise forever; pendulum/reacher
+            // cross a reset inside the window, halfcheetah (cap 1000) is
+            // clamped to keep the physics cost sane
+            let mut infos2 = vec![VecStepInfo::default(); m];
+            let ticks = (live.max_episode_steps() + 9).min(230);
+            for tick in 0..ticks {
+                act_rng.fill_uniform(&mut actions, -1.0, 1.0);
+                live.step_all(&actions, &mut infos);
+                restored.step_all(&actions, &mut infos2);
+                assert_eq!(infos, infos2, "{name} tick {tick}: infos diverged");
+                assert_eq!(live.obs(), restored.obs(), "{name} tick {tick}: obs diverged");
+                for i in 0..m {
+                    if infos[i].ended() {
+                        live.reset_env(i);
+                        restored.reset_env(i);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_shape_snapshot_rejected() {
+        let mut venv = VecEnv::from_registry("pendulum", 2, 3, 1).unwrap();
+        venv.reset_all();
+        let mut snap = venv.save_state();
+        snap.env_state.pop();
+        snap.rng.pop();
+        assert!(venv.load_state(&snap).is_err());
     }
 
     #[test]

@@ -33,6 +33,12 @@ impl<E: Env> Env for RewardScale<E> {
             done: s.done,
         }
     }
+    fn save_state(&self) -> Vec<f32> {
+        self.inner.save_state()
+    }
+    fn load_state(&mut self, state: &[f32]) {
+        self.inner.load_state(state)
+    }
 }
 
 /// Repeat each action `k` times, summing rewards (frame-skip at the
@@ -75,6 +81,12 @@ impl<E: Env> Env for ActionRepeat<E> {
             done: false,
         }
     }
+    fn save_state(&self) -> Vec<f32> {
+        self.inner.save_state()
+    }
+    fn load_state(&mut self, state: &[f32]) {
+        self.inner.load_state(state)
+    }
 }
 
 /// Clip observations into [-bound, bound] (guards the nets against the
@@ -109,6 +121,12 @@ impl<E: Env> Env for ObsClip<E> {
             *v = v.clamp(-self.bound, self.bound);
         }
         s
+    }
+    fn save_state(&self) -> Vec<f32> {
+        self.inner.save_state()
+    }
+    fn load_state(&mut self, state: &[f32]) {
+        self.inner.load_state(state)
     }
 }
 

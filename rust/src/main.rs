@@ -75,6 +75,19 @@ TRAIN FLAGS:
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo NAME            learner algorithm: ppo|ddpg|td3
   --sync                 synchronous barrier mode (ablation)
+  --checkpoint-every K   write a durable checkpoint after every K-th
+                         iteration into --checkpoint-dir (0 = off)
+  --checkpoint-dir DIR   checkpoint directory (default `checkpoints`)
+  --resume DIR           resume training from the newest checkpoint in
+                         DIR (topology + seed must match the checkpoint)
+  --max-restarts N       supervisor respawn budget per component after a
+                         panic (default 2; 0 = fail fast, PR 4 behavior)
+  --fault-inject SPEC    deterministic fault plan for chaos testing:
+                         `worker:1@tick:500,shard:0@dispatch:40` or
+                         `random:seed=7,count=2,horizon=1000`
+  --flip-schedule K      shared pool mode: flip the epoch gate every K
+                         fleet dispatches instead of at publish
+                         boundaries (0 = off; needs --infer-epoch pool)
   --learner-shards N     data-parallel learner shards (§6.2, PPO only)
   --epochs N / --lr F    PPO optimization knobs (PPO only)
   --out-dir DIR          write metrics.csv + params.bin + config.json
@@ -192,6 +205,18 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     if args.has("sync") {
         cfg.async_mode = false;
     }
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every)?;
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = d.to_string();
+    }
+    if let Some(d) = args.get("resume") {
+        cfg.resume = d.to_string();
+    }
+    if let Some(s) = args.get("fault-inject") {
+        cfg.fault_inject = s.to_string();
+    }
+    cfg.flip_schedule = args.u64_or("flip-schedule", cfg.flip_schedule)?;
+    cfg.max_restarts = args.usize_or("max-restarts", cfg.max_restarts)?;
     if let Some(d) = args.get("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -216,6 +241,13 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         pblk.as_secs_f64(),
         cblk.as_secs_f64()
     );
+    if result.restarts > 0 || result.faults_injected > 0 {
+        walle::log_info!(
+            "fleet health: {} supervisor respawn(s), {} scripted fault(s) fired",
+            result.restarts,
+            result.faults_injected
+        );
+    }
     if let Some(rep) = &result.infer {
         for line in rep.render().lines() {
             walle::log_info!("{line}");

@@ -62,6 +62,21 @@ impl ReplayBuffer {
         self.capacity
     }
 
+    /// Ring cursor `(len, head)` — checkpointed so a resumed run knows how
+    /// much replay data the interrupted run had accumulated (contents are
+    /// deliberately not persisted; see `runtime::checkpoint`).
+    pub fn cursor(&self) -> (usize, usize) {
+        (self.len, self.head)
+    }
+
+    /// Restore a [`ReplayBuffer::cursor`]. Only the counters move: the
+    /// backing storage stays zeroed, so off-policy resumes refill before
+    /// sampling quality recovers (documented in docs/OPERATIONS.md).
+    pub fn set_cursor(&mut self, len: usize, head: usize) {
+        self.len = len.min(self.capacity);
+        self.head = head % self.capacity;
+    }
+
     /// Insert one transition, overwriting the oldest when full.
     pub fn push(&mut self, obs: &[f32], act: &[f32], rew: f32, next_obs: &[f32], done: bool) {
         debug_assert_eq!(obs.len(), self.obs_dim);

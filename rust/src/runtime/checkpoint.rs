@@ -1,0 +1,269 @@
+//! Durable training checkpoints: periodic snapshots an interrupted run
+//! resumes from (`--checkpoint-every N` / `--resume <dir>`).
+//!
+//! A checkpoint captures everything the fleet needs to continue a run as
+//! if it had never stopped: the learner's full training state
+//! ([`crate::algo::api::LearnerDriver::save_state`] — parameters,
+//! optimizer moments, update RNG, normalizer, counters), one opaque
+//! snapshot blob per sampler worker (env dynamics + exploration RNG
+//! cursors + progress counters, serialized by the coordinator's
+//! supervisor), the policy-store version the snapshot was taken at, and
+//! a [`RunFingerprint`] so resume refuses checkpoints from a different
+//! topology.
+//!
+//! The orchestrator writes checkpoints at iteration boundaries — the
+//! sync-mode barrier where every worker has adopted the just-published
+//! version and all chunk buffers are empty, which is what makes the
+//! snapshot clean (no half-built chunks to persist). In sync mode a
+//! kill-then-resume run reproduces the exact per-env chunk streams of an
+//! uninterrupted run, bitwise.
+//!
+//! ## File format
+//!
+//! One file per snapshot, `ckpt-{iteration:06}.bin`, written atomically
+//! (`.tmp` + rename) so a crash mid-write never corrupts the latest
+//! durable snapshot. Little-endian layout via [`crate::util::bytes`]:
+//! magic, format version, fingerprint, iteration, store version, learner
+//! blob, worker-blob count, worker blobs. Readers reject wrong magic,
+//! unknown format versions, and truncated files.
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// First 4 bytes of every checkpoint file ("WALL-E checkpoint").
+const MAGIC: u32 = 0x57A1_1ECB;
+/// Bumped on any incompatible layout change; readers reject mismatches.
+const FORMAT_VERSION: u32 = 1;
+
+/// Identity of the run a checkpoint belongs to. Resume validates it
+/// against the live config: restoring per-worker RNG cursors under a
+/// different topology or seed would silently produce garbage streams, so
+/// a mismatch is a hard error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunFingerprint {
+    /// Environment name (`"pendulum"`, ...).
+    pub env: String,
+    /// Algorithm name (`"ppo"`, `"ddpg"`, `"td3"`).
+    pub algo: String,
+    /// Sampler worker count N.
+    pub samplers: usize,
+    /// Lockstep envs per worker M.
+    pub envs_per_sampler: usize,
+    /// Run seed (every RNG stream derives from it).
+    pub seed: u64,
+}
+
+impl RunFingerprint {
+    fn write(&self, w: &mut ByteWriter) {
+        w.put_str(&self.env);
+        w.put_str(&self.algo);
+        w.put_usize(self.samplers);
+        w.put_usize(self.envs_per_sampler);
+        w.put_u64(self.seed);
+    }
+
+    fn read(r: &mut ByteReader<'_>) -> Result<RunFingerprint> {
+        Ok(RunFingerprint {
+            env: r.read_str()?,
+            algo: r.read_str()?,
+            samplers: r.read_usize()?,
+            envs_per_sampler: r.read_usize()?,
+            seed: r.read_u64()?,
+        })
+    }
+}
+
+/// One durable training snapshot (see the module docs for semantics and
+/// the on-disk layout).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Run identity; resume refuses a mismatch.
+    pub fingerprint: RunFingerprint,
+    /// Training iterations completed when the snapshot was taken; resume
+    /// continues at this iteration index.
+    pub iteration: u64,
+    /// Policy-store version at the snapshot barrier. Resume re-seats the
+    /// store so the next publish lands at exactly this version, keeping
+    /// chunk `policy_version` labels bitwise-stable across the restart.
+    pub version: u64,
+    /// Learner training state ([`crate::algo::api::LearnerDriver::save_state`]).
+    pub learner: Vec<u8>,
+    /// Per-worker snapshot blobs, indexed by worker id (serialized
+    /// `coordinator::supervisor::WorkerSnapshot`s — opaque here so the
+    /// file format doesn't depend on coordinator internals).
+    pub workers: Vec<Vec<u8>>,
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u32(MAGIC);
+        w.put_u32(FORMAT_VERSION);
+        self.fingerprint.write(&mut w);
+        w.put_u64(self.iteration);
+        w.put_u64(self.version);
+        w.put_bytes(&self.learner);
+        w.put_usize(self.workers.len());
+        for blob in &self.workers {
+            w.put_bytes(blob);
+        }
+        w.into_vec()
+    }
+
+    /// Parse the on-disk byte layout, rejecting wrong magic, unknown
+    /// format versions, and truncation.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.read_u32()?;
+        anyhow::ensure!(magic == MAGIC, "not a checkpoint file (magic {magic:#x})");
+        let version = r.read_u32()?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported checkpoint format version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let fingerprint = RunFingerprint::read(&mut r)?;
+        let iteration = r.read_u64()?;
+        let store_version = r.read_u64()?;
+        let learner = r.read_bytes()?;
+        let n = r.read_usize()?;
+        anyhow::ensure!(
+            n <= r.remaining(),
+            "checkpoint claims {n} worker blobs but only {} bytes remain",
+            r.remaining()
+        );
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            workers.push(r.read_bytes()?);
+        }
+        Ok(Checkpoint {
+            fingerprint,
+            iteration,
+            version: store_version,
+            learner,
+            workers,
+        })
+    }
+
+    /// Write `ckpt-{iteration:06}.bin` into `dir` atomically (temp file +
+    /// rename, so readers never observe a half-written snapshot) and
+    /// return the final path. Creates `dir` if missing.
+    pub fn write_to(&self, dir: &Path) -> Result<PathBuf> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let name = format!("ckpt-{:06}.bin", self.iteration);
+        let tmp = dir.join(format!(".{name}.tmp"));
+        let path = dir.join(&name);
+        fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(path)
+    }
+}
+
+/// Load the newest checkpoint (highest iteration number) in `dir`.
+/// Errors when the directory has no `ckpt-*.bin` files or the newest one
+/// fails to parse — a corrupt latest snapshot should abort resume loudly,
+/// not silently fall back to older state.
+pub fn load_latest(dir: &Path) -> Result<Checkpoint> {
+    let mut best: Option<(u64, PathBuf)> = None;
+    let entries = fs::read_dir(dir)
+        .with_context(|| format!("reading checkpoint dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        let Some(iter) = name
+            .strip_prefix("ckpt-")
+            .and_then(|s| s.strip_suffix(".bin"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        let newer = match &best {
+            Some((b, _)) => iter > *b,
+            None => true,
+        };
+        if newer {
+            best = Some((iter, path));
+        }
+    }
+    let (_, path) =
+        best.ok_or_else(|| anyhow::anyhow!("no ckpt-*.bin files in {}", dir.display()))?;
+    let bytes =
+        fs::read(&path).with_context(|| format!("reading checkpoint {}", path.display()))?;
+    Checkpoint::from_bytes(&bytes)
+        .with_context(|| format!("parsing checkpoint {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(iter: u64) -> Checkpoint {
+        Checkpoint {
+            fingerprint: RunFingerprint {
+                env: "pendulum".into(),
+                algo: "ppo".into(),
+                samplers: 4,
+                envs_per_sampler: 2,
+                seed: 29,
+            },
+            iteration: iter,
+            version: iter + 1,
+            learner: vec![1, 2, 3, 4, 5],
+            workers: vec![vec![9, 8], vec![], vec![7]],
+        }
+    }
+
+    #[test]
+    fn bytes_round_trip_is_identity() {
+        let c = sample(12);
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn wrong_magic_and_truncation_rejected() {
+        let mut bytes = sample(3).to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        bytes[0] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn unknown_format_version_rejected() {
+        let mut bytes = sample(3).to_bytes();
+        bytes[4] = 0xEE; // format-version field follows the magic
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn write_then_load_latest_picks_highest_iteration() {
+        let dir = std::env::temp_dir().join("walle_ckpt_test");
+        let _ = fs::remove_dir_all(&dir);
+        for iter in [2u64, 10, 7] {
+            sample(iter).write_to(&dir).unwrap();
+        }
+        // stray files and half-written temps are ignored
+        fs::write(dir.join("notes.txt"), b"x").unwrap();
+        fs::write(dir.join(".ckpt-000099.bin.tmp"), b"partial").unwrap();
+        let latest = load_latest(&dir).unwrap();
+        assert_eq!(latest.iteration, 10);
+        assert_eq!(latest, sample(10));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_is_an_error() {
+        let dir = std::env::temp_dir().join("walle_ckpt_empty_test");
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        assert!(load_latest(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

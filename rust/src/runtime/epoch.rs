@@ -72,6 +72,15 @@ pub struct EpochLease {
 }
 
 struct GateState {
+    /// Ack period in dispatches (`--flip-schedule`; 0 = ack at every
+    /// dispatch boundary). With a period P, a shard acknowledges a
+    /// proposed epoch only when its dispatch count is a multiple of P, so
+    /// flips land on a deterministic dispatch schedule instead of
+    /// wherever the publish happened to race the serve loops.
+    schedule: u64,
+    /// Per-shard dispatch counter (lifetime; survives shard respawns so
+    /// the schedule stays monotonic across a revival).
+    dispatches: Vec<u64>,
     /// Current pool epoch (0 until the first snapshot lands).
     epoch: u64,
     /// Snapshot every shard serves under the current epoch.
@@ -146,8 +155,16 @@ pub struct EpochGate {
 
 impl EpochGate {
     pub fn new(shards: usize) -> EpochGate {
+        EpochGate::with_schedule(shards, 0)
+    }
+
+    /// A gate whose shards acknowledge proposals only every `schedule`
+    /// dispatches (0 = every dispatch boundary; see `--flip-schedule`).
+    pub fn with_schedule(shards: usize, schedule: u64) -> EpochGate {
         EpochGate {
             state: Mutex::new(GateState {
+                schedule,
+                dispatches: vec![0; shards],
                 epoch: 0,
                 cur: None,
                 proposed: None,
@@ -166,13 +183,19 @@ impl EpochGate {
     /// shard dispatches under the new version while another still serves
     /// the old one. Also blocks before the first publish (the pool has
     /// nothing to serve yet).
+    ///
+    /// With `--flip-schedule P`, a shard off its period keeps dispatching
+    /// under the current epoch while a proposal is parked — it only acks
+    /// (and blocks) when its dispatch count reaches a multiple of P.
     pub fn acquire(&self, shard: usize, store: &PolicyStore) -> EpochLease {
         let mut g = plock(&self.state);
+        g.dispatches[shard] += 1;
+        let at_boundary = g.schedule == 0 || g.dispatches[shard] % g.schedule == 0;
         let mut stalled: Option<Instant> = None;
         loop {
             let pending = g.observe(store);
             if g.cur.is_some() {
-                if !pending {
+                if !pending || (!at_boundary && !g.acked[shard]) {
                     return EpochLease {
                         snapshot: g.cur.clone().expect("checked above"),
                         epoch: g.epoch,
@@ -224,6 +247,23 @@ impl EpochGate {
         if g.proposed.is_some() && g.live.iter().any(|&l| l) && g.all_live_acked() {
             g.flip();
         }
+        self.changed.notify_all();
+    }
+
+    /// Re-register a revived shard (the supervisor respawns a panicked
+    /// serve loop and rejoins it here before serving resumes). The shard
+    /// comes back un-acked, so a proposal parked at the barrier now waits
+    /// for its next dispatch boundary too — the revived shard can never
+    /// observe a flip its peers haven't. Its dispatch counter survives
+    /// the restart, keeping `--flip-schedule` boundaries monotonic.
+    /// Idempotent.
+    pub fn join(&self, shard: usize) {
+        let mut g = plock(&self.state);
+        if g.live[shard] {
+            return;
+        }
+        g.live[shard] = true;
+        g.acked[shard] = false;
         self.changed.notify_all();
     }
 
@@ -355,6 +395,46 @@ mod tests {
         let lease = gate.acquire(1, &store);
         assert_eq!(lease.epoch, 2);
         assert_eq!(lease.snapshot.version, 3);
+        assert_eq!(gate.flips(), 1);
+    }
+
+    #[test]
+    fn join_after_leave_restores_barrier_participation() {
+        let store = store_with(1);
+        let gate = Arc::new(EpochGate::new(2));
+        gate.acquire(0, &store);
+        gate.acquire(1, &store);
+        gate.leave(1);
+        gate.join(1);
+        gate.join(1); // idempotent
+        store.publish(vec![1.0], NormSnapshot::identity(1));
+
+        let (g2, s2) = (gate.clone(), store.clone());
+        let h = thread::spawn(move || g2.acquire(0, &s2));
+        thread::sleep(Duration::from_millis(40));
+        // the revived shard is live again: the flip must wait for it
+        assert_eq!(gate.epoch(), 1);
+        assert!(gate.flip_pending());
+        let lease = gate.acquire(1, &store);
+        assert_eq!(lease.epoch, 2);
+        assert_eq!(h.join().unwrap().epoch, 2);
+    }
+
+    #[test]
+    fn flip_schedule_defers_the_ack_to_the_period_boundary() {
+        // schedule 4: the shard acks only on dispatches 4, 8, 12, ...
+        let store = store_with(1);
+        let gate = EpochGate::with_schedule(1, 4);
+        assert_eq!(gate.acquire(0, &store).epoch, 1); // dispatch 1: adopt
+        store.publish(vec![1.0], NormSnapshot::identity(1));
+        // dispatches 2 and 3 keep serving the old epoch past the publish
+        assert_eq!(gate.acquire(0, &store).epoch, 1);
+        assert_eq!(gate.acquire(0, &store).epoch, 1);
+        assert!(gate.flip_pending());
+        // dispatch 4 is the scheduled boundary: ack + flip
+        let lease = gate.acquire(0, &store);
+        assert_eq!(lease.epoch, 2);
+        assert_eq!(lease.snapshot.version, 2);
         assert_eq!(gate.flips(), 1);
     }
 

@@ -103,9 +103,10 @@ use crate::coordinator::metrics::InferenceReport;
 use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::runtime::epoch::{EpochGate, EpochMode};
 use crate::runtime::{BackendFactory, ServerActor};
+use crate::util::fault::FaultCell;
 use crate::util::{cv_wait, plock};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// When a shard dispatches a partial batch instead of waiting for the
@@ -362,10 +363,26 @@ struct QueueState {
     last_enqueue: Option<Instant>,
     /// Intra-window inter-arrival gap estimator (adaptive policy only).
     adaptive: AdaptiveWait,
-    /// Live client handles; the server exits when this reaches zero.
+    /// Live client handles; the server exits when this AND `holds` reach
+    /// zero.
     active_clients: usize,
+    /// Registration leases ([`InferenceServer::hold`]): a supervisor
+    /// respawning a panicked worker holds one so the momentary zero-client
+    /// window between the old client's drop and the respawned worker's
+    /// re-registration can't be mistaken for fleet shutdown. Holds never
+    /// submit, so they don't count toward the full-batch condition.
+    holds: usize,
     /// Set once the serve loop has exited: submits fail fast.
+    /// [`InferenceServer::revive`] clears it when a supervisor respawns
+    /// the serve thread.
     server_down: bool,
+}
+
+/// Scripted shard faults (chaos harness): armed cells checked against the
+/// lifetime dispatch counter, plus the fleet-wide injected-fault counter.
+struct ShardFaults {
+    cells: Vec<Arc<FaultCell>>,
+    injected: Arc<AtomicU64>,
 }
 
 struct ServerShared {
@@ -380,6 +397,13 @@ struct ServerShared {
     /// store independently, the `--infer-epoch shard` escape hatch and
     /// the standalone-server default).
     gate: Option<Arc<EpochGate>>,
+    /// Scripted fault cells (`--fault-inject`; unset = one lock-free
+    /// `get()` per dispatch and nothing else).
+    faults: OnceLock<ShardFaults>,
+    /// Lifetime dispatch counter — survives serve-thread respawns, so a
+    /// fault armed at dispatch D fires exactly once even when an earlier
+    /// fault already restarted the shard.
+    dispatches: AtomicU64,
 }
 
 /// One shard of the shared-inference pool: owns the request queue and (on
@@ -420,12 +444,15 @@ impl InferenceServer {
                     last_enqueue: None,
                     adaptive: AdaptiveWait::new(),
                     active_clients: 0,
+                    holds: 0,
                     server_down: false,
                 }),
                 submitted: Condvar::new(),
                 metrics: Mutex::new(InferenceReport::with_bounds(fleet_rows, hist_rows)),
                 hot_allocs: AtomicU64::new(0),
                 gate,
+                faults: OnceLock::new(),
+                dispatches: AtomicU64::new(0),
             }),
         }
     }
@@ -460,6 +487,39 @@ impl InferenceServer {
         }
     }
 
+    /// Take a registration lease: while any hold is alive the serve loop
+    /// treats a zero-client queue as "workers are between registrations"
+    /// (idle-waits) instead of "fleet shut down" (exits). Supervisors take
+    /// one hold per supervised worker so a respawn's momentary
+    /// drop-then-re-register window can't shut the shard down. Holds do
+    /// not affect batching — only the exit condition.
+    pub fn hold(&self) -> ClientHold {
+        plock(&self.shared.q).holds += 1;
+        ClientHold {
+            shared: self.shared.clone(),
+        }
+    }
+
+    /// Arm scripted fault cells against this shard's lifetime dispatch
+    /// counter (`--fault-inject`). Set-once: later calls are ignored.
+    /// `injected` is the fleet-wide injected-fault counter bumped when a
+    /// cell fires.
+    pub fn arm_faults(&self, cells: Vec<Arc<FaultCell>>, injected: Arc<AtomicU64>) {
+        let _ = self.shared.faults.set(ShardFaults { cells, injected });
+    }
+
+    /// Clear the down marker and rejoin the pool epoch gate — called by
+    /// the supervisor (and [`InferenceServer::serve_algo`] on entry)
+    /// before a respawned serve thread starts dispatching again, so
+    /// client submits stop failing fast and the revived shard
+    /// participates in flips.
+    pub fn revive(&self) {
+        plock(&self.shared.q).server_down = false;
+        if let Some(gate) = &self.shared.gate {
+            gate.join(self.shared.cfg.shard_id);
+        }
+    }
+
     /// Snapshot of the dispatch statistics (valid any time; final after
     /// the serve thread exits).
     pub fn report(&self) -> InferenceReport {
@@ -484,6 +544,9 @@ impl InferenceServer {
         // inside backend construction — must fail blocked clients
         // instead of stranding them on their completion slots
         let _guard = DownGuard(self);
+        // respawn path: clear a previous unwind's down marker and rejoin
+        // the flip barrier (no-ops on first entry)
+        self.revive();
         let actor = match algo.make_server_actor(factory, self.shared.cfg.fleet_rows) {
             Ok(a) => a,
             Err(e) => {
@@ -563,8 +626,14 @@ impl InferenceServer {
         let mut obs_buf = vec![0.0f32; cap * o];
         let mut noise_buf = vec![0.0f32; cap * a];
         // recycled batch vec: swapped with the pending queue per dispatch,
-        // so steady state moves requests without allocating
-        let mut batch: Vec<PendingReq> = Vec::new();
+        // so steady state moves requests without allocating. Guarded: a
+        // panic between gather and scatter (injected fault, backend bug)
+        // fails the in-flight requests on unwind instead of dropping them
+        // silently — a client whose request dies mid-dispatch gets an Err
+        // promptly even if a supervisor revives the shard before the
+        // client's next liveness probe.
+        let mut batch = BatchGuard { reqs: Vec::new() };
+        let shard_label = format!("infer shard {}", sh.cfg.shard_id);
         // Idle-wait period. The gate has no push channel from the store
         // (proposals are discovered by shards polling), so a gated shard
         // polls its idle branch fast enough that a momentarily idle shard
@@ -583,7 +652,7 @@ impl InferenceServer {
                 let mut q = plock(&sh.q);
                 loop {
                     if q.pending.is_empty() {
-                        if q.active_clients == 0 {
+                        if q.active_clients == 0 && q.holds == 0 {
                             drop(q);
                             self.fail_all("inference server shut down");
                             return Ok(());
@@ -621,12 +690,22 @@ impl InferenceServer {
                         q.pending_rows = 0;
                         q.first_enqueue = None;
                         q.last_enqueue = None;
-                        std::mem::swap(&mut q.pending, &mut batch);
+                        std::mem::swap(&mut q.pending, &mut batch.reqs);
                         break (full, budget_us);
                     }
                     q = cv_wait(&sh.submitted, q, deadline - now);
                 }
             };
+
+            // ---- scripted fault point (chaos harness) ------------------
+            // One lifetime dispatch number per gathered batch; an armed
+            // cell panics here, exercising the same unwind the supervisor
+            // must heal for a genuine serve-loop defect. Off = one
+            // lock-free `get()` and a branch.
+            let dispatch_no = sh.dispatches.fetch_add(1, Ordering::SeqCst) + 1;
+            if let Some(f) = sh.faults.get() {
+                crate::util::fault::trip(&f.cells, dispatch_no, &f.injected, &shard_label);
+            }
 
             // ---- one policy observation per dispatch -------------------
             // Pool epochs: the gate hands every shard the same snapshot
@@ -658,7 +737,7 @@ impl InferenceServer {
             let busy_t0 = crate::util::timer::thread_cpu_secs();
             debug_assert!(rows <= cap, "batch of {rows} rows exceeds capacity {cap}");
             let mut cursor = 0usize;
-            for req in &batch {
+            for req in batch.iter() {
                 let n = req.rows * o;
                 obs_buf[cursor * o..cursor * o + n].copy_from_slice(&req.bufs.obs[..n]);
                 for r in 0..req.rows {
@@ -710,7 +789,7 @@ impl InferenceServer {
                 }
                 m.dispatch_rows.record(rows as f64);
                 m.fill_ratio.record(rows as f64 / sh.cfg.fleet_rows as f64);
-                for req in &batch {
+                for req in batch.iter() {
                     m.queue_wait_us
                         .record((dispatched_at - req.enqueued).as_secs_f64() * 1e6);
                 }
@@ -774,6 +853,43 @@ impl InferenceServer {
                     }
                 }
             }
+        }
+    }
+}
+
+/// The serve loop's in-flight batch. Between gather and scatter the
+/// requests live here, OUTSIDE the queue — so `fail_all` (which drains
+/// the queue) cannot see them. If the serve thread unwinds in that window
+/// (injected fault, backend panic), this guard's `Drop` fails each one,
+/// closing the race where a fast supervisor revive clears `server_down`
+/// before the blocked clients' next liveness probe and they wait forever
+/// on slots nobody will ever fill.
+struct BatchGuard {
+    reqs: Vec<PendingReq>,
+}
+
+impl std::ops::Deref for BatchGuard {
+    type Target = Vec<PendingReq>;
+    fn deref(&self) -> &Vec<PendingReq> {
+        &self.reqs
+    }
+}
+
+impl std::ops::DerefMut for BatchGuard {
+    fn deref_mut(&mut self) -> &mut Vec<PendingReq> {
+        &mut self.reqs
+    }
+}
+
+impl Drop for BatchGuard {
+    fn drop(&mut self) {
+        // empty on every normal exit path (scatter drains it); only an
+        // unwind mid-dispatch reaches here with requests in flight
+        for req in self.reqs.drain(..) {
+            reply(
+                &req.reply,
+                Err("inference dispatch aborted mid-flight".to_string()),
+            );
         }
     }
 }
@@ -920,6 +1036,26 @@ impl Drop for ActorClient {
     }
 }
 
+/// Registration lease handed out by [`InferenceServer::hold`]. While any
+/// lease is alive the shard's serve loop keeps running through
+/// zero-client windows instead of treating them as fleet shutdown. Drop
+/// all holds (the supervisor does, once its workers are permanently done)
+/// to let the shard exit cleanly.
+pub struct ClientHold {
+    shared: Arc<ServerShared>,
+}
+
+impl Drop for ClientHold {
+    fn drop(&mut self) {
+        let mut q = plock(&self.shared.q);
+        q.holds = q.holds.saturating_sub(1);
+        drop(q);
+        // wake a serve loop idling on the lease so it can re-check the
+        // exit condition
+        self.shared.submitted.notify_all();
+    }
+}
+
 // ------------------------------------------------------------------ pool
 
 /// Configuration of the sharded pool (derived from `TrainConfig` by the
@@ -955,11 +1091,22 @@ pub struct InferencePool {
 }
 
 impl InferencePool {
+    /// A pool whose epoch gate (if any) acks flips at every dispatch
+    /// boundary — the default, lowest-latency adoption.
     pub fn new(cfg: InferencePoolCfg) -> InferencePool {
+        Self::with_flip_schedule(cfg, 0)
+    }
+
+    /// A pool whose epoch gate acks pending flips only on dispatch
+    /// numbers divisible by `flip_schedule` (`--flip-schedule`; 0 = every
+    /// boundary). Pinning flips to a coarse deterministic tick schedule
+    /// makes async-mode version adoption reproducible run-to-run. No-op
+    /// under `EpochMode::Shard` (no gate to schedule).
+    pub fn with_flip_schedule(cfg: InferencePoolCfg, flip_schedule: u64) -> InferencePool {
         let workers = cfg.workers.max(1);
         let s = cfg.shards.clamp(1, workers);
         let gate = match cfg.epoch {
-            EpochMode::Pool => Some(Arc::new(EpochGate::new(s))),
+            EpochMode::Pool => Some(Arc::new(EpochGate::with_schedule(s, flip_schedule))),
             EpochMode::Shard => None,
         };
         // shard i serves workers {w : w % s == i}: n/s workers each, the
@@ -1721,5 +1868,140 @@ mod tests {
         );
         drop(client);
         assert!(h.join().is_err(), "serve thread must have panicked");
+    }
+
+    // ------------------------------------------------- chaos + respawn
+
+    /// Chaos harness end-to-end on one shard: the armed cell panics the
+    /// serve thread at its scripted dispatch, the blocked client errors
+    /// out promptly, and re-serving the SAME server object (what the
+    /// supervisor's respawn does) heals it — the lifetime dispatch
+    /// counter keeps the spent cell from re-firing, and `revive` clears
+    /// the down marker so the client's retry loop eventually succeeds.
+    #[test]
+    fn armed_fault_kills_dispatch_and_respawn_heals_the_shard() {
+        let nf = factory(3, 1);
+        let store = published_store(&nf);
+        let srv = Arc::new(server(1, 10));
+        let injected = Arc::new(AtomicU64::new(0));
+        srv.arm_faults(vec![Arc::new(FaultCell::new(2))], injected.clone());
+        let mut client = srv.client();
+
+        let (srv2, store2) = (srv.clone(), store.clone());
+        let h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+        // dispatch 1 is clean; dispatch 2 trips the cell and the blocked
+        // client unwinds with an error instead of hanging
+        client.act(&[0.0, 0.0, 0.0], &[0.0]).unwrap();
+        assert!(client.act(&[0.0, 0.0, 0.0], &[0.0]).is_err());
+        assert!(h.join().is_err(), "fault must panic the serve thread");
+        assert_eq!(injected.load(Ordering::SeqCst), 1);
+
+        // supervisor respawn: same server, fresh serve thread
+        let (srv2, store2) = (srv.clone(), store.clone());
+        let h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+        // the worker side retries (acts fail fast until the revive lands)
+        let mut healed = false;
+        for _ in 0..500 {
+            if client.act(&[0.0, 0.0, 0.0], &[0.0]).is_ok() {
+                healed = true;
+                break;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(healed, "respawned shard must serve again");
+        assert_eq!(
+            injected.load(Ordering::SeqCst),
+            1,
+            "spent cell must not re-fire after the respawn"
+        );
+        drop(client);
+        h.join().unwrap().unwrap();
+    }
+
+    /// A registration lease keeps the serve loop alive through a
+    /// zero-client window (a respawning worker re-registers moments
+    /// later) and through client turnover; dropping the last hold lets
+    /// the shard exit cleanly.
+    #[test]
+    fn hold_keeps_server_alive_through_zero_client_window() {
+        let nf = factory(3, 1);
+        let store = published_store(&nf);
+        let srv = Arc::new(server(1, 10));
+        let hold = srv.hold();
+        let (srv2, store2) = (srv.clone(), store.clone());
+        let h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+        // no clients registered at all: the hold alone keeps it idling
+        thread::sleep(Duration::from_millis(40));
+        assert!(!h.is_finished(), "serve loop exited despite a live hold");
+        // a late registration (the respawned worker) is served normally
+        let mut client = srv.client();
+        client.act(&[0.0, 0.0, 0.0], &[0.0]).unwrap();
+        drop(client);
+        thread::sleep(Duration::from_millis(40));
+        assert!(!h.is_finished(), "hold must outlast individual clients");
+        drop(hold);
+        h.join().unwrap().unwrap();
+    }
+
+    /// A panic mid-dispatch (requests already gathered OUT of the queue)
+    /// combined with an immediate revive must still fail the in-flight
+    /// requests: the batch guard replies on unwind, so the client never
+    /// waits on a slot nobody will fill even though `server_down` is
+    /// cleared again before its next liveness probe.
+    #[test]
+    fn fast_revive_after_mid_dispatch_panic_does_not_strand_clients() {
+        let nf = factory(3, 1);
+        let store = published_store(&nf);
+        let srv = Arc::new(server(1, 10));
+        let injected = Arc::new(AtomicU64::new(0));
+        srv.arm_faults(vec![Arc::new(FaultCell::new(1))], injected.clone());
+        let mut client = srv.client();
+        let hold = srv.hold();
+
+        // respawn loop tighter than the client's 50ms liveness probe: the
+        // down window is far too short for the probe to observe it
+        let (srv2, store2) = (srv.clone(), store.clone());
+        let supervisor = thread::spawn(move || loop {
+            let f = factory(3, 1);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                srv2.serve_ppo(&f, &store2)
+            }));
+            match r {
+                Ok(done) => break done,
+                Err(_) => continue, // immediate respawn, no backoff
+            }
+        });
+
+        // first act dies to the fault mid-dispatch; the retry succeeds on
+        // the respawned serve thread
+        let t0 = Instant::now();
+        assert!(client.act(&[0.0, 0.0, 0.0], &[0.0]).is_err());
+        let mut healed = false;
+        for _ in 0..500 {
+            if client.act(&[0.0, 0.0, 0.0], &[0.0]).is_ok() {
+                healed = true;
+                break;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(healed, "client must recover on the respawned shard");
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "client stalled across the revive: {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(injected.load(Ordering::SeqCst), 1);
+        drop(client);
+        drop(hold);
+        supervisor.join().unwrap().unwrap();
     }
 }

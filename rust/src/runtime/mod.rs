@@ -42,6 +42,7 @@
 //! learner publishes mid-run.
 
 pub mod artifacts;
+pub mod checkpoint;
 pub mod epoch;
 pub mod inference_server;
 pub mod native_backend;

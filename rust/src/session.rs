@@ -219,6 +219,46 @@ impl SessionBuilder {
         self.set(move |c| c.max_staleness = n)
     }
 
+    /// Write a durable checkpoint after every `every`-th iteration into
+    /// `dir` (learner state + per-worker RNG/env snapshots; see
+    /// `runtime::checkpoint`). `every = 0` disables checkpointing.
+    pub fn checkpoint(self, every: usize, dir: &str) -> Self {
+        let d = dir.to_string();
+        self.set(move |c| {
+            c.checkpoint_every = every;
+            c.checkpoint_dir = d;
+        })
+    }
+
+    /// Resume training from the newest checkpoint in `dir`. The
+    /// checkpoint's fingerprint (env, algorithm, fleet shape, seed) must
+    /// match this session's config.
+    pub fn resume(self, dir: &str) -> Self {
+        let d = dir.to_string();
+        self.set(move |c| c.resume = d)
+    }
+
+    /// Supervisor respawn budget per component after a panic (default 2;
+    /// 0 = fail fast on the first panic).
+    pub fn max_restarts(self, n: usize) -> Self {
+        self.set(move |c| c.max_restarts = n)
+    }
+
+    /// Deterministic fault plan for chaos testing, e.g.
+    /// `"worker:1@tick:500,shard:0@dispatch:40"` or
+    /// `"random:seed=7,count=2,horizon=1000"`. Empty = no injection.
+    pub fn fault_inject(self, spec: &str) -> Self {
+        let s = spec.to_string();
+        self.set(move |c| c.fault_inject = s)
+    }
+
+    /// Shared-pool scheduled epoch flips: flip the pool epoch gate every
+    /// `k` fleet dispatches instead of at publish boundaries (0 = off;
+    /// requires shared inference with the pool epoch gate).
+    pub fn flip_schedule(self, k: u64) -> Self {
+        self.set(move |c| c.flip_schedule = k)
+    }
+
     /// Artifacts directory for the XLA backend.
     pub fn artifacts_dir(self, dir: &str) -> Self {
         let d = dir.to_string();

@@ -1,0 +1,231 @@
+//! Tiny little-endian byte (de)serializer for durable state.
+//!
+//! The offline crate set has no `serde`/`bincode`, so checkpoint files
+//! and opaque sampler-state blobs are written through this hand-rolled
+//! codec: fixed-width little-endian scalars plus `u64`-length-prefixed
+//! slices. The reader is strictly bounds-checked and returns `Err`
+//! instead of panicking on truncated or corrupt input, so a damaged
+//! checkpoint surfaces as a clean resume error rather than a crash.
+
+use anyhow::{bail, Result};
+
+/// Append-only byte sink; every scalar is written little-endian.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Consume the writer and return its buffer.
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Write a `u32`.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `u64`.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `u128`.
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a `usize` (as `u64`; the codebase targets 64-bit hosts).
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Write an `f32` (bit pattern, so round-trips are bitwise).
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write an `f64` (bit pattern, so round-trips are bitwise).
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Write a length-prefixed raw byte slice.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Write a length-prefixed `f32` slice (element count, then bits).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Write a length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+/// Bounds-checked reader over a [`ByteWriter`]-produced buffer.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader positioned at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True when the buffer is fully consumed.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated buffer: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u32`.
+    pub fn read_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64`.
+    pub fn read_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a `u128`.
+    pub fn read_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    /// Read a `usize` (stored as `u64`).
+    pub fn read_usize(&mut self) -> Result<usize> {
+        Ok(self.read_u64()? as usize)
+    }
+
+    /// Read an `f32`.
+    pub fn read_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read an `f64`.
+    pub fn read_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a length-prefixed raw byte slice.
+    pub fn read_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.read_u64()? as usize;
+        self.take(n)
+    }
+
+    /// Read a length-prefixed `f32` vector.
+    pub fn read_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.read_u64()? as usize;
+        // sanity cap: element count cannot exceed remaining bytes / 4
+        if n > self.remaining() / 4 {
+            bail!("corrupt f32 slice length {n} at offset {}", self.pos);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.read_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn read_str(&mut self) -> Result<String> {
+        let b = self.read_bytes()?;
+        Ok(String::from_utf8(b.to_vec())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trip_is_bitwise() {
+        let mut w = ByteWriter::new();
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 7);
+        w.put_u128(u128::MAX / 3);
+        w.put_usize(42);
+        w.put_f32(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_str("chunk");
+        w.put_f32s(&[1.5, -2.25, f32::INFINITY]);
+        w.put_bytes(&[9, 8, 7]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.read_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.read_u64().unwrap(), u64::MAX - 7);
+        assert_eq!(r.read_u128().unwrap(), u128::MAX / 3);
+        assert_eq!(r.read_usize().unwrap(), 42);
+        assert_eq!(r.read_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert!(r.read_f64().unwrap().is_nan());
+        assert_eq!(r.read_str().unwrap(), "chunk");
+        assert_eq!(r.read_f32s().unwrap(), vec![1.5, -2.25, f32::INFINITY]);
+        assert_eq!(r.read_bytes().unwrap(), &[9, 8, 7]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_input_errors_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_u64(1234);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf[..5]);
+        assert!(r.read_u64().is_err());
+    }
+
+    #[test]
+    fn corrupt_slice_length_is_rejected() {
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX); // absurd element count
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.read_f32s().is_err());
+        let mut r2 = ByteReader::new(&buf);
+        assert!(r2.read_bytes().is_err());
+    }
+}

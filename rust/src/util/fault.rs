@@ -1,0 +1,388 @@
+//! Deterministic fault-injection plans for the chaos harness.
+//!
+//! A [`FaultPlan`] describes *which* fleet component dies and *when*, in
+//! terms the run can reproduce exactly: sampler workers die at a lifetime
+//! sim-tick count, inference shards die at a dispatch count. Two spellings
+//! are accepted by [`FaultPlan::parse`]:
+//!
+//! * explicit — `worker:1@tick:500,shard:0@dispatch:40`
+//! * seeded random — `random:seed=7,count=2,horizon=1000` (events are
+//!   drawn with the repo's own PCG64 when the plan is compiled against a
+//!   concrete fleet shape, so the same spec + shape always yields the
+//!   same deaths)
+//!
+//! [`FaultPlan::compile`] lowers a plan onto a concrete `(workers,
+//! shards)` fleet as per-component [`FaultCell`] lists. Injection points
+//! in the sampler / serve hot loops hold an `Option` over those lists, so
+//! the disabled path costs one branch on `None` and nothing else. A cell
+//! fires **once** (atomic swap), then stays spent across respawns — the
+//! supervisor restarts the component and the plan does not re-kill it.
+//!
+//! Firing is a real `panic!` through [`trip`], not a simulated error
+//! return: the chaos suite exercises the exact unwind paths (drop guards,
+//! poison-tolerant locks, supervisor catch) that a genuine defect would.
+
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Which component class a fault event targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A sampler worker; `at` counts lifetime sim ticks.
+    Worker,
+    /// An inference shard; `at` counts dispatches.
+    Shard,
+}
+
+/// One scripted death: component `index` of class `site` dies the first
+/// time its progress counter reaches `at`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Component class.
+    pub site: FaultSite,
+    /// Worker id or shard index.
+    pub index: usize,
+    /// Progress counter value (sim tick / dispatch) at which to fire.
+    pub at: u64,
+}
+
+/// A parsed fault plan: either an explicit event list or a seeded random
+/// recipe expanded at [`FaultPlan::compile`] time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultPlan {
+    /// Events taken verbatim from the spec.
+    Explicit(Vec<FaultEvent>),
+    /// `count` events drawn uniformly over all components and
+    /// `[1, horizon]` trigger points from `Pcg64::with_stream(seed,
+    /// FAULT_STREAM)`.
+    Random {
+        /// RNG seed for the draw.
+        seed: u64,
+        /// Number of events to draw.
+        count: usize,
+        /// Inclusive upper bound on trigger counters.
+        horizon: u64,
+    },
+}
+
+/// RNG stream id reserved for random fault plans.
+const FAULT_STREAM: u64 = 0xFA17;
+
+impl FaultPlan {
+    /// Parse a `--fault-inject` spec. Empty input yields an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::Explicit(Vec::new()));
+        }
+        if let Some(rest) = spec.strip_prefix("random:") {
+            return Self::parse_random(rest);
+        }
+        let mut events = Vec::new();
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            let (lhs, rhs) = tok
+                .split_once('@')
+                .with_context(|| format!("fault event `{tok}`: expected site:idx@counter:at"))?;
+            let (site_s, idx_s) = lhs
+                .split_once(':')
+                .with_context(|| format!("fault event `{tok}`: expected site:idx before @"))?;
+            let (unit_s, at_s) = rhs
+                .split_once(':')
+                .with_context(|| format!("fault event `{tok}`: expected counter:at after @"))?;
+            let site = match site_s {
+                "worker" => FaultSite::Worker,
+                "shard" => FaultSite::Shard,
+                other => bail!("fault event `{tok}`: unknown site `{other}` (worker|shard)"),
+            };
+            let expect_unit = match site {
+                FaultSite::Worker => "tick",
+                FaultSite::Shard => "dispatch",
+            };
+            if unit_s != expect_unit {
+                bail!("fault event `{tok}`: {site_s} faults use `{expect_unit}`, got `{unit_s}`");
+            }
+            let index: usize = idx_s
+                .parse()
+                .with_context(|| format!("fault event `{tok}`: bad index `{idx_s}`"))?;
+            let at: u64 = at_s
+                .parse()
+                .with_context(|| format!("fault event `{tok}`: bad trigger `{at_s}`"))?;
+            if at == 0 {
+                bail!("fault event `{tok}`: trigger counters start at 1");
+            }
+            events.push(FaultEvent { site, index, at });
+        }
+        Ok(FaultPlan::Explicit(events))
+    }
+
+    fn parse_random(rest: &str) -> Result<FaultPlan> {
+        let (mut seed, mut count, mut horizon) = (0u64, 1usize, 1000u64);
+        for kv in rest.split(',') {
+            let kv = kv.trim();
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("random fault spec `{kv}`: expected key=value"))?;
+            match k {
+                "seed" => seed = v.parse().with_context(|| format!("bad seed `{v}`"))?,
+                "count" => count = v.parse().with_context(|| format!("bad count `{v}`"))?,
+                "horizon" => horizon = v.parse().with_context(|| format!("bad horizon `{v}`"))?,
+                other => bail!("random fault spec: unknown key `{other}` (seed|count|horizon)"),
+            }
+        }
+        if horizon == 0 {
+            bail!("random fault spec: horizon must be >= 1");
+        }
+        Ok(FaultPlan::Random {
+            seed,
+            count,
+            horizon,
+        })
+    }
+
+    /// True when the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            FaultPlan::Explicit(ev) => ev.is_empty(),
+            FaultPlan::Random { count, .. } => *count == 0,
+        }
+    }
+
+    /// Lower the plan onto a concrete fleet shape. Explicit events are
+    /// bounds-checked against it; random plans are expanded here (same
+    /// spec + shape ⇒ same events). Returns one armed cell list per
+    /// worker and per shard.
+    pub fn compile(&self, workers: usize, shards: usize) -> Result<CompiledFaults> {
+        let events: Vec<FaultEvent> = match self {
+            FaultPlan::Explicit(ev) => ev.clone(),
+            FaultPlan::Random {
+                seed,
+                count,
+                horizon,
+            } => {
+                let mut rng = Pcg64::with_stream(*seed, FAULT_STREAM);
+                (0..*count)
+                    .map(|_| {
+                        let slot = rng.below(workers + shards.max(1));
+                        let at = 1 + rng.next_u64() % horizon;
+                        if slot < workers {
+                            FaultEvent {
+                                site: FaultSite::Worker,
+                                index: slot,
+                                at,
+                            }
+                        } else {
+                            FaultEvent {
+                                site: FaultSite::Shard,
+                                index: (slot - workers) % shards.max(1),
+                                at,
+                            }
+                        }
+                    })
+                    .collect()
+            }
+        };
+        let mut compiled = CompiledFaults {
+            workers: vec![Vec::new(); workers],
+            shards: vec![Vec::new(); shards],
+            planned: events.len() as u64,
+        };
+        for ev in &events {
+            let (lanes, bound) = match ev.site {
+                FaultSite::Worker => (&mut compiled.workers, workers),
+                FaultSite::Shard => (&mut compiled.shards, shards),
+            };
+            if ev.index >= bound {
+                bail!(
+                    "fault plan targets {:?} {} but the fleet has {}",
+                    ev.site,
+                    ev.index,
+                    bound
+                );
+            }
+            lanes[ev.index].push(Arc::new(FaultCell::new(ev.at)));
+        }
+        Ok(compiled)
+    }
+}
+
+/// One armed trigger: fires the first time the owning component's
+/// progress counter reaches `at`, then stays spent forever (respawned
+/// components are not re-killed by the same event).
+#[derive(Debug)]
+pub struct FaultCell {
+    at: u64,
+    fired: AtomicBool,
+}
+
+impl FaultCell {
+    /// Cell armed at counter value `at`.
+    pub fn new(at: u64) -> Self {
+        Self {
+            at,
+            fired: AtomicBool::new(false),
+        }
+    }
+
+    /// Trigger point this cell is armed at.
+    pub fn at(&self) -> u64 {
+        self.at
+    }
+
+    /// True exactly once: the first call with `counter >= at`.
+    pub fn should_fire(&self, counter: u64) -> bool {
+        counter >= self.at && !self.fired.swap(true, Ordering::SeqCst)
+    }
+}
+
+/// A [`FaultPlan`] lowered onto a concrete fleet: per-component armed
+/// cells plus the planned event total (for end-of-run assertions).
+#[derive(Debug, Default)]
+pub struct CompiledFaults {
+    /// Armed cells per worker id.
+    pub workers: Vec<Vec<Arc<FaultCell>>>,
+    /// Armed cells per shard index.
+    pub shards: Vec<Vec<Arc<FaultCell>>>,
+    /// Total events the plan schedules.
+    pub planned: u64,
+}
+
+impl CompiledFaults {
+    /// Cells for worker `id` (empty ⇒ hand the hot loop `None`).
+    pub fn worker_cells(&self, id: usize) -> Option<Vec<Arc<FaultCell>>> {
+        let cells = self.workers.get(id)?.clone();
+        if cells.is_empty() {
+            None
+        } else {
+            Some(cells)
+        }
+    }
+
+    /// Cells for shard `idx` (empty ⇒ hand the serve loop `None`).
+    pub fn shard_cells(&self, idx: usize) -> Option<Vec<Arc<FaultCell>>> {
+        let cells = self.shards.get(idx)?.clone();
+        if cells.is_empty() {
+            None
+        } else {
+            Some(cells)
+        }
+    }
+}
+
+/// Injection-point helper: if any armed cell fires at `counter`, bump the
+/// fleet-wide counter and panic with a recognizable payload. Call sites
+/// gate this behind `Option::Some`, so a run without a plan pays one
+/// branch per tick and nothing else.
+pub fn trip(cells: &[Arc<FaultCell>], counter: u64, injected: &AtomicU64, what: &str) {
+    for cell in cells {
+        if cell.should_fire(counter) {
+            injected.fetch_add(1, Ordering::SeqCst);
+            panic!("fault-injection: {what} tripped at {counter} (armed at {})", cell.at());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_explicit_plan() {
+        let p = FaultPlan::parse("worker:1@tick:500, shard:0@dispatch:40").unwrap();
+        assert_eq!(
+            p,
+            FaultPlan::Explicit(vec![
+                FaultEvent {
+                    site: FaultSite::Worker,
+                    index: 1,
+                    at: 500
+                },
+                FaultEvent {
+                    site: FaultSite::Shard,
+                    index: 0,
+                    at: 40
+                },
+            ])
+        );
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    fn empty_spec_is_empty_plan() {
+        let p = FaultPlan::parse("  ").unwrap();
+        assert!(p.is_empty());
+        let c = p.compile(4, 2).unwrap();
+        assert_eq!(c.planned, 0);
+        assert!(c.worker_cells(0).is_none());
+        assert!(c.shard_cells(1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "worker:1",                 // no trigger
+            "worker:1@dispatch:5",      // wrong counter unit
+            "shard:0@tick:5",           // wrong counter unit
+            "learner:0@tick:5",         // unknown site
+            "worker:x@tick:5",          // bad index
+            "worker:1@tick:0",          // counters start at 1
+            "random:seed=1,horizon=0",  // degenerate horizon
+            "random:seed=1,period=3",   // unknown key
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn compile_bounds_checks_the_fleet() {
+        let p = FaultPlan::parse("worker:4@tick:10").unwrap();
+        assert!(p.compile(4, 2).is_err());
+        let p = FaultPlan::parse("shard:2@dispatch:10").unwrap();
+        assert!(p.compile(4, 2).is_err());
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_per_shape() {
+        let p = FaultPlan::parse("random:seed=7,count=5,horizon=100").unwrap();
+        let a = p.compile(4, 2).unwrap();
+        let b = p.compile(4, 2).unwrap();
+        assert_eq!(a.planned, 5);
+        let ats = |c: &CompiledFaults| -> Vec<Vec<u64>> {
+            c.workers
+                .iter()
+                .chain(c.shards.iter())
+                .map(|cells| cells.iter().map(|f| f.at()).collect())
+                .collect()
+        };
+        assert_eq!(ats(&a), ats(&b));
+        // every drawn trigger honors the horizon
+        assert!(ats(&a).iter().flatten().all(|&t| (1..=100).contains(&t)));
+    }
+
+    #[test]
+    fn cell_fires_exactly_once() {
+        let cell = FaultCell::new(10);
+        assert!(!cell.should_fire(9));
+        assert!(cell.should_fire(10));
+        assert!(!cell.should_fire(10));
+        assert!(!cell.should_fire(11)); // spent for good — respawns survive
+    }
+
+    #[test]
+    fn trip_panics_and_counts() {
+        let cells = vec![Arc::new(FaultCell::new(3))];
+        let injected = AtomicU64::new(0);
+        trip(&cells, 2, &injected, "worker 0");
+        assert_eq!(injected.load(Ordering::SeqCst), 0);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            trip(&cells, 3, &injected, "worker 0");
+        }));
+        assert!(err.is_err());
+        assert_eq!(injected.load(Ordering::SeqCst), 1);
+        // spent: calling again is a no-op
+        trip(&cells, 4, &injected, "worker 0");
+        assert_eq!(injected.load(Ordering::SeqCst), 1);
+    }
+}

@@ -114,6 +114,17 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Raw accumulator registers `(n, mean, m2)` for checkpointing.
+    pub fn raw(&self) -> (u64, f64, f64) {
+        (self.n, self.mean, self.m2)
+    }
+
+    /// Rebuild an accumulator from [`Welford::raw`] output (bitwise
+    /// resume of the running moments).
+    pub fn from_raw(n: u64, mean: f64, m2: f64) -> Self {
+        Self { n, mean, m2 }
+    }
+
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;

@@ -1,0 +1,205 @@
+//! Chaos suite: deterministic fault injection against the full
+//! coordinator (the tentpole acceptance runs). Every test drives the
+//! REAL topology — N sampler workers, the sharded inference pool, the
+//! learner — with scripted kills from `--fault-inject`, and checks the
+//! self-healing contract:
+//!
+//! * the run completes and the restart/fault counters match the plan;
+//! * in sync mode the run's output is BITWISE identical to a fault-free
+//!   run (supervised respawn restores the worker's RNG lanes and replays
+//!   already-delivered chunks without re-pushing them, and the learner
+//!   folds chunks in canonical order, so arrival timing cannot leak in);
+//! * kill-then-resume from the latest durable checkpoint reproduces the
+//!   uninterrupted run bitwise.
+//!
+//! CI runs this file under a hard `timeout` (see the chaos job): a
+//! supervision bug that deadlocks shows up as a timeout kill, not a
+//! silently hung pipeline.
+
+use walle::config::{InferShards, InferWait, InferenceMode, TrainConfig};
+use walle::coordinator::metrics::MetricsLog;
+use walle::coordinator::orchestrator;
+use walle::runtime::make_factory;
+
+/// The acceptance fleet: sync barrier mode, N=4 workers x M=2 envs,
+/// S=2 inference shards, 640 samples/iteration in 40-step chunks.
+fn acceptance_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::preset("pendulum");
+    cfg.backend = walle::config::Backend::Native;
+    cfg.samplers = 4;
+    cfg.envs_per_sampler = 2;
+    cfg.async_mode = false;
+    cfg.inference_mode = InferenceMode::Shared;
+    cfg.infer_shards = InferShards::Fixed(2);
+    cfg.infer_wait = InferWait::Fixed(500);
+    cfg.samples_per_iter = 640;
+    cfg.chunk_steps = 40;
+    cfg.iterations = 3;
+    cfg.hidden = vec![16, 16];
+    cfg.ppo.epochs = 2;
+    cfg.ppo.minibatch = 128;
+    cfg
+}
+
+fn run_cfg(cfg: &TrainConfig) -> orchestrator::RunResult {
+    let factory = make_factory(cfg).unwrap();
+    let mut log = MetricsLog::quiet();
+    orchestrator::run(cfg, factory.as_ref(), &mut log).unwrap()
+}
+
+/// Tentpole acceptance: kill one sampler worker AND one inference shard
+/// mid-run per a scripted plan. The supervisor respawns both, the run
+/// completes, the counters match the plan exactly, and the final policy
+/// parameters are bitwise identical to a fault-free run — the strongest
+/// externally observable witness that every per-env chunk stream the
+/// learner consumed was bitwise identical.
+#[test]
+fn scripted_worker_and_shard_kills_heal_bitwise() {
+    let clean = acceptance_cfg();
+    let reference = run_cfg(&clean);
+    assert_eq!(reference.metrics.len(), 3);
+    assert_eq!(reference.restarts, 0);
+
+    let mut faulted_cfg = acceptance_cfg();
+    // worker 1 dies at lifetime tick 100 (mid first iteration: 80 ticks
+    // per version); shard 0 dies at its 60th dispatch
+    faulted_cfg.fault_inject = "worker:1@tick:100,shard:0@dispatch:60".into();
+    let faulted = run_cfg(&faulted_cfg);
+
+    assert_eq!(faulted.metrics.len(), 3, "faulted run must complete");
+    assert_eq!(faulted.faults_injected, 2, "both scripted cells must fire");
+    assert_eq!(faulted.restarts, 2, "one respawn per kill");
+    assert_eq!(
+        faulted.final_params, reference.final_params,
+        "self-healed run must be bitwise identical to the fault-free run"
+    );
+
+    // satellite 6: the merged inference report carries the fleet-health
+    // counters through render + json
+    let rep = faulted.infer.expect("shared run must carry a report");
+    assert_eq!(rep.restarts, 2);
+    assert_eq!(rep.faults_injected, 2);
+    let rendered = rep.render();
+    assert!(rendered.contains("2 restarts"), "render: {rendered}");
+    assert!(rendered.contains("2 scripted faults fired"), "render: {rendered}");
+    let json = rep.to_json().to_string();
+    assert!(json.contains("\"restarts\":2"), "json: {json}");
+    assert!(json.contains("\"faults_injected\":2"), "json: {json}");
+}
+
+/// Kill-then-resume acceptance: checkpoint every iteration, then start a
+/// fresh fleet from the second checkpoint (as if the process had been
+/// killed after iteration 2) and replay the remainder. The resumed run
+/// must land on the same final parameters bitwise as the uninterrupted
+/// reference — learner state, policy-store version, and every worker's
+/// RNG/env cursors all survived the round trip.
+#[test]
+fn kill_then_resume_reproduces_reference_bitwise() {
+    let dir = std::env::temp_dir().join("walle_chaos_resume");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut cfg = acceptance_cfg();
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+    let full = run_cfg(&cfg);
+    assert_eq!(full.checkpoint_write_us.len(), 3, "one checkpoint per iteration");
+    let rep = full.infer.expect("shared run must carry a report");
+    assert_eq!(
+        rep.checkpoint_write_us.count(),
+        3,
+        "checkpoint write timings must ride the merged report"
+    );
+
+    // "kill" after iteration 2: resume from ckpt-000002 by removing the
+    // last snapshot so load_latest picks the second one
+    std::fs::remove_file(dir.join("ckpt-000003.bin")).unwrap();
+    let mut resume_cfg = acceptance_cfg();
+    resume_cfg.resume = dir.to_str().unwrap().to_string();
+    let resumed = run_cfg(&resume_cfg);
+
+    assert_eq!(resumed.metrics.len(), 1, "only the final iteration reruns");
+    assert_eq!(
+        resumed.final_params, full.final_params,
+        "resume must reproduce the uninterrupted run bitwise"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Faults during a checkpointed run: the healed run's checkpoints are as
+/// good as a healthy run's — resuming from one reproduces the healthy
+/// reference bitwise even though the checkpoint was written by a fleet
+/// that had already respawned a worker.
+#[test]
+fn resume_from_checkpoint_written_after_a_fault_is_clean() {
+    let dir = std::env::temp_dir().join("walle_chaos_faulted_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let clean = acceptance_cfg();
+    let reference = run_cfg(&clean);
+
+    let mut cfg = acceptance_cfg();
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_dir = dir.to_str().unwrap().to_string();
+    cfg.fault_inject = "worker:2@tick:100".into();
+    let faulted = run_cfg(&cfg);
+    assert_eq!(faulted.restarts, 1);
+    assert_eq!(faulted.final_params, reference.final_params);
+
+    std::fs::remove_file(dir.join("ckpt-000003.bin")).unwrap();
+    let mut resume_cfg = acceptance_cfg();
+    resume_cfg.resume = dir.to_str().unwrap().to_string();
+    let resumed = run_cfg(&resume_cfg);
+    assert_eq!(
+        resumed.final_params, reference.final_params,
+        "a checkpoint written after self-healing must resume bitwise clean"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Seeded random fault plans expand deterministically against the fleet
+/// shape and heal like scripted ones: the run completes with exactly the
+/// planned number of fired cells.
+#[test]
+fn random_fault_plan_heals_under_default_budget() {
+    let mut cfg = acceptance_cfg();
+    cfg.infer_shards = InferShards::Fixed(1);
+    // one random kill somewhere in the first ~50 progress units of a
+    // worker or the shard — fires well inside the run
+    cfg.fault_inject = "random:seed=7,count=1,horizon=50".into();
+    let r = run_cfg(&cfg);
+    assert_eq!(r.metrics.len(), 3, "randomly faulted run must complete");
+    assert_eq!(r.faults_injected, 1);
+    assert_eq!(r.restarts, 1);
+}
+
+/// Async-mode healing: the same scripted worker kill under the
+/// free-running architecture completes with the counters matching the
+/// plan. (Bitwise equality is a sync-mode guarantee only — async chunk
+/// interleaving is timing-dependent by design.)
+#[test]
+fn async_scripted_kill_heals() {
+    let mut cfg = acceptance_cfg();
+    cfg.async_mode = true;
+    cfg.fault_inject = "worker:0@tick:150".into();
+    let r = run_cfg(&cfg);
+    assert_eq!(r.metrics.len(), 3);
+    assert_eq!(r.faults_injected, 1);
+    assert_eq!(r.restarts, 1);
+    let total_steps: u64 = r.sampler_reports.iter().map(|s| s.steps).sum();
+    assert!(total_steps > 0);
+}
+
+/// Budget exhaustion is a clean abort, not a hang: three kills against a
+/// budget of one make the run fail loudly while every thread joins
+/// (this test finishing at all IS the no-deadlock assertion; CI's hard
+/// timeout backstops it).
+#[test]
+fn budget_exhaustion_aborts_cleanly() {
+    let mut cfg = acceptance_cfg();
+    cfg.max_restarts = 1;
+    cfg.fault_inject = "worker:3@tick:40,worker:3@tick:80,worker:3@tick:120".into();
+    let factory = make_factory(&cfg).unwrap();
+    let mut log = MetricsLog::quiet();
+    let r = orchestrator::run(&cfg, factory.as_ref(), &mut log);
+    assert!(r.is_err(), "exhausted budget must fail the run");
+}
