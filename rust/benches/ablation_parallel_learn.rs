@@ -1,118 +1,247 @@
-//! Ablation (further-work §6.2): data-parallel policy learning via
-//! gradient sharding — split each minibatch across S shards, compute
-//! per-shard gradients with the `grad_ppo` entry, weighted-average, apply
-//! once with `apply_grads`.
+//! Off-policy parallel-learner ablation (PR 8): the grained DDPG/TD3
+//! minibatch gradient swept over a batch x learner-threads x
+//! replay-shards grid (halfcheetah shapes: 17 -> 64x64 -> 6).
 //!
-//! This bench verifies the two claims that make §6.2 viable:
-//!   1. equivalence — sharded updates track the fused single-learner
-//!      update numerically;
-//!   2. cost accounting — measures the overhead of the split (grad
-//!      staging + averaging) that any parallel execution would amortize.
+//! Two claims are on trial:
+//!   1. determinism — within every (algo, batch, S) cell the updated
+//!      parameters are BITWISE identical across L ∈ {1, 2, 4}: grains
+//!      recombine under a fixed-order tree reduction, so the thread
+//!      count is a pure wall-clock knob. Asserted, not eyeballed.
+//!   2. throughput — per-update wall time across the grid, merged into
+//!      BENCH_micro.json as the `parallel_learn` section (schema in
+//!      docs/BENCHMARKS.md) so the perf trajectory is recorded across
+//!      commits.
 //!
 //!     cargo bench --bench ablation_parallel_learn
 
-use walle::algo::gae::gae;
-use walle::algo::ppo::{ppo_update, ppo_update_sharded};
-use walle::algo::rollout::{ChunkEnd, ExperienceChunk, PpoDataset};
+use std::collections::BTreeMap;
+use walle::algo::ddpg::ddpg_update_grained;
+use walle::algo::td3::Td3Learner;
 use walle::bench::harness::Bench;
-use walle::config::{DdpgCfg, PpoCfg};
-use walle::runtime::native_backend::NativeFactory;
-use walle::runtime::{BackendFactory, PpoLearnerBackend, PpoTrainState};
+use walle::config::{DdpgCfg, ReplayStrategy, Td3Cfg};
+use walle::nn::adam::AdamCfg;
+use walle::nn::layout::{actor_layout, critic_layout};
+use walle::nn::mlp::NetShape;
+use walle::replay::shard::{ReplayRng, ShardedReplay};
+use walle::runtime::DdpgTrainState;
+use walle::util::json::Json;
 use walle::util::rng::Pcg64;
 
-fn dataset(n: usize, obs_dim: usize, act_dim: usize) -> PpoDataset {
-    let mut rng = Pcg64::new(7);
-    let chunk = ExperienceChunk {
-        sampler_id: 0,
-        env_slot: 0,
-        policy_version: 0,
-        obs: (0..n * obs_dim).map(|_| rng.normal()).collect(),
-        act: (0..n * act_dim).map(|_| rng.normal()).collect(),
-        rew: (0..n).map(|_| rng.normal()).collect(),
-        logp: (0..n).map(|_| -8.0 - rng.next_f32()).collect(),
-        value: (0..n).map(|_| rng.normal()).collect(),
-        end: ChunkEnd::Truncated,
-        bootstrap_value: 0.0,
-        episode_returns: vec![],
-        episode_lengths: vec![],
-        obs_stats: None,
-        busy_secs: 0.0,
+const OBS: usize = 17;
+const ACT: usize = 6;
+const HIDDEN: [usize; 2] = [64, 64];
+/// Transitions pre-filled into every cell's replay window.
+const FILL: usize = 8192;
+
+const BATCHES: [usize; 2] = [256, 1024];
+const SHARDS: [usize; 2] = [1, 4];
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn filled_replay(shards: usize) -> ShardedReplay {
+    let replay = ShardedReplay::new(FILL, OBS, ACT, shards, ReplayStrategy::Uniform);
+    let mut rng = Pcg64::new(5);
+    let mut obs = vec![0.0f32; OBS];
+    let mut next = vec![0.0f32; OBS];
+    let mut act = vec![0.0f32; ACT];
+    for i in 0..FILL {
+        rng.fill_normal(&mut obs);
+        rng.fill_normal(&mut next);
+        rng.fill_normal(&mut act);
+        replay.push(&obs, &act, rng.normal(), &next, i % 200 == 199);
+    }
+    replay
+}
+
+fn fill_td3(l: &Td3Learner) {
+    let mut rng = Pcg64::new(5);
+    let mut obs = vec![0.0f32; OBS];
+    let mut next = vec![0.0f32; OBS];
+    let mut act = vec![0.0f32; ACT];
+    for i in 0..FILL {
+        rng.fill_normal(&mut obs);
+        rng.fill_normal(&mut next);
+        rng.fill_normal(&mut act);
+        l.replay().push(&obs, &act, rng.normal(), &next, i % 200 == 199);
+    }
+}
+
+/// Bit pattern of the post-update DDPG nets after `updates` grained
+/// rounds — the determinism witness compared across thread counts.
+fn ddpg_fingerprint(batch: usize, shards: usize, threads: usize, updates: usize) -> Vec<u32> {
+    let alayout = actor_layout(OBS, ACT, &HIDDEN);
+    let clayout = critic_layout(OBS, ACT, &HIDDEN);
+    let shape = NetShape::new(OBS, ACT, &HIDDEN);
+    let mut init = Pcg64::new(11);
+    let mut state =
+        DdpgTrainState::new(alayout.init_flat(&mut init), clayout.init_flat(&mut init));
+    let replay = filled_replay(shards);
+    let mut rng = ReplayRng::new(9);
+    let cfg = DdpgCfg {
+        batch,
+        warmup_steps: 0,
+        updates_per_iter: updates,
+        ..Default::default()
     };
-    PpoDataset::assemble(&[chunk], obs_dim, act_dim, |r, v, c| {
-        Ok(gae(r, v, c, 0.99, 0.95))
-    })
-    .unwrap()
+    ddpg_update_grained(
+        &mut state, &replay, &cfg, &mut rng, &alayout, &clayout, &shape,
+        AdamCfg::default(), threads,
+    )
+    .unwrap();
+    state
+        .actor
+        .iter()
+        .chain(state.critic.iter())
+        .map(|p| p.to_bits())
+        .collect()
+}
+
+/// Same witness for TD3 (twin critics + delayed actor through the
+/// learner's own grained update path).
+fn td3_fingerprint(batch: usize, shards: usize, threads: usize, updates: usize) -> Vec<u32> {
+    let mut l = Td3Learner::with_topology(
+        OBS, ACT, &HIDDEN, FILL, 11, shards, ReplayStrategy::Uniform, threads,
+    );
+    fill_td3(&l);
+    let cfg = Td3Cfg {
+        batch,
+        warmup_steps: 0,
+        updates_per_iter: updates,
+        ..Default::default()
+    };
+    l.update(&cfg).unwrap();
+    l.state
+        .actor
+        .iter()
+        .chain(l.state.critic1.iter())
+        .chain(l.state.critic2.iter())
+        .map(|p| p.to_bits())
+        .collect()
+}
+
+fn time_ddpg(batch: usize, shards: usize, threads: usize) -> f64 {
+    let alayout = actor_layout(OBS, ACT, &HIDDEN);
+    let clayout = critic_layout(OBS, ACT, &HIDDEN);
+    let shape = NetShape::new(OBS, ACT, &HIDDEN);
+    let mut init = Pcg64::new(11);
+    let mut state =
+        DdpgTrainState::new(alayout.init_flat(&mut init), clayout.init_flat(&mut init));
+    let replay = filled_replay(shards);
+    let mut rng = ReplayRng::new(9);
+    let cfg = DdpgCfg {
+        batch,
+        warmup_steps: 0,
+        updates_per_iter: 1,
+        ..Default::default()
+    };
+    let r = Bench::new(&format!("ddpg update B={batch} S={shards} L={threads}"))
+        .warmup(2)
+        .samples(8)
+        .run(|| {
+            ddpg_update_grained(
+                &mut state, &replay, &cfg, &mut rng, &alayout, &clayout, &shape,
+                AdamCfg::default(), threads,
+            )
+            .unwrap();
+        });
+    r.summary().mean
+}
+
+fn time_td3(batch: usize, shards: usize, threads: usize) -> f64 {
+    let mut l = Td3Learner::with_topology(
+        OBS, ACT, &HIDDEN, FILL, 11, shards, ReplayStrategy::Uniform, threads,
+    );
+    fill_td3(&l);
+    let cfg = Td3Cfg {
+        batch,
+        warmup_steps: 0,
+        updates_per_iter: 1,
+        ..Default::default()
+    };
+    let r = Bench::new(&format!("td3  update B={batch} S={shards} L={threads}"))
+        .warmup(2)
+        .samples(8)
+        .run(|| {
+            l.update(&cfg).unwrap();
+        });
+    r.summary().mean
 }
 
 fn main() -> anyhow::Result<()> {
-    let (o, a) = (17usize, 6usize);
-    let f = NativeFactory::new(o, a, &[64, 64], PpoCfg::default(), DdpgCfg::default());
-    let cfg = PpoCfg {
-        epochs: 1,
-        minibatch: 512,
-        norm_adv: false,
-        ..Default::default()
-    };
-    let n = 4096;
+    println!("== PR 8 ablation: grained off-policy update, batch x L x S grid ==");
+    let mut grid: Vec<Json> = Vec::new();
 
-    println!("== §6.2 ablation: sharded vs fused PPO update (halfcheetah shapes) ==");
-
-    // ---- 1. equivalence
-    let flat = f.init_ppo_params(0);
-    let mut fused_backend = f.make_ppo_learner()?;
-    let mut fused_state = PpoTrainState::new(flat.clone());
-    let mut ds = dataset(n, o, a);
-    ppo_update(fused_backend.as_mut(), &mut fused_state, &mut ds, &cfg, 1e-3, &mut Pcg64::new(3))?;
-
-    let mut sharded: Vec<Box<dyn PpoLearnerBackend>> =
-        (0..4).map(|_| f.make_ppo_learner().unwrap()).collect();
-    let mut sharded_state = PpoTrainState::new(flat);
-    let mut ds2 = dataset(n, o, a);
-    // shard minibatch = full/4 so the union covers the same rows per step
-    let scfg = PpoCfg {
-        minibatch: cfg.minibatch / 4,
-        ..cfg.clone()
-    };
-    ppo_update_sharded(&mut sharded, &mut sharded_state, &mut ds2, &scfg, 1e-3, &mut Pcg64::new(3))?;
-
-    let diff = fused_state
-        .flat
-        .iter()
-        .zip(&sharded_state.flat)
-        .map(|(x, y)| (x - y).abs())
-        .fold(0.0f32, f32::max);
-    println!("max |fused - sharded(4)| after 1 epoch: {diff:.2e}");
-    assert!(diff < 2e-2, "sharded update diverged from fused: {diff}");
-
-    // ---- 2. timing
-    for shards in [1usize, 2, 4] {
-        let mut backends: Vec<Box<dyn PpoLearnerBackend>> =
-            (0..shards).map(|_| f.make_ppo_learner().unwrap()).collect();
-        let mut state = PpoTrainState::new(f.init_ppo_params(1));
-        let mut ds = dataset(n, o, a);
-        let scfg = PpoCfg {
-            minibatch: cfg.minibatch / shards,
-            ..cfg.clone()
-        };
-        Bench::new(&format!("ppo_update sharded x{shards} ({n} samples)"))
-            .warmup(1)
-            .samples(5)
-            .run(|| {
-                ppo_update_sharded(&mut backends, &mut state, &mut ds, &scfg, 1e-3, &mut Pcg64::new(5))
-                    .unwrap();
-            });
+    for algo in ["ddpg", "td3"] {
+        for &batch in &BATCHES {
+            for &shards in &SHARDS {
+                // determinism: L = 1 defines the cell's reference bits
+                let reference = match algo {
+                    "ddpg" => ddpg_fingerprint(batch, shards, 1, 3),
+                    _ => td3_fingerprint(batch, shards, 1, 3),
+                };
+                let mut l1_secs = f64::NAN;
+                for &threads in &THREADS {
+                    let bits = match algo {
+                        "ddpg" => ddpg_fingerprint(batch, shards, threads, 3),
+                        _ => td3_fingerprint(batch, shards, threads, 3),
+                    };
+                    assert_eq!(
+                        bits, reference,
+                        "{algo} B={batch} S={shards}: L={threads} diverged from L=1 \
+                         — the tree reduction is no longer order-fixed"
+                    );
+                    let secs = match algo {
+                        "ddpg" => time_ddpg(batch, shards, threads),
+                        _ => time_td3(batch, shards, threads),
+                    };
+                    if threads == 1 {
+                        l1_secs = secs;
+                    }
+                    grid.push(Json::obj(vec![
+                        ("algo", Json::Str(algo.into())),
+                        ("batch", Json::Num(batch as f64)),
+                        ("replay_shards", Json::Num(shards as f64)),
+                        ("learner_threads", Json::Num(threads as f64)),
+                        ("update_secs", Json::Num(secs)),
+                        ("updates_per_sec", Json::Num(1.0 / secs)),
+                        ("speedup_vs_l1", Json::Num(l1_secs / secs)),
+                        ("bitwise_equal_l1", Json::Bool(true)),
+                    ]));
+                }
+            }
+        }
     }
-    let mut backend = f.make_ppo_learner()?;
-    let mut state = PpoTrainState::new(f.init_ppo_params(1));
-    let mut ds = dataset(n, o, a);
-    Bench::new(&format!("ppo_update fused ({n} samples)"))
-        .warmup(1)
-        .samples(5)
-        .run(|| {
-            ppo_update(backend.as_mut(), &mut state, &mut ds, &cfg, 1e-3, &mut Pcg64::new(5))
-                .unwrap();
-        });
+    println!(
+        "\nall {} grid cells published bitwise-identical parameters across L = {:?}",
+        grid.len(),
+        THREADS
+    );
 
-    println!("\n(shard gradients here run sequentially — the bench isolates the\n split/average overhead a threaded §6.2 learner would amortize)");
+    // merge the section into BENCH_micro.json (preserving whatever the
+    // micro bench last wrote; see docs/BENCHMARKS.md for the schema)
+    let section = Json::obj(vec![
+        ("obs_dim", Json::Num(OBS as f64)),
+        ("act_dim", Json::Num(ACT as f64)),
+        (
+            "hidden",
+            Json::Arr(HIDDEN.iter().map(|&h| Json::Num(h as f64)).collect()),
+        ),
+        ("fill", Json::Num(FILL as f64)),
+        ("grid", Json::Arr(grid)),
+    ]);
+    let mut root = std::fs::read_to_string("BENCH_micro.json")
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| match j {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_else(|| {
+            let mut m = BTreeMap::new();
+            m.insert("bench".to_string(), Json::Str("micro".into()));
+            m
+        });
+    root.insert("parallel_learn".to_string(), section);
+    std::fs::write("BENCH_micro.json", Json::Obj(root).to_string())?;
+    println!("merged parallel_learn section into BENCH_micro.json");
     Ok(())
 }

@@ -150,6 +150,13 @@ pub trait LearnerDriver {
 
     /// Run one training iteration (collect → update → publish). Errors
     /// when the experience queue closed.
+    ///
+    /// Off-policy drivers may fan the per-minibatch gradient computation
+    /// over `cfg.learner_threads` workers, but the contract is strict:
+    /// the published parameters must be **bitwise identical for every
+    /// thread count** (fixed grain decomposition + fixed-order tree
+    /// reduction — see `coordinator::learn_pool`), so `--learner-threads`
+    /// is a pure wall-clock knob, never a semantics knob.
     fn iteration(
         &mut self,
         iter: usize,
@@ -194,7 +201,7 @@ pub trait Algorithm: Send + Sync {
     /// round-trips).
     fn id(&self) -> Algo;
 
-    /// CLI/JSON name (`"ppo"`, `"ddpg"`, `"td3"`).
+    /// CLI/JSON name (`"ppo"`, `"ddpg"`, `"td3"`, `"sac"`).
     fn name(&self) -> &'static str {
         self.id().name()
     }
@@ -284,6 +291,9 @@ pub fn algorithm_from_config(cfg: &TrainConfig) -> Box<dyn Algorithm> {
         Algo::Td3 => Box::new(crate::algo::td3::Td3 {
             cfg: cfg.td3.clone(),
         }),
+        Algo::Sac => Box::new(crate::algo::sac::Sac {
+            cfg: cfg.sac.clone(),
+        }),
     }
 }
 
@@ -293,7 +303,7 @@ mod tests {
 
     #[test]
     fn registry_round_trips_every_algo() {
-        for algo in [Algo::Ppo, Algo::Ddpg, Algo::Td3] {
+        for algo in [Algo::Ppo, Algo::Ddpg, Algo::Td3, Algo::Sac] {
             let mut cfg = TrainConfig::preset("pendulum");
             cfg.algo = algo;
             let a = algorithm_from_config(&cfg);
@@ -309,7 +319,7 @@ mod tests {
     #[test]
     fn hyperparams_render_as_json_objects() {
         let cfg = TrainConfig::preset("pendulum");
-        for algo in [Algo::Ppo, Algo::Ddpg, Algo::Td3] {
+        for algo in [Algo::Ppo, Algo::Ddpg, Algo::Td3, Algo::Sac] {
             let mut c = cfg.clone();
             c.algo = algo;
             let a = algorithm_from_config(&c);

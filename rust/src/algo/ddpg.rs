@@ -6,9 +6,14 @@
 use crate::algo::api::{AlgoSampler, Algorithm, LearnerDriver, TickLanes};
 use crate::algo::normalizer::NormSnapshot;
 use crate::algo::rollout::{ChunkBuf, ChunkEnd};
-use crate::config::{Algo, DdpgCfg, TrainConfig};
+use crate::config::{Algo, Backend, DdpgCfg, TrainConfig};
+use crate::coordinator::learn_pool::{grain_ranges, run_grains, tree_reduce, tree_reduce_scalar};
 use crate::coordinator::sampler::SamplerCfg;
-use crate::replay::{ReplayBuffer, ReplaySample};
+use crate::nn::adam::{Adam, AdamCfg};
+use crate::nn::layout::ParamLayout;
+use crate::nn::mlp::{self, NetShape};
+use crate::nn::tensor::Mat;
+use crate::replay::shard::{ReplayRng, ShardSample, ShardedReplay};
 use crate::runtime::{
     ActorBackend, BackendFactory, DdpgBatch, DdpgLearnerBackend, DdpgTrainState,
     DeterministicRowActor, DeterministicServerActor, ServerActor,
@@ -88,15 +93,28 @@ impl Algorithm for Ddpg {
     ) -> anyhow::Result<Box<dyn LearnerDriver>> {
         let backend = factory.make_ddpg_learner()?;
         let (actor, critic) = factory.init_ddpg_params(cfg.seed);
-        Ok(Box::new(crate::coordinator::learner::DdpgLearner::new(
-            backend,
-            actor,
-            critic,
-            factory.obs_dim(),
-            factory.act_dim(),
-            cfg.ddpg.replay_capacity,
-            cfg.seed,
-        )))
+        // the grained (L-invariant) engine needs the layer widths to run
+        // the per-grain kernels itself; the XLA backend keeps its fused
+        // full-batch train_step (validation caps it at L = 1)
+        let hidden = match cfg.backend {
+            Backend::Native => Some(cfg.hidden.as_slice()),
+            _ => None,
+        };
+        Ok(Box::new(
+            crate::coordinator::learner::DdpgLearner::with_topology(
+                backend,
+                actor,
+                critic,
+                factory.obs_dim(),
+                factory.act_dim(),
+                cfg.ddpg.replay_capacity,
+                cfg.seed,
+                cfg.replay_shards,
+                cfg.replay_strategy,
+                cfg.learner_threads,
+                hidden,
+            ),
+        ))
     }
 
     fn policy_param_count(&self, factory: &dyn BackendFactory, cfg: &TrainConfig) -> usize {
@@ -284,14 +302,17 @@ pub struct DdpgUpdateStats {
     pub updates: usize,
 }
 
-/// Run `cfg.updates_per_iter` gradient updates sampling from the replay
-/// buffer (no-op while the buffer is below `warmup_steps`).
+/// Run `cfg.updates_per_iter` fused full-batch gradient updates sampling
+/// from the sharded replay buffer (no-op while the buffer is below
+/// `warmup_steps`). This is the `DdpgLearnerBackend::train_step` path —
+/// kept for the XLA artifacts, whose fused reduction order is theirs to
+/// define; the native learner runs [`ddpg_update_grained`] instead.
 pub fn ddpg_update(
     backend: &mut dyn DdpgLearnerBackend,
     state: &mut DdpgTrainState,
-    replay: &ReplayBuffer,
+    replay: &ShardedReplay,
     cfg: &DdpgCfg,
-    rng: &mut Pcg64,
+    rng: &mut ReplayRng,
 ) -> anyhow::Result<DdpgUpdateStats> {
     if replay.len() < cfg.warmup_steps.max(cfg.batch) {
         return Ok(DdpgUpdateStats::default());
@@ -300,7 +321,7 @@ pub fn ddpg_update(
         0 => cfg.batch,
         b => b,
     };
-    let mut sample = ReplaySample::default();
+    let mut sample = ShardSample::default();
     let mut agg = DdpgUpdateStats::default();
     for _ in 0..cfg.updates_per_iter {
         replay.sample_into(batch, rng, &mut sample);
@@ -314,6 +335,141 @@ pub fn ddpg_update(
         let (q, pi) = backend.train_step(state, cfg.lr_actor, cfg.lr_critic, &mb)?;
         agg.q_loss += q;
         agg.pi_loss += pi;
+        agg.updates += 1;
+    }
+    if agg.updates > 0 {
+        agg.q_loss /= agg.updates as f32;
+        agg.pi_loss /= agg.updates as f32;
+    }
+    Ok(agg)
+}
+
+/// Grain-decomposed DDPG update round on the native kernels: the
+/// minibatch is cut into fixed [`GRAIN_ROWS`]-row grains
+/// ([`crate::coordinator::learn_pool`]), each grain's TD target +
+/// gradient partial is computed independently (scaled by `1/B`, with the
+/// minibatch's importance weights on the critic), and the partials
+/// combine under a fixed-order tree reduction — so the updated
+/// parameters are **bitwise identical for every `threads`**, including
+/// `threads == 1`, which runs the same grains serially.
+///
+/// Update ordering mirrors the fused native backend exactly: shared Adam
+/// step counter, critic step first, actor DPG gradient through the
+/// *updated* critic (unweighted — IS corrections apply to the value
+/// regression only), then Polyak on both targets. Critic TD residuals
+/// feed [`ShardedReplay::update_priorities`] (a no-op under `Uniform`).
+///
+/// [`GRAIN_ROWS`]: crate::coordinator::learn_pool::GRAIN_ROWS
+#[allow(clippy::too_many_arguments)]
+pub fn ddpg_update_grained(
+    state: &mut DdpgTrainState,
+    replay: &ShardedReplay,
+    cfg: &DdpgCfg,
+    rng: &mut ReplayRng,
+    alayout: &ParamLayout,
+    clayout: &ParamLayout,
+    shape: &NetShape,
+    adam: AdamCfg,
+    threads: usize,
+) -> anyhow::Result<DdpgUpdateStats> {
+    if replay.len() < cfg.warmup_steps.max(cfg.batch) {
+        return Ok(DdpgUpdateStats::default());
+    }
+    let b = cfg.batch;
+    let (o, a) = (shape.obs_dim, shape.act_dim);
+    let inv_n = 1.0 / b as f32;
+    let mut sample = ShardSample::default();
+    let mut agg = DdpgUpdateStats::default();
+    for _ in 0..cfg.updates_per_iter {
+        replay.sample_into(b, rng, &mut sample);
+        let ranges = grain_ranges(b);
+
+        // --- critic: per-grain TD target + weighted gradient partials
+        let (cgrad, q_loss, residuals) = {
+            let st: &DdpgTrainState = state;
+            let smp = &sample;
+            let parts = run_grains(ranges.len(), threads, |g| {
+                let (s, e) = ranges[g];
+                let rows = e - s;
+                let next_g = Mat::from_vec(rows, o, smp.next_obs[s * o..e * o].to_vec());
+                let na = mlp::ddpg_actor(alayout, &st.targ_actor, shape, &next_g);
+                let q = mlp::ddpg_critic(clayout, &st.targ_critic, shape, &next_g, &na);
+                let target: Vec<f32> = (0..rows)
+                    .map(|i| smp.rew[s + i] + cfg.gamma * (1.0 - smp.done[s + i]) * q[i])
+                    .collect();
+                let obs_g = Mat::from_vec(rows, o, smp.obs[s * o..e * o].to_vec());
+                let act_g = Mat::from_vec(rows, a, smp.act[s * a..e * a].to_vec());
+                mlp::ddpg_critic_grad_weighted(
+                    clayout,
+                    &st.critic,
+                    shape,
+                    &obs_g,
+                    &act_g,
+                    &target,
+                    Some(&smp.weights[s..e]),
+                    inv_n,
+                )
+            });
+            let mut grads = Vec::with_capacity(parts.len());
+            let mut losses = Vec::with_capacity(parts.len());
+            let mut residuals = Vec::with_capacity(b);
+            for (g, l, r) in parts {
+                grads.push(g);
+                losses.push(l);
+                residuals.extend_from_slice(&r);
+            }
+            (tree_reduce(grads), tree_reduce_scalar(losses), residuals)
+        };
+
+        // shared step counter, critic first — the fused-path ordering
+        state.t += 1;
+        let mut cadam = Adam {
+            cfg: adam,
+            m: std::mem::take(&mut state.cm),
+            v: std::mem::take(&mut state.cv),
+            t: state.t - 1,
+        };
+        cadam.step(&mut state.critic, &cgrad, cfg.lr_critic);
+        state.cm = cadam.m;
+        state.cv = cadam.v;
+
+        // --- actor: per-grain DPG partials through the UPDATED critic
+        let (agrad, pi_loss) = {
+            let st: &DdpgTrainState = state;
+            let smp = &sample;
+            let parts = run_grains(ranges.len(), threads, |g| {
+                let (s, e) = ranges[g];
+                let rows = e - s;
+                let obs_g = Mat::from_vec(rows, o, smp.obs[s * o..e * o].to_vec());
+                mlp::ddpg_actor_grad_scaled(
+                    alayout, &st.actor, clayout, &st.critic, shape, &obs_g, inv_n,
+                )
+            });
+            let mut grads = Vec::with_capacity(parts.len());
+            let mut losses = Vec::with_capacity(parts.len());
+            for (g, l) in parts {
+                grads.push(g);
+                losses.push(l);
+            }
+            (tree_reduce(grads), tree_reduce_scalar(losses))
+        };
+        let mut aadam = Adam {
+            cfg: adam,
+            m: std::mem::take(&mut state.am),
+            v: std::mem::take(&mut state.av),
+            t: state.t - 1,
+        };
+        aadam.step(&mut state.actor, &agrad, cfg.lr_actor);
+        state.am = aadam.m;
+        state.av = aadam.v;
+
+        crate::algo::td3::polyak(&mut state.targ_actor, &state.actor, cfg.tau);
+        crate::algo::td3::polyak(&mut state.targ_critic, &state.critic, cfg.tau);
+
+        replay.update_priorities(&sample.indices, &residuals);
+
+        agg.q_loss += q_loss;
+        agg.pi_loss += pi_loss;
         agg.updates += 1;
     }
     if agg.updates > 0 {
@@ -370,6 +526,19 @@ mod tests {
     use crate::runtime::native_backend::NativeFactory;
     use crate::runtime::BackendFactory;
 
+    use crate::config::ReplayStrategy;
+    use crate::nn::layout::{actor_layout, critic_layout};
+
+    fn filled_replay(n: usize) -> ShardedReplay {
+        let replay = ShardedReplay::new(1000, 2, 1, 1, ReplayStrategy::Uniform);
+        let mut rng = Pcg64::new(2);
+        for _ in 0..n {
+            let o = [rng.normal(), rng.normal()];
+            replay.push(&o, &[rng.uniform(-1.0, 1.0)], 1.0, &o, false);
+        }
+        replay
+    }
+
     #[test]
     fn update_noop_before_warmup() {
         let cfg = DdpgCfg {
@@ -382,13 +551,16 @@ mod tests {
         let mut backend = f.make_ddpg_learner().unwrap();
         let (a, c) = f.init_ddpg_params(0);
         let mut st = DdpgTrainState::new(a, c);
-        let mut replay = ReplayBuffer::new(1000, 2, 1);
-        for i in 0..50 {
-            replay.push(&[i as f32, 0.0], &[0.1], 1.0, &[i as f32 + 1.0, 0.0], false);
-        }
+        let replay = filled_replay(50);
         let before = st.actor.clone();
-        let stats = ddpg_update(backend.as_mut(), &mut st, &replay, &cfg, &mut Pcg64::new(1))
-            .unwrap();
+        let stats = ddpg_update(
+            backend.as_mut(),
+            &mut st,
+            &replay,
+            &cfg,
+            &mut ReplayRng::new(1),
+        )
+        .unwrap();
         assert_eq!(stats.updates, 0);
         assert_eq!(st.actor, before);
     }
@@ -408,12 +580,8 @@ mod tests {
         let mut backend = f.make_ddpg_learner().unwrap();
         let (a, c) = f.init_ddpg_params(1);
         let mut st = DdpgTrainState::new(a, c);
-        let mut replay = ReplayBuffer::new(1000, 2, 1);
-        let mut rng = Pcg64::new(2);
-        for _ in 0..200 {
-            let o = [rng.normal(), rng.normal()];
-            replay.push(&o, &[rng.uniform(-1.0, 1.0)], 1.0, &o, false);
-        }
+        let replay = filled_replay(200);
+        let mut rng = ReplayRng::new(2);
         let first = ddpg_update(backend.as_mut(), &mut st, &replay, &cfg, &mut rng).unwrap();
         let second = ddpg_update(backend.as_mut(), &mut st, &replay, &cfg, &mut rng).unwrap();
         assert_eq!(first.updates, 50);
@@ -423,6 +591,71 @@ mod tests {
             first.q_loss,
             second.q_loss
         );
+    }
+
+    #[test]
+    fn grained_update_is_thread_count_invariant_and_learns() {
+        // batch 192 = 3 grains; L ∈ {1, 2, 4} must produce bitwise
+        // identical parameters (same grains, same tree reduction)
+        let cfg = DdpgCfg {
+            warmup_steps: 10,
+            batch: 192,
+            updates_per_iter: 4,
+            lr_critic: 1e-2,
+            gamma: 0.0,
+            ..Default::default()
+        };
+        let alayout = actor_layout(2, 1, &[16, 16]);
+        let clayout = critic_layout(2, 1, &[16, 16]);
+        let shape = NetShape::new(2, 1, &[16, 16]);
+        let run = |threads: usize| {
+            let mut init = Pcg64::new(1);
+            let a = alayout.init_flat(&mut init);
+            let c = clayout.init_flat(&mut init);
+            let mut st = DdpgTrainState::new(a, c);
+            let replay = filled_replay(400);
+            let stats = ddpg_update_grained(
+                &mut st,
+                &replay,
+                &cfg,
+                &mut ReplayRng::new(9),
+                &alayout,
+                &clayout,
+                &shape,
+                AdamCfg::default(),
+                threads,
+            )
+            .unwrap();
+            (st, stats)
+        };
+        let (base, stats1) = run(1);
+        assert_eq!(stats1.updates, 4);
+        let st0 = {
+            let mut init = Pcg64::new(1);
+            let a = alayout.init_flat(&mut init);
+            let c = clayout.init_flat(&mut init);
+            DdpgTrainState::new(a, c)
+        };
+        assert_ne!(base.actor, st0.actor, "update must move the actor");
+        for threads in [2, 4] {
+            let (st, _) = run(threads);
+            assert_eq!(
+                base.actor
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect::<Vec<_>>(),
+                st.actor.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "actor diverged at L={threads}"
+            );
+            assert_eq!(
+                base.critic
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect::<Vec<_>>(),
+                st.critic.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "critic diverged at L={threads}"
+            );
+        }
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! RL algorithm cores behind ONE abstraction: [`api::Algorithm`] is the
 //! trait every pipeline stage (sampler loop, shared-inference pool,
 //! learner driver, orchestrator, eval) is generic over; [`ppo`],
-//! [`ddpg`], and [`td3`] implement it. GAE, rollout data structures, and
-//! observation normalization live alongside. All algorithm math that is
-//! not network compute lives here; the network compute goes through
-//! `runtime::*Backend` (XLA artifacts or the native mirror).
+//! [`ddpg`], [`td3`], and [`sac`] implement it. GAE, rollout data
+//! structures, and observation normalization live alongside. All
+//! algorithm math that is not network compute lives here; the network
+//! compute goes through `runtime::*Backend` (XLA artifacts or the native
+//! mirror).
 
 pub mod api;
 pub mod ddpg;
@@ -12,6 +13,7 @@ pub mod gae;
 pub mod normalizer;
 pub mod ppo;
 pub mod rollout;
+pub mod sac;
 pub mod td3;
 
 pub use api::{AlgoSampler, Algorithm, LearnerDriver};

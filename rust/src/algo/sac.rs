@@ -1,0 +1,768 @@
+//! SAC — Soft Actor-Critic (Haarnoja et al., 2018) — the second
+//! algorithm landed **entirely against the [`Algorithm`] trait** (after
+//! TD3): zero edits to `coordinator/sampler.rs`,
+//! `coordinator/orchestrator.rs`, or `runtime/inference_server.rs`. Its
+//! registration points are the `config::Algo::Sac` variant, the
+//! `algo::api::algorithm_from_config` match arm, and two
+//! `runtime::BackendFactory` hooks (`make_sac_actor` /
+//! `init_sac_params`) that only the native backend implements.
+//!
+//! SAC is maximum-entropy off-policy RL:
+//! 1. **Stochastic tanh-Gaussian actor** — the policy head emits per-dim
+//!    `(mean, log_std)`; actions are reparameterized samples
+//!    `a = tanh(mean + std * eps)`, so the sampler's policy-noise lane
+//!    carries eps ~ N(0,1) exactly like PPO's (and a zero lane is the
+//!    squashed mode, which is what eval runs).
+//! 2. **Twin soft critics** — TD3's twin trick plus an entropy bonus in
+//!    the target: `y = r + γ(1-d)(min(Q1',Q2')(s',a') - α·logπ(a'|s'))`
+//!    with `a'` drawn from the *current* actor (SAC has no target actor).
+//! 3. **Learned temperature** — `α = exp(log_α)` follows plain SGD
+//!    toward the entropy target `H̄ = -act_dim`.
+//!
+//! Replay runs on the sharded buffer ([`crate::replay::shard`]) with the
+//! seed-addressable [`ReplayRng`], so `--replay-shards` applies; the
+//! update math is native-only and single-threaded for now
+//! (`TrainConfig::validate` rejects `--backend xla`, `--learner-threads
+//! > 1`, and `--replay-strategy prioritized` with actionable errors).
+
+use crate::algo::api::{AlgoSampler, Algorithm, LearnerDriver, TickLanes};
+use crate::algo::normalizer::{NormSnapshot, RunningNorm};
+use crate::algo::rollout::{ChunkBuf, ChunkEnd, ExperienceChunk};
+use crate::algo::td3::polyak;
+use crate::config::{Algo, ReplayStrategy, SacCfg, TrainConfig};
+use crate::coordinator::metrics::IterationMetrics;
+use crate::coordinator::policy_store::PolicyStore;
+use crate::coordinator::queue::Channel;
+use crate::coordinator::sampler::SamplerCfg;
+use crate::nn::adam::{Adam, AdamCfg};
+use crate::nn::layout::{actor_layout, critic_layout, ParamLayout};
+use crate::nn::mlp::{self, NetShape};
+use crate::nn::tensor::Mat;
+use crate::replay::shard::{ReplayRng, ShardSample, ShardedReplay};
+use crate::runtime::{ActorBackend, BackendFactory, ServerActor, StochasticServerActor};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::timer::Stopwatch;
+
+/// Stream-id base for SAC reparameterization-noise RNGs (disjoint from
+/// PPO's `1 << 32`, DDPG's `1 << 33`, TD3's `1 << 34`, and the replay
+/// draw family at `1 << 36`).
+const SAC_NOISE_STREAM_BASE: u64 = 1 << 35;
+
+/// RNG stream id of the learner (next-action + actor eps draws).
+const SAC_LEARNER_STREAM: u64 = 0x5AC;
+
+/// SAC's [`Algorithm`] registration.
+#[derive(Debug, Clone, Default)]
+pub struct Sac {
+    pub cfg: SacCfg,
+}
+
+impl Algorithm for Sac {
+    fn id(&self) -> Algo {
+        Algo::Sac
+    }
+
+    fn make_sampler(&self, scfg: &SamplerCfg, m: usize, act_dim: usize) -> Box<dyn AlgoSampler> {
+        Box::new(SacSampler {
+            act_dim,
+            rngs: (0..m)
+                .map(|i| {
+                    Pcg64::with_stream(scfg.seed, SAC_NOISE_STREAM_BASE + scfg.global_env(m, i))
+                })
+                .collect(),
+        })
+    }
+
+    fn make_local_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        rows: usize,
+    ) -> anyhow::Result<Box<dyn ActorBackend>> {
+        factory.make_sac_actor(rows)
+    }
+
+    fn make_server_actor(
+        &self,
+        factory: &dyn BackendFactory,
+        max_rows: usize,
+    ) -> anyhow::Result<Box<dyn ServerActor>> {
+        // stochastic policy: the server forwards the workers' eps lanes
+        Ok(Box::new(StochasticServerActor(
+            factory.make_sac_actor(max_rows)?,
+        )))
+    }
+
+    fn make_eval_actor(
+        &self,
+        factory: &dyn BackendFactory,
+    ) -> anyhow::Result<Box<dyn ActorBackend>> {
+        // zero noise at eval makes action == squashed mode
+        factory.make_sac_actor(1)
+    }
+
+    fn make_learner(
+        &self,
+        factory: &dyn BackendFactory,
+        cfg: &TrainConfig,
+    ) -> anyhow::Result<Box<dyn LearnerDriver>> {
+        let (actor, critic1, critic2) = factory.init_sac_params(cfg.seed)?;
+        Ok(Box::new(SacLearner::with_params(
+            actor,
+            critic1,
+            critic2,
+            factory.obs_dim(),
+            factory.act_dim(),
+            &cfg.hidden,
+            cfg.sac.replay_capacity,
+            cfg.replay_shards,
+            cfg.seed,
+        )))
+    }
+
+    fn policy_param_count(&self, factory: &dyn BackendFactory, cfg: &TrainConfig) -> usize {
+        // the published policy is the actor with its 2*act_dim head
+        actor_layout(factory.obs_dim(), 2 * factory.act_dim(), &cfg.hidden).total()
+    }
+
+    fn hyperparams(&self, cfg: &TrainConfig) -> Json {
+        cfg.sac.to_json()
+    }
+
+    fn apply_to(&self, cfg: &mut TrainConfig) {
+        cfg.algo = Algo::Sac;
+        cfg.sac = self.cfg.clone();
+    }
+}
+
+/// Sampler hooks: per-env reparameterization-noise streams feeding the
+/// policy-noise lane (the actor squashes, so exploration is intrinsic —
+/// no additive noise), executed actions recorded for replay, and the
+/// trailing normalized s' row every off-policy chunk carries.
+pub struct SacSampler {
+    act_dim: usize,
+    rngs: Vec<Pcg64>,
+}
+
+impl AlgoSampler for SacSampler {
+    fn uses_policy_noise(&self) -> bool {
+        true
+    }
+
+    fn fill_policy_noise(&mut self, noise: &mut [f32]) {
+        let a = self.act_dim;
+        for (i, rng) in self.rngs.iter_mut().enumerate() {
+            rng.fill_normal(&mut noise[i * a..(i + 1) * a]);
+        }
+    }
+
+    fn record_tick(
+        &mut self,
+        i: usize,
+        lanes: &TickLanes<'_>,
+        buf: &mut ChunkBuf,
+        exec: &mut [f32],
+    ) {
+        let a = self.act_dim;
+        exec.copy_from_slice(&lanes.action[i * a..(i + 1) * a]);
+        crate::env::clip_action(exec); // tanh output: clip is a no-op guard
+        // replay stores the EXECUTED action; the learner recomputes logp
+        // from fresh eps draws, so the aux lanes stay zero like DDPG/TD3
+        buf.act.extend_from_slice(exec);
+        buf.logp.push(0.0);
+        buf.value.push(0.0);
+    }
+
+    fn close_chunk(
+        &mut self,
+        buf: &mut ChunkBuf,
+        next_obs: &[f32],
+        norm: &NormSnapshot,
+        _end: ChunkEnd,
+        _value_hint: f32,
+    ) -> f32 {
+        // replay reconstruction needs s' of the last row: append the
+        // next obs normalized under the chunk's snapshot (len+1 rows)
+        let start = buf.obs.len();
+        buf.obs.extend_from_slice(next_obs);
+        norm.apply(&mut buf.obs[start..]);
+        0.0
+    }
+
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_usize(self.rngs.len());
+        for rng in &self.rngs {
+            let (state, inc) = rng.raw_state();
+            w.put_u128(state);
+            w.put_u128(inc);
+        }
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let n = r.read_usize()?;
+        anyhow::ensure!(
+            n == self.rngs.len(),
+            "sac sampler state has {n} rng lanes, expected {}",
+            self.rngs.len()
+        );
+        for rng in self.rngs.iter_mut() {
+            let state = r.read_u128()?;
+            let inc = r.read_u128()?;
+            *rng = Pcg64::from_raw(state, inc);
+        }
+        Ok(())
+    }
+}
+
+/// Aggregated statistics for one SAC update round.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SacUpdateStats {
+    /// Mean twin-critic TD loss (both critics averaged).
+    pub q_loss: f32,
+    /// Mean actor (policy) loss.
+    pub pi_loss: f32,
+    /// Temperature after the round.
+    pub alpha: f32,
+    /// Mean policy entropy estimate `-E[log pi]` over the round.
+    pub entropy: f32,
+    /// Updates performed.
+    pub updates: usize,
+}
+
+/// SAC learner: sharded replay collection identical to DDPG/TD3's (the
+/// chunks carry a trailing s' row), with the twin-soft-critic /
+/// reparameterized-actor / learned-temperature update on the native
+/// kernels.
+pub struct SacLearner {
+    pub actor: Vec<f32>,
+    pub critic1: Vec<f32>,
+    pub critic2: Vec<f32>,
+    pub targ_critic1: Vec<f32>,
+    pub targ_critic2: Vec<f32>,
+    a_adam: Adam,
+    c1_adam: Adam,
+    c2_adam: Adam,
+    /// Temperature, parameterized as log(alpha) so it stays positive.
+    log_alpha: f32,
+    target_entropy: f32,
+    replay: ShardedReplay,
+    replay_rng: ReplayRng,
+    norm: RunningNorm,
+    /// Learner eps stream (next-action draws, then actor draws, per
+    /// update — a fixed consumption order, so runs are seed-reproducible).
+    rng: Pcg64,
+    total_steps: u64,
+    wall: Stopwatch,
+    obs_dim: usize,
+    act_dim: usize,
+    alayout: ParamLayout,
+    clayout: ParamLayout,
+    shape: NetShape,
+}
+
+impl SacLearner {
+    /// Convenience constructor drawing fresh parameters (one init stream,
+    /// three draws: actor, critic1, critic2 — matching
+    /// `NativeFactory::init_sac_params`). Single replay shard.
+    pub fn new(
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: &[usize],
+        replay_capacity: usize,
+        seed: u64,
+    ) -> SacLearner {
+        let mut init = Pcg64::new(seed);
+        let actor = actor_layout(obs_dim, 2 * act_dim, hidden).init_flat(&mut init);
+        let critic1 = critic_layout(obs_dim, act_dim, hidden).init_flat(&mut init);
+        let critic2 = critic_layout(obs_dim, act_dim, hidden).init_flat(&mut init);
+        Self::with_params(
+            actor,
+            critic1,
+            critic2,
+            obs_dim,
+            act_dim,
+            hidden,
+            replay_capacity,
+            1,
+            seed,
+        )
+    }
+
+    /// Full constructor over pre-initialized parameters (the
+    /// `Algorithm::make_learner` path, which draws them through
+    /// `BackendFactory::init_sac_params`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_params(
+        actor: Vec<f32>,
+        critic1: Vec<f32>,
+        critic2: Vec<f32>,
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: &[usize],
+        replay_capacity: usize,
+        replay_shards: usize,
+        seed: u64,
+    ) -> SacLearner {
+        let (pa, pc) = (actor.len(), critic1.len());
+        debug_assert_eq!(critic1.len(), critic2.len());
+        SacLearner {
+            targ_critic1: critic1.clone(),
+            targ_critic2: critic2.clone(),
+            actor,
+            critic1,
+            critic2,
+            a_adam: Adam::new(pa, AdamCfg::default()),
+            c1_adam: Adam::new(pc, AdamCfg::default()),
+            c2_adam: Adam::new(pc, AdamCfg::default()),
+            log_alpha: 0.0, // overwritten from cfg at the first update
+            target_entropy: -(act_dim as f32),
+            replay: ShardedReplay::new(
+                replay_capacity,
+                obs_dim,
+                act_dim,
+                replay_shards,
+                ReplayStrategy::Uniform,
+            ),
+            replay_rng: ReplayRng::new(seed),
+            norm: RunningNorm::new(obs_dim, 10.0),
+            rng: Pcg64::with_stream(seed, SAC_LEARNER_STREAM),
+            total_steps: 0,
+            wall: Stopwatch::start(),
+            obs_dim,
+            act_dim,
+            alayout: actor_layout(obs_dim, 2 * act_dim, hidden),
+            clayout: critic_layout(obs_dim, act_dim, hidden),
+            shape: NetShape::new(obs_dim, act_dim, hidden),
+        }
+    }
+
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
+    }
+
+    /// Current temperature.
+    pub fn alpha(&self) -> f32 {
+        self.log_alpha.exp()
+    }
+
+    /// Insert a chunk's transitions (chunk.obs has len+1 rows; the
+    /// trailing row is s' of the final transition — the same off-policy
+    /// chunk contract DDPG/TD3 use).
+    fn absorb_chunk(&mut self, c: &ExperienceChunk) {
+        let o = self.obs_dim;
+        let a = self.act_dim;
+        let len = c.len();
+        debug_assert_eq!(c.obs.len(), (len + 1) * o, "sac chunk missing next-obs row");
+        for i in 0..len {
+            let obs = &c.obs[i * o..(i + 1) * o];
+            let next = &c.obs[(i + 1) * o..(i + 2) * o];
+            let act = &c.act[i * a..(i + 1) * a];
+            let done = c.end == ChunkEnd::Terminal && i == len - 1;
+            self.replay.push(obs, act, c.rew[i], next, done);
+        }
+        if let Some(stats) = &c.obs_stats {
+            self.norm.merge(stats);
+        }
+    }
+
+    /// One-time latch: adopt the configured initial temperature before
+    /// the first gradient step (`log_alpha` can't be set at construction
+    /// because the learner is built from dims + seed, not a `SacCfg`).
+    fn latch_alpha(&mut self, cfg: &SacCfg) {
+        if self.total_alpha_updates() == 0 {
+            self.log_alpha = cfg.init_alpha.ln();
+        }
+    }
+
+    fn total_alpha_updates(&self) -> u64 {
+        self.a_adam.t
+    }
+
+    /// Run `cfg.updates_per_iter` soft actor-critic updates sampling from
+    /// the replay buffer. No-op while the buffer is below warmup.
+    pub fn update(&mut self, cfg: &SacCfg) -> anyhow::Result<SacUpdateStats> {
+        if self.replay.len() < cfg.warmup_steps.max(cfg.batch) {
+            return Ok(SacUpdateStats {
+                alpha: self.alpha(),
+                ..Default::default()
+            });
+        }
+        self.latch_alpha(cfg);
+        let b = cfg.batch;
+        let (o, a) = (self.obs_dim, self.act_dim);
+        let inv_n = 1.0 / b as f32;
+        let mut sample = ShardSample::default();
+        let mut eps = vec![0.0f32; b * a];
+        let mut agg = SacUpdateStats::default();
+        for _ in 0..cfg.updates_per_iter {
+            self.replay.sample_into(b, &mut self.replay_rng, &mut sample);
+            let alpha = self.log_alpha.exp();
+
+            // --- soft TD target:
+            //     y = r + γ(1-d)(min(Q1',Q2')(s',a') - α logπ(a'|s')),
+            //     a' ~ π(·|s') from the CURRENT actor (no target actor)
+            self.rng.fill_normal(&mut eps);
+            let next_obs = Mat::from_vec(b, o, sample.next_obs.clone());
+            let next = mlp::sac_act(&self.alayout, &self.actor, &self.shape, &next_obs, &eps);
+            let q1n = mlp::ddpg_critic(
+                &self.clayout,
+                &self.targ_critic1,
+                &self.shape,
+                &next_obs,
+                &next.action,
+            );
+            let q2n = mlp::ddpg_critic(
+                &self.clayout,
+                &self.targ_critic2,
+                &self.shape,
+                &next_obs,
+                &next.action,
+            );
+            let target: Vec<f32> = (0..b)
+                .map(|i| {
+                    sample.rew[i]
+                        + cfg.gamma
+                            * (1.0 - sample.done[i])
+                            * (q1n[i].min(q2n[i]) - alpha * next.logp[i])
+                })
+                .collect();
+
+            // --- twin soft critic regression steps (shared target)
+            let obs = Mat::from_vec(b, o, sample.obs.clone());
+            let act = Mat::from_vec(b, a, sample.act.clone());
+            let (g1, l1) = mlp::ddpg_critic_grad(
+                &self.clayout,
+                &self.critic1,
+                &self.shape,
+                &obs,
+                &act,
+                &target,
+            );
+            self.c1_adam.step(&mut self.critic1, &g1, cfg.lr_critic);
+            let (g2, l2) = mlp::ddpg_critic_grad(
+                &self.clayout,
+                &self.critic2,
+                &self.shape,
+                &obs,
+                &act,
+                &target,
+            );
+            self.c2_adam.step(&mut self.critic2, &g2, cfg.lr_critic);
+
+            // --- reparameterized actor step through the UPDATED critics
+            self.rng.fill_normal(&mut eps);
+            let (ga, pi_loss, logp_sum) = mlp::sac_actor_grad(
+                &self.alayout,
+                &self.actor,
+                &self.clayout,
+                &self.critic1,
+                &self.critic2,
+                &self.shape,
+                &obs,
+                &eps,
+                alpha,
+                inv_n,
+            );
+            self.a_adam.step(&mut self.actor, &ga, cfg.lr_actor);
+
+            // --- temperature: SGD on log α; the α objective
+            //     J(α) = -α (E[logπ] + H̄) has dJ/dα = -(E[logπ] + H̄)
+            let mean_logp = logp_sum * inv_n;
+            self.log_alpha -= cfg.lr_alpha * (-(mean_logp + self.target_entropy));
+
+            // --- Polyak soft target updates (critics only)
+            polyak(&mut self.targ_critic1, &self.critic1, cfg.tau);
+            polyak(&mut self.targ_critic2, &self.critic2, cfg.tau);
+
+            agg.q_loss += 0.5 * (l1 + l2);
+            agg.pi_loss += pi_loss;
+            agg.entropy += -mean_logp;
+            agg.updates += 1;
+        }
+        if agg.updates > 0 {
+            agg.q_loss /= agg.updates as f32;
+            agg.pi_loss /= agg.updates as f32;
+            agg.entropy /= agg.updates as f32;
+        }
+        agg.alpha = self.alpha();
+        Ok(agg)
+    }
+}
+
+impl LearnerDriver for SacLearner {
+    fn publish_initial(&self, store: &PolicyStore) {
+        store.publish(self.actor.clone(), self.norm.snapshot());
+    }
+
+    fn iteration(
+        &mut self,
+        iter: usize,
+        cfg: &TrainConfig,
+        queue: &Channel<ExperienceChunk>,
+        store: &PolicyStore,
+    ) -> anyhow::Result<IterationMetrics> {
+        let iter_sw = Stopwatch::start();
+        let collect_sw = Stopwatch::start();
+        let mut n = 0usize;
+        let mut returns: Vec<f32> = Vec::new();
+        let mut lengths: Vec<usize> = Vec::new();
+        let mut busy_per_worker: std::collections::BTreeMap<usize, f64> =
+            std::collections::BTreeMap::new();
+        let mut chunks: Vec<ExperienceChunk> = Vec::new();
+        while n < cfg.samples_per_iter {
+            let c = queue
+                .pop()
+                .map_err(|_| anyhow::anyhow!("experience queue closed"))?;
+            n += c.len();
+            returns.extend_from_slice(&c.episode_returns);
+            lengths.extend_from_slice(&c.episode_lengths);
+            *busy_per_worker.entry(c.sampler_id).or_default() += c.busy_secs;
+            chunks.push(c);
+        }
+        // canonical order before replay insertion + normalizer merges:
+        // the learner's state must be a pure function of the chunk set
+        chunks.sort_by_key(|c| (c.policy_version, c.sampler_id, c.env_slot));
+        for c in &chunks {
+            self.absorb_chunk(c);
+        }
+        let collect_secs = collect_sw.elapsed_secs();
+        let virtual_collect_secs = busy_per_worker.values().fold(0.0f64, |a, &b| a.max(b));
+
+        let learn_sw = Stopwatch::start();
+        let stats = self.update(&cfg.sac)?;
+        let learn_secs = learn_sw.elapsed_secs();
+
+        store.publish(self.actor.clone(), self.norm.snapshot());
+        self.total_steps += n as u64;
+
+        let mean_ep_len = if lengths.is_empty() {
+            f32::NAN
+        } else {
+            lengths.iter().sum::<usize>() as f32 / lengths.len() as f32
+        };
+        Ok(IterationMetrics {
+            iter,
+            samples: n,
+            collect_secs,
+            virtual_collect_secs,
+            learn_secs,
+            total_secs: iter_sw.elapsed_secs(),
+            mean_return: crate::util::stats::mean_f32(&returns),
+            episodes: returns.len(),
+            mean_ep_len,
+            total_steps: self.total_steps,
+            wall_secs: self.wall.elapsed_secs(),
+            pi_loss: stats.pi_loss,
+            v_loss: stats.q_loss,
+            entropy: stats.entropy,
+            ..Default::default()
+        })
+    }
+
+    fn final_params(&self) -> Vec<f32> {
+        self.actor.clone()
+    }
+
+    fn final_norm(&self) -> NormSnapshot {
+        self.norm.snapshot()
+    }
+
+    /// Full off-policy training state INCLUDING replay contents (the
+    /// versioned shard section) and the replay draw cursor, so a resumed
+    /// run replays bitwise-identical minibatches.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.actor);
+        w.put_f32s(&self.critic1);
+        w.put_f32s(&self.critic2);
+        w.put_f32s(&self.targ_critic1);
+        w.put_f32s(&self.targ_critic2);
+        for adam in [&self.a_adam, &self.c1_adam, &self.c2_adam] {
+            w.put_f32s(&adam.m);
+            w.put_f32s(&adam.v);
+            w.put_u64(adam.t);
+        }
+        w.put_f32(self.log_alpha);
+        let (rs, ri) = self.rng.raw_state();
+        w.put_u128(rs);
+        w.put_u128(ri);
+        self.norm.save_state(&mut w);
+        w.put_u64(self.total_steps);
+        self.replay.save_state(&mut w);
+        self.replay_rng.save_state(&mut w);
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let actor = r.read_f32s()?;
+        anyhow::ensure!(
+            actor.len() == self.actor.len(),
+            "SAC learner state mismatch: snapshot has {} actor params, this run has {}",
+            actor.len(),
+            self.actor.len()
+        );
+        self.actor = actor;
+        self.critic1 = r.read_f32s()?;
+        self.critic2 = r.read_f32s()?;
+        self.targ_critic1 = r.read_f32s()?;
+        self.targ_critic2 = r.read_f32s()?;
+        for adam in [&mut self.a_adam, &mut self.c1_adam, &mut self.c2_adam] {
+            adam.m = r.read_f32s()?;
+            adam.v = r.read_f32s()?;
+            adam.t = r.read_u64()?;
+        }
+        self.log_alpha = r.read_f32()?;
+        let (rs, ri) = (r.read_u128()?, r.read_u128()?);
+        self.rng = Pcg64::from_raw(rs, ri);
+        self.norm = RunningNorm::load_state(&mut r)?;
+        self.total_steps = r.read_u64()?;
+        self.replay.load_state(&mut r)?;
+        self.replay_rng = ReplayRng::load_state(&mut r)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_learner(seed: u64) -> SacLearner {
+        let l = SacLearner::new(2, 1, &[16, 16], 1000, seed);
+        let mut rng = Pcg64::new(99);
+        for _ in 0..300 {
+            let o = [rng.normal(), rng.normal()];
+            l.replay.push(&o, &[rng.uniform(-1.0, 1.0)], 1.0, &o, false);
+        }
+        l
+    }
+
+    #[test]
+    fn update_noop_before_warmup() {
+        let cfg = SacCfg {
+            warmup_steps: 1000,
+            batch: 8,
+            updates_per_iter: 5,
+            ..Default::default()
+        };
+        let mut l = filled_learner(0);
+        let before = l.actor.clone();
+        let stats = l.update(&cfg).unwrap();
+        assert_eq!(stats.updates, 0);
+        assert_eq!(l.actor, before);
+    }
+
+    #[test]
+    fn twin_soft_critics_learn_q_and_stay_distinct() {
+        // gamma = 0 kills both the bootstrap AND the entropy term in the
+        // target, so y is exactly the reward; lr_actor/lr_alpha = 0
+        // isolate critic learning
+        let cfg = SacCfg {
+            warmup_steps: 10,
+            batch: 16,
+            updates_per_iter: 50,
+            lr_actor: 0.0,
+            lr_alpha: 0.0,
+            lr_critic: 1e-2,
+            gamma: 0.0,
+            ..Default::default()
+        };
+        let mut l = filled_learner(1);
+        assert_ne!(
+            l.critic1, l.critic2,
+            "twin critics must be independently initialized"
+        );
+        let first = l.update(&cfg).unwrap();
+        let second = l.update(&cfg).unwrap();
+        assert_eq!(first.updates, 50);
+        assert!(
+            second.q_loss < 0.5 * first.q_loss.max(1e-6) + 0.05,
+            "q_loss did not drop: {} -> {}",
+            first.q_loss,
+            second.q_loss
+        );
+        assert_ne!(l.critic1, l.critic2, "twins must not collapse");
+    }
+
+    #[test]
+    fn seeded_updates_are_reproducible() {
+        let cfg = SacCfg {
+            warmup_steps: 10,
+            batch: 8,
+            updates_per_iter: 5,
+            ..Default::default()
+        };
+        let mut a = filled_learner(7);
+        let mut b = filled_learner(7);
+        a.update(&cfg).unwrap();
+        b.update(&cfg).unwrap();
+        assert_eq!(a.actor, b.actor);
+        assert_eq!(a.critic1, b.critic1);
+        assert_eq!(a.critic2, b.critic2);
+        assert_eq!(a.log_alpha.to_bits(), b.log_alpha.to_bits());
+    }
+
+    #[test]
+    fn temperature_adapts_from_its_configured_start() {
+        let cfg = SacCfg {
+            warmup_steps: 10,
+            batch: 16,
+            updates_per_iter: 20,
+            init_alpha: 0.5,
+            lr_alpha: 1e-2,
+            ..Default::default()
+        };
+        let mut l = filled_learner(3);
+        assert_eq!(l.alpha(), 1.0, "pre-latch placeholder");
+        let stats = l.update(&cfg).unwrap();
+        assert!(stats.alpha > 0.0 && stats.alpha.is_finite());
+        assert_ne!(
+            l.log_alpha,
+            0.5f32.ln(),
+            "learned temperature must move off init_alpha"
+        );
+        assert!(stats.entropy.is_finite());
+    }
+
+    #[test]
+    fn save_load_resumes_updates_bitwise() {
+        let cfg = SacCfg {
+            warmup_steps: 10,
+            batch: 8,
+            updates_per_iter: 3,
+            ..Default::default()
+        };
+        let mut live = filled_learner(5);
+        live.update(&cfg).unwrap();
+        let blob = LearnerDriver::save_state(&live);
+
+        let mut restored = SacLearner::new(2, 1, &[16, 16], 1000, 123);
+        LearnerDriver::load_state(&mut restored, &blob).unwrap();
+        assert_eq!(restored.replay_len(), live.replay_len());
+        live.update(&cfg).unwrap();
+        restored.update(&cfg).unwrap();
+        assert_eq!(live.actor, restored.actor, "post-resume update diverged");
+        assert_eq!(live.critic1, restored.critic1);
+        assert_eq!(live.log_alpha.to_bits(), restored.log_alpha.to_bits());
+
+        // wrong shape rejected
+        let mut bad = SacLearner::new(3, 2, &[8], 100, 0);
+        assert!(LearnerDriver::load_state(&mut bad, &blob).is_err());
+    }
+
+    #[test]
+    fn publish_initial_exposes_actor_params() {
+        let l = SacLearner::new(3, 1, &[8, 8], 100, 5);
+        let store = PolicyStore::new();
+        LearnerDriver::publish_initial(&l, &store);
+        let snap = store.latest().unwrap();
+        assert_eq!(snap.version, 1);
+        // the SAC head is 2 * act_dim wide (mean ++ log_std)
+        assert_eq!(snap.params.len(), actor_layout(3, 2, &[8, 8]).total());
+        assert_eq!(&*snap.params, &l.final_params());
+    }
+}

@@ -33,7 +33,8 @@ use crate::algo::api::{AlgoSampler, Algorithm, LearnerDriver};
 use crate::algo::ddpg::{make_det_local_actor, make_det_server_actor, DeterministicSampler};
 use crate::algo::normalizer::RunningNorm;
 use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
-use crate::config::{Algo, Td3Cfg, TrainConfig};
+use crate::config::{Algo, ReplayStrategy, Td3Cfg, TrainConfig};
+use crate::coordinator::learn_pool::{grain_ranges, run_grains, tree_reduce, tree_reduce_scalar};
 use crate::coordinator::metrics::IterationMetrics;
 use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
@@ -42,8 +43,9 @@ use crate::nn::adam::{Adam, AdamCfg};
 use crate::nn::layout::{actor_layout, critic_layout, ParamLayout};
 use crate::nn::mlp::{self, NetShape};
 use crate::nn::tensor::Mat;
-use crate::replay::{ReplayBuffer, ReplaySample};
+use crate::replay::shard::{ReplayRng, ShardSample, ShardedReplay};
 use crate::runtime::{ActorBackend, BackendFactory, ServerActor};
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::timer::Stopwatch;
@@ -107,12 +109,15 @@ impl Algorithm for Td3 {
         factory: &dyn BackendFactory,
         cfg: &TrainConfig,
     ) -> anyhow::Result<Box<dyn LearnerDriver>> {
-        Ok(Box::new(Td3Learner::new(
+        Ok(Box::new(Td3Learner::with_topology(
             factory.obs_dim(),
             factory.act_dim(),
             &cfg.hidden,
             cfg.td3.replay_capacity,
             cfg.seed,
+            cfg.replay_shards,
+            cfg.replay_strategy,
+            cfg.learner_threads,
         )))
     }
 
@@ -200,7 +205,13 @@ impl Td3State {
 /// / delayed-actor / smoothed-target update rule on the native kernels.
 pub struct Td3Learner {
     pub state: Td3State,
-    replay: ReplayBuffer,
+    replay: ShardedReplay,
+    /// Seed-addressable minibatch draw stream (shard-count invariant,
+    /// checkpointable as two u64s).
+    replay_rng: ReplayRng,
+    /// Gradient-grain workers (pure wall-clock knob: updates are bitwise
+    /// identical for every value — see `coordinator::learn_pool`).
+    threads: usize,
     norm: RunningNorm,
     rng: Pcg64,
     total_steps: u64,
@@ -216,12 +227,39 @@ pub struct Td3Learner {
 }
 
 impl Td3Learner {
+    /// Single-shard, uniform, single-thread learner (unit-test default).
     pub fn new(
         obs_dim: usize,
         act_dim: usize,
         hidden: &[usize],
         replay_capacity: usize,
         seed: u64,
+    ) -> Td3Learner {
+        Self::with_topology(
+            obs_dim,
+            act_dim,
+            hidden,
+            replay_capacity,
+            seed,
+            1,
+            ReplayStrategy::Uniform,
+            1,
+        )
+    }
+
+    /// Full topology constructor (the `Algorithm::make_learner` path):
+    /// striped replay shards, uniform/prioritized draws, and the
+    /// gradient-grain worker count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_topology(
+        obs_dim: usize,
+        act_dim: usize,
+        hidden: &[usize],
+        replay_capacity: usize,
+        seed: u64,
+        replay_shards: usize,
+        strategy: ReplayStrategy,
+        learner_threads: usize,
     ) -> Td3Learner {
         let alayout = actor_layout(obs_dim, act_dim, hidden);
         let clayout = critic_layout(obs_dim, act_dim, hidden);
@@ -233,7 +271,9 @@ impl Td3Learner {
         let critic2 = clayout.init_flat(&mut init);
         Td3Learner {
             state: Td3State::new(actor, critic1, critic2),
-            replay: ReplayBuffer::new(replay_capacity, obs_dim, act_dim),
+            replay: ShardedReplay::new(replay_capacity, obs_dim, act_dim, replay_shards, strategy),
+            replay_rng: ReplayRng::new(seed),
+            threads: learner_threads.max(1),
             norm: RunningNorm::new(obs_dim, 10.0),
             rng: Pcg64::with_stream(seed, TD3_LEARNER_STREAM),
             total_steps: 0,
@@ -250,6 +290,12 @@ impl Td3Learner {
 
     pub fn replay_len(&self) -> usize {
         self.replay.len()
+    }
+
+    /// Shared-reference replay access (inserts take `&self`): benches and
+    /// tests fill the buffer directly through this.
+    pub fn replay(&self) -> &ShardedReplay {
+        &self.replay
     }
 
     /// Insert a chunk's transitions (chunk.obs has len+1 rows; the
@@ -273,69 +319,91 @@ impl Td3Learner {
     }
 
     /// Run `cfg.updates_per_iter` twin-critic updates (with delayed
-    /// actor/target steps) sampling from the replay buffer. No-op while
-    /// the buffer is below the warmup threshold.
+    /// actor/target steps) sampling from the sharded replay buffer.
+    /// No-op while the buffer is below the warmup threshold.
+    ///
+    /// The gradient computation is grain-decomposed
+    /// (`coordinator::learn_pool`): the target-smoothing noise is
+    /// pre-drawn sequentially in row-major order, every grain's partial
+    /// is scaled by `1/B`, and the partials combine under a fixed-order
+    /// tree reduction — so the updated parameters are **bitwise identical
+    /// for every `learner_threads`** (serial at L = 1 runs the same
+    /// grains). Importance weights apply to the value regressions only;
+    /// critic-1 TD residuals feed prioritized-replay updates.
     pub fn update(&mut self, cfg: &Td3Cfg) -> anyhow::Result<Td3UpdateStats> {
         if self.replay.len() < cfg.warmup_steps.max(cfg.batch) {
             return Ok(Td3UpdateStats::default());
         }
         let b = cfg.batch;
         let (o, a) = (self.obs_dim, self.act_dim);
-        let mut sample = ReplaySample::default();
+        let inv_n = 1.0 / b as f32;
+        let mut sample = ShardSample::default();
+        let mut eps = vec![0.0f32; b * a];
         let mut agg = Td3UpdateStats::default();
         for _ in 0..cfg.updates_per_iter {
-            self.replay.sample_into(b, &mut self.rng, &mut sample);
+            self.replay.sample_into(b, &mut self.replay_rng, &mut sample);
 
-            // --- TD target: r + γ(1-d) min(Q1'(s', ã), Q2'(s', ã)),
-            //     ã = clamp(μ'(s') + clamp(ε, ±noise_clip), ±1)
-            let next_obs = Mat::from_vec(b, o, sample.next_obs.clone());
-            let mut next_a =
-                mlp::ddpg_actor(&self.alayout, &self.state.targ_actor, &self.shape, &next_obs);
-            for v in next_a.data.iter_mut() {
-                let eps = (cfg.target_noise * self.rng.normal())
-                    .clamp(-cfg.noise_clip, cfg.noise_clip);
-                *v = (*v + eps).clamp(-1.0, 1.0);
+            // pre-draw the clipped smoothing noise sequentially (row-major)
+            // so RNG consumption is independent of the grain layout
+            for e in eps.iter_mut() {
+                *e = (cfg.target_noise * self.rng.normal()).clamp(-cfg.noise_clip, cfg.noise_clip);
             }
-            let q1 = mlp::ddpg_critic(
-                &self.clayout,
-                &self.state.targ_critic1,
-                &self.shape,
-                &next_obs,
-                &next_a,
-            );
-            let q2 = mlp::ddpg_critic(
-                &self.clayout,
-                &self.state.targ_critic2,
-                &self.shape,
-                &next_obs,
-                &next_a,
-            );
-            let target: Vec<f32> = (0..b)
-                .map(|i| {
-                    sample.rew[i]
-                        + cfg.gamma * (1.0 - sample.done[i]) * q1[i].min(q2[i])
-                })
-                .collect();
+            let ranges = grain_ranges(b);
 
-            // --- twin critic regression steps (shared target)
-            let obs = Mat::from_vec(b, o, sample.obs.clone());
-            let act = Mat::from_vec(b, a, sample.act.clone());
-            let (g1, l1) = mlp::ddpg_critic_grad(
-                &self.clayout,
-                &self.state.critic1,
-                &self.shape,
-                &obs,
-                &act,
-                &target,
-            );
-            let (g2, l2) = mlp::ddpg_critic_grad(
-                &self.clayout,
-                &self.state.critic2,
-                &self.shape,
-                &obs,
-                &act,
-                &target,
-            );
+            // --- per-grain TD target + twin critic gradient partials:
+            //     target = r + γ(1-d) min(Q1'(s', ã), Q2'(s', ã)),
+            //     ã = clamp(μ'(s') + clamp(ε, ±noise_clip), ±1)
+            let (g1, l1, g2, l2, residuals) = {
+                let st = &self.state;
+                let smp = &sample;
+                let noise = &eps;
+                let (alayout, clayout, shape) = (&self.alayout, &self.clayout, &self.shape);
+                let parts = run_grains(ranges.len(), self.threads, |g| {
+                    let (s, e) = ranges[g];
+                    let rows = e - s;
+                    let next_g = Mat::from_vec(rows, o, smp.next_obs[s * o..e * o].to_vec());
+                    let mut na = mlp::ddpg_actor(alayout, &st.targ_actor, shape, &next_g);
+                    for (v, &n) in na.data.iter_mut().zip(&noise[s * a..e * a]) {
+                        *v = (*v + n).clamp(-1.0, 1.0);
+                    }
+                    let q1 = mlp::ddpg_critic(clayout, &st.targ_critic1, shape, &next_g, &na);
+                    let q2 = mlp::ddpg_critic(clayout, &st.targ_critic2, shape, &next_g, &na);
+                    let target: Vec<f32> = (0..rows)
+                        .map(|i| {
+                            smp.rew[s + i]
+                                + cfg.gamma * (1.0 - smp.done[s + i]) * q1[i].min(q2[i])
+                        })
+                        .collect();
+                    let obs_g = Mat::from_vec(rows, o, smp.obs[s * o..e * o].to_vec());
+                    let act_g = Mat::from_vec(rows, a, smp.act[s * a..e * a].to_vec());
+                    let w = Some(&smp.weights[s..e]);
+                    let (g1, l1, res) = mlp::ddpg_critic_grad_weighted(
+                        clayout, &st.critic1, shape, &obs_g, &act_g, &target, w, inv_n,
+                    );
+                    let (g2, l2, _) = mlp::ddpg_critic_grad_weighted(
+                        clayout, &st.critic2, shape, &obs_g, &act_g, &target, w, inv_n,
+                    );
+                    (g1, l1, g2, l2, res)
+                });
+                let n = parts.len();
+                let (mut g1s, mut l1s) = (Vec::with_capacity(n), Vec::with_capacity(n));
+                let (mut g2s, mut l2s) = (Vec::with_capacity(n), Vec::with_capacity(n));
+                let mut residuals = Vec::with_capacity(b);
+                for (g1, l1, g2, l2, res) in parts {
+                    g1s.push(g1);
+                    l1s.push(l1);
+                    g2s.push(g2);
+                    l2s.push(l2);
+                    residuals.extend_from_slice(&res);
+                }
+                (
+                    tree_reduce(g1s),
+                    tree_reduce_scalar(l1s),
+                    tree_reduce(g2s),
+                    tree_reduce_scalar(l2s),
+                    residuals,
+                )
+            };
             let mut c1adam = Adam {
                 cfg: self.adam,
                 m: std::mem::take(&mut self.state.c1m),
@@ -359,16 +427,30 @@ impl Td3Learner {
             agg.updates += 1;
             self.update_count += 1;
 
+            self.replay.update_priorities(&sample.indices, &residuals);
+
             // --- delayed policy + target updates (DPG through critic 1)
             if self.update_count % cfg.policy_delay as u64 == 0 {
-                let (ga, pi_loss) = mlp::ddpg_actor_grad(
-                    &self.alayout,
-                    &self.state.actor,
-                    &self.clayout,
-                    &self.state.critic1,
-                    &self.shape,
-                    &obs,
-                );
+                let (ga, pi_loss) = {
+                    let st = &self.state;
+                    let smp = &sample;
+                    let (alayout, clayout, shape) = (&self.alayout, &self.clayout, &self.shape);
+                    let parts = run_grains(ranges.len(), self.threads, |g| {
+                        let (s, e) = ranges[g];
+                        let rows = e - s;
+                        let obs_g = Mat::from_vec(rows, o, smp.obs[s * o..e * o].to_vec());
+                        mlp::ddpg_actor_grad_scaled(
+                            alayout, &st.actor, clayout, &st.critic1, shape, &obs_g, inv_n,
+                        )
+                    });
+                    let mut grads = Vec::with_capacity(parts.len());
+                    let mut losses = Vec::with_capacity(parts.len());
+                    for (g, l) in parts {
+                        grads.push(g);
+                        losses.push(l);
+                    }
+                    (tree_reduce(grads), tree_reduce_scalar(losses))
+                };
                 let mut aadam = Adam {
                     cfg: self.adam,
                     m: std::mem::take(&mut self.state.am),
@@ -396,8 +478,9 @@ impl Td3Learner {
     }
 }
 
-/// Polyak soft target update: `targ ← (1-τ)·targ + τ·online`.
-fn polyak(targ: &mut [f32], online: &[f32], tau: f32) {
+/// Polyak soft target update: `targ ← (1-τ)·targ + τ·online` (shared
+/// with SAC).
+pub(crate) fn polyak(targ: &mut [f32], online: &[f32], tau: f32) {
     for (t, w) in targ.iter_mut().zip(online) {
         *t = (1.0 - tau) * *t + tau * *w;
     }
@@ -422,6 +505,7 @@ impl LearnerDriver for Td3Learner {
         let mut lengths: Vec<usize> = Vec::new();
         let mut busy_per_worker: std::collections::BTreeMap<usize, f64> =
             std::collections::BTreeMap::new();
+        let mut chunks: Vec<ExperienceChunk> = Vec::new();
         while n < cfg.samples_per_iter {
             let c = queue
                 .pop()
@@ -430,7 +514,14 @@ impl LearnerDriver for Td3Learner {
             returns.extend_from_slice(&c.episode_returns);
             lengths.extend_from_slice(&c.episode_lengths);
             *busy_per_worker.entry(c.sampler_id).or_default() += c.busy_secs;
-            self.absorb_chunk(&c);
+            chunks.push(c);
+        }
+        // canonical order before replay insertion + normalizer merges —
+        // the learner's state must be a pure function of the chunk SET,
+        // not of queue arrival interleaving (same rationale as PPO/DDPG)
+        chunks.sort_by_key(|c| (c.policy_version, c.sampler_id, c.env_slot));
+        for c in &chunks {
+            self.absorb_chunk(c);
         }
         let collect_secs = collect_sw.elapsed_secs();
         let virtual_collect_secs = busy_per_worker.values().fold(0.0f64, |a, &b| a.max(b));
@@ -471,6 +562,69 @@ impl LearnerDriver for Td3Learner {
 
     fn final_norm(&self) -> crate::algo::normalizer::NormSnapshot {
         self.norm.snapshot()
+    }
+
+    /// Full off-policy training state INCLUDING replay contents (the
+    /// versioned shard section) and the replay draw cursor, so a resumed
+    /// run replays bitwise-identical minibatches.
+    fn save_state(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_f32s(&self.state.actor);
+        w.put_f32s(&self.state.critic1);
+        w.put_f32s(&self.state.critic2);
+        w.put_f32s(&self.state.targ_actor);
+        w.put_f32s(&self.state.targ_critic1);
+        w.put_f32s(&self.state.targ_critic2);
+        w.put_f32s(&self.state.am);
+        w.put_f32s(&self.state.av);
+        w.put_f32s(&self.state.c1m);
+        w.put_f32s(&self.state.c1v);
+        w.put_f32s(&self.state.c2m);
+        w.put_f32s(&self.state.c2v);
+        w.put_u64(self.state.actor_t);
+        w.put_u64(self.state.critic_t);
+        w.put_u64(self.update_count);
+        let (rs, ri) = self.rng.raw_state();
+        w.put_u128(rs);
+        w.put_u128(ri);
+        self.norm.save_state(&mut w);
+        w.put_u64(self.total_steps);
+        self.replay.save_state(&mut w);
+        self.replay_rng.save_state(&mut w);
+        w.into_vec()
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let actor = r.read_f32s()?;
+        anyhow::ensure!(
+            actor.len() == self.state.actor.len(),
+            "TD3 learner state mismatch: snapshot has {} actor params, this run has {}",
+            actor.len(),
+            self.state.actor.len()
+        );
+        self.state.actor = actor;
+        self.state.critic1 = r.read_f32s()?;
+        self.state.critic2 = r.read_f32s()?;
+        self.state.targ_actor = r.read_f32s()?;
+        self.state.targ_critic1 = r.read_f32s()?;
+        self.state.targ_critic2 = r.read_f32s()?;
+        self.state.am = r.read_f32s()?;
+        self.state.av = r.read_f32s()?;
+        self.state.c1m = r.read_f32s()?;
+        self.state.c1v = r.read_f32s()?;
+        self.state.c2m = r.read_f32s()?;
+        self.state.c2v = r.read_f32s()?;
+        self.state.actor_t = r.read_u64()?;
+        self.state.critic_t = r.read_u64()?;
+        self.update_count = r.read_u64()?;
+        let (rs, ri) = (r.read_u128()?, r.read_u128()?);
+        self.rng = Pcg64::from_raw(rs, ri);
+        self.norm = RunningNorm::load_state(&mut r)?;
+        self.total_steps = r.read_u64()?;
+        self.replay.load_state(&mut r)?;
+        self.replay_rng = ReplayRng::load_state(&mut r)?;
+        Ok(())
     }
 }
 
@@ -603,5 +757,75 @@ mod tests {
         assert_eq!(snap.version, 1);
         assert_eq!(snap.params.len(), actor_layout(3, 1, &[8, 8]).total());
         assert_eq!(&*snap.params, &l.final_params());
+    }
+
+    #[test]
+    fn update_is_thread_count_invariant() {
+        // batch 192 = 3 grains; published params must be bitwise equal
+        // for L ∈ {1, 2, 4} (fixed grains + fixed-order tree reduction)
+        let cfg = Td3Cfg {
+            warmup_steps: 10,
+            batch: 192,
+            updates_per_iter: 4,
+            policy_delay: 2,
+            ..Default::default()
+        };
+        let run = |threads: usize| {
+            let mut l =
+                Td3Learner::with_topology(2, 1, &[16, 16], 1000, 11, 1, ReplayStrategy::Uniform,
+                    threads);
+            let mut rng = Pcg64::new(99);
+            for _ in 0..300 {
+                let o = [rng.normal(), rng.normal()];
+                l.replay.push(&o, &[rng.uniform(-1.0, 1.0)], 1.0, &o, false);
+            }
+            l.update(&cfg).unwrap();
+            l
+        };
+        let base = run(1);
+        for threads in [2, 4] {
+            let l = run(threads);
+            for (name, a, b) in [
+                ("actor", &base.state.actor, &l.state.actor),
+                ("critic1", &base.state.critic1, &l.state.critic1),
+                ("critic2", &base.state.critic2, &l.state.critic2),
+            ] {
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "{name} diverged at L={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_resumes_updates_bitwise() {
+        let cfg = Td3Cfg {
+            warmup_steps: 10,
+            batch: 8,
+            updates_per_iter: 3,
+            policy_delay: 2,
+            ..Default::default()
+        };
+        let mut live = filled_learner(5);
+        live.update(&cfg).unwrap();
+        let blob = LearnerDriver::save_state(&live);
+
+        // restored learner starts from a different seed; the blob must
+        // carry everything, including replay contents + draw cursor
+        let mut restored = Td3Learner::new(2, 1, &[16, 16], 1000, 123);
+        LearnerDriver::load_state(&mut restored, &blob).unwrap();
+        assert_eq!(restored.replay_len(), live.replay_len());
+        live.update(&cfg).unwrap();
+        restored.update(&cfg).unwrap();
+        assert_eq!(live.state.actor, restored.state.actor);
+        assert_eq!(live.state.critic1, restored.state.critic1);
+        assert_eq!(live.state.critic2, restored.state.critic2);
+        assert_eq!(live.update_count, restored.update_count);
+
+        // wrong shape rejected
+        let mut bad = Td3Learner::new(3, 2, &[8], 100, 0);
+        assert!(LearnerDriver::load_state(&mut bad, &blob).is_err());
     }
 }

@@ -18,6 +18,10 @@ pub enum Algo {
     /// policy updates, target-policy smoothing. Native backend only for
     /// now (no TD3 AOT artifacts).
     Td3,
+    /// Soft actor-critic (Haarnoja et al., 2018): twin soft critics,
+    /// reparameterized tanh-Gaussian actor, learned temperature. Native
+    /// backend only for now (no SAC AOT artifacts).
+    Sac,
 }
 
 impl Algo {
@@ -26,6 +30,7 @@ impl Algo {
             "ppo" => Some(Algo::Ppo),
             "ddpg" => Some(Algo::Ddpg),
             "td3" => Some(Algo::Td3),
+            "sac" => Some(Algo::Sac),
             _ => None,
         }
     }
@@ -35,6 +40,36 @@ impl Algo {
             Algo::Ppo => "ppo",
             Algo::Ddpg => "ddpg",
             Algo::Td3 => "td3",
+            Algo::Sac => "sac",
+        }
+    }
+}
+
+/// Replay sampling strategy of the off-policy learners
+/// (`--replay-strategy`). See `replay::shard` for the exact math.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplayStrategy {
+    /// Every window transition equally likely (default).
+    Uniform,
+    /// Proportional prioritization (Schaul et al., 2016): draws weighted
+    /// by `(|td| + eps)^alpha`, importance weights returned per row.
+    /// DDPG/TD3 native path only.
+    Prioritized,
+}
+
+impl ReplayStrategy {
+    pub fn parse(s: &str) -> Option<ReplayStrategy> {
+        match s {
+            "uniform" => Some(ReplayStrategy::Uniform),
+            "prioritized" => Some(ReplayStrategy::Prioritized),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplayStrategy::Uniform => "uniform",
+            ReplayStrategy::Prioritized => "prioritized",
         }
     }
 }
@@ -444,6 +479,51 @@ impl Default for Td3Cfg {
     }
 }
 
+/// SAC hyper-parameters (Haarnoja et al., 2018). The leading fields
+/// mirror [`DdpgCfg`]; the last two drive the entropy temperature.
+/// Exploration comes from the stochastic policy itself, so there is no
+/// `explore_noise` knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SacCfg {
+    /// Replay minibatch size per update.
+    pub batch: usize,
+    /// Discount factor.
+    pub gamma: f32,
+    /// Polyak averaging rate for the two target critics.
+    pub tau: f32,
+    /// Actor Adam learning rate.
+    pub lr_actor: f32,
+    /// Critic Adam learning rate (both critics).
+    pub lr_critic: f32,
+    /// Plain-SGD learning rate on `log(alpha)` (the learned temperature).
+    pub lr_alpha: f32,
+    /// Initial entropy temperature alpha.
+    pub init_alpha: f32,
+    /// Replay ring-buffer capacity in transitions.
+    pub replay_capacity: usize,
+    /// Transitions collected before the first update.
+    pub warmup_steps: usize,
+    /// Gradient updates per training iteration.
+    pub updates_per_iter: usize,
+}
+
+impl Default for SacCfg {
+    fn default() -> Self {
+        Self {
+            batch: 256,
+            gamma: 0.99,
+            tau: 0.005,
+            lr_actor: 3e-4,
+            lr_critic: 3e-4,
+            lr_alpha: 3e-4,
+            init_alpha: 0.2,
+            replay_capacity: 200_000,
+            warmup_steps: 2_000,
+            updates_per_iter: 200,
+        }
+    }
+}
+
 impl PpoCfg {
     /// JSON object of these hyper-parameters (the `"ppo"` section of a
     /// `TrainConfig`, also rendered by `walle info` via the trait).
@@ -500,6 +580,24 @@ impl Td3Cfg {
     }
 }
 
+impl SacCfg {
+    /// JSON object of these hyper-parameters (the `"sac"` section).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::Num(self.batch as f64)),
+            ("gamma", Json::Num(self.gamma as f64)),
+            ("tau", Json::Num(self.tau as f64)),
+            ("lr_actor", Json::Num(self.lr_actor as f64)),
+            ("lr_critic", Json::Num(self.lr_critic as f64)),
+            ("lr_alpha", Json::Num(self.lr_alpha as f64)),
+            ("init_alpha", Json::Num(self.init_alpha as f64)),
+            ("replay_capacity", Json::Num(self.replay_capacity as f64)),
+            ("warmup_steps", Json::Num(self.warmup_steps as f64)),
+            ("updates_per_iter", Json::Num(self.updates_per_iter as f64)),
+        ])
+    }
+}
+
 /// Full run configuration: one source of truth per training run, built
 /// from CLI flags and/or a `--config file.json` and echoed into every
 /// run's `config.json` so results are self-describing.
@@ -508,7 +606,7 @@ pub struct TrainConfig {
     /// Environment name (`pendulum`, `cartpole`, `reacher`,
     /// `halfcheetah` — see `env::registry::ENV_NAMES`).
     pub env: String,
-    /// Learner algorithm driving the run (PPO or DDPG).
+    /// Learner algorithm driving the run (PPO, DDPG, TD3, or SAC).
     pub algo: Algo,
     /// Compute backend executing policy/learner math (AOT XLA artifacts
     /// or the pure-Rust native mirror).
@@ -574,8 +672,23 @@ pub struct TrainConfig {
     pub ddpg: DdpgCfg,
     /// TD3 hyper-parameters (used when `algo == Algo::Td3`).
     pub td3: Td3Cfg,
+    /// SAC hyper-parameters (used when `algo == Algo::Sac`).
+    pub sac: SacCfg,
     /// Parallel-learning shards (further-work §6.2); 1 = single learner.
     pub learner_shards: usize,
+    /// Replay-buffer shards (`--replay-shards`): striped-lock insert lanes
+    /// of the off-policy replay store. Sampled minibatch SETS are a pure
+    /// function of (seed, draw index, contents) — independent of this
+    /// knob (see `replay::shard`).
+    pub replay_shards: usize,
+    /// Off-policy gradient worker threads (`--learner-threads`): minibatch
+    /// grains fan over L workers and recombine through a fixed-order tree
+    /// reduction, so published parameters are bitwise identical for any L
+    /// (see `coordinator::learn_pool`). Native DDPG/TD3 only.
+    pub learner_threads: usize,
+    /// Replay sampling strategy (`--replay-strategy`): `uniform` (default)
+    /// or `prioritized` (proportional PER with importance weights).
+    pub replay_strategy: ReplayStrategy,
     /// Async mode: discard chunks whose policy version lags the current
     /// one by more than this (0 = keep everything). Bounds the
     /// off-policy-ness the PPO ratios see.
@@ -629,7 +742,11 @@ impl Default for TrainConfig {
             ppo: PpoCfg::default(),
             ddpg: DdpgCfg::default(),
             td3: Td3Cfg::default(),
+            sac: SacCfg::default(),
             learner_shards: 1,
+            replay_shards: 1,
+            learner_threads: 1,
+            replay_strategy: ReplayStrategy::Uniform,
             max_staleness: 2,
             checkpoint_every: 0,
             checkpoint_dir: "checkpoints".into(),
@@ -784,6 +901,106 @@ impl TrainConfig {
                 return Err("td3.gamma must be in [0,1]".into());
             }
         }
+        if self.algo == Algo::Sac {
+            if self.backend == Backend::Xla {
+                return Err(
+                    "algo sac has no AOT/XLA artifacts yet — its soft \
+                     actor-critic learner runs native math only; use \
+                     --backend native"
+                        .into(),
+                );
+            }
+            if self.sac.batch == 0 {
+                return Err("sac.batch must be > 0".into());
+            }
+            if !(0.0..=1.0).contains(&self.sac.gamma) {
+                return Err("sac.gamma must be in [0,1]".into());
+            }
+            if self.sac.init_alpha <= 0.0 {
+                return Err("sac.init_alpha must be > 0 (the temperature is \
+                     parameterized as log(alpha))"
+                    .into());
+            }
+            if self.infer_precision == InferPrecision::Int8 {
+                return Err(
+                    "infer_precision int8 snapshots the deterministic actor \
+                     head; the SAC tanh-Gaussian actor has no int8 path yet \
+                     — drop --infer-precision"
+                        .into(),
+                );
+            }
+        }
+        if self.replay_shards == 0 {
+            return Err("replay_shards must be >= 1".into());
+        }
+        if self.learner_threads == 0 {
+            return Err("learner_threads must be >= 1".into());
+        }
+        if self.algo == Algo::Ppo {
+            if self.replay_shards > 1 {
+                return Err(format!(
+                    "replay_shards = {} is an off-policy-only knob (the \
+                     DDPG/TD3/SAC replay store); PPO learns on-policy \
+                     without a replay buffer — drop --replay-shards or \
+                     switch algo",
+                    self.replay_shards
+                ));
+            }
+            if self.learner_threads > 1 {
+                return Err(format!(
+                    "learner_threads = {} is an off-policy-only knob (the \
+                     DDPG/TD3 grained gradient pool); PPO parallelism is \
+                     --learner-shards — drop --learner-threads or switch \
+                     algo",
+                    self.learner_threads
+                ));
+            }
+            if self.replay_strategy != ReplayStrategy::Uniform {
+                return Err(
+                    "replay_strategy is an off-policy-only knob (the \
+                     DDPG/TD3 replay store); PPO learns on-policy without \
+                     a replay buffer — drop --replay-strategy or switch \
+                     algo"
+                        .into(),
+                );
+            }
+        }
+        if self.learner_threads > 1 {
+            if self.backend == Backend::Xla {
+                return Err(
+                    "learner_threads > 1 grains the native gradient math \
+                     behind a fixed-order tree reduction; the fused XLA \
+                     learner path cannot grain — use --backend native"
+                        .into(),
+                );
+            }
+            if self.algo == Algo::Sac {
+                return Err(
+                    "learner_threads > 1 is not wired for SAC yet (its \
+                     learner runs single-threaded); drop --learner-threads \
+                     or use --algo ddpg/td3"
+                        .into(),
+                );
+            }
+        }
+        if self.replay_strategy == ReplayStrategy::Prioritized {
+            if self.backend == Backend::Xla {
+                return Err(
+                    "replay_strategy prioritized applies per-row importance \
+                     weights in the native critic grains; the fused XLA \
+                     learner is unweighted — use --backend native"
+                        .into(),
+                );
+            }
+            if self.algo == Algo::Sac {
+                return Err(
+                    "replay_strategy prioritized is not wired for SAC yet \
+                     (its learner samples uniformly); drop \
+                     --replay-strategy or use --algo ddpg/td3"
+                        .into(),
+                );
+            }
+        }
         Ok(())
     }
 
@@ -840,6 +1057,18 @@ impl TrainConfig {
             "learner_shards".into(),
             Json::Num(self.learner_shards as f64),
         );
+        m.insert(
+            "replay_shards".into(),
+            Json::Num(self.replay_shards as f64),
+        );
+        m.insert(
+            "learner_threads".into(),
+            Json::Num(self.learner_threads as f64),
+        );
+        m.insert(
+            "replay_strategy".into(),
+            Json::Str(self.replay_strategy.name().into()),
+        );
         m.insert("max_staleness".into(), Json::Num(self.max_staleness as f64));
         m.insert(
             "checkpoint_every".into(),
@@ -859,6 +1088,7 @@ impl TrainConfig {
         m.insert("ppo".into(), self.ppo.to_json());
         m.insert("ddpg".into(), self.ddpg.to_json());
         m.insert("td3".into(), self.td3.to_json());
+        m.insert("sac".into(), self.sac.to_json());
         Json::Obj(m)
     }
 
@@ -952,6 +1182,16 @@ impl TrainConfig {
         }
         if let Some(v) = j.opt("learner_shards") {
             cfg.learner_shards = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("replay_shards") {
+            cfg.replay_shards = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("learner_threads") {
+            cfg.learner_threads = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("replay_strategy") {
+            cfg.replay_strategy = ReplayStrategy::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad replay_strategy {v:?}")))?;
         }
         if let Some(v) = j.opt("max_staleness") {
             cfg.max_staleness = v.as_f64()? as u64;
@@ -1073,6 +1313,38 @@ impl TrainConfig {
                 cfg.td3.noise_clip = v.as_f32()?;
             }
         }
+        if let Some(s) = j.opt("sac") {
+            if let Some(v) = s.opt("batch") {
+                cfg.sac.batch = v.as_usize()?;
+            }
+            if let Some(v) = s.opt("gamma") {
+                cfg.sac.gamma = v.as_f32()?;
+            }
+            if let Some(v) = s.opt("tau") {
+                cfg.sac.tau = v.as_f32()?;
+            }
+            if let Some(v) = s.opt("lr_actor") {
+                cfg.sac.lr_actor = v.as_f32()?;
+            }
+            if let Some(v) = s.opt("lr_critic") {
+                cfg.sac.lr_critic = v.as_f32()?;
+            }
+            if let Some(v) = s.opt("lr_alpha") {
+                cfg.sac.lr_alpha = v.as_f32()?;
+            }
+            if let Some(v) = s.opt("init_alpha") {
+                cfg.sac.init_alpha = v.as_f32()?;
+            }
+            if let Some(v) = s.opt("replay_capacity") {
+                cfg.sac.replay_capacity = v.as_usize()?;
+            }
+            if let Some(v) = s.opt("warmup_steps") {
+                cfg.sac.warmup_steps = v.as_usize()?;
+            }
+            if let Some(v) = s.opt("updates_per_iter") {
+                cfg.sac.updates_per_iter = v.as_usize()?;
+            }
+        }
         Ok(cfg)
     }
 
@@ -1166,7 +1438,7 @@ mod tests {
 
     #[test]
     fn bad_enum_strings_error() {
-        let j = Json::parse(r#"{"algo": "sac"}"#).unwrap();
+        let j = Json::parse(r#"{"algo": "a2c"}"#).unwrap();
         assert!(TrainConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"backend": "gpu"}"#).unwrap();
         assert!(TrainConfig::from_json(&j).is_err());
@@ -1396,6 +1668,97 @@ mod tests {
         cfg.algo = Algo::Td3;
         assert!(cfg.validate().is_err());
         cfg.learner_shards = 1;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn sac_round_trips_and_validates() {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.algo = Algo::Sac;
+        cfg.sac.init_alpha = 0.1;
+        cfg.sac.lr_alpha = 1e-4;
+        cfg.validate().unwrap();
+        let back = TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+        assert_eq!(Algo::parse("sac"), Some(Algo::Sac));
+        assert_eq!(Algo::Sac.name(), "sac");
+        // SAC has no AOT artifacts: the XLA backend is rejected loudly
+        cfg.backend = Backend::Xla;
+        assert!(cfg.validate().unwrap_err().contains("sac"));
+        cfg.backend = Backend::Native;
+        cfg.sac.init_alpha = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.sac.init_alpha = 0.2;
+        cfg.sac.batch = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn replay_knobs_parse_round_trip_and_validate() {
+        let d = TrainConfig::default();
+        assert_eq!(d.replay_shards, 1);
+        assert_eq!(d.learner_threads, 1);
+        assert_eq!(d.replay_strategy, ReplayStrategy::Uniform);
+        assert_eq!(
+            ReplayStrategy::parse("prioritized"),
+            Some(ReplayStrategy::Prioritized)
+        );
+        assert_eq!(ReplayStrategy::parse("uniform"), Some(ReplayStrategy::Uniform));
+        assert_eq!(ReplayStrategy::parse("rank"), None);
+        assert_eq!(ReplayStrategy::Prioritized.name(), "prioritized");
+
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.algo = Algo::Ddpg;
+        cfg.replay_shards = 4;
+        cfg.learner_threads = 2;
+        cfg.replay_strategy = ReplayStrategy::Prioritized;
+        cfg.validate().unwrap();
+        let back = TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, back);
+
+        // zero is never a shard/thread count
+        cfg.replay_shards = 0;
+        assert!(cfg.validate().is_err());
+        cfg.replay_shards = 4;
+        cfg.learner_threads = 0;
+        assert!(cfg.validate().is_err());
+        cfg.learner_threads = 2;
+
+        // the grained reduction and PER weights live in the native path
+        cfg.backend = Backend::Xla;
+        assert!(cfg.validate().is_err());
+        cfg.backend = Backend::Native;
+
+        // SAC takes sharded replay but not threads/prioritized yet
+        cfg.algo = Algo::Sac;
+        assert!(cfg.validate().unwrap_err().contains("learner_threads"));
+        cfg.learner_threads = 1;
+        assert!(cfg.validate().unwrap_err().contains("prioritized"));
+        cfg.replay_strategy = ReplayStrategy::Uniform;
+        assert!(cfg.validate().is_ok());
+
+        assert!(TrainConfig::from_json(
+            &Json::parse(r#"{"replay_strategy": "rank"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn replay_knobs_are_off_policy_only() {
+        let mut cfg = TrainConfig::default();
+        assert_eq!(cfg.algo, Algo::Ppo);
+        cfg.replay_shards = 2;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("off-policy-only"), "unhelpful error: {err}");
+        cfg.replay_shards = 1;
+        cfg.learner_threads = 4;
+        assert!(cfg.validate().unwrap_err().contains("off-policy-only"));
+        cfg.learner_threads = 1;
+        cfg.replay_strategy = ReplayStrategy::Prioritized;
+        assert!(cfg.validate().unwrap_err().contains("off-policy-only"));
+        cfg.replay_strategy = ReplayStrategy::Uniform;
         assert!(cfg.validate().is_ok());
     }
 

@@ -162,7 +162,7 @@ mod tests {
         cfg.hidden = vec![8, 8];
         let f = NativeFactory::new(3, 1, &[8, 8], cfg.ppo.clone(), cfg.ddpg.clone());
         let norm = NormSnapshot::identity(3);
-        for algo_id in [Algo::Ppo, Algo::Ddpg, Algo::Td3] {
+        for algo_id in [Algo::Ppo, Algo::Ddpg, Algo::Td3, Algo::Sac] {
             cfg.algo = algo_id;
             let algo = algorithm_from_config(&cfg);
             let params = vec![0.01f32; algo.policy_param_count(&f, &cfg)];

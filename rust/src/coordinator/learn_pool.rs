@@ -1,0 +1,193 @@
+//! Deterministic parallel gradient pool for the off-policy learners (PR 8).
+//!
+//! A minibatch of B rows is cut into fixed-size *grains* of
+//! [`GRAIN_ROWS`] rows. Each grain's forward/backward runs independently
+//! (row-parallel math: per-grain outputs are bitwise identical no matter
+//! which thread computes them), then the per-grain gradient partials are
+//! combined by [`tree_reduce`] — a fixed pairwise reduction whose float
+//! summation order depends only on the grain order, never on thread
+//! scheduling. The same grain decomposition runs at `--learner-threads 1`
+//! (serially) and at any L > 1, which is what makes the published
+//! parameters **bitwise identical for every L** — a full-batch fused pass
+//! would associate the row sums differently and could never match the
+//! grained result bitwise. `rust/tests/chaos.rs` enforces the invariance
+//! end-to-end for DDPG and TD3.
+//!
+//! Worker w owns grains `w, w+L, w+2L, …` (static round-robin — no work
+//! queue, no ordering nondeterminism); results are placed into a slot
+//! array by grain index before reduction. Threads are scoped
+//! (`std::thread::scope`), so a panicking grain propagates as a learner
+//! panic instead of a detached-thread leak.
+
+/// Rows per gradient grain. Fixed — independent of thread count — so the
+/// reduction tree (and therefore every float) is L-invariant.
+pub const GRAIN_ROWS: usize = 64;
+
+/// Cut `n_rows` into `[start, end)` grain ranges of [`GRAIN_ROWS`] rows
+/// (last grain ragged).
+pub fn grain_ranges(n_rows: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(n_rows.div_euclid(GRAIN_ROWS) + 1);
+    let mut start = 0;
+    while start < n_rows {
+        let end = (start + GRAIN_ROWS).min(n_rows);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// Run `f(grain_index)` for every grain across `threads` workers and
+/// return the results **in grain order**. `threads <= 1` runs serially on
+/// the caller; either way the output is identical because `f` is pure
+/// per-grain and placement is by index.
+pub fn run_grains<T, F>(n_grains: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n_grains <= 1 {
+        return (0..n_grains).map(f).collect();
+    }
+    let workers = threads.min(n_grains);
+    let mut slots: Vec<Option<T>> = (0..n_grains).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let f = &f;
+                s.spawn(move || {
+                    (w..n_grains)
+                        .step_by(workers)
+                        .map(|g| (g, f(g)))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (g, v) in h.join().expect("learn-pool worker panicked") {
+                slots[g] = Some(v);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|v| v.expect("grain result missing"))
+        .collect()
+}
+
+/// Pairwise tree reduction of equal-length partial vectors: adjacent
+/// pairs are summed until one remains. The association depends only on
+/// the input order, so the result is bitwise stable across thread counts.
+pub fn tree_reduce(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!parts.is_empty(), "tree_reduce over zero partials");
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity((parts.len() + 1) / 2);
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                debug_assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().unwrap()
+}
+
+/// Scalar companion to [`tree_reduce`] (losses, per-grain row counts):
+/// same pairwise association.
+pub fn tree_reduce_scalar(mut parts: Vec<f32>) -> f32 {
+    assert!(!parts.is_empty(), "tree_reduce_scalar over zero partials");
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity((parts.len() + 1) / 2);
+        let mut it = parts.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(a + b),
+                None => next.push(a),
+            }
+        }
+        parts = next;
+    }
+    parts[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn grain_ranges_cover_exactly() {
+        for n in [0, 1, 63, 64, 65, 200, 4096] {
+            let gs = grain_ranges(n);
+            let mut covered = 0;
+            let mut cursor = 0;
+            for &(s, e) in &gs {
+                assert_eq!(s, cursor);
+                assert!(e > s && e - s <= GRAIN_ROWS);
+                covered += e - s;
+                cursor = e;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn run_grains_result_is_thread_count_invariant() {
+        // f32 partial sums whose order of combination matters: identical
+        // results across L prove both placement-by-index and reduction.
+        let mut rng = Pcg64::new(3);
+        let data: Vec<Vec<f32>> = (0..13)
+            .map(|_| {
+                let mut v = vec![0.0f32; 32];
+                rng.fill_normal(&mut v);
+                v
+            })
+            .collect();
+        let run = |threads: usize| {
+            let parts = run_grains(data.len(), threads, |g| data[g].clone());
+            tree_reduce(parts)
+        };
+        let want = run(1);
+        for threads in [2, 3, 4, 8, 32] {
+            let got = run(threads);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_reduce_uses_fixed_pairwise_order() {
+        // 3 partials: ((a+b) + c) under pairwise reduction
+        let a = vec![1e8f32];
+        let b = vec![-1e8f32];
+        let c = vec![1.0f32];
+        let got = tree_reduce(vec![a.clone(), b.clone(), c.clone()]);
+        let want = ((1e8f32 + -1e8f32) + 1.0f32).to_bits();
+        assert_eq!(got[0].to_bits(), want);
+        assert_eq!(tree_reduce_scalar(vec![1e8, -1e8, 1.0]).to_bits(), want);
+    }
+
+    #[test]
+    fn run_grains_serial_matches_parallel_for_single_grain() {
+        let out = run_grains(1, 8, |g| g * 2);
+        assert_eq!(out, vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "learn-pool worker panicked")]
+    fn panicking_grain_propagates() {
+        run_grains(4, 2, |g| {
+            if g == 3 {
+                panic!("injected grain fault");
+            }
+            g
+        });
+    }
+}

@@ -13,15 +13,18 @@
 //!      boundary.
 
 use crate::algo::api::LearnerDriver;
-use crate::algo::ddpg::ddpg_update;
+use crate::algo::ddpg::{ddpg_update, ddpg_update_grained};
 use crate::algo::normalizer::RunningNorm;
 use crate::algo::ppo::{annealed_lr, ppo_update, ppo_update_sharded};
 use crate::algo::rollout::{ChunkEnd, ExperienceChunk, PpoDataset};
-use crate::config::TrainConfig;
+use crate::config::{ReplayStrategy, TrainConfig};
 use crate::coordinator::metrics::IterationMetrics;
 use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
-use crate::replay::ReplayBuffer;
+use crate::nn::adam::AdamCfg;
+use crate::nn::layout::{actor_layout, critic_layout, ParamLayout};
+use crate::nn::mlp::NetShape;
+use crate::replay::shard::{ReplayRng, ShardedReplay};
 use crate::runtime::{DdpgLearnerBackend, DdpgTrainState, PpoLearnerBackend, PpoTrainState};
 use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::rng::Pcg64;
@@ -293,14 +296,35 @@ impl LearnerDriver for PpoLearner {
     }
 }
 
-/// DDPG learner (further-work §6.1): replay buffer + off-policy updates
+/// Gradient engine of the [`DdpgLearner`].
+enum DdpgEngine {
+    /// Fused full-batch `DdpgLearnerBackend::train_step` — the XLA
+    /// artifact path (its internal reduction order is the artifact's).
+    Fused,
+    /// Grain-decomposed native update
+    /// ([`crate::algo::ddpg::ddpg_update_grained`]): bitwise identical
+    /// for every `threads`, importance-weighted under prioritized replay.
+    Grained {
+        threads: usize,
+        alayout: ParamLayout,
+        clayout: ParamLayout,
+        shape: NetShape,
+        adam: AdamCfg,
+    },
+}
+
+/// DDPG learner (further-work §6.1): sharded replay + off-policy updates
 /// under the same parallel-collection architecture.
 pub struct DdpgLearner {
     pub state: DdpgTrainState,
     backend: Box<dyn DdpgLearnerBackend>,
-    replay: ReplayBuffer,
+    replay: ShardedReplay,
+    /// Seed-addressable minibatch draw stream: the sampled transition
+    /// set is a pure function of (seed, draw index, buffer contents) —
+    /// independent of shard count and checkpointable as two u64s.
+    replay_rng: ReplayRng,
+    engine: DdpgEngine,
     norm: RunningNorm,
-    rng: Pcg64,
     total_steps: u64,
     wall: Stopwatch,
     obs_dim: usize,
@@ -308,6 +332,8 @@ pub struct DdpgLearner {
 }
 
 impl DdpgLearner {
+    /// Single-shard, single-thread, fused-engine learner (the legacy
+    /// construction; unit tests and the XLA path use it).
     pub fn new(
         backend: Box<dyn DdpgLearnerBackend>,
         actor: Vec<f32>,
@@ -317,12 +343,58 @@ impl DdpgLearner {
         replay_capacity: usize,
         seed: u64,
     ) -> Self {
+        Self::with_topology(
+            backend,
+            actor,
+            critic,
+            obs_dim,
+            act_dim,
+            replay_capacity,
+            seed,
+            1,
+            ReplayStrategy::Uniform,
+            1,
+            None,
+        )
+    }
+
+    /// Full topology constructor: `replay_shards` stripes the buffer's
+    /// insert locks, `strategy` picks uniform vs prioritized draws, and
+    /// `learner_threads` fans the gradient grains out (pure wall-clock
+    /// knob — see [`ddpg_update_grained`]). `hidden = Some(widths)`
+    /// selects the grained native engine; `None` keeps the fused
+    /// `train_step` backend (XLA).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_topology(
+        backend: Box<dyn DdpgLearnerBackend>,
+        actor: Vec<f32>,
+        critic: Vec<f32>,
+        obs_dim: usize,
+        act_dim: usize,
+        replay_capacity: usize,
+        seed: u64,
+        replay_shards: usize,
+        strategy: ReplayStrategy,
+        learner_threads: usize,
+        hidden: Option<&[usize]>,
+    ) -> Self {
+        let engine = match hidden {
+            Some(h) => DdpgEngine::Grained {
+                threads: learner_threads.max(1),
+                alayout: actor_layout(obs_dim, act_dim, h),
+                clayout: critic_layout(obs_dim, act_dim, h),
+                shape: NetShape::new(obs_dim, act_dim, h),
+                adam: AdamCfg::default(),
+            },
+            None => DdpgEngine::Fused,
+        };
         Self {
             state: DdpgTrainState::new(actor, critic),
             backend,
-            replay: ReplayBuffer::new(replay_capacity, obs_dim, act_dim),
+            replay: ShardedReplay::new(replay_capacity, obs_dim, act_dim, replay_shards, strategy),
+            replay_rng: ReplayRng::new(seed),
+            engine,
             norm: RunningNorm::new(obs_dim, 10.0),
-            rng: Pcg64::with_stream(seed, 0xDDD),
             total_steps: 0,
             wall: Stopwatch::start(),
             obs_dim,
@@ -393,13 +465,32 @@ impl DdpgLearner {
             .fold(0.0f64, |a, &b| a.max(b));
 
         let learn_sw = Stopwatch::start();
-        let stats = ddpg_update(
-            self.backend.as_mut(),
-            &mut self.state,
-            &self.replay,
-            &cfg.ddpg,
-            &mut self.rng,
-        )?;
+        let stats = match &self.engine {
+            DdpgEngine::Fused => ddpg_update(
+                self.backend.as_mut(),
+                &mut self.state,
+                &self.replay,
+                &cfg.ddpg,
+                &mut self.replay_rng,
+            )?,
+            DdpgEngine::Grained {
+                threads,
+                alayout,
+                clayout,
+                shape,
+                adam,
+            } => ddpg_update_grained(
+                &mut self.state,
+                &self.replay,
+                &cfg.ddpg,
+                &mut self.replay_rng,
+                alayout,
+                clayout,
+                shape,
+                *adam,
+                *threads,
+            )?,
+        };
         let learn_secs = learn_sw.elapsed_secs();
 
         store.publish(self.state.actor.clone(), self.norm.snapshot());
@@ -447,12 +538,12 @@ impl LearnerDriver for DdpgLearner {
         self.norm.snapshot()
     }
 
-    /// Off-policy training state: actor/critic + targets, both Adam
-    /// moment pairs, update RNG, normalizer, counters, and the replay
-    /// cursor. Replay *contents* are deliberately not persisted (the
-    /// buffer can be hundreds of MB); a resumed run restarts with an
-    /// empty buffer at the saved cursor, so update quality dips until it
-    /// refills — documented in docs/OPERATIONS.md.
+    /// Full off-policy training state: actor/critic + targets, both Adam
+    /// moment pairs, normalizer, counters, the replay buffer *contents*
+    /// (the versioned shard section — shard-count-portable), and the
+    /// replay draw cursor. A resumed run therefore replays bitwise
+    /// identical minibatches; `rust/tests/chaos.rs` enforces
+    /// kill-then-resume == uninterrupted for DDPG end to end.
     fn save_state(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
         w.put_f32s(&self.state.actor);
@@ -464,14 +555,10 @@ impl LearnerDriver for DdpgLearner {
         w.put_f32s(&self.state.cm);
         w.put_f32s(&self.state.cv);
         w.put_u64(self.state.t);
-        let (rs, ri) = self.rng.raw_state();
-        w.put_u128(rs);
-        w.put_u128(ri);
         self.norm.save_state(&mut w);
         w.put_u64(self.total_steps);
-        let (len, head) = self.replay.cursor();
-        w.put_usize(len);
-        w.put_usize(head);
+        self.replay.save_state(&mut w);
+        self.replay_rng.save_state(&mut w);
         w.into_vec()
     }
 
@@ -493,12 +580,10 @@ impl LearnerDriver for DdpgLearner {
         self.state.cm = r.read_f32s()?;
         self.state.cv = r.read_f32s()?;
         self.state.t = r.read_u64()?;
-        let (rs, ri) = (r.read_u128()?, r.read_u128()?);
-        self.rng = Pcg64::from_raw(rs, ri);
         self.norm = RunningNorm::load_state(&mut r)?;
         self.total_steps = r.read_u64()?;
-        let (len, head) = (r.read_usize()?, r.read_usize()?);
-        self.replay.set_cursor(len, head);
+        self.replay.load_state(&mut r)?;
+        self.replay_rng = ReplayRng::load_state(&mut r)?;
         Ok(())
     }
 }

@@ -24,6 +24,10 @@
 //!   shared); both write machine-readable `BENCH_*.json` results.
 //! * [`learner`] — the asynchronous agent process (collect → GAE →
 //!   minibatch epochs → publish), PPO and DDPG variants.
+//! * [`learn_pool`] — deterministic parallel gradient pool for the
+//!   off-policy learners: fixed-size minibatch grains fanned over
+//!   `--learner-threads` workers, combined by a fixed-order tree
+//!   reduction so published parameters are bitwise identical for any L.
 //! * [`orchestrator`] — spawn/join lifecycle, sync/async modes, and the
 //!   self-healing supervisor loops (respawn with restored state under a
 //!   bounded restart budget).
@@ -34,6 +38,7 @@
 //! * [`eval`] — deterministic policy evaluation.
 
 pub mod eval;
+pub mod learn_pool;
 pub mod learner;
 pub mod metrics;
 pub mod orchestrator;

@@ -33,9 +33,12 @@
 //! ```
 //!
 //! Every pipeline stage dispatches through the [`algo::api::Algorithm`]
-//! trait (PPO, DDPG, TD3 ship in-tree); `docs/API.md` documents the
+//! trait (PPO, DDPG, TD3, SAC ship in-tree); `docs/API.md` documents the
 //! trait contract, the builder, and the add-your-own-algorithm
-//! walkthrough.
+//! walkthrough. The off-policy learners draw from a sharded replay
+//! buffer ([`replay::shard`]) and can spread the minibatch gradient over
+//! `--learner-threads` workers with a fixed-order tree reduction, so
+//! published parameters stay bitwise identical for any thread count.
 
 pub mod algo;
 pub mod bench;

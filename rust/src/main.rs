@@ -3,7 +3,7 @@
 //! logic lives in the library).
 //!
 //! Subcommands:
-//!   train    train a policy (PPO, DDPG, or TD3) with N parallel samplers
+//!   train    train a policy (PPO, DDPG, TD3, or SAC) with N parallel samplers
 //!   eval     evaluate a saved policy checkpoint deterministically
 //!   figures  regenerate the paper's figures (3–7) as CSV series
 //!   info     show the resolved SessionSpec for a config
@@ -17,7 +17,7 @@
 use walle::bench::figures;
 use walle::config::{
     Algo, Backend, InferEpoch, InferPrecision, InferShards, InferWait, InferenceMode, KernelsCfg,
-    TrainConfig,
+    ReplayStrategy, TrainConfig,
 };
 use walle::session::{load_params, Session};
 use walle::util::cli::Args;
@@ -73,7 +73,17 @@ TRAIN FLAGS:
                          relative drift, higher throughput)
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
-  --algo NAME            learner algorithm: ppo|ddpg|td3
+  --algo NAME            learner algorithm: ppo|ddpg|td3|sac
+  --replay-shards S      off-policy replay-buffer shards (default 1); the
+                         sampled minibatch is shard-count invariant, so S
+                         is a pure insert-throughput knob
+  --learner-threads L    off-policy learner threads (default 1); grained
+                         gradients + fixed-order tree reduction keep
+                         published params bitwise identical for any L
+                         (native backend only)
+  --replay-strategy S    off-policy sampling: uniform (default) or
+                         prioritized (proportional TD error, normalized
+                         importance weights)
   --sync                 synchronous barrier mode (ablation)
   --checkpoint-every K   write a durable checkpoint after every K-th
                          iteration into --checkpoint-dir (0 = off)
@@ -144,8 +154,8 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
         cfg.env = env.to_string();
     }
     if let Some(a) = args.get("algo") {
-        cfg.algo =
-            Algo::parse(a).ok_or_else(|| anyhow::anyhow!("bad --algo {a:?} (ppo|ddpg|td3)"))?;
+        cfg.algo = Algo::parse(a)
+            .ok_or_else(|| anyhow::anyhow!("bad --algo {a:?} (ppo|ddpg|td3|sac)"))?;
     }
     if let Some(b) = args.get("backend") {
         cfg.backend = Backend::parse(b).ok_or_else(|| anyhow::anyhow!("bad --backend {b:?}"))?;
@@ -202,6 +212,14 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     cfg.learner_shards = args.usize_or("learner-shards", cfg.learner_shards)?;
     cfg.ppo.lr = args.f32_or("lr", cfg.ppo.lr)?;
     cfg.ppo.epochs = args.usize_or("epochs", cfg.ppo.epochs)?;
+    // off-policy replay/learner knobs (cfg.validate() rejects them under
+    // PPO and checks the backend constraints)
+    cfg.replay_shards = args.usize_or("replay-shards", cfg.replay_shards)?;
+    cfg.learner_threads = args.usize_or("learner-threads", cfg.learner_threads)?;
+    if let Some(s) = args.get("replay-strategy") {
+        cfg.replay_strategy = ReplayStrategy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --replay-strategy {s:?} (uniform|prioritized)"))?;
+    }
     if args.has("sync") {
         cfg.async_mode = false;
     }

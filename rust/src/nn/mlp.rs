@@ -451,6 +451,251 @@ pub fn ddpg_actor_grad(
     (grad, pi_loss)
 }
 
+/// Per-grain critic gradient for the deterministic parallel learner:
+/// squared TD error with optional importance weights, scaled by a
+/// caller-supplied `inv_n` (1 / full-batch size — NOT 1 / grain size, so
+/// grain partials sum to the full-batch gradient under `tree_reduce`).
+/// Returns `(grad, loss_part, residuals)`; `residuals[i] = q_i - target_i`
+/// feeds prioritized-replay updates.
+pub fn ddpg_critic_grad_weighted(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    action: &Mat,
+    target: &[f32],
+    weights: Option<&[f32]>,
+    inv_n: f32,
+) -> (Vec<f32>, f32, Vec<f32>) {
+    let nh = shape.hidden.len();
+    let x = concat_cols(obs, action);
+    let acts = mlp_forward(layout, flat, "critic", &x, nh, Act::Relu, Act::Id);
+    let q = &acts.last().unwrap().data;
+    let mut loss = 0.0;
+    let mut dq = Mat::zeros(q.len(), 1);
+    let mut residuals = vec![0.0f32; q.len()];
+    for i in 0..q.len() {
+        let w = weights.map_or(1.0, |ws| ws[i]);
+        let e = q[i] - target[i];
+        residuals[i] = e;
+        loss += w * e * e * inv_n;
+        dq.data[i] = 2.0 * w * e * inv_n;
+    }
+    let mut grad = vec![0.0f32; layout.total()];
+    mlp_backward(layout, flat, "critic", &acts, dq, nh, Act::Relu, Act::Id, &mut grad);
+    (grad, loss, residuals)
+}
+
+/// Per-grain DPG actor gradient: like [`ddpg_actor_grad`] but scaled by a
+/// caller-supplied `inv_n` instead of `1 / grain rows`, so grain partials
+/// tree-reduce to the full-batch gradient.
+pub fn ddpg_actor_grad_scaled(
+    alayout: &ParamLayout,
+    actor_flat: &[f32],
+    clayout: &ParamLayout,
+    critic_flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    inv_n: f32,
+) -> (Vec<f32>, f32) {
+    let nh = shape.hidden.len();
+    let acts = mlp_forward(alayout, actor_flat, "actor", obs, nh, Act::Relu, Act::Tanh);
+    let action = acts.last().unwrap().clone();
+    let x = concat_cols(obs, &action);
+    let cacts = mlp_forward(clayout, critic_flat, "critic", &x, nh, Act::Relu, Act::Id);
+    let q = &cacts.last().unwrap().data;
+    let pi_loss = -q.iter().sum::<f32>() * inv_n;
+
+    let dq = Mat::from_vec(q.len(), 1, vec![-inv_n; q.len()]);
+    let mut scratch = vec![0.0f32; clayout.total()]; // critic grads discarded
+    let dx = mlp_backward(
+        clayout, critic_flat, "critic", &cacts, dq, nh, Act::Relu, Act::Id, &mut scratch,
+    );
+    let mut da = Mat::zeros(obs.rows, shape.act_dim);
+    for r in 0..obs.rows {
+        da.row_mut(r)
+            .copy_from_slice(&dx.row(r)[shape.obs_dim..]);
+    }
+    let mut grad = vec![0.0f32; alayout.total()];
+    mlp_backward(
+        alayout, actor_flat, "actor", &acts, da, nh, Act::Relu, Act::Tanh, &mut grad,
+    );
+    (grad, pi_loss)
+}
+
+// ---------------------------------------------------------------------------
+// SAC reparameterized tanh-Gaussian actor
+// ---------------------------------------------------------------------------
+
+/// SAC log-std head clamp bounds (standard soft actor-critic values).
+pub const SAC_LOG_STD_MIN: f32 = -20.0;
+pub const SAC_LOG_STD_MAX: f32 = 2.0;
+
+/// Numerically stable `ln(1 + e^x)`.
+fn softplus(x: f32) -> f32 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Output of one batched SAC `act`: squashed sample, its tanh-corrected
+/// log-density, and the deterministic (mean) action for evaluation.
+#[derive(Debug, Clone)]
+pub struct SacActOut {
+    pub action: Mat,
+    pub logp: Vec<f32>,
+    pub mean_action: Mat,
+}
+
+/// SAC actor forward. The head (relu hidden, identity out, width
+/// `2 * act_dim` over `actor_layout(obs_dim, 2 * act_dim, hidden)`) splits
+/// into per-dim mean and clamped log-std; the reparameterized sample is
+/// `a = tanh(mean + exp(log_std) * eps)` with
+/// `log pi(a) = sum_j [-0.5 eps_j^2 - log_std_j - 0.5 LOG_2PI
+///                     - log(1 - tanh^2 u_j)]`,
+/// using the stable identity
+/// `log(1 - tanh^2 u) = 2 (ln 2 - u - softplus(-2u))`. Zero (or empty)
+/// `eps` yields the mode `tanh(mean)` — the evaluation path.
+pub fn sac_act(
+    layout: &ParamLayout,
+    flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    eps: &[f32],
+) -> SacActOut {
+    let nh = shape.hidden.len();
+    let acts = mlp_forward(layout, flat, "actor", obs, nh, Act::Relu, Act::Id);
+    let head = acts.last().unwrap();
+    let a_dim = shape.act_dim;
+    debug_assert_eq!(head.cols, 2 * a_dim, "SAC head must be mean ++ log_std");
+    let rows = head.rows;
+    let mut action = Mat::zeros(rows, a_dim);
+    let mut mean_action = Mat::zeros(rows, a_dim);
+    let mut logp = vec![0.0f32; rows];
+    for r in 0..rows {
+        let h = head.row(r);
+        let mut lp = 0.0f32;
+        for j in 0..a_dim {
+            let mean = h[j];
+            let ls = h[a_dim + j].clamp(SAC_LOG_STD_MIN, SAC_LOG_STD_MAX);
+            let e = if eps.is_empty() { 0.0 } else { eps[r * a_dim + j] };
+            let u = mean + ls.exp() * e;
+            lp += -0.5 * e * e - ls - 0.5 * LOG_2PI
+                - 2.0 * (std::f32::consts::LN_2 - u - softplus(-2.0 * u));
+            *action.at_mut(r, j) = u.tanh();
+            *mean_action.at_mut(r, j) = mean.tanh();
+        }
+        logp[r] = lp;
+    }
+    SacActOut {
+        action,
+        logp,
+        mean_action,
+    }
+}
+
+/// Gradient of the SAC policy objective
+/// `inv_n * sum_i [alpha * log pi(a_i|s_i) - min(Q1(s_i,a_i), Q2(s_i,a_i))]`
+/// w.r.t. the actor parameters, with `a_i` reparameterized through `eps`.
+/// Returns `(actor_grad, pi_loss, logp_sum)`; `logp_sum` (un-scaled) feeds
+/// the temperature update. Clamped log-std dims get zero gradient.
+pub fn sac_actor_grad(
+    alayout: &ParamLayout,
+    actor_flat: &[f32],
+    clayout: &ParamLayout,
+    c1_flat: &[f32],
+    c2_flat: &[f32],
+    shape: &NetShape,
+    obs: &Mat,
+    eps: &[f32],
+    alpha: f32,
+    inv_n: f32,
+) -> (Vec<f32>, f32, f32) {
+    let nh = shape.hidden.len();
+    let a_dim = shape.act_dim;
+    let rows = obs.rows;
+    let acts = mlp_forward(alayout, actor_flat, "actor", obs, nh, Act::Relu, Act::Id);
+    let head = acts.last().unwrap();
+    debug_assert_eq!(head.cols, 2 * a_dim);
+
+    let mut action = Mat::zeros(rows, a_dim);
+    let mut stds = Mat::zeros(rows, a_dim);
+    let mut clamped = vec![false; rows * a_dim];
+    let mut logp = vec![0.0f32; rows];
+    for r in 0..rows {
+        let h = head.row(r);
+        let mut lp = 0.0f32;
+        for j in 0..a_dim {
+            let raw = h[a_dim + j];
+            let ls = raw.clamp(SAC_LOG_STD_MIN, SAC_LOG_STD_MAX);
+            let k = r * a_dim + j;
+            clamped[k] = raw != ls;
+            let e = if eps.is_empty() { 0.0 } else { eps[k] };
+            let std = ls.exp();
+            let u = h[j] + std * e;
+            lp += -0.5 * e * e - ls - 0.5 * LOG_2PI
+                - 2.0 * (std::f32::consts::LN_2 - u - softplus(-2.0 * u));
+            *action.at_mut(r, j) = u.tanh();
+            *stds.at_mut(r, j) = std;
+        }
+        logp[r] = lp;
+    }
+
+    let x = concat_cols(obs, &action);
+    let c1acts = mlp_forward(clayout, c1_flat, "critic", &x, nh, Act::Relu, Act::Id);
+    let c2acts = mlp_forward(clayout, c2_flat, "critic", &x, nh, Act::Relu, Act::Id);
+    let q1 = &c1acts.last().unwrap().data;
+    let q2 = &c2acts.last().unwrap().data;
+
+    let mut loss = 0.0f32;
+    let mut logp_sum = 0.0f32;
+    let mut dq1 = Mat::zeros(rows, 1);
+    let mut dq2 = Mat::zeros(rows, 1);
+    for r in 0..rows {
+        loss += inv_n * (alpha * logp[r] - q1[r].min(q2[r]));
+        logp_sum += logp[r];
+        // gradient flows through whichever critic attains the min
+        if q1[r] <= q2[r] {
+            dq1.data[r] = -inv_n;
+        } else {
+            dq2.data[r] = -inv_n;
+        }
+    }
+    let mut scratch1 = vec![0.0f32; clayout.total()]; // critic grads discarded
+    let dx1 = mlp_backward(
+        clayout, c1_flat, "critic", &c1acts, dq1, nh, Act::Relu, Act::Id, &mut scratch1,
+    );
+    let mut scratch2 = vec![0.0f32; clayout.total()];
+    let dx2 = mlp_backward(
+        clayout, c2_flat, "critic", &c2acts, dq2, nh, Act::Relu, Act::Id, &mut scratch2,
+    );
+
+    // chain back to the head: d/du = dQ-route * (1 - a^2) + entropy-route
+    // (d log pi / du = 2a); mean lane gets du, log-std lane gets
+    // du * std * eps (through u) minus the direct -alpha/N term.
+    let mut dhead = Mat::zeros(rows, 2 * a_dim);
+    for r in 0..rows {
+        for j in 0..a_dim {
+            let a = action.at(r, j);
+            let da = dx1.at(r, shape.obs_dim + j) + dx2.at(r, shape.obs_dim + j);
+            let du = da * (1.0 - a * a) + inv_n * alpha * 2.0 * a;
+            *dhead.at_mut(r, j) = du;
+            let k = r * a_dim + j;
+            if !clamped[k] {
+                let e = if eps.is_empty() { 0.0 } else { eps[k] };
+                *dhead.at_mut(r, a_dim + j) = du * stds.at(r, j) * e - inv_n * alpha;
+            }
+        }
+    }
+    let mut grad = vec![0.0f32; alayout.total()];
+    mlp_backward(
+        alayout, actor_flat, "actor", &acts, dhead, nh, Act::Relu, Act::Id, &mut grad,
+    );
+    (grad, loss, logp_sum)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -660,6 +905,150 @@ mod tests {
             let fd = (loss_of(&fp) - loss_of(&fm)) / (2.0 * eps);
             let denom = fd.abs().max(grad[i].abs()).max(1e-2);
             assert!((fd - grad[i]).abs() / denom < 0.1, "param {i}");
+        }
+    }
+
+    /// The grain-scaled variants must agree with the classic full-batch
+    /// fns when `weights = 1` and `inv_n = 1/B` (up to fp association).
+    #[test]
+    fn scaled_grads_match_full_batch_forms() {
+        let shape = NetShape::new(3, 2, &[8, 8]);
+        let al = actor_layout(3, 2, &[8, 8]);
+        let cl = critic_layout(3, 2, &[8, 8]);
+        let mut rng = Pcg64::new(7);
+        let af = al.init_flat(&mut rng);
+        let cf = cl.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 6, 3);
+        let act = ddpg_actor(&al, &af, &shape, &obs);
+        let target = vec![0.3f32; 6];
+
+        let (g0, l0) = ddpg_critic_grad(&cl, &cf, &shape, &obs, &act, &target);
+        let (g1, l1, res) =
+            ddpg_critic_grad_weighted(&cl, &cf, &shape, &obs, &act, &target, None, 1.0 / 6.0);
+        assert!((l0 - l1).abs() < 1e-5);
+        for (a, b) in g0.iter().zip(&g1) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        let q = ddpg_critic(&cl, &cf, &shape, &obs, &act);
+        for (i, r) in res.iter().enumerate() {
+            assert!((r - (q[i] - target[i])).abs() < 1e-6);
+        }
+
+        let (ag0, pl0) = ddpg_actor_grad(&al, &af, &cl, &cf, &shape, &obs);
+        let (ag1, pl1) = ddpg_actor_grad_scaled(&al, &af, &cl, &cf, &shape, &obs, 1.0 / 6.0);
+        assert!((pl0 - pl1).abs() < 1e-5);
+        for (a, b) in ag0.iter().zip(&ag1) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    /// Importance weights scale each row's contribution linearly.
+    #[test]
+    fn weighted_critic_grad_scales_rows() {
+        let shape = NetShape::new(3, 1, &[8]);
+        let cl = critic_layout(3, 1, &[8]);
+        let mut rng = Pcg64::new(8);
+        let cf = cl.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 1, 3);
+        let act = rand_mat(&mut rng, 1, 1);
+        let target = vec![0.1f32];
+        let (g1, l1, _) =
+            ddpg_critic_grad_weighted(&cl, &cf, &shape, &obs, &act, &target, Some(&[1.0]), 1.0);
+        let (g2, l2, _) =
+            ddpg_critic_grad_weighted(&cl, &cf, &shape, &obs, &act, &target, Some(&[0.5]), 1.0);
+        assert!((l1 - 2.0 * l2).abs() < 1e-5);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - 2.0 * b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sac_act_zero_eps_is_mode_and_bounded() {
+        let shape = NetShape::new(3, 2, &[8, 8]);
+        let al = actor_layout(3, 2 * 2, &[8, 8]);
+        let mut rng = Pcg64::new(9);
+        let af = al.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 5, 3);
+        let out = sac_act(&al, &af, &shape, &obs, &[]);
+        assert!(out.action.max_abs_diff(&out.mean_action) < 1e-7);
+        assert!(out.action.data.iter().all(|v| v.abs() <= 1.0));
+        assert_eq!(out.logp.len(), 5);
+        assert!(out.logp.iter().all(|l| l.is_finite()));
+        // nonzero eps perturbs the sample but not the mode
+        let mut eps = vec![0.0f32; 5 * 2];
+        rng.fill_normal(&mut eps);
+        let out2 = sac_act(&al, &af, &shape, &obs, &eps);
+        assert!(out2.mean_action.max_abs_diff(&out.mean_action) < 1e-7);
+        assert!(out2.action.max_abs_diff(&out.action) > 1e-4);
+    }
+
+    #[test]
+    fn sac_logp_matches_closed_form_density() {
+        // 1-D check against the change-of-variables formula evaluated
+        // directly: log N(u) - log(1 - tanh^2 u), u = mean + std * eps.
+        let shape = NetShape::new(2, 1, &[4]);
+        let al = actor_layout(2, 2, &[4]);
+        let mut rng = Pcg64::new(10);
+        let af = al.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 1, 2);
+        let eps = [0.7f32];
+        let out = sac_act(&al, &af, &shape, &obs, &eps);
+        // recover mean/log_std from the raw head
+        let head = mlp_forward(&al, &af, "actor", &obs, 1, Act::Relu, Act::Id)
+            .pop()
+            .unwrap();
+        let mean = head.at(0, 0);
+        let ls = head.at(0, 1).clamp(SAC_LOG_STD_MIN, SAC_LOG_STD_MAX);
+        let u = mean + ls.exp() * eps[0];
+        let a = u.tanh();
+        let want = -0.5 * eps[0] * eps[0] - ls - 0.5 * LOG_2PI - (1.0 - a * a).ln();
+        assert!((out.logp[0] - want).abs() < 1e-4, "{} vs {want}", out.logp[0]);
+        assert!((out.action.at(0, 0) - a).abs() < 1e-6);
+    }
+
+    /// Finite-difference check of the full SAC policy gradient (actor
+    /// params through both critics, the tanh correction, and the
+    /// reparameterized entropy term).
+    #[test]
+    fn sac_actor_grad_fd() {
+        let shape = NetShape::new(3, 2, &[8, 8]);
+        let al = actor_layout(3, 2 * 2, &[8, 8]);
+        let cl = critic_layout(3, 2, &[8, 8]);
+        let mut rng = Pcg64::new(11);
+        let af = al.init_flat(&mut rng);
+        let c1 = cl.init_flat(&mut rng);
+        let c2 = cl.init_flat(&mut rng);
+        let obs = rand_mat(&mut rng, 5, 3);
+        let mut eps = vec![0.0f32; 5 * 2];
+        rng.fill_normal(&mut eps);
+        let alpha = 0.2f32;
+        let inv_n = 1.0 / 5.0;
+        let (grad, loss, logp_sum) =
+            sac_actor_grad(&al, &af, &cl, &c1, &c2, &shape, &obs, &eps, alpha, inv_n);
+        let loss_of = |f: &[f32]| {
+            let out = sac_act(&al, f, &shape, &obs, &eps);
+            let q1 = ddpg_critic(&cl, &c1, &shape, &obs, &out.action);
+            let q2 = ddpg_critic(&cl, &c2, &shape, &obs, &out.action);
+            (0..5)
+                .map(|r| inv_n * (alpha * out.logp[r] - q1[r].min(q2[r])))
+                .sum::<f32>()
+        };
+        assert!((loss_of(&af) - loss).abs() < 1e-5);
+        let direct = sac_act(&al, &af, &shape, &obs, &eps);
+        assert!((direct.logp.iter().sum::<f32>() - logp_sum).abs() < 1e-4);
+        let fd_eps = 2e-3f32;
+        for i in (0..al.total()).step_by(al.total() / 30) {
+            let mut fp = af.clone();
+            fp[i] += fd_eps;
+            let mut fm = af.clone();
+            fm[i] -= fd_eps;
+            let fd = (loss_of(&fp) - loss_of(&fm)) / (2.0 * fd_eps);
+            let denom = fd.abs().max(grad[i].abs()).max(1e-2);
+            assert!(
+                (fd - grad[i]).abs() / denom < 0.1,
+                "param {i}: fd={fd} analytic={}",
+                grad[i]
+            );
         }
     }
 }

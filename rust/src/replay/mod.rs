@@ -6,6 +6,14 @@
 //! Flat SoA storage (obs/act/rew/next_obs/done) with O(1) insert and O(B)
 //! uniform sampling into caller-owned buffers — no allocation on the
 //! learner hot path.
+//!
+//! [`ReplayBuffer`] is the single-ring reference implementation, kept as
+//! the unit-test oracle; every training learner (native and fused XLA)
+//! uses [`shard::ShardedReplay`], whose striped storage, shard-count-
+//! invariant sampling, and checkpoint serialization are documented in
+//! that module.
+
+pub mod shard;
 
 use crate::util::rng::Pcg64;
 
@@ -60,21 +68,6 @@ impl ReplayBuffer {
 
     pub fn capacity(&self) -> usize {
         self.capacity
-    }
-
-    /// Ring cursor `(len, head)` — checkpointed so a resumed run knows how
-    /// much replay data the interrupted run had accumulated (contents are
-    /// deliberately not persisted; see `runtime::checkpoint`).
-    pub fn cursor(&self) -> (usize, usize) {
-        (self.len, self.head)
-    }
-
-    /// Restore a [`ReplayBuffer::cursor`]. Only the counters move: the
-    /// backing storage stays zeroed, so off-policy resumes refill before
-    /// sampling quality recovers (documented in docs/OPERATIONS.md).
-    pub fn set_cursor(&mut self, len: usize, head: usize) {
-        self.len = len.min(self.capacity);
-        self.head = head % self.capacity;
     }
 
     /// Insert one transition, overwriting the oldest when full.

@@ -1,0 +1,698 @@
+//! Sharded replay buffer with shard-count-invariant sampling (PR 8).
+//!
+//! [`ShardedReplay`] stripes transitions over `S` independent shards, each
+//! behind its own mutex, so concurrent inserters never contend on one
+//! global lock. The crucial property is that *sampling is defined on the
+//! global insert sequence, not on the physical shards*: every insert is
+//! tagged with a monotonically increasing global index `g` (assigned in
+//! canonical absorb order — see `docs/OPERATIONS.md`), stored at shard
+//! `g % S`, slot `(g / S) % ceil(C / S)`, and the sampling window is
+//! always the most recent `min(total, C)` global indices regardless of
+//! `S`. A minibatch drawn by [`ShardedReplay::sample_into`] is therefore
+//! a pure function of `(seed, draw counter, window contents)` — the
+//! transition SET is bitwise identical for any shard count, which
+//! `rust/tests/coordinator_props.rs` enforces as a property.
+//!
+//! Slot-validity argument: with `cap_s = ceil(C / S)` slots per shard the
+//! physical store holds `S * cap_s >= C` transitions. A window occupant
+//! `g >= total - C` is only overwritten by global index `g + S * cap_s >=
+//! total - C + C = total`, which has not been inserted yet — so every
+//! index in the logical window is always physically present.
+//!
+//! Two sampling strategies are pluggable via [`ReplayStrategy`]:
+//! * `Uniform` — every window entry equally likely (all IS weights 1).
+//! * `Prioritized` — proportional prioritization (Schaul et al.):
+//!   `p_i = (|td_i| + EPS)^ALPHA` over a Fenwick tree for O(log C)
+//!   inverse-CDF draws, importance weights `w_i = (N * P(i))^-BETA`
+//!   normalized so the batch max is 1. The `EPS` floor keeps every stored
+//!   transition reachable at any priority spread (no starvation).
+//!
+//! [`ReplayRng`] is the seed-addressable draw source: call `k` derives a
+//! fresh `Pcg64` stream from `(seed, k)`, so a restored `(seed, draws)`
+//! pair resumes the exact draw sequence — checkpoints persist two u64s,
+//! never a raw generator cursor.
+
+use crate::config::ReplayStrategy;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Priority exponent alpha in `p = (|td| + eps)^alpha`.
+pub const PRIO_ALPHA: f32 = 0.6;
+/// Importance-sampling exponent beta in `w = (N * P)^-beta`.
+pub const PRIO_BETA: f32 = 0.4;
+/// Priority floor: keeps zero-TD transitions reachable (no starvation).
+pub const PRIO_EPS: f32 = 1e-3;
+
+/// Stream base for [`ReplayRng`] draw streams (distinct from the env,
+/// policy-noise, and learner stream families — see docs/API.md).
+const REPLAY_STREAM_BASE: u64 = 1 << 36;
+
+/// Serialized shard-section version (embedded in learner checkpoint blobs).
+const SHARD_STATE_VERSION: u32 = 1;
+
+/// Seed-addressable minibatch draw source: draw `k` runs on its own
+/// deterministic stream, so the sequence of drawn index sets is a pure
+/// function of `(seed, k)` and survives checkpoint/resume as two u64s.
+#[derive(Debug, Clone)]
+pub struct ReplayRng {
+    seed: u64,
+    draws: u64,
+}
+
+impl ReplayRng {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, draws: 0 }
+    }
+
+    /// Number of minibatch draws performed so far.
+    pub fn draws(&self) -> u64 {
+        self.draws
+    }
+
+    /// Fresh generator for the next draw; advances the draw counter.
+    fn next_draw(&mut self) -> Pcg64 {
+        let rng = Pcg64::with_stream(self.seed, REPLAY_STREAM_BASE + self.draws);
+        self.draws += 1;
+        rng
+    }
+
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        w.put_u64(self.seed);
+        w.put_u64(self.draws);
+    }
+
+    pub fn load_state(r: &mut ByteReader) -> Result<Self> {
+        Ok(Self {
+            seed: r.read_u64()?,
+            draws: r.read_u64()?,
+        })
+    }
+}
+
+/// One sampled minibatch: `runtime::DdpgBatch`-shaped lanes plus the
+/// importance weights and global indices prioritized replay needs.
+#[derive(Debug, Clone, Default)]
+pub struct ShardSample {
+    pub obs: Vec<f32>,
+    pub act: Vec<f32>,
+    pub rew: Vec<f32>,
+    pub next_obs: Vec<f32>,
+    pub done: Vec<f32>,
+    /// Importance-sampling weight per row (all 1.0 under `Uniform`).
+    pub weights: Vec<f32>,
+    /// Global insert index per row — pass back to
+    /// [`ShardedReplay::update_priorities`] after computing TD errors.
+    pub indices: Vec<u64>,
+}
+
+/// Flat SoA storage for one shard (slot-indexed, `slots` rows).
+struct Shard {
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: Vec<f32>,
+    next_obs: Vec<f32>,
+    done: Vec<f32>,
+}
+
+/// Priority state (central, keyed by `g % capacity` — distinct within the
+/// window because the window never exceeds `capacity` entries).
+struct PrioState {
+    tree: Fenwick,
+    /// alpha-powered priority per ring slot (0 = never written).
+    prios: Vec<f64>,
+    /// running max alpha-powered priority; new inserts adopt it so fresh
+    /// experience is sampled at least once before its TD error is known.
+    max_prio: f64,
+}
+
+/// Sharded replay buffer; see the module docs for the invariants.
+pub struct ShardedReplay {
+    obs_dim: usize,
+    act_dim: usize,
+    /// Logical sampling-window capacity C (independent of shard count).
+    capacity: usize,
+    slots_per_shard: usize,
+    shards: Vec<Mutex<Shard>>,
+    /// Global insert counter; index tags are assigned from it.
+    total: AtomicU64,
+    strategy: ReplayStrategy,
+    prio: Option<Mutex<PrioState>>,
+}
+
+impl ShardedReplay {
+    pub fn new(
+        capacity: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        shards: usize,
+        strategy: ReplayStrategy,
+    ) -> Self {
+        assert!(capacity > 0, "replay capacity must be positive");
+        assert!(shards > 0, "shard count must be positive");
+        let slots = (capacity + shards - 1) / shards;
+        let shard_store = (0..shards)
+            .map(|_| {
+                Mutex::new(Shard {
+                    obs: vec![0.0; slots * obs_dim],
+                    act: vec![0.0; slots * act_dim],
+                    rew: vec![0.0; slots],
+                    next_obs: vec![0.0; slots * obs_dim],
+                    done: vec![0.0; slots],
+                })
+            })
+            .collect();
+        let prio = match strategy {
+            ReplayStrategy::Uniform => None,
+            ReplayStrategy::Prioritized => Some(Mutex::new(PrioState {
+                tree: Fenwick::new(capacity),
+                prios: vec![0.0; capacity],
+                max_prio: 1.0,
+            })),
+        };
+        Self {
+            obs_dim,
+            act_dim,
+            capacity,
+            slots_per_shard: slots,
+            shards: shard_store,
+            total: AtomicU64::new(0),
+            strategy,
+            prio,
+        }
+    }
+
+    /// Transitions currently in the sampling window.
+    pub fn len(&self) -> usize {
+        let total = self.total.load(Ordering::Acquire);
+        total.min(self.capacity as u64) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn strategy(&self) -> ReplayStrategy {
+        self.strategy
+    }
+
+    /// Total transitions ever inserted (the next global index tag).
+    pub fn total_inserted(&self) -> u64 {
+        self.total.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn locate(&self, g: u64) -> (usize, usize) {
+        let s = self.shards.len() as u64;
+        let shard = (g % s) as usize;
+        let slot = ((g / s) % self.slots_per_shard as u64) as usize;
+        (shard, slot)
+    }
+
+    /// Insert one transition, tagged with the next global index.
+    /// Thread-safe (striped locks); determinism of a *run* additionally
+    /// requires the canonical single-order insertion the learner performs.
+    pub fn push(&self, obs: &[f32], act: &[f32], rew: f32, next_obs: &[f32], done: bool) {
+        debug_assert_eq!(obs.len(), self.obs_dim);
+        debug_assert_eq!(act.len(), self.act_dim);
+        debug_assert_eq!(next_obs.len(), self.obs_dim);
+        let g = self.total.fetch_add(1, Ordering::AcqRel);
+        let (shard, slot) = self.locate(g);
+        {
+            let mut sh = self.shards[shard].lock().expect("replay shard poisoned");
+            let (o, a) = (self.obs_dim, self.act_dim);
+            sh.obs[slot * o..(slot + 1) * o].copy_from_slice(obs);
+            sh.act[slot * a..(slot + 1) * a].copy_from_slice(act);
+            sh.rew[slot] = rew;
+            sh.next_obs[slot * o..(slot + 1) * o].copy_from_slice(next_obs);
+            sh.done[slot] = if done { 1.0 } else { 0.0 };
+        }
+        if let Some(prio) = &self.prio {
+            let mut p = prio.lock().expect("priority state poisoned");
+            let ring = (g % self.capacity as u64) as usize;
+            let mp = p.max_prio;
+            p.set(ring, mp);
+        }
+    }
+
+    /// Draw `batch` transitions into `out` (resized as needed). The drawn
+    /// index set depends only on `(rng seed, rng draw counter, window
+    /// contents)` — never on the shard count.
+    pub fn sample_into(&self, batch: usize, rng: &mut ReplayRng, out: &mut ShardSample) {
+        let total = self.total.load(Ordering::Acquire);
+        let len = total.min(self.capacity as u64);
+        assert!(len > 0, "sampling from empty replay buffer");
+        let start = total - len;
+        let (o, a) = (self.obs_dim, self.act_dim);
+        out.obs.clear();
+        out.obs.resize(batch * o, 0.0);
+        out.act.clear();
+        out.act.resize(batch * a, 0.0);
+        out.rew.clear();
+        out.rew.resize(batch, 0.0);
+        out.next_obs.clear();
+        out.next_obs.resize(batch * o, 0.0);
+        out.done.clear();
+        out.done.resize(batch, 0.0);
+        out.weights.clear();
+        out.weights.resize(batch, 1.0);
+        out.indices.clear();
+        out.indices.resize(batch, 0);
+
+        let mut draw = rng.next_draw();
+        match (&self.prio, self.strategy) {
+            (Some(prio), ReplayStrategy::Prioritized) => {
+                let p = prio.lock().expect("priority state poisoned");
+                let mass = p.tree.total();
+                debug_assert!(mass > 0.0, "prioritized replay with zero total mass");
+                for row in 0..batch {
+                    let u = draw.next_f64() * mass;
+                    let ring = p.tree.find(u);
+                    let g = Self::ring_to_global(ring as u64, start, len, self.capacity as u64);
+                    out.indices[row] = g;
+                    // w_i = (N * P(i))^-beta, normalized below
+                    let pr = (p.prios[ring] / mass) * len as f64;
+                    out.weights[row] = (pr.max(f64::MIN_POSITIVE) as f32).powf(-PRIO_BETA);
+                }
+                let wmax = out
+                    .weights
+                    .iter()
+                    .fold(0.0f32, |m, &w| if w > m { w } else { m });
+                if wmax > 0.0 {
+                    for w in &mut out.weights {
+                        *w /= wmax;
+                    }
+                }
+            }
+            _ => {
+                for row in 0..batch {
+                    out.indices[row] = start + draw.below(len as usize) as u64;
+                }
+            }
+        }
+        for row in 0..batch {
+            let (shard, slot) = self.locate(out.indices[row]);
+            let sh = self.shards[shard].lock().expect("replay shard poisoned");
+            out.obs[row * o..(row + 1) * o].copy_from_slice(&sh.obs[slot * o..(slot + 1) * o]);
+            out.act[row * a..(row + 1) * a].copy_from_slice(&sh.act[slot * a..(slot + 1) * a]);
+            out.rew[row] = sh.rew[slot];
+            out.next_obs[row * o..(row + 1) * o]
+                .copy_from_slice(&sh.next_obs[slot * o..(slot + 1) * o]);
+            out.done[row] = sh.done[slot];
+        }
+    }
+
+    /// Map a ring slot back to the unique global index of the window
+    /// occupying it (window length `len <= capacity` makes it unique).
+    fn ring_to_global(ring: u64, start: u64, len: u64, capacity: u64) -> u64 {
+        let g = start + (ring + capacity - start % capacity) % capacity;
+        debug_assert!(g < start + len, "ring slot outside sampling window");
+        g
+    }
+
+    /// Refresh priorities after a learner step (`Prioritized` only; no-op
+    /// under `Uniform`). Stale indices that have left the window are
+    /// skipped — their slot now belongs to a newer transition.
+    pub fn update_priorities(&self, indices: &[u64], td_errors: &[f32]) {
+        let Some(prio) = &self.prio else { return };
+        debug_assert_eq!(indices.len(), td_errors.len());
+        let total = self.total.load(Ordering::Acquire);
+        let len = total.min(self.capacity as u64);
+        let start = total - len;
+        let mut p = prio.lock().expect("priority state poisoned");
+        for (&g, &td) in indices.iter().zip(td_errors) {
+            if g < start || g >= total {
+                continue;
+            }
+            let ring = (g % self.capacity as u64) as usize;
+            let v = ((td.abs() + PRIO_EPS) as f64).powf(PRIO_ALPHA as f64);
+            p.set(ring, v);
+            if v > p.max_prio {
+                p.max_prio = v;
+            }
+        }
+    }
+
+    /// Current sampling probability of global index `g` (`None` when `g`
+    /// is outside the window). Uniform strategy: `1 / len`.
+    pub fn sampling_prob(&self, g: u64) -> Option<f64> {
+        let total = self.total.load(Ordering::Acquire);
+        let len = total.min(self.capacity as u64);
+        if g < total - len || g >= total {
+            return None;
+        }
+        match &self.prio {
+            None => Some(1.0 / len as f64),
+            Some(prio) => {
+                let p = prio.lock().expect("priority state poisoned");
+                let ring = (g % self.capacity as u64) as usize;
+                Some(p.prios[ring] / p.tree.total())
+            }
+        }
+    }
+
+    /// Serialize the logical window (global order) plus priorities as a
+    /// versioned section. The encoding is shard-count-portable: a
+    /// checkpoint written with S shards restores into any S'.
+    pub fn save_state(&self, w: &mut ByteWriter) {
+        let total = self.total.load(Ordering::Acquire);
+        let len = total.min(self.capacity as u64);
+        let start = total - len;
+        w.put_u32(SHARD_STATE_VERSION);
+        w.put_u64(total);
+        w.put_usize(len as usize);
+        let (o, a) = (self.obs_dim, self.act_dim);
+        let mut row_obs = vec![0.0f32; o];
+        let mut row_act = vec![0.0f32; a];
+        let mut row_next = vec![0.0f32; o];
+        for g in start..total {
+            let (shard, slot) = self.locate(g);
+            let sh = self.shards[shard].lock().expect("replay shard poisoned");
+            row_obs.copy_from_slice(&sh.obs[slot * o..(slot + 1) * o]);
+            row_act.copy_from_slice(&sh.act[slot * a..(slot + 1) * a]);
+            row_next.copy_from_slice(&sh.next_obs[slot * o..(slot + 1) * o]);
+            let (rew, done) = (sh.rew[slot], sh.done[slot]);
+            drop(sh);
+            for &v in &row_obs {
+                w.put_f32(v);
+            }
+            for &v in &row_act {
+                w.put_f32(v);
+            }
+            w.put_f32(rew);
+            for &v in &row_next {
+                w.put_f32(v);
+            }
+            w.put_f32(done);
+        }
+        if let Some(prio) = &self.prio {
+            let p = prio.lock().expect("priority state poisoned");
+            for g in start..total {
+                let ring = (g % self.capacity as u64) as usize;
+                w.put_f64(p.prios[ring]);
+            }
+            w.put_f64(p.max_prio);
+        }
+    }
+
+    /// Restore a [`ShardedReplay::save_state`] section: contents, global
+    /// counter, and (when prioritized) every priority — so resumed runs
+    /// replay bitwise-identical minibatches.
+    pub fn load_state(&mut self, r: &mut ByteReader) -> Result<()> {
+        let ver = r.read_u32()?;
+        if ver != SHARD_STATE_VERSION {
+            bail!("unknown replay shard-section version {ver} (expected {SHARD_STATE_VERSION})");
+        }
+        let total = r.read_u64()?;
+        let len = r.read_usize()? as u64;
+        if len > self.capacity as u64 || len > total {
+            bail!("corrupt replay section: len {len} vs capacity {} / total {total}", self.capacity);
+        }
+        let (o, a) = (self.obs_dim, self.act_dim);
+        let mut row_obs = vec![0.0f32; o];
+        let mut row_act = vec![0.0f32; a];
+        let mut row_next = vec![0.0f32; o];
+        // Re-insert in global order: push() re-derives each entry's shard
+        // and slot under the CURRENT shard count, so the section is
+        // portable across --replay-shards settings.
+        self.total.store(total - len, Ordering::Release);
+        for _ in 0..len {
+            for v in row_obs.iter_mut() {
+                *v = r.read_f32()?;
+            }
+            for v in row_act.iter_mut() {
+                *v = r.read_f32()?;
+            }
+            let rew = r.read_f32()?;
+            for v in row_next.iter_mut() {
+                *v = r.read_f32()?;
+            }
+            let done = r.read_f32()?;
+            self.push(&row_obs, &row_act, rew, &row_next, done != 0.0);
+        }
+        debug_assert_eq!(self.total.load(Ordering::Acquire), total);
+        if let Some(prio) = &self.prio {
+            let start = total - len;
+            let mut p = prio.lock().expect("priority state poisoned");
+            for g in start..total {
+                let ring = (g % self.capacity as u64) as usize;
+                let v = r.read_f64()?;
+                p.set(ring, v);
+            }
+            p.max_prio = r.read_f64()?;
+        }
+        Ok(())
+    }
+}
+
+impl PrioState {
+    fn set(&mut self, ring: usize, v: f64) {
+        let old = self.prios[ring];
+        self.prios[ring] = v;
+        self.tree.add(ring, v - old);
+    }
+}
+
+/// Fenwick (binary indexed) tree over f64 priorities: O(log n) point
+/// update and inverse-CDF search, the classic PER sum-tree.
+struct Fenwick {
+    n: usize,
+    tree: Vec<f64>, // 1-indexed
+}
+
+impl Fenwick {
+    fn new(n: usize) -> Self {
+        Self {
+            n,
+            tree: vec![0.0; n + 1],
+        }
+    }
+
+    fn add(&mut self, mut i: usize, delta: f64) {
+        i += 1;
+        while i <= self.n {
+            self.tree[i] += delta;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    fn total(&self) -> f64 {
+        self.prefix(self.n)
+    }
+
+    fn prefix(&self, mut i: usize) -> f64 {
+        let mut s = 0.0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Smallest index whose prefix sum exceeds `u` (clamped into range).
+    fn find(&self, mut u: f64) -> usize {
+        let mut pos = 0usize;
+        let mut mask = self.n.next_power_of_two();
+        while mask > 0 {
+            let next = pos + mask;
+            if next <= self.n && self.tree[next] < u {
+                u -= self.tree[next];
+                pos = next;
+            }
+            mask >>= 1;
+        }
+        pos.min(self.n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn push_n(buf: &ShardedReplay, n: usize) {
+        for i in 0..n {
+            let f = i as f32;
+            buf.push(&[f, f + 0.5], &[-f], f * 10.0, &[f + 1.0, f + 1.5], i % 3 == 0);
+        }
+    }
+
+    /// Multiset of transition ids (encoded in obs[0]) drawn by one batch.
+    fn drawn_ids(buf: &ShardedReplay, rng: &mut ReplayRng, batch: usize) -> Vec<i64> {
+        let mut s = ShardSample::default();
+        buf.sample_into(batch, rng, &mut s);
+        let mut ids: Vec<i64> = (0..batch).map(|r| s.obs[r * 2] as i64).collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    #[test]
+    fn window_drops_oldest_like_a_ring() {
+        for shards in [1, 3, 4] {
+            let buf = ShardedReplay::new(4, 2, 1, shards, ReplayStrategy::Uniform);
+            push_n(&buf, 6);
+            assert_eq!(buf.len(), 4);
+            let mut rng = ReplayRng::new(0);
+            let mut seen = BTreeSet::new();
+            for _ in 0..64 {
+                for id in drawn_ids(&buf, &mut rng, 4) {
+                    seen.insert(id);
+                }
+            }
+            assert_eq!(
+                seen.into_iter().collect::<Vec<_>>(),
+                vec![2, 3, 4, 5],
+                "shards={shards}: only the newest 4 transitions should remain"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_set_is_invariant_to_shard_count() {
+        let mut reference: Option<Vec<Vec<i64>>> = None;
+        for shards in [1, 2, 4] {
+            let buf = ShardedReplay::new(64, 2, 1, shards, ReplayStrategy::Uniform);
+            push_n(&buf, 150); // wraps the window twice
+            let mut rng = ReplayRng::new(42);
+            let draws: Vec<Vec<i64>> =
+                (0..8).map(|_| drawn_ids(&buf, &mut rng, 16)).collect();
+            match &reference {
+                None => reference = Some(draws),
+                Some(want) => assert_eq!(want, &draws, "shards={shards}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rows_keep_transition_integrity() {
+        let buf = ShardedReplay::new(100, 2, 1, 3, ReplayStrategy::Uniform);
+        push_n(&buf, 50);
+        let mut rng = ReplayRng::new(1);
+        let mut s = ShardSample::default();
+        buf.sample_into(32, &mut rng, &mut s);
+        for row in 0..32 {
+            let i = s.rew[row] / 10.0;
+            assert_eq!(s.obs[row * 2], i);
+            assert_eq!(s.act[row], -i);
+            assert_eq!(s.next_obs[row * 2], i + 1.0);
+            assert_eq!(s.done[row], if (i as usize) % 3 == 0 { 1.0 } else { 0.0 });
+            assert_eq!(s.weights[row], 1.0);
+            assert_eq!(s.indices[row], i as u64);
+        }
+    }
+
+    #[test]
+    fn replay_rng_resumes_exact_draw_sequence() {
+        let buf = ShardedReplay::new(32, 2, 1, 2, ReplayStrategy::Uniform);
+        push_n(&buf, 32);
+        let mut a = ReplayRng::new(7);
+        let _burn: Vec<_> = (0..3).map(|_| drawn_ids(&buf, &mut a, 8)).collect();
+        let mut w = ByteWriter::new();
+        a.save_state(&mut w);
+        let buf2 = w.into_vec();
+        let mut b = ReplayRng::load_state(&mut ByteReader::new(&buf2)).unwrap();
+        assert_eq!(a.draws(), b.draws());
+        for _ in 0..4 {
+            assert_eq!(drawn_ids(&buf, &mut a, 8), drawn_ids(&buf, &mut b, 8));
+        }
+    }
+
+    #[test]
+    fn prioritized_draws_follow_priorities_but_never_starve() {
+        let buf = ShardedReplay::new(16, 2, 1, 2, ReplayStrategy::Prioritized);
+        push_n(&buf, 16);
+        // extreme spread: index 3 dominant, everything else at the floor
+        let idx: Vec<u64> = (0..16).collect();
+        let mut td = vec![0.0f32; 16];
+        td[3] = 1e6;
+        buf.update_priorities(&idx, &td);
+        // every transition keeps nonzero mass (reachable) …
+        for g in 0..16u64 {
+            assert!(buf.sampling_prob(g).unwrap() > 0.0, "g={g} starved");
+        }
+        // … and the dominant one dominates the draws
+        let mut rng = ReplayRng::new(5);
+        let mut s = ShardSample::default();
+        let mut hits = 0usize;
+        for _ in 0..32 {
+            buf.sample_into(16, &mut rng, &mut s);
+            hits += s.indices.iter().filter(|&&g| g == 3).count();
+        }
+        assert!(hits > 32 * 16 / 2, "dominant priority drew {hits}/512");
+        // probabilities are a normalized distribution
+        let mass: f64 = (0..16u64).map(|g| buf.sampling_prob(g).unwrap()).sum();
+        assert!((mass - 1.0).abs() < 1e-9);
+        // IS weights: finite, positive, batch max == 1
+        assert!(s.weights.iter().all(|w| w.is_finite() && *w > 0.0 && *w <= 1.0));
+        assert!(s.weights.iter().any(|w| (*w - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn save_load_round_trips_across_shard_counts() {
+        for strategy in [ReplayStrategy::Uniform, ReplayStrategy::Prioritized] {
+            let buf = ShardedReplay::new(24, 2, 1, 3, strategy);
+            push_n(&buf, 40); // wrapped
+            if strategy == ReplayStrategy::Prioritized {
+                let idx: Vec<u64> = (16..40).collect();
+                let td: Vec<f32> = (0..24).map(|i| i as f32 * 0.1).collect();
+                buf.update_priorities(&idx, &td);
+            }
+            let mut w = ByteWriter::new();
+            buf.save_state(&mut w);
+            let bytes = w.into_vec();
+            // restore under a DIFFERENT shard count
+            let mut buf2 = ShardedReplay::new(24, 2, 1, 2, strategy);
+            buf2.load_state(&mut ByteReader::new(&bytes)).unwrap();
+            assert_eq!(buf2.len(), buf.len());
+            assert_eq!(buf2.total_inserted(), buf.total_inserted());
+            for g in 16..40u64 {
+                let (pa, pb) = (buf.sampling_prob(g).unwrap(), buf2.sampling_prob(g).unwrap());
+                assert!((pa - pb).abs() < 1e-12, "g={g}: {pa} vs {pb}");
+            }
+            // identical draw sequences after restore
+            let mut ra = ReplayRng::new(9);
+            let mut rb = ReplayRng::new(9);
+            for _ in 0..6 {
+                assert_eq!(drawn_ids(&buf, &mut ra, 8), drawn_ids(&buf2, &mut rb, 8));
+            }
+        }
+    }
+
+    #[test]
+    fn fenwick_inverse_cdf_hits_every_bucket() {
+        let mut f = Fenwick::new(5);
+        let ps = [0.5, 0.0, 1.5, 0.25, 0.75];
+        for (i, &p) in ps.iter().enumerate() {
+            f.add(i, p);
+        }
+        assert!((f.total() - 3.0).abs() < 1e-12);
+        // cumulative boundaries: [0.5, 0.5, 2.0, 2.25, 3.0]
+        assert_eq!(f.find(0.0), 0);
+        assert_eq!(f.find(0.1), 0);
+        assert_eq!(f.find(0.5), 0); // boundary lands left (prefix(1) >= u) …
+        assert_eq!(f.find(0.500001), 2); // … and the zero-mass bucket 1 is unreachable
+        assert_eq!(f.find(1.9), 2);
+        assert_eq!(f.find(2.1), 3);
+        assert_eq!(f.find(2.9), 4);
+        assert_eq!(f.find(99.0), 4); // clamped
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay buffer")]
+    fn sampling_empty_panics() {
+        let buf = ShardedReplay::new(4, 1, 1, 2, ReplayStrategy::Uniform);
+        let mut rng = ReplayRng::new(0);
+        let mut s = ShardSample::default();
+        buf.sample_into(1, &mut rng, &mut s);
+    }
+}

@@ -25,7 +25,10 @@
 //! durable snapshot. Little-endian layout via [`crate::util::bytes`]:
 //! magic, format version, fingerprint, iteration, store version, learner
 //! blob, worker-blob count, worker blobs. Readers reject wrong magic,
-//! unknown format versions, and truncated files.
+//! unknown format versions, and truncated files. Since format v2 the
+//! off-policy learner blobs carry the full replay-buffer contents (see
+//! [`FORMAT_VERSION`]), so kill-then-resume replays the exact minibatch
+//! sequence of an uninterrupted run.
 
 use crate::util::bytes::{ByteReader, ByteWriter};
 use anyhow::{Context, Result};
@@ -35,7 +38,16 @@ use std::path::{Path, PathBuf};
 /// First 4 bytes of every checkpoint file ("WALL-E checkpoint").
 const MAGIC: u32 = 0x57A1_1ECB;
 /// Bumped on any incompatible layout change; readers reject mismatches.
-const FORMAT_VERSION: u32 = 1;
+///
+/// v2: off-policy learner blobs embed the replay buffer *contents* (the
+/// versioned `replay::shard` section + the [`ReplayRng`] draw cursor)
+/// instead of a bare ring cursor, so a resumed DDPG/TD3/SAC run replays
+/// bitwise-identical minibatches. The outer layout is unchanged — the
+/// learner blob is opaque here — but v1 blobs are not readable by the
+/// new learners, so the version gates them out.
+///
+/// [`ReplayRng`]: crate::replay::shard::ReplayRng
+const FORMAT_VERSION: u32 = 2;
 
 /// Identity of the run a checkpoint belongs to. Resume validates it
 /// against the live config: restoring per-worker RNG cursors under a
@@ -45,7 +57,7 @@ const FORMAT_VERSION: u32 = 1;
 pub struct RunFingerprint {
     /// Environment name (`"pendulum"`, ...).
     pub env: String,
-    /// Algorithm name (`"ppo"`, `"ddpg"`, `"td3"`).
+    /// Algorithm name (`"ppo"`, `"ddpg"`, `"td3"`, `"sac"`).
     pub algo: String,
     /// Sampler worker count N.
     pub samplers: usize,

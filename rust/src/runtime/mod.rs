@@ -442,6 +442,25 @@ pub trait BackendFactory: Send + Sync {
         let _ = max_rows;
         self.make_ddpg_actor()
     }
+
+    /// Build a SAC actor accepting up to `rows` rows per call (`rows` is a
+    /// sizing hint; flexible backends ignore it). The default bails: SAC
+    /// has no AOT/XLA artifacts yet, so only the native backend overrides
+    /// this (config validation rejects `--algo sac --backend xla` before a
+    /// factory is ever asked).
+    fn make_sac_actor(&self, rows: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+        let _ = rows;
+        anyhow::bail!("this backend has no SAC actor (SAC runs native-only)")
+    }
+
+    /// Fresh SAC `(actor, critic1, critic2)` parameters. The actor head is
+    /// `2 * act_dim` wide (per-dim mean ++ log-std); the twin critics share
+    /// the DDPG critic layout. Default bails like
+    /// [`BackendFactory::make_sac_actor`].
+    fn init_sac_params(&self, seed: u64) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let _ = seed;
+        anyhow::bail!("this backend cannot initialize SAC parameters (SAC runs native-only)")
+    }
 }
 
 /// Fault-injection scaffolding shared by the inference-pool and

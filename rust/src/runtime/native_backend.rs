@@ -157,6 +157,23 @@ impl BackendFactory for NativeFactory {
             adam: AdamCfg::default(),
         }))
     }
+
+    fn make_sac_actor(&self, rows: usize) -> anyhow::Result<Box<dyn ActorBackend>> {
+        anyhow::ensure!(rows > 0, "make_sac_actor: rows must be >= 1");
+        // flexible like every native actor: `rows` is only a sizing hint
+        Ok(Box::new(NativeSacActor {
+            layout: actor_layout(self.obs_dim, 2 * self.act_dim, &self.hidden),
+            shape: self.shape(),
+        }))
+    }
+
+    fn init_sac_params(&self, seed: u64) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut rng = Pcg64::new(seed);
+        let a = actor_layout(self.obs_dim, 2 * self.act_dim, &self.hidden).init_flat(&mut rng);
+        let c1 = critic_layout(self.obs_dim, self.act_dim, &self.hidden).init_flat(&mut rng);
+        let c2 = critic_layout(self.obs_dim, self.act_dim, &self.hidden).init_flat(&mut rng);
+        Ok((a, c1, c2))
+    }
 }
 
 // ---------------------------------------------------------------- actor
@@ -403,6 +420,50 @@ impl DdpgLearnerBackend for NativeDdpgLearner {
     }
 }
 
+// ------------------------------------------------------------------ SAC
+
+/// Tanh-Gaussian SAC actor over `actor_layout(obs, 2*act, hidden)`: the
+/// noise lane carries the caller's reparameterization draws eps ~ N(0,1)
+/// (`a = tanh(mean + std * eps)`); an all-zero lane therefore yields the
+/// squashed mode, which is also returned in `mean` for eval. `value` is
+/// zero-filled — SAC's critics live in the learner, not the actor.
+struct NativeSacActor {
+    layout: ParamLayout,
+    shape: NetShape,
+}
+
+impl ActorBackend for NativeSacActor {
+    fn batch(&self) -> usize {
+        0 // any row count
+    }
+
+    fn obs_dim(&self) -> usize {
+        self.shape.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.shape.act_dim
+    }
+
+    fn act(&mut self, flat: &[f32], obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResult> {
+        let o = self.shape.obs_dim;
+        let a = self.shape.act_dim;
+        let b = obs.len() / o;
+        anyhow::ensure!(
+            obs.len() == b * o && (noise.is_empty() || noise.len() == b * a),
+            "bad sac act shapes"
+        );
+        let obs_m = Mat::from_vec(b, o, obs.to_vec());
+        let out = mlp::sac_act(&self.layout, flat, &self.shape, &obs_m, noise);
+        Ok(ActResult {
+            action: out.action.data,
+            logp: out.logp,
+            value: vec![0.0; b],
+            mean: out.mean_action.data,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -529,6 +590,33 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 1e-6, "{max_diff}");
+    }
+
+    #[test]
+    fn sac_actor_squashes_and_zero_noise_is_mode() {
+        let f = factory();
+        let (a, c1, c2) = f.init_sac_params(9).unwrap();
+        assert_eq!(a.len(), actor_layout(3, 4, &[16, 16]).total());
+        assert_eq!(c1.len(), critic_layout(3, 2, &[16, 16]).total());
+        assert_ne!(c1, c2, "twin critics must start from different draws");
+
+        let mut actor = f.make_sac_actor(4).unwrap();
+        assert_eq!(actor.batch(), 0, "native SAC actor must be flexible");
+        let obs = vec![0.2f32; 4 * 3];
+        let zero = vec![0.0f32; 4 * 2];
+        let r = actor.act(&a, &obs, &zero).unwrap();
+        assert_eq!(r.action.len(), 8);
+        assert_eq!(r.logp.len(), 4);
+        assert_eq!(r.value, vec![0.0; 4]);
+        assert_eq!(r.action, r.mean, "zero eps must yield the squashed mode");
+        assert!(r.action.iter().all(|x| x.abs() <= 1.0), "tanh-squashed");
+
+        let mut rng = Pcg64::new(1);
+        let mut eps = vec![0.0f32; 4 * 2];
+        rng.fill_normal(&mut eps);
+        let rs = actor.act(&a, &obs, &eps).unwrap();
+        assert_ne!(rs.action, rs.mean, "non-zero eps must perturb the mode");
+        assert!(f.make_sac_actor(0).is_err());
     }
 
     #[test]

@@ -23,9 +23,9 @@
 //! [`Algorithm::apply_to`] (a plain `X::default()` only selects the
 //! algorithm, preserving preset-tuned sections), and
 //! validates the combination at [`SessionBuilder::build`] — invalid
-//! combos (PPO-only knobs under DDPG/TD3, more inference shards than
-//! samplers, zero-env specs) fail there with actionable errors instead
-//! of deep inside the run. The built [`Session`] exposes:
+//! combos (PPO-only knobs under DDPG/TD3/SAC, off-policy replay knobs
+//! under PPO, more inference shards than samplers, zero-env specs) fail
+//! there with actionable errors instead of deep inside the run. The built [`Session`] exposes:
 //!
 //! * [`Session::run`] — the full coordinator (N samplers, optional
 //!   sharded inference pool, learner), writing `metrics.csv`,
@@ -217,6 +217,30 @@ impl SessionBuilder {
     pub fn max_staleness(mut self, n: u64) -> Self {
         self.ppo_only_knobs.push("max_staleness");
         self.set(move |c| c.max_staleness = n)
+    }
+
+    /// Replay-buffer shards (one striped-lock lane per sampler is the
+    /// intended shape). Off-policy only: the sampled minibatch SET is a
+    /// pure function of (seed, draw index, contents) and independent of
+    /// the shard count, so this is a throughput knob, not a semantics
+    /// knob. Rejected at build time under PPO.
+    pub fn replay_shards(self, n: usize) -> Self {
+        self.set(move |c| c.replay_shards = n)
+    }
+
+    /// Parallel learner threads L for the off-policy minibatch gradient.
+    /// Grained map + fixed-order tree reduction keeps published
+    /// parameters bitwise identical for any L. Off-policy native-backend
+    /// only: rejected at build time under PPO or the XLA backend.
+    pub fn learner_threads(self, n: usize) -> Self {
+        self.set(move |c| c.learner_threads = n)
+    }
+
+    /// Replay sampling strategy: uniform (default) or prioritized
+    /// (proportional TD-error, with normalized importance weights).
+    /// Off-policy only; rejected at build time under PPO.
+    pub fn replay_strategy(self, s: crate::config::ReplayStrategy) -> Self {
+        self.set(move |c| c.replay_strategy = s)
     }
 
     /// Write a durable checkpoint after every `every`-th iteration into

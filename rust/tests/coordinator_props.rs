@@ -5,10 +5,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use walle::algo::normalizer::NormSnapshot;
 use walle::algo::rollout::{ChunkEnd, ExperienceChunk};
-use walle::config::{DdpgCfg, PpoCfg};
+use walle::config::{DdpgCfg, PpoCfg, ReplayStrategy};
 use walle::coordinator::policy_store::PolicyStore;
 use walle::coordinator::queue::Channel;
 use walle::coordinator::sampler::{run_ppo_sampler, SamplerCfg};
+use walle::replay::shard::{ReplayRng, ShardSample, ShardedReplay};
 use walle::env::vec_env::VecEnv;
 use walle::runtime::native_backend::NativeFactory;
 use walle::runtime::BackendFactory;
@@ -154,6 +155,121 @@ fn policy_store_versions_monotonic_under_bursts() {
         }
         writer.join().unwrap();
         ok && store.version() == bursts as u64
+    });
+}
+
+/// Tentpole invariant (PR 8): the minibatch draw sequence is a pure
+/// function of (seed, draw counter, window contents) — the shard count
+/// never leaks in. Stronger than set-equality: the rows come back in the
+/// same ORDER, which is what makes downstream gradients bitwise stable.
+#[test]
+fn replay_draws_are_shard_count_invariant() {
+    check(29, 25, &Pair(UsizeIn(1, 150), UsizeIn(1, 32)), |&(extra, batch)| {
+        let cap = 64usize;
+        let n = cap / 2 + extra; // below, at, and past the wrap point
+        let seed = (extra * 31 + batch) as u64;
+        let mut reference: Option<Vec<Vec<u64>>> = None;
+        let mut ok = true;
+        for shards in [1usize, 2, 4] {
+            let buf = ShardedReplay::new(cap, 2, 1, shards, ReplayStrategy::Uniform);
+            for i in 0..n {
+                let f = i as f32;
+                buf.push(&[f, -f], &[f * 0.5], f, &[f + 1.0, -(f + 1.0)], i % 5 == 0);
+            }
+            let mut rng = ReplayRng::new(seed);
+            let mut s = ShardSample::default();
+            let draws: Vec<Vec<u64>> = (0..6)
+                .map(|_| {
+                    buf.sample_into(batch, &mut rng, &mut s);
+                    for row in 0..batch {
+                        // each row's lanes belong to the tagged index
+                        ok &= s.obs[row * 2] == s.indices[row] as f32;
+                        ok &= s.rew[row] == s.indices[row] as f32;
+                        ok &= s.weights[row] == 1.0;
+                    }
+                    s.indices.clone()
+                })
+                .collect();
+            match &reference {
+                None => reference = Some(draws),
+                Some(want) => ok &= want == &draws,
+            }
+        }
+        ok
+    });
+}
+
+/// Concurrent striped inserts never lose or duplicate a transition:
+/// whatever the lane interleaving, the window holds exactly the newest
+/// `min(total, C)` global indices and every sampled row's lanes stay
+/// mutually consistent (obs/act/rew/next_obs all from the same insert).
+#[test]
+fn replay_concurrent_inserts_conserve_the_window() {
+    check(31, 12, &Pair(UsizeIn(1, 4), UsizeIn(1, 80)), |&(lanes, per_lane)| {
+        let buf = ShardedReplay::new(96, 2, 1, lanes, ReplayStrategy::Uniform);
+        std::thread::scope(|sc| {
+            for lane in 0..lanes {
+                let buf = &buf;
+                sc.spawn(move || {
+                    for i in 0..per_lane {
+                        let id = (lane * 1000 + i) as f32;
+                        buf.push(&[id, -id], &[id], id, &[id + 1.0, -(id + 1.0)], false);
+                    }
+                });
+            }
+        });
+        let total = lanes * per_lane;
+        let mut ok = buf.total_inserted() == total as u64;
+        ok &= buf.len() == total.min(96);
+        let mut rng = ReplayRng::new(3);
+        let mut s = ShardSample::default();
+        buf.sample_into(64, &mut rng, &mut s);
+        for row in 0..64 {
+            let id = s.obs[row * 2];
+            ok &= s.act[row] == id && s.rew[row] == id;
+            ok &= s.next_obs[row * 2] == id + 1.0 && s.obs[row * 2 + 1] == -id;
+            // drawn ids decode to a (lane, i) that was actually pushed
+            let (lane, i) = ((id as usize) / 1000, (id as usize) % 1000);
+            ok &= lane < lanes && i < per_lane;
+        }
+        ok
+    });
+}
+
+/// Prioritized replay: probabilities are a normalized distribution, an
+/// extreme priority spread never starves the cold transitions (the EPS
+/// floor keeps every stored row reachable), the dominant row dominates
+/// the draws, and IS weights are finite, positive, and max-normalized.
+#[test]
+fn prioritized_replay_normalizes_and_never_starves() {
+    check(37, 20, &Pair(UsizeIn(2, 5), UsizeIn(0, 60)), |&(shards, hot)| {
+        let cap = 64usize;
+        let hot = (hot as u64).min(cap as u64 - 1);
+        let buf = ShardedReplay::new(cap, 2, 1, shards, ReplayStrategy::Prioritized);
+        for i in 0..cap {
+            let f = i as f32;
+            buf.push(&[f, -f], &[f], f, &[f + 1.0, f], false);
+        }
+        let idx: Vec<u64> = (0..cap as u64).collect();
+        let mut td = vec![0.0f32; cap];
+        td[hot as usize] = 1e6;
+        buf.update_priorities(&idx, &td);
+        let mut ok = true;
+        let mass: f64 = (0..cap as u64)
+            .map(|g| {
+                let p = buf.sampling_prob(g).unwrap();
+                ok &= p > 0.0; // reachable: no starvation
+                p
+            })
+            .sum();
+        ok &= (mass - 1.0).abs() < 1e-9;
+        let mut rng = ReplayRng::new(hot + 17);
+        let mut s = ShardSample::default();
+        buf.sample_into(32, &mut rng, &mut s);
+        ok &= s.weights.iter().all(|w| w.is_finite() && *w > 0.0 && *w <= 1.0);
+        ok &= s.weights.iter().any(|w| (*w - 1.0).abs() < 1e-6);
+        ok &= s.indices.iter().filter(|&&g| g == hot).count() >= 16;
+        ok
     });
 }
 

@@ -4,8 +4,9 @@
 
 use walle::algo::ddpg::Ddpg;
 use walle::algo::ppo::Ppo;
+use walle::algo::sac::Sac;
 use walle::algo::td3::Td3;
-use walle::config::{InferShards, InferWait, Td3Cfg, TrainConfig};
+use walle::config::{InferShards, InferWait, ReplayStrategy, SacCfg, Td3Cfg, TrainConfig};
 use walle::session::{Infer, Session, SessionSpec};
 use walle::util::json::Json;
 
@@ -99,6 +100,54 @@ fn builder_rejects_td3_on_xla_backend() {
     assert!(err.contains("td3") && err.contains("native"), "{err}");
 }
 
+#[test]
+fn builder_rejects_sac_on_xla_backend() {
+    let err = Session::builder()
+        .env("pendulum")
+        .algo(Sac::default())
+        .backend(walle::config::Backend::Xla)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("sac") && err.contains("native"), "{err}");
+}
+
+/// The PR 8 replay/learner knobs are off-policy-only: setting any of
+/// them under PPO fails at build() with an error that says so, while the
+/// full combination is accepted under a replay algorithm.
+#[test]
+fn builder_rejects_off_policy_knobs_under_ppo() {
+    for build in [
+        Session::builder()
+            .env("pendulum")
+            .algo(Ppo::default())
+            .replay_shards(4)
+            .build(),
+        Session::builder()
+            .env("pendulum")
+            .algo(Ppo::default())
+            .learner_threads(2)
+            .build(),
+        Session::builder()
+            .env("pendulum")
+            .algo(Ppo::default())
+            .replay_strategy(ReplayStrategy::Prioritized)
+            .build(),
+    ] {
+        let err = build.unwrap_err().to_string();
+        assert!(err.contains("off-policy-only"), "{err}");
+    }
+    // the full stack is valid under a replay learner
+    Session::builder()
+        .env("pendulum")
+        .algo(Ddpg::default())
+        .replay_shards(4)
+        .learner_threads(2)
+        .replay_strategy(ReplayStrategy::Prioritized)
+        .build()
+        .unwrap();
+}
+
 /// `.algo(X::default())` selects the algorithm WITHOUT clobbering the
 /// env preset's tuned hyper-parameter section (pendulum's PPO preset
 /// tunes lr/minibatch; a default Ppo instance must not reset them).
@@ -172,7 +221,7 @@ fn session_spec_accepts_legacy_infer_max_wait_us() {
 
 #[test]
 fn spec_renders_resolved_topology_without_algo_matches() {
-    for algo in ["ppo", "ddpg", "td3"] {
+    for algo in ["ppo", "ddpg", "td3", "sac"] {
         let mut cfg = TrainConfig::preset("pendulum");
         cfg.algo = walle::config::Algo::parse(algo).unwrap();
         let session = Session::from_config(cfg).unwrap();
@@ -244,6 +293,90 @@ fn td3_runs_under_shared_inference() {
         .env("pendulum")
         .algo(Td3 {
             cfg: Td3Cfg {
+                warmup_steps: 100,
+                batch: 32,
+                updates_per_iter: 5,
+                ..Default::default()
+            },
+        })
+        .samplers(2)
+        .samples_per_iter(300)
+        .iterations(2)
+        .chunk_steps(100)
+        .hidden(&[16, 16])
+        .infer(Infer::Shared {
+            shards: InferShards::Fixed(2),
+        })
+        .infer_wait(InferWait::Fixed(500))
+        .quiet()
+        .build()
+        .unwrap();
+    let result = session.run().unwrap();
+    assert_eq!(result.metrics.len(), 2);
+    let rep = result.infer.expect("shared mode must report");
+    assert!(rep.forwards > 0);
+    assert_eq!(rep.shards, 2);
+}
+
+// -------------------------------------------------------- SAC end-to-end
+
+/// PR 8 acceptance: SAC trains end-to-end on pendulum purely against the
+/// `Algorithm` trait — zero edits to the sampler or the inference server
+/// — with its twin soft critics fed from the sharded replay store and
+/// its learned temperature adapting from `init_alpha`.
+#[test]
+fn sac_trains_end_to_end_on_pendulum_via_builder() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Sac {
+            cfg: SacCfg {
+                warmup_steps: 100,
+                batch: 32,
+                updates_per_iter: 10,
+                ..Default::default()
+            },
+        })
+        .samplers(2)
+        .samples_per_iter(300)
+        .iterations(3)
+        .chunk_steps(100)
+        .hidden(&[16, 16])
+        .replay_shards(2)
+        .seed(7)
+        .quiet()
+        .build()
+        .unwrap();
+
+    let result = session.run().unwrap();
+    assert_eq!(result.metrics.len(), 3);
+    // final params are the SAC actor: a 2*act_dim head (mean + log-std)
+    let actor_len = walle::nn::layout::actor_layout(3, 2, &[16, 16]).total();
+    assert_eq!(result.final_params.len(), actor_len);
+    assert!(result.final_params.iter().all(|p| p.is_finite()));
+    // updates ran: the entropy bonus is measured from real log-probs
+    let last = result.metrics.last().unwrap();
+    assert!(last.entropy.is_finite() && last.entropy != 0.0, "no SAC updates ran");
+
+    // deterministic mean-action eval through the same trait actor
+    let eval = session
+        .evaluate_with_norm(&result.final_params, &result.final_norm, 3)
+        .unwrap();
+    assert_eq!(eval.returns.len(), 3);
+    assert!(eval.mean_return.is_finite());
+    let eval2 = session
+        .evaluate_with_norm(&result.final_params, &result.final_norm, 3)
+        .unwrap();
+    assert_eq!(eval.returns, eval2.returns, "SAC eval must be deterministic");
+}
+
+/// SAC also runs through the shared (sharded) inference pool — served by
+/// the same generic pool code as the other three algorithms.
+#[test]
+fn sac_runs_under_shared_inference() {
+    let session = Session::builder()
+        .env("pendulum")
+        .algo(Sac {
+            cfg: SacCfg {
                 warmup_steps: 100,
                 batch: 32,
                 updates_per_iter: 5,
