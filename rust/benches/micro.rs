@@ -31,6 +31,71 @@ use walle::util::rng::Pcg64;
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
+/// One vectorized env-stepping measurement: `engine` at width `m`.
+struct EnvStepPoint {
+    env: &'static str,
+    m: usize,
+    engine: &'static str,
+    steps_per_sec: f64,
+}
+
+/// Env-step sweep: the scalar per-env loop vs the SoA batched engine at
+/// M in {1,8,32,256}, for every registry env. This is the PR 9 headline
+/// curve — one column-major `step_all` sweep amortizes dispatch and
+/// keeps state cache-resident, so batched steps/s should pull away from
+/// scalar as M grows. Both engines run the full `VecEnv` tick (episode
+/// accounting, reset-on-done), so the ratio is what a sampler worker
+/// actually sees.
+fn bench_env_step_sweep() -> Vec<EnvStepPoint> {
+    use walle::env::batch::EnvEngine;
+    use walle::env::vec_env::{VecEnv, VecStepInfo};
+    let mut points = Vec::new();
+    for name in ["pendulum", "cartpole", "reacher", "halfcheetah"] {
+        for m in [1usize, 8, 32, 256] {
+            let mut scalar_rate = 0.0f64;
+            for (ename, engine) in [("scalar", EnvEngine::Scalar), ("batched", EnvEngine::Batched)]
+            {
+                let mut venv = VecEnv::from_registry_with(name, m, 0, 1, engine).unwrap();
+                venv.reset_all();
+                let act_dim = venv.act_dim();
+                let mut rng = Pcg64::new(4);
+                let mut actions = vec![0.0f32; m * act_dim];
+                let mut infos = vec![VecStepInfo::default(); m];
+                // equalize total env-steps per sample across widths
+                let iters = (4096 / m).max(16);
+                let r = Bench::new(&format!("env_step_vec/{name} ({ename}, M={m})"))
+                    .warmup(1)
+                    .samples(5)
+                    .iters_per_sample(iters)
+                    .run(|| {
+                        rng.fill_uniform(&mut actions, -1.0, 1.0);
+                        venv.step_all(&actions, &mut infos);
+                        for i in 0..m {
+                            if infos[i].ended() {
+                                venv.reset_env(i);
+                            }
+                        }
+                    });
+                let steps_per_sec = m as f64 / r.summary().mean;
+                if engine == EnvEngine::Scalar {
+                    scalar_rate = steps_per_sec;
+                }
+                println!(
+                    "    -> {steps_per_sec:.0} env-steps/s/core ({:.2}x scalar)",
+                    steps_per_sec / scalar_rate
+                );
+                points.push(EnvStepPoint {
+                    env: name,
+                    m,
+                    engine: ename,
+                    steps_per_sec,
+                });
+            }
+        }
+    }
+    points
+}
+
 fn bench_env_steps() {
     for name in ["pendulum", "cartpole", "reacher", "halfcheetah"] {
         let mut env = make_env(name).unwrap();
@@ -551,6 +616,8 @@ fn bench_xla_backend() {
 fn main() {
     println!("== WALL-E micro-benchmarks ==\n-- environments --");
     bench_env_steps();
+    println!("-- env-step sweep (scalar vs batched engine) --");
+    let envstep = bench_env_step_sweep();
     println!("-- experience queue --");
     bench_queue();
     println!("-- GAE --");
@@ -578,6 +645,22 @@ fn main() {
     // machine-readable record (BENCH_micro.json)
     let json = Json::obj(vec![
         ("bench", Json::Str("micro".into())),
+        (
+            "env_step",
+            Json::Arr(
+                envstep
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("env", Json::Str(p.env.into())),
+                            ("m", Json::Num(p.m as f64)),
+                            ("engine", Json::Str(p.engine.into())),
+                            ("steps_per_sec", Json::Num(p.steps_per_sec)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         (
             "kernels",
             Json::obj(vec![

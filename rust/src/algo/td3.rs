@@ -25,9 +25,13 @@
 //! with a trailing s' row) on its own RNG stream family, and the same
 //! deterministic actor network as DDPG — so the shared inference pool
 //! serves it through the existing `make_ddpg_actor_shared` backend hook.
-//! Learner side, the twin-critic math runs on the native `nn::mlp`
-//! kernels (no TD3 AOT artifacts yet; `TrainConfig::validate` rejects
-//! `--backend xla --algo td3` with an actionable error).
+//! Because the actor network is DDPG-shaped, `--backend xla` works out of
+//! the box: the sampler and eval paths reuse the compiled `act_ddpg_b{B}`
+//! AOT artifacts unchanged. Learner side, the twin-critic math always
+//! runs on the native `nn::mlp` kernels regardless of backend (the only
+//! remaining xla gate is learner-side: `learner_threads > 1` needs the
+//! grained native reduction, so `TrainConfig::validate` still rejects
+//! that combination).
 
 use crate::algo::api::{AlgoSampler, Algorithm, LearnerDriver};
 use crate::algo::ddpg::{make_det_local_actor, make_det_server_actor, DeterministicSampler};

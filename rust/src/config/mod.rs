@@ -346,6 +346,48 @@ impl KernelsCfg {
     }
 }
 
+/// Env stepping engine (`--env-engine`). See `env::batch` for the
+/// contract; both engines are bitwise interchangeable in exact kernel
+/// mode, so this is a performance knob, not a semantics knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvEngineCfg {
+    /// Pick the best available engine (currently: batched for every
+    /// registry env). The default.
+    Auto,
+    /// Force the structure-of-arrays `BatchedEnv` engine.
+    Batched,
+    /// Force the legacy one-`Env`-per-instance loop (reference path;
+    /// also what wrapper stacks and third-party scalar envs use).
+    Scalar,
+}
+
+impl EnvEngineCfg {
+    pub fn parse(s: &str) -> Option<EnvEngineCfg> {
+        match s {
+            "auto" => Some(EnvEngineCfg::Auto),
+            "batched" => Some(EnvEngineCfg::Batched),
+            "scalar" => Some(EnvEngineCfg::Scalar),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnvEngineCfg::Auto => "auto",
+            EnvEngineCfg::Batched => "batched",
+            EnvEngineCfg::Scalar => "scalar",
+        }
+    }
+
+    /// The `env::batch` engine this config resolves to.
+    pub fn engine(&self) -> crate::env::batch::EnvEngine {
+        match self {
+            EnvEngineCfg::Auto | EnvEngineCfg::Batched => crate::env::batch::EnvEngine::Batched,
+            EnvEngineCfg::Scalar => crate::env::batch::EnvEngine::Scalar,
+        }
+    }
+}
+
 /// PPO hyper-parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PpoCfg {
@@ -643,6 +685,10 @@ pub struct TrainConfig {
     /// Rounding contract of the native CPU kernels (`exact` = SIMD
     /// bitwise-equal to scalar, the default; `fast` = FMA + tiling).
     pub kernels: KernelsCfg,
+    /// Env stepping engine (`auto` default = SoA batched `step_all`
+    /// sweep; `scalar` = legacy per-env loop). Bitwise interchangeable
+    /// in exact kernel mode.
+    pub env_engine: EnvEngineCfg,
     /// Samples collected per iteration (paper: 20,000).
     pub samples_per_iter: usize,
     /// Training iterations to run.
@@ -730,6 +776,7 @@ impl Default for TrainConfig {
             infer_epoch: InferEpoch::Pool,
             infer_precision: InferPrecision::F32,
             kernels: KernelsCfg::Exact,
+            env_engine: EnvEngineCfg::Auto,
             samples_per_iter: 20_000,
             iterations: 100,
             queue_capacity: 16,
@@ -882,13 +929,10 @@ impl TrainConfig {
             );
         }
         if self.algo == Algo::Td3 {
-            if self.backend == Backend::Xla {
-                return Err(
-                    "algo td3 has no AOT/XLA artifacts yet — its twin-critic \
-                     learner runs native math only; use --backend native"
-                        .into(),
-                );
-            }
+            // td3 + xla is allowed: the sampler-side actor is the DDPG
+            // deterministic actor, so it reuses the act_ddpg_b{B} AOT
+            // artifacts; the twin-critic learner always runs native math
+            // (learner_threads > 1 + xla is still rejected below).
             if self.td3.batch == 0 {
                 return Err("td3.batch must be > 0".into());
             }
@@ -1035,6 +1079,7 @@ impl TrainConfig {
             Json::Str(self.infer_precision.name().into()),
         );
         m.insert("kernels".into(), Json::Str(self.kernels.name().into()));
+        m.insert("env_engine".into(), Json::Str(self.env_engine.name().into()));
         m.insert(
             "samples_per_iter".into(),
             Json::Num(self.samples_per_iter as f64),
@@ -1148,6 +1193,10 @@ impl TrainConfig {
         if let Some(v) = j.opt("kernels") {
             cfg.kernels = KernelsCfg::parse(v.as_str()?)
                 .ok_or_else(|| JsonError::Access(format!("bad kernels {v:?}")))?;
+        }
+        if let Some(v) = j.opt("env_engine") {
+            cfg.env_engine = EnvEngineCfg::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad env_engine {v:?}")))?;
         }
         if let Some(v) = j.opt("samples_per_iter") {
             cfg.samples_per_iter = v.as_usize()?;
@@ -1583,11 +1632,20 @@ mod tests {
         assert_eq!(KernelsCfg::parse("simd"), None);
         assert_eq!(InferPrecision::Int8.name(), "int8");
         assert_eq!(KernelsCfg::Fast.name(), "fast");
+        assert_eq!(d.env_engine, EnvEngineCfg::Auto);
+        assert_eq!(EnvEngineCfg::parse("scalar"), Some(EnvEngineCfg::Scalar));
+        assert_eq!(EnvEngineCfg::parse("soa"), None);
+        assert_eq!(EnvEngineCfg::Batched.name(), "batched");
+        // auto resolves to the batched engine
+        use crate::env::batch::EnvEngine;
+        assert_eq!(EnvEngineCfg::Auto.engine(), EnvEngine::Batched);
+        assert_eq!(EnvEngineCfg::Scalar.engine(), EnvEngine::Scalar);
 
         let mut cfg = TrainConfig::preset("pendulum");
         cfg.inference_mode = InferenceMode::Shared;
         cfg.infer_precision = InferPrecision::Int8;
         cfg.kernels = KernelsCfg::Fast;
+        cfg.env_engine = EnvEngineCfg::Scalar;
         cfg.validate().unwrap();
         let back = TrainConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
             .unwrap();
@@ -1606,6 +1664,9 @@ mod tests {
         .is_err());
         assert!(TrainConfig::from_json(&Json::parse(r#"{"kernels": "turbo"}"#).unwrap())
             .is_err());
+        assert!(
+            TrainConfig::from_json(&Json::parse(r#"{"env_engine": "vector"}"#).unwrap()).is_err()
+        );
     }
 
     #[test]
@@ -1621,9 +1682,14 @@ mod tests {
         assert_eq!(cfg, back);
         assert_eq!(Algo::parse("td3"), Some(Algo::Td3));
         assert_eq!(Algo::Td3.name(), "td3");
-        // TD3 has no AOT artifacts: the XLA backend is rejected loudly
+        // td3 + xla validates: the sampler-side actor is DDPG-shaped and
+        // reuses the act_ddpg_b{B} AOT artifacts (learner stays native).
         cfg.backend = Backend::Xla;
-        assert!(cfg.validate().unwrap_err().contains("td3"));
+        cfg.validate().unwrap();
+        // ...but the multi-threaded learner still rejects xla learner-side.
+        cfg.learner_threads = 2;
+        assert!(cfg.validate().unwrap_err().contains("learner_threads"));
+        cfg.learner_threads = 1;
         cfg.backend = Backend::Native;
         cfg.td3.policy_delay = 0;
         assert!(cfg.validate().is_err());

@@ -16,10 +16,18 @@
 
 use crate::algo::api::Algorithm;
 use crate::env::registry::make_env;
+use crate::env::vec_env::{VecEnv, VecStepInfo};
 use crate::env::{clip_action, Env};
 use crate::runtime::{ActorBackend, BackendFactory};
 use crate::util::rng::Pcg64;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// RNG stream id of evaluation rollouts — distinct from every sampler
+/// stream (`worker_id * M + lane + 1`), so eval draws never collide with
+/// training dynamics streams. [`evaluate`] seeds its own env RNG from it;
+/// [`evaluate_algo`] hands it to the `VecEnv` lane, making the two paths
+/// draw-for-draw identical.
+pub const EVAL_STREAM: u64 = 0xE7A1;
 
 /// Evaluation outcome over `episodes` deterministic rollouts.
 #[derive(Debug, Clone)]
@@ -44,7 +52,7 @@ pub fn evaluate(
     let obs_dim = env.obs_dim();
     let act_dim = env.act_dim();
     let b = actor.batch().max(1);
-    let mut rng = Pcg64::with_stream(seed, 0xE7A1);
+    let mut rng = Pcg64::with_stream(seed, EVAL_STREAM);
     let mut raw = vec![0.0f32; obs_dim];
     let mut obs_in = vec![0.0f32; b * obs_dim];
     let noise = vec![0.0f32; b * act_dim];
@@ -106,10 +114,86 @@ pub fn evaluate(
     })
 }
 
+/// [`evaluate`] over a one-lane [`VecEnv`] — the rollout substrate the
+/// training samplers use, so evaluation exercises the SAME env engine
+/// (batched or scalar) as training. The `VecEnv` must have M = 1 with
+/// its lane on the [`EVAL_STREAM`] RNG stream; episode accounting (raw
+/// return accumulation, time-limit truncation at the cap) is the
+/// adapter's own, which matches [`evaluate`]'s loop bitwise.
+pub fn evaluate_vec(
+    venv: &mut VecEnv,
+    actor: &mut dyn ActorBackend,
+    params: &[f32],
+    norm: &crate::algo::normalizer::NormSnapshot,
+    episodes: usize,
+) -> anyhow::Result<EvalResult> {
+    anyhow::ensure!(
+        venv.num_envs() == 1,
+        "evaluate_vec drives exactly one lane, got {}",
+        venv.num_envs()
+    );
+    let obs_dim = venv.obs_dim();
+    let act_dim = venv.act_dim();
+    let b = actor.batch().max(1);
+    let mut obs_in = vec![0.0f32; b * obs_dim];
+    let noise = vec![0.0f32; b * act_dim];
+    let mut infos = vec![VecStepInfo::default(); 1];
+    let mut returns = Vec::with_capacity(episodes);
+    let mut lengths = Vec::with_capacity(episodes);
+
+    for ep in 0..episodes {
+        // same panic containment as `evaluate` (see above)
+        let episode = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<(f32, usize)> {
+            venv.reset_env(0);
+            loop {
+                let mut norm_obs = venv.obs_row(0).to_vec();
+                norm.apply(&mut norm_obs);
+                obs_in[..obs_dim].copy_from_slice(&norm_obs);
+                let out = actor.act(params, &obs_in, &noise)?;
+                let mut action = if out.mean.is_empty() {
+                    out.action[..act_dim].to_vec()
+                } else {
+                    out.mean[..act_dim].to_vec()
+                };
+                clip_action(&mut action);
+                venv.step_all(&action, &mut infos);
+                if infos[0].ended() {
+                    return Ok((venv.ep_return(0), venv.ep_len(0)));
+                }
+            }
+        }));
+        match episode {
+            Ok(Ok((total, len))) => {
+                returns.push(total);
+                lengths.push(len as f32);
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".to_string());
+                anyhow::bail!("evaluation panicked during episode {ep}: {msg}");
+            }
+        }
+    }
+    Ok(EvalResult {
+        mean_return: crate::util::stats::mean_f32(&returns),
+        std_return: crate::util::stats::std_f32(&returns),
+        mean_len: crate::util::stats::mean_f32(&lengths),
+        returns,
+    })
+}
+
 /// Evaluate `params` on `env_name` through `algo`'s trait-constructed
 /// eval actor — one code path with training (same batched-actor
 /// construction at M = 1, same single normalizer application), shared by
-/// `walle eval`, `Session::evaluate`, and the examples.
+/// `walle eval`, `Session::evaluate`, and the examples. Rollouts run
+/// through the `VecEnv` adapter at M = 1 under the process-wide active
+/// env engine; the lane rides the [`EVAL_STREAM`] RNG stream, so returns
+/// are identical to the direct scalar [`evaluate`] path (asserted by
+/// `vec_adapter_eval_matches_scalar_env_path` below).
 pub fn evaluate_algo(
     algo: &dyn Algorithm,
     factory: &dyn BackendFactory,
@@ -119,10 +203,10 @@ pub fn evaluate_algo(
     episodes: usize,
     seed: u64,
 ) -> anyhow::Result<EvalResult> {
-    let mut env = make_env(env_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown env {env_name:?} for evaluation"))?;
+    let mut venv = VecEnv::from_registry(env_name, 1, seed, EVAL_STREAM)
+        .map_err(|e| anyhow::anyhow!("unknown env {env_name:?} for evaluation: {e}"))?;
     let mut actor = algo.make_eval_actor(factory)?;
-    evaluate(env.as_mut(), actor.as_mut(), params, norm, episodes, seed)
+    evaluate_vec(&mut venv, actor.as_mut(), params, norm, episodes)
 }
 
 #[cfg(test)]
@@ -223,6 +307,36 @@ mod tests {
             "error must name the panic, got: {msg}"
         );
         assert!(msg.contains("injected eval actor fault"), "got: {msg}");
+    }
+
+    /// PR 9 satellite: the VecEnv-adapter rollout path (either engine)
+    /// must produce bitwise-identical returns to the direct scalar-`Env`
+    /// eval loop — same RNG stream, same episode accounting, same actor.
+    #[test]
+    fn vec_adapter_eval_matches_scalar_env_path() {
+        use crate::env::batch::EnvEngine;
+        use crate::env::vec_env::VecEnv;
+
+        let f = NativeFactory::new(3, 1, &[8, 8], PpoCfg::default(), DdpgCfg::default());
+        let params = f.init_ppo_params(3);
+        let norm = NormSnapshot::identity(3);
+        let (seed, episodes) = (42u64, 3usize);
+
+        let mut env = make_env("pendulum").unwrap();
+        let mut actor = f.make_actor().unwrap();
+        let want = evaluate(env.as_mut(), actor.as_mut(), &params, &norm, episodes, seed)
+            .unwrap();
+
+        for engine in [EnvEngine::Batched, EnvEngine::Scalar] {
+            let mut venv =
+                VecEnv::from_registry_with("pendulum", 1, seed, EVAL_STREAM, engine).unwrap();
+            let got =
+                evaluate_vec(&mut venv, actor.as_mut(), &params, &norm, episodes).unwrap();
+            let want_bits: Vec<u32> = want.returns.iter().map(|r| r.to_bits()).collect();
+            let got_bits: Vec<u32> = got.returns.iter().map(|r| r.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "{engine:?}: returns diverged");
+            assert_eq!(got.mean_len, want.mean_len, "{engine:?}: lengths diverged");
+        }
     }
 
     #[test]

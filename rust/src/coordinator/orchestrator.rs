@@ -130,8 +130,11 @@ pub fn run_with(
     );
     // Kernel mode is process-global: every thread this run spawns
     // (samplers, shards, learner) must agree on exact-vs-fast before the
-    // first forward pass.
+    // first forward pass. Same story for the env engine — every worker's
+    // `VecEnv::from_registry` must pick the same stepping path before
+    // the first reset.
     crate::nn::kernels::set_mode(cfg.kernels.mode());
+    crate::env::batch::set_engine(cfg.env_engine.engine());
 
     let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
     let store = PolicyStore::new();

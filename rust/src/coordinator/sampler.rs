@@ -517,7 +517,14 @@ pub fn run_algo_sampler_supervised(
     // or gateless server, where the snapshot version alone drives cuts)
     let mut policy_epoch = 0u64;
 
-    let mut obs_in = vec![0.0f32; backend_batch * obs_dim];
+    // local-mode normalize staging ([backend_batch] rows). Shared mode
+    // needs no staging: requests submit `venv.obs()` and the record loop
+    // reads the normalized rows straight out of the response slab.
+    let mut obs_in = if shared {
+        Vec::new()
+    } else {
+        vec![0.0f32; backend_batch * obs_dim]
+    };
     // policy-noise lanes: stochastic algorithms consume one
     // [act_dim] row per env (padding rows stay zero for fixed-batch
     // backends); deterministic algorithms submit an empty lane.
@@ -622,9 +629,6 @@ pub fn run_algo_sampler_supervised(
                         }
                     }
                 };
-                // the server normalized our rows under its dispatch
-                // snapshot — record those, they are what the policy saw
-                obs_in[..m * obs_dim].copy_from_slice(resp.norm_obs());
                 // epoch-driven cut: under the pool gate the epoch moves on
                 // the same dispatch boundary for every shard; a gateless
                 // server reports epoch 0 and the version comparison alone
@@ -673,10 +677,18 @@ pub fn run_algo_sampler_supervised(
                 (TickOut::Shared(resp), sb)
             }
         };
+        // the rows the policy actually saw: local mode normalized them
+        // into `obs_in`; shared mode reads them straight out of the
+        // response slab (the server normalized our request rows in place
+        // under its dispatch snapshot — no staging copy)
+        let norm_rows: &[f32] = match &out {
+            TickOut::Shared(resp) => resp.norm_obs(),
+            TickOut::Local(_) => &obs_in[..m * obs_dim],
+        };
         for i in 0..m {
             let buf = &mut bufs[i];
             buf.obs
-                .extend_from_slice(&obs_in[i * obs_dim..(i + 1) * obs_dim]);
+                .extend_from_slice(&norm_rows[i * obs_dim..(i + 1) * obs_dim]);
             buf.stats.update(venv.obs_row(i)); // raw pre-step obs feeds the normalizer
             let lanes = TickLanes {
                 action: out.action(),

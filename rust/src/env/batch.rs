@@ -1,0 +1,177 @@
+//! Structure-of-arrays batched environments: the fleet-wide lockstep env
+//! engine (WarpDrive direction — make the *environment* data-parallel,
+//! not just the policy).
+//!
+//! A [`BatchedEnv`] holds the state of M homogeneous environments as
+//! `[M]`-wide columns (one contiguous lane array per physical quantity)
+//! and advances all of them in ONE [`BatchedEnv::step_all`] sweep. The
+//! per-lane arithmetic runs column-at-a-time through the `nn::kernels`
+//! microkernels (`axpy` / `axpy_clamp` integrator steps, dispatched to
+//! the scalar reference arm or the SIMD arms), while transcendentals stay
+//! scalar-per-lane (libm, like `tanh` in the policy kernels) — so in
+//! exact mode every lane is **bitwise identical** to an independent
+//! scalar [`Env`](super::Env) stepped with the same RNG stream, at any
+//! vector width, on any arm (asserted per registered env by
+//! `env::conformance`).
+//!
+//! # Contract
+//!
+//! * Lane `i` of a `BatchedEnv` must reproduce, bit for bit, the
+//!   trajectory of the same-named scalar env driven by the same RNG
+//!   stream: same state-update order, same rounding, same RNG draw order
+//!   on [`BatchedEnv::reset_lane`].
+//! * `step_all` never resets: finished lanes hold the terminal/truncated
+//!   observation s' until the caller resets them (the
+//!   [`VecEnv`](super::vec_env::VecEnv) ordering). Episode accounting
+//!   (step counts, truncation) stays in `VecEnv`, identical for both
+//!   engines.
+//! * `step_all` writes next observations row-major (`[M * obs_dim]`)
+//!   straight into the caller's buffer — which in the sampler hot loop is
+//!   a view of the recycled inference `SlabBuffers` obs slab (zero-copy
+//!   handoff; see `coordinator::sampler`).
+//! * [`BatchedEnv::save_lane`] / [`BatchedEnv::load_lane`] use the SAME
+//!   flat-f32 layout as the scalar env's `save_state` / `load_state`, so
+//!   checkpoints and respawn snapshots are portable across engines (a
+//!   snapshot taken under `--env-engine batched` restores under
+//!   `--env-engine scalar` and vice versa).
+//!
+//! # Engine selection
+//!
+//! Like the kernel lane set, the env engine is process-global and
+//! resolved once, on first use: batched for every registry env unless
+//! overridden. The `WALLE_ENV_ENGINE` environment variable (`scalar` |
+//! `batched` | `auto`) overrides detection; the orchestrator sets the
+//! engine from `TrainConfig::env_engine` before spawning workers (same
+//! pattern as `kernels::set_mode`). Concurrent tests that need a specific
+//! engine should build it explicitly via
+//! [`VecEnv::from_registry_with`](super::vec_env::VecEnv::from_registry_with)
+//! instead of flipping the global.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::rng::Pcg64;
+
+/// Result of one lockstep sweep for one lane (mirrors [`super::Step`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchStep {
+    pub reward: f32,
+    /// True terminal state — GAE must NOT bootstrap through.
+    pub done: bool,
+}
+
+/// M homogeneous environments stored as structure-of-arrays columns and
+/// advanced in one sweep. See the module docs for the bitwise contract.
+pub trait BatchedEnv: Send {
+    /// Vector width M (fixed at construction).
+    fn num_envs(&self) -> usize;
+
+    fn obs_dim(&self) -> usize;
+
+    fn act_dim(&self) -> usize;
+
+    /// Episode cap the caller (`VecEnv`) enforces as truncation.
+    fn max_episode_steps(&self) -> usize;
+
+    /// Environment name — equals the scalar env's `name()`.
+    fn name(&self) -> &'static str;
+
+    /// Reset lane `lane` only, drawing from `rng` in exactly the order
+    /// the scalar env's `reset` draws, and write its fresh observation
+    /// into `obs_row` (`[obs_dim]`).
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg64, obs_row: &mut [f32]);
+
+    /// Advance all M lanes one step with `actions` (`[M * act_dim]`,
+    /// already clipped by the caller), writing next observations
+    /// row-major into `obs_out` (`[M * obs_dim]`). Returns per-lane
+    /// outcomes. Never auto-resets.
+    fn step_all(&mut self, actions: &[f32], obs_out: &mut [f32]) -> &[BatchStep];
+
+    /// Serialize lane `lane` in the scalar env's `save_state` layout.
+    fn save_lane(&self, lane: usize) -> Vec<f32>;
+
+    /// Restore lane `lane` from a scalar-layout state payload.
+    fn load_lane(&mut self, lane: usize, state: &[f32]);
+}
+
+/// Which env engine `VecEnv::from_registry` builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnvEngine {
+    /// SoA lockstep engine (the default for registry envs).
+    Batched,
+    /// Legacy per-env scalar stepping (reference arm; also the only
+    /// option for wrapper stacks and third-party scalar envs).
+    Scalar,
+}
+
+impl EnvEngine {
+    pub fn name(self) -> &'static str {
+        match self {
+            EnvEngine::Batched => "batched",
+            EnvEngine::Scalar => "scalar",
+        }
+    }
+}
+
+const ENGINE_UNSET: u8 = u8::MAX;
+static ENGINE: AtomicU8 = AtomicU8::new(ENGINE_UNSET);
+
+fn engine_to_u8(e: EnvEngine) -> u8 {
+    match e {
+        EnvEngine::Batched => 0,
+        EnvEngine::Scalar => 1,
+    }
+}
+
+fn engine_from_u8(v: u8) -> EnvEngine {
+    match v {
+        1 => EnvEngine::Scalar,
+        _ => EnvEngine::Batched,
+    }
+}
+
+fn detect() -> EnvEngine {
+    match std::env::var("WALLE_ENV_ENGINE").ok().as_deref() {
+        Some("scalar") => EnvEngine::Scalar,
+        // "batched"/"auto"/unset/anything else: the SoA engine (unknown
+        // values must not silently fall back to scalar in production)
+        _ => EnvEngine::Batched,
+    }
+}
+
+/// The process-wide active env engine (resolved once, on first use).
+pub fn active_engine() -> EnvEngine {
+    let v = ENGINE.load(Ordering::Relaxed);
+    if v != ENGINE_UNSET {
+        return engine_from_u8(v);
+    }
+    let e = detect();
+    ENGINE.store(engine_to_u8(e), Ordering::Relaxed);
+    e
+}
+
+/// Force the env engine process-wide (orchestrator / benches / tests).
+/// Call before any `VecEnv::from_registry`; like `kernels::set_mode`
+/// this is process-global, so concurrent tests must build explicit
+/// engines via `VecEnv::from_registry_with` instead.
+pub fn set_engine(e: EnvEngine) {
+    ENGINE.store(engine_to_u8(e), Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_names_round_trip() {
+        for e in [EnvEngine::Batched, EnvEngine::Scalar] {
+            assert_eq!(engine_from_u8(engine_to_u8(e)), e);
+        }
+        assert_eq!(EnvEngine::Batched.name(), "batched");
+        assert_eq!(EnvEngine::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn unknown_byte_defaults_to_batched() {
+        assert_eq!(engine_from_u8(200), EnvEngine::Batched);
+    }
+}

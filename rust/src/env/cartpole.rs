@@ -5,7 +5,9 @@
 //! cart leaves ±2.4 m; 500-step cap. This is the one preset env with true
 //! terminal states, so it exercises the GAE done-vs-truncation distinction.
 
+use super::batch::{BatchStep, BatchedEnv};
 use super::{Env, Step};
+use crate::nn::kernels;
 use crate::util::rng::Pcg64;
 
 pub struct CartPole {
@@ -113,6 +115,134 @@ impl Env for CartPole {
         self.x_dot = state[1];
         self.theta = state[2];
         self.theta_dot = state[3];
+    }
+}
+
+/// SoA batched cart-pole: the four state variables live in `[M]`-wide
+/// columns; the semi-implicit Euler update runs column-at-a-time through
+/// `kernels::axpy` (bitwise equal to the scalar `+= dt · v` updates),
+/// accelerations and the terminal check stay scalar per lane.
+pub struct BatchedCartPole {
+    x: Vec<f32>,
+    x_dot: Vec<f32>,
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+    /// Scratch columns: per-lane accelerations this sweep.
+    x_acc: Vec<f32>,
+    theta_acc: Vec<f32>,
+    out: Vec<BatchStep>,
+    p: CartPole,
+}
+
+impl BatchedCartPole {
+    pub fn new(m: usize) -> Self {
+        Self {
+            x: vec![0.0; m],
+            x_dot: vec![0.0; m],
+            theta: vec![0.0; m],
+            theta_dot: vec![0.0; m],
+            x_acc: vec![0.0; m],
+            theta_acc: vec![0.0; m],
+            out: vec![BatchStep::default(); m],
+            p: CartPole::default(),
+        }
+    }
+
+    fn write_obs_lane(&self, lane: usize, obs: &mut [f32]) {
+        obs[0] = self.x[lane];
+        obs[1] = self.x_dot[lane];
+        obs[2] = self.theta[lane];
+        obs[3] = self.theta_dot[lane];
+    }
+}
+
+impl BatchedEnv for BatchedCartPole {
+    fn num_envs(&self) -> usize {
+        self.x.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        500
+    }
+
+    fn name(&self) -> &'static str {
+        "cartpole"
+    }
+
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg64, obs_row: &mut [f32]) {
+        self.x[lane] = rng.uniform(-0.05, 0.05);
+        self.x_dot[lane] = rng.uniform(-0.05, 0.05);
+        self.theta[lane] = rng.uniform(-0.05, 0.05);
+        self.theta_dot[lane] = rng.uniform(-0.05, 0.05);
+        self.write_obs_lane(lane, obs_row);
+    }
+
+    fn step_all(&mut self, actions: &[f32], obs_out: &mut [f32]) -> &[BatchStep] {
+        let m = self.x.len();
+        debug_assert_eq!(actions.len(), m);
+        debug_assert_eq!(obs_out.len(), m * 4);
+        let (gravity, mass_pole, pole_half_len, force_mag) = (
+            self.p.gravity,
+            self.p.mass_pole,
+            self.p.pole_half_len,
+            self.p.force_mag,
+        );
+        let total_mass = self.p.mass_cart + mass_pole;
+        let pole_ml = mass_pole * pole_half_len;
+        for lane in 0..m {
+            let force = actions[lane].clamp(-1.0, 1.0) * force_mag;
+            let (sin_t, cos_t) = self.theta[lane].sin_cos();
+            let td = self.theta_dot[lane];
+            let temp = (force + pole_ml * td * td * sin_t) / total_mass;
+            let theta_acc = (gravity * sin_t - cos_t * temp)
+                / (pole_half_len
+                    * (4.0 / 3.0 - mass_pole * cos_t * cos_t / total_mass));
+            self.theta_acc[lane] = theta_acc;
+            self.x_acc[lane] = temp - pole_ml * theta_acc * cos_t / total_mass;
+        }
+        // the scalar env's exact update order: x uses the OLD ẋ, θ the
+        // OLD θ̇ — column order below preserves that per lane
+        let dt = self.p.dt;
+        kernels::axpy(dt, &self.x_dot, &mut self.x);
+        kernels::axpy(dt, &self.x_acc, &mut self.x_dot);
+        kernels::axpy(dt, &self.theta_dot, &mut self.theta);
+        kernels::axpy(dt, &self.theta_acc, &mut self.theta_dot);
+        for lane in 0..m {
+            obs_out[lane * 4] = self.x[lane];
+            obs_out[lane * 4 + 1] = self.x_dot[lane];
+            obs_out[lane * 4 + 2] = self.theta[lane];
+            obs_out[lane * 4 + 3] = self.theta_dot[lane];
+            self.out[lane] = BatchStep {
+                reward: 1.0,
+                done: self.x[lane].abs() > self.p.x_limit
+                    || self.theta[lane].abs() > self.p.theta_limit,
+            };
+        }
+        &self.out
+    }
+
+    fn save_lane(&self, lane: usize) -> Vec<f32> {
+        vec![
+            self.x[lane],
+            self.x_dot[lane],
+            self.theta[lane],
+            self.theta_dot[lane],
+        ]
+    }
+
+    fn load_lane(&mut self, lane: usize, state: &[f32]) {
+        self.x[lane] = state[0];
+        self.x_dot[lane] = state[1];
+        self.theta[lane] = state[2];
+        self.theta_dot[lane] = state[3];
     }
 }
 

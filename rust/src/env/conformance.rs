@@ -1,12 +1,296 @@
-//! Cross-env conformance suite: every registered environment must satisfy
-//! the `Env` contract (finite observations, declared dims, reproducible
-//! resets, clipped-action tolerance). Runs over the registry so a new env
-//! is automatically covered.
+//! Cross-env conformance suite and reusable lockstep harness.
+//!
+//! Two layers live here:
+//!
+//! 1. **Scalar `Env` contract tests** (bottom of the file): every
+//!    registered environment must satisfy the `Env` contract (finite
+//!    observations, declared dims, reproducible resets, clipped-action
+//!    tolerance). They run over the registry so a new env is
+//!    automatically covered.
+//! 2. **Batched-conformance harness** ([`drive_lockstep_pair`] /
+//!    [`assert_engines_agree`]): public, reusable drivers that prove two
+//!    `VecEnv`s are *bitwise interchangeable* — same per-tick step infos,
+//!    observations, episode accounting, reset-on-done ordering, and
+//!    time-limit truncation boundaries. The in-tree tests use them to
+//!    pin the SoA [`BatchedEnv`](super::batch::BatchedEnv) engine against
+//!    the legacy per-env scalar engine for every registry env at ragged
+//!    vector widths; external `Env`/`BatchedEnv` implementations (and
+//!    wrapper stacks) can call the same functions from their own tests.
+//!
+//! The harness makes no assumption about the active kernel arm: under
+//! exact kernel mode (the default, and both CI legs — auto-detected SIMD
+//! and `WALLE_KERNELS=scalar`) the batched engine's `nn/kernels` sweeps
+//! are bitwise identical to the scalar loops, so every assertion here
+//! holds on any machine.
+
+use super::vec_env::{VecEnv, VecStepInfo};
+use crate::util::rng::Pcg64;
+
+/// Episode-boundary tally from one [`drive_lockstep_pair`] run. Callers
+/// assert on these to prove the run actually exercised the semantics
+/// they care about (a run with zero boundaries proves nothing about
+/// reset ordering).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LockstepStats {
+    /// Lockstep ticks driven.
+    pub ticks: usize,
+    /// True terminals observed (summed over lanes).
+    pub terminals: usize,
+    /// Time-limit truncations observed (summed over lanes).
+    pub truncations: usize,
+}
+
+/// RNG stream base for the harness's per-lane action streams — far above
+/// the `first_stream + i` env-dynamics streams any realistic M reaches,
+/// so action draws never alias env resets.
+pub const ACTION_STREAM_BASE: u64 = 0xAC00;
+
+/// Drive two same-shape `VecEnv`s in lockstep with a shared random
+/// action stream and assert they stay **bitwise identical**: per-tick
+/// [`VecStepInfo`]s, the full observation buffer, per-lane `ep_len` /
+/// `ep_return`, and the fresh observations after every reset-on-done
+/// (resets are issued *after* both sides' post-step s' has been
+/// compared, preserving the sampler's bootstrap ordering).
+///
+/// Panics with a labeled message on the first divergence. Returns the
+/// episode-boundary tally so callers can assert coverage.
+pub fn drive_lockstep_pair(
+    a: &mut VecEnv,
+    b: &mut VecEnv,
+    action_seed: u64,
+    ticks: usize,
+) -> LockstepStats {
+    let m = a.num_envs();
+    let act_dim = a.act_dim();
+    assert_eq!(m, b.num_envs(), "lockstep pair: vector widths differ");
+    assert_eq!(act_dim, b.act_dim(), "lockstep pair: act dims differ");
+    assert_eq!(a.obs_dim(), b.obs_dim(), "lockstep pair: obs dims differ");
+    assert_eq!(
+        a.max_episode_steps(),
+        b.max_episode_steps(),
+        "lockstep pair: episode caps differ"
+    );
+    let name = a.name();
+
+    a.reset_all();
+    b.reset_all();
+    assert_obs_eq(a, b, name, 0, "reset_all");
+
+    let mut act_rngs: Vec<Pcg64> = (0..m)
+        .map(|i| Pcg64::with_stream(action_seed, ACTION_STREAM_BASE + i as u64))
+        .collect();
+    let mut actions = vec![0.0f32; m * act_dim];
+    let mut ia = vec![VecStepInfo::default(); m];
+    let mut ib = vec![VecStepInfo::default(); m];
+    let mut stats = LockstepStats::default();
+
+    for tick in 0..ticks {
+        for (i, rng) in act_rngs.iter_mut().enumerate() {
+            rng.fill_uniform(&mut actions[i * act_dim..(i + 1) * act_dim], -1.0, 1.0);
+        }
+        a.step_all(&actions, &mut ia);
+        b.step_all(&actions, &mut ib);
+        stats.ticks += 1;
+        for i in 0..m {
+            assert!(
+                ia[i].reward.to_bits() == ib[i].reward.to_bits()
+                    && ia[i].terminal == ib[i].terminal
+                    && ia[i].truncated == ib[i].truncated,
+                "{name} lane {i} tick {tick}: step info diverged ({:?} vs {:?})",
+                ia[i],
+                ib[i]
+            );
+            assert_eq!(
+                a.ep_len(i),
+                b.ep_len(i),
+                "{name} lane {i} tick {tick}: ep_len diverged"
+            );
+            assert!(
+                a.ep_return(i).to_bits() == b.ep_return(i).to_bits(),
+                "{name} lane {i} tick {tick}: ep_return not bitwise equal \
+                 ({} vs {})",
+                a.ep_return(i),
+                b.ep_return(i)
+            );
+        }
+        // compare the post-step buffer (the bootstrap s' rows) BEFORE any
+        // reset touches it — the ordering every consumer depends on
+        assert_obs_eq(a, b, name, tick, "post-step");
+        for i in 0..m {
+            if ia[i].ended() {
+                if ia[i].terminal {
+                    stats.terminals += 1;
+                } else {
+                    stats.truncations += 1;
+                }
+                a.reset_env(i);
+                b.reset_env(i);
+                assert!(
+                    bits_eq(a.obs_row(i), b.obs_row(i)),
+                    "{name} lane {i} tick {tick}: reset obs diverged"
+                );
+            }
+        }
+    }
+    stats
+}
+
+/// Assert that the SoA batched engine and the legacy per-env scalar
+/// engine produce bitwise-identical trajectories for registry env
+/// `name` at vector width `m` over `ticks` lockstep ticks. Both sides
+/// get env-dynamics streams `1..=m` from `seed` — the same layout
+/// `VecEnv::from_registry` hands a sampler worker.
+pub fn assert_engines_agree(name: &str, m: usize, seed: u64, ticks: usize) -> LockstepStats {
+    use super::batch::EnvEngine;
+    let mut batched = VecEnv::from_registry_with(name, m, seed, 1, EnvEngine::Batched)
+        .unwrap_or_else(|e| panic!("{name}: batched engine: {e}"));
+    let mut scalar = VecEnv::from_registry_with(name, m, seed, 1, EnvEngine::Scalar)
+        .unwrap_or_else(|e| panic!("{name}: scalar engine: {e}"));
+    assert_eq!(batched.engine(), EnvEngine::Batched);
+    assert_eq!(scalar.engine(), EnvEngine::Scalar);
+    drive_lockstep_pair(&mut batched, &mut scalar, seed ^ 0xACAC, ticks)
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn assert_obs_eq(a: &VecEnv, b: &VecEnv, name: &str, tick: usize, at: &str) {
+    for i in 0..a.num_envs() {
+        assert!(
+            bits_eq(a.obs_row(i), b.obs_row(i)),
+            "{name} lane {i} tick {tick}: {at} obs diverged\n  a: {:?}\n  b: {:?}",
+            a.obs_row(i),
+            b.obs_row(i)
+        );
+    }
+}
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::env::batch::EnvEngine;
+    use crate::env::pendulum::Pendulum;
     use crate::env::registry::{make_env, ENV_NAMES};
-    use crate::util::rng::Pcg64;
+    use crate::env::wrappers::{ObsClip, RewardScale};
+
+    // ---- batched-conformance suite (PR 9) -------------------------------
+
+    /// Tentpole invariant: for every registry env, at ragged vector
+    /// widths, one SoA `step_all` sweep is bitwise equal to M
+    /// independently stepped scalar envs — including reset-on-done
+    /// ordering and truncation boundaries.
+    #[test]
+    fn batched_engine_matches_scalar_engine_bitwise() {
+        for name in ENV_NAMES {
+            let cap = make_env(name).unwrap().max_episode_steps();
+            for m in [1usize, 3, 5] {
+                // cross ≥2 truncation boundaries where the cap is short,
+                // ≥1 where physics makes long runs expensive
+                let ticks = if cap <= 300 { cap * 2 + 17 } else { cap + 17 };
+                let stats = assert_engines_agree(name, m, 11, ticks);
+                assert!(
+                    stats.terminals + stats.truncations > 0,
+                    "{name} m={m}: run crossed no episode boundary — \
+                     reset-on-done semantics untested"
+                );
+            }
+        }
+    }
+
+    /// The time-limit boundary must fire at exactly `max_episode_steps`
+    /// on BOTH engines (never terminal for pendulum, never a step early
+    /// or late).
+    #[test]
+    fn truncation_fires_exactly_at_cap_on_both_engines() {
+        for engine in [EnvEngine::Batched, EnvEngine::Scalar] {
+            let m = 2;
+            let mut venv = VecEnv::from_registry_with("pendulum", m, 5, 1, engine).unwrap();
+            venv.reset_all();
+            let cap = venv.max_episode_steps();
+            let mut infos = vec![VecStepInfo::default(); m];
+            let actions = vec![0.0f32; m];
+            for t in 1..=cap {
+                venv.step_all(&actions, &mut infos);
+                for i in 0..m {
+                    assert!(!infos[i].terminal, "{engine:?}: pendulum never terminates");
+                    assert_eq!(
+                        infos[i].truncated,
+                        t == cap,
+                        "{engine:?} lane {i}: truncation at step {t} (cap {cap})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// `step_all` must leave the terminal s' in the observation buffer —
+    /// the reset state appears only after the caller's explicit
+    /// `reset_env`, on both engines (the GAE-bootstrap ordering).
+    #[test]
+    fn terminal_rows_hold_bootstrap_obs_until_reset() {
+        for engine in [EnvEngine::Batched, EnvEngine::Scalar] {
+            let mut venv = VecEnv::from_registry_with("cartpole", 1, 3, 1, engine).unwrap();
+            venv.reset_all();
+            let mut act_rng = Pcg64::with_stream(3, ACTION_STREAM_BASE);
+            let mut actions = vec![0.0f32; venv.act_dim()];
+            let mut infos = vec![VecStepInfo::default(); 1];
+            let mut saw_terminal = false;
+            for _ in 0..2000 {
+                act_rng.fill_uniform(&mut actions, -1.0, 1.0);
+                venv.step_all(&actions, &mut infos);
+                if infos[0].terminal {
+                    saw_terminal = true;
+                    let boot = venv.obs_row(0).to_vec();
+                    venv.reset_env(0);
+                    assert_ne!(
+                        venv.obs_row(0),
+                        &boot[..],
+                        "{engine:?}: reset_env must redraw the row (terminal \
+                         cartpole state is outside the reset distribution)"
+                    );
+                    break;
+                }
+                if infos[0].ended() {
+                    venv.reset_env(0);
+                }
+            }
+            assert!(saw_terminal, "{engine:?}: cartpole never terminated");
+        }
+    }
+
+    /// Wrapper stacks (any third-party `Env` impl) ride the scalar
+    /// engine; with identity-semantics wrappers the stack must match the
+    /// batched engine of the bare env bitwise — the harness works across
+    /// engines AND across wrapper layers.
+    #[test]
+    fn wrapper_stack_on_scalar_engine_matches_batched_bare_env() {
+        let m = 3;
+        let seed = 17u64;
+        let envs: Vec<Box<dyn crate::env::Env>> = (0..m)
+            .map(|_| {
+                Box::new(RewardScale {
+                    inner: ObsClip {
+                        inner: Pendulum::default(),
+                        bound: 1e30,
+                    },
+                    scale: 1.0,
+                }) as Box<dyn crate::env::Env>
+            })
+            .collect();
+        let rngs: Vec<Pcg64> = (0..m as u64)
+            .map(|i| Pcg64::with_stream(seed, 1 + i))
+            .collect();
+        let mut stack = VecEnv::new(envs, rngs).unwrap();
+        assert_eq!(stack.engine(), EnvEngine::Scalar, "wrapper stacks are scalar");
+        let mut bare =
+            VecEnv::from_registry_with("pendulum", m, seed, 1, EnvEngine::Batched).unwrap();
+        let cap = bare.max_episode_steps();
+        let stats = drive_lockstep_pair(&mut stack, &mut bare, seed ^ 0xACAC, cap + 9);
+        assert!(stats.truncations > 0);
+    }
+
+    // ---- scalar Env contract suite --------------------------------------
 
     #[test]
     fn observations_always_finite_and_right_sized() {

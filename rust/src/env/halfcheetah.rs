@@ -13,7 +13,8 @@
 //! Physics runs at dt = 0.01 with frame_skip = 5 (control dt = 0.05 s),
 //! the same discretization as the original.
 
-use super::physics::{v2, Body, RevoluteJoint, World, WorldCfg};
+use super::batch::{BatchStep, BatchedEnv};
+use super::physics::{v2, BatchedWorld, Body, RevoluteJoint, World, WorldCfg};
 use super::{Env, Step};
 use crate::util::rng::Pcg64;
 
@@ -225,6 +226,135 @@ impl Env for HalfCheetah {
         let (world, tail) = state.split_at(state.len() - 1);
         self.world.load_state(world);
         self.steps = tail[0] as usize;
+    }
+}
+
+/// SoA batched half-cheetah: M lockstep copies of the seven-rod world
+/// inside one [`BatchedWorld`], advanced by a single solver sweep per
+/// physics tick. Lane resets rebuild the canonical scalar world (same
+/// RNG draw order, same five settle steps) and scatter its state into
+/// the lane's columns, so every lane is bitwise identical to a scalar
+/// [`HalfCheetah`] on the same stream.
+pub struct BatchedHalfCheetah {
+    world: BatchedWorld,
+    steps: Vec<usize>,
+    /// Scratch column: per-lane torso x before the frame-skip burst.
+    x_before: Vec<f32>,
+    out: Vec<BatchStep>,
+}
+
+impl BatchedHalfCheetah {
+    pub fn new(m: usize) -> Self {
+        let mut template = build_world();
+        template.reset_solver_state();
+        Self {
+            world: BatchedWorld::from_template(&template, m),
+            steps: vec![0; m],
+            x_before: vec![0.0; m],
+            out: vec![BatchStep::default(); m],
+        }
+    }
+
+    fn write_obs_lane(&self, lane: usize, obs: &mut [f32]) {
+        obs[0] = self.world.body_pos_y(0, lane);
+        obs[1] = self.world.body_angle(0, lane);
+        for j in 0..N_JOINTS {
+            obs[2 + j] = self.world.joint_angle(j, lane);
+        }
+        obs[8] = self.world.body_vel_x(0, lane);
+        obs[9] = self.world.body_vel_y(0, lane);
+        obs[10] = self.world.body_omega(0, lane);
+        for j in 0..N_JOINTS {
+            obs[11 + j] = self.world.joint_speed(j, lane);
+        }
+    }
+}
+
+impl BatchedEnv for BatchedHalfCheetah {
+    fn num_envs(&self) -> usize {
+        self.steps.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        17
+    }
+
+    fn act_dim(&self) -> usize {
+        N_JOINTS
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        1000
+    }
+
+    fn name(&self) -> &'static str {
+        "halfcheetah"
+    }
+
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg64, obs_row: &mut [f32]) {
+        // run the scalar reset (identical RNG draws + settle steps) in a
+        // scratch world, then scatter its state into this lane's columns
+        let mut w = build_world();
+        w.reset_solver_state();
+        self.steps[lane] = 0;
+        for b in &mut w.bodies {
+            b.pos.x += rng.uniform(-0.005, 0.005);
+            b.pos.y += rng.uniform(-0.005, 0.005);
+            b.angle += rng.uniform(-0.02, 0.02);
+            b.vel = v2(rng.uniform(-0.05, 0.05), rng.uniform(-0.05, 0.05));
+            b.omega = rng.uniform(-0.05, 0.05);
+        }
+        for _ in 0..5 {
+            w.step(DT);
+        }
+        self.world.load_lane(lane, &w.save_state());
+        self.write_obs_lane(lane, obs_row);
+    }
+
+    fn step_all(&mut self, actions: &[f32], obs_out: &mut [f32]) -> &[BatchStep] {
+        let m = self.steps.len();
+        debug_assert_eq!(actions.len(), m * N_JOINTS);
+        debug_assert_eq!(obs_out.len(), m * 17);
+        for lane in 0..m {
+            self.x_before[lane] = self.world.body_pos_x(0, lane);
+        }
+        for _ in 0..FRAME_SKIP {
+            for j in 0..N_JOINTS {
+                for lane in 0..m {
+                    let a = actions[lane * N_JOINTS + j].clamp(-1.0, 1.0);
+                    self.world.set_motor(j, lane, a * GEARS[j]);
+                }
+            }
+            self.world.step(DT);
+        }
+        for lane in 0..m {
+            let mut ctrl_cost = 0.0f32;
+            for j in 0..N_JOINTS {
+                let a = actions[lane * N_JOINTS + j].clamp(-1.0, 1.0);
+                ctrl_cost += 0.1 * a * a;
+            }
+            let x_after = self.world.body_pos_x(0, lane);
+            let forward_vel = (x_after - self.x_before[lane]) / (DT * FRAME_SKIP as f32);
+            self.steps[lane] += 1;
+            self.out[lane] = BatchStep {
+                reward: forward_vel - ctrl_cost,
+                done: false,
+            };
+            self.write_obs_lane(lane, &mut obs_out[lane * 17..(lane + 1) * 17]);
+        }
+        &self.out
+    }
+
+    fn save_lane(&self, lane: usize) -> Vec<f32> {
+        let mut s = self.world.save_lane(lane);
+        s.push(self.steps[lane] as f32);
+        s
+    }
+
+    fn load_lane(&mut self, lane: usize, state: &[f32]) {
+        let (world, tail) = state.split_at(state.len() - 1);
+        self.world.load_lane(lane, world);
+        self.steps[lane] = tail[0] as usize;
     }
 }
 

@@ -17,7 +17,14 @@
 //! ONE batched policy forward per sim tick (see `coordinator::sampler`).
 //! Per-env RNG streams make the batching observationally transparent: an
 //! env's trajectory is bitwise-identical at any vector width.
+//!
+//! Since PR 9 the registry envs also ship a structure-of-arrays
+//! [`batch::BatchedEnv`] implementation (state as `[M]`-wide columns, one
+//! `step_all` sweep through the `nn/kernels` microkernels). `VecEnv` is a
+//! thin adapter over either engine; in exact kernel mode the two are
+//! bitwise interchangeable (asserted by `env::conformance`).
 
+pub mod batch;
 pub mod cartpole;
 pub mod conformance;
 pub mod halfcheetah;

@@ -5,7 +5,9 @@
 //! no terminal states. Closed-form dynamics — the cheapest env, used by
 //! quickstart, tests and DDPG examples.
 
+use super::batch::{BatchStep, BatchedEnv};
 use super::{Env, Step};
+use crate::nn::kernels;
 use crate::util::rng::Pcg64;
 
 pub struct Pendulum {
@@ -98,6 +100,110 @@ impl Env for Pendulum {
     fn load_state(&mut self, state: &[f32]) {
         self.theta = state[0];
         self.theta_dot = state[1];
+    }
+}
+
+/// SoA batched pendulum: θ and θ̇ live in `[M]`-wide columns, one sweep
+/// advances all lanes. The integrator columns run through the
+/// `nn::kernels` `axpy`/`axpy_clamp` microkernels (bitwise equal to the
+/// scalar update in every arm/mode); transcendentals stay scalar per
+/// lane, so each lane reproduces [`Pendulum`] bit for bit.
+pub struct BatchedPendulum {
+    theta: Vec<f32>,
+    theta_dot: Vec<f32>,
+    /// Scratch column: per-lane angular acceleration this sweep.
+    acc: Vec<f32>,
+    out: Vec<BatchStep>,
+    p: Pendulum,
+}
+
+impl BatchedPendulum {
+    pub fn new(m: usize) -> Self {
+        Self {
+            theta: vec![0.0; m],
+            theta_dot: vec![0.0; m],
+            acc: vec![0.0; m],
+            out: vec![BatchStep::default(); m],
+            p: Pendulum::default(),
+        }
+    }
+
+    fn write_obs_lane(&self, lane: usize, obs: &mut [f32]) {
+        obs[0] = self.theta[lane].cos();
+        obs[1] = self.theta[lane].sin();
+        obs[2] = self.theta_dot[lane];
+    }
+}
+
+impl BatchedEnv for BatchedPendulum {
+    fn num_envs(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        3
+    }
+
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        200
+    }
+
+    fn name(&self) -> &'static str {
+        "pendulum"
+    }
+
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg64, obs_row: &mut [f32]) {
+        self.theta[lane] = rng.uniform(-std::f32::consts::PI, std::f32::consts::PI);
+        self.theta_dot[lane] = rng.uniform(-1.0, 1.0);
+        self.write_obs_lane(lane, obs_row);
+    }
+
+    fn step_all(&mut self, actions: &[f32], obs_out: &mut [f32]) -> &[BatchStep] {
+        let m = self.theta.len();
+        debug_assert_eq!(actions.len(), m);
+        debug_assert_eq!(obs_out.len(), m * 3);
+        let (g, ml, l, dt) = (self.p.g, self.p.m, self.p.l, self.p.dt);
+        for lane in 0..m {
+            let u = actions[lane].clamp(-1.0, 1.0) * self.p.max_torque;
+            let th = angle_normalize(self.theta[lane]);
+            let td = self.theta_dot[lane];
+            let cost = th * th + 0.1 * td * td + 0.001 * u * u;
+            self.acc[lane] =
+                3.0 * g / (2.0 * l) * self.theta[lane].sin() + 3.0 / (ml * l * l) * u;
+            self.out[lane] = BatchStep {
+                reward: -cost,
+                done: false,
+            };
+        }
+        // θ̇ = clamp(θ̇ + θ̈·dt), then θ += θ̇·dt — same rounding as the
+        // scalar env (a·x is commutative bitwise).
+        kernels::axpy_clamp(
+            dt,
+            &self.acc,
+            &mut self.theta_dot,
+            -self.p.max_speed,
+            self.p.max_speed,
+        );
+        kernels::axpy(dt, &self.theta_dot, &mut self.theta);
+        for lane in 0..m {
+            obs_out[lane * 3] = self.theta[lane].cos();
+            obs_out[lane * 3 + 1] = self.theta[lane].sin();
+            obs_out[lane * 3 + 2] = self.theta_dot[lane];
+        }
+        &self.out
+    }
+
+    fn save_lane(&self, lane: usize) -> Vec<f32> {
+        vec![self.theta[lane], self.theta_dot[lane]]
+    }
+
+    fn load_lane(&mut self, lane: usize, state: &[f32]) {
+        self.theta[lane] = state[0];
+        self.theta_dot[lane] = state[1];
     }
 }
 

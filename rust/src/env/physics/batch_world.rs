@@ -1,0 +1,540 @@
+//! Column-major batched physics: M lockstep copies of one `World`
+//! topology, stored as structure-of-arrays columns and advanced with one
+//! [`BatchedWorld::step`] sweep.
+//!
+//! Every per-lane quantity (`pos.x`, `omega`, joint impulses, contact
+//! warm-starts, …) lives in its own `[item * M]` column with lane as the
+//! fast axis, so the integrator phases stream contiguously and run
+//! through the `nn::kernels` `axpy` microkernels. The solver phases
+//! (sequential impulses, joint limits, ground contacts) are a mechanical
+//! item-outer/lane-inner transcription of `world::World::step`: same
+//! operation order, same rounding, every branch inside the lane loop —
+//! which makes each lane **bitwise identical** to an independent scalar
+//! `World` stepped from the same state (lanes never interact).
+//!
+//! Topology (body/joint constants, `WorldCfg`) is shared across lanes
+//! and captured once from a template `World`; per-lane dynamic state
+//! moves in and out via [`BatchedWorld::save_lane`] /
+//! [`BatchedWorld::load_lane`] using the exact `World::save_state` flat
+//! layout (engine-portable checkpoints).
+
+use super::world::{World, WorldCfg};
+use crate::nn::kernels;
+
+/// M lockstep worlds with shared topology and SoA per-lane state.
+pub struct BatchedWorld {
+    cfg: WorldCfg,
+    m: usize,
+    // ---- per-body constants (shared by all lanes)
+    half_len: Vec<f32>,
+    radius: Vec<f32>,
+    inv_mass: Vec<f32>,
+    inv_inertia: Vec<f32>,
+    // ---- per-joint constants
+    body_a: Vec<usize>,
+    body_b: Vec<usize>,
+    anchor_ax: Vec<f32>,
+    anchor_ay: Vec<f32>,
+    anchor_bx: Vec<f32>,
+    anchor_by: Vec<f32>,
+    ref_angle: Vec<f32>,
+    limit: Vec<Option<(f32, f32)>>,
+    // ---- per-body-per-lane state columns, index = body * m + lane
+    pos_x: Vec<f32>,
+    pos_y: Vec<f32>,
+    angle: Vec<f32>,
+    vel_x: Vec<f32>,
+    vel_y: Vec<f32>,
+    omega: Vec<f32>,
+    force_x: Vec<f32>,
+    force_y: Vec<f32>,
+    torque: Vec<f32>,
+    // ---- per-joint-per-lane solver state, index = joint * m + lane
+    motor_torque: Vec<f32>,
+    imp_x: Vec<f32>,
+    imp_y: Vec<f32>,
+    limit_imp: Vec<f32>,
+    // ---- per-contact-per-lane warm starts, index = (body*2+ep) * m + lane
+    contact_n: Vec<f32>,
+    contact_t: Vec<f32>,
+}
+
+impl BatchedWorld {
+    /// Replicate `template`'s topology and complete dynamic state
+    /// (including solver warm-starts, via the `save_state` layout) into
+    /// M identical lanes.
+    pub fn from_template(template: &World, m: usize) -> BatchedWorld {
+        let nb = template.bodies.len();
+        let nj = template.joints.len();
+        let mut bw = BatchedWorld {
+            cfg: template.cfg.clone(),
+            m,
+            half_len: template.bodies.iter().map(|b| b.half_len).collect(),
+            radius: template.bodies.iter().map(|b| b.radius).collect(),
+            inv_mass: template.bodies.iter().map(|b| b.inv_mass).collect(),
+            inv_inertia: template.bodies.iter().map(|b| b.inv_inertia).collect(),
+            body_a: template.joints.iter().map(|j| j.body_a).collect(),
+            body_b: template.joints.iter().map(|j| j.body_b).collect(),
+            anchor_ax: template.joints.iter().map(|j| j.anchor_a.x).collect(),
+            anchor_ay: template.joints.iter().map(|j| j.anchor_a.y).collect(),
+            anchor_bx: template.joints.iter().map(|j| j.anchor_b.x).collect(),
+            anchor_by: template.joints.iter().map(|j| j.anchor_b.y).collect(),
+            ref_angle: template.joints.iter().map(|j| j.ref_angle).collect(),
+            limit: template.joints.iter().map(|j| j.limit).collect(),
+            pos_x: vec![0.0; nb * m],
+            pos_y: vec![0.0; nb * m],
+            angle: vec![0.0; nb * m],
+            vel_x: vec![0.0; nb * m],
+            vel_y: vec![0.0; nb * m],
+            omega: vec![0.0; nb * m],
+            force_x: vec![0.0; nb * m],
+            force_y: vec![0.0; nb * m],
+            torque: vec![0.0; nb * m],
+            motor_torque: vec![0.0; nj * m],
+            imp_x: vec![0.0; nj * m],
+            imp_y: vec![0.0; nj * m],
+            limit_imp: vec![0.0; nj * m],
+            contact_n: vec![0.0; nb * 2 * m],
+            contact_t: vec![0.0; nb * 2 * m],
+        };
+        let state = template.save_state();
+        for lane in 0..m {
+            bw.load_lane(lane, &state);
+        }
+        bw
+    }
+
+    pub fn num_lanes(&self) -> usize {
+        self.m
+    }
+
+    pub fn num_bodies(&self) -> usize {
+        self.half_len.len()
+    }
+
+    pub fn num_joints(&self) -> usize {
+        self.body_a.len()
+    }
+
+    /// Flat f32 length of one lane's state (the `World::save_state` len).
+    pub fn lane_state_len(&self) -> usize {
+        self.num_bodies() * 9 + self.num_joints() * 4 + self.num_bodies() * 2 * 2
+    }
+
+    #[inline]
+    fn bi(&self, body: usize, lane: usize) -> usize {
+        body * self.m + lane
+    }
+
+    /// Apply a motor torque to joint `j` of lane `lane` for the next step.
+    pub fn set_motor(&mut self, j: usize, lane: usize, torque: f32) {
+        self.motor_torque[j * self.m + lane] = torque;
+    }
+
+    pub fn body_pos_x(&self, body: usize, lane: usize) -> f32 {
+        self.pos_x[self.bi(body, lane)]
+    }
+
+    pub fn body_pos_y(&self, body: usize, lane: usize) -> f32 {
+        self.pos_y[self.bi(body, lane)]
+    }
+
+    pub fn body_angle(&self, body: usize, lane: usize) -> f32 {
+        self.angle[self.bi(body, lane)]
+    }
+
+    pub fn body_vel_x(&self, body: usize, lane: usize) -> f32 {
+        self.vel_x[self.bi(body, lane)]
+    }
+
+    pub fn body_vel_y(&self, body: usize, lane: usize) -> f32 {
+        self.vel_y[self.bi(body, lane)]
+    }
+
+    pub fn body_omega(&self, body: usize, lane: usize) -> f32 {
+        self.omega[self.bi(body, lane)]
+    }
+
+    /// Joint angle of lane `lane` (matches `RevoluteJoint::angle`).
+    pub fn joint_angle(&self, j: usize, lane: usize) -> f32 {
+        self.angle[self.bi(self.body_b[j], lane)] - self.angle[self.bi(self.body_a[j], lane)]
+            - self.ref_angle[j]
+    }
+
+    /// Joint angular velocity of lane `lane` (matches `RevoluteJoint::speed`).
+    pub fn joint_speed(&self, j: usize, lane: usize) -> f32 {
+        self.omega[self.bi(self.body_b[j], lane)] - self.omega[self.bi(self.body_a[j], lane)]
+    }
+
+    /// Advance all M lanes one fixed timestep — the item-outer/lane-inner
+    /// transcription of `World::step` (see the module docs).
+    pub fn step(&mut self, dt: f32) {
+        let m = self.m;
+        let cfg = self.cfg.clone();
+
+        // --- integrate velocities (gravity, applied forces, motors, damping)
+        for b in 0..self.num_bodies() {
+            let im = self.inv_mass[b];
+            let ii = self.inv_inertia[b];
+            let s = b * m;
+            if im > 0.0 {
+                let d = 1.0 / (1.0 + cfg.damping * dt);
+                for l in 0..m {
+                    let i = s + l;
+                    self.vel_x[i] += (0.0 + self.force_x[i] * im) * dt;
+                    self.vel_y[i] += (cfg.gravity + self.force_y[i] * im) * dt;
+                    self.omega[i] += self.torque[i] * ii * dt;
+                    self.vel_x[i] *= d;
+                    self.vel_y[i] *= d;
+                    self.omega[i] *= d;
+                }
+            }
+            self.force_x[s..s + m].fill(0.0);
+            self.force_y[s..s + m].fill(0.0);
+            self.torque[s..s + m].fill(0.0);
+        }
+        for j in 0..self.num_joints() {
+            let (a, bb) = (self.body_a[j], self.body_b[j]);
+            let (iia, iib) = (self.inv_inertia[a], self.inv_inertia[bb]);
+            for l in 0..m {
+                let tau = self.motor_torque[j * m + l];
+                self.omega[a * m + l] -= tau * iia * dt;
+                self.omega[bb * m + l] += tau * iib * dt;
+            }
+        }
+
+        // --- solve velocity constraints (joints + contacts), warm-started
+        for _ in 0..cfg.velocity_iters {
+            self.solve_joints(dt);
+            self.solve_contacts(dt);
+        }
+
+        // --- integrate positions + clamp runaway velocities
+        for b in 0..self.num_bodies() {
+            let s = b * m;
+            for l in 0..m {
+                let i = s + l;
+                let vx = self.vel_x[i];
+                let vy = self.vel_y[i];
+                let sp = (vx * vx + vy * vy).sqrt();
+                if sp > cfg.max_vel {
+                    self.vel_x[i] = vx * (cfg.max_vel / sp);
+                    self.vel_y[i] = vy * (cfg.max_vel / sp);
+                }
+                self.omega[i] = self.omega[i].clamp(-cfg.max_omega, cfg.max_omega);
+            }
+            // pos += vel·dt, angle += ω·dt — contiguous lane columns
+            // through the dispatched integrator kernel
+            kernels::axpy(dt, &self.vel_x[s..s + m], &mut self.pos_x[s..s + m]);
+            kernels::axpy(dt, &self.vel_y[s..s + m], &mut self.pos_y[s..s + m]);
+            kernels::axpy(dt, &self.omega[s..s + m], &mut self.angle[s..s + m]);
+        }
+    }
+
+    fn solve_joints(&mut self, dt: f32) {
+        let m = self.m;
+        let baumgarte = self.cfg.baumgarte;
+        for j in 0..self.num_joints() {
+            let (ia, ib) = (self.body_a[j], self.body_b[j]);
+            let (ax, ay) = (self.anchor_ax[j], self.anchor_ay[j]);
+            let (bx, by) = (self.anchor_bx[j], self.anchor_by[j]);
+            let limit = self.limit[j];
+            let ref_angle = self.ref_angle[j];
+            let (ima, iia) = (self.inv_mass[ia], self.inv_inertia[ia]);
+            let (imb, iib) = (self.inv_mass[ib], self.inv_inertia[ib]);
+            for l in 0..m {
+                let ai = ia * m + l;
+                let bi = ib * m + l;
+                let (pax, pay, aa) = (self.pos_x[ai], self.pos_y[ai], self.angle[ai]);
+                let (vax, vay, wa) = (self.vel_x[ai], self.vel_y[ai], self.omega[ai]);
+                let (pbx, pby, ab) = (self.pos_x[bi], self.pos_y[bi], self.angle[bi]);
+                let (vbx, vby, wb) = (self.vel_x[bi], self.vel_y[bi], self.omega[bi]);
+                // ra = anchor_a.rotate(aa), rb = anchor_b.rotate(ab)
+                let (sa, ca) = aa.sin_cos();
+                let ra_x = ca * ax - sa * ay;
+                let ra_y = sa * ax + ca * ay;
+                let (sb, cb) = ab.sin_cos();
+                let rb_x = cb * bx - sb * by;
+                let rb_y = sb * bx + cb * by;
+
+                // cdot = vb + wb×rb - va - wa×ra (left-associated, like
+                // the Vec2 expression in the scalar solver; w×r is
+                // (-w·r.y, w·r.x))
+                let csb_x = -wb * rb_y;
+                let csb_y = wb * rb_x;
+                let csa_x = -wa * ra_y;
+                let csa_y = wa * ra_x;
+                let cdot_x = ((vbx + csb_x) - vax) - csa_x;
+                let cdot_y = ((vby + csb_y) - vay) - csa_y;
+                let c_x = (pbx + rb_x) - (pax + ra_x);
+                let c_y = (pby + rb_y) - (pay + ra_y);
+                let bias_x = c_x * (baumgarte / dt);
+                let bias_y = c_y * (baumgarte / dt);
+
+                let k11 = ima + imb + iia * ra_y * ra_y + iib * rb_y * rb_y;
+                let k12 = -iia * ra_x * ra_y - iib * rb_x * rb_y;
+                let k22 = ima + imb + iia * ra_x * ra_x + iib * rb_x * rb_x;
+                let det = k11 * k22 - k12 * k12;
+                if det.abs() < 1e-12 {
+                    continue;
+                }
+                let rhs_x = -(cdot_x + bias_x);
+                let rhs_y = -(cdot_y + bias_y);
+                let imp_x = (k22 * rhs_x - k12 * rhs_y) / det;
+                let imp_y = (k11 * rhs_y - k12 * rhs_x) / det;
+
+                self.vel_x[ai] -= imp_x * ima;
+                self.vel_y[ai] -= imp_y * ima;
+                self.omega[ai] -= iia * (ra_x * imp_y - ra_y * imp_x);
+                self.vel_x[bi] += imp_x * imb;
+                self.vel_y[bi] += imp_y * imb;
+                self.omega[bi] += iib * (rb_x * imp_y - rb_y * imp_x);
+                self.imp_x[j * m + l] += imp_x;
+                self.imp_y[j * m + l] += imp_y;
+
+                // --- angle limits (inequality on relative angle)
+                if let Some((lo, hi)) = limit {
+                    let angle = ab - aa - ref_angle;
+                    let wrel = self.omega[bi] - self.omega[ai];
+                    let ii = iia + iib;
+                    if ii > 0.0 {
+                        let mut imp_l = 0.0f32;
+                        if angle < lo {
+                            let cdot = wrel + (angle - lo) * (baumgarte / dt);
+                            imp_l = (-cdot / ii).max(0.0);
+                        } else if angle > hi {
+                            let cdot = wrel + (angle - hi) * (baumgarte / dt);
+                            imp_l = (-cdot / ii).min(0.0);
+                        }
+                        if imp_l != 0.0 {
+                            self.omega[ai] -= iia * imp_l;
+                            self.omega[bi] += iib * imp_l;
+                            self.limit_imp[j * m + l] += imp_l;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn solve_contacts(&mut self, dt: f32) {
+        let m = self.m;
+        let cfg = self.cfg.clone();
+        for b in 0..self.num_bodies() {
+            let hl = self.half_len[b];
+            let radius = self.radius[b];
+            let im = self.inv_mass[b];
+            let ii = self.inv_inertia[b];
+            // endpoint order matches `Body::endpoints`: -half_len, +half_len
+            for (ei, lx) in [-hl, hl].into_iter().enumerate() {
+                let ci = b * 2 + ei;
+                for l in 0..m {
+                    let i = b * m + l;
+                    let cil = ci * m + l;
+                    // ep = pos + v2(lx, 0).rotate(angle)
+                    let (s, c) = self.angle[i].sin_cos();
+                    let ly = 0.0f32;
+                    let ex = self.pos_x[i] + (c * lx - s * ly);
+                    let ey = self.pos_y[i] + (s * lx + c * ly);
+                    let pen = (cfg.ground_y + radius) - ey;
+                    if pen < 0.0 {
+                        self.contact_n[cil] = 0.0;
+                        self.contact_t[cil] = 0.0;
+                        continue;
+                    }
+                    let r_x = ex - self.pos_x[i];
+                    let r_y = ey - self.pos_y[i];
+                    // vn = velocity_at(ep).y = vel.y + ω·r.x
+                    let vn = self.vel_y[i] + self.omega[i] * r_x;
+                    let kn = im + ii * r_x * r_x;
+                    if kn <= 0.0 {
+                        continue;
+                    }
+                    let bias = -cfg.baumgarte / dt * (pen - cfg.contact_slop).max(0.0);
+                    let mut dpn = -(vn + bias) / kn;
+                    let old = self.contact_n[cil];
+                    let new = (old + dpn).max(0.0);
+                    dpn = new - old;
+                    self.contact_n[cil] = new;
+                    self.vel_y[i] += dpn * im;
+                    self.omega[i] += ii * r_x * dpn;
+
+                    // friction along x, clamped by μ · Pn
+                    // vt = velocity_at(ep).x = vel.x + (-ω·r.y), with the
+                    // impulses above already applied
+                    let cs_x = -self.omega[i] * r_y;
+                    let vt = self.vel_x[i] + cs_x;
+                    let kt = im + ii * r_y * r_y;
+                    if kt <= 0.0 {
+                        continue;
+                    }
+                    let mut dpt = -vt / kt;
+                    let max_f = cfg.friction * self.contact_n[cil];
+                    let old_t = self.contact_t[cil];
+                    let new_t = (old_t + dpt).clamp(-max_f, max_f);
+                    dpt = new_t - old_t;
+                    self.contact_t[cil] = new_t;
+                    self.vel_x[i] += dpt * im;
+                    self.omega[i] -= ii * r_y * dpt;
+                }
+            }
+        }
+    }
+
+    /// Serialize lane `lane` in the exact `World::save_state` layout.
+    pub fn save_lane(&self, lane: usize) -> Vec<f32> {
+        let m = self.m;
+        let mut out = Vec::with_capacity(self.lane_state_len());
+        for b in 0..self.num_bodies() {
+            let i = b * m + lane;
+            out.extend_from_slice(&[
+                self.pos_x[i],
+                self.pos_y[i],
+                self.angle[i],
+                self.vel_x[i],
+                self.vel_y[i],
+                self.omega[i],
+                self.force_x[i],
+                self.force_y[i],
+                self.torque[i],
+            ]);
+        }
+        for j in 0..self.num_joints() {
+            let i = j * m + lane;
+            out.extend_from_slice(&[
+                self.motor_torque[i],
+                self.imp_x[i],
+                self.imp_y[i],
+                self.limit_imp[i],
+            ]);
+        }
+        for ci in 0..self.num_bodies() * 2 {
+            let i = ci * m + lane;
+            out.extend_from_slice(&[self.contact_n[i], self.contact_t[i]]);
+        }
+        out
+    }
+
+    /// Restore lane `lane` from a `World::save_state` payload.
+    pub fn load_lane(&mut self, lane: usize, state: &[f32]) {
+        assert_eq!(
+            state.len(),
+            self.lane_state_len(),
+            "batched world lane state shape mismatch"
+        );
+        let m = self.m;
+        let mut it = state.iter().copied();
+        let mut next = || it.next().unwrap();
+        for b in 0..self.half_len.len() {
+            let i = b * m + lane;
+            self.pos_x[i] = next();
+            self.pos_y[i] = next();
+            self.angle[i] = next();
+            self.vel_x[i] = next();
+            self.vel_y[i] = next();
+            self.omega[i] = next();
+            self.force_x[i] = next();
+            self.force_y[i] = next();
+            self.torque[i] = next();
+        }
+        for j in 0..self.body_a.len() {
+            let i = j * m + lane;
+            self.motor_torque[i] = next();
+            self.imp_x[i] = next();
+            self.imp_y[i] = next();
+            self.limit_imp[i] = next();
+        }
+        for ci in 0..self.half_len.len() * 2 {
+            let i = ci * m + lane;
+            self.contact_n[i] = next();
+            self.contact_t[i] = next();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::physics::world::Body;
+    use crate::env::physics::{v2, World};
+
+    /// A small two-body articulated world with ground contact — enough to
+    /// exercise every solver phase (joints, limits, contacts, friction).
+    fn template() -> World {
+        let mut w = World::new(WorldCfg::default());
+        let a = w.add_body(Body::rod(v2(0.0, 0.6), 0.0, 2.0, 0.4, 0.05));
+        let b = w.add_body(Body::rod(
+            v2(0.4, 0.3),
+            std::f32::consts::FRAC_PI_2,
+            0.5,
+            0.3,
+            0.04,
+        ));
+        w.add_joint(crate::env::physics::RevoluteJoint::new(
+            a,
+            b,
+            v2(0.4, 0.0),
+            v2(0.3, 0.0),
+            std::f32::consts::FRAC_PI_2,
+            Some((-0.8, 0.8)),
+        ));
+        w.reset_solver_state();
+        w
+    }
+
+    #[test]
+    fn lanes_match_scalar_world_bitwise() {
+        let m = 3;
+        let mut bw = BatchedWorld::from_template(&template(), m);
+        // de-correlate the lanes, then drive scalar references from the
+        // exact same lane states
+        let mut scalars: Vec<World> = Vec::new();
+        for lane in 0..m {
+            let mut w = template();
+            let mut st = w.save_state();
+            for (k, v) in st.iter_mut().enumerate() {
+                *v += 0.01 * (lane as f32 + 1.0) * ((k % 5) as f32 - 2.0);
+            }
+            w.load_state(&st);
+            bw.load_lane(lane, &st);
+            scalars.push(w);
+        }
+        for step in 0..200 {
+            for (lane, w) in scalars.iter_mut().enumerate() {
+                let tau = 0.4 * ((step + lane) as f32 * 0.37).sin();
+                w.set_motor(0, tau);
+                bw.set_motor(0, lane, tau);
+            }
+            for w in scalars.iter_mut() {
+                w.step(0.01);
+            }
+            bw.step(0.01);
+            for (lane, w) in scalars.iter().enumerate() {
+                let want = w.save_state();
+                let got = bw.save_lane(lane);
+                assert_eq!(want.len(), got.len());
+                for (k, (a, b)) in want.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "step {step} lane {lane} state[{k}]: scalar {a} vs batched {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_state_round_trips() {
+        let m = 2;
+        let mut bw = BatchedWorld::from_template(&template(), m);
+        let mut st = bw.save_lane(1);
+        for (k, v) in st.iter_mut().enumerate() {
+            *v = k as f32 * 0.125;
+        }
+        bw.load_lane(1, &st);
+        assert_eq!(bw.save_lane(1), st);
+        // lane 0 untouched
+        assert_eq!(bw.save_lane(0), template().save_state());
+    }
+}

@@ -1,12 +1,16 @@
 //! Planar rigid-body physics substrate (the MuJoCo substitute).
 //!
 //! `vec2` — 2-D vector math; `world` — bodies, motorized revolute joints
-//! with limits, ground contacts with friction, sequential-impulse solver.
+//! with limits, ground contacts with friction, sequential-impulse solver;
+//! `batch_world` — the same solver over M lockstep worlds stored as
+//! structure-of-arrays columns (the batched env engine's substrate).
 //! Built from scratch per DESIGN.md §3: the paper's systems claims need a
 //! CPU-bound, learnable locomotion substrate, not bit-exact MuJoCo.
 
+pub mod batch_world;
 pub mod vec2;
 pub mod world;
 
+pub use batch_world::BatchedWorld;
 pub use vec2::{v2, Vec2};
 pub use world::{Body, RevoluteJoint, World, WorldCfg};

@@ -9,7 +9,9 @@
 //! Dynamics: standard two-link manipulator equations
 //! M(q) q̈ + C(q, q̇) q̇ = τ, integrated semi-implicitly.
 
+use super::batch::{BatchStep, BatchedEnv};
 use super::{Env, Step};
+use crate::nn::kernels;
 use crate::util::rng::Pcg64;
 
 pub struct Reacher {
@@ -156,6 +158,171 @@ impl Env for Reacher {
         self.q = [state[0], state[1]];
         self.qd = [state[2], state[3]];
         self.target = [state[4], state[5]];
+    }
+}
+
+/// SoA batched reacher: joint angles/velocities and targets live in
+/// `[M]`-wide columns. The mass-matrix solve stays scalar per lane; the
+/// semi-implicit integrator runs through `kernels::axpy`/`axpy_clamp`
+/// column-at-a-time (bitwise equal to the scalar updates), and
+/// `reset_lane` consumes the RNG in the scalar draw order including the
+/// target rejection loop.
+pub struct BatchedReacher {
+    q0: Vec<f32>,
+    q1: Vec<f32>,
+    qd0: Vec<f32>,
+    qd1: Vec<f32>,
+    tx: Vec<f32>,
+    ty: Vec<f32>,
+    /// Scratch columns: per-lane joint accelerations this sweep.
+    qdd1: Vec<f32>,
+    qdd2: Vec<f32>,
+    out: Vec<BatchStep>,
+    p: Reacher,
+}
+
+impl BatchedReacher {
+    pub fn new(m: usize) -> Self {
+        Self {
+            q0: vec![0.0; m],
+            q1: vec![0.0; m],
+            qd0: vec![0.0; m],
+            qd1: vec![0.0; m],
+            tx: vec![0.1; m],
+            ty: vec![0.1; m],
+            qdd1: vec![0.0; m],
+            qdd2: vec![0.0; m],
+            out: vec![BatchStep::default(); m],
+            p: Reacher::default(),
+        }
+    }
+
+    fn fingertip_lane(&self, lane: usize) -> [f32; 2] {
+        let x = self.p.l1 * self.q0[lane].cos()
+            + self.p.l2 * (self.q0[lane] + self.q1[lane]).cos();
+        let y = self.p.l1 * self.q0[lane].sin()
+            + self.p.l2 * (self.q0[lane] + self.q1[lane]).sin();
+        [x, y]
+    }
+
+    fn write_obs_lane(&self, lane: usize, obs: &mut [f32]) {
+        let tip = self.fingertip_lane(lane);
+        obs[0] = self.q0[lane].cos();
+        obs[1] = self.q1[lane].cos();
+        obs[2] = self.q0[lane].sin();
+        obs[3] = self.q1[lane].sin();
+        obs[4] = self.tx[lane];
+        obs[5] = self.ty[lane];
+        obs[6] = self.qd0[lane];
+        obs[7] = self.qd1[lane];
+        obs[8] = tip[0] - self.tx[lane];
+        obs[9] = tip[1] - self.ty[lane];
+    }
+}
+
+impl BatchedEnv for BatchedReacher {
+    fn num_envs(&self) -> usize {
+        self.q0.len()
+    }
+
+    fn obs_dim(&self) -> usize {
+        10
+    }
+
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn max_episode_steps(&self) -> usize {
+        50
+    }
+
+    fn name(&self) -> &'static str {
+        "reacher"
+    }
+
+    fn reset_lane(&mut self, lane: usize, rng: &mut Pcg64, obs_row: &mut [f32]) {
+        self.q0[lane] = rng.uniform(-std::f32::consts::PI, std::f32::consts::PI);
+        self.q1[lane] = rng.uniform(-std::f32::consts::PI, std::f32::consts::PI);
+        self.qd0[lane] = rng.uniform(-0.1, 0.1);
+        self.qd1[lane] = rng.uniform(-0.1, 0.1);
+        // target inside the reachable annulus — same rejection loop (and
+        // therefore the same number of RNG draws) as the scalar env
+        loop {
+            let t = [rng.uniform(-0.2, 0.2), rng.uniform(-0.2, 0.2)];
+            let r = (t[0] * t[0] + t[1] * t[1]).sqrt();
+            if r <= self.p.l1 + self.p.l2 {
+                self.tx[lane] = t[0];
+                self.ty[lane] = t[1];
+                break;
+            }
+        }
+        self.write_obs_lane(lane, obs_row);
+    }
+
+    fn step_all(&mut self, actions: &[f32], obs_out: &mut [f32]) -> &[BatchStep] {
+        let m = self.q0.len();
+        debug_assert_eq!(actions.len(), m * 2);
+        debug_assert_eq!(obs_out.len(), m * 10);
+        let (l1, l2, m1, m2) = (self.p.l1, self.p.l2, self.p.m1, self.p.m2);
+        let (gear, dt, damping) = (self.p.gear, self.p.dt, self.p.damping);
+        for lane in 0..m {
+            let tau = [
+                actions[lane * 2].clamp(-1.0, 1.0) * gear,
+                actions[lane * 2 + 1].clamp(-1.0, 1.0) * gear,
+            ];
+            let c2 = self.q1[lane].cos();
+            let s2 = self.q1[lane].sin();
+            let m11 = (m1 + m2) * l1 * l1 + m2 * l2 * l2 + 2.0 * m2 * l1 * l2 * c2;
+            let m12 = m2 * l2 * l2 + m2 * l1 * l2 * c2;
+            let m22 = m2 * l2 * l2;
+            let h = m2 * l1 * l2 * s2;
+            let c1 = -h * self.qd1[lane] * (2.0 * self.qd0[lane] + self.qd1[lane]);
+            let c2t = h * self.qd0[lane] * self.qd0[lane];
+            let rhs1 = tau[0] - c1 - damping * 1e-3 * self.qd0[lane];
+            let rhs2 = tau[1] - c2t - damping * 1e-3 * self.qd1[lane];
+            let det = m11 * m22 - m12 * m12;
+            self.qdd1[lane] = (m22 * rhs1 - m12 * rhs2) / det;
+            self.qdd2[lane] = (m11 * rhs2 - m12 * rhs1) / det;
+        }
+        kernels::axpy_clamp(dt, &self.qdd1, &mut self.qd0, -50.0, 50.0);
+        kernels::axpy_clamp(dt, &self.qdd2, &mut self.qd1, -50.0, 50.0);
+        kernels::axpy(dt, &self.qd0, &mut self.q0);
+        kernels::axpy(dt, &self.qd1, &mut self.q1);
+        for lane in 0..m {
+            let tip = self.fingertip_lane(lane);
+            let dx = tip[0] - self.tx[lane];
+            let dy = tip[1] - self.ty[lane];
+            let dist = (dx * dx + dy * dy).sqrt();
+            let ctrl = actions[lane * 2].clamp(-1.0, 1.0).powi(2)
+                + actions[lane * 2 + 1].clamp(-1.0, 1.0).powi(2);
+            self.out[lane] = BatchStep {
+                reward: -dist - ctrl * 0.1,
+                done: false,
+            };
+            self.write_obs_lane(lane, &mut obs_out[lane * 10..(lane + 1) * 10]);
+        }
+        &self.out
+    }
+
+    fn save_lane(&self, lane: usize) -> Vec<f32> {
+        vec![
+            self.q0[lane],
+            self.q1[lane],
+            self.qd0[lane],
+            self.qd1[lane],
+            self.tx[lane],
+            self.ty[lane],
+        ]
+    }
+
+    fn load_lane(&mut self, lane: usize, state: &[f32]) {
+        self.q0[lane] = state[0];
+        self.q1[lane] = state[1];
+        self.qd0[lane] = state[2];
+        self.qd1[lane] = state[3];
+        self.tx[lane] = state[4];
+        self.ty[lane] = state[5];
     }
 }
 

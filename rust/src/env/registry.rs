@@ -2,10 +2,11 @@
 //! AOT artifacts use) to constructors, so the launcher, benches and tests
 //! all build envs through one path.
 
-use super::cartpole::CartPole;
-use super::halfcheetah::HalfCheetah;
-use super::pendulum::Pendulum;
-use super::reacher::Reacher;
+use super::batch::BatchedEnv;
+use super::cartpole::{BatchedCartPole, CartPole};
+use super::halfcheetah::{BatchedHalfCheetah, HalfCheetah};
+use super::pendulum::{BatchedPendulum, Pendulum};
+use super::reacher::{BatchedReacher, Reacher};
 use super::Env;
 
 /// All registered env names, in preset order.
@@ -18,6 +19,18 @@ pub fn make_env(name: &str) -> Option<Box<dyn Env>> {
         "cartpole" => Some(Box::new(CartPole::default())),
         "reacher" => Some(Box::new(Reacher::default())),
         "halfcheetah" => Some(Box::new(HalfCheetah::default())),
+        _ => None,
+    }
+}
+
+/// Construct the SoA batched engine for a registered env at vector width
+/// `m`. Every registry env has one; `None` only for unknown names.
+pub fn make_batched_env(name: &str, m: usize) -> Option<Box<dyn BatchedEnv>> {
+    match name {
+        "pendulum" => Some(Box::new(BatchedPendulum::new(m))),
+        "cartpole" => Some(Box::new(BatchedCartPole::new(m))),
+        "reacher" => Some(Box::new(BatchedReacher::new(m))),
+        "halfcheetah" => Some(Box::new(BatchedHalfCheetah::new(m))),
         _ => None,
     }
 }
@@ -44,6 +57,19 @@ mod tests {
     #[test]
     fn unknown_name_is_none() {
         assert!(make_env("mujoco").is_none());
+        assert!(make_batched_env("mujoco", 2).is_none());
+    }
+
+    #[test]
+    fn every_env_has_a_batched_engine_with_matching_dims() {
+        for name in ENV_NAMES {
+            let be = make_batched_env(name, 3).unwrap();
+            let e = make_env(name).unwrap();
+            assert_eq!(be.name(), name);
+            assert_eq!(be.num_envs(), 3);
+            assert_eq!((be.obs_dim(), be.act_dim()), (e.obs_dim(), e.act_dim()));
+            assert_eq!(be.max_episode_steps(), e.max_episode_steps());
+        }
     }
 
     #[test]

@@ -4,21 +4,28 @@
 //! `VecEnv` is the substrate of vectorized sampling (WarpDrive / Spreeze
 //! style): one batched policy forward drives all M envs of a sampler
 //! worker per sim tick, so inference cost is amortized M-fold without
-//! adding threads. Invariants:
+//! adding threads. Since PR 9 it is a thin adapter over one of two
+//! engines: the SoA [`BatchedEnv`](super::batch::BatchedEnv) lockstep
+//! engine (default for registry envs — one `step_all` sweep advances all
+//! M lanes column-at-a-time), or the legacy per-env scalar fallback
+//! (wrapper stacks and third-party `Env` impls). The two are bitwise
+//! interchangeable in exact kernel mode, and snapshots are portable
+//! across engines. Invariants:
 //!
 //!   * each env owns an **independent RNG stream**, so env `i`'s
 //!     trajectory is bitwise-identical whether it runs inside a `VecEnv`
 //!     of size 1 or size M (see the conformance tests below);
 //!   * per-env episode state (step count, raw return, time-limit
-//!     truncation) lives here, not in the sampler, so every consumer
-//!     agrees on boundary semantics: `terminal` = env-reported done (GAE
-//!     must NOT bootstrap through), `truncated` = time-limit cut (GAE
-//!     bootstraps with V(s'));
+//!     truncation) lives here, not in the sampler or the engine, so
+//!     every consumer agrees on boundary semantics: `terminal` =
+//!     env-reported done (GAE must NOT bootstrap through), `truncated` =
+//!     time-limit cut (GAE bootstraps with V(s'));
 //!   * `step_all` never auto-resets: callers read the post-step
 //!     observation (the bootstrap state s') first, then call
 //!     [`VecEnv::reset_env`] for each finished env — exactly the ordering
 //!     the single-env sampler loop used.
 
+use super::batch::{self, BatchedEnv, EnvEngine};
 use super::Env;
 use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::rng::Pcg64;
@@ -108,10 +115,17 @@ impl VecEnvState {
     }
 }
 
+/// The stepping engine behind a [`VecEnv`]: SoA lockstep or legacy
+/// per-env scalar (see the module docs).
+enum Engine {
+    Scalar(Vec<Box<dyn Env>>),
+    Batched(Box<dyn BatchedEnv>),
+}
+
 /// M homogeneous environments stepped in lockstep with per-env RNG
 /// streams and per-env episode accounting.
 pub struct VecEnv {
-    envs: Vec<Box<dyn Env>>,
+    engine: Engine,
     rngs: Vec<Pcg64>,
     /// Row-major [M * obs_dim] raw observations (current state per env).
     obs: Vec<f32>,
@@ -120,10 +134,12 @@ pub struct VecEnv {
     obs_dim: usize,
     act_dim: usize,
     max_ep: usize,
+    m: usize,
 }
 
 impl VecEnv {
-    /// Bundle `envs` (all the same task) with one RNG stream per env.
+    /// Bundle `envs` (all the same task) with one RNG stream per env —
+    /// the scalar engine (any `Env` impl, including wrapper stacks).
     pub fn new(envs: Vec<Box<dyn Env>>, rngs: Vec<Pcg64>) -> anyhow::Result<VecEnv> {
         anyhow::ensure!(!envs.is_empty(), "VecEnv needs at least one env");
         anyhow::ensure!(
@@ -145,7 +161,7 @@ impl VecEnv {
         }
         let m = envs.len();
         Ok(VecEnv {
-            envs,
+            engine: Engine::Scalar(envs),
             rngs,
             obs: vec![0.0; m * obs_dim],
             ep_len: vec![0; m],
@@ -153,32 +169,91 @@ impl VecEnv {
             obs_dim,
             act_dim,
             max_ep,
+            m,
         })
     }
 
-    /// Build M instances of a registered env. Env `i` gets RNG stream
-    /// `first_stream + i`, so the same `(seed, stream)` pair always
-    /// reproduces the same trajectory regardless of M or worker layout.
+    /// Wrap a batched engine with one RNG stream per lane.
+    pub fn from_batched(env: Box<dyn BatchedEnv>, rngs: Vec<Pcg64>) -> anyhow::Result<VecEnv> {
+        let m = env.num_envs();
+        anyhow::ensure!(m > 0, "VecEnv needs at least one env");
+        anyhow::ensure!(
+            m == rngs.len(),
+            "VecEnv: {} lanes but {} rng streams",
+            m,
+            rngs.len()
+        );
+        let obs_dim = env.obs_dim();
+        let act_dim = env.act_dim();
+        let max_ep = env.max_episode_steps();
+        Ok(VecEnv {
+            engine: Engine::Batched(env),
+            rngs,
+            obs: vec![0.0; m * obs_dim],
+            ep_len: vec![0; m],
+            ep_return: vec![0.0; m],
+            obs_dim,
+            act_dim,
+            max_ep,
+            m,
+        })
+    }
+
+    /// Build M instances of a registered env with the process-wide
+    /// active engine (see [`batch::active_engine`]). Env `i` gets RNG
+    /// stream `first_stream + i`, so the same `(seed, stream)` pair
+    /// always reproduces the same trajectory regardless of M, worker
+    /// layout, or engine.
     pub fn from_registry(
         name: &str,
         m: usize,
         seed: u64,
         first_stream: u64,
     ) -> anyhow::Result<VecEnv> {
-        let envs = (0..m)
-            .map(|_| {
-                super::registry::make_env(name)
-                    .ok_or_else(|| anyhow::anyhow!("unknown env {name:?}"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        let rngs = (0..m)
+        VecEnv::from_registry_with(name, m, seed, first_stream, batch::active_engine())
+    }
+
+    /// Build M instances of a registered env with an explicit engine
+    /// (tests/benches that must not depend on the process-global
+    /// selection).
+    pub fn from_registry_with(
+        name: &str,
+        m: usize,
+        seed: u64,
+        first_stream: u64,
+        engine: EnvEngine,
+    ) -> anyhow::Result<VecEnv> {
+        let rngs: Vec<Pcg64> = (0..m)
             .map(|i| Pcg64::with_stream(seed, first_stream + i as u64))
             .collect();
-        VecEnv::new(envs, rngs)
+        match engine {
+            EnvEngine::Batched => {
+                let env = super::registry::make_batched_env(name, m)
+                    .ok_or_else(|| anyhow::anyhow!("unknown env {name:?}"))?;
+                VecEnv::from_batched(env, rngs)
+            }
+            EnvEngine::Scalar => {
+                let envs = (0..m)
+                    .map(|_| {
+                        super::registry::make_env(name)
+                            .ok_or_else(|| anyhow::anyhow!("unknown env {name:?}"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                VecEnv::new(envs, rngs)
+            }
+        }
+    }
+
+    /// Which engine this VecEnv runs on.
+    pub fn engine(&self) -> EnvEngine {
+        match &self.engine {
+            Engine::Scalar(_) => EnvEngine::Scalar,
+            Engine::Batched(_) => EnvEngine::Batched,
+        }
     }
 
     pub fn num_envs(&self) -> usize {
-        self.envs.len()
+        self.m
     }
 
     pub fn obs_dim(&self) -> usize {
@@ -194,7 +269,10 @@ impl VecEnv {
     }
 
     pub fn name(&self) -> &'static str {
-        self.envs[0].name()
+        match &self.engine {
+            Engine::Scalar(envs) => envs[0].name(),
+            Engine::Batched(env) => env.name(),
+        }
     }
 
     /// Contiguous raw observations, row-major [M * obs_dim].
@@ -219,7 +297,7 @@ impl VecEnv {
 
     /// Reset every env from its own stream (fresh episodes everywhere).
     pub fn reset_all(&mut self) {
-        for i in 0..self.envs.len() {
+        for i in 0..self.m {
             self.reset_env(i);
         }
     }
@@ -228,16 +306,25 @@ impl VecEnv {
     /// episode counters cleared, observation row rewritten.
     pub fn reset_env(&mut self, i: usize) {
         let row = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
-        self.envs[i].reset(&mut self.rngs[i], row);
+        match &mut self.engine {
+            Engine::Scalar(envs) => envs[i].reset(&mut self.rngs[i], row),
+            Engine::Batched(env) => env.reset_lane(i, &mut self.rngs[i], row),
+        }
         self.ep_len[i] = 0;
         self.ep_return[i] = 0.0;
     }
 
     /// Capture the complete dynamic state of all M envs (dynamics, RNG
-    /// registers, observation buffer, episode counters).
+    /// registers, observation buffer, episode counters). The payload is
+    /// engine-portable: `save_lane` uses the scalar `save_state` layout,
+    /// so a snapshot taken on one engine restores on the other.
     pub fn save_state(&self) -> VecEnvState {
+        let env_state = match &self.engine {
+            Engine::Scalar(envs) => envs.iter().map(|e| e.save_state()).collect(),
+            Engine::Batched(env) => (0..self.m).map(|i| env.save_lane(i)).collect(),
+        };
         VecEnvState {
-            env_state: self.envs.iter().map(|e| e.save_state()).collect(),
+            env_state,
             rng: self.rngs.iter().map(|r| r.raw_state()).collect(),
             obs: self.obs.clone(),
             ep_len: self.ep_len.iter().map(|&l| l as u64).collect(),
@@ -250,7 +337,7 @@ impl VecEnv {
     /// bitwise from the captured point; callers must NOT `reset_all`
     /// afterwards (that would re-draw initial states and advance RNGs).
     pub fn load_state(&mut self, s: &VecEnvState) -> anyhow::Result<()> {
-        let m = self.envs.len();
+        let m = self.m;
         anyhow::ensure!(
             s.env_state.len() == m && s.rng.len() == m && s.obs.len() == m * self.obs_dim,
             "VecEnv state shape mismatch: snapshot has {} envs / {} obs, this VecEnv has {} / {}",
@@ -259,8 +346,17 @@ impl VecEnv {
             m,
             m * self.obs_dim
         );
-        for (e, st) in self.envs.iter_mut().zip(&s.env_state) {
-            e.load_state(st);
+        match &mut self.engine {
+            Engine::Scalar(envs) => {
+                for (e, st) in envs.iter_mut().zip(&s.env_state) {
+                    e.load_state(st);
+                }
+            }
+            Engine::Batched(env) => {
+                for (i, st) in s.env_state.iter().enumerate() {
+                    env.load_lane(i, st);
+                }
+            }
         }
         for (r, &(state, inc)) in self.rngs.iter_mut().zip(&s.rng) {
             *r = Pcg64::from_raw(state, inc);
@@ -280,19 +376,38 @@ impl VecEnv {
     /// Finished envs (terminal or truncated) are NOT auto-reset; their
     /// rows hold s' until the caller invokes [`VecEnv::reset_env`].
     pub fn step_all(&mut self, actions: &[f32], out: &mut [VecStepInfo]) {
-        debug_assert_eq!(actions.len(), self.envs.len() * self.act_dim);
-        debug_assert_eq!(out.len(), self.envs.len());
-        for i in 0..self.envs.len() {
-            let act = &actions[i * self.act_dim..(i + 1) * self.act_dim];
-            let row = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
-            let step = self.envs[i].step(act, row);
-            self.ep_len[i] += 1;
-            self.ep_return[i] += step.reward;
-            out[i] = VecStepInfo {
-                reward: step.reward,
-                terminal: step.done,
-                truncated: !step.done && self.ep_len[i] >= self.max_ep,
-            };
+        debug_assert_eq!(actions.len(), self.m * self.act_dim);
+        debug_assert_eq!(out.len(), self.m);
+        match &mut self.engine {
+            Engine::Scalar(envs) => {
+                for (i, env) in envs.iter_mut().enumerate() {
+                    let act = &actions[i * self.act_dim..(i + 1) * self.act_dim];
+                    let row = &mut self.obs[i * self.obs_dim..(i + 1) * self.obs_dim];
+                    let step = env.step(act, row);
+                    self.ep_len[i] += 1;
+                    self.ep_return[i] += step.reward;
+                    out[i] = VecStepInfo {
+                        reward: step.reward,
+                        terminal: step.done,
+                        truncated: !step.done && self.ep_len[i] >= self.max_ep,
+                    };
+                }
+            }
+            Engine::Batched(env) => {
+                // one SoA sweep writes all M next observations straight
+                // into the contiguous buffer; episode accounting below is
+                // identical to the scalar arm per lane
+                let steps = env.step_all(actions, &mut self.obs);
+                for (i, step) in steps.iter().enumerate() {
+                    self.ep_len[i] += 1;
+                    self.ep_return[i] += step.reward;
+                    out[i] = VecStepInfo {
+                        reward: step.reward,
+                        terminal: step.done,
+                        truncated: !step.done && self.ep_len[i] >= self.max_ep,
+                    };
+                }
+            }
         }
     }
 }

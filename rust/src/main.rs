@@ -16,8 +16,8 @@
 
 use walle::bench::figures;
 use walle::config::{
-    Algo, Backend, InferEpoch, InferPrecision, InferShards, InferWait, InferenceMode, KernelsCfg,
-    ReplayStrategy, TrainConfig,
+    Algo, Backend, EnvEngineCfg, InferEpoch, InferPrecision, InferShards, InferWait, InferenceMode,
+    KernelsCfg, ReplayStrategy, TrainConfig,
 };
 use walle::session::{load_params, Session};
 use walle::util::cli::Args;
@@ -71,6 +71,10 @@ TRAIN FLAGS:
                          bitwise-identical to the scalar reference;
                          `fast` enables FMA register tiling (~1e-6
                          relative drift, higher throughput)
+  --env-engine E         `auto` (default, resolves to `batched`) steps a
+                         worker's M envs as one structure-of-arrays
+                         sweep; `scalar` forces the legacy per-env loop;
+                         bitwise interchangeable under --kernels exact
   --iterations N         training iterations
   --samples-per-iter N   samples per iteration (paper: 20000)
   --algo NAME            learner algorithm: ppo|ddpg|td3|sac
@@ -191,6 +195,10 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
         cfg.kernels = KernelsCfg::parse(k)
             .ok_or_else(|| anyhow::anyhow!("bad --kernels {k:?} (exact|fast)"))?;
     }
+    if let Some(e) = args.get("env-engine") {
+        cfg.env_engine = EnvEngineCfg::parse(e)
+            .ok_or_else(|| anyhow::anyhow!("bad --env-engine {e:?} (auto|batched|scalar)"))?;
+    }
     cfg.iterations = args.usize_or("iterations", cfg.iterations)?;
     cfg.samples_per_iter = args.usize_or("samples-per-iter", cfg.samples_per_iter)?;
     cfg.chunk_steps = args.usize_or("chunk-steps", cfg.chunk_steps)?;
@@ -276,9 +284,10 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
 
 fn run_eval(args: &Args) -> anyhow::Result<()> {
     let cfg = config_from(args)?;
-    // eval bypasses the orchestrator (which sets this for training runs),
-    // so honor --kernels here too
+    // eval bypasses the orchestrator (which sets these for training
+    // runs), so honor --kernels and --env-engine here too
     walle::nn::kernels::set_mode(cfg.kernels.mode());
+    walle::env::batch::set_engine(cfg.env_engine.engine());
     let ckpt = args.require("checkpoint")?;
     let params = load_params(ckpt)?;
     let episodes = args.usize_or("episodes", 10)?;

@@ -225,6 +225,46 @@ pub fn tanh_inplace(x: &mut [f32]) {
     }
 }
 
+/// y += a * x elementwise — the column integrator of the batched env
+/// engine (`env::batch`): one call advances an `[M]`-wide state column by
+/// `dt * derivative`. Elementwise mul-then-add has no reduction to
+/// reorder, so every arm is bitwise identical to scalar in BOTH modes.
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    axpy_via(active(), a, x, y);
+}
+
+/// y = clamp(y + a * x, lo, hi) elementwise — the saturating integrator
+/// (velocity columns with physical speed limits). Bitwise identical to
+/// scalar in every arm for non-NaN inputs.
+pub fn axpy_clamp(a: f32, x: &[f32], y: &mut [f32], lo: f32, hi: f32) {
+    axpy_clamp_via(active(), a, x, y, lo, hi);
+}
+
+/// [`axpy`] with explicit dispatch (parity tests, benches).
+pub fn axpy_via(lanes: Lanes, a: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len(), "axpy: x/y length mismatch");
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::axpy(a, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::axpy(a, x, y),
+        _ => scalar::axpy(a, x, y),
+    }
+}
+
+/// [`axpy_clamp`] with explicit dispatch (parity tests, benches).
+pub fn axpy_clamp_via(lanes: Lanes, a: f32, x: &[f32], y: &mut [f32], lo: f32, hi: f32) {
+    assert_eq!(x.len(), y.len(), "axpy_clamp: x/y length mismatch");
+    assert!(lo <= hi, "axpy_clamp: lo > hi");
+    match lanes {
+        #[cfg(target_arch = "x86_64")]
+        Lanes::Avx2 => unsafe { simd::avx2::axpy_clamp(a, x, y, lo, hi) },
+        #[cfg(target_arch = "aarch64")]
+        Lanes::Neon => simd::neon::axpy_clamp(a, x, y, lo, hi),
+        _ => scalar::axpy_clamp(a, x, y, lo, hi),
+    }
+}
+
 /// [`matmul`] with explicit dispatch (parity tests, benches).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_via(
@@ -449,6 +489,32 @@ mod tests {
         matmul_via(active(), KernelMode::Exact, &a, &b, &mut o_act, m, k, n);
         for (x, y) in o_ref.iter().zip(&o_act) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    /// The elementwise integrator kernels must be bitwise-equal to scalar
+    /// on the active arm — in both modes (they carry no reduction, so the
+    /// fast contract never relaxes them). Odd lengths exercise the tails.
+    #[test]
+    fn axpy_family_matches_scalar_bitwise_on_active_arm() {
+        let mut rng = Pcg64::new(15);
+        for len in [1usize, 4, 7, 8, 13, 64, 257] {
+            let x = rand_vec(&mut rng, len);
+            let y0 = rand_vec(&mut rng, len);
+            let mut y_ref = y0.clone();
+            let mut y_act = y0.clone();
+            scalar::axpy(0.05, &x, &mut y_ref);
+            axpy_via(active(), 0.05, &x, &mut y_act);
+            for (a, b) in y_ref.iter().zip(&y_act) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy len {len}");
+            }
+            let mut y_ref = y0.clone();
+            let mut y_act = y0;
+            scalar::axpy_clamp(0.05, &x, &mut y_ref, -0.8, 0.8);
+            axpy_clamp_via(active(), 0.05, &x, &mut y_act, -0.8, 0.8);
+            for (a, b) in y_ref.iter().zip(&y_act) {
+                assert_eq!(a.to_bits(), b.to_bits(), "axpy_clamp len {len}");
+            }
         }
     }
 

@@ -72,6 +72,22 @@ pub fn relu(x: &mut [f32]) {
     }
 }
 
+/// y += a * x elementwise (mul-then-add — the exact rounding order every
+/// arm reproduces; the batched env integrators are built on this).
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// y = clamp(y + a * x, lo, hi) elementwise (the saturating integrator
+/// step: velocity updates with physical speed limits).
+pub fn axpy_clamp(a: f32, x: &[f32], y: &mut [f32], lo: f32, hi: f32) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv = (*yv + a * xv).clamp(lo, hi);
+    }
+}
+
 /// int8 GEMM + dequant + bias (see [`super::matmul_q8`]). kj-inner order
 /// with an i32 accumulator row so `b` streams row-wise like the f32 path.
 #[allow(clippy::too_many_arguments)]

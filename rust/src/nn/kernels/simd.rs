@@ -261,6 +261,39 @@ pub mod avx2 {
         }
     }
 
+    /// y += a * x elementwise — the public [`super::super::axpy`] kernel
+    /// (mul-then-add in every mode: elementwise ops have no reduction to
+    /// reorder, so this arm is bitwise-equal to scalar by construction).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        axpy_exact(a, x.as_ptr(), y.as_mut_ptr(), y.len());
+    }
+
+    /// y = clamp(y + a * x, lo, hi). Exact for non-NaN inputs: min/max
+    /// operand order mirrors scalar `f32::clamp` for finite values.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy_clamp(a: f32, x: &[f32], y: &mut [f32], lo: f32, hi: f32) {
+        let n = y.len();
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let vs = _mm256_set1_ps(a);
+        let vlo = _mm256_set1_ps(lo);
+        let vhi = _mm256_set1_ps(hi);
+        let mut j = 0;
+        while j + 8 <= n {
+            let sum = _mm256_add_ps(
+                _mm256_loadu_ps(yp.add(j)),
+                _mm256_mul_ps(vs, _mm256_loadu_ps(xp.add(j))),
+            );
+            _mm256_storeu_ps(yp.add(j), _mm256_max_ps(_mm256_min_ps(sum, vhi), vlo));
+            j += 8;
+        }
+        while j < n {
+            *yp.add(j) = (*yp.add(j) + a * *xp.add(j)).clamp(lo, hi);
+            j += 1;
+        }
+    }
+
     /// x = max(x, 0). Operand order mirrors scalar `v.max(0.0)`:
     /// `vmaxps(v, 0)` returns 0 when v is NaN.
     #[target_feature(enable = "avx2,fma")]
@@ -491,6 +524,36 @@ pub mod neon {
                     *row.add(j) += *bp.add(j);
                     j += 1;
                 }
+            }
+        }
+    }
+
+    /// y += a * x elementwise — the public [`super::super::axpy`] kernel
+    /// (mul-then-add in every mode; bitwise-equal to scalar).
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = y.len();
+        axpy_exact(a, x, y, n);
+    }
+
+    /// y = clamp(y + a * x, lo, hi). Exact for non-NaN inputs: min/max
+    /// operand order mirrors scalar `f32::clamp` for finite values.
+    pub fn axpy_clamp(a: f32, x: &[f32], y: &mut [f32], lo: f32, hi: f32) {
+        unsafe {
+            let n = y.len();
+            let xp = x.as_ptr();
+            let yp = y.as_mut_ptr();
+            let vs = vdupq_n_f32(a);
+            let vlo = vdupq_n_f32(lo);
+            let vhi = vdupq_n_f32(hi);
+            let mut j = 0;
+            while j + 4 <= n {
+                let sum = vaddq_f32(vld1q_f32(yp.add(j)), vmulq_f32(vs, vld1q_f32(xp.add(j))));
+                vst1q_f32(yp.add(j), vmaxnmq_f32(vminnmq_f32(sum, vhi), vlo));
+                j += 4;
+            }
+            while j < n {
+                *yp.add(j) = (*yp.add(j) + a * *xp.add(j)).clamp(lo, hi);
+                j += 1;
             }
         }
     }

@@ -918,17 +918,68 @@ fn reply(slot: &ReplySlot, r: Result<Reply, String>) {
     slot.ready.notify_one();
 }
 
+/// A leased request slab: the client's recycled [`SlabBuffers`] handed
+/// out BEFORE submission so the worker fills the obs (and noise) rows in
+/// place — the batched env engine's `step_all` writes next observations
+/// straight into the request slab, eliminating the staging copy
+/// [`ActorClient::act`] performs. Obtain one with [`ActorClient::lease`],
+/// fill [`SlabLease::obs_mut`] / [`SlabLease::noise_mut`], submit with
+/// [`ActorClient::act_leased`]. Dropping an unsubmitted lease returns the
+/// buffers to the client's spare pool.
+pub struct SlabLease {
+    bufs: Option<SlabBuffers>,
+    rows: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    noise_rows: bool,
+    home: Arc<ReplySlot>,
+}
+
+impl SlabLease {
+    /// Leased rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// The raw obs slab to fill ([rows * obs_dim], row-major).
+    pub fn obs_mut(&mut self) -> &mut [f32] {
+        let n = self.rows * self.obs_dim;
+        &mut self.bufs.as_mut().expect("buffers present until drop").obs[..n]
+    }
+
+    /// The N(0,1) noise slab to fill ([rows * act_dim]); empty when the
+    /// lease was taken without noise (deterministic actors).
+    pub fn noise_mut(&mut self) -> &mut [f32] {
+        let n = if self.noise_rows {
+            self.rows * self.act_dim
+        } else {
+            0
+        };
+        &mut self.bufs.as_mut().expect("buffers present until drop").noise[..n]
+    }
+}
+
+impl Drop for SlabLease {
+    fn drop(&mut self) {
+        // abandoned lease (worker error path): recycle, don't leak
+        if let Some(b) = self.bufs.take() {
+            plock(&self.home.spare).push(b);
+        }
+    }
+}
+
 impl ActorClient {
     /// Submit this worker's slab (raw obs, per-row noise) and block until
     /// the shard's dispatch answers it. `noise` must hold `rows *
     /// act_dim` N(0,1) draws for PPO, or be empty for DDPG. Drop the
     /// returned [`ActResponse`] before the next call so its buffers
     /// recycle (holding it across ticks forces a warm-up reallocation,
-    /// nothing worse).
+    /// nothing worse). Workers that already produce their obs in a slab
+    /// of their own can skip this method's staging copy via
+    /// [`ActorClient::lease`] + [`ActorClient::act_leased`].
     pub fn act(&mut self, raw_obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResponse> {
-        let sh = &*self.shared;
-        let o = sh.cfg.obs_dim;
-        let a = sh.cfg.act_dim;
+        let o = self.shared.cfg.obs_dim;
+        let a = self.shared.cfg.act_dim;
         anyhow::ensure!(
             !raw_obs.is_empty() && raw_obs.len() % o == 0,
             "client slab must be a whole number of obs rows"
@@ -938,6 +989,19 @@ impl ActorClient {
             noise.is_empty() || noise.len() == rows * a,
             "noise must be empty (ddpg) or rows * act_dim"
         );
+        let mut lease = self.lease(rows, !noise.is_empty())?;
+        lease.obs_mut().copy_from_slice(raw_obs);
+        lease.noise_mut().copy_from_slice(noise);
+        self.act_leased(lease)
+    }
+
+    /// Check out this tick's request buffers for in-place filling (the
+    /// zero-copy submission path; see [`SlabLease`]). `want_noise` sizes
+    /// the noise slab to `rows * act_dim` (stochastic actors) or zero
+    /// (deterministic).
+    pub fn lease(&mut self, rows: usize, want_noise: bool) -> anyhow::Result<SlabLease> {
+        let sh = &*self.shared;
+        anyhow::ensure!(rows > 0, "lease must cover at least one row");
         anyhow::ensure!(
             rows <= sh.cfg.fleet_rows,
             "slab of {rows} rows exceeds shard capacity {}",
@@ -951,10 +1015,25 @@ impl ActorClient {
                 SlabBuffers::default()
             }
         };
-        ensure_len(&mut bufs.obs, rows * o, &sh.hot_allocs);
-        bufs.obs.copy_from_slice(raw_obs);
-        ensure_len(&mut bufs.noise, noise.len(), &sh.hot_allocs);
-        bufs.noise.copy_from_slice(noise);
+        ensure_len(&mut bufs.obs, rows * sh.cfg.obs_dim, &sh.hot_allocs);
+        let noise_len = if want_noise { rows * sh.cfg.act_dim } else { 0 };
+        ensure_len(&mut bufs.noise, noise_len, &sh.hot_allocs);
+        Ok(SlabLease {
+            bufs: Some(bufs),
+            rows,
+            obs_dim: sh.cfg.obs_dim,
+            act_dim: sh.cfg.act_dim,
+            noise_rows: want_noise,
+            home: self.slot.clone(),
+        })
+    }
+
+    /// Submit a filled [`SlabLease`] and block until the shard's dispatch
+    /// answers it — [`ActorClient::act`] without the staging copy.
+    pub fn act_leased(&mut self, mut lease: SlabLease) -> anyhow::Result<ActResponse> {
+        let sh = &*self.shared;
+        let rows = lease.rows;
+        let bufs = lease.bufs.take().expect("lease buffers present");
         {
             let mut q = plock(&sh.q);
             anyhow::ensure!(!q.server_down, "inference server is down");

@@ -205,6 +205,15 @@ impl SessionBuilder {
         self.set(move |c| c.kernels = k)
     }
 
+    /// Env stepping engine: `EnvEngineCfg::Auto` (default) resolves to
+    /// the structure-of-arrays batched `step_all` sweep;
+    /// `EnvEngineCfg::Scalar` forces the legacy per-env loop. The two
+    /// are bitwise interchangeable under exact kernels, so this is a
+    /// throughput knob.
+    pub fn env_engine(self, e: crate::config::EnvEngineCfg) -> Self {
+        self.set(move |c| c.env_engine = e)
+    }
+
     /// Data-parallel PPO learner shards (§6.2). PPO-only: rejected at
     /// build time under any other algorithm.
     pub fn learner_shards(mut self, n: usize) -> Self {

@@ -5,11 +5,12 @@
 #
 # Mirrors the ROADMAP's tier-1 gate (`cargo build --release &&
 # cargo test -q`) first, then adds the examples build (the builder-based
-# examples must never rot silently), clippy with warnings denied,
-# rustdoc with warnings denied, and rustfmt --check LAST — so a pure
-# formatting drift never masks a real build/test/lint failure. If fmt
-# is the only red step, run `cargo fmt` once and commit the mechanical
-# diff.
+# examples must never rot silently), the bench build (`--no-run`: the
+# perf probes compile on every leg even though CI never times them),
+# clippy with warnings denied, rustdoc with warnings denied, and
+# rustfmt --check LAST — so a pure formatting drift never masks a real
+# build/test/lint failure. If fmt is the only red step, run `cargo fmt`
+# once and commit the mechanical diff.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,6 +19,9 @@ cargo build --release
 
 echo "== cargo build --release --examples =="
 cargo build --release --examples
+
+echo "== cargo bench --no-run =="
+cargo bench --no-run
 
 echo "== cargo test -q =="
 cargo test -q
