@@ -204,8 +204,17 @@ pub enum InferWait {
     Fixed(u64),
 }
 
+/// Ceiling on a fixed straggler-cut budget (60 s): a cut beyond this
+/// parks the whole fleet behind one straggler for longer than any env
+/// tick could justify, so `validate` treats it as a typo'd/overflowed
+/// microsecond value rather than a tuning choice.
+pub const MAX_INFER_WAIT_US: u64 = 60_000_000;
+
 impl InferWait {
     /// Parse `"adaptive"`, `"fixed:<us>"`, or a bare microsecond count.
+    /// Range checks (no zero, no 60s+ budgets) live in
+    /// `TrainConfig::validate`, where they can reject with an actionable
+    /// message instead of silently clamping at runtime.
     pub fn parse(s: &str) -> Option<InferWait> {
         if s == "adaptive" {
             return Some(InferWait::Adaptive);
@@ -275,6 +284,38 @@ impl InferEpoch {
         match self {
             InferEpoch::Pool => "pool",
             InferEpoch::Shard => "shard",
+        }
+    }
+}
+
+/// Where the sampler fleet lives (`--fleet-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetMode {
+    /// Sampler workers are threads of the training process (default —
+    /// the topology of every prior layer).
+    Threads,
+    /// Sampler workers are child OS processes connected to an in-process
+    /// policy daemon over a Unix socket (`runtime::daemon`): the WALL-E
+    /// multi-process serving tier. Per-env chunk streams are bitwise
+    /// identical to threads mode — the transport is a pure topology knob.
+    Procs,
+}
+
+impl FleetMode {
+    /// Parse `"threads"` or `"procs"`.
+    pub fn parse(s: &str) -> Option<FleetMode> {
+        match s {
+            "threads" => Some(FleetMode::Threads),
+            "procs" => Some(FleetMode::Procs),
+            _ => None,
+        }
+    }
+
+    /// CLI/JSON spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetMode::Threads => "threads",
+            FleetMode::Procs => "procs",
         }
     }
 }
@@ -758,7 +799,12 @@ pub struct TrainConfig {
     pub flip_schedule: u64,
     /// Supervisor restart budget: how many times a panicked sampler
     /// worker or inference shard is respawned before the fleet aborts.
+    /// Under `--fleet-mode procs` the same budget covers dead sampler
+    /// child processes.
     pub max_restarts: usize,
+    /// Sampler placement (`--fleet-mode`): `threads` (default) or
+    /// `procs` (sampler child processes served by the policy daemon).
+    pub fleet_mode: FleetMode,
 }
 
 impl Default for TrainConfig {
@@ -801,6 +847,7 @@ impl Default for TrainConfig {
             fault_inject: String::new(),
             flip_schedule: 0,
             max_restarts: 2,
+            fleet_mode: FleetMode::Threads,
         }
     }
 }
@@ -883,6 +930,55 @@ impl TrainConfig {
                      at least one worker",
                     s, self.samplers
                 ));
+            }
+        }
+        if let InferWait::Fixed(us) = self.infer_wait {
+            if us == 0 {
+                return Err(
+                    "infer_wait fixed:0 would busy-spin the dispatch cut (a \
+                     zero-microsecond straggler budget dispatches every slab \
+                     alone, defeating coalescing while pegging a core); use \
+                     fixed:<us> >= 1 or the adaptive default"
+                        .into(),
+                );
+            }
+            if us > MAX_INFER_WAIT_US {
+                return Err(format!(
+                    "infer_wait fixed:{us} exceeds the {MAX_INFER_WAIT_US} us \
+                     (60 s) ceiling — a cut that long parks the whole fleet \
+                     behind one straggler (this usually means a millisecond or \
+                     second value was pasted as microseconds); pick a smaller \
+                     budget or the adaptive default"
+                ));
+            }
+        }
+        if self.fleet_mode == FleetMode::Procs {
+            if self.inference_mode != InferenceMode::Shared {
+                return Err(
+                    "fleet_mode procs serves every sampler process from the \
+                     policy daemon's shared inference pool — add \
+                     --inference-mode shared (per-process local actors would \
+                     duplicate the policy weights and bypass the serving tier)"
+                        .into(),
+                );
+            }
+            if !self.fault_inject.is_empty() {
+                return Err(
+                    "fault_inject scripts in-process fault cells, which sampler \
+                     child processes cannot trip — run the chaos plan under \
+                     --fleet-mode threads, or kill the sampler processes \
+                     directly (the supervisor respawns them either way)"
+                        .into(),
+                );
+            }
+            if !self.resume.is_empty() || self.checkpoint_every > 0 {
+                return Err(
+                    "checkpoint/resume captures per-worker sampler snapshots, \
+                     which live inside the child processes under --fleet-mode \
+                     procs and are not collected over the wire yet — drop \
+                     --checkpoint-every/--resume or use --fleet-mode threads"
+                        .into(),
+                );
             }
         }
         if self.infer_precision == InferPrecision::Int8 {
@@ -1130,6 +1226,7 @@ impl TrainConfig {
             Json::Num(self.flip_schedule as f64),
         );
         m.insert("max_restarts".into(), Json::Num(self.max_restarts as f64));
+        m.insert("fleet_mode".into(), Json::Str(self.fleet_mode.name().into()));
         m.insert("ppo".into(), self.ppo.to_json());
         m.insert("ddpg".into(), self.ddpg.to_json());
         m.insert("td3".into(), self.td3.to_json());
@@ -1173,7 +1270,13 @@ impl TrainConfig {
         }
         if let Some(v) = j.opt("infer_wait") {
             cfg.infer_wait = match v {
-                Json::Num(n) if *n >= 0.0 => InferWait::Fixed(*n as u64),
+                Json::Num(n) if *n < 0.0 => {
+                    return Err(JsonError::Access(format!(
+                        "infer_wait {n} is negative — the straggler cut is a \
+                         microsecond budget >= 1 (or \"adaptive\")"
+                    )))
+                }
+                Json::Num(n) => InferWait::Fixed(*n as u64),
                 _ => InferWait::parse(v.as_str()?)
                     .ok_or_else(|| JsonError::Access(format!("bad infer_wait {v:?}")))?,
             };
@@ -1262,6 +1365,10 @@ impl TrainConfig {
         }
         if let Some(v) = j.opt("max_restarts") {
             cfg.max_restarts = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("fleet_mode") {
+            cfg.fleet_mode = FleetMode::parse(v.as_str()?)
+                .ok_or_else(|| JsonError::Access(format!("bad fleet_mode {v:?}")))?;
         }
         if let Some(p) = j.opt("ppo") {
             if let Some(v) = p.opt("epochs") {
@@ -1443,6 +1550,7 @@ mod tests {
         cfg.fault_inject = "worker:1@tick:500".into();
         cfg.flip_schedule = 32;
         cfg.max_restarts = 3;
+        cfg.fleet_mode = FleetMode::Procs;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(cfg, back);
@@ -1601,6 +1709,69 @@ mod tests {
         let cfg = TrainConfig::from_json(&j).unwrap();
         assert_eq!(cfg.infer_wait, InferWait::Fixed(120));
         assert_eq!(cfg.infer_shards, InferShards::Fixed(3));
+    }
+
+    /// Satellite bugfix: degenerate fixed straggler budgets are rejected
+    /// at validation time with an explanation, instead of being silently
+    /// clamped (or busy-spun) deep in the dispatch loop at runtime.
+    #[test]
+    fn infer_wait_fixed_zero_and_overflow_rejected_at_validation() {
+        let mut cfg = TrainConfig::default();
+        cfg.infer_wait = InferWait::Fixed(0);
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("fixed:0"), "unhelpful message: {err}");
+        cfg.infer_wait = InferWait::Fixed(MAX_INFER_WAIT_US + 1);
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("ceiling"), "unhelpful message: {err}");
+        // the boundary itself is allowed, as is any sane budget
+        cfg.infer_wait = InferWait::Fixed(MAX_INFER_WAIT_US);
+        assert!(cfg.validate().is_ok());
+        cfg.infer_wait = InferWait::Fixed(1);
+        assert!(cfg.validate().is_ok());
+        // negative JSON values error with an actionable message rather
+        // than silently wrapping through the float cast
+        let j = Json::parse(r#"{"infer_wait": -5}"#).unwrap();
+        let err = TrainConfig::from_json(&j).unwrap_err();
+        assert!(format!("{err:?}").contains("negative"));
+    }
+
+    #[test]
+    fn fleet_mode_parses_and_procs_constraints_validate() {
+        assert_eq!(TrainConfig::default().fleet_mode, FleetMode::Threads);
+        assert_eq!(FleetMode::parse("threads"), Some(FleetMode::Threads));
+        assert_eq!(FleetMode::parse("procs"), Some(FleetMode::Procs));
+        assert_eq!(FleetMode::parse("fork"), None);
+        assert_eq!(FleetMode::Threads.name(), "threads");
+        assert_eq!(FleetMode::Procs.name(), "procs");
+        let j = Json::parse(r#"{"fleet_mode": "procs"}"#).unwrap();
+        assert_eq!(
+            TrainConfig::from_json(&j).unwrap().fleet_mode,
+            FleetMode::Procs
+        );
+        assert!(
+            TrainConfig::from_json(&Json::parse(r#"{"fleet_mode": "x"}"#).unwrap()).is_err()
+        );
+
+        // procs requires the shared pool (the daemon IS the pool)
+        let mut cfg = TrainConfig::default();
+        cfg.fleet_mode = FleetMode::Procs;
+        cfg.inference_mode = InferenceMode::Local;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("inference-mode shared"), "message: {err}");
+        cfg.inference_mode = InferenceMode::Shared;
+        assert!(cfg.validate().is_ok());
+        // in-process fault cells cannot reach child processes
+        cfg.fault_inject = "worker:0@tick:10".into();
+        assert!(cfg.validate().unwrap_err().contains("fault_inject"));
+        cfg.fault_inject = String::new();
+        // checkpoint/resume snapshots live in the children
+        cfg.checkpoint_every = 3;
+        assert!(cfg.validate().unwrap_err().contains("checkpoint"));
+        cfg.checkpoint_every = 0;
+        cfg.resume = "ckpts".into();
+        assert!(cfg.validate().unwrap_err().contains("resume"));
+        cfg.resume = String::new();
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

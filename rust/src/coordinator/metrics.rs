@@ -211,7 +211,32 @@ pub struct InferenceReport {
     /// Wall microseconds per durable checkpoint write
     /// (`--checkpoint-every`; empty when checkpointing is off).
     pub checkpoint_write_us: Histogram,
+    /// Daemon wire traffic (`walle serve` / `--fleet-mode procs`):
+    /// frames received from remote clients (act requests, chunk pushes,
+    /// version long-polls). All-zero wire counters mean no daemon was
+    /// involved and the render omits the wire lines entirely.
+    pub wire_frames_in: u64,
+    /// Frames sent to remote clients (act responses, version pushes,
+    /// handshake replies).
+    pub wire_frames_out: u64,
+    /// Bytes received over daemon sockets (length prefixes included).
+    pub wire_bytes_in: u64,
+    /// Bytes sent over daemon sockets.
+    pub wire_bytes_out: u64,
+    /// Completed client handshakes (actor + subscriber connections).
+    pub wire_handshakes: u64,
+    /// Remote-client disconnects: clean EOFs and mid-frame failures
+    /// alike (a SIGKILLed sampler child shows up here).
+    pub wire_disconnects: u64,
+    /// Per-frame wire size in bytes, both directions.
+    pub wire_frame_bytes: Histogram,
 }
+
+/// Bucket bounds for [`InferenceReport::wire_frame_bytes`]. The daemon's
+/// live wire counters build their histogram from the SAME bounds so the
+/// end-of-run merge (which asserts equal bucket edges) always succeeds.
+pub const WIRE_FRAME_BYTE_BOUNDS: &[f64] =
+    &[64.0, 256.0, 1024.0, 4096.0, 16_384.0, 65_536.0, 1_048_576.0];
 
 impl InferenceReport {
     pub fn new(fleet_rows: usize) -> InferenceReport {
@@ -250,6 +275,13 @@ impl InferenceReport {
             checkpoint_write_us: Histogram::new(&[
                 100.0, 250.0, 500.0, 1000.0, 2500.0, 10_000.0, 50_000.0, 250_000.0,
             ]),
+            wire_frames_in: 0,
+            wire_frames_out: 0,
+            wire_bytes_in: 0,
+            wire_bytes_out: 0,
+            wire_handshakes: 0,
+            wire_disconnects: 0,
+            wire_frame_bytes: Histogram::new(WIRE_FRAME_BYTE_BOUNDS),
         }
     }
 
@@ -272,6 +304,13 @@ impl InferenceReport {
         self.restarts += other.restarts;
         self.faults_injected += other.faults_injected;
         self.checkpoint_write_us.merge(&other.checkpoint_write_us);
+        self.wire_frames_in += other.wire_frames_in;
+        self.wire_frames_out += other.wire_frames_out;
+        self.wire_bytes_in += other.wire_bytes_in;
+        self.wire_bytes_out += other.wire_bytes_out;
+        self.wire_handshakes += other.wire_handshakes;
+        self.wire_disconnects += other.wire_disconnects;
+        self.wire_frame_bytes.merge(&other.wire_frame_bytes);
     }
 
     /// Mean fraction of the shard batch filled per forward.
@@ -284,9 +323,16 @@ impl InferenceReport {
         self.dispatch_rows.mean()
     }
 
+    /// Whether any daemon wire traffic was recorded (all-zero counters
+    /// mean the run never crossed a process boundary).
+    pub fn has_wire_traffic(&self) -> bool {
+        self.wire_frames_in + self.wire_frames_out + self.wire_handshakes + self.wire_disconnects
+            > 0
+    }
+
     /// Multi-line end-of-run report block.
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "shared inference: {} forwards, {} rows ({} fleet rows, {} shard{}), \
              {} full / {} timeout cuts, mean fill {:.1}%, {} hot-path allocs\n\
              dispatch rows: {}\n\
@@ -317,7 +363,24 @@ impl InferenceReport {
             self.faults_injected,
             if self.faults_injected == 1 { "" } else { "s" },
             self.checkpoint_write_us.summary()
-        )
+        );
+        if self.has_wire_traffic() {
+            s.push_str(&format!(
+                "\nwire traffic:  {} frames in / {} out, {} B in / {} B out, \
+                 {} handshake{}, {} remote disconnect{}\n\
+                 frame bytes:   {}",
+                self.wire_frames_in,
+                self.wire_frames_out,
+                self.wire_bytes_in,
+                self.wire_bytes_out,
+                self.wire_handshakes,
+                if self.wire_handshakes == 1 { "" } else { "s" },
+                self.wire_disconnects,
+                if self.wire_disconnects == 1 { "" } else { "s" },
+                self.wire_frame_bytes.summary()
+            ));
+        }
+        s
     }
 
     pub fn to_json(&self) -> Json {
@@ -342,6 +405,13 @@ impl InferenceReport {
             ("restarts", Json::Num(self.restarts as f64)),
             ("faults_injected", Json::Num(self.faults_injected as f64)),
             ("checkpoint_write_us", self.checkpoint_write_us.to_json()),
+            ("wire_frames_in", Json::Num(self.wire_frames_in as f64)),
+            ("wire_frames_out", Json::Num(self.wire_frames_out as f64)),
+            ("wire_bytes_in", Json::Num(self.wire_bytes_in as f64)),
+            ("wire_bytes_out", Json::Num(self.wire_bytes_out as f64)),
+            ("wire_handshakes", Json::Num(self.wire_handshakes as f64)),
+            ("wire_disconnects", Json::Num(self.wire_disconnects as f64)),
+            ("wire_frame_bytes", self.wire_frame_bytes.to_json()),
         ])
     }
 }
@@ -662,6 +732,39 @@ mod tests {
         assert_eq!(a.restarts, 4);
         assert_eq!(a.faults_injected, 2);
         assert_eq!(a.checkpoint_write_us.count(), 2);
+    }
+
+    /// Wire counters fold across reports like every other field, the
+    /// render shows them only when a daemon actually moved traffic, and
+    /// the JSON always carries them.
+    #[test]
+    fn wire_metrics_merge_and_render_conditionally() {
+        let mut a = InferenceReport::with_bounds(6, 6);
+        assert!(!a.has_wire_traffic());
+        assert!(!a.render().contains("wire traffic"), "zero counters must stay silent");
+        assert!(a.to_json().to_string().contains("\"wire_frames_in\":0"));
+
+        let mut b = InferenceReport::with_bounds(4, 6);
+        b.wire_frames_in = 10;
+        b.wire_frames_out = 9;
+        b.wire_bytes_in = 2_048;
+        b.wire_bytes_out = 4_096;
+        b.wire_handshakes = 2;
+        b.wire_disconnects = 1;
+        b.wire_frame_bytes.record(128.0);
+        b.wire_frame_bytes.record(512.0);
+        a.merge(&b);
+        assert!(a.has_wire_traffic());
+        assert_eq!(a.wire_frames_in, 10);
+        assert_eq!(a.wire_bytes_out, 4_096);
+        assert_eq!(a.wire_frame_bytes.count(), 2);
+        let text = a.render();
+        assert!(text.contains("10 frames in / 9 out"), "{text}");
+        assert!(text.contains("2 handshakes, 1 remote disconnect"), "{text}");
+        assert!(text.contains("frame bytes:"), "{text}");
+        let j = a.to_json().to_string();
+        assert!(j.contains("\"wire_disconnects\":1"));
+        assert!(j.contains("\"wire_frame_bytes\""));
     }
 
     /// The epoch histograms merge across shards like every other report

@@ -44,7 +44,7 @@
 use crate::algo::api::{algorithm_from_config, Algorithm, LearnerDriver};
 use crate::algo::normalizer::NormSnapshot;
 use crate::algo::rollout::ExperienceChunk;
-use crate::config::{InferEpoch, InferWait, InferenceMode, TrainConfig};
+use crate::config::{FleetMode, InferEpoch, InferWait, InferenceMode, TrainConfig};
 use crate::coordinator::metrics::{InferenceReport, IterationMetrics, MetricsLog};
 use crate::coordinator::policy_store::PolicyStore;
 use crate::coordinator::queue::Channel;
@@ -119,6 +119,36 @@ pub fn run_with(
     cfg: &TrainConfig,
     factory: &dyn BackendFactory,
     log: &mut MetricsLog,
+) -> anyhow::Result<RunResult> {
+    run_with_watched(algo, cfg, factory, log, None)
+}
+
+/// [`run_with`] plus an optional external shutdown flag (the CLI's
+/// SIGINT/SIGTERM handler): when it flips mid-run, the fleet drains and
+/// shuts down through the normal stop/queue-close paths and the run
+/// returns the learner's resulting error. Also the `cfg.fleet_mode`
+/// dispatch point: `procs` runs the sampler fleet as child PROCESSES
+/// served by an in-process policy daemon ([`run_procs`]); `threads` is
+/// the classic in-process topology.
+pub fn run_with_watched(
+    algo: &dyn Algorithm,
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    log: &mut MetricsLog,
+    external_stop: Option<&AtomicBool>,
+) -> anyhow::Result<RunResult> {
+    if cfg.fleet_mode == FleetMode::Procs {
+        return run_procs(algo, cfg, factory, log, external_stop);
+    }
+    run_threads(algo, cfg, factory, log, external_stop)
+}
+
+fn run_threads(
+    algo: &dyn Algorithm,
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    log: &mut MetricsLog,
+    external_stop: Option<&AtomicBool>,
 ) -> anyhow::Result<RunResult> {
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     algo.validate(cfg).map_err(|e| anyhow::anyhow!(e))?;
@@ -219,6 +249,27 @@ pub fn run_with(
     let mut result: Option<RunResult> = None;
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
+        // ---- external shutdown monitor (optional) ---------------------
+        // A signal handler can only flip an AtomicBool; this thread turns
+        // that flip into the normal stop/queue-close drain. It exits on
+        // its own once the run ends for any other reason.
+        if let Some(ext) = external_stop {
+            let stop = &stop;
+            let queue = &queue;
+            scope.spawn(move || loop {
+                if stop.load(Ordering::Relaxed) || queue.is_closed() {
+                    return;
+                }
+                if ext.load(Ordering::Relaxed) {
+                    crate::log_info!("shutdown signal received; draining the fleet");
+                    stop.store(true, Ordering::Relaxed);
+                    queue.close();
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            });
+        }
+
         // ---- sharded inference pool (one per run, optional) -----------
         // Clients are registered BEFORE any serve thread starts so no
         // shard can observe an empty fleet and exit early; each shard
@@ -528,6 +579,335 @@ pub fn run_with(
 /// 320ms so a flapping component cannot stall shutdown for long.
 fn backoff(attempt: usize) -> Duration {
     Duration::from_millis(10u64 << (attempt as u64 - 1).min(5))
+}
+
+/// `--fleet-mode procs`: the same run topology with the sampler fleet as
+/// child PROCESSES. This process keeps the learner, the policy store,
+/// the experience queue, and the shared inference pool, and runs the
+/// policy daemon's accept loop on a Unix socket; each sampler becomes a
+/// `walle sample --connect` child reading the run config from the
+/// socket's sidecar file. Because the MLP forward is row-independent and
+/// exploration noise is drawn inside each child from its own RNG
+/// streams, per-(worker, env_slot) chunk streams are bitwise identical
+/// to `threads` mode. Children that die are respawned under the same
+/// `--max-restarts` budget the thread supervisor uses (fresh incarnation
+/// — no lane snapshot travels across the process boundary, which is why
+/// validation rejects checkpoint/resume in this mode).
+fn run_procs(
+    algo: &dyn Algorithm,
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    log: &mut MetricsLog,
+    external_stop: Option<&AtomicBool>,
+) -> anyhow::Result<RunResult> {
+    use crate::runtime::daemon;
+
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    algo.validate(cfg).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(
+        make_env(&cfg.env).is_some(),
+        "unknown env {:?} (known: {:?})",
+        cfg.env,
+        crate::env::registry::ENV_NAMES
+    );
+    crate::nn::kernels::set_mode(cfg.kernels.mode());
+    crate::env::batch::set_engine(cfg.env_engine.engine());
+
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    if cfg.infer_precision == crate::config::InferPrecision::Int8 {
+        let q = algo.quantizer(factory, cfg).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--infer-precision int8 is not supported by algorithm {:?}",
+                cfg.algo
+            )
+        })?;
+        store.set_quantizer(q);
+    }
+    let stop = AtomicBool::new(false);
+    let restarts_total = Arc::new(AtomicU64::new(0));
+    let fingerprint = daemon::run_fingerprint(cfg);
+
+    let sock = daemon::default_socket_path();
+    let listener = daemon::bind_socket(&sock)?;
+    let sidecar = daemon::config_sidecar(&sock);
+    let sidecar_str = sidecar
+        .to_str()
+        .ok_or_else(|| anyhow::anyhow!("non-UTF8 sidecar path {}", sidecar.display()))?;
+    cfg.save(sidecar_str)?;
+    let bin = daemon::walle_binary()?;
+    crate::log_info!(
+        "fleet-mode procs: daemon on {}, spawning {} sampler process(es) from {}",
+        sock.display(),
+        cfg.samplers,
+        bin.display()
+    );
+
+    let mut ckpt_write_us: Vec<u64> = Vec::new();
+    let mut result: Option<RunResult> = None;
+    let scope_res = std::thread::scope(|scope| -> anyhow::Result<()> {
+        let pool = daemon::build_pool(cfg, factory);
+        // MOVED into the accept loop below; the stash inside is what
+        // keeps the pre-registered clients (and thus the shard serve
+        // loops) alive, so no clone may outlive the scope — only the
+        // metrics handle does.
+        let ctx = daemon::DaemonCtx::new(cfg, pool.clone(), &store, &queue, &stop);
+        let metrics = ctx.metrics.clone();
+
+        // shard serve threads, supervised exactly like threads mode
+        let server_handles: Vec<_> = pool
+            .shards()
+            .iter()
+            .enumerate()
+            .map(|(idx, shard)| {
+                let shard = shard.clone();
+                let store = &store;
+                let queue = &queue;
+                let stop = &stop;
+                let restarts_total = restarts_total.clone();
+                let max_restarts = cfg.max_restarts;
+                scope.spawn(move || -> anyhow::Result<()> {
+                    let mut attempts = 0usize;
+                    loop {
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            shard.serve_algo(algo, factory, store)
+                        })) {
+                            Ok(res) => break res,
+                            Err(payload) => {
+                                if stop.load(Ordering::Relaxed)
+                                    || queue.is_closed()
+                                    || attempts >= max_restarts
+                                {
+                                    if attempts >= max_restarts && !queue.is_closed() {
+                                        crate::log_error!(
+                                            "inference shard {idx} exhausted its \
+                                             restart budget ({max_restarts}); \
+                                             closing the experience queue"
+                                        );
+                                        queue.close();
+                                    }
+                                    resume_unwind(payload);
+                                }
+                                attempts += 1;
+                                restarts_total.fetch_add(1, Ordering::SeqCst);
+                                crate::log_error!(
+                                    "inference shard {idx} panicked; respawning \
+                                     (attempt {attempts}/{max_restarts})"
+                                );
+                                std::thread::sleep(backoff(attempts));
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        scope.spawn(move || daemon::accept_loop(scope, listener, ctx));
+
+        if let Some(ext) = external_stop {
+            let stop = &stop;
+            let queue = &queue;
+            scope.spawn(move || loop {
+                if stop.load(Ordering::Relaxed) || queue.is_closed() {
+                    return;
+                }
+                if ext.load(Ordering::Relaxed) {
+                    crate::log_info!("shutdown signal received; draining the fleet");
+                    stop.store(true, Ordering::Relaxed);
+                    queue.close();
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            });
+        }
+
+        // ---- sampler child processes + reapers ------------------------
+        for id in 0..cfg.samplers {
+            match daemon::spawn_sampler(&bin, &sock, &sidecar, id, true) {
+                Ok(child) => {
+                    let bin = &bin;
+                    let sock = &sock;
+                    let sidecar = &sidecar;
+                    let queue = &queue;
+                    let stop = &stop;
+                    let restarts_total = restarts_total.clone();
+                    let max_restarts = cfg.max_restarts;
+                    scope.spawn(move || {
+                        reap_sampler(
+                            child,
+                            id,
+                            bin,
+                            sock,
+                            sidecar,
+                            queue,
+                            stop,
+                            &restarts_total,
+                            max_restarts,
+                        )
+                    });
+                }
+                Err(e) => {
+                    // release everything already running before bailing,
+                    // or the scope join would wait on threads that were
+                    // never told to stop
+                    stop.store(true, Ordering::Relaxed);
+                    queue.close();
+                    for h in server_handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+
+        // ---- learner (this thread) ------------------------------------
+        let (final_params, final_norm) = match run_learner(
+            algo,
+            cfg,
+            factory,
+            &queue,
+            &store,
+            log,
+            &[],
+            None,
+            &fingerprint,
+            &mut ckpt_write_us,
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                queue.close();
+                for h in server_handles {
+                    let _ = h.join();
+                }
+                return Err(e);
+            }
+        };
+
+        // ---- shutdown -------------------------------------------------
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        store.publish(final_params.clone(), final_norm.clone());
+        // reapers SIGTERM their children; connection threads hang up on
+        // `stop`, dropping their ctx clones; the accept loop drops the
+        // stash, releasing every client, which lets the shard serve
+        // loops exit — then the scope join completes
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in server_handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err
+                        .get_or_insert_with(|| anyhow::anyhow!("inference shard panicked"));
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+
+        let restarts = restarts_total.load(Ordering::SeqCst);
+        result = Some(RunResult {
+            metrics: log.iterations.clone(),
+            sampler_reports: Vec::new(),
+            final_params,
+            final_norm,
+            queue_stats: (
+                queue.stats.pushed(),
+                queue.stats.popped(),
+                queue.stats.push_blocked(),
+                queue.stats.pop_blocked(),
+            ),
+            infer: Some({
+                let mut rep = pool.report();
+                rep.restarts = restarts;
+                metrics.merge_into(&mut rep);
+                rep
+            }),
+            restarts,
+            faults_injected: 0,
+            checkpoint_write_us: Vec::new(),
+        });
+        Ok(())
+    });
+    let _ = std::fs::remove_file(&sock);
+    let _ = std::fs::remove_file(&sidecar);
+    scope_res?;
+    Ok(result.expect("run result set"))
+}
+
+/// Child-process supervision, one reaper thread per sampler slot: a
+/// mid-run death is respawned with the thread supervisor's backoff under
+/// the same `--max-restarts` budget (the scripted
+/// [`daemon::EXIT_AFTER_CHUNKS_ENV`] kill switch is stripped from
+/// respawns so one scripted death cannot loop); an exhausted budget
+/// closes the experience queue so the learner fails loudly. At shutdown
+/// the surviving child gets SIGTERM, a bounded grace period, then
+/// SIGKILL.
+///
+/// [`daemon::EXIT_AFTER_CHUNKS_ENV`]: crate::runtime::daemon::EXIT_AFTER_CHUNKS_ENV
+#[allow(clippy::too_many_arguments)]
+fn reap_sampler(
+    mut child: std::process::Child,
+    id: usize,
+    bin: &Path,
+    sock: &Path,
+    sidecar: &Path,
+    queue: &Channel<ExperienceChunk>,
+    stop: &AtomicBool,
+    restarts_total: &AtomicU64,
+    max_restarts: usize,
+) {
+    use crate::runtime::daemon;
+    let mut attempts = 0usize;
+    loop {
+        match child.try_wait() {
+            Ok(Some(status)) => {
+                if stop.load(Ordering::Relaxed) || queue.is_closed() {
+                    return; // run is over; child exits are expected now
+                }
+                if attempts >= max_restarts {
+                    crate::log_error!(
+                        "sampler process {id} exhausted its restart budget \
+                         ({max_restarts}); closing the experience queue"
+                    );
+                    queue.close();
+                    return;
+                }
+                attempts += 1;
+                restarts_total.fetch_add(1, Ordering::SeqCst);
+                crate::log_error!(
+                    "sampler process {id} died ({status}); respawning \
+                     (attempt {attempts}/{max_restarts})"
+                );
+                std::thread::sleep(backoff(attempts));
+                child = match daemon::spawn_sampler(bin, sock, sidecar, id, false) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        crate::log_error!(
+                            "sampler process {id} respawn failed: {e:#}; \
+                             closing the experience queue"
+                        );
+                        queue.close();
+                        return;
+                    }
+                };
+            }
+            Ok(None) => {
+                if stop.load(Ordering::Relaxed) || queue.is_closed() {
+                    daemon::terminate_child(child, id);
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                crate::log_warn!("sampler process {id}: wait failed: {e}");
+                return;
+            }
+        }
+    }
 }
 
 /// Worker-exit supervision, armed as a drop guard so it fires on panics

@@ -74,6 +74,7 @@ use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
 use crate::coordinator::queue::Channel;
 use crate::coordinator::supervisor::{WorkerCtl, WorkerLane};
 use crate::env::vec_env::{VecEnv, VecStepInfo};
+use crate::runtime::daemon::remote_client::RemoteActorClient;
 use crate::runtime::inference_server::{ActResponse, ActorClient};
 use crate::runtime::{ActResult, ActorBackend, DdpgActorBackend, DeterministicRowActor};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -87,6 +88,27 @@ pub enum PolicySource {
     /// Shared inference-pool shard handle (cross-worker mega-batch
     /// forwards; see `runtime::inference_server`).
     Shared(ActorClient),
+    /// Policy-daemon socket handle (`--fleet-mode procs`): the same
+    /// shared-pool contract spoken over the wire, so the hot loop below
+    /// is transport-blind (see `runtime::daemon`).
+    Remote(RemoteActorClient),
+}
+
+impl PolicySource {
+    /// Submit one tick's slab to whichever out-of-worker serving tier
+    /// this source talks to. Both arms honor the `ActorClient::act`
+    /// contract (same `ActResponse`, same retry-safety after `Err`), so
+    /// the hot loop's shared path needs exactly one implementation —
+    /// which is what keeps threads/procs chunk streams bitwise
+    /// identical. Local sources never route here: the hot loop's Local
+    /// arm owns them.
+    fn shared_act(&mut self, obs: &[f32], noise: &[f32]) -> anyhow::Result<ActResponse> {
+        match self {
+            PolicySource::Shared(client) => client.act(obs, noise),
+            PolicySource::Remote(client) => client.act(obs, noise),
+            PolicySource::Local(_) => unreachable!("local sources act in-worker"),
+        }
+    }
 }
 
 /// Legacy PPO spelling of [`PolicySource`] (kept for the pre-trait API;
@@ -489,7 +511,7 @@ pub fn run_algo_sampler_supervised(
     let obs_dim = venv.obs_dim();
     let act_dim = venv.act_dim();
     let mut hooks = algo.make_sampler(&cfg, m, act_dim);
-    let shared = matches!(source, PolicySource::Shared(_));
+    let shared = !matches!(source, PolicySource::Local(_));
     // a local backend may require a fixed batch > M (XLA artifacts): rows
     // past M are zero padding whose outputs are ignored. Native batched
     // actors advertise exactly M, so the forward is full. Shared mode
@@ -600,7 +622,7 @@ pub fn run_algo_sampler_supervised(
                     }
                 }
             }
-            PolicySource::Shared(client) => {
+            src => {
                 let submit: &[f32] = if noise.is_empty() {
                     &[]
                 } else {
@@ -612,7 +634,7 @@ pub fn run_algo_sampler_supervised(
                 // The obs and noise rows are untouched across retries, so
                 // the eventual dispatch is the tick that would have run.
                 let resp = loop {
-                    match client.act(venv.obs(), submit) {
+                    match src.shared_act(venv.obs(), submit) {
                         Ok(r) => break r,
                         Err(e) => {
                             if ctl.is_none()
@@ -769,7 +791,7 @@ pub fn run_algo_sampler_supervised(
                 // snapshot of a bootstrap response is deliberately not
                 // adopted: the buffers are being flushed right here, and
                 // V(s') under the freshest params is the better target
-                PolicySource::Shared(client) => {
+                src => {
                     let submit: &[f32] = if noise.is_empty() {
                         &[]
                     } else {
@@ -777,7 +799,7 @@ pub fn run_algo_sampler_supervised(
                     };
                     // same down-shard retry as the main act call above
                     loop {
-                        match client.act(venv.obs(), submit) {
+                        match src.shared_act(venv.obs(), submit) {
                             Ok(r) => {
                                 boot_values[..m].copy_from_slice(&r.value()[..m]);
                                 break Ok(r.server_busy_secs);

@@ -14,11 +14,15 @@
 //!   walle figures --all --out-dir results
 //!   walle eval --env pendulum --checkpoint runs/pendulum/params.bin
 
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use walle::bench::figures;
 use walle::config::{
-    Algo, Backend, EnvEngineCfg, InferEpoch, InferPrecision, InferShards, InferWait, InferenceMode,
-    KernelsCfg, ReplayStrategy, TrainConfig,
+    Algo, Backend, EnvEngineCfg, FleetMode, InferEpoch, InferPrecision, InferShards, InferWait,
+    InferenceMode, KernelsCfg, ReplayStrategy, TrainConfig,
 };
+use walle::runtime::daemon;
 use walle::session::{load_params, Session};
 use walle::util::cli::Args;
 use walle::util::logging::{set_level, Level};
@@ -35,6 +39,10 @@ COMMANDS:
   figures   regenerate the paper's evaluation figures as CSVs
   info      show the resolved session spec (algorithm, hyper-parameters,
             inference topology) for a config
+  serve     run a standalone policy daemon: the shared inference pool
+            behind a Unix socket, serving `walle sample` processes
+  sample    run one sampler worker against a policy daemon (normally
+            spawned by `train --fleet-mode procs`, not by hand)
 
 COMMON FLAGS:
   --env NAME             pendulum|cartpole|reacher|halfcheetah
@@ -102,9 +110,29 @@ TRAIN FLAGS:
   --flip-schedule K      shared pool mode: flip the epoch gate every K
                          fleet dispatches instead of at publish
                          boundaries (0 = off; needs --infer-epoch pool)
+  --fleet-mode MODE      `threads` (default) runs samplers as in-process
+                         threads; `procs` runs each sampler as a `walle
+                         sample` child process served by an in-process
+                         policy daemon over a Unix socket (requires
+                         --inference-mode shared); per-env chunk streams
+                         are bitwise identical either way
   --learner-shards N     data-parallel learner shards (§6.2, PPO only)
   --epochs N / --lr F    PPO optimization knobs (PPO only)
   --out-dir DIR          write metrics.csv + params.bin + config.json
+
+SERVE FLAGS:
+  --socket PATH          Unix socket to bind (default: a fresh path under
+                         the temp dir, logged at startup)
+  --watch-dir DIR        poll DIR for checkpoints (--checkpoint-every
+                         output of a colocated learner) and hot-swap the
+                         served policy to each newer one
+
+SAMPLE FLAGS:
+  --connect PATH         the daemon's Unix socket (required)
+  --worker-id N          this worker's fleet slot (default 0); every
+                         connected sampler needs a distinct id
+  --config FILE          run config; defaults to the daemon's
+                         `<socket>.config.json` sidecar
 
 FIGURES FLAGS:
   --all | --fig N        which figure(s): 3,4,5,6,7
@@ -131,6 +159,8 @@ fn main() {
         Some("eval") => run_eval(&args),
         Some("figures") => run_figures(&args),
         Some("info") => run_info(&args),
+        Some("serve") => run_serve(&args),
+        Some("sample") => run_sample(&args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -243,10 +273,37 @@ fn config_from(args: &Args) -> anyhow::Result<TrainConfig> {
     }
     cfg.flip_schedule = args.u64_or("flip-schedule", cfg.flip_schedule)?;
     cfg.max_restarts = args.usize_or("max-restarts", cfg.max_restarts)?;
+    if let Some(fm) = args.get("fleet-mode") {
+        cfg.fleet_mode = FleetMode::parse(fm)
+            .ok_or_else(|| anyhow::anyhow!("bad --fleet-mode {fm:?} (threads|procs)"))?;
+    }
     if let Some(d) = args.get("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
     Ok(cfg)
+}
+
+/// Flipped by [`on_signal`]; watched by `walle train` and `walle serve`
+/// so SIGINT/SIGTERM drain the fleet through the normal stop/queue-close
+/// paths instead of killing threads mid-write.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_sig: libc::c_int) {
+    // async-signal-safe: one atomic store, nothing else
+    SHUTDOWN.store(true, Ordering::Relaxed);
+}
+
+fn install_signal_handlers() {
+    unsafe {
+        libc::signal(
+            libc::SIGINT,
+            on_signal as extern "C" fn(libc::c_int) as libc::sighandler_t,
+        );
+        libc::signal(
+            libc::SIGTERM,
+            on_signal as extern "C" fn(libc::c_int) as libc::sighandler_t,
+        );
+    }
 }
 
 fn run_train(args: &Args) -> anyhow::Result<()> {
@@ -257,7 +314,17 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
     for line in session.spec().render().lines() {
         walle::log_info!("{line}");
     }
-    let result = session.run()?;
+    install_signal_handlers();
+    let result = match session.run_watched(&SHUTDOWN) {
+        Ok(r) => r,
+        // a run torn down by the signal monitor surfaces as a learner
+        // error (closed queue); with the flag set that IS clean shutdown
+        Err(_) if SHUTDOWN.load(Ordering::Relaxed) => {
+            walle::log_info!("interrupted — fleet shut down cleanly");
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
 
     let (pushed, popped, pblk, cblk) = result.queue_stats;
     walle::log_info!(
@@ -280,6 +347,70 @@ fn run_train(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+fn run_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from(args)?;
+    anyhow::ensure!(
+        cfg.inference_mode == InferenceMode::Shared,
+        "walle serve fronts the shared inference pool — add --inference-mode shared"
+    );
+    let sock = match args.get("socket") {
+        Some(s) => PathBuf::from(s),
+        None => daemon::default_socket_path(),
+    };
+    let watch_dir = args.get("watch-dir").map(PathBuf::from);
+    install_signal_handlers();
+    let factory = walle::runtime::make_factory(&cfg)?;
+    let algo = walle::algo::api::algorithm_from_config(&cfg);
+    // sidecar first, so `walle sample --connect <sock>` resolves the
+    // IDENTICAL config without an explicit --config
+    let sidecar = daemon::config_sidecar(&sock);
+    let sidecar_str = sidecar
+        .to_str()
+        .ok_or_else(|| anyhow::anyhow!("non-UTF8 sidecar path {}", sidecar.display()))?;
+    cfg.save(sidecar_str)?;
+    let summary = daemon::serve_forever(
+        algo.as_ref(),
+        &cfg,
+        factory.as_ref(),
+        &sock,
+        watch_dir.as_deref(),
+        &SHUTDOWN,
+    );
+    let _ = std::fs::remove_file(&sidecar);
+    let summary = summary?;
+    walle::log_info!("daemon closed: {} chunk(s) drained", summary.chunks_drained);
+    for line in summary.report.render().lines() {
+        walle::log_info!("{line}");
+    }
+    Ok(())
+}
+
+fn run_sample(args: &Args) -> anyhow::Result<()> {
+    let sock = PathBuf::from(args.require("connect")?);
+    let worker_id = args.usize_or("worker-id", 0)?;
+    let cfg = match args.get("config") {
+        Some(p) => TrainConfig::load(p)?,
+        None => {
+            let sidecar = daemon::config_sidecar(&sock);
+            let p = sidecar.to_str().ok_or_else(|| {
+                anyhow::anyhow!("non-UTF8 sidecar path {}", sidecar.display())
+            })?;
+            TrainConfig::load(p).map_err(|e| {
+                anyhow::anyhow!(
+                    "no --config given and the daemon's sidecar could not be \
+                     loaded: {e:#}"
+                )
+            })?
+        }
+    };
+    daemon::run_sample_child(
+        &cfg,
+        &sock,
+        worker_id,
+        std::sync::Arc::new(AtomicBool::new(false)),
+    )
 }
 
 fn run_eval(args: &Args) -> anyhow::Result<()> {

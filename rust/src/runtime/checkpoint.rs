@@ -68,7 +68,7 @@ pub struct RunFingerprint {
 }
 
 impl RunFingerprint {
-    fn write(&self, w: &mut ByteWriter) {
+    pub(crate) fn write(&self, w: &mut ByteWriter) {
         w.put_str(&self.env);
         w.put_str(&self.algo);
         w.put_usize(self.samplers);
@@ -76,7 +76,7 @@ impl RunFingerprint {
         w.put_u64(self.seed);
     }
 
-    fn read(r: &mut ByteReader<'_>) -> Result<RunFingerprint> {
+    pub(crate) fn read(r: &mut ByteReader<'_>) -> Result<RunFingerprint> {
         Ok(RunFingerprint {
             env: r.read_str()?,
             algo: r.read_str()?,

@@ -1,0 +1,1048 @@
+//! Policy daemon: the InferencePool promoted to a standalone
+//! multi-process serving tier.
+//!
+//! The daemon owns the shared [`InferencePool`] + [`PolicyStore`] +
+//! experience queue and serves N remote sampler processes over a
+//! Unix-domain socket speaking the [`wire`] frame protocol. Each child
+//! process runs the UNMODIFIED `run_algo_sampler` hot loop against a
+//! [`remote_client::RemoteActorClient`] — the transport is a pure
+//! topology knob: because the MLP forward is row-independent and noise
+//! is drawn client-side from the worker's own RNG streams, per-(worker,
+//! env_slot) chunk streams are bitwise identical between
+//! `--fleet-mode threads` and `--fleet-mode procs`.
+//!
+//! Three connection roles per child:
+//! * **Actor** (`PeerKind::Actor`) — the hot loop's act-request /
+//!   act-response ping-pong, plus experience-chunk pushes interleaved by
+//!   the child's forwarder thread. The daemon pre-registers one
+//!   [`ActorClient`] per worker id BEFORE its serve threads start (so no
+//!   shard ever observes an empty fleet) and stashes it between
+//!   connections — a respawned child re-claims its slot.
+//! * **Subscriber** (`PeerKind::Subscriber`) — a version long-poll: the
+//!   child sends `WaitNewer{seen}` and the daemon answers with the next
+//!   published version + normalizer, which the child mirrors into its
+//!   LOCAL [`PolicyStore`] so the sampler's sync-mode budget stalls
+//!   resolve exactly as they do in threads mode.
+//!
+//! Every connection handshakes with the run's [`RunFingerprint`] (env,
+//! algorithm, fleet shape, seed); a mismatch is rejected with an
+//! actionable message on BOTH ends — serving a client from a different
+//! run identity would silently corrupt every RNG stream.
+
+pub mod remote_client;
+pub mod wire;
+
+use crate::algo::api::{algorithm_from_config, Algorithm, LearnerDriver};
+use crate::algo::rollout::ExperienceChunk;
+use crate::config::{InferEpoch, InferWait, TrainConfig};
+use crate::coordinator::metrics::{Histogram, InferenceReport, WIRE_FRAME_BYTE_BOUNDS};
+use crate::coordinator::policy_store::{PolicySnapshot, PolicyStore};
+use crate::coordinator::queue::Channel;
+use crate::coordinator::sampler::{run_algo_sampler_supervised, PolicySource, SamplerCfg};
+use crate::env::vec_env::VecEnv;
+use crate::runtime::checkpoint::{self, RunFingerprint};
+use crate::runtime::epoch::EpochMode;
+use crate::runtime::inference_server::{
+    ActorClient, InferencePool, InferencePoolCfg, WaitPolicy,
+};
+use crate::runtime::BackendFactory;
+use crate::util::plock;
+use anyhow::{bail, Context, Result};
+use remote_client::RemoteActorClient;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+use wire::{Frame, PeerKind, ReadOutcome};
+
+/// Env var a sampler child reads as a chunk-count kill switch: after
+/// forwarding this many chunks the child exits with
+/// [`EXIT_AFTER_CHUNKS_CODE`]. A deterministic stand-in for SIGKILL in
+/// respawn tests; the orchestrator strips it from respawned children so
+/// one scripted death cannot become an infinite death loop.
+pub const EXIT_AFTER_CHUNKS_ENV: &str = "WALLE_SAMPLE_EXIT_AFTER_CHUNKS";
+
+/// Exit code of the [`EXIT_AFTER_CHUNKS_ENV`] kill switch (distinct from
+/// 0/1 so a reaper test can tell a scripted death from a real failure).
+pub const EXIT_AFTER_CHUNKS_CODE: i32 = 101;
+
+/// The identity every daemon connection must present: built from the
+/// SAME config fields on both ends, so equality means "this client was
+/// launched for this run".
+pub fn run_fingerprint(cfg: &TrainConfig) -> RunFingerprint {
+    RunFingerprint {
+        env: cfg.env.clone(),
+        algo: cfg.algo.name().to_string(),
+        samplers: cfg.samplers,
+        envs_per_sampler: cfg.envs_per_sampler,
+        seed: cfg.seed,
+    }
+}
+
+/// The shared inference pool for a daemon-backed run — identical to the
+/// threads-mode construction in the orchestrator (wait policy, epoch
+/// gate, flip schedule), so the serving tier changes nothing about
+/// dispatch semantics.
+pub fn build_pool(cfg: &TrainConfig, factory: &dyn BackendFactory) -> Arc<InferencePool> {
+    Arc::new(InferencePool::with_flip_schedule(
+        InferencePoolCfg {
+            workers: cfg.samplers,
+            rows_per_worker: cfg.envs_per_sampler,
+            shards: cfg.infer_shards.resolve(cfg.samplers),
+            wait: match cfg.infer_wait {
+                InferWait::Adaptive => WaitPolicy::Adaptive,
+                InferWait::Fixed(us) => WaitPolicy::Fixed(Duration::from_micros(us)),
+            },
+            epoch: match cfg.infer_epoch {
+                InferEpoch::Pool => EpochMode::Pool,
+                InferEpoch::Shard => EpochMode::Shard,
+            },
+            obs_dim: factory.obs_dim(),
+            act_dim: factory.act_dim(),
+        },
+        cfg.flip_schedule,
+    ))
+}
+
+// ------------------------------------------------------------- metrics
+
+/// Live wire counters for one daemon, merged into the end-of-run
+/// [`InferenceReport`] (the `wire traffic:` lines of `fleet health`).
+/// Byte counts include the 4-byte length prefixes.
+pub struct WireMetrics {
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    handshakes: AtomicU64,
+    disconnects: AtomicU64,
+    frame_bytes: Mutex<Histogram>,
+}
+
+impl WireMetrics {
+    pub fn new() -> WireMetrics {
+        WireMetrics {
+            frames_in: AtomicU64::new(0),
+            frames_out: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            handshakes: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            frame_bytes: Mutex::new(Histogram::new(WIRE_FRAME_BYTE_BOUNDS)),
+        }
+    }
+
+    fn count_in(&self, bytes: usize) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+        self.bytes_in.fetch_add(bytes as u64, Ordering::Relaxed);
+        plock(&self.frame_bytes).record(bytes as f64);
+    }
+
+    fn count_out(&self, bytes: usize) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+        self.bytes_out.fetch_add(bytes as u64, Ordering::Relaxed);
+        plock(&self.frame_bytes).record(bytes as f64);
+    }
+
+    fn count_handshake(&self) {
+        self.handshakes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn count_disconnect(&self) {
+        self.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold the live counters into a report (end of run, after every
+    /// connection thread has exited).
+    pub fn merge_into(&self, rep: &mut InferenceReport) {
+        rep.wire_frames_in += self.frames_in.load(Ordering::Relaxed);
+        rep.wire_frames_out += self.frames_out.load(Ordering::Relaxed);
+        rep.wire_bytes_in += self.bytes_in.load(Ordering::Relaxed);
+        rep.wire_bytes_out += self.bytes_out.load(Ordering::Relaxed);
+        rep.wire_handshakes += self.handshakes.load(Ordering::Relaxed);
+        rep.wire_disconnects += self.disconnects.load(Ordering::Relaxed);
+        rep.wire_frame_bytes.merge(&plock(&self.frame_bytes));
+    }
+}
+
+impl Default for WireMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// ------------------------------------------------------ socket helpers
+
+/// A per-process, per-call unique socket path under the temp dir (the
+/// `--fleet-mode procs` default; `walle serve` takes `--socket`).
+pub fn default_socket_path() -> PathBuf {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "walle-fleet-{}-{}.sock",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// The config sidecar written next to the socket (`<sock>.config.json`):
+/// sampler children load it so both processes resolve the run from the
+/// IDENTICAL config — the fingerprint handshake then only guards against
+/// pointing `--connect` at the wrong daemon.
+pub fn config_sidecar(sock: &Path) -> PathBuf {
+    let mut os = sock.as_os_str().to_os_string();
+    os.push(".config.json");
+    PathBuf::from(os)
+}
+
+/// Bind the daemon listener, unlinking a STALE socket file first (a
+/// previous daemon that died without cleanup). A socket something still
+/// answers on is a live daemon — refuse to hijack it.
+pub fn bind_socket(sock: &Path) -> Result<UnixListener> {
+    if sock.exists() {
+        match UnixStream::connect(sock) {
+            Ok(_) => bail!(
+                "{} is already served by a live daemon — stop it first, or pick \
+                 a different --socket path",
+                sock.display()
+            ),
+            Err(_) => {
+                crate::log_warn!(
+                    "removing stale socket {} (no daemon answered)",
+                    sock.display()
+                );
+                std::fs::remove_file(sock)
+                    .with_context(|| format!("unlinking stale socket {}", sock.display()))?;
+            }
+        }
+    }
+    UnixListener::bind(sock).with_context(|| format!("binding {}", sock.display()))
+}
+
+// ------------------------------------------------------- daemon server
+
+/// Everything a daemon connection thread needs. Cheap to clone (Arcs +
+/// borrows); one clone per connection.
+#[derive(Clone)]
+pub struct DaemonCtx<'a> {
+    pub fingerprint: RunFingerprint,
+    /// Rows per act request (envs per sampler, M).
+    pub m: usize,
+    pub pool: Arc<InferencePool>,
+    pub store: &'a PolicyStore,
+    pub queue: &'a Channel<ExperienceChunk>,
+    pub stop: &'a AtomicBool,
+    /// Pre-registered per-worker [`ActorClient`]s, parked here whenever
+    /// the worker's child is not connected. Holding the client IS the
+    /// shard keep-alive: a shard's serve loop only exits once every one
+    /// of its clients is dropped, which happens when the stash itself is
+    /// dropped at shutdown.
+    pub stash: Arc<Mutex<Vec<Option<ActorClient>>>>,
+    pub metrics: Arc<WireMetrics>,
+}
+
+impl<'a> DaemonCtx<'a> {
+    /// Build the context, registering one client per worker id with the
+    /// pool. MUST run before the pool's serve threads start (the same
+    /// pre-registration rule the threads-mode orchestrator follows).
+    pub fn new(
+        cfg: &TrainConfig,
+        pool: Arc<InferencePool>,
+        store: &'a PolicyStore,
+        queue: &'a Channel<ExperienceChunk>,
+        stop: &'a AtomicBool,
+    ) -> DaemonCtx<'a> {
+        let stash = (0..cfg.samplers).map(|id| Some(pool.client(id))).collect();
+        DaemonCtx {
+            fingerprint: run_fingerprint(cfg),
+            m: cfg.envs_per_sampler,
+            pool,
+            store,
+            queue,
+            stop,
+            stash: Arc::new(Mutex::new(stash)),
+            metrics: Arc::new(WireMetrics::new()),
+        }
+    }
+}
+
+/// Accept-and-serve loop: polls the listener (non-blocking, 50ms) until
+/// `ctx.stop` flips or the queue closes, spawning one scoped connection
+/// thread per client. Runs on a scoped thread itself; `Scope` is `Sync`,
+/// so nested spawns work.
+pub fn accept_loop<'scope, 'env>(
+    scope: &'scope std::thread::Scope<'scope, 'env>,
+    listener: UnixListener,
+    ctx: DaemonCtx<'env>,
+) {
+    if let Err(e) = listener.set_nonblocking(true) {
+        crate::log_error!("daemon listener: cannot set non-blocking: {e}");
+        return;
+    }
+    loop {
+        if ctx.stop.load(Ordering::Relaxed) || ctx.queue.is_closed() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let conn_ctx = ctx.clone();
+                scope.spawn(move || serve_connection(stream, conn_ctx));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => {
+                crate::log_warn!("daemon accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn serve_connection(mut stream: UnixStream, ctx: DaemonCtx<'_>) {
+    if let Err(e) = connection(&mut stream, &ctx) {
+        if !ctx.stop.load(Ordering::Relaxed) && !ctx.queue.is_closed() {
+            crate::log_warn!("daemon connection ended with an error: {e:#}");
+        }
+    }
+}
+
+/// One connection, handshake to hangup.
+fn connection(stream: &mut UnixStream, ctx: &DaemonCtx<'_>) -> Result<()> {
+    stream.set_nonblocking(false).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .context("setting connection read timeout")?;
+    let hello = match wire::read_frame(stream, ctx.stop)? {
+        ReadOutcome::Frame(f, n) => {
+            ctx.metrics.count_in(n);
+            f
+        }
+        // connect-then-close is how `bind_socket` probes for a live
+        // daemon — not an error
+        ReadOutcome::Eof => return Ok(()),
+    };
+    let (kind, fingerprint, worker_id, m) = match hello {
+        Frame::Hello {
+            kind,
+            fingerprint,
+            worker_id,
+            m,
+        } => (kind, fingerprint, worker_id, m),
+        f => bail!("expected Hello, peer sent {}", f.kind_name()),
+    };
+    if fingerprint != ctx.fingerprint {
+        let message = wire::fingerprint_mismatch(&ctx.fingerprint, &fingerprint);
+        reject(stream, ctx, &message)?;
+        bail!("rejected {kind:?} handshake from worker {worker_id}: {message}");
+    }
+    if m != ctx.m {
+        let message = format!(
+            "client submits {m}-row slabs but this daemon serves {} envs per \
+             sampler — both ends must run the same config",
+            ctx.m
+        );
+        reject(stream, ctx, &message)?;
+        bail!("rejected {kind:?} handshake from worker {worker_id}: {message}");
+    }
+    // HelloOk always carries a live version: wait out the gap between
+    // bind and the first publish
+    let snap = match wait_first_snapshot(ctx) {
+        Some(s) => s,
+        None => return Ok(()), // shut down before the first publish
+    };
+    match kind {
+        PeerKind::Actor => actor_connection(stream, ctx, worker_id, snap),
+        PeerKind::Subscriber => subscriber_connection(stream, ctx, snap),
+    }
+}
+
+fn reject(stream: &mut UnixStream, ctx: &DaemonCtx<'_>, message: &str) -> Result<()> {
+    let n = wire::write_frame(
+        stream,
+        &Frame::HelloErr {
+            message: message.to_string(),
+        },
+    )
+    .context("sending handshake rejection")?;
+    ctx.metrics.count_out(n);
+    Ok(())
+}
+
+fn wait_first_snapshot(ctx: &DaemonCtx<'_>) -> Option<Arc<PolicySnapshot>> {
+    loop {
+        if let Some(s) = ctx.store.latest() {
+            return Some(s);
+        }
+        if ctx.stop.load(Ordering::Relaxed) || ctx.queue.is_closed() {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Actor connection: claim the worker's stashed client, serve the
+/// act/chunk loop, and park the client back on the way out — so the
+/// shard never sees a zero-client window and a respawned child can
+/// re-claim the slot.
+fn actor_connection(
+    stream: &mut UnixStream,
+    ctx: &DaemonCtx<'_>,
+    worker_id: usize,
+    snap: Arc<PolicySnapshot>,
+) -> Result<()> {
+    if worker_id >= plock(&ctx.stash).len() {
+        let message = format!(
+            "worker id {worker_id} is out of range for a {}-sampler fleet",
+            plock(&ctx.stash).len()
+        );
+        reject(stream, ctx, &message)?;
+        bail!("{message}");
+    }
+    // Claim the slot, waiting out the respawn race: a respawned child can
+    // connect before its dead predecessor's connection thread notices the
+    // EOF (one read probe, 200ms) and parks the client back. Only a slot
+    // still taken after the grace period is a genuinely duplicate worker.
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    let mut client = loop {
+        if let Some(c) = plock(&ctx.stash)[worker_id].take() {
+            break c;
+        }
+        if ctx.stop.load(Ordering::Relaxed) || ctx.queue.is_closed() {
+            return Ok(());
+        }
+        if std::time::Instant::now() >= deadline {
+            let message = format!(
+                "worker id {worker_id} is already connected — every sampler \
+                 process needs a distinct --worker-id"
+            );
+            reject(stream, ctx, &message)?;
+            bail!("{message}");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    // a SIGKILLed predecessor may have left a dispatched reply in the
+    // slot; drain it so this child's first act sees a clean client
+    client.reset_stale();
+    let n = wire::write_frame(
+        stream,
+        &Frame::HelloOk {
+            version: snap.version,
+            norm: snap.norm.clone(),
+        },
+    )
+    .context("sending HelloOk")?;
+    ctx.metrics.count_out(n);
+    ctx.metrics.count_handshake();
+    let mut last_version = snap.version;
+    let res = actor_loop(stream, ctx, &mut client, &mut last_version);
+    client.reset_stale();
+    plock(&ctx.stash)[worker_id] = Some(client);
+    ctx.metrics.count_disconnect();
+    res
+}
+
+fn actor_loop(
+    stream: &mut UnixStream,
+    ctx: &DaemonCtx<'_>,
+    client: &mut ActorClient,
+    last_version: &mut u64,
+) -> Result<()> {
+    loop {
+        let frame = match wire::read_frame(stream, ctx.stop) {
+            Ok(ReadOutcome::Frame(f, n)) => {
+                ctx.metrics.count_in(n);
+                f
+            }
+            Ok(ReadOutcome::Eof) => return Ok(()),
+            Err(e) => {
+                if ctx.stop.load(Ordering::Relaxed) {
+                    return Ok(()); // shutdown raced the read
+                }
+                return Err(e);
+            }
+        };
+        match frame {
+            Frame::ActReq { rows, obs, noise } => {
+                // retry a down shard exactly like the supervised
+                // in-process worker does: `act` is retry-safe after Err
+                // and the shard supervisor is respawning the serve
+                // thread concurrently
+                let resp = loop {
+                    match client.act(&obs, &noise) {
+                        Ok(r) => break Ok(r),
+                        Err(e) => {
+                            if ctx.stop.load(Ordering::Relaxed) || ctx.queue.is_closed() {
+                                break Err(e);
+                            }
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                };
+                match resp {
+                    Ok(r) => {
+                        let version = r.snapshot.version;
+                        // ship the normalizer only on the first response
+                        // under a new version (per connection) — the
+                        // client caches it in its param-less snapshot
+                        let norm = if version != *last_version {
+                            *last_version = version;
+                            Some(r.snapshot.norm.clone())
+                        } else {
+                            None
+                        };
+                        let out = Frame::ActResp(wire::ActRespWire {
+                            version,
+                            epoch: r.epoch,
+                            server_busy_secs: r.server_busy_secs,
+                            rows,
+                            action: r.action().to_vec(),
+                            logp: r.logp().to_vec(),
+                            value: r.value().to_vec(),
+                            mean: r.mean().to_vec(),
+                            norm_obs: r.norm_obs().to_vec(),
+                            norm,
+                        });
+                        drop(r); // recycle the slab before the write blocks
+                        let n =
+                            wire::write_frame(stream, &out).context("sending act response")?;
+                        ctx.metrics.count_out(n);
+                    }
+                    Err(e) => {
+                        let n = wire::write_frame(
+                            stream,
+                            &Frame::ActErr {
+                                message: format!("{e:#}"),
+                            },
+                        )
+                        .context("sending act error")?;
+                        ctx.metrics.count_out(n);
+                        return Err(e);
+                    }
+                }
+            }
+            Frame::Chunk(chunk) => {
+                // blocking push: queue backpressure stalls this
+                // connection exactly like it stalls a threads-mode
+                // worker. After close (shutdown) the chunk is dropped.
+                let _ = ctx.queue.push(*chunk);
+            }
+            f => bail!("unexpected {} on an actor connection", f.kind_name()),
+        }
+    }
+}
+
+/// Subscriber connection: answer each `WaitNewer{seen}` long-poll with
+/// the next published version + normalizer (checking shutdown every
+/// 200ms), so the child can mirror the daemon's store locally.
+fn subscriber_connection(
+    stream: &mut UnixStream,
+    ctx: &DaemonCtx<'_>,
+    snap: Arc<PolicySnapshot>,
+) -> Result<()> {
+    let n = wire::write_frame(
+        stream,
+        &Frame::HelloOk {
+            version: snap.version,
+            norm: snap.norm.clone(),
+        },
+    )
+    .context("sending HelloOk")?;
+    ctx.metrics.count_out(n);
+    ctx.metrics.count_handshake();
+    loop {
+        let frame = match wire::read_frame(stream, ctx.stop) {
+            Ok(ReadOutcome::Frame(f, n)) => {
+                ctx.metrics.count_in(n);
+                f
+            }
+            Ok(ReadOutcome::Eof) => return Ok(()),
+            Err(e) => {
+                if ctx.stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+        };
+        match frame {
+            Frame::WaitNewer { seen } => {
+                let newer = loop {
+                    if ctx.stop.load(Ordering::Relaxed) || ctx.queue.is_closed() {
+                        // shutdown: hang up instead of answering; the
+                        // child's pump treats EOF as its stop signal
+                        return Ok(());
+                    }
+                    if let Some(s) = ctx.store.wait_newer(seen, Duration::from_millis(200)) {
+                        break s;
+                    }
+                };
+                let n = wire::write_frame(
+                    stream,
+                    &Frame::Version {
+                        version: newer.version,
+                        norm: newer.norm.clone(),
+                    },
+                )
+                .context("sending version push")?;
+                ctx.metrics.count_out(n);
+            }
+            f => bail!("unexpected {} on a subscriber connection", f.kind_name()),
+        }
+    }
+}
+
+// -------------------------------------------------------- sampler child
+
+/// The `walle sample --connect <sock> --worker-id K` process body: run
+/// one unmodified sampler hot loop against a remote daemon.
+///
+/// Three threads: the hot loop (this thread) driving
+/// [`PolicySource::Remote`], a chunk forwarder streaming finished
+/// chunks back over the actor socket, and a version pump mirroring the
+/// daemon's publishes into a LOCAL [`PolicyStore`] (param-less: only
+/// version + normalizer travel; the weights live in the daemon). The
+/// pump is the sole writer of the local store, so the sampler's
+/// sync-mode `wait_newer` stalls resolve on exactly the daemon's
+/// publish boundaries — the keystone of threads/procs bitwise parity.
+pub fn run_sample_child(
+    cfg: &TrainConfig,
+    sock: &Path,
+    worker_id: usize,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        worker_id < cfg.samplers,
+        "--worker-id {worker_id} is out of range for a {}-sampler fleet",
+        cfg.samplers
+    );
+    // process-global modes must match the daemon's before the first
+    // forward / env reset (same rule as the threads-mode orchestrator)
+    crate::nn::kernels::set_mode(cfg.kernels.mode());
+    crate::env::batch::set_engine(cfg.env_engine.engine());
+    let factory = crate::runtime::make_factory(cfg)?;
+    let algo = algorithm_from_config(cfg);
+    let fingerprint = run_fingerprint(cfg);
+    let m = cfg.envs_per_sampler;
+
+    // subscriber connection first: seed the local store at the daemon's
+    // current version so the hot loop's first wait_newer(0) resolves
+    let (sub, v0, n0) = remote_client::connect(
+        sock,
+        PeerKind::Subscriber,
+        &fingerprint,
+        worker_id,
+        m,
+        stop.as_ref(),
+    )?;
+    let store = PolicyStore::new();
+    store.resume_at(v0.saturating_sub(1));
+    store.publish(Vec::new(), n0);
+
+    let actor = RemoteActorClient::connect(
+        sock,
+        &fingerprint,
+        worker_id,
+        m,
+        factory.obs_dim(),
+        factory.act_dim(),
+        stop.clone(),
+    )?;
+    let writer = actor.writer();
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let exit_after: Option<u64> = std::env::var(EXIT_AFTER_CHUNKS_ENV)
+        .ok()
+        .and_then(|s| s.parse().ok());
+
+    let sync_budget = if cfg.async_mode {
+        None
+    } else {
+        // identical ceil-divide to the orchestrator: both processes must
+        // agree on the per-version budget or sync mode deadlocks
+        Some((cfg.samples_per_iter + cfg.samplers - 1) / cfg.samplers)
+    };
+    let scfg = SamplerCfg {
+        id: worker_id,
+        seed: cfg.seed,
+        chunk_steps: cfg.chunk_steps,
+        sync_budget,
+        reward_scale: cfg.reward_scale,
+    };
+    let venv = VecEnv::from_registry(&cfg.env, m, cfg.seed, (worker_id * m) as u64 + 1)?;
+
+    let report = std::thread::scope(|s| {
+        s.spawn(|| version_pump(sub, &store, &stop));
+        s.spawn(|| chunk_forwarder(&queue, &writer, exit_after, &stop));
+        let report = run_algo_sampler_supervised(
+            algo.as_ref(),
+            scfg,
+            venv,
+            PolicySource::Remote(actor),
+            &store,
+            &queue,
+            &stop,
+            None,
+        );
+        // unblock the pump (read probe) and the forwarder (pop)
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        report
+    });
+    crate::log_info!(
+        "sampler child {worker_id}: {} steps, {} chunks delivered",
+        report.steps,
+        report.chunks
+    );
+    Ok(())
+}
+
+/// Mirror the daemon's publishes into the child's local store. Any link
+/// failure flips the child's stop flag — a sampler stalled at a sync
+/// budget with a dead pump would otherwise wait forever for a local
+/// publish that can never come.
+fn version_pump(mut sub: UnixStream, store: &PolicyStore, stop: &AtomicBool) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let seen = store.version();
+        if wire::write_frame(&mut sub, &Frame::WaitNewer { seen }).is_err() {
+            if !stop.swap(true, Ordering::Relaxed) {
+                crate::log_warn!("version pump: daemon link lost; stopping this sampler");
+            }
+            return;
+        }
+        match wire::read_frame(&mut sub, stop) {
+            Ok(ReadOutcome::Frame(Frame::Version { version, norm }, _)) => {
+                if version > store.version() {
+                    // resume_at(v-1) + publish lands the local store at
+                    // exactly the daemon's version
+                    store.resume_at(version.saturating_sub(1));
+                    store.publish(Vec::new(), norm);
+                }
+            }
+            Ok(ReadOutcome::Frame(f, _)) => {
+                crate::log_warn!("version pump: unexpected {}; stopping", f.kind_name());
+                stop.store(true, Ordering::Relaxed);
+                return;
+            }
+            Ok(ReadOutcome::Eof) | Err(_) => {
+                // clean daemon shutdown or a dead link: either way the
+                // run is over for this child
+                stop.store(true, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+}
+
+/// Stream finished chunks back to the daemon, interleaving whole frames
+/// with the hot loop's act requests under the shared write lock.
+fn chunk_forwarder(
+    queue: &Channel<ExperienceChunk>,
+    writer: &Arc<Mutex<UnixStream>>,
+    exit_after: Option<u64>,
+    stop: &AtomicBool,
+) {
+    let mut sent = 0u64;
+    loop {
+        let chunk = match queue.pop() {
+            Ok(c) => c,
+            Err(_) => return, // closed and drained
+        };
+        let frame = Frame::Chunk(Box::new(chunk));
+        if wire::write_frame(&mut *plock(writer), &frame).is_err() {
+            if !stop.swap(true, Ordering::Relaxed) {
+                crate::log_warn!("chunk forwarder: daemon link lost; stopping this sampler");
+            }
+            return;
+        }
+        sent += 1;
+        if exit_after.is_some_and(|k| sent >= k) {
+            crate::log_warn!(
+                "{EXIT_AFTER_CHUNKS_ENV}={} reached; exiting {EXIT_AFTER_CHUNKS_CODE}",
+                exit_after.unwrap()
+            );
+            std::process::exit(EXIT_AFTER_CHUNKS_CODE);
+        }
+    }
+}
+
+// ------------------------------------------------------ process spawn
+
+/// The `walle` binary to spawn sampler children from: `WALLE_BIN` if set
+/// (integration tests point it at the real binary — `current_exe` would
+/// resolve to the TEST harness), else this executable.
+pub fn walle_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("WALLE_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().context("resolving the walle binary for sampler children")
+}
+
+/// Spawn one `walle sample` child. `inherit_kill_switch = false` strips
+/// [`EXIT_AFTER_CHUNKS_ENV`] (respawned incarnations must not re-die on
+/// the scripted trigger).
+pub fn spawn_sampler(
+    bin: &Path,
+    sock: &Path,
+    config: &Path,
+    worker_id: usize,
+    inherit_kill_switch: bool,
+) -> Result<std::process::Child> {
+    let mut cmd = std::process::Command::new(bin);
+    cmd.arg("sample")
+        .arg("--connect")
+        .arg(sock)
+        .arg("--config")
+        .arg(config)
+        .arg("--worker-id")
+        .arg(worker_id.to_string());
+    if !inherit_kill_switch {
+        cmd.env_remove(EXIT_AFTER_CHUNKS_ENV);
+    }
+    cmd.spawn()
+        .with_context(|| format!("spawning sampler child {worker_id} from {}", bin.display()))
+}
+
+/// SIGTERM, bounded grace, then SIGKILL — the shutdown path for sampler
+/// children still alive when the run ends.
+pub fn terminate_child(mut child: std::process::Child, worker_id: usize) {
+    unsafe {
+        libc::kill(child.id() as libc::pid_t, libc::SIGTERM);
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) => {}
+            Err(_) => return,
+        }
+        if std::time::Instant::now() >= deadline {
+            crate::log_warn!("sampler child {worker_id} ignored SIGTERM; killing");
+            let _ = child.kill();
+            let _ = child.wait();
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+// ------------------------------------------------------- walle serve
+
+/// What a standalone `walle serve` run saw, for the exit report.
+pub struct ServeSummary {
+    /// Chunks received from remote samplers and drained (a standalone
+    /// daemon has no learner to consume them).
+    pub chunks_drained: u64,
+    /// Pool dispatch stats + wire counters.
+    pub report: InferenceReport,
+}
+
+/// The `walle serve` body: a standalone policy daemon. Publishes the
+/// algorithm's initial policy, serves any number of `walle sample
+/// --connect` processes, and — with `watch_dir` — hot-swaps to every
+/// newer checkpoint that lands there (a colocated learner's
+/// `--checkpoint-every` output) through the normal publish/epoch
+/// machinery. Runs until `shutdown` flips (SIGINT/SIGTERM in main.rs).
+pub fn serve_forever(
+    algo: &dyn Algorithm,
+    cfg: &TrainConfig,
+    factory: &dyn BackendFactory,
+    sock: &Path,
+    watch_dir: Option<&Path>,
+    shutdown: &AtomicBool,
+) -> Result<ServeSummary> {
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    crate::nn::kernels::set_mode(cfg.kernels.mode());
+    crate::env::batch::set_engine(cfg.env_engine.engine());
+    let listener = bind_socket(sock)?;
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    if cfg.infer_precision == crate::config::InferPrecision::Int8 {
+        let q = algo.quantizer(factory, cfg).ok_or_else(|| {
+            anyhow::anyhow!(
+                "--infer-precision int8 is not supported by algorithm {:?}",
+                cfg.algo
+            )
+        })?;
+        store.set_quantizer(q);
+    }
+    let stop = AtomicBool::new(false);
+    // the daemon keeps its learner alive for the whole run: checkpoint
+    // learner blobs are opaque, so adopting one means load_state +
+    // re-publishing final_params/final_norm through THIS instance
+    let mut learner = algo.make_learner(factory, cfg)?;
+    learner.publish_initial(&store);
+    let mut last_ck_version = store.version();
+    let chunks = AtomicU64::new(0);
+    let fingerprint = run_fingerprint(cfg);
+
+    let pool = build_pool(cfg, factory);
+    // the ctx is MOVED into the accept loop below and fully dropped by
+    // the time the scope joins — the stash it carries is what keeps the
+    // pre-registered clients (and thus the shard serve loops) alive, so
+    // no clone may survive the scope; only the metrics Arc does
+    let ctx = DaemonCtx::new(cfg, pool.clone(), &store, &queue, &stop);
+    let metrics = ctx.metrics.clone();
+    std::thread::scope(|scope| {
+        for (idx, shard) in pool.shards().iter().enumerate() {
+            let shard = shard.clone();
+            let store = &store;
+            scope.spawn(move || {
+                if let Err(e) = shard.serve_algo(algo, factory, store) {
+                    crate::log_error!("inference shard {idx} failed: {e:#}");
+                }
+            });
+        }
+        scope.spawn(move || accept_loop(scope, listener, ctx));
+        // drain remote chunks: a standalone daemon has no learner loop
+        // consuming the queue, and letting it fill would stall every
+        // connected sampler at the backpressure point
+        let chunks = &chunks;
+        let queue_ref = &queue;
+        scope.spawn(move || {
+            while queue_ref.pop().is_ok() {
+                chunks.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+
+        crate::log_info!(
+            "serving {} ({}) on {} — {} sampler slot(s), {} shard(s){}",
+            cfg.env,
+            cfg.algo.name(),
+            sock.display(),
+            cfg.samplers,
+            pool.shard_count(),
+            match watch_dir {
+                Some(d) => format!(", watching {} for checkpoints", d.display()),
+                None => String::new(),
+            }
+        );
+        while !shutdown.load(Ordering::Relaxed) {
+            if let Some(dir) = watch_dir {
+                adopt_checkpoint(dir, &mut learner, &store, &fingerprint, &mut last_ck_version);
+            }
+            std::thread::sleep(Duration::from_millis(200));
+        }
+        crate::log_info!("shutdown signal received; closing the daemon");
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+        // scope join: accept/connection threads exit on `stop` within a
+        // read probe; dropping the last stash clone releases the
+        // pre-registered clients, which lets every shard's serve loop
+        // exit
+    });
+    let _ = std::fs::remove_file(sock);
+    let mut rep = pool.report();
+    metrics.merge_into(&mut rep);
+    Ok(ServeSummary {
+        chunks_drained: chunks.load(Ordering::Relaxed),
+        report: rep,
+    })
+}
+
+/// Adopt the newest checkpoint in `dir` if it is newer than the last
+/// version this daemon published from the watch path. Non-fatal on any
+/// error (the directory may simply be empty so far).
+fn adopt_checkpoint(
+    dir: &Path,
+    learner: &mut Box<dyn LearnerDriver>,
+    store: &PolicyStore,
+    fingerprint: &RunFingerprint,
+    last: &mut u64,
+) {
+    let ck = match checkpoint::load_latest(dir) {
+        Ok(c) => c,
+        Err(_) => return, // nothing (valid) there yet
+    };
+    if ck.version <= *last {
+        return;
+    }
+    if ck.fingerprint != *fingerprint {
+        crate::log_warn!(
+            "ignoring checkpoint in {}: {}",
+            dir.display(),
+            wire::fingerprint_mismatch(fingerprint, &ck.fingerprint)
+        );
+        *last = ck.version; // warn once per version, not every 200ms
+        return;
+    }
+    if let Err(e) = learner.load_state(&ck.learner) {
+        crate::log_warn!("checkpoint in {} failed to load: {e:#}", dir.display());
+        *last = ck.version;
+        return;
+    }
+    store.resume_at(ck.version.saturating_sub(1));
+    let v = store.publish(learner.final_params(), learner.final_norm());
+    *last = v;
+    crate::log_info!(
+        "adopted checkpoint (iteration {}) as policy version {v}",
+        ck.iteration
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_sidecar_appends_suffix() {
+        let p = config_sidecar(Path::new("/tmp/walle-x.sock"));
+        assert_eq!(p, Path::new("/tmp/walle-x.sock.config.json"));
+    }
+
+    #[test]
+    fn default_socket_paths_are_unique() {
+        let a = default_socket_path();
+        let b = default_socket_path();
+        assert_ne!(a, b);
+        assert!(a.to_string_lossy().ends_with(".sock"));
+    }
+
+    #[test]
+    fn fingerprint_mirrors_config_fields() {
+        let mut cfg = TrainConfig::preset("pendulum");
+        cfg.samplers = 3;
+        cfg.envs_per_sampler = 2;
+        cfg.seed = 77;
+        let fp = run_fingerprint(&cfg);
+        assert_eq!(fp.env, "pendulum");
+        assert_eq!(fp.samplers, 3);
+        assert_eq!(fp.envs_per_sampler, 2);
+        assert_eq!(fp.seed, 77);
+        assert_eq!(fp.algo, cfg.algo.name());
+    }
+
+    #[test]
+    fn wire_metrics_merge_into_report() {
+        let m = WireMetrics::new();
+        m.count_in(100);
+        m.count_out(5000);
+        m.count_handshake();
+        m.count_disconnect();
+        let mut rep = InferenceReport::new(4);
+        m.merge_into(&mut rep);
+        assert_eq!(rep.wire_frames_in, 1);
+        assert_eq!(rep.wire_frames_out, 1);
+        assert_eq!(rep.wire_bytes_in, 100);
+        assert_eq!(rep.wire_bytes_out, 5000);
+        assert_eq!(rep.wire_handshakes, 1);
+        assert_eq!(rep.wire_disconnects, 1);
+        assert_eq!(rep.wire_frame_bytes.count(), 2);
+        assert!(rep.has_wire_traffic());
+    }
+
+    #[test]
+    fn bind_socket_unlinks_stale_and_rejects_live() {
+        let sock = default_socket_path();
+        // stale file nobody answers on
+        std::fs::write(&sock, b"").unwrap();
+        let listener = bind_socket(&sock).expect("stale socket must be reclaimed");
+        // a second daemon must refuse the live socket
+        let err = bind_socket(&sock).unwrap_err();
+        assert!(err.to_string().contains("already served"), "{err:#}");
+        drop(listener);
+        let _ = std::fs::remove_file(&sock);
+    }
+}

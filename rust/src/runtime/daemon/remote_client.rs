@@ -1,0 +1,212 @@
+//! Client side of the policy daemon: an actor handle that speaks the
+//! [`wire`] protocol but hands the sampler hot loop the exact same
+//! [`ActResponse`] type the in-process [`ActorClient`] does — so
+//! `run_algo_sampler` runs unmodified in a separate OS process and the
+//! transport stays a pure topology knob (the bitwise-parity contract).
+//!
+//! One socket, two roles: the hot loop alternates act-request /
+//! act-response on the read side, while a forwarder thread pushes
+//! finished experience chunks through the same stream (whole-frame
+//! writes serialized by [`RemoteActorClient::writer`]'s mutex). The
+//! daemon never sends unsolicited frames on an actor connection, so the
+//! hot loop owns the read side outright — no demultiplexer needed.
+//!
+//! [`ActorClient`]: crate::runtime::inference_server::ActorClient
+
+use crate::coordinator::policy_store::PolicySnapshot;
+use crate::runtime::checkpoint::RunFingerprint;
+use crate::runtime::daemon::wire::{self, Frame, PeerKind, ReadOutcome};
+use crate::runtime::inference_server::{ActResponse, ResponseDepot};
+use crate::util::plock;
+use anyhow::{bail, Context, Result};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a blocked socket read sleeps before re-checking the stop
+/// flag (mirrors the in-process client's 50ms liveness probe, scaled to
+/// the coarser cross-process failure domain).
+pub const READ_PROBE: Duration = Duration::from_millis(200);
+
+/// Open a socket to the daemon and run the [`Frame::Hello`] handshake.
+/// Returns the stream plus the daemon's current policy version and
+/// normalizer snapshot. A [`Frame::HelloErr`] (fingerprint mismatch,
+/// busy worker id, protocol skew) becomes an actionable error here —
+/// the client-side half of the both-ends rejection contract.
+pub fn connect(
+    sock: &Path,
+    kind: PeerKind,
+    fingerprint: &RunFingerprint,
+    worker_id: usize,
+    m: usize,
+    stop: &AtomicBool,
+) -> Result<(UnixStream, u64, crate::algo::normalizer::NormSnapshot)> {
+    let mut stream = UnixStream::connect(sock)
+        .with_context(|| format!("connecting to policy daemon at {}", sock.display()))?;
+    stream
+        .set_read_timeout(Some(READ_PROBE))
+        .context("setting socket read timeout")?;
+    wire::write_frame(
+        &mut stream,
+        &Frame::Hello {
+            kind,
+            fingerprint: fingerprint.clone(),
+            worker_id,
+            m,
+        },
+    )
+    .context("sending handshake")?;
+    match wire::read_frame(&mut stream, stop).context("awaiting handshake reply")? {
+        ReadOutcome::Frame(Frame::HelloOk { version, norm }, _) => Ok((stream, version, norm)),
+        ReadOutcome::Frame(Frame::HelloErr { message }, _) => {
+            bail!("daemon at {} rejected the handshake: {message}", sock.display())
+        }
+        ReadOutcome::Frame(f, _) => bail!("expected HelloOk, daemon sent {}", f.kind_name()),
+        ReadOutcome::Eof => bail!(
+            "daemon at {} closed the socket during the handshake",
+            sock.display()
+        ),
+    }
+}
+
+/// Remote counterpart of the in-process `ActorClient`: submits one
+/// worker's slab per tick over the daemon socket and wraps the reply
+/// into a real [`ActResponse`] (drop-recycled through a
+/// [`ResponseDepot`]). The cached [`PolicySnapshot`] carries the
+/// daemon's version + normalizer with an EMPTY parameter vector — the
+/// weights live in the daemon; the hot loop only reads `version`/`norm`
+/// off the snapshot on this path.
+pub struct RemoteActorClient {
+    /// Read side of the socket (exclusive to the hot loop).
+    reader: UnixStream,
+    /// Write side, shared with the chunk forwarder thread — every frame
+    /// goes out whole under this lock.
+    writer: Arc<Mutex<UnixStream>>,
+    depot: ResponseDepot,
+    stop: Arc<AtomicBool>,
+    snapshot: Arc<PolicySnapshot>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl RemoteActorClient {
+    /// Connect + handshake as `PeerKind::Actor` for worker `worker_id`
+    /// submitting `m`-row slabs.
+    pub fn connect(
+        sock: &Path,
+        fingerprint: &RunFingerprint,
+        worker_id: usize,
+        m: usize,
+        obs_dim: usize,
+        act_dim: usize,
+        stop: Arc<AtomicBool>,
+    ) -> Result<RemoteActorClient> {
+        let (stream, version, norm) = connect(
+            sock,
+            PeerKind::Actor,
+            fingerprint,
+            worker_id,
+            m,
+            stop.as_ref(),
+        )?;
+        let reader = stream.try_clone().context("cloning daemon socket")?;
+        Ok(RemoteActorClient {
+            reader,
+            writer: Arc::new(Mutex::new(stream)),
+            depot: ResponseDepot::new(obs_dim, act_dim),
+            stop,
+            snapshot: Arc::new(PolicySnapshot {
+                version,
+                params: Arc::new(Vec::new()),
+                norm,
+                quant: None,
+            }),
+            obs_dim,
+            act_dim,
+        })
+    }
+
+    /// The shared write handle for the chunk forwarder thread (chunk
+    /// pushes interleave with act requests at frame granularity).
+    pub fn writer(&self) -> Arc<Mutex<UnixStream>> {
+        self.writer.clone()
+    }
+
+    /// Submit this worker's slab and block until the daemon's dispatch
+    /// answers it — the wire mirror of `ActorClient::act`, same
+    /// contract: `noise` holds `rows * act_dim` N(0,1) draws (PPO) or is
+    /// empty (DDPG). Noise is drawn CLIENT-side from the worker's own
+    /// RNG stream, exactly as in-process, which is what keeps the
+    /// per-env trajectories bitwise identical across fleet modes.
+    pub fn act(&mut self, raw_obs: &[f32], noise: &[f32]) -> Result<ActResponse> {
+        anyhow::ensure!(
+            !raw_obs.is_empty() && raw_obs.len() % self.obs_dim == 0,
+            "client slab must be a whole number of obs rows"
+        );
+        let rows = raw_obs.len() / self.obs_dim;
+        anyhow::ensure!(
+            noise.is_empty() || noise.len() == rows * self.act_dim,
+            "noise must be empty (ddpg) or rows * act_dim"
+        );
+        // encode outside the lock; hold it only for the write so the
+        // forwarder can slip chunk frames in while we await the reply
+        let req = Frame::ActReq {
+            rows,
+            obs: raw_obs.to_vec(),
+            noise: noise.to_vec(),
+        };
+        wire::write_frame(&mut *plock(&self.writer), &req).context("sending act request")?;
+
+        let r = match wire::read_frame(&mut self.reader, &self.stop)
+            .context("awaiting act response")?
+        {
+            ReadOutcome::Frame(Frame::ActResp(r), _) => r,
+            ReadOutcome::Frame(Frame::ActErr { message }, _) => {
+                bail!("daemon failed the act request: {message}")
+            }
+            ReadOutcome::Frame(f, _) => bail!("expected ActResp, daemon sent {}", f.kind_name()),
+            ReadOutcome::Eof => bail!("daemon closed the connection mid-run"),
+        };
+        anyhow::ensure!(
+            r.rows == rows
+                && r.action.len() == rows * self.act_dim
+                && r.logp.len() == rows
+                && r.value.len() == rows
+                && r.mean.len() == rows * self.act_dim
+                && r.norm_obs.len() == rows * self.obs_dim,
+            "act response shape mismatch (daemon sent {} rows for a {rows}-row request)",
+            r.rows
+        );
+        if r.version != self.snapshot.version {
+            // first response under a new version carries the snapshot's
+            // normalizer; rebuild the cached (param-less) snapshot once
+            let norm = match r.norm {
+                Some(n) => n,
+                None => bail!(
+                    "daemon flipped to version {} without shipping its normalizer",
+                    r.version
+                ),
+            };
+            self.snapshot = Arc::new(PolicySnapshot {
+                version: r.version,
+                params: Arc::new(Vec::new()),
+                norm,
+                quant: None,
+            });
+        }
+        // move the decoded lanes into a recycled buffer set; obs carries
+        // the server-side normalized rows, exactly like the local path
+        let mut bufs = self.depot.buffers();
+        bufs.obs = r.norm_obs;
+        bufs.noise.clear();
+        bufs.action = r.action;
+        bufs.logp = r.logp;
+        bufs.value = r.value;
+        bufs.mean = r.mean;
+        Ok(self
+            .depot
+            .response(bufs, rows, self.snapshot.clone(), r.epoch, r.server_busy_secs))
+    }
+}

@@ -1,0 +1,684 @@
+//! Wire protocol of the policy daemon: length-prefixed binary frames
+//! over Unix-domain sockets.
+//!
+//! Every frame is `[u32 payload length][u8 frame type][type-specific
+//! payload]`, all little-endian through [`crate::util::bytes`] — the
+//! same codec checkpoints use, so every lane that must survive the hop
+//! bitwise (obs/act/logp/value slabs, normalizer snapshots, Welford
+//! stats) round-trips through `f32::to_le_bytes` exactly.
+//!
+//! The conversation is strictly client-initiated:
+//!
+//! * **Handshake** — the client opens with [`Frame::Hello`] carrying the
+//!   protocol version, its [`RunFingerprint`] (env / algo / fleet shape /
+//!   seed), its worker id and rows-per-request M. The daemon answers
+//!   [`Frame::HelloOk`] (current policy version + normalizer snapshot)
+//!   or [`Frame::HelloErr`] with an actionable message and closes. A
+//!   fingerprint mismatch is rejected here, before any slab crosses the
+//!   socket — garbage rows under a different seed or env would corrupt
+//!   every downstream stream silently.
+//! * **Actor connections** (`PeerKind::Actor`) then alternate
+//!   [`Frame::ActReq`] → [`Frame::ActResp`] for the sampler hot loop and
+//!   push [`Frame::Chunk`] frames (fire-and-forget) for finished
+//!   experience chunks. Every act response carries the serving snapshot's
+//!   version + epoch so the client-side hot loop can run the SAME
+//!   version-cut logic it runs in-process.
+//! * **Subscriber connections** (`PeerKind::Subscriber`) alternate
+//!   [`Frame::WaitNewer`] → [`Frame::Version`]: a long-poll that mirrors
+//!   the daemon's `PolicyStore` publishes into the client process so the
+//!   unmodified sampler sync-stall (`refresh_policy`) unblocks exactly
+//!   when the daemon's learner publishes.
+
+use crate::algo::normalizer::{NormSnapshot, RunningNorm};
+use crate::algo::rollout::{ChunkEnd, ExperienceChunk};
+use crate::runtime::checkpoint::RunFingerprint;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use anyhow::{bail, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Bumped on any incompatible frame-layout change; the handshake rejects
+/// mismatches on both ends.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Upper bound on a single frame's payload — a length prefix beyond this
+/// is treated as stream corruption, not an allocation request.
+pub const MAX_FRAME_LEN: u32 = 64 * 1024 * 1024;
+
+const T_HELLO: u8 = 1;
+const T_HELLO_OK: u8 = 2;
+const T_HELLO_ERR: u8 = 3;
+const T_ACT_REQ: u8 = 4;
+const T_ACT_RESP: u8 = 5;
+const T_ACT_ERR: u8 = 6;
+const T_CHUNK: u8 = 7;
+const T_WAIT_NEWER: u8 = 8;
+const T_VERSION: u8 = 9;
+
+/// What a connection is for, declared in the handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerKind {
+    /// Sampler hot loop: act requests + chunk pushes.
+    Actor,
+    /// Version long-poll: mirrors daemon publishes into the client.
+    Subscriber,
+}
+
+/// One act response as it crosses the wire: the daemon-side
+/// `ActResponse` lanes plus version/epoch metadata, and — only on the
+/// first response after a version change — the new normalizer snapshot,
+/// so the client can rebuild its policy snapshot without a round trip.
+#[derive(Debug, Clone)]
+pub struct ActRespWire {
+    pub version: u64,
+    pub epoch: u64,
+    pub server_busy_secs: f64,
+    pub rows: usize,
+    pub action: Vec<f32>,
+    pub logp: Vec<f32>,
+    pub value: Vec<f32>,
+    pub mean: Vec<f32>,
+    /// Server-side normalized observation rows (`[rows * obs_dim]`) —
+    /// the hot loop records these, so normalization happens exactly once
+    /// and exactly where it does in-process.
+    pub norm_obs: Vec<f32>,
+    /// Present iff `version` differs from the previous response on this
+    /// connection (and on the first response).
+    pub norm: Option<NormSnapshot>,
+}
+
+/// Every message the daemon protocol speaks. See the module docs for the
+/// conversation structure.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    Hello {
+        kind: PeerKind,
+        fingerprint: RunFingerprint,
+        worker_id: usize,
+        m: usize,
+    },
+    HelloOk {
+        version: u64,
+        norm: NormSnapshot,
+    },
+    HelloErr {
+        message: String,
+    },
+    ActReq {
+        rows: usize,
+        obs: Vec<f32>,
+        noise: Vec<f32>,
+    },
+    ActResp(ActRespWire),
+    ActErr {
+        message: String,
+    },
+    Chunk(Box<ExperienceChunk>),
+    WaitNewer {
+        seen: u64,
+    },
+    Version {
+        version: u64,
+        norm: NormSnapshot,
+    },
+}
+
+impl Frame {
+    /// Short type name for diagnostics ("expected ActResp, got {}").
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::HelloOk { .. } => "HelloOk",
+            Frame::HelloErr { .. } => "HelloErr",
+            Frame::ActReq { .. } => "ActReq",
+            Frame::ActResp(_) => "ActResp",
+            Frame::ActErr { .. } => "ActErr",
+            Frame::Chunk(_) => "Chunk",
+            Frame::WaitNewer { .. } => "WaitNewer",
+            Frame::Version { .. } => "Version",
+        }
+    }
+
+    /// Serialize to a frame payload (no length prefix; see
+    /// [`write_frame`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Frame::Hello {
+                kind,
+                fingerprint,
+                worker_id,
+                m,
+            } => {
+                w.put_u32(T_HELLO as u32);
+                w.put_u32(PROTO_VERSION);
+                w.put_u32(match kind {
+                    PeerKind::Actor => 0,
+                    PeerKind::Subscriber => 1,
+                });
+                fingerprint.write(&mut w);
+                w.put_usize(*worker_id);
+                w.put_usize(*m);
+            }
+            Frame::HelloOk { version, norm } => {
+                w.put_u32(T_HELLO_OK as u32);
+                w.put_u64(*version);
+                put_norm_snapshot(&mut w, norm);
+            }
+            Frame::HelloErr { message } => {
+                w.put_u32(T_HELLO_ERR as u32);
+                w.put_str(message);
+            }
+            Frame::ActReq { rows, obs, noise } => {
+                w.put_u32(T_ACT_REQ as u32);
+                w.put_usize(*rows);
+                w.put_f32s(obs);
+                w.put_f32s(noise);
+            }
+            Frame::ActResp(r) => {
+                w.put_u32(T_ACT_RESP as u32);
+                w.put_u64(r.version);
+                w.put_u64(r.epoch);
+                w.put_f64(r.server_busy_secs);
+                w.put_usize(r.rows);
+                w.put_f32s(&r.action);
+                w.put_f32s(&r.logp);
+                w.put_f32s(&r.value);
+                w.put_f32s(&r.mean);
+                w.put_f32s(&r.norm_obs);
+                match &r.norm {
+                    Some(n) => {
+                        w.put_u32(1);
+                        put_norm_snapshot(&mut w, n);
+                    }
+                    None => w.put_u32(0),
+                }
+            }
+            Frame::ActErr { message } => {
+                w.put_u32(T_ACT_ERR as u32);
+                w.put_str(message);
+            }
+            Frame::Chunk(c) => {
+                w.put_u32(T_CHUNK as u32);
+                w.put_usize(c.sampler_id);
+                w.put_usize(c.env_slot);
+                w.put_u64(c.policy_version);
+                w.put_f32s(&c.obs);
+                w.put_f32s(&c.act);
+                w.put_f32s(&c.rew);
+                w.put_f32s(&c.logp);
+                w.put_f32s(&c.value);
+                w.put_u32(match c.end {
+                    ChunkEnd::Terminal => 0,
+                    ChunkEnd::Truncated => 1,
+                    ChunkEnd::Continuation => 2,
+                });
+                w.put_f32(c.bootstrap_value);
+                w.put_f32s(&c.episode_returns);
+                w.put_usize(c.episode_lengths.len());
+                for &l in &c.episode_lengths {
+                    w.put_usize(l);
+                }
+                match &c.obs_stats {
+                    Some(stats) => {
+                        w.put_u32(1);
+                        stats.save_state(&mut w);
+                    }
+                    None => w.put_u32(0),
+                }
+                w.put_f64(c.busy_secs);
+            }
+            Frame::WaitNewer { seen } => {
+                w.put_u32(T_WAIT_NEWER as u32);
+                w.put_u64(*seen);
+            }
+            Frame::Version { version, norm } => {
+                w.put_u32(T_VERSION as u32);
+                w.put_u64(*version);
+                put_norm_snapshot(&mut w, norm);
+            }
+        }
+        w.into_vec()
+    }
+
+    /// Parse a frame payload produced by [`Frame::encode`].
+    pub fn decode(payload: &[u8]) -> Result<Frame> {
+        let mut r = ByteReader::new(payload);
+        let tag = r.read_u32()? as u8;
+        let frame = match tag {
+            T_HELLO => {
+                let proto = r.read_u32()?;
+                if proto != PROTO_VERSION {
+                    bail!(
+                        "peer speaks wire protocol v{proto}, this build speaks \
+                         v{PROTO_VERSION} — rebuild both ends from the same source"
+                    );
+                }
+                let kind = match r.read_u32()? {
+                    0 => PeerKind::Actor,
+                    1 => PeerKind::Subscriber,
+                    k => bail!("unknown peer kind {k} in Hello"),
+                };
+                Frame::Hello {
+                    kind,
+                    fingerprint: RunFingerprint::read(&mut r)?,
+                    worker_id: r.read_usize()?,
+                    m: r.read_usize()?,
+                }
+            }
+            T_HELLO_OK => Frame::HelloOk {
+                version: r.read_u64()?,
+                norm: read_norm_snapshot(&mut r)?,
+            },
+            T_HELLO_ERR => Frame::HelloErr {
+                message: r.read_str()?,
+            },
+            T_ACT_REQ => Frame::ActReq {
+                rows: r.read_usize()?,
+                obs: r.read_f32s()?,
+                noise: r.read_f32s()?,
+            },
+            T_ACT_RESP => {
+                let version = r.read_u64()?;
+                let epoch = r.read_u64()?;
+                let server_busy_secs = r.read_f64()?;
+                let rows = r.read_usize()?;
+                let action = r.read_f32s()?;
+                let logp = r.read_f32s()?;
+                let value = r.read_f32s()?;
+                let mean = r.read_f32s()?;
+                let norm_obs = r.read_f32s()?;
+                let norm = match r.read_u32()? {
+                    0 => None,
+                    _ => Some(read_norm_snapshot(&mut r)?),
+                };
+                Frame::ActResp(ActRespWire {
+                    version,
+                    epoch,
+                    server_busy_secs,
+                    rows,
+                    action,
+                    logp,
+                    value,
+                    mean,
+                    norm_obs,
+                    norm,
+                })
+            }
+            T_ACT_ERR => Frame::ActErr {
+                message: r.read_str()?,
+            },
+            T_CHUNK => {
+                let sampler_id = r.read_usize()?;
+                let env_slot = r.read_usize()?;
+                let policy_version = r.read_u64()?;
+                let obs = r.read_f32s()?;
+                let act = r.read_f32s()?;
+                let rew = r.read_f32s()?;
+                let logp = r.read_f32s()?;
+                let value = r.read_f32s()?;
+                let end = match r.read_u32()? {
+                    0 => ChunkEnd::Terminal,
+                    1 => ChunkEnd::Truncated,
+                    2 => ChunkEnd::Continuation,
+                    e => bail!("unknown chunk end tag {e}"),
+                };
+                let bootstrap_value = r.read_f32()?;
+                let episode_returns = r.read_f32s()?;
+                let n = r.read_usize()?;
+                if n > r.remaining() / 8 {
+                    bail!("corrupt episode-length count {n}");
+                }
+                let mut episode_lengths = Vec::with_capacity(n);
+                for _ in 0..n {
+                    episode_lengths.push(r.read_usize()?);
+                }
+                let obs_stats = match r.read_u32()? {
+                    0 => None,
+                    _ => Some(RunningNorm::load_state(&mut r)?),
+                };
+                let busy_secs = r.read_f64()?;
+                Frame::Chunk(Box::new(ExperienceChunk {
+                    sampler_id,
+                    env_slot,
+                    policy_version,
+                    obs,
+                    act,
+                    rew,
+                    logp,
+                    value,
+                    end,
+                    bootstrap_value,
+                    episode_returns,
+                    episode_lengths,
+                    obs_stats,
+                    busy_secs,
+                }))
+            }
+            T_WAIT_NEWER => Frame::WaitNewer {
+                seen: r.read_u64()?,
+            },
+            T_VERSION => Frame::Version {
+                version: r.read_u64()?,
+                norm: read_norm_snapshot(&mut r)?,
+            },
+            t => bail!("unknown frame type {t}"),
+        };
+        Ok(frame)
+    }
+}
+
+fn put_norm_snapshot(w: &mut ByteWriter, n: &NormSnapshot) {
+    w.put_f32s(&n.mean);
+    w.put_f32s(&n.inv_std);
+    w.put_f32(n.clip);
+    w.put_u64(n.count);
+}
+
+fn read_norm_snapshot(r: &mut ByteReader<'_>) -> Result<NormSnapshot> {
+    Ok(NormSnapshot {
+        mean: r.read_f32s()?,
+        inv_std: r.read_f32s()?,
+        clip: r.read_f32()?,
+        count: r.read_u64()?,
+    })
+}
+
+/// Write one frame (length prefix + payload) and flush. The whole frame
+/// goes out through a single `write_all` per part; callers that share a
+/// stream between threads must serialize whole-frame writes externally.
+pub fn write_frame(stream: &mut impl Write, frame: &Frame) -> std::io::Result<usize> {
+    let payload = frame.encode();
+    let len = payload.len() as u32;
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(&payload)?;
+    stream.flush()?;
+    Ok(payload.len() + 4)
+}
+
+/// Outcome of [`read_frame`].
+pub enum ReadOutcome {
+    /// A full frame, plus the bytes it occupied on the wire.
+    Frame(Frame, usize),
+    /// Clean EOF at a frame boundary: the peer hung up.
+    Eof,
+}
+
+/// Read one frame. Timeout errors on the stream (the caller is expected
+/// to have set a read timeout) are retried until `stop` flips, so a
+/// blocked reader observes shutdown within one timeout interval instead
+/// of hanging forever. EOF mid-frame is an error; EOF at a frame
+/// boundary returns [`ReadOutcome::Eof`].
+pub fn read_frame(stream: &mut impl Read, stop: &AtomicBool) -> Result<ReadOutcome> {
+    let mut len_buf = [0u8; 4];
+    if !read_full(stream, &mut len_buf, stop, true)? {
+        return Ok(ReadOutcome::Eof);
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME_LEN {
+        bail!("frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap (corrupt stream?)");
+    }
+    let mut payload = vec![0u8; len as usize];
+    if !read_full(stream, &mut payload, stop, false)? {
+        bail!("peer closed the socket mid-frame ({len}-byte payload truncated)");
+    }
+    let frame = Frame::decode(&payload).context("decoding wire frame")?;
+    Ok(ReadOutcome::Frame(frame, payload.len() + 4))
+}
+
+/// Fill `buf` completely. Returns Ok(false) on EOF before the first byte
+/// when `eof_ok`; errors on EOF mid-buffer. Timeouts re-check `stop`.
+fn read_full(
+    stream: &mut impl Read,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok: bool,
+) -> Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && eof_ok {
+                    return Ok(false);
+                }
+                bail!("peer closed the socket mid-frame");
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut
+                    || e.kind() == ErrorKind::Interrupted =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    bail!("shutting down while waiting for a frame");
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
+/// Render a fingerprint mismatch as the actionable, both-ends error the
+/// handshake contract requires: every differing field is named with the
+/// daemon's value and the client's value side by side.
+pub fn fingerprint_mismatch(ours: &RunFingerprint, theirs: &RunFingerprint) -> String {
+    let mut diffs = Vec::new();
+    if ours.env != theirs.env {
+        diffs.push(format!("env {:?} vs client {:?}", ours.env, theirs.env));
+    }
+    if ours.algo != theirs.algo {
+        diffs.push(format!("algo {:?} vs client {:?}", ours.algo, theirs.algo));
+    }
+    if ours.samplers != theirs.samplers {
+        diffs.push(format!(
+            "samplers {} vs client {}",
+            ours.samplers, theirs.samplers
+        ));
+    }
+    if ours.envs_per_sampler != theirs.envs_per_sampler {
+        diffs.push(format!(
+            "envs_per_sampler {} vs client {}",
+            ours.envs_per_sampler, theirs.envs_per_sampler
+        ));
+    }
+    if ours.seed != theirs.seed {
+        diffs.push(format!("seed {} vs client {}", ours.seed, theirs.seed));
+    }
+    format!(
+        "run fingerprint mismatch ({}) — a daemon only serves clients from the \
+         SAME run identity; point --connect at the daemon for this config, or \
+         restart the daemon with the client's env/algo/fleet-shape/seed",
+        diffs.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn norm() -> NormSnapshot {
+        NormSnapshot {
+            mean: vec![0.5, -1.25, 3.0],
+            inv_std: vec![1.0, 0.125, 2.5],
+            clip: 10.0,
+            count: 4096,
+        }
+    }
+
+    fn fp() -> RunFingerprint {
+        RunFingerprint {
+            env: "pendulum".into(),
+            algo: "ppo".into(),
+            samplers: 2,
+            envs_per_sampler: 2,
+            seed: 29,
+        }
+    }
+
+    fn round_trip(f: &Frame) -> Frame {
+        Frame::decode(&f.encode()).unwrap()
+    }
+
+    #[test]
+    fn hello_round_trips() {
+        let f = Frame::Hello {
+            kind: PeerKind::Actor,
+            fingerprint: fp(),
+            worker_id: 1,
+            m: 2,
+        };
+        match round_trip(&f) {
+            Frame::Hello {
+                kind,
+                fingerprint,
+                worker_id,
+                m,
+            } => {
+                assert_eq!(kind, PeerKind::Actor);
+                assert_eq!(fingerprint, fp());
+                assert_eq!((worker_id, m), (1, 2));
+            }
+            other => panic!("wrong frame {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn act_resp_round_trips_bitwise() {
+        let f = Frame::ActResp(ActRespWire {
+            version: 7,
+            epoch: 3,
+            server_busy_secs: 0.125,
+            rows: 2,
+            action: vec![0.1, -0.0],
+            logp: vec![f32::MIN_POSITIVE, -2.5],
+            value: vec![1.0e-8, 9.75],
+            mean: vec![0.25, 0.5],
+            norm_obs: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            norm: Some(norm()),
+        });
+        match round_trip(&f) {
+            Frame::ActResp(r) => {
+                assert_eq!(r.version, 7);
+                assert_eq!(r.epoch, 3);
+                assert_eq!(r.rows, 2);
+                assert_eq!(r.action[1].to_bits(), (-0.0f32).to_bits());
+                assert_eq!(r.logp, vec![f32::MIN_POSITIVE, -2.5]);
+                assert_eq!(r.norm_obs.len(), 6);
+                let n = r.norm.unwrap();
+                assert_eq!(n.mean, norm().mean);
+                assert_eq!(n.count, 4096);
+            }
+            other => panic!("wrong frame {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn chunk_round_trips_with_welford_stats() {
+        let mut stats = RunningNorm::new(3, 10.0);
+        for row in [[0.1f32, 0.2, 0.3], [0.4, 0.5, 0.6]] {
+            stats.update(&row);
+        }
+        let c = ExperienceChunk {
+            sampler_id: 1,
+            env_slot: 0,
+            policy_version: 5,
+            obs: vec![1.0; 6],
+            act: vec![0.5, -0.5],
+            rew: vec![-1.0, -0.5],
+            logp: vec![0.0, 0.1],
+            value: vec![2.0, 2.5],
+            end: ChunkEnd::Truncated,
+            bootstrap_value: 1.5,
+            episode_returns: vec![-42.0],
+            episode_lengths: vec![200],
+            obs_stats: Some(stats.clone()),
+            busy_secs: 0.25,
+        };
+        match round_trip(&Frame::Chunk(Box::new(c))) {
+            Frame::Chunk(back) => {
+                assert_eq!(back.sampler_id, 1);
+                assert_eq!(back.policy_version, 5);
+                assert_eq!(back.end, ChunkEnd::Truncated);
+                assert_eq!(back.bootstrap_value, 1.5);
+                assert_eq!(back.episode_lengths, vec![200]);
+                // Welford stats survive bitwise: re-serializing the
+                // restored stats reproduces the original byte stream
+                let mut a = ByteWriter::new();
+                stats.save_state(&mut a);
+                let mut b = ByteWriter::new();
+                back.obs_stats.unwrap().save_state(&mut b);
+                assert_eq!(a.into_vec(), b.into_vec());
+            }
+            other => panic!("wrong frame {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn hello_rejects_other_proto_versions() {
+        let mut payload = Frame::Hello {
+            kind: PeerKind::Subscriber,
+            fingerprint: fp(),
+            worker_id: 0,
+            m: 1,
+        }
+        .encode();
+        payload[4] ^= 0xFF; // the proto-version field follows the tag
+        let err = Frame::decode(&payload).unwrap_err().to_string();
+        assert!(err.contains("wire protocol"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn corrupt_and_unknown_frames_error_cleanly() {
+        assert!(Frame::decode(&[]).is_err());
+        let mut w = ByteWriter::new();
+        w.put_u32(200); // unknown tag
+        assert!(Frame::decode(&w.into_vec()).is_err());
+        // truncated ActResp
+        let f = Frame::ActResp(ActRespWire {
+            version: 1,
+            epoch: 0,
+            server_busy_secs: 0.0,
+            rows: 1,
+            action: vec![1.0],
+            logp: vec![],
+            value: vec![],
+            mean: vec![],
+            norm_obs: vec![1.0, 2.0, 3.0],
+            norm: None,
+        });
+        let payload = f.encode();
+        assert!(Frame::decode(&payload[..payload.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn stream_round_trip_over_a_socket_pair() {
+        let (mut a, mut b) = std::os::unix::net::UnixStream::pair().unwrap();
+        let stop = AtomicBool::new(false);
+        let f = Frame::WaitNewer { seen: 9 };
+        let wrote = write_frame(&mut a, &f).unwrap();
+        match read_frame(&mut b, &stop).unwrap() {
+            ReadOutcome::Frame(Frame::WaitNewer { seen }, n) => {
+                assert_eq!(seen, 9);
+                assert_eq!(n, wrote);
+            }
+            _ => panic!("expected WaitNewer"),
+        }
+        drop(a);
+        assert!(matches!(
+            read_frame(&mut b, &stop).unwrap(),
+            ReadOutcome::Eof
+        ));
+    }
+
+    #[test]
+    fn mismatch_message_names_every_differing_field() {
+        let mut theirs = fp();
+        theirs.seed = 30;
+        theirs.env = "halfcheetah".into();
+        let msg = fingerprint_mismatch(&fp(), &theirs);
+        assert!(msg.contains("seed 29 vs client 30"), "{msg}");
+        assert!(msg.contains("env"), "{msg}");
+        assert!(!msg.contains("algo \""), "algo matches, must not be listed: {msg}");
+    }
+}

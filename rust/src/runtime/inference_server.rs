@@ -1087,6 +1087,17 @@ impl ActorClient {
         }
     }
 
+    /// Discard a reply parked in the completion slot by a PREVIOUS
+    /// incarnation of this worker, recycling its buffers. The daemon
+    /// re-hands a stashed client to a respawned remote child; an answer
+    /// the dead child never collected must not be served as the new
+    /// child's first response (it would be one tick stale).
+    pub fn reset_stale(&mut self) {
+        if let Some(Ok(reply)) = plock(&self.slot.cell).take() {
+            plock(&self.slot.spare).push(reply.bufs);
+        }
+    }
+
     fn unpack(&self, r: Result<Reply, String>) -> anyhow::Result<ActResponse> {
         let reply = r.map_err(|e| anyhow::anyhow!(e))?;
         Ok(ActResponse {
@@ -1132,6 +1143,63 @@ impl Drop for ClientHold {
         // wake a serve loop idling on the lease so it can re-check the
         // exit condition
         self.shared.submitted.notify_all();
+    }
+}
+
+// -------------------------------------------------- remote response depot
+
+/// Buffer home for [`ActResponse`]s assembled OUTSIDE an inference shard.
+/// The remote-client path (`runtime::daemon`) decodes a wire reply in a
+/// sampler process and hands the hot loop the same [`ActResponse`] type
+/// the in-process path produces — drop-recycling included, so the remote
+/// tick allocates nothing at steady state either. The depot owns the
+/// spare slot that dropped responses return their buffers to.
+pub struct ResponseDepot {
+    obs_dim: usize,
+    act_dim: usize,
+    home: Arc<ReplySlot>,
+}
+
+impl ResponseDepot {
+    pub fn new(obs_dim: usize, act_dim: usize) -> ResponseDepot {
+        ResponseDepot {
+            obs_dim,
+            act_dim,
+            home: Arc::new(ReplySlot {
+                cell: Mutex::new(None),
+                ready: Condvar::new(),
+                spare: Mutex::new(Vec::with_capacity(2)),
+            }),
+        }
+    }
+
+    /// Check out a recycled buffer set (a default-empty [`SlabBuffers`]
+    /// on warmup — the caller resizes while decoding the reply).
+    pub fn buffers(&self) -> SlabBuffers {
+        plock(&self.home.spare).pop().unwrap_or_default()
+    }
+
+    /// Wrap decoded reply buffers into an [`ActResponse`]; dropping it
+    /// returns the buffers to this depot. Every reply slab in `bufs`
+    /// must hold at least `rows` rows (the accessors slice to `rows`).
+    pub fn response(
+        &self,
+        bufs: SlabBuffers,
+        rows: usize,
+        snapshot: Arc<PolicySnapshot>,
+        epoch: u64,
+        server_busy_secs: f64,
+    ) -> ActResponse {
+        ActResponse {
+            bufs: Some(bufs),
+            rows,
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+            home: self.home.clone(),
+            snapshot,
+            epoch,
+            server_busy_secs,
+        }
     }
 }
 
@@ -2001,6 +2069,61 @@ mod tests {
         );
         drop(client);
         h.join().unwrap().unwrap();
+    }
+
+    /// Satellite: an abandoned lease (leased, partially filled, dropped
+    /// without `act_leased`) must recycle its buffers — hot_allocs stays
+    /// flat across abandon/re-lease cycles — and leaves no request
+    /// behind, so the shard's dispatch cut serves the workers that DID
+    /// submit instead of wedging on a phantom slab.
+    #[test]
+    fn abandoned_lease_recycles_buffers_and_does_not_wedge_dispatch() {
+        let f = factory(3, 1);
+        let store = published_store(&f);
+        let srv = Arc::new(server(2, 30));
+        let mut flaky = srv.client();
+        let mut steady = srv.client();
+
+        // warmup lease allocates; fill half the obs slab, then abandon
+        {
+            let mut lease = flaky.lease(1, true).unwrap();
+            lease.obs_mut()[..2].copy_from_slice(&[0.5, -0.5]);
+        }
+        let after_first = srv.report().hot_allocs;
+        assert!(after_first > 0, "warmup lease must have allocated");
+        for _ in 0..20 {
+            let mut lease = flaky.lease(1, true).unwrap();
+            lease.obs_mut()[0] = 0.1;
+            // dropped unsubmitted
+        }
+        assert_eq!(
+            srv.report().hot_allocs,
+            after_first,
+            "abandoned leases must recycle, not leak-and-reallocate"
+        );
+
+        let (srv2, store2) = (srv.clone(), store.clone());
+        let server_h = thread::spawn(move || {
+            let f = factory(3, 1);
+            srv2.serve_ppo(&f, &store2)
+        });
+        // flaky abandoned instead of submitting: steady's slab rides the
+        // 30ms straggler cut as a partial batch, never a wedge
+        let t0 = Instant::now();
+        let resp = steady.act(&[0.2, 0.2, 0.2], &[0.0]).unwrap();
+        assert_eq!(resp.action().len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "dispatch cut wedged behind an abandoned lease: {:?}",
+            t0.elapsed()
+        );
+        drop(resp);
+        drop(flaky);
+        drop(steady);
+        server_h.join().unwrap().unwrap();
+        let rep = srv.report();
+        assert_eq!(rep.rows, 1, "only the submitted slab reached a forward");
+        assert!(rep.timeout_dispatches >= 1, "the straggler cut must fire");
     }
 
     /// A registration lease keeps the serve loop alive through a

@@ -43,6 +43,7 @@
 
 pub mod artifacts;
 pub mod checkpoint;
+pub mod daemon;
 pub mod epoch;
 pub mod inference_server;
 pub mod native_backend;

@@ -277,6 +277,15 @@ impl SessionBuilder {
         self.set(move |c| c.max_restarts = n)
     }
 
+    /// Fleet topology: `Threads` (default) runs samplers as in-process
+    /// threads; `Procs` runs each sampler as a `walle sample` child
+    /// process served by an in-process policy daemon over a Unix socket
+    /// (requires `--inference-mode shared`). Per-env chunk streams are
+    /// bitwise identical either way.
+    pub fn fleet_mode(self, m: crate::config::FleetMode) -> Self {
+        self.set(move |c| c.fleet_mode = m)
+    }
+
     /// Deterministic fault plan for chaos testing, e.g.
     /// `"worker:1@tick:500,shard:0@dispatch:40"` or
     /// `"random:seed=7,count=2,horizon=1000"`. Empty = no injection.
@@ -412,6 +421,23 @@ impl Session {
     /// also writes `config.json`, `metrics.csv`, `params.bin`, and (in
     /// shared inference mode) `inference.json` there.
     pub fn run(&self) -> anyhow::Result<RunResult> {
+        self.run_inner(None)
+    }
+
+    /// [`Session::run`] watching an external shutdown flag: flip it from
+    /// a SIGINT/SIGTERM handler and the fleet drains through the normal
+    /// stop/queue-close paths instead of dying mid-write.
+    pub fn run_watched(
+        &self,
+        shutdown: &std::sync::atomic::AtomicBool,
+    ) -> anyhow::Result<RunResult> {
+        self.run_inner(Some(shutdown))
+    }
+
+    fn run_inner(
+        &self,
+        shutdown: Option<&std::sync::atomic::AtomicBool>,
+    ) -> anyhow::Result<RunResult> {
         let factory = make_factory(&self.cfg)?;
         let mut log = if self.quiet {
             MetricsLog::quiet()
@@ -423,8 +449,13 @@ impl Session {
             self.cfg.save(&format!("{dir}/config.json"))?;
             log = log.with_csv(&format!("{dir}/metrics.csv"))?;
         }
-        let result =
-            orchestrator::run_with(self.algo.as_ref(), &self.cfg, factory.as_ref(), &mut log)?;
+        let result = orchestrator::run_with_watched(
+            self.algo.as_ref(),
+            &self.cfg,
+            factory.as_ref(),
+            &mut log,
+            shutdown,
+        )?;
         if let Some(dir) = &self.out_dir {
             save_params(&format!("{dir}/params.bin"), &result.final_params)?;
             if let Some(rep) = &result.infer {

@@ -1,0 +1,497 @@
+//! Multi-process serving-tier acceptance: real `walle sample` child
+//! PROCESSES against an in-test policy daemon, checked for bitwise
+//! parity with the in-process threads topology.
+//!
+//! * The tentpole contract: per-(worker, env_slot) experience-chunk
+//!   streams are bitwise identical between `--fleet-mode threads` and
+//!   `--fleet-mode procs` at N=2 x M=2, for PPO and DDPG, across
+//!   mid-run policy publishes — the transport is a pure topology knob
+//!   because the MLP forward is row-independent and exploration noise
+//!   is drawn client-side from each worker's own RNG streams.
+//! * The fingerprint handshake rejects a client launched for a
+//!   different run (seed skew here) with an actionable message on both
+//!   ends, and the daemon keeps serving correct clients afterwards.
+//! * The daemon survives SIGKILL of a sampler child: the slot's
+//!   ActorClient is parked and re-claimed, a respawned child finishes
+//!   the run, and the wire metrics record the disconnect.
+//! * A full `Session` run under `--fleet-mode procs` completes with the
+//!   scripted chunk-count kill switch tripping every child once
+//!   (respawns strip the switch), and the merged `InferenceReport`
+//!   carries the wire counters.
+//!
+//! Children are spawned from the REAL `walle` binary via `WALLE_BIN`
+//! (`current_exe` inside a test resolves to the test harness, not the
+//! CLI). CI runs this file under a hard `timeout` like the chaos suite:
+//! a cross-process deadlock shows up as a timeout kill.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use walle::algo::api::algorithm_from_config;
+use walle::algo::normalizer::NormSnapshot;
+use walle::algo::rollout::ExperienceChunk;
+use walle::config::{Algo, FleetMode, InferShards, InferWait, InferenceMode, TrainConfig};
+use walle::coordinator::policy_store::PolicyStore;
+use walle::coordinator::queue::Channel;
+use walle::coordinator::sampler::{run_algo_sampler, PolicySource, SamplerCfg};
+use walle::env::vec_env::VecEnv;
+use walle::nn::layout::actor_layout;
+use walle::runtime::daemon::{self, DaemonCtx};
+use walle::runtime::{make_factory, BackendFactory};
+use walle::session::Session;
+
+const VERSIONS: u64 = 3;
+
+/// The acceptance fleet: sync barrier mode, N=2 workers x M=2 envs,
+/// S=2 shards, 320 samples per policy version in 40-step chunks (so
+/// every worker delivers exactly 2 chunks per env per version).
+fn fleet_cfg(algo: Algo) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("pendulum");
+    cfg.backend = walle::config::Backend::Native;
+    cfg.algo = algo;
+    cfg.samplers = 2;
+    cfg.envs_per_sampler = 2;
+    cfg.seed = 29;
+    cfg.async_mode = false;
+    cfg.inference_mode = InferenceMode::Shared;
+    cfg.infer_shards = InferShards::Fixed(2);
+    cfg.infer_wait = InferWait::Fixed(2000);
+    cfg.samples_per_iter = 320;
+    cfg.chunk_steps = 40;
+    cfg.iterations = 3;
+    cfg.hidden = vec![8, 8];
+    cfg.ppo.epochs = 2;
+    cfg.ppo.minibatch = 128;
+    cfg.fleet_mode = FleetMode::Procs;
+    cfg
+}
+
+/// Deterministic per-version policy parameters: a constant vector of the
+/// right length for the algorithm (full PPO flat vector, or the DDPG
+/// actor), different per version so a publish is observable in the
+/// chunk streams.
+fn deterministic_params(cfg: &TrainConfig, v: u64) -> Vec<f32> {
+    let factory = make_factory(cfg).unwrap();
+    let n = match cfg.algo {
+        Algo::Ppo => factory.ppo_param_count(),
+        _ => actor_layout(factory.obs_dim(), factory.act_dim(), &cfg.hidden).total(),
+    };
+    vec![0.001 * (v as f32 + 1.0); n]
+}
+
+/// The pseudo-learner both harnesses share: publish version 1, then for
+/// each version pop chunks off the experience queue until the fleet-wide
+/// sample budget is met and publish the next version — at least
+/// `VERSIONS - 1` MID-RUN publishes, which is what the parity claim is
+/// about. Returns every popped chunk in arrival order.
+fn drive_versions(
+    cfg: &TrainConfig,
+    queue: &Channel<ExperienceChunk>,
+    store: &PolicyStore,
+    per_version_samples: usize,
+) -> Vec<ExperienceChunk> {
+    let obs_dim = make_factory(cfg).unwrap().obs_dim();
+    let mut all = Vec::new();
+    store.publish(deterministic_params(cfg, 1), NormSnapshot::identity(obs_dim));
+    for v in 1..=VERSIONS {
+        let mut got = 0usize;
+        while got < per_version_samples {
+            let c = queue.pop().expect("experience queue closed mid-run");
+            got += c.rew.len();
+            all.push(c);
+        }
+        if v < VERSIONS {
+            store.publish(
+                deterministic_params(cfg, v + 1),
+                NormSnapshot::identity(obs_dim),
+            );
+        }
+    }
+    all
+}
+
+fn by_lane(chunks: Vec<ExperienceChunk>) -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+    let mut m: BTreeMap<(usize, usize), Vec<ExperienceChunk>> = BTreeMap::new();
+    for c in chunks {
+        m.entry((c.sampler_id, c.env_slot)).or_default().push(c);
+    }
+    m
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Bitwise stream comparison on the deterministic lanes (version, obs,
+/// act, rew, logp, value, end, bootstrap). Timing-dependent fields
+/// (busy_secs, episode bookkeeping granularity) are not part of the
+/// contract.
+fn assert_streams_equal(
+    threads: &BTreeMap<(usize, usize), Vec<ExperienceChunk>>,
+    procs: &BTreeMap<(usize, usize), Vec<ExperienceChunk>>,
+) {
+    let tk: Vec<_> = threads.keys().collect();
+    let pk: Vec<_> = procs.keys().collect();
+    assert_eq!(tk, pk, "both topologies must produce the same lanes");
+    for (key, a) in threads {
+        let b = &procs[key];
+        assert_eq!(a.len(), b.len(), "chunk count for lane {key:?}");
+        for (i, (c, d)) in a.iter().zip(b.iter()).enumerate() {
+            let at = format!("lane {key:?} chunk {i}");
+            assert_eq!(c.policy_version, d.policy_version, "policy_version @ {at}");
+            assert_eq!(bits(&c.obs), bits(&d.obs), "obs @ {at}");
+            assert_eq!(bits(&c.act), bits(&d.act), "act @ {at}");
+            assert_eq!(bits(&c.rew), bits(&d.rew), "rew @ {at}");
+            assert_eq!(bits(&c.logp), bits(&d.logp), "logp @ {at}");
+            assert_eq!(bits(&c.value), bits(&d.value), "value @ {at}");
+            assert_eq!(c.end, d.end, "end @ {at}");
+            assert_eq!(
+                c.bootstrap_value.to_bits(),
+                d.bootstrap_value.to_bits(),
+                "bootstrap_value @ {at}"
+            );
+        }
+    }
+}
+
+/// Reference topology: the in-process shared pool with sampler THREADS,
+/// exactly the orchestrator's shape but driven by the pseudo-learner.
+fn threads_streams(cfg: &TrainConfig) -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+    let factory = make_factory(cfg).unwrap();
+    let algo = algorithm_from_config(cfg);
+    let factory = &*factory;
+    let algo = &*algo;
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    let stop = AtomicBool::new(false);
+    let budget = (cfg.samples_per_iter + cfg.samplers - 1) / cfg.samplers;
+    let m = cfg.envs_per_sampler;
+    let pool = daemon::build_pool(cfg, factory);
+    let mut collected = Vec::new();
+    std::thread::scope(|scope| {
+        // clients registered BEFORE serve threads start
+        let clients: Vec<_> = (0..cfg.samplers).map(|id| pool.client(id)).collect();
+        for shard in pool.shards() {
+            let shard = shard.clone();
+            let store = &store;
+            scope.spawn(move || shard.serve_algo(algo, factory, store).unwrap());
+        }
+        for (id, client) in clients.into_iter().enumerate() {
+            let scfg = SamplerCfg {
+                id,
+                seed: cfg.seed,
+                chunk_steps: cfg.chunk_steps,
+                sync_budget: Some(budget),
+                reward_scale: cfg.reward_scale,
+            };
+            let venv = VecEnv::from_registry(&cfg.env, m, cfg.seed, (id * m) as u64 + 1).unwrap();
+            let store = &store;
+            let queue = &queue;
+            let stop = &stop;
+            scope.spawn(move || {
+                run_algo_sampler(
+                    algo,
+                    scfg,
+                    venv,
+                    PolicySource::Shared(client),
+                    store,
+                    queue,
+                    stop,
+                )
+            });
+        }
+        collected = drive_versions(cfg, &queue, &store, cfg.samples_per_iter);
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+    });
+    by_lane(collected)
+}
+
+/// The serving-tier topology: the same pool behind the daemon's accept
+/// loop, with REAL `walle sample` child processes as the samplers.
+fn procs_streams(cfg: &TrainConfig) -> BTreeMap<(usize, usize), Vec<ExperienceChunk>> {
+    std::env::set_var("WALLE_BIN", env!("CARGO_BIN_EXE_walle"));
+    let factory = make_factory(cfg).unwrap();
+    let algo = algorithm_from_config(cfg);
+    let factory = &*factory;
+    let algo = &*algo;
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    let stop = AtomicBool::new(false);
+    let sock = daemon::default_socket_path();
+    let listener = daemon::bind_socket(&sock).unwrap();
+    let sidecar = daemon::config_sidecar(&sock);
+    cfg.save(sidecar.to_str().unwrap()).unwrap();
+    let bin = daemon::walle_binary().unwrap();
+    let pool = daemon::build_pool(cfg, factory);
+    let ctx = DaemonCtx::new(cfg, pool.clone(), &store, &queue, &stop);
+    let metrics = ctx.metrics.clone();
+    let mut collected = Vec::new();
+    let mut children = Vec::new();
+    std::thread::scope(|scope| {
+        for shard in pool.shards() {
+            let shard = shard.clone();
+            let store = &store;
+            scope.spawn(move || shard.serve_algo(algo, factory, store).unwrap());
+        }
+        scope.spawn(move || daemon::accept_loop(scope, listener, ctx));
+        for id in 0..cfg.samplers {
+            children.push(daemon::spawn_sampler(&bin, &sock, &sidecar, id, false).unwrap());
+        }
+        collected = drive_versions(cfg, &queue, &store, cfg.samples_per_iter);
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+    });
+    for (id, child) in children.into_iter().enumerate() {
+        daemon::terminate_child(child, id);
+    }
+    let _ = std::fs::remove_file(&sock);
+    let _ = std::fs::remove_file(&sidecar);
+    // every child ran one actor + one subscriber handshake over the wire
+    let mut rep = pool.report();
+    metrics.merge_into(&mut rep);
+    assert!(
+        rep.wire_handshakes >= (2 * cfg.samplers) as u64,
+        "expected an actor + subscriber handshake per child, got {}",
+        rep.wire_handshakes
+    );
+    assert!(rep.has_wire_traffic());
+    by_lane(collected)
+}
+
+/// Tentpole acceptance (PPO): bitwise-identical per-(worker, env_slot)
+/// chunk streams, threads vs processes, across two mid-run publishes.
+#[test]
+fn ppo_chunk_streams_bitwise_identical_threads_vs_procs() {
+    let cfg = fleet_cfg(Algo::Ppo);
+    let threads = threads_streams(&cfg);
+    let procs = procs_streams(&cfg);
+    assert_eq!(threads.len(), 4, "2 workers x 2 env slots");
+    // every lane saw all three versions (the publishes were mid-run)
+    for lane in threads.values() {
+        let versions: Vec<u64> = lane.iter().map(|c| c.policy_version).collect();
+        assert_eq!(versions, vec![1, 1, 2, 2, 3, 3], "lanes: {versions:?}");
+    }
+    assert_streams_equal(&threads, &procs);
+}
+
+/// Tentpole acceptance (DDPG): same contract on the deterministic-actor
+/// + client-side-noise path.
+#[test]
+fn ddpg_chunk_streams_bitwise_identical_threads_vs_procs() {
+    let cfg = fleet_cfg(Algo::Ddpg);
+    let threads = threads_streams(&cfg);
+    let procs = procs_streams(&cfg);
+    assert_eq!(threads.len(), 4, "2 workers x 2 env slots");
+    assert_streams_equal(&threads, &procs);
+}
+
+/// Handshake acceptance: a child launched for a different run (seed
+/// skew) is rejected with an actionable message on BOTH ends, and the
+/// daemon keeps serving a correct client afterwards.
+#[test]
+fn handshake_rejects_fingerprint_mismatch_and_daemon_survives() {
+    std::env::set_var("WALLE_BIN", env!("CARGO_BIN_EXE_walle"));
+    let cfg = fleet_cfg(Algo::Ppo);
+    let factory = make_factory(&cfg).unwrap();
+    let algo = algorithm_from_config(&cfg);
+    let factory = &*factory;
+    let algo = &*algo;
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    let stop = AtomicBool::new(false);
+    let sock = daemon::default_socket_path();
+    let listener = daemon::bind_socket(&sock).unwrap();
+    let sidecar = daemon::config_sidecar(&sock);
+    cfg.save(sidecar.to_str().unwrap()).unwrap();
+    // a second sidecar describing a DIFFERENT run
+    let mut wrong = cfg.clone();
+    wrong.seed = 31;
+    let wrong_path = format!("{}.wrong.json", sidecar.to_str().unwrap());
+    wrong.save(&wrong_path).unwrap();
+    let pool = daemon::build_pool(&cfg, factory);
+    let ctx = DaemonCtx::new(&cfg, pool.clone(), &store, &queue, &stop);
+    let mut survivor = None;
+    let mut collected = Vec::new();
+    std::thread::scope(|scope| {
+        for shard in pool.shards() {
+            let shard = shard.clone();
+            let store = &store;
+            scope.spawn(move || shard.serve_algo(algo, factory, store).unwrap());
+        }
+        scope.spawn(move || daemon::accept_loop(scope, listener, ctx));
+
+        // the mismatched child must fail its handshake loudly
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_walle"))
+            .args(["sample", "--connect"])
+            .arg(&sock)
+            .args(["--config", &wrong_path, "--worker-id", "0"])
+            .env_remove(daemon::EXIT_AFTER_CHUNKS_ENV)
+            .output()
+            .unwrap();
+        assert!(
+            !out.status.success(),
+            "a fingerprint-mismatched child must exit nonzero"
+        );
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            err.contains("rejected the handshake"),
+            "client-side error must name the rejection, got: {err}"
+        );
+        assert!(
+            err.contains("seed"),
+            "client-side error must name the mismatched field, got: {err}"
+        );
+
+        // the daemon is unharmed: a correct child completes a version
+        let bin = daemon::walle_binary().unwrap();
+        survivor = Some(daemon::spawn_sampler(&bin, &sock, &sidecar, 0, false).unwrap());
+        // one worker's budget of version-1 samples
+        collected = {
+            let obs_dim = make_factory(&cfg).unwrap().obs_dim();
+            store.publish(deterministic_params(&cfg, 1), NormSnapshot::identity(obs_dim));
+            let budget = (cfg.samples_per_iter + cfg.samplers - 1) / cfg.samplers;
+            let mut got = 0usize;
+            let mut all = Vec::new();
+            while got < budget {
+                let c = queue.pop().expect("queue closed early");
+                got += c.rew.len();
+                all.push(c);
+            }
+            all
+        };
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+    });
+    daemon::terminate_child(survivor.unwrap(), 0);
+    let _ = std::fs::remove_file(&sock);
+    let _ = std::fs::remove_file(&sidecar);
+    let _ = std::fs::remove_file(&wrong_path);
+    assert!(
+        collected.iter().all(|c| c.policy_version == 1 && c.sampler_id == 0),
+        "survivor chunks must come from worker 0 at version 1"
+    );
+}
+
+/// Fault-tolerance acceptance: SIGKILL one sampler child mid-run; the
+/// daemon parks the slot's client, a respawned child re-claims it, and
+/// the run completes all versions. The wire metrics record the
+/// disconnect.
+#[test]
+fn daemon_survives_sigkilled_child_and_respawn_completes() {
+    std::env::set_var("WALLE_BIN", env!("CARGO_BIN_EXE_walle"));
+    let cfg = fleet_cfg(Algo::Ppo);
+    let factory = make_factory(&cfg).unwrap();
+    let algo = algorithm_from_config(&cfg);
+    let factory = &*factory;
+    let algo = &*algo;
+    let obs_dim = factory.obs_dim();
+    let queue: Channel<ExperienceChunk> = Channel::new(cfg.queue_capacity);
+    let store = PolicyStore::new();
+    let stop = AtomicBool::new(false);
+    let sock = daemon::default_socket_path();
+    let listener = daemon::bind_socket(&sock).unwrap();
+    let sidecar = daemon::config_sidecar(&sock);
+    cfg.save(sidecar.to_str().unwrap()).unwrap();
+    let bin = daemon::walle_binary().unwrap();
+    let pool = daemon::build_pool(&cfg, factory);
+    let ctx = DaemonCtx::new(&cfg, pool.clone(), &store, &queue, &stop);
+    let metrics = ctx.metrics.clone();
+    let mut children = Vec::new();
+    let mut total = 0usize;
+    std::thread::scope(|scope| {
+        for shard in pool.shards() {
+            let shard = shard.clone();
+            let store = &store;
+            scope.spawn(move || shard.serve_algo(algo, factory, store).unwrap());
+        }
+        scope.spawn(move || daemon::accept_loop(scope, listener, ctx));
+        for id in 0..cfg.samplers {
+            children.push(daemon::spawn_sampler(&bin, &sock, &sidecar, id, false).unwrap());
+        }
+        store.publish(deterministic_params(&cfg, 1), NormSnapshot::identity(obs_dim));
+
+        // let the fleet make some progress, then SIGKILL child 0
+        let mut got = 0usize;
+        while got < 80 {
+            let c = queue.pop().unwrap();
+            got += c.rew.len();
+        }
+        total += got;
+        children[0].kill().unwrap();
+        let _ = children[0].wait();
+        children[0] = daemon::spawn_sampler(&bin, &sock, &sidecar, 0, false).unwrap();
+
+        // the survivor stalls at its budget (160); the replacement
+        // delivers a full budget of its own, so >= 320 version-1 samples
+        // always arrive; then two more full versions
+        for v in 1..=VERSIONS {
+            while total < (v as usize) * cfg.samples_per_iter {
+                let c = queue.pop().expect("queue closed early — fleet did not heal");
+                total += c.rew.len();
+            }
+            if v < VERSIONS {
+                store.publish(
+                    deterministic_params(&cfg, v + 1),
+                    NormSnapshot::identity(obs_dim),
+                );
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        queue.close();
+    });
+    for (id, child) in children.into_iter().enumerate() {
+        daemon::terminate_child(child, id);
+    }
+    let _ = std::fs::remove_file(&sock);
+    let _ = std::fs::remove_file(&sidecar);
+    assert!(total >= VERSIONS as usize * cfg.samples_per_iter);
+    let mut rep = pool.report();
+    metrics.merge_into(&mut rep);
+    assert!(
+        rep.wire_disconnects >= 1,
+        "the SIGKILLed child must be counted as a disconnect, got {}",
+        rep.wire_disconnects
+    );
+    assert!(
+        rep.wire_handshakes >= (2 * cfg.samplers + 1) as u64,
+        "the respawned child adds handshakes, got {}",
+        rep.wire_handshakes
+    );
+}
+
+/// End-to-end acceptance: a full `Session` training run under
+/// `--fleet-mode procs` with the scripted chunk-count kill switch —
+/// every child dies once, the reapers respawn them (stripping the
+/// switch), the run completes, and the merged report carries the wire
+/// counters into render().
+#[test]
+fn procs_train_completes_and_respawns_scripted_deaths() {
+    std::env::set_var("WALLE_BIN", env!("CARGO_BIN_EXE_walle"));
+    std::env::set_var(daemon::EXIT_AFTER_CHUNKS_ENV, "2");
+    let cfg = fleet_cfg(Algo::Ppo);
+    let session = Session::builder().config(cfg).quiet().build().unwrap();
+    let result = session.run();
+    std::env::remove_var(daemon::EXIT_AFTER_CHUNKS_ENV);
+    let result = result.unwrap();
+    assert_eq!(result.metrics.len(), 3, "the run must complete all iterations");
+    assert_eq!(
+        result.restarts, 2,
+        "each of the 2 children dies exactly once on the scripted kill switch"
+    );
+    let rep = result.infer.expect("a procs run must carry an inference report");
+    assert_eq!(rep.restarts, 2);
+    assert!(rep.wire_frames_in > 0 && rep.wire_frames_out > 0);
+    assert!(rep.wire_bytes_in > 0 && rep.wire_bytes_out > 0);
+    assert!(
+        rep.wire_handshakes >= 6,
+        "2 children x (actor + subscriber) + 2 respawns, got {}",
+        rep.wire_handshakes
+    );
+    assert!(rep.wire_disconnects >= 2, "got {}", rep.wire_disconnects);
+    let rendered = rep.render();
+    assert!(
+        rendered.contains("wire traffic:"),
+        "fleet health must render the wire counters: {rendered}"
+    );
+}
